@@ -1,0 +1,30 @@
+//! Quickstart: load a trained model, apply Layer Parallelism to the middle
+//! of the network, and generate text — the 20-line tour of the public API.
+//!
+//!     make artifacts && make models
+//!     cargo run --release --example quickstart
+
+use truedepth::gen::{generate, Sampler};
+use truedepth::harness::{default_net, ScoringCtx};
+use truedepth::model::{transform, ServingModel};
+
+fn main() -> truedepth::Result<()> {
+    // 1. Load the AOT artifact manifest + trained weights.
+    let ctx = ScoringCtx::load("td-small")?;
+    let weights = ctx.weights()?;
+    let n_layers = ctx.entry().config.n_layers;
+
+    // 2. Build a computational-graph plan: pairs of consecutive layers in
+    //    [2, 10) run in parallel — depth 12 → 8, all-reduces 24 → 16/token.
+    let plan = transform::pair_parallel(n_layers, 2, 10, true);
+    println!("plan: {} (effective depth {})", plan.describe(), plan.effective_depth());
+
+    // 3. Bring up the tensor-parallel serving runtime (2 simulated
+    //    accelerators + calibrated interconnect) and generate.
+    let model = ServingModel::new(&ctx.manifest, "td-small", &weights, &plan, default_net())?;
+    for prompt in ["the capital of avaria is", "copy : ostrich -> ", "3 + 4 = "] {
+        let g = generate(&model, prompt, 16, &Sampler::Greedy)?;
+        println!("{prompt:>28} → {}", g.text.trim_end());
+    }
+    Ok(())
+}

@@ -1,0 +1,205 @@
+"""AOT pipeline: lower every inference entrypoint to HLO *text* + manifest.
+
+Interchange is HLO text, NOT a serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids that the xla_extension 0.5.1 bundled
+with the `xla` rust crate rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run via `make artifacts` (no-op when inputs are unchanged — content hash in
+the manifest) or directly:
+
+    cd python && python -m compile.aot --out ../artifacts [--force] [--impl pallas]
+
+Artifact inventory (per model, T ∈ SEQ_BUCKETS, S slots, C ctx, w ∈ {D/2, D}):
+
+  scoring (single device, full width — composed per-layer by rust):
+    embed_t{T}, attn_t{T}, ffn_t{T}, logits_t{T}
+  serving prefill shards:
+    tpattn_prefill_t{T} (w=D/2), tpffn_prefill_t{T} (fw=F/2),
+    lpattn_prefill_t{T} (w=D)   [LP FFN prefill reuses ffn_t{T}]
+  serving decode shards (KV caches in/out as PJRT buffers):
+    tpattn_decode, tpffn_decode, lpattn_decode, lpffn_decode
+  cache plumbing: cache_insert_{half|full}_t{T}, embed_decode, logits_decode
+  ablation: lpfused_attn_t128 (single-device fused dual-layer attention)
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .modelcfg import CONFIGS, SEQ_BUCKETS, ModelConfig
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def to_hlo_text(fn, arg_specs) -> str:
+    lowered = jax.jit(fn).lower(*arg_specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def artifact_specs(cfg: ModelConfig, impl: str) -> dict[str, tuple]:
+    """name -> (fn, [arg ShapeDtypeStructs], [human arg names])."""
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    s, c = cfg.slots, cfg.ctx
+    dh, fh = d // 2, f // 2
+    arts: dict[str, tuple] = {}
+
+    for t in SEQ_BUCKETS:
+        arts[f"embed_t{t}"] = (
+            M.make_embed(cfg),
+            [spec([t], I32), spec([v, d])],
+            ["tokens", "emb"],
+        )
+        arts[f"attn_t{t}"] = (
+            M.make_attn_delta(cfg, impl),
+            [spec([t, d]), spec([d]), spec([d, d]), spec([d, d]),
+             spec([d, d]), spec([d, d])],
+            ["h", "ln1", "wq", "wk", "wv", "wo"],
+        )
+        arts[f"ffn_t{t}"] = (
+            M.make_ffn_delta(cfg, impl),
+            [spec([t, d]), spec([d]), spec([d, f]), spec([d, f]), spec([f, d])],
+            ["h", "ln2", "wg", "wu", "wd"],
+        )
+        arts[f"logits_t{t}"] = (
+            M.make_logits(cfg, impl),
+            [spec([t, d]), spec([d]), spec([d, v])],
+            ["h", "lnf", "wout"],
+        )
+        arts[f"tpattn_prefill_t{t}"] = (
+            M.make_shard_attn_prefill(cfg, impl),
+            [spec([t, d]), spec([d]), spec([d, dh]), spec([d, dh]),
+             spec([d, dh]), spec([dh, d])],
+            ["h", "ln1", "wq_sh", "wk_sh", "wv_sh", "wo_sh"],
+        )
+        arts[f"tpffn_prefill_t{t}"] = (
+            M.make_shard_ffn(cfg, impl),
+            [spec([t, d]), spec([d]), spec([d, fh]), spec([d, fh]), spec([fh, d])],
+            ["h", "ln2", "wg_sh", "wu_sh", "wd_sh"],
+        )
+        arts[f"lpattn_prefill_t{t}"] = (
+            M.make_shard_attn_prefill(cfg, impl),
+            [spec([t, d]), spec([d]), spec([d, d]), spec([d, d]),
+             spec([d, d]), spec([d, d])],
+            ["h", "ln1", "wq", "wk", "wv", "wo"],
+        )
+        for wname, w in (("half", dh), ("full", d)):
+            arts[f"cache_insert_{wname}_t{t}"] = (
+                M.make_cache_insert(cfg),
+                [spec([s, c, w]), spec([t, w]), spec([], I32)],
+                ["cache", "stripe", "slot"],
+            )
+
+    for mode, w, fw in (("tp", dh, fh), ("lp", d, f)):
+        arts[f"{mode}attn_decode"] = (
+            M.make_shard_attn_decode(cfg, impl),
+            [spec([s, d]), spec([d]), spec([d, w]), spec([d, w]),
+             spec([d, w]), spec([w, d]), spec([s, c, w]), spec([s, c, w]),
+             spec([s], I32)],
+            ["x", "ln1", "wq", "wk", "wv", "wo", "kcache", "vcache", "pos"],
+        )
+        arts[f"{mode}ffn_decode"] = (
+            M.make_shard_ffn_decode(cfg, impl),
+            [spec([s, d]), spec([d]), spec([d, fw]), spec([d, fw]), spec([fw, d])],
+            ["x", "ln2", "wg", "wu", "wd"],
+        )
+
+    arts["embed_decode"] = (
+        M.make_embed_decode(cfg),
+        [spec([s], I32), spec([v, d])],
+        ["tokens", "emb"],
+    )
+    arts["logits_decode"] = (
+        M.make_logits_decode(cfg, impl),
+        [spec([s, d]), spec([d]), spec([d, v])],
+        ["x", "lnf", "wout"],
+    )
+    arts["lpfused_attn_t128"] = (
+        M.make_lp_fused_attn(cfg, impl),
+        [spec([128, d]), spec([d]), spec([d]), spec([d, 6 * d]), spec([2 * d, d])],
+        ["h", "ln_a", "ln_b", "wqkv2", "wo2"],
+    )
+    return arts
+
+
+def _source_hash(impl: str) -> str:
+    h = hashlib.sha256()
+    pkg = Path(__file__).parent
+    for p in sorted(list(pkg.glob("*.py")) + list((pkg / "kernels").glob("*.py"))):
+        h.update(p.read_bytes())
+    h.update(impl.encode())
+    h.update(json.dumps({k: v.to_dict() for k, v in CONFIGS.items()}).encode())
+    return h.hexdigest()
+
+
+def build(out_dir: Path, impl: str = "pallas", force: bool = False,
+          models: list[str] | None = None) -> None:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    manifest_path = out_dir / "manifest.json"
+    src_hash = _source_hash(impl)
+    if manifest_path.exists() and not force:
+        old = json.loads(manifest_path.read_text())
+        if old.get("source_hash") == src_hash:
+            print(f"artifacts up to date ({src_hash[:12]}) — skipping")
+            return
+
+    manifest = {
+        "format": 1,
+        "source_hash": src_hash,
+        "impl": impl,
+        "seq_buckets": list(SEQ_BUCKETS),
+        "models": {},
+    }
+    for name, cfg in CONFIGS.items():
+        if models and name not in models:
+            continue
+        mdir = out_dir / name
+        mdir.mkdir(exist_ok=True)
+        arts = artifact_specs(cfg, impl)
+        entry = {"config": cfg.to_dict(), "artifacts": {}}
+        for aname, (fn, arg_specs, arg_names) in arts.items():
+            text = to_hlo_text(fn, arg_specs)
+            rel = f"{name}/{aname}.hlo.txt"
+            (out_dir / rel).write_text(text)
+            entry["artifacts"][aname] = {
+                "file": rel,
+                "args": [
+                    {"name": n, "dtype": str(sp.dtype), "shape": list(sp.shape)}
+                    for n, sp in zip(arg_names, arg_specs)
+                ],
+            }
+            print(f"  {name}/{aname}: {len(text)} chars")
+        manifest["models"][name] = entry
+    manifest_path.write_text(json.dumps(manifest, indent=1))
+    print(f"wrote {manifest_path}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--impl", default="pallas", choices=["pallas", "jnp"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--models", nargs="*", default=None)
+    args = ap.parse_args()
+    build(Path(args.out), args.impl, args.force, args.models)
+
+
+if __name__ == "__main__":
+    main()

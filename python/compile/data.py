@@ -1,0 +1,174 @@
+"""Deterministic synthetic corpus (substrate — mirrored by rust/src/text/corpus.rs).
+
+Stands in for RedPajama (perplexity set) and for the lm-eval ICL suites: the
+corpus interleaves templated natural-language sentences, arithmetic facts,
+relation ("capital of") facts, and the ICL task formats, so that (a) a tiny
+model trained on it acquires measurable in-context skills and (b) held-out
+perplexity reacts to computational-graph damage the same ordered way the
+paper reports (prune > merge > shuffle > parallel).
+
+Everything is driven by SplitMix64 so the rust mirror reproduces the exact
+byte stream given the same seed — parity is asserted by golden tests on both
+sides (`python/tests/test_data.py`, `rust/src/text/corpus.rs`).
+"""
+
+from __future__ import annotations
+
+MASK64 = (1 << 64) - 1
+
+
+class SplitMix64:
+    """SplitMix64 PRNG; bit-exact twin of rust/src/util/rng.rs."""
+
+    def __init__(self, seed: int):
+        self.state = seed & MASK64
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & MASK64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+        return (z ^ (z >> 31)) & MASK64
+
+    def below(self, n: int) -> int:
+        """Uniform integer in [0, n) (modulo method; fine for corpus use)."""
+        return self.next_u64() % n
+
+
+# --- fixed word tables (identical constants in the rust mirror) ------------
+
+ADJECTIVES = [
+    "red", "small", "quiet", "bright", "old", "swift", "calm", "brave",
+    "green", "tall", "soft", "sharp", "young", "cold", "warm", "plain",
+]
+NOUNS = [
+    "fox", "river", "stone", "bird", "tree", "cloud", "wolf", "lamp",
+    "ship", "tower", "field", "storm", "book", "road", "horse", "flame",
+]
+VERBS = [
+    "watches", "follows", "finds", "passes", "guards", "carries", "meets",
+    "crosses", "holds", "leaves", "seeks", "joins", "greets", "trails",
+    "lifts", "turns",
+]
+COUNTRIES = [
+    "avaria", "belmora", "cassia", "dorvan", "elyna", "fermont", "galdia",
+    "harwick", "isolde", "jorvik", "kelmar", "lorvina", "mendia", "norwell",
+    "ostrava", "pellia", "quorath", "rivona", "selwick", "tormund",
+    "ulvania", "verdane", "wystan", "xanthe", "yorvale", "zembla",
+    "ardenne", "brovia", "cathmor", "drellin", "eswick", "farlone",
+]
+CAPITALS = [
+    "avaport", "belcity", "casburg", "dorhaven", "elyton", "fermouth",
+    "galford", "harmont", "isoton", "jorholm", "kelport", "lorgrad",
+    "menfort", "norbury", "ostwick", "pelgrove", "quorton", "rivgate",
+    "selmora", "torvale", "ulham", "verdun", "wysport", "xanburg",
+    "yorford", "zemholm", "ardfell", "broville", "cathwick", "drelport",
+    "esgard", "farmont",
+]
+LETTERS = "abcdefghijklmnopqrstuvwxyz"
+
+
+def capital_of(country_idx: int) -> str:
+    """The relation is positional: COUNTRIES[i] -> CAPITALS[i]."""
+    return CAPITALS[country_idx]
+
+
+# --- atomic item generators -------------------------------------------------
+
+def gen_sentence(rng: SplitMix64) -> str:
+    a = ADJECTIVES[rng.below(len(ADJECTIVES))]
+    n1 = NOUNS[rng.below(len(NOUNS))]
+    v = VERBS[rng.below(len(VERBS))]
+    n2 = NOUNS[rng.below(len(NOUNS))]
+    return f"the {a} {n1} {v} the {n2} ."
+
+
+def gen_arith(rng: SplitMix64) -> str:
+    # single-digit operands: answers stay <= 2 digits, so a ~2M-param model
+    # can actually acquire the circuit (the GSM-8K-analogue must be above
+    # chance at baseline for the paper's fragility story to be testable)
+    a = rng.below(10)
+    b = rng.below(10)
+    if rng.below(2) == 0:
+        return f"{a} + {b} = {a + b} ."
+    hi, lo = max(a, b), min(a, b)
+    return f"{hi} - {lo} = {hi - lo} ."
+
+
+def gen_relation(rng: SplitMix64) -> str:
+    i = rng.below(len(COUNTRIES))
+    return f"the capital of {COUNTRIES[i]} is {capital_of(i)} ."
+
+
+def _rand_letters(rng: SplitMix64, lo: int, hi: int) -> str:
+    k = lo + rng.below(hi - lo + 1)
+    return "".join(LETTERS[rng.below(26)] for _ in range(k))
+
+
+def gen_copy(rng: SplitMix64) -> str:
+    w = _rand_letters(rng, 3, 6)
+    return f"copy : {w} -> {w} ."
+
+
+def gen_reverse(rng: SplitMix64) -> str:
+    w = _rand_letters(rng, 3, 6)
+    return f"rev : {w} -> {w[::-1]} ."
+
+
+def gen_pattern(rng: SplitMix64) -> str:
+    start = rng.below(22)
+    seq = [LETTERS[start + j] for j in range(4)]
+    return f"next : {' '.join(seq[:3])} -> {seq[3]} ."
+
+
+ITEM_KINDS = [gen_sentence, gen_arith, gen_relation, gen_copy, gen_reverse,
+              gen_pattern]
+# sampling weights out of 16 (sentence-heavy, like natural text)
+ITEM_WEIGHTS = [6, 3, 3, 1, 1, 2]
+_CUM = [sum(ITEM_WEIGHTS[: i + 1]) for i in range(len(ITEM_WEIGHTS))]
+
+
+def gen_item(rng: SplitMix64) -> str:
+    r = rng.below(_CUM[-1])
+    for k, c in enumerate(_CUM):
+        if r < c:
+            return ITEM_KINDS[k](rng)
+    raise AssertionError("unreachable")
+
+
+def gen_document(rng: SplitMix64, n_items: int = 8) -> str:
+    return " ".join(gen_item(rng) for _ in range(n_items))
+
+
+def gen_corpus(seed: int, n_docs: int) -> list[str]:
+    """n_docs documents; doc i uses its own stream seeded with seed ^ i*GOLDEN
+    so rust and python can generate disjoint slices independently."""
+    docs = []
+    for i in range(n_docs):
+        rng = SplitMix64((seed ^ (i * 0x9E3779B97F4A7C15)) & MASK64)
+        docs.append(gen_document(rng))
+    return docs
+
+
+# Train/eval split convention shared with rust: documents with index
+# < 0x4000_0000 are train; eval uses indices starting at EVAL_BASE.
+EVAL_BASE = 0x40000000
+
+
+def train_doc(seed: int, i: int) -> str:
+    return gen_corpus_doc(seed, i)
+
+
+def eval_doc(seed: int, i: int) -> str:
+    return gen_corpus_doc(seed, EVAL_BASE + i)
+
+
+def gen_corpus_doc(seed: int, i: int) -> str:
+    rng = SplitMix64((seed ^ (i * 0x9E3779B97F4A7C15)) & MASK64)
+    return gen_document(rng)
+
+
+if __name__ == "__main__":
+    rng = SplitMix64(7)
+    for _ in range(4):
+        print(gen_item(rng))

@@ -1,0 +1,20 @@
+"""L1 — Pallas kernels for the paper's compute hot-spots.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so interpret mode is how the kernels lower into plain
+HLO that the rust runtime can load (see /opt/xla-example/README.md). The
+BlockSpec structure is written for the real TPU memory hierarchy anyway —
+VMEM-resident tiles, MXU-shaped matmuls — and DESIGN.md §Perf carries the
+analytic VMEM/MXU estimates.
+
+Kernels:
+  rmsnorm        — row-wise RMSNorm
+  dual_rmsnorm   — LP fused dual-path norm (one HBM read of x, two outputs)
+  flash_attention— causal attention, grid over (head, q-block)
+  cached_attention — decode-step attention against a KV cache slot
+  swiglu_ffn     — fused SwiGLU MLP
+"""
+
+from .rmsnorm import rmsnorm, dual_rmsnorm            # noqa: F401
+from .attention import flash_attention, cached_attention  # noqa: F401
+from .ffn import swiglu_ffn                           # noqa: F401

@@ -1,0 +1,110 @@
+"""Causal attention Pallas kernels (prefill and decode).
+
+TPU mapping (the paper targets CUDA threadblocks; we re-derive the schedule
+for the TPU memory hierarchy — DESIGN.md §Hardware-Adaptation):
+
+* ``flash_attention`` — grid over (head, query-block). Each grid step holds
+  one query tile [Bq, hd] plus the full K/V stripes [T, hd] for that head in
+  VMEM (T ≤ 256, hd = 32 → 2·32 KiB — far under budget, so no K/V streaming
+  loop is needed at this scale; the BlockSpec already expresses the
+  HBM→VMEM schedule that would stream for larger T). Scores use the MXU via
+  jnp.dot with f32 accumulation.
+
+* ``cached_attention`` — decode step: one token's query against a cache
+  stripe [C, hd]; grid over heads. Positions beyond `pos` are masked, so a
+  statically-shaped cache (C = ctx) serves every sequence length.
+
+Both are numerically checked against kernels.ref by pytest/hypothesis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q: int):
+    # q_ref: [block_q, hd] for (head h, q-block i); k/v_ref: [T, hd] for h.
+    i = pl.program_id(1)
+    q = q_ref[:, 0, :]          # squeeze the blocked head axis: [Bq, hd]
+    k = k_ref[:, 0, :]          # [T, hd]
+    v = v_ref[:, 0, :]
+    hd = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    # MXU matmul, f32 accumulate.
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # [Bq,T]
+    rows = i * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(cols <= rows, s, NEG)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[:, 0, :] = jnp.dot(p, v, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q",))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    block_q: int = 64) -> jnp.ndarray:
+    """Causal MHA. q,k,v: [T, H, hd] with RoPE pre-applied. -> [T, H, hd]."""
+    t, h, hd = q.shape
+    bq = min(block_q, t)
+    assert t % bq == 0, f"T={t} must divide block_q={bq}"
+    grid = (h, t // bq)
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, block_q=bq),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, 1, hd), lambda h_, i: (i, h_, 0)),
+            pl.BlockSpec((t, 1, hd), lambda h_, i: (0, h_, 0)),
+            pl.BlockSpec((t, 1, hd), lambda h_, i: (0, h_, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, 1, hd), lambda h_, i: (i, h_, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, h, hd), jnp.float32),
+        interpret=True,
+    )(q, k, v)
+    return out
+
+
+def _cached_kernel(q_ref, k_ref, v_ref, pos_ref, o_ref):
+    # q_ref: [1, 1, hd] for head h; k/v_ref: [C, 1, hd]; pos_ref: [1] int32.
+    q = q_ref[:, 0, :]          # [1, hd]
+    k = k_ref[:, 0, :]          # [C, hd]
+    v = v_ref[:, 0, :]
+    pos = pos_ref[0]
+    hd = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # [1,C]
+    cols = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(cols <= pos, s, NEG)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[:, 0, :] = jnp.dot(p, v, preferred_element_type=jnp.float32)
+
+
+@jax.jit
+def cached_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, pos: jnp.ndarray) -> jnp.ndarray:
+    """Decode attention. q: [H, hd]; caches: [C, H, hd]; pos: int32 scalar."""
+    h, hd = q.shape
+    c = k_cache.shape[0]
+    pos_arr = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(1), (1,))
+    out = pl.pallas_call(
+        _cached_kernel,
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((1, 1, hd), lambda h_: (0, h_, 0)),
+            pl.BlockSpec((c, 1, hd), lambda h_: (0, h_, 0)),
+            pl.BlockSpec((c, 1, hd), lambda h_: (0, h_, 0)),
+            pl.BlockSpec((1,), lambda h_: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, hd), lambda h_: (0, h_, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, h, hd), jnp.float32),
+        interpret=True,
+    )(q.reshape(1, h, hd), k_cache, v_cache, pos_arr)
+    return out.reshape(h, hd)

@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for every Pallas kernel (the CORE correctness signal).
+
+Each function here is the mathematical definition; the Pallas kernels in
+this package must match to float32 tolerance. `python/tests/test_kernels.py`
+sweeps shapes with hypothesis and asserts allclose.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def softmax(x, axis=-1):
+    m = jnp.max(x, axis=axis, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+def silu(x):
+    return x * (1.0 / (1.0 + jnp.exp(-x)))
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    """RMSNorm over the last axis: x * rsqrt(mean(x^2)+eps) * w."""
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * (1.0 / jnp.sqrt(ms + eps)) * w
+
+
+def rope_angles(positions: jnp.ndarray, head_dim: int, theta: float = 10000.0):
+    """cos/sin tables for rotary embedding, half-split (Llama) convention.
+
+    positions: int32 [...]; returns (cos, sin) of shape [..., head_dim//2].
+    """
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: [..., head_dim]; cos/sin broadcastable to [..., head_dim//2]."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def causal_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Multi-head causal attention. q,k,v: [T,H,hd] (RoPE applied). -> [T,H,hd]."""
+    t, h, hd = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    scores = jnp.einsum("thd,shd->hts", q, k) * scale          # [H,T,T]
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    scores = jnp.where(mask[None, :, :], scores, -1e30)
+    return jnp.einsum("hts,shd->thd", softmax(scores, axis=-1), v)
+
+
+def cached_attention(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                     pos: jnp.ndarray) -> jnp.ndarray:
+    """Single-token attention against a KV cache.
+
+    q: [H,hd]; k_cache/v_cache: [C,H,hd]; pos: scalar int32 — index of the
+    current token (cache already holds K/V at `pos`). Attends to j <= pos.
+    """
+    c, h, hd = k_cache.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    scores = jnp.einsum("hd,chd->hc", q, k_cache) * scale      # [H,C]
+    valid = jnp.arange(c) <= pos
+    scores = jnp.where(valid[None, :], scores, -1e30)
+    return jnp.einsum("hc,chd->hd", softmax(scores, axis=-1), v_cache)
+
+
+def swiglu_ffn(x: jnp.ndarray, wg: jnp.ndarray, wu: jnp.ndarray,
+               wd: jnp.ndarray) -> jnp.ndarray:
+    """SwiGLU: (silu(x@wg) * (x@wu)) @ wd. x: [T,D]."""
+    return (silu(x @ wg) * (x @ wu)) @ wd
+
+
+def dual_rmsnorm(x: jnp.ndarray, wa: jnp.ndarray, wb: jnp.ndarray,
+                 eps: float = 1e-5):
+    """LP dual-path norm: one read of x, two weighted outputs."""
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    inv = 1.0 / jnp.sqrt(ms + eps)
+    return x * inv * wa, x * inv * wb

@@ -1,0 +1,55 @@
+"""RMSNorm Pallas kernels.
+
+TPU mapping: a [T, D] activation tile is far below the ~16 MiB VMEM budget
+for every configuration in this repo (256×256 f32 = 256 KiB), so the whole
+tensor is a single block and the grid is trivial. The interesting kernel is
+``dual_rmsnorm``: the LP transform needs the *same* hidden state normalized
+with *two different* weight vectors (each divergent path keeps its original
+layer's norm). Fusing both into one kernel reads x from HBM once instead of
+twice — the TPU analogue of the paper's fused-projection trick.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EPS = 1e-5
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref):
+    x = x_ref[...]
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    o_ref[...] = x * (1.0 / jnp.sqrt(ms + EPS)) * w_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """x: [T, D]; w: [D]. Single-block kernel (fits VMEM at all our sizes)."""
+    return pl.pallas_call(
+        _rmsnorm_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(x, w)
+
+
+def _dual_rmsnorm_kernel(x_ref, wa_ref, wb_ref, oa_ref, ob_ref):
+    x = x_ref[...]
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    inv = 1.0 / jnp.sqrt(ms + EPS)
+    xn = x * inv                       # shared normalization, computed once
+    oa_ref[...] = xn * wa_ref[...]
+    ob_ref[...] = xn * wb_ref[...]
+
+
+def dual_rmsnorm(x: jnp.ndarray, wa: jnp.ndarray, wb: jnp.ndarray):
+    """LP dual-path norm. x: [T, D]; wa, wb: [D] -> (xa, xb)."""
+    shape = jax.ShapeDtypeStruct(x.shape, x.dtype)
+    return pl.pallas_call(
+        _dual_rmsnorm_kernel,
+        out_shape=(shape, shape),
+        interpret=True,
+    )(x, wa, wb)

@@ -1,0 +1,362 @@
+"""L2 — the JAX model: Llama-style decoder + every AOT-exported entrypoint.
+
+Two kernel implementations are selectable per call:
+  impl="pallas" — the L1 Pallas kernels (interpret mode). Used for all AOT
+                  inference artifacts, so the kernels lower into the HLO the
+                  rust runtime executes.
+  impl="jnp"    — the pure-jnp reference path. Used for training (fast,
+                  differentiable) and as the oracle in tests.
+
+Graph modes implemented here (training/fine-tuning side):
+  forward_seq    — standard sequential model.
+  forward_lp     — the deployed LP-TP form over chosen pair windows
+                   (m = x + A_k(x) + A_{k+1}(x); y = m + F_k(m) + F_{k+1}(m)),
+                   used for Table-2 fine-tuning.
+
+The rust coordinator composes all §3 transforms (shuffle/prune/merge/
+parallel/2-parallel) at runtime from the per-sub-block artifacts exported by
+aot.py, so the heatmap experiments need no per-config compilation.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import tok
+from .modelcfg import ModelConfig
+from .kernels import (
+    rmsnorm as pl_rmsnorm,
+    flash_attention as pl_flash,
+    cached_attention as pl_cached,
+    swiglu_ffn as pl_ffn,
+)
+from .kernels import ref
+
+Params = dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# Parameter init
+# --------------------------------------------------------------------------
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> Params:
+    """He/Glorot-ish init matching Llama conventions (scaled residual outs)."""
+    d, f, v, n = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.n_layers
+    keys = jax.random.split(key, 3 + 7 * n)
+    ki = iter(range(len(keys)))
+
+    def dense(k, fan_in, shape, scale=1.0):
+        return (jax.random.normal(keys[k], shape, jnp.float32)
+                * scale / jnp.sqrt(jnp.float32(fan_in)))
+
+    p: Params = {
+        "emb": jax.random.normal(keys[next(ki)], (v, d), jnp.float32) * 0.02,
+        "lnf": jnp.ones((d,), jnp.float32),
+        "wout": dense(next(ki), d, (d, v)),
+    }
+    _ = next(ki)
+    out_scale = 1.0 / jnp.sqrt(jnp.float32(2 * n))  # residual-stream scaling
+    layers = []
+    for _i in range(n):
+        layers.append({
+            "ln1": jnp.ones((d,), jnp.float32),
+            "wq": dense(next(ki), d, (d, d)),
+            "wk": dense(next(ki), d, (d, d)),
+            "wv": dense(next(ki), d, (d, d)),
+            "wo": dense(next(ki), d, (d, d), scale=out_scale),
+            "ln2": jnp.ones((d,), jnp.float32),
+            "wg": dense(next(ki), d, (d, f)),
+            "wu": dense(next(ki), d, (d, f)),
+            "wd": dense(next(ki), f, (f, d), scale=out_scale),
+        })
+    p["layers"] = layers
+    return p
+
+
+# --------------------------------------------------------------------------
+# Sub-block primitives (both impls)
+# --------------------------------------------------------------------------
+
+def _norm(x, w, impl):
+    return pl_rmsnorm(x, w) if impl == "pallas" else ref.rmsnorm(x, w)
+
+
+def _attention(q, k, v, impl):
+    return pl_flash(q, k, v) if impl == "pallas" else ref.causal_attention(q, k, v)
+
+
+def _swiglu(x, wg, wu, wd, impl):
+    return pl_ffn(x, wg, wu, wd) if impl == "pallas" else ref.swiglu_ffn(x, wg, wu, wd)
+
+
+def attn_delta(cfg: ModelConfig, h, ln, wq, wk, wv, wo, impl="jnp",
+               pos_offset=0):
+    """A(x): pre-norm causal attention sub-block *delta* (no residual add).
+
+    h: [T, D]; weight widths may be sharded: wq/wk/wv: [D, w], wo: [w, D]
+    with w a multiple of head_dim. Positions are 0..T-1 (+offset).
+    """
+    t = h.shape[0]
+    hd = cfg.head_dim
+    xn = _norm(h, ln, impl)
+    w = wq.shape[1]
+    nh = w // hd
+    q = (xn @ wq).reshape(t, nh, hd)
+    k = (xn @ wk).reshape(t, nh, hd)
+    v = (xn @ wv).reshape(t, nh, hd)
+    posv = jnp.arange(t, dtype=jnp.int32) + pos_offset
+    cos, sin = ref.rope_angles(posv, hd, cfg.rope_theta)
+    q = ref.apply_rope(q, cos[:, None, :], sin[:, None, :])
+    k = ref.apply_rope(k, cos[:, None, :], sin[:, None, :])
+    att = _attention(q, k, v, impl).reshape(t, w)
+    return att @ wo
+
+
+def ffn_delta(cfg: ModelConfig, h, ln, wg, wu, wd, impl="jnp"):
+    """F(x): pre-norm SwiGLU sub-block delta. Sharded widths allowed."""
+    xn = _norm(h, ln, impl)
+    return _swiglu(xn, wg, wu, wd, impl)
+
+
+# --------------------------------------------------------------------------
+# Full forwards (training / fine-tuning)
+# --------------------------------------------------------------------------
+
+def forward_seq(cfg: ModelConfig, p: Params, tokens, impl="jnp"):
+    """Sequential forward. tokens: int32 [T] -> logits [T, V]."""
+    h = p["emb"][tokens]
+    for lp in p["layers"]:
+        h = h + attn_delta(cfg, h, lp["ln1"], lp["wq"], lp["wk"], lp["wv"],
+                           lp["wo"], impl)
+        h = h + ffn_delta(cfg, h, lp["ln2"], lp["wg"], lp["wu"], lp["wd"], impl)
+    return _norm(h, p["lnf"], impl) @ p["wout"]
+
+
+def lp_pairs_for_window(n_layers: int, start: int, end: int) -> list[tuple[int, int]]:
+    """Consecutive disjoint pairs covering [start, end) (paper's contiguous
+    2-parallel): (s,s+1), (s+2,s+3), ... A trailing odd layer stays sequential."""
+    pairs = []
+    i = start
+    while i + 1 < end:
+        pairs.append((i, i + 1))
+        i += 2
+    return pairs
+
+
+def forward_lp(cfg: ModelConfig, p: Params, tokens, pairs, impl="jnp"):
+    """LP-TP deployed form: paired layers share the post-attention residual.
+
+    pairs: list of (k, k+1) disjoint ascending layer pairs; all other layers
+    run sequentially. This is the graph the rust serving path executes, so
+    fine-tuning against it (Table 2) optimizes the true deployment numerics.
+    """
+    pair_first = {a: b for a, b in pairs}
+    in_pair_second = {b for _, b in pairs}
+    h = p["emb"][tokens]
+    i = 0
+    layers = p["layers"]
+    while i < len(layers):
+        if i in pair_first:
+            la, lb = layers[i], layers[pair_first[i]]
+            m = (h
+                 + attn_delta(cfg, h, la["ln1"], la["wq"], la["wk"], la["wv"], la["wo"], impl)
+                 + attn_delta(cfg, h, lb["ln1"], lb["wq"], lb["wk"], lb["wv"], lb["wo"], impl))
+            h = (m
+                 + ffn_delta(cfg, m, la["ln2"], la["wg"], la["wu"], la["wd"], impl)
+                 + ffn_delta(cfg, m, lb["ln2"], lb["wg"], lb["wu"], lb["wd"], impl))
+            i = pair_first[i] + 1
+        else:
+            assert i not in in_pair_second
+            lp_ = layers[i]
+            h = h + attn_delta(cfg, h, lp_["ln1"], lp_["wq"], lp_["wk"], lp_["wv"], lp_["wo"], impl)
+            h = h + ffn_delta(cfg, h, lp_["ln2"], lp_["wg"], lp_["wu"], lp_["wd"], impl)
+            i += 1
+    return _norm(h, p["lnf"], impl) @ p["wout"]
+
+
+def loss_fn(cfg: ModelConfig, p: Params, tokens, forward=forward_seq, **fw_kw):
+    """Next-token cross-entropy over a [B, T] batch; PAD positions masked."""
+    def one(seq):
+        logits = forward(cfg, p, seq[:-1], **fw_kw)
+        targets = seq[1:]
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, targets[:, None], axis=-1)[:, 0]
+        mask = (targets != tok.PAD).astype(jnp.float32)
+        return jnp.sum(nll * mask), jnp.sum(mask)
+
+    losses, counts = jax.vmap(one)(tokens)
+    return jnp.sum(losses) / jnp.maximum(jnp.sum(counts), 1.0)
+
+
+# --------------------------------------------------------------------------
+# AOT-exported entrypoints (closed over nothing; weights are arguments)
+# --------------------------------------------------------------------------
+# Widths: "full" (w = D, LP paths + scoring) and "half" (w = D/2, TP shards).
+
+def make_embed(cfg: ModelConfig):
+    def embed(tokens, emb):
+        """tokens: i32 [T]; emb: [V, D] -> h [T, D]."""
+        return (emb[tokens],)
+    return embed
+
+
+def make_attn_delta(cfg: ModelConfig, impl="pallas"):
+    def attn(h, ln, wq, wk, wv, wo):
+        """Scoring/LP-path attention delta at full width."""
+        return (attn_delta(cfg, h, ln, wq, wk, wv, wo, impl),)
+    return attn
+
+
+def make_ffn_delta(cfg: ModelConfig, impl="pallas"):
+    def ffn(h, ln, wg, wu, wd):
+        return (ffn_delta(cfg, h, ln, wg, wu, wd, impl),)
+    return ffn
+
+
+def make_logits(cfg: ModelConfig, impl="pallas"):
+    def logits(h, lnf, wout):
+        return (_norm(h, lnf, impl) @ wout,)
+    return logits
+
+
+def make_shard_attn_prefill(cfg: ModelConfig, impl="pallas"):
+    def attn(h, ln, wq, wk, wv, wo):
+        """TP/LP prefill shard: returns the partial output (to be
+        all-reduced by the coordinator) and this shard's K/V stripes.
+
+        h: [T, D]; wq/wk/wv: [D, w]; wo: [w, D] -> (part [T,D], k [T,w], v [T,w]).
+        """
+        t = h.shape[0]
+        hd = cfg.head_dim
+        xn = _norm(h, ln, impl)
+        w = wq.shape[1]
+        nh = w // hd
+        q = (xn @ wq).reshape(t, nh, hd)
+        k = (xn @ wk).reshape(t, nh, hd)
+        v = (xn @ wv).reshape(t, nh, hd)
+        posv = jnp.arange(t, dtype=jnp.int32)
+        cos, sin = ref.rope_angles(posv, hd, cfg.rope_theta)
+        qr = ref.apply_rope(q, cos[:, None, :], sin[:, None, :])
+        kr = ref.apply_rope(k, cos[:, None, :], sin[:, None, :])
+        att = _attention(qr, kr, v, impl).reshape(t, w)
+        return att @ wo, kr.reshape(t, w), v.reshape(t, w)
+    return attn
+
+
+def make_shard_ffn(cfg: ModelConfig, impl="pallas"):
+    def ffn(h, ln, wg, wu, wd):
+        """TP/LP FFN shard partial: h [T,D], wg/wu [D,fw], wd [fw,D]."""
+        return (ffn_delta(cfg, h, ln, wg, wu, wd, impl),)
+    return ffn
+
+
+def make_shard_attn_decode(cfg: ModelConfig, impl="pallas"):
+    S, C, hd = cfg.slots, cfg.ctx, cfg.head_dim
+
+    def step_one(x, ln, wq, wk, wv, wo, kc, vc, pos):
+        """One slot. x: [D]; kc/vc: [C, w]; pos: scalar i32 (current index)."""
+        w = wq.shape[1]
+        nh = w // hd
+        xn = _norm(x[None, :], ln, impl)[0]
+        q = (xn @ wq).reshape(nh, hd)
+        k = (xn @ wk).reshape(nh, hd)
+        v = (xn @ wv).reshape(nh, hd)
+        cos, sin = ref.rope_angles(pos, hd, cfg.rope_theta)
+        qr = ref.apply_rope(q, cos[None, :], sin[None, :])
+        kr = ref.apply_rope(k, cos[None, :], sin[None, :])
+        kc2 = jax.lax.dynamic_update_slice(kc, kr.reshape(1, w), (pos, 0))
+        vc2 = jax.lax.dynamic_update_slice(vc, v.reshape(1, w), (pos, 0))
+        if impl == "pallas":
+            att = pl_cached(qr, kc2.reshape(C, nh, hd), vc2.reshape(C, nh, hd), pos)
+        else:
+            att = ref.cached_attention(qr, kc2.reshape(C, nh, hd),
+                                       vc2.reshape(C, nh, hd), pos)
+        return att.reshape(w) @ wo, kc2, vc2
+
+    def attn(x, ln, wq, wk, wv, wo, kcache, vcache, pos):
+        """All S slots. x: [S,D]; caches: [S,C,w]; pos: i32 [S].
+
+        Slots are independent sequences (continuous batching); inactive
+        slots simply carry pos of their last real token and are ignored by
+        the coordinator.
+        """
+        parts, kcs, vcs = [], [], []
+        for s in range(S):          # static unroll; S is small
+            part, kc2, vc2 = step_one(x[s], ln, wq, wk, wv, wo,
+                                      kcache[s], vcache[s], pos[s])
+            parts.append(part)
+            kcs.append(kc2)
+            vcs.append(vc2)
+        return (jnp.stack(parts), jnp.stack(kcs), jnp.stack(vcs))
+    return attn
+
+
+def make_shard_ffn_decode(cfg: ModelConfig, impl="pallas"):
+    def ffn(x, ln, wg, wu, wd):
+        """x: [S, D] -> partial [S, D]."""
+        return (ffn_delta(cfg, x, ln, wg, wu, wd, impl),)
+    return ffn
+
+
+def make_cache_insert(cfg: ModelConfig):
+    def insert(cache, stripe, slot):
+        """Write a prefill K/V stripe into a cache slot.
+
+        cache: [S, C, w]; stripe: [T, w]; slot: scalar i32 -> cache'.
+        """
+        t, w = stripe.shape
+        padded = jnp.zeros((cfg.ctx, w), jnp.float32).at[:t].set(stripe)
+        return (jax.lax.dynamic_update_slice(cache, padded[None], (slot, 0, 0)),)
+    return insert
+
+
+def make_embed_decode(cfg: ModelConfig):
+    def embed(tokens, emb):
+        """tokens: i32 [S] -> x [S, D]."""
+        return (emb[tokens],)
+    return embed
+
+
+def make_logits_decode(cfg: ModelConfig, impl="pallas"):
+    def logits(x, lnf, wout):
+        """x: [S, D] -> logits [S, V]."""
+        return (_norm(x, lnf, impl) @ wout,)
+    return logits
+
+
+def make_lp_fused_attn(cfg: ModelConfig, impl="pallas"):
+    """Single-device fused LP pair attention (ablation abl2 — paper §4's
+    'naive fusion on one GPU yields no gain'): both layers' Q/K/V come from
+    ONE widened matmul [T,D]x[D,6D] and one flash_attention call over 2·H
+    heads; the two output projections are similarly concatenated."""
+    def attn(h, ln_a, ln_b, wqkv2, wo2):
+        """h: [T,D]; wqkv2: [D, 6D] (qa|ka|va|qb|kb|vb); wo2: [2D, D]."""
+        t = h.shape[0]
+        d, hd = cfg.d_model, cfg.head_dim
+        nh = cfg.n_heads
+        xna = _norm(h, ln_a, impl)
+        xnb = _norm(h, ln_b, impl)
+        # widened projection: one MXU pass over the concatenated weights
+        qkv_a = xna @ wqkv2[:, : 3 * d]
+        qkv_b = xnb @ wqkv2[:, 3 * d:]
+        def split(qkv):
+            q = qkv[:, :d].reshape(t, nh, hd)
+            k = qkv[:, d:2 * d].reshape(t, nh, hd)
+            v = qkv[:, 2 * d:].reshape(t, nh, hd)
+            return q, k, v
+        qa, ka, va = split(qkv_a)
+        qb, kb, vb = split(qkv_b)
+        posv = jnp.arange(t, dtype=jnp.int32)
+        cos, sin = ref.rope_angles(posv, hd, cfg.rope_theta)
+        def rope(x):
+            return ref.apply_rope(x, cos[:, None, :], sin[:, None, :])
+        q2 = jnp.concatenate([rope(qa), rope(qb)], axis=1)   # [T, 2H, hd]
+        k2 = jnp.concatenate([rope(ka), rope(kb)], axis=1)
+        v2 = jnp.concatenate([va, vb], axis=1)
+        att = _attention(q2, k2, v2, impl).reshape(t, 2 * d)
+        return (att @ wo2,)
+    return attn

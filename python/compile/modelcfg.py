@@ -1,0 +1,59 @@
+"""Model configurations (the two build-time-trained Llama-architecture models).
+
+`td-small` and `td-base` play the roles of Llama 3.2 3B / Llama 2 7B in the
+paper's experiments: same block structure (pre-RMSNorm, RoPE MHA, SwiGLU),
+scaled to what trains in minutes on this testbed. The *relative* claims
+(larger model tolerates more LP; speedup ∝ Δ) are architecture-level and
+survive the scaling — see DESIGN.md §Substitutions.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, asdict
+
+from . import tok
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    head_dim: int
+    d_ff: int
+    ctx: int                      # max context / KV-cache length
+    slots: int = 4                # decode batch slots (continuous batching)
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+
+    @property
+    def width(self) -> int:
+        return self.n_heads * self.head_dim
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+
+SMALL = ModelConfig(
+    name="td-small", vocab=tok.VOCAB_SIZE, d_model=128, n_layers=12,
+    n_heads=4, head_dim=32, d_ff=256, ctx=256,
+)
+
+BASE = ModelConfig(
+    name="td-base", vocab=tok.VOCAB_SIZE, d_model=256, n_layers=16,
+    n_heads=8, head_dim=32, d_ff=512, ctx=256,
+)
+
+CONFIGS = {c.name: c for c in (SMALL, BASE)}
+
+# Sequence-length buckets compiled AOT. Requests are padded up to the
+# nearest bucket by the rust coordinator.
+SEQ_BUCKETS = (32, 128, 256)
+
+
+def n_params(cfg: ModelConfig) -> int:
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    per_layer = 2 * d + 4 * d * d + 3 * d * f
+    return v * d + cfg.n_layers * per_layer + d + d * v

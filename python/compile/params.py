@@ -1,0 +1,105 @@
+"""Weight-store I/O: the `.tdw` exchange format (python writer, rust reader).
+
+Layout (all little-endian):
+  magic   4 bytes  b"TDW1"
+  count   u32      number of tensors
+  per tensor:
+    name_len u16, name utf-8,
+    dtype    u8   (0 = f32, 1 = i32),
+    ndim     u8, dims u32 × ndim,
+    nbytes   u64, raw data (row-major, LE)
+
+Tensor names: "emb", "lnf", "wout", "layers.<i>.<ln1|wq|wk|wv|wo|ln2|wg|wu|wd>".
+Mirrored by rust/src/model/weights.rs (reader + tests on a golden file).
+"""
+
+from __future__ import annotations
+
+import json
+import struct
+from pathlib import Path
+
+import numpy as np
+
+from .modelcfg import ModelConfig
+
+MAGIC = b"TDW1"
+DTYPES = {np.dtype("float32"): 0, np.dtype("int32"): 1}
+DTYPES_INV = {0: np.dtype("float32"), 1: np.dtype("int32")}
+
+
+def flatten_params(params: dict) -> dict[str, np.ndarray]:
+    """Model pytree -> flat name->array dict (the .tdw tensor set)."""
+    out: dict[str, np.ndarray] = {}
+    for k, v in params.items():
+        if k == "layers":
+            for i, layer in enumerate(v):
+                for n, a in layer.items():
+                    out[f"layers.{i}.{n}"] = np.asarray(a)
+        else:
+            out[k] = np.asarray(v)
+    return out
+
+
+def unflatten_params(flat: dict[str, np.ndarray], n_layers: int) -> dict:
+    layers = [dict() for _ in range(n_layers)]
+    out: dict = {"layers": layers}
+    for name, arr in flat.items():
+        if name.startswith("layers."):
+            _, idx, field = name.split(".")
+            layers[int(idx)][field] = arr
+        else:
+            out[name] = arr
+    return out
+
+
+def save_tdw(path: str | Path, tensors: dict[str, np.ndarray]) -> None:
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in sorted(tensors.items()):
+            arr = np.ascontiguousarray(arr)
+            if arr.dtype not in DTYPES:
+                arr = arr.astype(np.float32)
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", DTYPES[arr.dtype], arr.ndim))
+            for dim in arr.shape:
+                f.write(struct.pack("<I", dim))
+            raw = arr.tobytes()
+            f.write(struct.pack("<Q", len(raw)))
+            f.write(raw)
+
+
+def load_tdw(path: str | Path) -> dict[str, np.ndarray]:
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC, f"{path}: bad magic"
+        (count,) = struct.unpack("<I", f.read(4))
+        out = {}
+        for _ in range(count):
+            (nlen,) = struct.unpack("<H", f.read(2))
+            name = f.read(nlen).decode("utf-8")
+            dt, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim))
+            (nbytes,) = struct.unpack("<Q", f.read(8))
+            arr = np.frombuffer(f.read(nbytes), dtype=DTYPES_INV[dt])
+            out[name] = arr.reshape(dims)
+        return out
+
+
+def save_checkpoint(ckpt_dir: str | Path, cfg: ModelConfig, params: dict,
+                    meta: dict | None = None) -> None:
+    """weights.tdw + config.json under ckpt_dir."""
+    d = Path(ckpt_dir)
+    d.mkdir(parents=True, exist_ok=True)
+    save_tdw(d / "weights.tdw", flatten_params(params))
+    blob = {"model": cfg.to_dict()}
+    if meta:
+        blob["meta"] = meta
+    (d / "config.json").write_text(json.dumps(blob, indent=2))
+
+
+def load_checkpoint(ckpt_dir: str | Path, cfg: ModelConfig) -> dict:
+    flat = load_tdw(Path(ckpt_dir) / "weights.tdw")
+    return unflatten_params(flat, cfg.n_layers)

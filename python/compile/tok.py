@@ -1,0 +1,41 @@
+"""Byte-level tokenizer (substrate — mirrored by rust/src/text/tokenizer.rs).
+
+Vocabulary layout (V = 260):
+  0..255  raw bytes
+  256     BOS
+  257     EOS
+  258     PAD
+  259     reserved (keeps V even / alignment-friendly)
+
+The rust implementation must agree exactly; `python/tests/test_data.py`
+checks golden encodings shared with `rust/src/text/tokenizer.rs` tests.
+"""
+
+from __future__ import annotations
+
+VOCAB_SIZE = 260
+BOS = 256
+EOS = 257
+PAD = 258
+
+
+def encode(text: str, bos: bool = False, eos: bool = False) -> list[int]:
+    """UTF-8 bytes to token ids, optionally wrapped in BOS/EOS."""
+    ids = list(text.encode("utf-8"))
+    if bos:
+        ids.insert(0, BOS)
+    if eos:
+        ids.append(EOS)
+    return ids
+
+
+def decode(ids: list[int]) -> str:
+    """Token ids back to text; specials are dropped."""
+    return bytes(i for i in ids if i < 256).decode("utf-8", errors="replace")
+
+
+def pad_to(ids: list[int], length: int) -> list[int]:
+    """Right-pad (or truncate) to exactly `length` tokens."""
+    if len(ids) >= length:
+        return ids[:length]
+    return ids + [PAD] * (length - len(ids))

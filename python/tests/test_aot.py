@@ -1,0 +1,63 @@
+"""AOT pipeline: every artifact spec lowers to parseable HLO text with the
+expected parameter count, and the manifest inventory is complete."""
+
+import json
+from pathlib import Path
+
+import pytest
+
+from compile import aot
+from compile.modelcfg import SMALL, SEQ_BUCKETS
+
+
+@pytest.fixture(scope="module")
+def specs():
+    return aot.artifact_specs(SMALL, impl="pallas")
+
+
+def test_inventory_complete(specs):
+    for t in SEQ_BUCKETS:
+        for stem in ("embed", "attn", "ffn", "logits", "tpattn_prefill",
+                     "tpffn_prefill", "lpattn_prefill"):
+            assert f"{stem}_t{t}" in specs
+        for w in ("half", "full"):
+            assert f"cache_insert_{w}_t{t}" in specs
+    for mode in ("tp", "lp"):
+        assert f"{mode}attn_decode" in specs
+        assert f"{mode}ffn_decode" in specs
+    assert "embed_decode" in specs and "logits_decode" in specs
+    assert "lpfused_attn_t128" in specs
+
+
+@pytest.mark.parametrize("name", ["attn_t32", "tpattn_decode",
+                                  "cache_insert_half_t32"])
+def test_lowering_produces_hlo_text(specs, name):
+    fn, arg_specs, arg_names = specs[name]
+    text = aot.to_hlo_text(fn, arg_specs)
+    assert text.startswith("HloModule")
+    # the ENTRY computation has one parameter per argument; nested
+    # computations (reduce/fusion bodies) have at most 2 — so the max
+    # parameter index over the whole text equals len(args) - 1.
+    import re
+    max_idx = max(int(m) for m in re.findall(r"parameter\((\d+)\)", text))
+    assert max_idx == len(arg_specs) - 1 == len(arg_names) - 1
+
+
+def test_source_hash_is_stable():
+    assert aot._source_hash("pallas") == aot._source_hash("pallas")
+    assert aot._source_hash("pallas") != aot._source_hash("jnp")
+
+
+def test_built_manifest_matches_inventory():
+    """If `make artifacts` has run, the manifest on disk must cover the
+    current inventory for every model (guards stale artifacts)."""
+    mpath = Path(__file__).resolve().parents[2] / "artifacts" / "manifest.json"
+    if not mpath.exists():
+        pytest.skip("artifacts not built yet")
+    manifest = json.loads(mpath.read_text())
+    inv = set(aot.artifact_specs(SMALL, impl=manifest["impl"]).keys())
+    for model, entry in manifest["models"].items():
+        have = set(entry["artifacts"].keys())
+        assert inv == have, f"{model}: missing {inv - have}, extra {have - inv}"
+        for a in entry["artifacts"].values():
+            assert (mpath.parent / a["file"]).exists()

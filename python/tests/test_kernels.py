@@ -1,0 +1,119 @@
+"""Kernel-vs-ref: the core L1 correctness signal.
+
+Hypothesis sweeps shapes; every Pallas kernel must match the pure-jnp oracle
+in kernels/ref.py to float32 tolerance.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (rmsnorm, dual_rmsnorm, flash_attention,
+                             cached_attention, swiglu_ffn)
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def rand(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32) * scale)
+
+
+@settings(**SETTINGS)
+@given(t=st.sampled_from([1, 3, 32, 64]), d=st.sampled_from([16, 128, 256]),
+       seed=st.integers(0, 2**31 - 1))
+def test_rmsnorm_matches_ref(t, d, seed):
+    rng = np.random.default_rng(seed)
+    x, w = rand(rng, t, d), rand(rng, d)
+    np.testing.assert_allclose(rmsnorm(x, w), ref.rmsnorm(x, w),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(t=st.sampled_from([1, 8, 64]), d=st.sampled_from([32, 128]),
+       seed=st.integers(0, 2**31 - 1))
+def test_dual_rmsnorm_matches_ref(t, d, seed):
+    rng = np.random.default_rng(seed)
+    x, wa, wb = rand(rng, t, d), rand(rng, d), rand(rng, d)
+    a, b = dual_rmsnorm(x, wa, wb)
+    ra, rb = ref.dual_rmsnorm(x, wa, wb)
+    np.testing.assert_allclose(a, ra, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(b, rb, rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(t=st.sampled_from([32, 64, 128, 256]), h=st.sampled_from([1, 4, 8]),
+       hd=st.sampled_from([16, 32]), seed=st.integers(0, 2**31 - 1))
+def test_flash_attention_matches_ref(t, h, hd, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = (rand(rng, t, h, hd) for _ in range(3))
+    np.testing.assert_allclose(flash_attention(q, k, v),
+                               ref.causal_attention(q, k, v),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_flash_attention_causality():
+    """Future K/V must not influence the output: perturb position j; outputs
+    at positions < j must be bit-identical."""
+    rng = np.random.default_rng(0)
+    t, h, hd = 64, 2, 32
+    q, k, v = (rand(rng, t, h, hd) for _ in range(3))
+    base = np.asarray(flash_attention(q, k, v))
+    k2 = np.asarray(k).copy()
+    v2 = np.asarray(v).copy()
+    k2[40:] += 100.0
+    v2[40:] -= 50.0
+    pert = np.asarray(flash_attention(q, jnp.asarray(k2), jnp.asarray(v2)))
+    np.testing.assert_array_equal(base[:40], pert[:40])
+    assert not np.allclose(base[40:], pert[40:])
+
+
+@settings(**SETTINGS)
+@given(c=st.sampled_from([32, 128, 256]), h=st.sampled_from([2, 4]),
+       hd=st.sampled_from([16, 32]), seed=st.integers(0, 2**31 - 1),
+       posfrac=st.floats(0.0, 1.0))
+def test_cached_attention_matches_ref(c, h, hd, seed, posfrac):
+    rng = np.random.default_rng(seed)
+    q = rand(rng, h, hd)
+    kc, vc = rand(rng, c, h, hd), rand(rng, c, h, hd)
+    pos = min(c - 1, int(posfrac * c))
+    np.testing.assert_allclose(cached_attention(q, kc, vc, pos),
+                               ref.cached_attention(q, kc, vc, pos),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_cached_attention_ignores_future_cache():
+    rng = np.random.default_rng(1)
+    c, h, hd = 64, 2, 16
+    q, kc, vc = rand(rng, h, hd), rand(rng, c, h, hd), rand(rng, c, h, hd)
+    pos = 10
+    out = np.asarray(cached_attention(q, kc, vc, pos))
+    kc2, vc2 = np.asarray(kc).copy(), np.asarray(vc).copy()
+    kc2[pos + 1:] = 1e3
+    vc2[pos + 1:] = -1e3
+    out2 = np.asarray(cached_attention(q, jnp.asarray(kc2), jnp.asarray(vc2), pos))
+    np.testing.assert_array_equal(out, out2)
+
+
+@settings(**SETTINGS)
+@given(t=st.sampled_from([1, 32, 128]), d=st.sampled_from([64, 128]),
+       f=st.sampled_from([128, 256]), seed=st.integers(0, 2**31 - 1))
+def test_swiglu_matches_ref(t, d, f, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, t, d)
+    wg, wu = rand(rng, d, f, scale=0.1), rand(rng, d, f, scale=0.1)
+    wd = rand(rng, f, d, scale=0.1)
+    np.testing.assert_allclose(swiglu_ffn(x, wg, wu, wd),
+                               ref.swiglu_ffn(x, wg, wu, wd),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("block_q", [16, 32, 64])
+def test_flash_attention_block_size_invariance(block_q):
+    """The BlockSpec schedule must not change the numbers."""
+    rng = np.random.default_rng(7)
+    q, k, v = (rand(rng, 128, 4, 32) for _ in range(3))
+    a = flash_attention(q, k, v, block_q=block_q)
+    b = ref.causal_attention(q, k, v)
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,171 @@
+"""L2 model invariants: sharding identities, graph-mode equivalences, and
+prefill/decode consistency — the properties the rust coordinator relies on.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile import tok
+from compile.modelcfg import ModelConfig
+
+CFG = ModelConfig(name="t", vocab=tok.VOCAB_SIZE, d_model=64, n_layers=4,
+                  n_heads=4, head_dim=16, d_ff=128, ctx=64, slots=2)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(jax.random.PRNGKey(0), CFG)
+
+
+@pytest.fixture(scope="module")
+def tokens():
+    rng = np.random.default_rng(0)
+    return jnp.asarray(rng.integers(0, 255, size=32).astype(np.int32))
+
+
+def test_forward_shapes(params, tokens):
+    logits = M.forward_seq(CFG, params, tokens)
+    assert logits.shape == (32, CFG.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_pallas_and_jnp_forward_agree(params, tokens):
+    a = M.forward_seq(CFG, params, tokens, impl="jnp")
+    b = M.forward_seq(CFG, params, tokens, impl="pallas")
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_lp_with_no_pairs_is_sequential(params, tokens):
+    a = M.forward_seq(CFG, params, tokens)
+    b = M.forward_lp(CFG, params, tokens, pairs=[])
+    np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
+
+
+def test_lp_pairs_change_output_but_stay_finite(params, tokens):
+    a = M.forward_seq(CFG, params, tokens)
+    b = M.forward_lp(CFG, params, tokens, pairs=[(1, 2)])
+    assert np.isfinite(np.asarray(b)).all()
+    assert not np.allclose(a, b)
+
+
+def test_lp_pairs_for_window():
+    assert M.lp_pairs_for_window(12, 2, 10) == [(2, 3), (4, 5), (6, 7), (8, 9)]
+    assert M.lp_pairs_for_window(12, 2, 7) == [(2, 3), (4, 5)]  # odd tail stays
+    assert M.lp_pairs_for_window(12, 5, 5) == []
+
+
+def test_tp_shard_sum_equals_full_attention(params, tokens):
+    """TP correctness identity: full attention delta == sum of the two
+    half-head shards. This is what makes the coordinator's all-reduce the
+    mathematically right combinator."""
+    h = M.forward_seq(CFG, params, tokens)  # any activation-like tensor
+    h = jnp.tanh(h[:, : CFG.d_model])       # [T, D]
+    lp = params["layers"][0]
+    full = M.attn_delta(CFG, h, lp["ln1"], lp["wq"], lp["wk"], lp["wv"],
+                        lp["wo"])
+    d = CFG.d_model
+    half = d // 2
+    shard_fn = M.make_shard_attn_prefill(CFG, impl="jnp")
+    p0, _, _ = shard_fn(h, lp["ln1"], lp["wq"][:, :half], lp["wk"][:, :half],
+                        lp["wv"][:, :half], lp["wo"][:half, :])
+    p1, _, _ = shard_fn(h, lp["ln1"], lp["wq"][:, half:], lp["wk"][:, half:],
+                        lp["wv"][:, half:], lp["wo"][half:, :])
+    np.testing.assert_allclose(p0 + p1, full, rtol=1e-4, atol=1e-4)
+
+
+def test_tp_ffn_shard_sum_equals_full(params, tokens):
+    h = jnp.tanh(M.forward_seq(CFG, params, tokens)[:, : CFG.d_model])
+    lp = params["layers"][1]
+    full = M.ffn_delta(CFG, h, lp["ln2"], lp["wg"], lp["wu"], lp["wd"])
+    fh = CFG.d_ff // 2
+    shard = M.make_shard_ffn(CFG, impl="jnp")
+    p0, = shard(h, lp["ln2"], lp["wg"][:, :fh], lp["wu"][:, :fh], lp["wd"][:fh, :])
+    p1, = shard(h, lp["ln2"], lp["wg"][:, fh:], lp["wu"][:, fh:], lp["wd"][fh:, :])
+    np.testing.assert_allclose(p0 + p1, full, rtol=1e-4, atol=1e-4)
+
+
+def test_lp_fused_equals_sum_of_attn_deltas(params, tokens):
+    """abl2 identity: the fused dual-layer kernel == A_a(x) + A_b(x)."""
+    h = jnp.tanh(M.forward_seq(CFG, params, tokens)[:, : CFG.d_model])
+    t = h.shape[0]
+    # pad h to T=128 bucket shape used by the fused artifact? fused fn is
+    # shape-generic; call directly at T=32.
+    la, lb = params["layers"][0], params["layers"][1]
+    da = M.attn_delta(CFG, h, la["ln1"], la["wq"], la["wk"], la["wv"], la["wo"])
+    db = M.attn_delta(CFG, h, lb["ln1"], lb["wq"], lb["wk"], lb["wv"], lb["wo"])
+    wqkv2 = jnp.concatenate([la["wq"], la["wk"], la["wv"],
+                             lb["wq"], lb["wk"], lb["wv"]], axis=1)
+    wo2 = jnp.concatenate([la["wo"], lb["wo"]], axis=0)
+    fused_fn = M.make_lp_fused_attn(CFG, impl="jnp")
+    fused, = fused_fn(h, la["ln1"], lb["ln1"], wqkv2, wo2)
+    np.testing.assert_allclose(fused, da + db, rtol=1e-4, atol=1e-4)
+
+
+def test_prefill_decode_consistency(params):
+    """Incremental decode through the shard executables must reproduce the
+    sequential forward: prefill T0 tokens, then decode one more token; the
+    logits must match forward_seq on T0+1 tokens."""
+    rng = np.random.default_rng(3)
+    toks = jnp.asarray(rng.integers(0, 255, size=9).astype(np.int32))
+    t0 = 8
+    # reference: full forward on all 9 tokens
+    ref_logits = M.forward_seq(CFG, params, toks)
+
+    d, c, s = CFG.d_model, CFG.ctx, CFG.slots
+    prefill_attn = M.make_shard_attn_prefill(CFG, impl="jnp")
+    decode_attn = M.make_shard_attn_decode(CFG, impl="jnp")
+    decode_ffn = M.make_shard_ffn_decode(CFG, impl="jnp")
+
+    # ---- prefill first t0 tokens through full-width (LP-style) shards
+    h = params["emb"][toks[:t0]]
+    caches = []
+    for lp in params["layers"]:
+        part, k, v = prefill_attn(h, lp["ln1"], lp["wq"], lp["wk"], lp["wv"],
+                                  lp["wo"])
+        h = h + part
+        h = h + M.ffn_delta(CFG, h, lp["ln2"], lp["wg"], lp["wu"], lp["wd"])
+        kc = jnp.zeros((s, c, d)).at[0, :t0].set(k)
+        vc = jnp.zeros((s, c, d)).at[0, :t0].set(v)
+        caches.append((kc, vc))
+
+    # ---- decode token at position t0 in slot 0
+    x = params["emb"][toks[t0]][None, :].repeat(s, axis=0)
+    pos = jnp.asarray([t0] * s, jnp.int32)
+    for i, lp in enumerate(params["layers"]):
+        kc, vc = caches[i]
+        part, kc2, vc2 = decode_attn(x, lp["ln1"], lp["wq"], lp["wk"],
+                                     lp["wv"], lp["wo"], kc, vc, pos)
+        x = x + part
+        fpart, = decode_ffn(x, lp["ln2"], lp["wg"], lp["wu"], lp["wd"])
+        x = x + fpart
+        caches[i] = (kc2, vc2)
+    from compile.kernels import ref as R
+    logits_dec = R.rmsnorm(x, params["lnf"]) @ params["wout"]
+    np.testing.assert_allclose(logits_dec[0], ref_logits[t0], rtol=2e-3,
+                               atol=2e-3)
+
+
+def test_loss_decreases_on_tiny_overfit(params):
+    """Three AdamW steps on one batch must reduce the loss (training loop
+    sanity, keeps train.py honest)."""
+    import sys
+    from pathlib import Path
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+    from train import adamw_init, adamw_update
+
+    rng = np.random.default_rng(0)
+    batch = jnp.asarray(rng.integers(0, 255, size=(2, 17)).astype(np.int32))
+
+    def loss(p):
+        return M.loss_fn(CFG, p, batch)
+
+    p = params
+    opt = adamw_init(p)
+    l0, g = jax.value_and_grad(loss)(p)
+    for _ in range(3):
+        p, opt = adamw_update(p, g, opt, 1e-3)
+        l1, g = jax.value_and_grad(loss)(p)
+    assert float(l1) < float(l0)

@@ -1,0 +1,50 @@
+"""Weight-store (.tdw) round-trip + checkpoint layout."""
+
+import numpy as np
+import jax
+
+from compile import params as P
+from compile import model as M
+from compile import tok
+from compile.modelcfg import ModelConfig
+
+CFG = ModelConfig(name="t", vocab=tok.VOCAB_SIZE, d_model=32, n_layers=2,
+                  n_heads=2, head_dim=16, d_ff=64, ctx=32, slots=2)
+
+
+def test_tdw_roundtrip(tmp_path):
+    rng = np.random.default_rng(0)
+    tensors = {
+        "a": rng.normal(size=(3, 4)).astype(np.float32),
+        "b.c": rng.integers(0, 100, size=(7,)).astype(np.int32),
+        "scalarish": rng.normal(size=(1,)).astype(np.float32),
+    }
+    p = tmp_path / "w.tdw"
+    P.save_tdw(p, tensors)
+    back = P.load_tdw(p)
+    assert set(back) == set(tensors)
+    for k in tensors:
+        np.testing.assert_array_equal(back[k], tensors[k])
+        assert back[k].dtype == tensors[k].dtype
+
+
+def test_flatten_unflatten_inverse():
+    params = M.init_params(jax.random.PRNGKey(0), CFG)
+    flat = P.flatten_params(params)
+    assert "layers.0.wq" in flat and "emb" in flat
+    back = P.unflatten_params(flat, CFG.n_layers)
+    for i in range(CFG.n_layers):
+        for k in params["layers"][i]:
+            np.testing.assert_array_equal(np.asarray(params["layers"][i][k]),
+                                          back["layers"][i][k])
+    np.testing.assert_array_equal(np.asarray(params["wout"]), back["wout"])
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    params = M.init_params(jax.random.PRNGKey(1), CFG)
+    P.save_checkpoint(tmp_path / "ck", CFG, params, meta={"note": "test"})
+    assert (tmp_path / "ck" / "weights.tdw").exists()
+    assert (tmp_path / "ck" / "config.json").exists()
+    back = P.load_checkpoint(tmp_path / "ck", CFG)
+    np.testing.assert_allclose(np.asarray(params["layers"][1]["wd"]),
+                               back["layers"][1]["wd"])

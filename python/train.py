@@ -1,0 +1,193 @@
+"""Build-time training / fine-tuning for the td-* models.
+
+Pre-training (stands in for the paper's pre-trained Llama/Qwen checkpoints):
+
+    python train.py --model td-small --steps 3000 --out ../checkpoints/td-small
+
+Table-2 fine-tuning — restore accuracy of an LP-transformed model by tuning
+ONLY the layers inside the LP window, against the *deployed* LP-TP graph:
+
+    python train.py --model td-small --finetune ../checkpoints/td-small \
+        --lp-start 2 --lp-end 10 --steps 1024 --out ../checkpoints/td-small-lp-ft1024
+
+Training uses the pure-jnp path (fast + differentiable); kernel equivalence
+with the Pallas path is asserted by the pytest suite, and inference always
+runs through the Pallas-lowered artifacts.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import data as D
+from compile import model as M
+from compile import params as P
+from compile import tok
+from compile.modelcfg import CONFIGS
+
+DATA_SEED = 20260711
+
+
+# --------------------------------------------------------------------------
+# Data pipeline: pack documents into fixed-length next-token windows
+# --------------------------------------------------------------------------
+
+class Packer:
+    """Concatenate BOS-separated documents into [seqlen+1] training windows."""
+
+    def __init__(self, seed: int, seqlen: int, start_doc: int = 0,
+                 eval_split: bool = False):
+        self.seed = seed
+        self.seqlen = seqlen
+        self.doc_idx = start_doc
+        self.eval_split = eval_split
+        self.buf: list[int] = []
+
+    def _next_doc(self) -> list[int]:
+        i = self.doc_idx
+        self.doc_idx += 1
+        text = (D.eval_doc(self.seed, i) if self.eval_split
+                else D.gen_corpus_doc(self.seed, i))
+        return tok.encode(text, bos=True)
+
+    def next_window(self) -> np.ndarray:
+        need = self.seqlen + 1
+        while len(self.buf) < need:
+            self.buf.extend(self._next_doc())
+        w = np.asarray(self.buf[:need], dtype=np.int32)
+        self.buf = self.buf[need:]
+        return w
+
+    def batch(self, b: int) -> np.ndarray:
+        return np.stack([self.next_window() for _ in range(b)])
+
+
+# --------------------------------------------------------------------------
+# AdamW (hand-rolled; no optax in this environment)
+# --------------------------------------------------------------------------
+
+def adamw_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(params, grads, state, lr, b1=0.9, b2=0.95, eps=1e-8,
+                 wd=0.01):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g,
+                               state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g,
+                               state["v"], grads)
+    bc1 = 1 - b1 ** t.astype(jnp.float32)
+    bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+    def upd(p, m_, v_):
+        return p - lr * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps) - lr * wd * p
+
+    new_params = jax.tree_util.tree_map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def grad_mask_for_window(params, lo: int, hi: int):
+    """1.0 for params of layers in [lo, hi), plus nothing else — the Table-2
+    protocol fine-tunes only the LP-transformed layers."""
+    mask = jax.tree_util.tree_map(lambda _: 0.0, params)
+    for i in range(lo, hi):
+        mask["layers"][i] = jax.tree_util.tree_map(lambda _: 1.0,
+                                                   params["layers"][i])
+    return mask
+
+
+# --------------------------------------------------------------------------
+# Train loop
+# --------------------------------------------------------------------------
+
+def run(args) -> None:
+    cfg = CONFIGS[args.model]
+    out = Path(args.out)
+
+    if args.finetune:
+        params = P.load_checkpoint(args.finetune, cfg)
+        params = jax.tree_util.tree_map(jnp.asarray, params)
+        pairs = tuple(M.lp_pairs_for_window(cfg.n_layers, args.lp_start,
+                                            args.lp_end))
+        forward = functools.partial(M.forward_lp, pairs=pairs)
+        gmask = grad_mask_for_window(params, args.lp_start, args.lp_end)
+        mode = f"finetune lp[{args.lp_start},{args.lp_end}) pairs={pairs}"
+    else:
+        params = M.init_params(jax.random.PRNGKey(args.seed), cfg)
+        forward = M.forward_seq
+        gmask = None
+        mode = "pretrain"
+
+    def loss(p, batch):
+        return M.loss_fn(cfg, p, batch, forward=forward, impl="jnp")
+
+    @jax.jit
+    def step(p, opt, batch, lr):
+        l, g = jax.value_and_grad(loss)(p, batch)
+        if gmask is not None:
+            g = jax.tree_util.tree_map(lambda gi, mi: gi * mi, g, gmask)
+        p2, opt2 = adamw_update(p, g, opt, lr)
+        return p2, opt2, l
+
+    opt = adamw_init(params)
+    packer = Packer(DATA_SEED, args.seqlen, start_doc=args.start_doc)
+    log = []
+    t0 = time.time()
+    for it in range(1, args.steps + 1):
+        batch = jnp.asarray(packer.batch(args.batch))
+        # linear warmup + cosine decay
+        warm = min(1.0, it / max(1, args.warmup))
+        prog = it / args.steps
+        lr = args.lr * warm * (0.5 * (1 + np.cos(np.pi * min(1.0, prog))))
+        params, opt, l = step(params, opt, batch, lr)
+        if it % args.log_every == 0 or it == 1:
+            l = float(l)
+            dt = time.time() - t0
+            log.append({"step": it, "loss": l, "lr": float(lr),
+                        "elapsed_s": round(dt, 1)})
+            print(f"step {it:5d}  loss {l:.4f}  ppl {np.exp(l):8.2f}  "
+                  f"lr {lr:.2e}  {it / dt:.1f} it/s", flush=True)
+
+    meta = {"mode": mode, "steps": args.steps, "batch": args.batch,
+            "seqlen": args.seqlen, "lr": args.lr, "seed": args.seed,
+            "data_seed": DATA_SEED, "final_loss": log[-1]["loss"] if log else None}
+    P.save_checkpoint(out, cfg, params, meta)
+    (out / "train_log.json").write_text(json.dumps(log, indent=1))
+    print(f"saved checkpoint -> {out} ({mode})")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--model", default="td-small", choices=list(CONFIGS))
+    ap.add_argument("--steps", type=int, default=3000)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seqlen", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--warmup", type=int, default=100)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--start-doc", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=50)
+    ap.add_argument("--out", required=True)
+    ap.add_argument("--finetune", default=None,
+                    help="checkpoint dir to fine-tune (Table-2 protocol)")
+    ap.add_argument("--lp-start", type=int, default=None)
+    ap.add_argument("--lp-end", type=int, default=None)
+    args = ap.parse_args()
+    if args.finetune and (args.lp_start is None or args.lp_end is None):
+        ap.error("--finetune requires --lp-start/--lp-end")
+    run(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+//! All-reduce micro-benchmark: host-sum cost plus the α–β interconnect
+//! model across payload sizes and network regimes. This is the knob behind
+//! the paper's whole speedup — the per-sync overhead that LP halves.
+
+use truedepth::bench::Bench;
+use truedepth::config::InterconnectConfig;
+use truedepth::parallel::{Mesh, SimNet};
+use truedepth::runtime::pjrt::HostValue;
+
+fn payload(n: usize) -> (HostValue, HostValue) {
+    let a: Vec<f32> = (0..n).map(|i| i as f32).collect();
+    (HostValue::f32(vec![n], a.clone()), HostValue::f32(vec![n], a))
+}
+
+fn main() {
+    let mut b = Bench::new("bench_allreduce");
+
+    // pure data-plane (no cost model): 4 KiB, 128 KiB, 1 MiB payloads
+    let mesh = Mesh::new(1, InterconnectConfig { enabled: false, ..Default::default() });
+    for n in [1024usize, 32 * 1024, 256 * 1024] {
+        let (pa, pb) = payload(n);
+        b.bench(&format!("host_sum_{}kB", n * 4 / 1024), || {
+            let _ = mesh.all_reduce(vec![pa.clone(), pb.clone()]).unwrap();
+        });
+    }
+
+    // cost-model regimes over the decode payload [4, 256] = 4 KiB
+    for (name, alpha_us, beta_gbs) in
+        [("nvlink_like", 10.0, 300.0), ("default", 30.0, 25.0), ("pcie_like", 50.0, 12.0)]
+    {
+        let mesh = Mesh::new(
+            1,
+            InterconnectConfig {
+                alpha_s: alpha_us * 1e-6,
+                beta_bytes_per_s: beta_gbs * 1e9,
+                enabled: true,
+            },
+        );
+        let (pa, pb) = payload(1024);
+        b.bench_timed(&format!("allreduce_4kB_{name}"), 15, || {
+            let t = std::time::Instant::now();
+            let _ = mesh.all_reduce(vec![pa.clone(), pb.clone()]).unwrap();
+            t.elapsed()
+        });
+    }
+
+    // the cost model itself (pure function)
+    let net = SimNet::new(InterconnectConfig::default());
+    b.bench("cost_model_eval", || {
+        let _ = net.all_reduce_cost(128 * 256 * 4, 2);
+    });
+
+    b.finish();
+}

@@ -1,0 +1,54 @@
+//! Coordinator data-structure benchmarks: batcher submit/drain throughput
+//! and slot-manager churn — L3 bookkeeping must be negligible next to a
+//! decode step (~ms), i.e. well under a microsecond per op.
+
+use std::time::Instant;
+
+use truedepth::bench::Bench;
+use truedepth::coordinator::batcher::Batcher;
+use truedepth::coordinator::request::{Job, Request, RequestOptions};
+use truedepth::model::kvcache::SlotManager;
+
+fn job(id: u64) -> Job {
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::mem::forget(rx); // keep the channel alive without a receiver loop
+    Job {
+        request: Request {
+            id,
+            prompt: "bench prompt".into(),
+            opts: RequestOptions::default(),
+            submitted_at: Instant::now(),
+        },
+        reply: tx,
+    }
+}
+
+fn main() {
+    let mut b = Bench::new("bench_coordinator");
+
+    let batcher = Batcher::new(1 << 14);
+    let mut id = 0u64;
+    b.bench("batcher_submit_drain_pair", || {
+        id += 1;
+        batcher.submit(job(id)).ok().unwrap();
+        let got = batcher.drain(1, std::time::Duration::from_millis(1));
+        assert_eq!(got.len(), 1);
+    });
+
+    let mut slots = SlotManager::new(4, 256);
+    b.bench("slotmgr_alloc_advance_free", || {
+        let s = slots.alloc(1, 16, 4, 10).unwrap();
+        slots.advance(s, 11, 999);
+        slots.free(s);
+    });
+
+    let mut slots4 = SlotManager::new(4, 256);
+    for i in 0..4 {
+        slots4.alloc(i, 8, 100, 42).unwrap();
+    }
+    b.bench("slotmgr_step_inputs_full", || {
+        let _ = slots4.step_inputs();
+    });
+
+    b.finish();
+}

@@ -1,0 +1,48 @@
+//! Decode-step latency: vanilla TP vs Layer Parallelism, with and without
+//! the interconnect cost model — the per-token numbers behind Fig. 7's
+//! 1-token task and Table 3.
+
+use truedepth::bench::Bench;
+use truedepth::harness::{default_net, no_net};
+use truedepth::model::{transform, ServingModel, Weights};
+use truedepth::runtime::Manifest;
+
+fn main() {
+    let Ok(manifest) = Manifest::load_default() else {
+        eprintln!("bench_decode: artifacts missing (run `make artifacts`) — skipping");
+        return;
+    };
+    let entry = manifest.model("td-small").expect("td-small");
+    let cfg = entry.config.clone();
+    let weights = Weights::random(&cfg, 13);
+    let n = cfg.n_layers;
+
+    let mut b = Bench::new("bench_decode");
+    for (net_name, net) in [("simnet", default_net()), ("nonet", no_net())] {
+        for (plan_name, plan) in [
+            ("tp_seq", transform::sequential(n)),
+            ("lp_d8", transform::pair_parallel(n, 2, 10, true)),
+            ("lp_full", transform::pair_parallel(n, 0, n, true)),
+        ] {
+            let serving =
+                ServingModel::new(&manifest, "td-small", &weights, &plan, net.clone()).unwrap();
+            let prompt: Vec<i32> = (0..64).map(|i| 97 + (i % 26)).collect();
+            serving.prefill(0, &prompt).unwrap();
+            let tok = vec![65i32; cfg.slots];
+            let pos = vec![64i32; cfg.slots];
+            for _ in 0..3 {
+                serving.decode_step(&tok, &pos).unwrap();
+            }
+            b.bench_timed(
+                &format!("decode_{plan_name}_{net_name} (depth {})", plan.effective_depth()),
+                12,
+                || {
+                    let t = std::time::Instant::now();
+                    serving.decode_step(&tok, &pos).unwrap();
+                    t.elapsed()
+                },
+            );
+        }
+    }
+    b.finish();
+}

@@ -1,0 +1,41 @@
+//! Host-tensor hot-path micro-benchmarks: the residual add / all-reduce sum
+//! loops must sit at memory-bandwidth roofline (they are on the per-token
+//! critical path between executable calls).
+
+use truedepth::bench::Bench;
+use truedepth::tensor::{add_slices, argmax, log_softmax_at, sum_slices};
+
+fn main() {
+    let mut b = Bench::new("bench_hostops");
+
+    // [T=128, D=256] activation — the largest per-stage reduce payload.
+    let src: Vec<f32> = (0..128 * 256).map(|i| i as f32 * 0.001).collect();
+    let mut dst = src.clone();
+    b.bench("add_slices_128x256", || {
+        add_slices(&mut dst, &src);
+    });
+
+    // decode-sized payload [S=4, D=256]
+    let s2: Vec<f32> = (0..4 * 256).map(|i| i as f32).collect();
+    let mut d2 = s2.clone();
+    b.bench("add_slices_4x256", || {
+        add_slices(&mut d2, &s2);
+    });
+
+    let p0 = src.clone();
+    let p1 = src.clone();
+    b.bench("allreduce_sum_2rank_128x256", || {
+        let _ = sum_slices(&[&p0, &p1]);
+    });
+
+    // logits row of V=260
+    let logits: Vec<f32> = (0..260).map(|i| ((i * 37) % 100) as f32 * 0.1).collect();
+    b.bench("argmax_v260", || {
+        let _ = argmax(&logits);
+    });
+    b.bench("log_softmax_at_v260", || {
+        let _ = log_softmax_at(&logits, 42);
+    });
+
+    b.finish();
+}

@@ -1,0 +1,64 @@
+//! Prefill latency across sequence buckets, TP vs LP (Fig. 7 prefill task),
+//! plus the abl2 single-device fused-pair kernel ablation (paper §4: naive
+//! fusion on one device yields no meaningful gain — the win is in the sync
+//! count, not the kernel).
+
+use truedepth::bench::Bench;
+use truedepth::harness::no_net;
+use truedepth::model::{transform, ServingModel, Weights};
+use truedepth::runtime::pjrt::HostValue;
+use truedepth::runtime::{Engine, Manifest};
+
+fn main() {
+    let Ok(manifest) = Manifest::load_default() else {
+        eprintln!("bench_prefill: artifacts missing (run `make artifacts`) — skipping");
+        return;
+    };
+    let entry = manifest.model("td-small").expect("td-small");
+    let cfg = entry.config.clone();
+    let weights = Weights::random(&cfg, 17);
+    let n = cfg.n_layers;
+
+    let mut b = Bench::new("bench_prefill");
+    for (plan_name, plan) in [
+        ("tp_seq", transform::sequential(n)),
+        ("lp_d8", transform::pair_parallel(n, 2, 10, true)),
+    ] {
+        let serving =
+            ServingModel::new(&manifest, "td-small", &weights, &plan, no_net()).unwrap();
+        for t in [32usize, 128, 224] {
+            let prompt: Vec<i32> = (0..t as i32).map(|i| 97 + (i % 26)).collect();
+            serving.prefill(0, &prompt).unwrap(); // warm
+            b.bench_timed(&format!("prefill_{plan_name}_T{t}"), 8, || {
+                let t0 = std::time::Instant::now();
+                serving.prefill(0, &prompt).unwrap();
+                t0.elapsed()
+            });
+        }
+    }
+
+    // abl2: fused dual-layer attention kernel vs two separate attn calls on
+    // ONE device (no mesh, no all-reduce): expect ≈ no speedup.
+    let engine = Engine::cpu().unwrap();
+    let d = cfg.d_model;
+    let attn = engine.load(&entry.artifact("attn_t128").unwrap().file).unwrap();
+    let fused = engine.load(&entry.artifact("lpfused_attn_t128").unwrap().file).unwrap();
+    let h = HostValue::f32(vec![128, d], vec![0.01; 128 * d]);
+    let w = |r: usize, c: usize| HostValue::f32(vec![r, c], vec![0.02; r * c]);
+    let ln = HostValue::f32(vec![d], vec![1.0; d]);
+    let attn_args = [h.clone(), ln.clone(), w(d, d), w(d, d), w(d, d), w(d, d)];
+    b.bench_timed("abl2_two_attn_calls_1dev", 8, || {
+        let t0 = std::time::Instant::now();
+        engine.call(&attn, &attn_args).unwrap();
+        engine.call(&attn, &attn_args).unwrap();
+        t0.elapsed()
+    });
+    let fused_args = [h, ln.clone(), ln, w(d, 6 * d), w(2 * d, d)];
+    b.bench_timed("abl2_fused_dual_attn_1dev", 8, || {
+        let t0 = std::time::Instant::now();
+        engine.call(&fused, &fused_args).unwrap();
+        t0.elapsed()
+    });
+
+    b.finish();
+}

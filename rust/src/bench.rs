@@ -1,0 +1,141 @@
+//! Micro-bench harness (substrate: no criterion in the offline vendor set).
+//!
+//! Usage inside a `harness = false` bench target:
+//! ```no_run
+//! let mut b = truedepth::bench::Bench::new("bench_hostops");
+//! b.bench("add_64k", || { /* work */ });
+//! b.finish();
+//! ```
+//! Prints criterion-style `name  time/iter ± σ  (n iters)` lines and writes
+//! a machine-readable JSON report next to the target dir.
+
+use std::time::{Duration, Instant};
+
+use crate::util::json::{arr, num, obj, s, Value};
+use crate::util::stats::{fmt_duration, Summary};
+
+pub struct Bench {
+    group: String,
+    results: Vec<(String, Summary)>,
+    /// Minimum measurement time per benchmark.
+    pub measure_time: Duration,
+    /// Warmup time before measuring.
+    pub warmup_time: Duration,
+    /// Max iterations (cap for very slow benchmarks).
+    pub max_iters: u64,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Bench {
+        println!("== {group} ==");
+        Bench {
+            group: group.to_string(),
+            results: vec![],
+            measure_time: Duration::from_millis(800),
+            warmup_time: Duration::from_millis(150),
+            max_iters: 1_000_000,
+        }
+    }
+
+    /// Benchmark `f`, auto-picking the iteration count.
+    pub fn bench(&mut self, name: &str, mut f: impl FnMut()) {
+        // warmup + calibration
+        let t0 = Instant::now();
+        let mut calib_iters = 0u64;
+        while t0.elapsed() < self.warmup_time || calib_iters == 0 {
+            f();
+            calib_iters += 1;
+            if calib_iters >= self.max_iters {
+                break;
+            }
+        }
+        let per_iter = t0.elapsed().as_secs_f64() / calib_iters as f64;
+        // choose sample layout: ~20 samples over measure_time
+        let samples = 20usize;
+        let iters_per_sample =
+            ((self.measure_time.as_secs_f64() / samples as f64 / per_iter).ceil() as u64)
+                .clamp(1, self.max_iters);
+        let mut times = Vec::with_capacity(samples);
+        for _ in 0..samples {
+            let t = Instant::now();
+            for _ in 0..iters_per_sample {
+                f();
+            }
+            times.push(t.elapsed().as_nanos() as f64 / iters_per_sample as f64);
+        }
+        let summary = Summary::from(&times);
+        println!(
+            "{name:<40} {:>12}/iter ± {:<10} ({} × {} iters)",
+            fmt_duration(summary.mean),
+            fmt_duration(summary.std),
+            samples,
+            iters_per_sample
+        );
+        self.results.push((name.to_string(), summary));
+    }
+
+    /// Benchmark with a measured-section closure returning its own duration
+    /// (for workloads needing per-iter setup that must not be timed).
+    pub fn bench_timed(&mut self, name: &str, samples: usize, mut f: impl FnMut() -> Duration) {
+        let mut times = Vec::with_capacity(samples);
+        for _ in 0..samples {
+            times.push(f().as_nanos() as f64);
+        }
+        let summary = Summary::from(&times);
+        println!(
+            "{name:<40} {:>12}/iter ± {:<10} ({samples} samples)",
+            fmt_duration(summary.mean),
+            fmt_duration(summary.std),
+        );
+        self.results.push((name.to_string(), summary));
+    }
+
+    /// Write the JSON report and return the result count.
+    pub fn finish(self) -> usize {
+        let entries: Vec<Value> = self
+            .results
+            .iter()
+            .map(|(name, sm)| {
+                obj(vec![
+                    ("name", s(name.clone())),
+                    ("mean_ns", num(sm.mean)),
+                    ("std_ns", num(sm.std)),
+                    ("p50_ns", num(sm.p50)),
+                    ("p99_ns", num(sm.p99)),
+                ])
+            })
+            .collect();
+        let report = obj(vec![("group", s(self.group.clone())), ("results", arr(entries))]);
+        let dir = crate::repo_root().join("target/bench-reports");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join(format!("{}.json", self.group));
+        let _ = std::fs::write(&path, report.to_string_pretty());
+        println!("(report: {})", path.display());
+        self.results.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut b = Bench::new("selftest");
+        b.measure_time = Duration::from_millis(20);
+        b.warmup_time = Duration::from_millis(5);
+        let mut x = 0u64;
+        b.bench("noop", || {
+            x = x.wrapping_add(1);
+        });
+        assert_eq!(b.finish(), 1);
+        assert!(x > 0);
+    }
+
+    #[test]
+    fn bench_timed_uses_given_durations() {
+        let mut b = Bench::new("selftest2");
+        b.bench_timed("fixed", 5, || Duration::from_micros(100));
+        assert_eq!(b.finish(), 1);
+    }
+}

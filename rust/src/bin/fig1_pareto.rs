@@ -1,0 +1,64 @@
+//! Fig. 1 regenerator: the time-vs-perplexity Pareto view. For both models
+//! and a sweep of LP depths, measures (a) wall-clock to generate a fixed
+//! token budget through the tensor-parallel serving path (calibrated α–β
+//! interconnect) and (b) held-out perplexity of the same plan.
+//!
+//! The paper's headline: the bigger model WITH LP beats the smaller model
+//! without it on both axes simultaneously.
+//!
+//!     cargo run --release --bin fig1_pareto [-- --gen-tokens 48 --windows 2]
+//!
+//! Output: results/fig1.csv (model, eff_depth, delta, gen_ms, ppl).
+
+use truedepth::cli::Args;
+use truedepth::eval::ppl::{eval_windows, perplexity};
+use truedepth::gen::{generate, Sampler};
+use truedepth::harness::{default_net, write_csv, ScoringCtx};
+use truedepth::model::{transform, Scorer, ServingModel};
+use truedepth::text::corpus::DATA_SEED;
+
+fn main() -> truedepth::Result<()> {
+    let args = Args::from_env(&[]);
+    let gen_tokens = args.get_usize("gen-tokens", 48);
+    let n_windows = args.get_usize("windows", 2);
+    let bucket = 128;
+
+    let mut rows = Vec::new();
+    for model in ["td-small", "td-base"] {
+        let ctx = ScoringCtx::load(model)?;
+        let Ok(weights) = ctx.weights() else {
+            println!("({model}: no checkpoint, skipping)");
+            continue;
+        };
+        let entry = ctx.entry();
+        let n = entry.config.n_layers;
+        let scorer = Scorer::new(&ctx.engine, entry, &weights, bucket)?;
+        let windows = eval_windows(bucket, n_windows, DATA_SEED);
+        let end = n - 2;
+
+        for depth in (n / 2 + 2..=n).rev() {
+            let plan = if depth == n {
+                transform::sequential(n)
+            } else {
+                match transform::lp_for_depth(n, depth, end) {
+                    Some(p) => p,
+                    None => continue,
+                }
+            };
+            let ppl = perplexity(&scorer, &plan, &windows)?;
+            let serving =
+                ServingModel::new(&ctx.manifest, model, &weights, &plan, default_net())?;
+            // warm-up + measured generation
+            let _ = generate(&serving, "the red fox", 4, &Sampler::Greedy)?;
+            let g = generate(&serving, "the capital of avaria is", gen_tokens, &Sampler::Greedy)?;
+            let total_ms = g.prefill_ms + g.decode_ms;
+            println!(
+                "{model:<9} depth {depth:>2} Δ{:<2}  gen {gen_tokens} tok: {total_ms:>8.1} ms   ppl {ppl:.3}",
+                plan.delta()
+            );
+            rows.push(format!("{model},{depth},{},{total_ms:.2},{ppl:.4}", plan.delta()));
+        }
+    }
+    write_csv("fig1.csv", "model,eff_depth,delta,gen_ms,ppl", &rows);
+    Ok(())
+}

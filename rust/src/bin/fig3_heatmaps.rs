@@ -1,0 +1,97 @@
+//! Fig. 3 regenerator: perplexity heatmaps for every contiguous-window
+//! transformation — (a) shuffle, (b) prune, (c) merge, (d) parallel,
+//! (e) contiguous 2-parallel. `--triplet` adds the §3 triplet ablation.
+//!
+//!     cargo run --release --bin fig3_heatmaps [-- --model td-small \
+//!         --windows 2 --bucket 128 --triplet --fast]
+//!
+//! Output: results/fig3_<transform>_<model>.csv matrices (rows s, cols e;
+//! empty cells for e <= s+1) plus a console summary of the paper's headline
+//! observations (middle-window tolerance, prune≈merge, 2-parallel widest).
+
+use truedepth::cli::Args;
+use truedepth::eval::ppl::{eval_windows, perplexity};
+use truedepth::harness::{write_csv, ScoringCtx};
+use truedepth::model::{transform, Scorer};
+use truedepth::text::corpus::DATA_SEED;
+use truedepth::util::rng::SplitMix64;
+
+fn main() -> truedepth::Result<()> {
+    let args = Args::from_env(&["triplet", "fast"]);
+    let model = args.get_or("model", "td-small");
+    let bucket = args.get_usize("bucket", 128);
+    let n_windows = args.get_usize("windows", 2);
+
+    let ctx = ScoringCtx::load(model)?;
+    let weights = ctx.weights()?;
+    let entry = ctx.entry();
+    let n = entry.config.n_layers;
+    let scorer = Scorer::new(&ctx.engine, entry, &weights, bucket)?;
+    let windows = eval_windows(bucket, n_windows, DATA_SEED);
+
+    let base = perplexity(&scorer, &transform::sequential(n), &windows)?;
+    println!("model {model}: base ppl {base:.3} over {n_windows}×{bucket} tokens");
+
+    type Builder = Box<dyn Fn(usize, usize) -> truedepth::model::GraphPlan>;
+    let mut transforms: Vec<(&str, Builder)> = vec![
+        (
+            "shuffle",
+            Box::new(move |s, e| {
+                let mut rng = SplitMix64::new(DATA_SEED ^ (s * 64 + e) as u64);
+                transform::shuffle(n, s, e, &mut rng)
+            }),
+        ),
+        ("prune", Box::new(move |s, e| transform::prune(n, s, e))),
+        ("merge", Box::new(move |s, e| transform::merge(n, s, e))),
+        ("parallel", Box::new(move |s, e| transform::parallel(n, s, e))),
+        ("pair2", Box::new(move |s, e| transform::pair_parallel(n, s, e, true))),
+    ];
+    if args.flag("triplet") {
+        transforms.push(("triplet", Box::new(move |s, e| transform::triplet_parallel(n, s, e))));
+    }
+
+    let stride = if args.flag("fast") { 2 } else { 1 };
+    let mut summary: Vec<(String, usize)> = Vec::new();
+    for (name, build) in &transforms {
+        let mut rows = Vec::new();
+        let mut widest = 0usize;
+        let mut widest_span = (0, 0);
+        for s in (0..n).step_by(stride) {
+            let mut cells = vec![format!("{s}")];
+            for e in 1..=n {
+                if e <= s + 1 || (e - s) % stride != 0 {
+                    cells.push(String::new());
+                    continue;
+                }
+                let plan = build(s, e);
+                let ppl = perplexity(&scorer, &plan, &windows)?;
+                cells.push(format!("{ppl:.3}"));
+                let width = e - s;
+                if ppl < 2.0 * base && width > widest {
+                    widest = width;
+                    widest_span = (s, e);
+                }
+            }
+            rows.push(cells.join(","));
+        }
+        let header: Vec<String> =
+            std::iter::once("s\\e".to_string()).chain((1..=n).map(|e| e.to_string())).collect();
+        write_csv(&format!("fig3_{name}_{model}.csv"), &header.join(","), &rows);
+        println!("{name:>9}: widest window with ppl < 2×base = {widest} layers {widest_span:?}");
+        summary.push((name.to_string(), widest));
+    }
+
+    // paper-shape checks (console, non-fatal): 2-parallel tolerates the
+    // widest windows; prune/merge are the most damaging.
+    let get = |k: &str| summary.iter().find(|(n, _)| n == k).map(|(_, w)| *w).unwrap_or(0);
+    println!("\nshape check:");
+    println!(
+        "  pair2 ({}) >= parallel ({}) >= prune ({}): {}",
+        get("pair2"),
+        get("parallel"),
+        get("prune"),
+        get("pair2") >= get("parallel") && get("parallel") >= get("prune")
+    );
+    println!("  merge ({}) vs prune ({}) (paper: near-identical)", get("merge"), get("prune"));
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! Fig. 6 regenerator: perplexity when running Δ consecutive layers in
+//! 2-parallel, as a function of the window END index — one series per Δ.
+//! Also hosts the abl3 ablation (`--mode both`): deployed LP-TP numerics vs
+//! the paper's PAR approximation (eq. 2).
+//!
+//!     cargo run --release --bin fig6_ppl_sweep [-- --model td-small \
+//!         --windows 2 --bucket 128 --mode lp|par|both]
+//!
+//! Output: results/fig6_<model>[_par].csv with columns end_index, delta, ppl.
+
+use truedepth::cli::Args;
+use truedepth::eval::ppl::{eval_windows, perplexity};
+use truedepth::harness::{write_csv, ScoringCtx};
+use truedepth::model::{transform, Scorer};
+use truedepth::text::corpus::DATA_SEED;
+
+fn main() -> truedepth::Result<()> {
+    let args = Args::from_env(&[]);
+    let model = args.get_or("model", "td-small");
+    let bucket = args.get_usize("bucket", 128);
+    let n_windows = args.get_usize("windows", 2);
+    let mode = args.get_or("mode", "lp");
+
+    let ctx = ScoringCtx::load(model)?;
+    let weights = ctx.weights()?;
+    let entry = ctx.entry();
+    let n = entry.config.n_layers;
+    let scorer = Scorer::new(&ctx.engine, entry, &weights, bucket)?;
+    let windows = eval_windows(bucket, n_windows, DATA_SEED);
+    let base = perplexity(&scorer, &transform::sequential(n), &windows)?;
+    println!("model {model}: base ppl {base:.3}");
+
+    for (suffix, lp_numerics) in match mode {
+        "lp" => vec![("", true)],
+        "par" => vec![("_par", false)],
+        "both" => vec![("", true), ("_par", false)],
+        other => return Err(truedepth::Error::msg(format!("bad --mode {other}"))),
+    } {
+        let mut rows = Vec::new();
+        let mut best: Option<(f64, usize)> = None;
+        println!("\n== {} numerics ==", if lp_numerics { "LP-TP (deployed)" } else { "PAR (eq. 2)" });
+        for delta in (2..n).step_by(2) {
+            for end in delta..=n {
+                let s = end - delta;
+                let plan = transform::pair_parallel(n, s, end, lp_numerics);
+                let ppl = perplexity(&scorer, &plan, &windows)?;
+                rows.push(format!("{end},{delta},{ppl:.4}"));
+                if delta == 6 {
+                    // track the common optimal end index at a fixed Δ
+                    match best {
+                        Some((b, _)) if b <= ppl => {}
+                        _ => best = Some((ppl, end)),
+                    }
+                }
+            }
+        }
+        write_csv(
+            &format!("fig6_{model}{suffix}.csv"),
+            "end_index,delta,ppl",
+            &rows,
+        );
+        if let Some((ppl, end)) = best {
+            println!("Δ=6 optimal end index: {end} (ppl {ppl:.3}) — paper finds a common optimum near n-2");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,140 @@
+//! Fig. 7 + Fig. 8 regenerator: wall-clock (and tokens/sec) for the three
+//! inference tasks — KV-cache prefill, autoregressive generation, and
+//! single-token generation with a prefilled cache — across sequence-length
+//! buckets and LP Δ.
+//!
+//!     cargo run --release --bin fig7_walltime [-- --model td-small \
+//!         --tokens-per-sec --reps 3 --no-simnet]
+//!
+//! Output: results/fig7_<model>.csv
+//!   (task, seqlen, delta, eff_depth, wall_ms, tokens_per_s, speedup_vs_d0)
+
+use std::time::Instant;
+
+use truedepth::cli::Args;
+use truedepth::harness::{default_net, no_net, write_csv, ScoringCtx};
+use truedepth::model::{transform, ServingModel, Weights};
+use truedepth::tensor::argmax;
+
+fn main() -> truedepth::Result<()> {
+    let args = Args::from_env(&["tokens-per-sec", "no-simnet"]);
+    let model = args.get_or("model", "td-small");
+    let reps = args.get_usize("reps", 3);
+    let net = if args.flag("no-simnet") { no_net() } else { default_net() };
+
+    let ctx = ScoringCtx::load(model)?;
+    let entry = ctx.entry();
+    let cfg = entry.config.clone();
+    let n = cfg.n_layers;
+    let weights = ctx.weights().unwrap_or_else(|_| Weights::random(&cfg, 9));
+    let end = n - 2;
+
+    // Δ sweep: 0 (baseline TP) then increasing LP coverage.
+    let mut deltas = vec![0usize];
+    let mut d = 4;
+    while n >= d / 2 + 4 && d <= end {
+        deltas.push(d);
+        d += 4;
+    }
+
+    let seqlens = [32usize, 128, 224];
+    let mut rows = Vec::new();
+    let mut baseline_ms: std::collections::HashMap<(String, usize), f64> =
+        std::collections::HashMap::new();
+
+    for &delta in &deltas {
+        let plan = if delta == 0 {
+            transform::sequential(n)
+        } else {
+            let depth = n - delta / 2;
+            match transform::lp_for_depth(n, depth, end) {
+                Some(p) => p,
+                None => continue,
+            }
+        };
+        let depth = plan.effective_depth();
+        let serving = ServingModel::new(&ctx.manifest, model, &weights, &plan, net.clone())?;
+        let s = cfg.slots;
+        println!("== Δ={delta} (effective depth {depth}) ==");
+
+        for &t in &seqlens {
+            let prompt: Vec<i32> = (0..t as i32).map(|i| 97 + (i % 26)).collect();
+
+            // -- task 1: prefill
+            let mut best = f64::MAX;
+            for _ in 0..reps {
+                let t0 = Instant::now();
+                let _ = serving.prefill(0, &prompt)?;
+                best = best.min(t0.elapsed().as_secs_f64() * 1e3);
+            }
+            push_row(&mut rows, &mut baseline_ms, "prefill", t, delta, depth, best, t as f64);
+
+            // -- task 2: autoregressive generation of t/4 tokens
+            let gen_n = (t / 4).max(8);
+            let mut best = f64::MAX;
+            for _ in 0..reps.min(2) {
+                let logits = serving.prefill(0, &prompt[..8])?;
+                let mut next = argmax(&logits) as i32;
+                let mut pos = 8usize;
+                let t0 = Instant::now();
+                for _ in 0..gen_n {
+                    let mut tok = vec![0i32; s];
+                    let mut ps = vec![0i32; s];
+                    tok[0] = next;
+                    ps[0] = pos as i32;
+                    let out = serving.decode_step(&tok, &ps)?;
+                    next = argmax(&out[..cfg.vocab]) as i32;
+                    pos += 1;
+                }
+                best = best.min(t0.elapsed().as_secs_f64() * 1e3);
+            }
+            push_row(&mut rows, &mut baseline_ms, "autoregen", t, delta, depth, best, gen_n as f64);
+
+            // -- task 3: single-token decode with a prefilled cache of t
+            let _ = serving.prefill(0, &prompt)?;
+            let mut best = f64::MAX;
+            for _ in 0..reps {
+                let mut tok = vec![0i32; s];
+                let mut ps = vec![0i32; s];
+                tok[0] = 65;
+                ps[0] = t as i32;
+                let t0 = Instant::now();
+                let _ = serving.decode_step(&tok, &ps)?;
+                best = best.min(t0.elapsed().as_secs_f64() * 1e3);
+            }
+            push_row(&mut rows, &mut baseline_ms, "one_token", t, delta, depth, best, 1.0);
+        }
+    }
+
+    write_csv(
+        &format!("fig7_{model}.csv"),
+        "task,seqlen,delta,eff_depth,wall_ms,tokens_per_s,speedup_vs_d0",
+        &rows,
+    );
+    Ok(())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn push_row(
+    rows: &mut Vec<String>,
+    baseline: &mut std::collections::HashMap<(String, usize), f64>,
+    task: &str,
+    seqlen: usize,
+    delta: usize,
+    depth: usize,
+    wall_ms: f64,
+    tokens: f64,
+) {
+    let key = (task.to_string(), seqlen);
+    if delta == 0 {
+        baseline.insert(key.clone(), wall_ms);
+    }
+    let speedup = baseline.get(&key).map(|b| b / wall_ms).unwrap_or(1.0);
+    let tps = tokens / (wall_ms / 1e3);
+    println!(
+        "  {task:<10} T={seqlen:<4} {wall_ms:>9.2} ms  {tps:>9.1} tok/s  speedup ×{speedup:.3}"
+    );
+    rows.push(format!(
+        "{task},{seqlen},{delta},{depth},{wall_ms:.3},{tps:.2},{speedup:.4}"
+    ));
+}

@@ -1,0 +1,84 @@
+//! Table 1 regenerator: 5-shot ICL accuracies vs effective depth.
+//!
+//!     cargo run --release --bin table1_icl [-- --model td-small \
+//!         --samples 25 --end <idx> --min-depth <d>]
+//!
+//! For each effective depth (base N down to the deepest LP window that
+//! fits), applies contiguous 2-parallel pairs ending at `--end` (default
+//! n_layers - 2, the Fig.6-style optimum) and evaluates the synthetic ICL
+//! suite. Output: results/table1_<model>.csv + a formatted table matching
+//! the paper's layout (depth × task accuracies + average).
+
+use truedepth::cli::Args;
+use truedepth::eval::icl::{evaluate_suite, ALL_TASKS};
+use truedepth::harness::{write_csv, ScoringCtx};
+use truedepth::model::{transform, Scorer};
+
+fn main() -> truedepth::Result<()> {
+    let args = Args::from_env(&[]);
+    let model = args.get_or("model", "td-small");
+    let samples = args.get_usize("samples", 25);
+    let k = args.get_usize("shots", 5);
+
+    let ctx = ScoringCtx::load(model)?;
+    let weights = ctx.weights()?;
+    let entry = ctx.entry();
+    let n = entry.config.n_layers;
+    let end = args.get_usize("end", n - 2);
+    let min_depth = args.get_usize("min-depth", n - end / 2);
+
+    let s128 = Scorer::new(&ctx.engine, entry, &weights, 128)?;
+    let s256 = Scorer::new(&ctx.engine, entry, &weights, 256)?;
+    let scorers = [&s128, &s256];
+
+    println!("model {model} ({} layers), LP windows ending at {end}", n);
+    let mut header = vec!["eff_depth".to_string(), "delta".to_string()];
+    header.extend(ALL_TASKS.iter().map(|t| t.name().to_string()));
+    header.push("avg".to_string());
+
+    let mut rows = Vec::new();
+    println!(
+        "{:<10} {:<6} {}  avg",
+        "eff.depth",
+        "Δ",
+        ALL_TASKS.map(|t| format!("{:>9}", t.name())).join(" ")
+    );
+    for depth in (min_depth..=n).rev() {
+        let plan = if depth == n {
+            transform::sequential(n)
+        } else {
+            match transform::lp_for_depth(n, depth, end) {
+                Some(p) => p,
+                None => continue,
+            }
+        };
+        let report = evaluate_suite(&scorers, &plan, k, samples, 20260711)?;
+        let accs: Vec<String> =
+            report.per_task.iter().map(|(_, a)| format!("{a:.4}")).collect();
+        let label = if depth == n { format!("{depth} (Base)") } else { format!("{depth} (Ours)") };
+        println!(
+            "{label:<10} {:<6} {}  {:.4}",
+            plan.delta(),
+            report.per_task.iter().map(|(_, a)| format!("{a:>9.4}")).join(" "),
+            report.average()
+        );
+        rows.push(format!(
+            "{depth},{},{},{:.4}",
+            plan.delta(),
+            accs.join(","),
+            report.average()
+        ));
+    }
+    write_csv(&format!("table1_{model}.csv"), &header.join(","), &rows);
+    Ok(())
+}
+
+trait JoinExt {
+    fn join(self, sep: &str) -> String;
+}
+
+impl<I: Iterator<Item = String>> JoinExt for I {
+    fn join(self, sep: &str) -> String {
+        self.collect::<Vec<_>>().join(sep)
+    }
+}

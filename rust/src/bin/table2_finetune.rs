@@ -1,0 +1,66 @@
+//! Table 2 regenerator: benchmark-accuracy restoration through fine-tuning
+//! of the LP window. The checkpoints come from `make finetune` (python,
+//! build-time); this binary evaluates each against the deployed LP plan.
+//!
+//!     make finetune            # trains td-small-lpft{64,256,1024}
+//!     cargo run --release --bin table2_finetune [-- --samples 30]
+//!
+//! Output: results/table2.csv (ft_steps, relation[MMLU-ish], pattern[ArcC-ish],
+//! arith[GSM-8K-ish], avg) — rows: 0 steps (raw LP), each fine-tune budget,
+//! plus the untransformed base model reference.
+
+use truedepth::cli::Args;
+use truedepth::eval::icl::{task_accuracy, IclTask};
+use truedepth::harness::{write_csv, ScoringCtx};
+use truedepth::model::{transform, Scorer};
+
+const LP_START: usize = 2; // must match Makefile's finetune window
+const LP_END: usize = 10;
+
+fn main() -> truedepth::Result<()> {
+    let args = Args::from_env(&[]);
+    let model = args.get_or("model", "td-small");
+    let samples = args.get_usize("samples", 30);
+
+    let ctx = ScoringCtx::load(model)?;
+    let entry = ctx.entry();
+    let n = entry.config.n_layers;
+    let lp_plan = transform::pair_parallel(n, LP_START, LP_END, true);
+    let seq_plan = transform::sequential(n);
+    let tasks = [IclTask::Relation, IclTask::Pattern, IclTask::Arith];
+
+    let mut rows = Vec::new();
+    println!(
+        "{:<18} {:>10} {:>10} {:>10} {:>8}",
+        "checkpoint", "relation", "pattern", "arith", "avg"
+    );
+    let mut eval_one = |label: &str, ckpt: &str, plan: &truedepth::model::GraphPlan| -> truedepth::Result<()> {
+        let Ok(weights) = ctx.weights_from(ckpt) else {
+            println!("{label:<18} (checkpoint missing — run `make finetune`)");
+            return Ok(());
+        };
+        let s128 = Scorer::new(&ctx.engine, entry, &weights, 128)?;
+        let s256 = Scorer::new(&ctx.engine, entry, &weights, 256)?;
+        let scorers = [&s128, &s256];
+        let mut accs = Vec::new();
+        for t in tasks {
+            accs.push(task_accuracy(&scorers, plan, t, 5, samples, 77)?);
+        }
+        let avg = accs.iter().sum::<f64>() / accs.len() as f64;
+        println!(
+            "{label:<18} {:>10.4} {:>10.4} {:>10.4} {avg:>8.4}",
+            accs[0], accs[1], accs[2]
+        );
+        rows.push(format!("{label},{:.4},{:.4},{:.4},{avg:.4}", accs[0], accs[1], accs[2]));
+        Ok(())
+    };
+
+    eval_one("0 (Ours)", model, &lp_plan)?;
+    for steps in [64usize, 256, 1024] {
+        eval_one(&format!("{steps} (Ours)"), &format!("{model}-lpft{steps}"), &lp_plan)?;
+    }
+    eval_one("Base (seq)", model, &seq_plan)?;
+
+    write_csv("table2.csv", "ft_steps,relation,pattern,arith,avg", &rows);
+    Ok(())
+}

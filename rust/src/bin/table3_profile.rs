@@ -1,0 +1,74 @@
+//! Table 3 / Fig. 10 regenerator: sync-vs-compute breakdown of two
+//! consecutive decoder layers under vanilla TP vs Layer Parallelism.
+//!
+//!     cargo run --release --bin table3_profile [-- --model td-small \
+//!         --steps 50 --seqlen 128]
+//!
+//! Runs `--steps` decode iterations over a 2-layer sub-model in each mode
+//! and reports total / sync / compute time plus the ratios the paper
+//! highlights (sync ≈ ×2 reduction, compute ≈ flat, total ≈ ×1.2).
+//! Output: results/table3_<model>.csv
+
+use truedepth::cli::Args;
+use truedepth::harness::{default_net, write_csv, ScoringCtx};
+use truedepth::model::plan::{GraphPlan, Stage};
+use truedepth::model::{ServingModel, Weights};
+
+fn main() -> truedepth::Result<()> {
+    let args = Args::from_env(&[]);
+    let model = args.get_or("model", "td-small");
+    let steps = args.get_usize("steps", 50);
+    let seqlen = args.get_usize("seqlen", 128);
+
+    let ctx = ScoringCtx::load(model)?;
+    let entry = ctx.entry();
+    let cfg = entry.config.clone();
+    let weights = ctx.weights().unwrap_or_else(|_| Weights::random(&cfg, 3));
+
+    // Two consecutive middle layers, as in the paper's appendix C.
+    let (a, b) = (cfg.n_layers / 2, cfg.n_layers / 2 + 1);
+    let tp_plan = GraphPlan { n_layers: cfg.n_layers, stages: vec![Stage::Seq(a), Stage::Seq(b)] };
+    let lp_plan = GraphPlan { n_layers: cfg.n_layers, stages: vec![Stage::PairLp(a, b)] };
+
+    let mut rows = Vec::new();
+    let mut results = Vec::new();
+    for (name, plan) in [("tensor_parallel", &tp_plan), ("layer_parallel", &lp_plan)] {
+        let serving = ServingModel::new(&ctx.manifest, model, &weights, plan, default_net())?;
+        // prefill a cache so decode attends over `seqlen` positions
+        let prompt: Vec<i32> = (0..seqlen as i32).map(|i| 97 + (i % 26)).collect();
+        serving.prefill(0, &prompt)?;
+        // warmup
+        let tok = vec![65i32; cfg.slots];
+        let pos = vec![seqlen as i32; cfg.slots];
+        for _ in 0..3 {
+            serving.decode_step(&tok, &pos)?;
+        }
+        serving.mesh.metrics.reset();
+        let t0 = std::time::Instant::now();
+        for _ in 0..steps {
+            serving.decode_step(&tok, &pos)?;
+        }
+        let total_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let (sync_ops, sync_ms, compute_ms, _) = serving.mesh.metrics.snapshot();
+        println!(
+            "{name:<16}: total {total_ms:>8.2} ms  sync {sync_ms:>8.2} ms ({sync_ops} ops)  compute {compute_ms:>8.2} ms"
+        );
+        rows.push(format!("{name},{total_ms:.2},{sync_ms:.2},{compute_ms:.2},{sync_ops}"));
+        results.push((total_ms, sync_ms, compute_ms, sync_ops));
+    }
+
+    let (t_tp, s_tp, c_tp, o_tp) = results[0];
+    let (t_lp, s_lp, c_lp, o_lp) = results[1];
+    println!("\npaper Table 3 shape (TP/LP ratios):");
+    println!("  sync ops : {o_tp} → {o_lp} (×{:.2}; paper ×2.00)", o_tp as f64 / o_lp as f64);
+    println!("  sync ms  : ×{:.2}  (paper ×1.99)", s_tp / s_lp);
+    println!("  compute  : ×{:.2}  (paper ×1.04)", c_tp / c_lp);
+    println!("  total    : ×{:.2}  (paper ×1.23)", t_tp / t_lp);
+
+    write_csv(
+        &format!("table3_{model}.csv"),
+        "approach,total_ms,sync_ms,compute_ms,sync_ops",
+        &rows,
+    );
+    Ok(())
+}

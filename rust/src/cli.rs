@@ -1,0 +1,96 @@
+//! Tiny CLI argument parser (substrate: no clap in the offline vendor set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse an iterator of arguments. `flag_names` lists options that take
+    /// no value (everything else with `--` expects one, unless `=` is used).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I, flag_names: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&body) {
+                    out.flags.push(body.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.options.insert(body.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env(flag_names: &[&str]) -> Args {
+        Self::parse(std::env::args().skip(1), flag_names)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed_args() {
+        let a = Args::parse(
+            sv(&["run", "--model", "td-small", "--fast", "--n=5", "extra"]),
+            &["fast"],
+        );
+        assert_eq!(a.positional, vec!["run", "extra"]);
+        assert_eq!(a.get("model"), Some("td-small"));
+        assert!(a.flag("fast"));
+        assert_eq!(a.get_usize("n", 0), 5);
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = Args::parse(sv(&["--verbose"]), &[]);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(sv(&[]), &[]);
+        assert_eq!(a.get_or("x", "d"), "d");
+        assert_eq!(a.get_usize("n", 7), 7);
+        assert!((a.get_f64("f", 1.5) - 1.5).abs() < 1e-12);
+    }
+}

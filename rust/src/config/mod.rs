@@ -1,0 +1,142 @@
+//! Configuration system: a TOML-subset parser plus the typed run config.
+//!
+//! Substrate note: the offline vendor set has no `serde`/`toml`, so this is
+//! a hand-rolled parser covering the subset we use: `[section]` headers,
+//! `key = value` with string / integer / float / bool values, `#` comments.
+
+mod parse;
+
+pub use parse::{parse_toml, TomlDoc};
+
+use crate::error::{Error, Result};
+use std::path::{Path, PathBuf};
+
+/// Interconnect cost model parameters (see `parallel::simnet`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct InterconnectConfig {
+    /// Per-collective base latency (software + link latency), seconds.
+    pub alpha_s: f64,
+    /// Link bandwidth, bytes/second.
+    pub beta_bytes_per_s: f64,
+    /// Set false to disable simulated cost entirely (raw host threads).
+    pub enabled: bool,
+}
+
+impl Default for InterconnectConfig {
+    fn default() -> Self {
+        // Calibrated (EXPERIMENTS.md §Calibration) so that sync:compute on
+        // two TP decoder layers matches the paper's Table 3 ratio
+        // (100.8 : 217 ≈ 0.46): measured TP compute ≈ 2.45 ms per 2-layer
+        // decode step on this testbed → 4 all-reduces × 280 µs ≈ 0.46×.
+        InterconnectConfig {
+            alpha_s: 280e-6,
+            beta_bytes_per_s: 25e9,
+            enabled: true,
+        }
+    }
+}
+
+/// Serving/coordination parameters.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Decode slots (continuous batching width; fixed by the AOT artifacts).
+    pub slots: usize,
+    /// Max requests waiting in the batcher before back-pressure kicks in.
+    pub queue_depth: usize,
+    /// Batcher window: max time to wait to fill a batch.
+    pub batch_wait_ms: u64,
+    /// Max new tokens per request unless the request overrides.
+    pub max_new_tokens: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { slots: 4, queue_depth: 256, batch_wait_ms: 2, max_new_tokens: 64 }
+    }
+}
+
+/// Top-level runtime configuration.
+#[derive(Clone, Debug, Default)]
+pub struct RunConfig {
+    pub artifacts_dir: Option<PathBuf>,
+    pub checkpoints_dir: Option<PathBuf>,
+    pub interconnect: InterconnectConfig,
+    pub server: ServerConfig,
+}
+
+impl RunConfig {
+    /// Load from a TOML file; unknown keys are rejected (typo safety).
+    pub fn from_file(path: &Path) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_toml(&text)
+    }
+
+    pub fn from_toml(text: &str) -> Result<RunConfig> {
+        let doc = parse_toml(text)?;
+        let mut cfg = RunConfig::default();
+        for (section, key, val) in doc.entries() {
+            match (section.as_str(), key.as_str()) {
+                ("", "artifacts_dir") => cfg.artifacts_dir = Some(val.str()?.into()),
+                ("", "checkpoints_dir") => cfg.checkpoints_dir = Some(val.str()?.into()),
+                ("interconnect", "alpha_us") => cfg.interconnect.alpha_s = val.f64()? * 1e-6,
+                ("interconnect", "beta_gb_per_s") => {
+                    cfg.interconnect.beta_bytes_per_s = val.f64()? * 1e9
+                }
+                ("interconnect", "enabled") => cfg.interconnect.enabled = val.bool()?,
+                ("server", "slots") => cfg.server.slots = val.f64()? as usize,
+                ("server", "queue_depth") => cfg.server.queue_depth = val.f64()? as usize,
+                ("server", "batch_wait_ms") => cfg.server.batch_wait_ms = val.f64()? as u64,
+                ("server", "max_new_tokens") => cfg.server.max_new_tokens = val.f64()? as usize,
+                (s, k) => {
+                    return Err(Error::Config(format!("unknown config key [{s}] {k}")));
+                }
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = RunConfig::default();
+        assert!(c.interconnect.enabled);
+        assert_eq!(c.server.slots, 4);
+    }
+
+    #[test]
+    fn parses_full_config() {
+        let c = RunConfig::from_toml(
+            r#"
+            # paths
+            artifacts_dir = "artifacts"
+            checkpoints_dir = "checkpoints"
+
+            [interconnect]
+            alpha_us = 12.5
+            beta_gb_per_s = 50.0
+            enabled = true
+
+            [server]
+            slots = 4
+            queue_depth = 32
+            batch_wait_ms = 5
+            max_new_tokens = 16
+            "#,
+        )
+        .unwrap();
+        assert_eq!(c.artifacts_dir.as_deref(), Some(Path::new("artifacts")));
+        assert!((c.interconnect.alpha_s - 12.5e-6).abs() < 1e-12);
+        assert!((c.interconnect.beta_bytes_per_s - 50e9).abs() < 1.0);
+        assert_eq!(c.server.queue_depth, 32);
+    }
+
+    #[test]
+    fn rejects_unknown_keys() {
+        assert!(RunConfig::from_toml("wat = 3").is_err());
+        assert!(RunConfig::from_toml("[interconnect]\nbogus = 1").is_err());
+    }
+}

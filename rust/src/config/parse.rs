@@ -1,0 +1,140 @@
+//! TOML-subset parser: sections, key = value (string/int/float/bool),
+//! `#` comments. Enough for run configs; deliberately strict elsewhere.
+
+use crate::error::{Error, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+}
+
+impl TomlValue {
+    pub fn str(&self) -> Result<&str> {
+        match self {
+            TomlValue::Str(s) => Ok(s),
+            other => Err(Error::Config(format!("expected string, got {other:?}"))),
+        }
+    }
+
+    pub fn f64(&self) -> Result<f64> {
+        match self {
+            TomlValue::Num(n) => Ok(*n),
+            other => Err(Error::Config(format!("expected number, got {other:?}"))),
+        }
+    }
+
+    pub fn bool(&self) -> Result<bool> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            other => Err(Error::Config(format!("expected bool, got {other:?}"))),
+        }
+    }
+}
+
+/// Parsed document: ordered (section, key, value) triples. Top-level keys
+/// use section "".
+#[derive(Debug, Default)]
+pub struct TomlDoc {
+    entries: Vec<(String, String, TomlValue)>,
+}
+
+impl TomlDoc {
+    pub fn entries(&self) -> impl Iterator<Item = &(String, String, TomlValue)> {
+        self.entries.iter()
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.entries
+            .iter()
+            .find(|(s, k, _)| s == section && k == key)
+            .map(|(_, _, v)| v)
+    }
+}
+
+pub fn parse_toml(text: &str) -> Result<TomlDoc> {
+    let mut doc = TomlDoc::default();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(body) = line.strip_prefix('[') {
+            let name = body
+                .strip_suffix(']')
+                .ok_or_else(|| Error::Config(format!("line {}: unclosed section", lineno + 1)))?;
+            section = name.trim().to_string();
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| Error::Config(format!("line {}: expected key = value", lineno + 1)))?;
+        let key = k.trim().to_string();
+        if key.is_empty() {
+            return Err(Error::Config(format!("line {}: empty key", lineno + 1)));
+        }
+        let value = parse_value(v.trim())
+            .map_err(|e| Error::Config(format!("line {}: {e}", lineno + 1)))?;
+        doc.entries.push((section.clone(), key, value));
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(v: &str) -> std::result::Result<TomlValue, String> {
+    if let Some(body) = v.strip_prefix('"') {
+        let inner = body.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(TomlValue::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    match v {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    v.parse::<f64>()
+        .map(TomlValue::Num)
+        .map_err(|_| format!("cannot parse value `{v}`"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = parse_toml(
+            "a = 1\n[s]\nb = \"x # not a comment\" # real comment\nc = true\nd = -2.5\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "a"), Some(&TomlValue::Num(1.0)));
+        assert_eq!(doc.get("s", "b"), Some(&TomlValue::Str("x # not a comment".into())));
+        assert_eq!(doc.get("s", "c"), Some(&TomlValue::Bool(true)));
+        assert_eq!(doc.get("s", "d"), Some(&TomlValue::Num(-2.5)));
+    }
+
+    #[test]
+    fn errors_are_located() {
+        let e = parse_toml("good = 1\nbad line\n").unwrap_err();
+        assert!(e.to_string().contains("line 2"));
+    }
+
+    #[test]
+    fn empty_and_comment_only() {
+        let doc = parse_toml("# nothing\n\n   \n").unwrap();
+        assert_eq!(doc.entries().count(), 0);
+    }
+}

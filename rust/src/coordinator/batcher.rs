@@ -1,0 +1,149 @@
+//! Bounded admission queue with batch draining (the dynamic-batching half
+//! of continuous batching: the scheduler drains as many waiting requests as
+//! it has free slots, waiting up to `batch_wait` to accumulate work).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::request::Job;
+
+pub struct Batcher {
+    inner: Mutex<Inner>,
+    cv: Condvar,
+    capacity: usize,
+}
+
+struct Inner {
+    queue: VecDeque<Job>,
+    closed: bool,
+}
+
+pub enum SubmitError {
+    Full(Job),
+    Closed(Job),
+}
+
+impl Batcher {
+    pub fn new(capacity: usize) -> Batcher {
+        Batcher {
+            inner: Mutex::new(Inner { queue: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+            capacity,
+        }
+    }
+
+    /// Non-blocking submit; back-pressure via `SubmitError::Full`.
+    pub fn submit(&self, req: Job) -> Result<(), SubmitError> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(SubmitError::Closed(req));
+        }
+        if g.queue.len() >= self.capacity {
+            return Err(SubmitError::Full(req));
+        }
+        g.queue.push_back(req);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Drain up to `max_n` requests, waiting at most `wait` for the first
+    /// one (returns fewer — possibly zero — on timeout or close).
+    pub fn drain(&self, max_n: usize, wait: Duration) -> Vec<Job> {
+        let deadline = Instant::now() + wait;
+        let mut g = self.inner.lock().unwrap();
+        while g.queue.is_empty() && !g.closed {
+            let now = Instant::now();
+            if now >= deadline {
+                return vec![];
+            }
+            let (guard, _timeout) = self.cv.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+        }
+        let n = max_n.min(g.queue.len());
+        g.queue.drain(..n).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::{Request, RequestOptions};
+
+    fn req(id: u64) -> Job {
+        let (tx, _rx) = std::sync::mpsc::channel();
+        Job {
+            request: Request {
+                id,
+                prompt: "x".into(),
+                opts: RequestOptions::default(),
+                submitted_at: Instant::now(),
+            },
+            reply: tx,
+        }
+    }
+
+    #[test]
+    fn fifo_order_and_capacity() {
+        let b = Batcher::new(2);
+        b.submit(req(1)).ok().unwrap();
+        b.submit(req(2)).ok().unwrap();
+        assert!(matches!(b.submit(req(3)), Err(SubmitError::Full(_))));
+        let drained = b.drain(10, Duration::from_millis(1));
+        assert_eq!(drained.iter().map(|r| r.request.id).collect::<Vec<_>>(), vec![1, 2]);
+    }
+
+    #[test]
+    fn drain_respects_max_n() {
+        let b = Batcher::new(10);
+        for i in 0..5 {
+            b.submit(req(i)).ok().unwrap();
+        }
+        assert_eq!(b.drain(2, Duration::from_millis(1)).len(), 2);
+        assert_eq!(b.len(), 3);
+    }
+
+    #[test]
+    fn drain_times_out_empty() {
+        let b = Batcher::new(1);
+        let t = Instant::now();
+        assert!(b.drain(1, Duration::from_millis(20)).is_empty());
+        assert!(t.elapsed() >= Duration::from_millis(19));
+    }
+
+    #[test]
+    fn drain_wakes_on_submit_from_other_thread() {
+        let b = std::sync::Arc::new(Batcher::new(4));
+        let b2 = b.clone();
+        let h = std::thread::spawn(move || b2.drain(1, Duration::from_secs(5)));
+        std::thread::sleep(Duration::from_millis(10));
+        b.submit(req(42)).ok().unwrap();
+        let got = h.join().unwrap();
+        assert_eq!(got[0].request.id, 42);
+    }
+
+    #[test]
+    fn close_rejects_and_wakes() {
+        let b = Batcher::new(4);
+        b.close();
+        assert!(matches!(b.submit(req(1)), Err(SubmitError::Closed(_))));
+        assert!(b.drain(1, Duration::from_secs(1)).is_empty());
+    }
+}

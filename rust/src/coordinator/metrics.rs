@@ -1,0 +1,80 @@
+//! Serving metrics: counters + latency reservoirs, shared via Arc.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::stats::Summary;
+
+#[derive(Default)]
+pub struct ServerMetrics {
+    pub requests_submitted: AtomicU64,
+    pub requests_completed: AtomicU64,
+    pub requests_rejected: AtomicU64,
+    pub tokens_generated: AtomicU64,
+    pub prefill_tokens: AtomicU64,
+    pub decode_steps: AtomicU64,
+    ttft_ms: Mutex<Vec<f64>>,
+    latency_ms: Mutex<Vec<f64>>,
+}
+
+impl ServerMetrics {
+    pub fn record_completion(&self, ttft_ms: f64, latency_ms: f64, tokens: usize) {
+        self.requests_completed.fetch_add(1, Ordering::Relaxed);
+        self.tokens_generated.fetch_add(tokens as u64, Ordering::Relaxed);
+        self.ttft_ms.lock().unwrap().push(ttft_ms);
+        self.latency_ms.lock().unwrap().push(latency_ms);
+    }
+
+    pub fn ttft_summary(&self) -> Option<Summary> {
+        let v = self.ttft_ms.lock().unwrap();
+        (!v.is_empty()).then(|| Summary::from(&v))
+    }
+
+    pub fn latency_summary(&self) -> Option<Summary> {
+        let v = self.latency_ms.lock().unwrap();
+        (!v.is_empty()).then(|| Summary::from(&v))
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = format!(
+            "requests: {} submitted, {} completed, {} rejected; tokens: {} generated, {} prefilled; decode steps: {}",
+            self.requests_submitted.load(Ordering::Relaxed),
+            self.requests_completed.load(Ordering::Relaxed),
+            self.requests_rejected.load(Ordering::Relaxed),
+            self.tokens_generated.load(Ordering::Relaxed),
+            self.prefill_tokens.load(Ordering::Relaxed),
+            self.decode_steps.load(Ordering::Relaxed),
+        );
+        if let Some(t) = self.ttft_summary() {
+            s += &format!("\nttft ms: p50 {:.1} p90 {:.1} p99 {:.1}", t.p50, t.p90, t.p99);
+        }
+        if let Some(l) = self.latency_summary() {
+            s += &format!("\nlatency ms: p50 {:.1} p90 {:.1} p99 {:.1}", l.p50, l.p90, l.p99);
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_reports() {
+        let m = ServerMetrics::default();
+        m.requests_submitted.store(3, Ordering::Relaxed);
+        m.record_completion(10.0, 50.0, 8);
+        m.record_completion(20.0, 70.0, 8);
+        assert_eq!(m.tokens_generated.load(Ordering::Relaxed), 16);
+        let t = m.ttft_summary().unwrap();
+        assert!((t.p50 - 15.0).abs() < 1e-9);
+        assert!(m.report().contains("2 completed"));
+    }
+
+    #[test]
+    fn empty_summaries_are_none() {
+        let m = ServerMetrics::default();
+        assert!(m.ttft_summary().is_none());
+        assert!(m.latency_summary().is_none());
+    }
+}

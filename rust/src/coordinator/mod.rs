@@ -1,0 +1,16 @@
+//! L3 coordinator: the serving stack around the LP/TP executor.
+//!
+//! Shape follows the vLLM-router architecture: a [`router`] fronting model
+//! replicas, a [`batcher`] with bounded admission, and a continuous-batching
+//! [`scheduler`] that interleaves prefills with multi-slot decode steps over
+//! the simulated tensor-parallel mesh.
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod scheduler;
+pub mod server;
+
+pub use request::{Request, RequestOptions, Response};
+pub use server::Server;

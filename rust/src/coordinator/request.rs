@@ -1,0 +1,83 @@
+//! Request/response types crossing the coordinator boundary.
+
+use crate::gen::Sampler;
+
+#[derive(Clone, Debug)]
+pub struct RequestOptions {
+    pub max_new_tokens: usize,
+    pub sampler: Sampler,
+}
+
+impl Default for RequestOptions {
+    fn default() -> Self {
+        RequestOptions { max_new_tokens: 32, sampler: Sampler::Greedy }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: String,
+    pub opts: RequestOptions,
+    /// Submission timestamp (for queueing-delay metrics).
+    pub submitted_at: std::time::Instant,
+}
+
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub text: String,
+    pub tokens: Vec<i32>,
+    pub prompt_tokens: usize,
+    /// Time to first token (queue + prefill), ms.
+    pub ttft_ms: f64,
+    /// Total latency, ms.
+    pub latency_ms: f64,
+    /// Error message if the request failed.
+    pub error: Option<String>,
+}
+
+/// A request paired with its reply channel — the unit that flows through
+/// the batcher into the scheduler.
+pub struct Job {
+    pub request: Request,
+    pub reply: std::sync::mpsc::Sender<Response>,
+}
+
+impl Response {
+    pub fn failed(id: u64, err: impl Into<String>) -> Response {
+        Response {
+            id,
+            text: String::new(),
+            tokens: vec![],
+            prompt_tokens: 0,
+            ttft_ms: 0.0,
+            latency_ms: 0.0,
+            error: Some(err.into()),
+        }
+    }
+
+    pub fn generated_tokens(&self) -> usize {
+        self.tokens.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults() {
+        let o = RequestOptions::default();
+        assert_eq!(o.max_new_tokens, 32);
+        assert!(matches!(o.sampler, Sampler::Greedy));
+    }
+
+    #[test]
+    fn failed_response_carries_error() {
+        let r = Response::failed(7, "boom");
+        assert_eq!(r.id, 7);
+        assert_eq!(r.error.as_deref(), Some("boom"));
+        assert_eq!(r.generated_tokens(), 0);
+    }
+}

@@ -1,0 +1,64 @@
+//! Router: fronts one or more named server instances (model replicas) and
+//! picks a backend per request — least-loaded among the replicas of the
+//! requested model (the vLLM-router policy for single-host deployments).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::coordinator::request::{RequestOptions, Response};
+use crate::coordinator::server::Server;
+use crate::error::{Error, Result};
+
+#[derive(Default)]
+pub struct Router {
+    backends: BTreeMap<String, Vec<Arc<Server>>>,
+}
+
+impl Router {
+    pub fn new() -> Router {
+        Router::default()
+    }
+
+    pub fn add_backend(&mut self, model: &str, server: Arc<Server>) {
+        self.backends.entry(model.to_string()).or_default().push(server);
+    }
+
+    pub fn models(&self) -> Vec<&str> {
+        self.backends.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Pick the least-loaded replica for `model`.
+    pub fn pick(&self, model: &str) -> Result<&Arc<Server>> {
+        let replicas = self
+            .backends
+            .get(model)
+            .filter(|v| !v.is_empty())
+            .ok_or_else(|| Error::Serving(format!("no backend for model `{model}`")))?;
+        Ok(replicas
+            .iter()
+            .min_by_key(|s| s.queue_len())
+            .expect("non-empty replicas"))
+    }
+
+    /// Route a blocking request.
+    pub fn submit_blocking(
+        &self,
+        model: &str,
+        prompt: &str,
+        opts: RequestOptions,
+    ) -> Result<Response> {
+        self.pick(model)?.submit_blocking(prompt, opts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_model_is_an_error() {
+        let r = Router::new();
+        assert!(r.pick("nope").is_err());
+        assert!(r.models().is_empty());
+    }
+}

@@ -1,0 +1,166 @@
+//! Continuous-batching scheduler: the decode loop at the heart of the
+//! serving stack.
+//!
+//! Policy (vLLM-style, prefill-prioritized): each iteration first admits
+//! waiting requests into free KV slots (prefill runs alone — the AOT
+//! prefill executables are batch-1), then runs ONE batched decode step
+//! across all active slots, samples each slot's next token, and retires
+//! finished sequences.
+
+use std::collections::HashMap;
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::coordinator::batcher::Batcher;
+use crate::coordinator::metrics::ServerMetrics;
+use crate::coordinator::request::{Job, Request, Response};
+use crate::gen::Sampler;
+use crate::model::kvcache::SlotManager;
+use crate::model::ServingModel;
+use crate::text::tokenizer::{self, EOS};
+use crate::util::rng::SplitMix64;
+
+struct InFlight {
+    request: Request,
+    reply: Sender<Response>,
+    tokens: Vec<i32>,
+    ttft_ms: f64,
+    sampler: Sampler,
+    rng: SplitMix64,
+}
+
+pub struct Scheduler {
+    model: ServingModel,
+    slots: SlotManager,
+    inflight: HashMap<usize, InFlight>, // slot -> request state
+    metrics: Arc<ServerMetrics>,
+}
+
+impl Scheduler {
+    pub fn new(model: ServingModel, metrics: Arc<ServerMetrics>) -> Scheduler {
+        let cfg = &model.entry.config;
+        let slots = SlotManager::new(cfg.slots, cfg.ctx);
+        Scheduler { model, slots, inflight: HashMap::new(), metrics }
+    }
+
+    pub fn model(&self) -> &ServingModel {
+        &self.model
+    }
+
+    /// Run until the batcher closes and all in-flight work drains.
+    pub fn run(&mut self, batcher: &Batcher, batch_wait: Duration) {
+        loop {
+            let free = self.slots.free_count();
+            // Block on the queue only when idle; when decoding, poll.
+            let wait = if self.inflight.is_empty() {
+                Duration::from_millis(50)
+            } else {
+                batch_wait.min(Duration::from_millis(1))
+            };
+            let admitted = if free > 0 { batcher.drain(free, wait) } else { vec![] };
+            for job in admitted {
+                self.admit(job);
+            }
+            if self.inflight.is_empty() {
+                if batcher.is_closed() && batcher.is_empty() {
+                    return;
+                }
+                continue;
+            }
+            self.decode_round();
+        }
+    }
+
+    fn admit(&mut self, job: Job) {
+        let Job { request, reply } = job;
+        let ids = tokenizer::encode(&request.prompt, true, false);
+        let max_new = request.opts.max_new_tokens;
+        let sampler = request.opts.sampler.clone();
+        let (slot, logits) = match self.model.prefill_slot_checked(
+            &mut self.slots,
+            request.id,
+            &ids,
+            max_new,
+        ) {
+            Ok(x) => x,
+            Err(e) => {
+                let _ = reply.send(Response::failed(request.id, e.to_string()));
+                return;
+            }
+        };
+        self.metrics
+            .prefill_tokens
+            .fetch_add(ids.len() as u64, std::sync::atomic::Ordering::Relaxed);
+        let mut rng = SplitMix64::new(request.id ^ 0x5eed);
+        let first = sampler.sample(&logits, &mut rng);
+        let ttft_ms = request.submitted_at.elapsed().as_secs_f64() * 1e3;
+        self.slots.get_mut(slot).unwrap().next_token = first;
+        self.inflight
+            .insert(slot, InFlight { request, reply, tokens: vec![], ttft_ms, sampler, rng });
+    }
+
+    fn decode_round(&mut self) {
+        let (tokens, pos) = self.slots.step_inputs();
+        let logits = match self.model.decode_step(&tokens, &pos) {
+            Ok(l) => l,
+            Err(e) => {
+                for (slot, inf) in self.inflight.drain() {
+                    self.slots.free(slot);
+                    let _ = inf
+                        .reply
+                        .send(Response::failed(inf.request.id, format!("decode failed: {e}")));
+                }
+                return;
+            }
+        };
+        self.metrics
+            .decode_steps
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let v = self.model.entry.config.vocab;
+        let active: Vec<usize> = self.inflight.keys().copied().collect();
+        for slot in active {
+            let inf = self.inflight.get_mut(&slot).unwrap();
+            // The token just processed at `pos` becomes output history.
+            let current = self.slots.get(slot).unwrap().next_token;
+            inf.tokens.push(current);
+            let next = inf.sampler.sample(&logits[slot * v..(slot + 1) * v], &mut inf.rng);
+            let done = self.slots.advance(slot, next, EOS);
+            if done {
+                let inf = self.inflight.remove(&slot).unwrap();
+                self.slots.free(slot);
+                let latency = inf.request.submitted_at.elapsed().as_secs_f64() * 1e3;
+                self.metrics.record_completion(inf.ttft_ms, latency, inf.tokens.len());
+                let _ = inf.reply.send(Response {
+                    id: inf.request.id,
+                    text: tokenizer::decode(&inf.tokens),
+                    prompt_tokens: tokenizer::encode(&inf.request.prompt, true, false).len(),
+                    tokens: inf.tokens,
+                    ttft_ms: inf.ttft_ms,
+                    latency_ms: latency,
+                    error: None,
+                });
+            }
+        }
+    }
+}
+
+impl ServingModel {
+    /// Allocate a slot + prefill as one transaction (slot freed on error).
+    pub fn prefill_slot_checked(
+        &self,
+        slots: &mut SlotManager,
+        request_id: u64,
+        ids: &[i32],
+        max_new: usize,
+    ) -> crate::Result<(usize, Vec<f32>)> {
+        let slot = slots.alloc(request_id, ids.len(), max_new, 0)?;
+        match self.prefill(slot, ids) {
+            Ok(logits) => Ok((slot, logits)),
+            Err(e) => {
+                slots.free(slot);
+                Err(e)
+            }
+        }
+    }
+}

@@ -1,0 +1,147 @@
+//! Server: owns the scheduler thread and exposes a submit() API.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::config::ServerConfig;
+use crate::coordinator::batcher::{Batcher, SubmitError};
+use crate::coordinator::metrics::ServerMetrics;
+use crate::coordinator::request::{Job, Request, RequestOptions, Response};
+use crate::coordinator::scheduler::Scheduler;
+use crate::error::{Error, Result};
+use crate::model::ServingModel;
+
+pub struct Server {
+    batcher: Arc<Batcher>,
+    pub metrics: Arc<ServerMetrics>,
+    next_id: AtomicU64,
+    join: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Spawn the scheduler thread over a ready serving model.
+    pub fn start(model: ServingModel, cfg: &ServerConfig) -> Server {
+        let batcher = Arc::new(Batcher::new(cfg.queue_depth));
+        let metrics = Arc::new(ServerMetrics::default());
+        let b2 = batcher.clone();
+        let m2 = metrics.clone();
+        let wait = Duration::from_millis(cfg.batch_wait_ms);
+        let join = std::thread::Builder::new()
+            .name("scheduler".into())
+            .spawn(move || {
+                let mut sched = Scheduler::new(model, m2);
+                sched.run(&b2, wait);
+            })
+            .expect("spawn scheduler");
+        Server { batcher, metrics, next_id: AtomicU64::new(1), join: Some(join) }
+    }
+
+    /// Submit a prompt; returns the response receiver (async completion).
+    pub fn submit(&self, prompt: &str, opts: RequestOptions) -> Result<Receiver<Response>> {
+        let (tx, rx) = channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.metrics.requests_submitted.fetch_add(1, Ordering::Relaxed);
+        let job = Job {
+            request: Request {
+                id,
+                prompt: prompt.to_string(),
+                opts,
+                submitted_at: Instant::now(),
+            },
+            reply: tx,
+        };
+        match self.batcher.submit(job) {
+            Ok(()) => Ok(rx),
+            Err(SubmitError::Full(_)) => {
+                self.metrics.requests_rejected.fetch_add(1, Ordering::Relaxed);
+                Err(Error::Serving("queue full (back-pressure)".into()))
+            }
+            Err(SubmitError::Closed(_)) => Err(Error::Serving("server shutting down".into())),
+        }
+    }
+
+    /// Submit and block for the result.
+    pub fn submit_blocking(&self, prompt: &str, opts: RequestOptions) -> Result<Response> {
+        let rx = self.submit(prompt, opts)?;
+        rx.recv().map_err(|_| Error::Serving("scheduler dropped the request".into()))
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.batcher.len()
+    }
+
+    /// Close the queue and wait for the scheduler to drain.
+    pub fn shutdown(mut self) {
+        self.batcher.close();
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.batcher.close();
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::InterconnectConfig;
+    use crate::model::{transform, Weights};
+    use crate::runtime::Manifest;
+
+    fn server() -> Option<Server> {
+        let manifest = Manifest::load_default().ok()?;
+        let cfg = manifest.model("td-small").ok()?.config.clone();
+        let weights = Weights::random(&cfg, 11);
+        let plan = transform::pair_parallel(cfg.n_layers, 2, 10, true);
+        let model = ServingModel::new(
+            &manifest,
+            "td-small",
+            &weights,
+            &plan,
+            InterconnectConfig { enabled: false, ..Default::default() },
+        )
+        .ok()?;
+        Some(Server::start(model, &ServerConfig { queue_depth: 8, ..Default::default() }))
+    }
+
+    #[test]
+    fn serves_concurrent_requests_end_to_end() {
+        let Some(server) = server() else { return };
+        let opts = RequestOptions { max_new_tokens: 4, ..Default::default() };
+        let rxs: Vec<_> = (0..6)
+            .map(|i| server.submit(&format!("prompt {i} the red fox"), opts.clone()).unwrap())
+            .collect();
+        for rx in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+            assert!(resp.error.is_none(), "{:?}", resp.error);
+            assert_eq!(resp.generated_tokens(), 4);
+            assert!(resp.latency_ms >= resp.ttft_ms);
+        }
+        assert_eq!(server.metrics.requests_completed.load(Ordering::Relaxed), 6);
+        // continuous batching must have shared decode steps: 6 requests ×
+        // 4 tokens = 24 slot-steps; with 4 slots the step count must be
+        // well under 24.
+        let steps = server.metrics.decode_steps.load(Ordering::Relaxed);
+        assert!(steps < 24, "no batching happened: {steps} steps");
+        server.shutdown();
+    }
+
+    #[test]
+    fn oversized_prompt_fails_cleanly() {
+        let Some(server) = server() else { return };
+        let long = "x".repeat(400); // > ctx 256
+        let resp = server.submit_blocking(&long, RequestOptions::default()).unwrap();
+        assert!(resp.error.is_some());
+        server.shutdown();
+    }
+}

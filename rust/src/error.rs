@@ -1,0 +1,41 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+#[derive(Error, Debug)]
+pub enum Error {
+    #[error("xla: {0}")]
+    Xla(#[from] xla::Error),
+
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("json parse error at byte {at}: {msg}")]
+    Json { at: usize, msg: String },
+
+    #[error("config: {0}")]
+    Config(String),
+
+    #[error("weights: {0}")]
+    Weights(String),
+
+    #[error("artifact `{0}` not found in manifest")]
+    MissingArtifact(String),
+
+    #[error("invalid graph plan: {0}")]
+    Plan(String),
+
+    #[error("serving: {0}")]
+    Serving(String),
+
+    #[error("{0}")]
+    Msg(String),
+}
+
+impl Error {
+    pub fn msg(m: impl Into<String>) -> Self {
+        Error::Msg(m.into())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,244 @@
+//! Synthetic 5-shot in-context-learning suite — the lm-eval stand-in.
+//!
+//! Five tasks over the training distribution's formats (so a well-trained
+//! model starts near ceiling, like the paper's pre-trained Llamas on PiQA):
+//!
+//! | task      | lm-eval analogue      | why |
+//! |-----------|-----------------------|-----|
+//! | Copy      | easy span tasks       | pure induction head behaviour |
+//! | Reverse   | character manipulation| positional circuits |
+//! | Pattern   | sequence completion   | relational generalization |
+//! | Relation  | factual recall (MMLU-ish) | memorized associations |
+//! | Arith     | GSM-8K                | sparse arithmetic circuitry — the paper's most LP-fragile benchmark |
+//!
+//! Scoring is teacher-forced exact match: every answer token must be the
+//! argmax given the gold prefix (equivalent to greedy decoding when the
+//! model is on-path, and far cheaper to evaluate across many depths).
+//! `table1_icl --serving` cross-checks a subset through the true decode
+//! path.
+
+use crate::error::Result;
+use crate::model::plan::GraphPlan;
+use crate::model::Scorer;
+use crate::text::corpus;
+use crate::text::tokenizer;
+use crate::util::rng::SplitMix64;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum IclTask {
+    Copy,
+    Reverse,
+    Pattern,
+    Relation,
+    Arith,
+}
+
+pub const ALL_TASKS: [IclTask; 5] =
+    [IclTask::Copy, IclTask::Reverse, IclTask::Pattern, IclTask::Relation, IclTask::Arith];
+
+impl IclTask {
+    pub fn name(&self) -> &'static str {
+        match self {
+            IclTask::Copy => "copy",
+            IclTask::Reverse => "reverse",
+            IclTask::Pattern => "pattern",
+            IclTask::Relation => "relation",
+            IclTask::Arith => "arith",
+        }
+    }
+}
+
+/// One evaluation sample: a k-shot prompt and the exact expected answer.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub prompt: String,
+    pub answer: String,
+}
+
+/// Split a complete corpus item into (query-prefix, answer).
+fn split_item(task: IclTask, item: &str) -> (String, String) {
+    match task {
+        IclTask::Copy | IclTask::Reverse | IclTask::Pattern => {
+            let (q, a) = item.split_once("-> ").expect("item format");
+            (format!("{q}-> "), a.trim_end_matches(" .").to_string())
+        }
+        IclTask::Relation => {
+            let (q, a) = item.split_once(" is ").expect("item format");
+            (format!("{q} is "), a.trim_end_matches(" .").to_string())
+        }
+        IclTask::Arith => {
+            let (q, a) = item.split_once("= ").expect("item format");
+            (format!("{q}= "), a.trim_end_matches(" .").to_string())
+        }
+    }
+}
+
+fn gen_item(task: IclTask, rng: &mut SplitMix64) -> String {
+    match task {
+        IclTask::Copy => corpus::gen_copy(rng),
+        IclTask::Reverse => corpus::gen_reverse(rng),
+        IclTask::Pattern => corpus::gen_pattern(rng),
+        IclTask::Relation => corpus::gen_relation(rng),
+        IclTask::Arith => corpus::gen_arith(rng),
+    }
+}
+
+/// Build a k-shot sample. Shots and query come from independent draws; the
+/// query's full item never appears among the shots.
+pub fn gen_sample(task: IclTask, k: usize, rng: &mut SplitMix64) -> Sample {
+    let query = gen_item(task, rng);
+    let mut shots = Vec::with_capacity(k);
+    while shots.len() < k {
+        let item = gen_item(task, rng);
+        if item != query {
+            shots.push(item);
+        }
+    }
+    let (qprefix, answer) = split_item(task, &query);
+    let prompt = format!("{} {}", shots.join(" "), qprefix);
+    Sample { prompt, answer }
+}
+
+/// Teacher-forced exact-match correctness of one sample under `plan`.
+/// `scorers` are bucket-sorted alternatives; the smallest bucket that fits
+/// the sample is used (5-shot relation prompts exceed 128 tokens).
+pub fn sample_correct(scorers: &[&Scorer], plan: &GraphPlan, sample: &Sample) -> Result<bool> {
+    let mut ids = tokenizer::encode(&sample.prompt, true, false);
+    let prompt_len = ids.len();
+    ids.extend(tokenizer::encode(&sample.answer, false, false));
+    let Some(scorer) = scorers.iter().find(|s| ids.len() < s.bucket) else {
+        return Ok(false); // does not fit any compiled bucket
+    };
+    let bucket = scorer.bucket;
+    let v = scorer.entry.config.vocab;
+    let answer_len = ids.len() - prompt_len;
+    let padded = tokenizer::pad_to(&ids, bucket);
+    let logits = scorer.logits(&padded, plan)?;
+    for i in 0..answer_len {
+        let pos = prompt_len + i; // token at `pos` predicted from `pos - 1`
+        let row = &logits[(pos - 1) * v..pos * v];
+        if crate::tensor::argmax(row) as i32 != ids[pos] {
+            return Ok(false);
+        }
+    }
+    Ok(true)
+}
+
+/// Accuracy of `plan` on `n` samples of `task` (k-shot).
+pub fn task_accuracy(
+    scorers: &[&Scorer],
+    plan: &GraphPlan,
+    task: IclTask,
+    k: usize,
+    n: usize,
+    seed: u64,
+) -> Result<f64> {
+    let mut rng = SplitMix64::new(seed ^ task.name().len() as u64 ^ 0xabcdef);
+    let mut correct = 0usize;
+    for _ in 0..n {
+        let s = gen_sample(task, k, &mut rng);
+        if sample_correct(scorers, plan, &s)? {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / n as f64)
+}
+
+/// Full-suite report for one plan.
+#[derive(Clone, Debug)]
+pub struct IclReport {
+    pub effective_depth: usize,
+    pub per_task: Vec<(IclTask, f64)>,
+}
+
+impl IclReport {
+    pub fn average(&self) -> f64 {
+        self.per_task.iter().map(|(_, a)| a).sum::<f64>() / self.per_task.len() as f64
+    }
+}
+
+pub fn evaluate_suite(
+    scorers: &[&Scorer],
+    plan: &GraphPlan,
+    k: usize,
+    n_per_task: usize,
+    seed: u64,
+) -> Result<IclReport> {
+    let mut per_task = Vec::new();
+    for task in ALL_TASKS {
+        per_task.push((task, task_accuracy(scorers, plan, task, k, n_per_task, seed)?));
+    }
+    Ok(IclReport { effective_depth: plan.effective_depth(), per_task })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn samples_are_well_formed() {
+        let mut rng = SplitMix64::new(5);
+        for task in ALL_TASKS {
+            for _ in 0..20 {
+                let s = gen_sample(task, 5, &mut rng);
+                assert!(!s.answer.is_empty(), "{task:?}");
+                assert!(s.prompt.len() < 220, "{task:?} prompt too long: {}", s.prompt.len());
+                assert!(s.prompt.ends_with(' '), "{task:?}");
+                // answer must be verifiable from the query in the prompt
+                match task {
+                    IclTask::Copy => {
+                        let q = s.prompt.rsplit("copy : ").next().unwrap();
+                        let w = q.split(" ->").next().unwrap();
+                        assert_eq!(s.answer, w);
+                    }
+                    IclTask::Arith => {
+                        let tail = s.prompt.rsplit(". ").next().unwrap();
+                        let body = tail.trim_end_matches("= ").trim();
+                        let parts: Vec<&str> = body.split_whitespace().collect();
+                        let (a, op, b): (i64, &str, i64) =
+                            (parts[0].parse().unwrap(), parts[1], parts[2].parse().unwrap());
+                        let expect = if op == "+" { a + b } else { a - b };
+                        assert_eq!(s.answer.parse::<i64>().unwrap(), expect);
+                    }
+                    _ => {}
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn query_not_leaked_into_shots() {
+        let mut rng = SplitMix64::new(17);
+        for _ in 0..50 {
+            let s = gen_sample(IclTask::Relation, 5, &mut rng);
+            let full = format!("{}{} .", s.prompt, s.answer);
+            let query_part = full.rsplit(". ").next().unwrap().trim();
+            let shots_part = &s.prompt[..s.prompt.len() - query_part.len().min(s.prompt.len())];
+            // the exact query item must not appear verbatim among the shots
+            assert!(!shots_part.contains(query_part));
+        }
+    }
+
+    #[test]
+    fn trained_model_beats_chance_and_arith_is_fragile() {
+        // Integration: requires artifacts + trained checkpoint.
+        let Ok(manifest) = crate::runtime::Manifest::load_default() else { return };
+        let dir = crate::repo_root().join("checkpoints/td-small");
+        if !dir.join("weights.tdw").exists() {
+            return;
+        }
+        let entry = manifest.model("td-small").unwrap();
+        let weights = crate::model::Weights::load(&dir, &entry.config).unwrap();
+        let engine = crate::runtime::Engine::cpu().unwrap();
+        let s128 = Scorer::new(&engine, entry, &weights, 128).unwrap();
+        let s256 = Scorer::new(&engine, entry, &weights, 256).unwrap();
+        let scorers = [&s128, &s256];
+        let n = entry.config.n_layers;
+        let plan = crate::model::transform::sequential(n);
+        // pattern is the most reliably-acquired skill at small training
+        // budgets (copy/reverse need induction heads a 500-step run may
+        // not buy); table1_icl reports the full per-task picture.
+        let acc = task_accuracy(&scorers, &plan, IclTask::Pattern, 5, 10, 3).unwrap();
+        assert!(acc > 0.5, "pattern accuracy {acc}");
+    }
+}

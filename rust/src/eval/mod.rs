@@ -1,0 +1,8 @@
+//! Evaluation: perplexity on the held-out synthetic corpus and the 5-shot
+//! ICL task suite (the lm-eval stand-in — see DESIGN.md §Substitutions).
+
+pub mod icl;
+pub mod ppl;
+
+pub use icl::{IclReport, IclTask};
+pub use ppl::{eval_windows, perplexity};

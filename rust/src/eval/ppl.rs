@@ -1,0 +1,83 @@
+//! Perplexity over the held-out corpus split (the RedPajama stand-in).
+
+use crate::error::Result;
+use crate::model::plan::GraphPlan;
+use crate::model::Scorer;
+use crate::text::corpus;
+use crate::text::tokenizer;
+
+/// Pack eval documents into `n_windows` windows of `bucket + 1` tokens,
+/// deterministic given `seed` (documents are drawn from the eval split,
+/// disjoint from training by construction).
+pub fn eval_windows(bucket: usize, n_windows: usize, seed: u64) -> Vec<Vec<i32>> {
+    let mut windows = Vec::with_capacity(n_windows);
+    let mut buf: Vec<i32> = Vec::new();
+    let mut doc_idx = 0u64;
+    while windows.len() < n_windows {
+        while buf.len() < bucket + 1 {
+            let doc = corpus::eval_doc(seed, doc_idx);
+            doc_idx += 1;
+            buf.extend(tokenizer::encode(&doc, true, false));
+        }
+        windows.push(buf[..bucket + 1].to_vec());
+        buf.drain(..bucket + 1);
+    }
+    windows
+}
+
+/// Corpus perplexity of `plan` over pre-built windows: exp(mean NLL).
+pub fn perplexity(scorer: &Scorer, plan: &GraphPlan, windows: &[Vec<i32>]) -> Result<f64> {
+    let mut nll = 0.0f64;
+    let mut count = 0usize;
+    for w in windows {
+        let (n, c) = scorer.window_nll(w, plan)?;
+        nll += n;
+        count += c;
+    }
+    Ok((nll / count.max(1) as f64).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn windows_are_full_and_deterministic() {
+        let a = eval_windows(32, 3, corpus::DATA_SEED);
+        let b = eval_windows(32, 3, corpus::DATA_SEED);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 3);
+        assert!(a.iter().all(|w| w.len() == 33));
+        assert_ne!(a[0], a[1]);
+    }
+
+    #[test]
+    fn eval_windows_disjoint_from_training_stream() {
+        // Training uses doc indices starting at 0; eval uses EVAL_BASE.
+        let train0 = corpus::gen_corpus_doc(corpus::DATA_SEED, 0);
+        let eval0 = corpus::eval_doc(corpus::DATA_SEED, 0);
+        assert_ne!(train0, eval0);
+    }
+
+    #[test]
+    fn perplexity_of_trained_model_is_low_and_damage_raises_it() {
+        // Integration: requires artifacts + trained checkpoint.
+        let Ok(manifest) = crate::runtime::Manifest::load_default() else { return };
+        let root = crate::repo_root();
+        let dir = root.join("checkpoints/td-small");
+        if !dir.join("weights.tdw").exists() {
+            return;
+        }
+        let entry = manifest.model("td-small").unwrap();
+        let weights = crate::model::Weights::load(&dir, &entry.config).unwrap();
+        let engine = crate::runtime::Engine::cpu().unwrap();
+        let scorer = Scorer::new(&engine, entry, &weights, 128).unwrap();
+        let windows = eval_windows(128, 2, corpus::DATA_SEED);
+        let n = entry.config.n_layers;
+        let base = perplexity(&scorer, &crate::model::transform::sequential(n), &windows).unwrap();
+        assert!(base < 4.0, "trained model ppl {base}");
+        let pruned =
+            perplexity(&scorer, &crate::model::transform::prune(n, 2, 8), &windows).unwrap();
+        assert!(pruned > base, "pruning must hurt: {pruned} vs {base}");
+    }
+}

@@ -1,0 +1,131 @@
+//! Generation: sampling policies + a single-request greedy loop over the
+//! serving executor (the coordinator's scheduler drives the batched path).
+
+use crate::error::Result;
+use crate::model::ServingModel;
+use crate::tensor::{argmax, top_k};
+use crate::text::tokenizer::{self, EOS};
+use crate::util::rng::SplitMix64;
+
+/// Sampling policy for picking the next token from a logits row.
+#[derive(Clone, Debug)]
+pub enum Sampler {
+    Greedy,
+    /// Top-k sampling with temperature.
+    TopK { k: usize, temperature: f32, seed: u64 },
+}
+
+impl Sampler {
+    pub fn sample(&self, logits: &[f32], rng: &mut SplitMix64) -> i32 {
+        match self {
+            Sampler::Greedy => argmax(logits) as i32,
+            Sampler::TopK { k, temperature, .. } => {
+                let idx = top_k(logits, (*k).max(1));
+                let t = temperature.max(1e-4);
+                let mx = logits[idx[0]];
+                let weights: Vec<f64> =
+                    idx.iter().map(|&i| (((logits[i] - mx) / t) as f64).exp()).collect();
+                let total: f64 = weights.iter().sum();
+                let mut r = rng.next_f64() * total;
+                for (j, w) in weights.iter().enumerate() {
+                    r -= w;
+                    if r <= 0.0 {
+                        return idx[j] as i32;
+                    }
+                }
+                idx[idx.len() - 1] as i32
+            }
+        }
+    }
+}
+
+/// Outcome of a single-request generation.
+#[derive(Clone, Debug)]
+pub struct Generation {
+    pub prompt_tokens: usize,
+    pub tokens: Vec<i32>,
+    pub text: String,
+    pub prefill_ms: f64,
+    pub decode_ms: f64,
+}
+
+/// Greedy/sampled generation of up to `max_new` tokens for one prompt,
+/// using slot 0 of the serving model (batch-of-one; the batched path lives
+/// in `coordinator::scheduler`).
+pub fn generate(
+    model: &ServingModel,
+    prompt: &str,
+    max_new: usize,
+    sampler: &Sampler,
+) -> Result<Generation> {
+    let cfg = &model.entry.config;
+    let ids = tokenizer::encode(prompt, true, false);
+    let mut rng = SplitMix64::new(match sampler {
+        Sampler::TopK { seed, .. } => *seed,
+        _ => 0,
+    });
+
+    let t0 = std::time::Instant::now();
+    let logits = model.prefill(0, &ids)?;
+    let prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    let s = cfg.slots;
+    let mut out = Vec::new();
+    let mut next = sampler.sample(&logits, &mut rng);
+    let mut pos = ids.len();
+    let t1 = std::time::Instant::now();
+    for _ in 0..max_new {
+        if next == EOS || pos + 1 >= cfg.ctx {
+            break;
+        }
+        out.push(next);
+        let mut tokens = vec![0i32; s];
+        let mut positions = vec![0i32; s];
+        tokens[0] = next;
+        positions[0] = pos as i32;
+        let all = model.decode_step(&tokens, &positions)?;
+        next = sampler.sample(&all[..cfg.vocab], &mut rng);
+        pos += 1;
+    }
+    let decode_ms = t1.elapsed().as_secs_f64() * 1e3;
+
+    Ok(Generation {
+        prompt_tokens: ids.len(),
+        text: tokenizer::decode(&out),
+        tokens: out,
+        prefill_ms,
+        decode_ms,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_argmax() {
+        let mut rng = SplitMix64::new(0);
+        let s = Sampler::Greedy;
+        assert_eq!(s.sample(&[0.0, 5.0, 1.0], &mut rng), 1);
+    }
+
+    #[test]
+    fn topk_stays_in_top_k() {
+        let mut rng = SplitMix64::new(3);
+        let s = Sampler::TopK { k: 2, temperature: 1.0, seed: 3 };
+        let logits = [10.0, 9.5, -50.0, -60.0];
+        for _ in 0..50 {
+            let t = s.sample(&logits, &mut rng);
+            assert!(t == 0 || t == 1, "sampled {t}");
+        }
+    }
+
+    #[test]
+    fn topk_low_temperature_is_greedy() {
+        let mut rng = SplitMix64::new(1);
+        let s = Sampler::TopK { k: 4, temperature: 1e-6, seed: 1 };
+        for _ in 0..20 {
+            assert_eq!(s.sample(&[1.0, 3.0, 2.0, 0.0], &mut rng), 1);
+        }
+    }
+}

@@ -1,0 +1,89 @@
+//! Shared plumbing for the experiment regenerators (`rust/src/bin/*`):
+//! context loading, result-file output, common sweep parameters.
+
+use std::path::PathBuf;
+
+use crate::config::InterconnectConfig;
+use crate::error::Result;
+use crate::model::Weights;
+use crate::runtime::{Engine, Manifest, ModelEntry};
+
+/// Everything a scoring experiment needs for one model.
+pub struct ScoringCtx {
+    pub manifest: Manifest,
+    pub engine: Engine,
+    pub model: String,
+}
+
+impl ScoringCtx {
+    pub fn load(model: &str) -> Result<ScoringCtx> {
+        Ok(ScoringCtx {
+            manifest: Manifest::load_default()?,
+            engine: Engine::cpu()?,
+            model: model.to_string(),
+        })
+    }
+
+    pub fn entry(&self) -> &ModelEntry {
+        self.manifest.model(&self.model).expect("model in manifest")
+    }
+
+    /// Trained weights from `checkpoints/<model>` (or a named variant dir).
+    pub fn weights(&self) -> Result<Weights> {
+        self.weights_from(&self.model)
+    }
+
+    pub fn weights_from(&self, ckpt_name: &str) -> Result<Weights> {
+        let dir = crate::repo_root().join("checkpoints").join(ckpt_name);
+        Weights::load(&dir, &self.entry().config)
+    }
+}
+
+/// Results directory (`results/`), created on demand.
+pub fn results_dir() -> PathBuf {
+    let d = crate::repo_root().join("results");
+    let _ = std::fs::create_dir_all(&d);
+    d
+}
+
+/// Write a CSV result file and echo its path.
+pub fn write_csv(name: &str, header: &str, rows: &[String]) -> PathBuf {
+    let path = results_dir().join(name);
+    let mut text = String::from(header);
+    text.push('\n');
+    for r in rows {
+        text.push_str(r);
+        text.push('\n');
+    }
+    std::fs::write(&path, text).expect("write results csv");
+    println!("→ wrote {}", path.display());
+    path
+}
+
+/// Default interconnect for speed experiments — the calibrated α–β model
+/// (see EXPERIMENTS.md §Calibration).
+pub fn default_net() -> InterconnectConfig {
+    InterconnectConfig::default()
+}
+
+/// Interconnect disabled (pure host-compute timing).
+pub fn no_net() -> InterconnectConfig {
+    InterconnectConfig { enabled: false, ..Default::default() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_dir_exists_after_call() {
+        assert!(results_dir().is_dir());
+    }
+
+    #[test]
+    fn write_csv_roundtrip() {
+        let p = write_csv("selftest.csv", "a,b", &["1,2".into(), "3,4".into()]);
+        let text = std::fs::read_to_string(p).unwrap();
+        assert_eq!(text, "a,b\n1,2\n3,4\n");
+    }
+}

@@ -1,0 +1,57 @@
+//! # truedepth — Layer Parallelism for LLM inference
+//!
+//! Rust coordinator for the three-layer reproduction of *"Leveraging the
+//! true depth of LLMs"* (2025). The paper's contribution — running pairs of
+//! consecutive transformer layers in parallel under tensor parallelism,
+//! halving the all-reduce count — lives here as a first-class serving
+//! feature:
+//!
+//! * [`parallel`] — the simulated multi-accelerator runtime: worker threads
+//!   owning AOT-compiled PJRT executables, collectives with an α–β
+//!   interconnect cost model.
+//! * [`model`] — weights, the computational-graph transform engine
+//!   (shuffle / prune / merge / parallel / 2-parallel), the scoring
+//!   executor and the TP/LP serving executor with KV-slot caches.
+//! * [`coordinator`] — request router, continuous batcher and
+//!   prefill/decode scheduler (vLLM-router shaped).
+//! * [`runtime`] — PJRT client + artifact manifest loading (HLO text AOT'd
+//!   by `python/compile/aot.py`; python never runs at request time).
+//! * [`eval`] — perplexity + the synthetic 5-shot ICL suite.
+//!
+//! See DESIGN.md for the experiment index and EXPERIMENTS.md for results.
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod error;
+pub mod eval;
+pub mod gen;
+pub mod harness;
+pub mod model;
+pub mod parallel;
+pub mod profiling;
+pub mod runtime;
+pub mod tensor;
+pub mod text;
+pub mod util;
+
+pub use error::{Error, Result};
+
+/// Repository root discovery: honors `TRUEDEPTH_ROOT`, else walks up from
+/// the current directory until it finds `artifacts/manifest.json` (or a
+/// `Cargo.toml` as a fallback for test runs).
+pub fn repo_root() -> std::path::PathBuf {
+    if let Ok(r) = std::env::var("TRUEDEPTH_ROOT") {
+        return r.into();
+    }
+    let mut dir = std::env::current_dir().expect("cwd");
+    loop {
+        if dir.join("artifacts/manifest.json").exists() || dir.join("Cargo.toml").exists() {
+            return dir;
+        }
+        if !dir.pop() {
+            return std::env::current_dir().expect("cwd");
+        }
+    }
+}

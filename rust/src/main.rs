@@ -1,0 +1,158 @@
+//! `truedepth` CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   info                         manifest + checkpoint inventory
+//!   generate  --model M --prompt P [--depth D] [--max-new N] [--no-simnet]
+//!   ppl       --model M [--transform T --s S --e E]
+//!   serve     --model M [--depth D] --requests N   synthetic load demo
+//!
+//! Examples live in `examples/` (quickstart, serve_batch, depth_explorer);
+//! experiment regenerators in `rust/src/bin/` (see DESIGN.md).
+
+use truedepth::cli::Args;
+use truedepth::config::ServerConfig;
+use truedepth::coordinator::{RequestOptions, Server};
+use truedepth::eval::ppl::{eval_windows, perplexity};
+use truedepth::gen::{generate, Sampler};
+use truedepth::harness::{default_net, no_net, ScoringCtx};
+use truedepth::model::{transform, Scorer, ServingModel};
+use truedepth::text::corpus::{self, DATA_SEED};
+use truedepth::util::rng::SplitMix64;
+
+fn main() {
+    let args = Args::from_env(&["no-simnet", "help"]);
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let r = match cmd {
+        "info" => info(),
+        "generate" => cmd_generate(&args),
+        "ppl" => cmd_ppl(&args),
+        "serve" => cmd_serve(&args),
+        _ => {
+            println!("{}", HELP);
+            Ok(())
+        }
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+const HELP: &str = "truedepth — Layer Parallelism for LLM inference
+usage: truedepth <info|generate|ppl|serve> [options]   (see src/main.rs docs)";
+
+fn info() -> truedepth::Result<()> {
+    let manifest = truedepth::runtime::Manifest::load_default()?;
+    println!("artifacts: {} (impl: {})", manifest.dir.display(), manifest.impl_name);
+    println!("seq buckets: {:?}", manifest.seq_buckets);
+    for (name, entry) in &manifest.models {
+        let c = &entry.config;
+        let ckpt = truedepth::repo_root().join("checkpoints").join(name).join("weights.tdw");
+        println!(
+            "model {name}: {} layers, d={}, heads={}, ~{:.1}M params, {} artifacts, checkpoint: {}",
+            c.n_layers,
+            c.d_model,
+            c.n_heads,
+            c.n_params() as f64 / 1e6,
+            entry.artifacts.len(),
+            if ckpt.exists() { "yes" } else { "no (run `make models`)" }
+        );
+    }
+    Ok(())
+}
+
+fn plan_for(args: &Args, n: usize) -> truedepth::Result<truedepth::model::GraphPlan> {
+    let depth = args.get_usize("depth", n);
+    if depth == n {
+        return Ok(transform::sequential(n));
+    }
+    transform::lp_for_depth(n, depth, args.get_usize("end", n - 2))
+        .ok_or_else(|| truedepth::Error::msg(format!("no LP window for depth {depth}")))
+}
+
+fn cmd_generate(args: &Args) -> truedepth::Result<()> {
+    let model = args.get_or("model", "td-small");
+    let ctx = ScoringCtx::load(model)?;
+    let weights = ctx.weights()?;
+    let n = ctx.entry().config.n_layers;
+    let plan = plan_for(args, n)?;
+    let net = if args.flag("no-simnet") { no_net() } else { default_net() };
+    let serving = ServingModel::new(&ctx.manifest, model, &weights, &plan, net)?;
+    let prompt = args.get_or("prompt", "the capital of avaria is");
+    let g = generate(&serving, prompt, args.get_usize("max-new", 32), &Sampler::Greedy)?;
+    println!("plan: {} (depth {})", plan.describe(), plan.effective_depth());
+    println!("prompt: {prompt}");
+    println!("output: {}", g.text);
+    println!(
+        "prefill {:.1} ms, decode {:.1} ms ({:.1} tok/s)",
+        g.prefill_ms,
+        g.decode_ms,
+        g.tokens.len() as f64 / (g.decode_ms / 1e3)
+    );
+    Ok(())
+}
+
+fn cmd_ppl(args: &Args) -> truedepth::Result<()> {
+    let model = args.get_or("model", "td-small");
+    let ctx = ScoringCtx::load(model)?;
+    let weights = ctx.weights()?;
+    let entry = ctx.entry();
+    let n = entry.config.n_layers;
+    let (s, e) = (args.get_usize("s", 0), args.get_usize("e", 0));
+    let plan = match args.get_or("transform", "seq") {
+        "seq" => transform::sequential(n),
+        "shuffle" => {
+            let mut rng = SplitMix64::new(1);
+            transform::shuffle(n, s, e, &mut rng)
+        }
+        "prune" => transform::prune(n, s, e),
+        "merge" => transform::merge(n, s, e),
+        "parallel" => transform::parallel(n, s, e),
+        "pair" => transform::pair_parallel(n, s, e, true),
+        other => return Err(truedepth::Error::msg(format!("unknown transform {other}"))),
+    };
+    let scorer = Scorer::new(&ctx.engine, entry, &weights, 128)?;
+    let windows = eval_windows(128, args.get_usize("windows", 2), DATA_SEED);
+    let ppl = perplexity(&scorer, &plan, &windows)?;
+    println!("plan: {} (depth {})", plan.describe(), plan.effective_depth());
+    println!("perplexity: {ppl:.4}");
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> truedepth::Result<()> {
+    let model = args.get_or("model", "td-small");
+    let n_requests = args.get_usize("requests", 12);
+    let ctx = ScoringCtx::load(model)?;
+    let weights = ctx.weights()?;
+    let n = ctx.entry().config.n_layers;
+    let plan = plan_for(args, n)?;
+    let net = if args.flag("no-simnet") { no_net() } else { default_net() };
+    let serving = ServingModel::new(&ctx.manifest, model, &weights, &plan, net)?;
+    let server = Server::start(serving, &ServerConfig::default());
+
+    println!(
+        "serving {model} at depth {} — {n_requests} synthetic requests",
+        plan.effective_depth()
+    );
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..n_requests)
+        .map(|i| {
+            let doc = corpus::eval_doc(DATA_SEED, 1000 + i as u64);
+            let prompt = &doc[..doc.len().min(48)];
+            server.submit(prompt, RequestOptions { max_new_tokens: 16, sampler: Sampler::Greedy })
+        })
+        .collect::<truedepth::Result<_>>()?;
+    let mut total_tokens = 0;
+    for rx in rxs {
+        let resp = rx.recv().map_err(|_| truedepth::Error::msg("lost response"))?;
+        total_tokens += resp.generated_tokens();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!("{}", server.metrics.report());
+    println!(
+        "throughput: {:.1} generated tok/s ({total_tokens} tokens / {wall:.2}s)",
+        total_tokens as f64 / wall
+    );
+    server.shutdown();
+    Ok(())
+}

@@ -1,0 +1,161 @@
+//! KV-cache slot management for continuous batching.
+//!
+//! The device-side caches are statically shaped `[S, C, w]` tensors owned
+//! by the workers (one per stage per rank); this module is the host-side
+//! bookkeeping: which slot belongs to which request, how far each sequence
+//! has decoded, and when a slot can be recycled.
+
+use crate::error::{Error, Result};
+
+#[derive(Clone, Debug)]
+pub struct SlotInfo {
+    pub request_id: u64,
+    /// Next token position to be written/attended (== current seq length).
+    pub pos: usize,
+    pub generated: usize,
+    pub max_new: usize,
+    /// The token to feed at the next decode step.
+    pub next_token: i32,
+}
+
+#[derive(Debug)]
+pub struct SlotManager {
+    slots: Vec<Option<SlotInfo>>,
+    ctx: usize,
+}
+
+impl SlotManager {
+    pub fn new(n_slots: usize, ctx: usize) -> SlotManager {
+        SlotManager { slots: vec![None; n_slots], ctx }
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn free_count(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_none()).count()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.free_count() == self.n_slots()
+    }
+
+    /// Claim a free slot for a request whose prompt is `prompt_len` tokens.
+    pub fn alloc(
+        &mut self,
+        request_id: u64,
+        prompt_len: usize,
+        max_new: usize,
+        first_token: i32,
+    ) -> Result<usize> {
+        if prompt_len >= self.ctx {
+            return Err(Error::Serving(format!(
+                "prompt of {prompt_len} tokens exceeds ctx {}",
+                self.ctx
+            )));
+        }
+        let idx = self
+            .slots
+            .iter()
+            .position(|s| s.is_none())
+            .ok_or_else(|| Error::Serving("no free slot".into()))?;
+        self.slots[idx] = Some(SlotInfo {
+            request_id,
+            pos: prompt_len,
+            generated: 0,
+            max_new,
+            next_token: first_token,
+        });
+        Ok(idx)
+    }
+
+    pub fn free(&mut self, slot: usize) {
+        self.slots[slot] = None;
+    }
+
+    pub fn get(&self, slot: usize) -> Option<&SlotInfo> {
+        self.slots.get(slot).and_then(|s| s.as_ref())
+    }
+
+    pub fn get_mut(&mut self, slot: usize) -> Option<&mut SlotInfo> {
+        self.slots.get_mut(slot).and_then(|s| s.as_mut())
+    }
+
+    pub fn active(&self) -> impl Iterator<Item = (usize, &SlotInfo)> {
+        self.slots.iter().enumerate().filter_map(|(i, s)| s.as_ref().map(|x| (i, x)))
+    }
+
+    /// Decode-step inputs for all S slots: token + position vectors
+    /// (inactive slots get benign zeros; their outputs are ignored).
+    pub fn step_inputs(&self) -> (Vec<i32>, Vec<i32>) {
+        let mut tokens = vec![0i32; self.n_slots()];
+        let mut pos = vec![0i32; self.n_slots()];
+        for (i, info) in self.active() {
+            tokens[i] = info.next_token;
+            pos[i] = info.pos as i32;
+        }
+        (tokens, pos)
+    }
+
+    /// Advance a slot after a decode step produced `token`. Returns true if
+    /// the sequence is finished (budget exhausted or ctx full).
+    pub fn advance(&mut self, slot: usize, token: i32, eos: i32) -> bool {
+        let ctx = self.ctx;
+        let info = self.get_mut(slot).expect("advance on empty slot");
+        info.pos += 1;
+        info.generated += 1;
+        info.next_token = token;
+        token == eos || info.generated >= info.max_new || info.pos + 1 >= ctx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_cycle() {
+        let mut m = SlotManager::new(2, 64);
+        assert!(m.is_idle());
+        let a = m.alloc(1, 10, 5, 42).unwrap();
+        let b = m.alloc(2, 3, 5, 43).unwrap();
+        assert_ne!(a, b);
+        assert!(m.alloc(3, 1, 1, 0).is_err()); // full
+        m.free(a);
+        assert_eq!(m.free_count(), 1);
+        let c = m.alloc(3, 1, 1, 0).unwrap();
+        assert_eq!(c, a); // recycled
+    }
+
+    #[test]
+    fn rejects_oversized_prompt() {
+        let mut m = SlotManager::new(1, 16);
+        assert!(m.alloc(1, 16, 1, 0).is_err());
+        assert!(m.alloc(1, 15, 1, 0).is_ok());
+    }
+
+    #[test]
+    fn step_inputs_mask_inactive() {
+        let mut m = SlotManager::new(3, 64);
+        m.alloc(7, 5, 10, 99).unwrap();
+        let (tokens, pos) = m.step_inputs();
+        assert_eq!(tokens, vec![99, 0, 0]);
+        assert_eq!(pos, vec![5, 0, 0]);
+    }
+
+    #[test]
+    fn advance_terminates_on_budget_eos_and_ctx() {
+        let mut m = SlotManager::new(1, 8);
+        let s = m.alloc(1, 2, 2, 10).unwrap();
+        assert!(!m.advance(s, 11, 999)); // 1 generated
+        assert!(m.advance(s, 12, 999)); // budget of 2 reached
+        m.free(s);
+        let s = m.alloc(2, 2, 100, 10).unwrap();
+        assert!(m.advance(s, 999, 999)); // eos
+        m.free(s);
+        let s = m.alloc(3, 5, 100, 10).unwrap();
+        assert!(!m.advance(s, 1, 999)); // pos 6
+        assert!(m.advance(s, 1, 999)); // pos 7 == ctx-1 → stop
+    }
+}

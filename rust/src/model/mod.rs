@@ -1,0 +1,15 @@
+//! Model execution: weights, the computational-graph transform engine, the
+//! scoring executor (perplexity under arbitrary §3 transforms) and the
+//! TP/LP serving executor (§4's deployed form over the simulated mesh).
+
+pub mod kvcache;
+pub mod plan;
+pub mod scoring;
+pub mod serving;
+pub mod transform;
+pub mod weights;
+
+pub use plan::{GraphPlan, Stage};
+pub use scoring::Scorer;
+pub use serving::{ServeStage, ServingModel};
+pub use weights::Weights;

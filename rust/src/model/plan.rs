@@ -1,0 +1,163 @@
+//! Graph plans: the execution order of transformer sub-blocks after a §3
+//! transformation of the computational graph.
+
+use std::fmt;
+
+/// One stage of the plan — one *effective layer* in the paper's sense
+/// (stages execute strictly sequentially; everything inside a stage is
+/// parallel / fused).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// A single original layer, run sequentially.
+    Seq(usize),
+    /// The paper's Layer Parallelism pair, deployed (LP-TP) numerics:
+    /// `m = x + A_a(x) + A_b(x); y = m + F_a(m) + F_b(m)` — 2 all-reduces.
+    PairLp(usize, usize),
+    /// PAR approximation (paper eq. 2) over an arbitrary set of layers:
+    /// each path computes its own `x + A_i(x)` and `F_i` on that; paths sum
+    /// into the residual once. Used for the §3 heatmap analysis.
+    ParBlock(Vec<usize>),
+    /// Weight-averaged merge of the listed layers, run as one layer.
+    Merged(Vec<usize>),
+}
+
+impl Stage {
+    /// Layers consumed by this stage.
+    pub fn layers(&self) -> Vec<usize> {
+        match self {
+            Stage::Seq(i) => vec![*i],
+            Stage::PairLp(a, b) => vec![*a, *b],
+            Stage::ParBlock(v) | Stage::Merged(v) => v.clone(),
+        }
+    }
+}
+
+impl fmt::Display for Stage {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Stage::Seq(i) => write!(f, "{i}"),
+            Stage::PairLp(a, b) => write!(f, "[{a}∥{b}]"),
+            Stage::ParBlock(v) => write!(
+                f,
+                "par({})",
+                v.iter().map(|i| i.to_string()).collect::<Vec<_>>().join(",")
+            ),
+            Stage::Merged(v) => write!(
+                f,
+                "merge({})",
+                v.iter().map(|i| i.to_string()).collect::<Vec<_>>().join(",")
+            ),
+        }
+    }
+}
+
+/// A full model plan.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct GraphPlan {
+    pub n_layers: usize,
+    pub stages: Vec<Stage>,
+}
+
+impl GraphPlan {
+    /// Paper's *effective depth*: sequential stages from input to output.
+    pub fn effective_depth(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Δ in the paper's figures: number of original layers absorbed into
+    /// parallel groups (e.g. 4 pairs → Δ=8, depth reduced by 4).
+    pub fn delta(&self) -> usize {
+        self.stages
+            .iter()
+            .map(|s| match s {
+                Stage::Seq(_) => 0,
+                other => other.layers().len(),
+            })
+            .sum()
+    }
+
+    /// Validate: every original layer used at most once, indices in range
+    /// (pruning = layers absent entirely).
+    pub fn validate(&self) -> crate::Result<()> {
+        let mut seen = vec![false; self.n_layers];
+        for st in &self.stages {
+            for l in st.layers() {
+                if l >= self.n_layers {
+                    return Err(crate::Error::Plan(format!("layer {l} out of range")));
+                }
+                if seen[l] {
+                    return Err(crate::Error::Plan(format!("layer {l} used twice")));
+                }
+                seen[l] = true;
+            }
+            if let Stage::PairLp(a, b) = st {
+                if a == b {
+                    return Err(crate::Error::Plan("degenerate pair".into()));
+                }
+            }
+            if let Stage::ParBlock(v) | Stage::Merged(v) = st {
+                if v.is_empty() {
+                    return Err(crate::Error::Plan("empty block".into()));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn describe(&self) -> String {
+        self.stages
+            .iter()
+            .map(|s| s.to_string())
+            .collect::<Vec<_>>()
+            .join(" → ")
+    }
+
+    /// All-reduce count per token under tensor parallelism (the quantity
+    /// the paper's speedup derives from): Seq/Merged = 2 per stage,
+    /// PairLp = 2 per stage (vs 4 for its two layers run sequentially),
+    /// ParBlock = 2 per stage.
+    pub fn all_reduces_per_token(&self) -> usize {
+        self.stages.len() * 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn depth_and_delta() {
+        let p = GraphPlan {
+            n_layers: 6,
+            stages: vec![
+                Stage::Seq(0),
+                Stage::PairLp(1, 2),
+                Stage::PairLp(3, 4),
+                Stage::Seq(5),
+            ],
+        };
+        p.validate().unwrap();
+        assert_eq!(p.effective_depth(), 4);
+        assert_eq!(p.delta(), 4);
+        assert_eq!(p.all_reduces_per_token(), 8); // vs 12 sequential
+    }
+
+    #[test]
+    fn validation_catches_reuse_and_range() {
+        let p = GraphPlan { n_layers: 3, stages: vec![Stage::Seq(0), Stage::Seq(0)] };
+        assert!(p.validate().is_err());
+        let p = GraphPlan { n_layers: 3, stages: vec![Stage::Seq(7)] };
+        assert!(p.validate().is_err());
+        let p = GraphPlan { n_layers: 3, stages: vec![Stage::ParBlock(vec![])] };
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn display_reads_well() {
+        let p = GraphPlan {
+            n_layers: 4,
+            stages: vec![Stage::Seq(0), Stage::PairLp(1, 2), Stage::Merged(vec![3])],
+        };
+        assert_eq!(p.describe(), "0 → [1∥2] → merge(3)");
+    }
+}

@@ -1,0 +1,321 @@
+//! Scoring executor: run any [`GraphPlan`] (including every §3 transform)
+//! and produce logits / negative-log-likelihood for perplexity.
+//!
+//! Composition happens per *sub-block delta*: the AOT artifacts `attn_t{T}`
+//! and `ffn_t{T}` compute A(x) and F(x) (pre-norm deltas, no residual), so
+//! the coordinator is free to rewire the residual stream arbitrarily —
+//! shuffling, pruning, merging and both parallel forms all reduce to
+//! different sequences of delta calls + host-side adds. No per-transform
+//! compilation is needed, which is what makes the Fig. 3 heatmaps (hundreds
+//! of configurations) tractable.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use xla::PjRtLoadedExecutable;
+
+use crate::error::{Error, Result};
+use crate::model::plan::{GraphPlan, Stage};
+use crate::model::weights::{Tensor, Weights, ATTN_FIELDS, FFN_FIELDS};
+use crate::runtime::pjrt::{Engine, HostValue};
+use crate::runtime::ModelEntry;
+use crate::tensor::{add_slices, log_softmax_at};
+use crate::text::tokenizer::PAD;
+
+pub struct Scorer<'a> {
+    engine: &'a Engine,
+    pub entry: &'a ModelEntry,
+    weights: &'a Weights,
+    /// Sequence bucket (T) this scorer is compiled for.
+    pub bucket: usize,
+    exe_embed: Rc<PjRtLoadedExecutable>,
+    exe_attn: Rc<PjRtLoadedExecutable>,
+    exe_ffn: Rc<PjRtLoadedExecutable>,
+    exe_logits: Rc<PjRtLoadedExecutable>,
+    /// Merged-layer weights are derived; cache them per stage signature.
+    merged_cache: std::cell::RefCell<HashMap<Vec<usize>, HashMap<String, Tensor>>>,
+}
+
+impl<'a> Scorer<'a> {
+    pub fn new(
+        engine: &'a Engine,
+        entry: &'a ModelEntry,
+        weights: &'a Weights,
+        bucket: usize,
+    ) -> Result<Scorer<'a>> {
+        let load = |name: String| -> Result<Rc<PjRtLoadedExecutable>> {
+            engine.load(&entry.artifact(&name)?.file)
+        };
+        Ok(Scorer {
+            engine,
+            entry,
+            weights,
+            bucket,
+            exe_embed: load(format!("embed_t{bucket}"))?,
+            exe_attn: load(format!("attn_t{bucket}"))?,
+            exe_ffn: load(format!("ffn_t{bucket}"))?,
+            exe_logits: load(format!("logits_t{bucket}"))?,
+            merged_cache: Default::default(),
+        })
+    }
+
+    fn d(&self) -> usize {
+        self.entry.config.d_model
+    }
+
+    fn call1(
+        &self,
+        exe: &PjRtLoadedExecutable,
+        h: &[f32],
+        hshape: [usize; 2],
+        ws: &[Tensor],
+    ) -> Result<Vec<f32>> {
+        let mut args = Vec::with_capacity(1 + ws.len());
+        args.push(HostValue::f32(hshape.to_vec(), h.to_vec()));
+        for t in ws {
+            args.push(t.host());
+        }
+        let mut outs = self.engine.call(exe, &args)?;
+        if outs.len() != 1 {
+            return Err(Error::msg("expected single output"));
+        }
+        outs.remove(0).into_f32()
+    }
+
+    fn attn_delta_t(&self, h: &[f32], ws: &[Tensor]) -> Result<Vec<f32>> {
+        self.call1(&self.exe_attn, h, [self.bucket, self.d()], ws)
+    }
+
+    fn ffn_delta_t(&self, h: &[f32], ws: &[Tensor]) -> Result<Vec<f32>> {
+        self.call1(&self.exe_ffn, h, [self.bucket, self.d()], ws)
+    }
+
+    fn layer_tensors(&self, i: usize) -> Result<(Vec<Tensor>, Vec<Tensor>)> {
+        Ok((self.weights.attn_full(i)?, self.weights.ffn_full(i)?))
+    }
+
+    fn merged_tensors(&self, layers: &[usize]) -> Result<(Vec<Tensor>, Vec<Tensor>)> {
+        let mut cache = self.merged_cache.borrow_mut();
+        if !cache.contains_key(layers) {
+            cache.insert(layers.to_vec(), self.weights.merged_layer(layers)?);
+        }
+        let m = &cache[layers];
+        let attn = ATTN_FIELDS.iter().map(|f| m[*f].clone()).collect();
+        let ffn = FFN_FIELDS.iter().map(|f| m[*f].clone()).collect();
+        Ok((attn, ffn))
+    }
+
+    /// Run one sequential layer in place: `h += A(h); h += F(h)`.
+    fn apply_seq(&self, h: &mut Vec<f32>, attn: &[Tensor], ffn: &[Tensor]) -> Result<()> {
+        let da = self.attn_delta_t(h, attn)?;
+        add_slices(h, &da);
+        let df = self.ffn_delta_t(h, ffn)?;
+        add_slices(h, &df);
+        Ok(())
+    }
+
+    /// Run one plan stage in place.
+    pub fn apply_stage(&self, h: &mut Vec<f32>, stage: &Stage) -> Result<()> {
+        match stage {
+            Stage::Seq(i) => {
+                let (a, f) = self.layer_tensors(*i)?;
+                self.apply_seq(h, &a, &f)
+            }
+            Stage::Merged(v) => {
+                let (a, f) = self.merged_tensors(v)?;
+                self.apply_seq(h, &a, &f)
+            }
+            Stage::PairLp(a, b) => {
+                // deployed LP-TP numerics: shared post-attention residual
+                let (aa, fa) = self.layer_tensors(*a)?;
+                let (ab, fb) = self.layer_tensors(*b)?;
+                let da = self.attn_delta_t(h, &aa)?;
+                let db = self.attn_delta_t(h, &ab)?;
+                add_slices(h, &da);
+                add_slices(h, &db); // h is now m
+                let fa_ = self.ffn_delta_t(h, &fa)?;
+                let fb_ = self.ffn_delta_t(h, &fb)?;
+                add_slices(h, &fa_);
+                add_slices(h, &fb_);
+                Ok(())
+            }
+            Stage::ParBlock(v) => {
+                // PAR approximation (paper eq. 2): each path sees the same
+                // input and computes its own intermediate x + A_i(x).
+                let base = h.clone();
+                for &i in v {
+                    let (a, f) = self.layer_tensors(i)?;
+                    let da = self.attn_delta_t(&base, &a)?;
+                    let mut xi = base.clone();
+                    add_slices(&mut xi, &da);
+                    let df = self.ffn_delta_t(&xi, &f)?;
+                    add_slices(h, &da);
+                    add_slices(h, &df);
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Hidden states after the full plan. `tokens.len()` must equal bucket.
+    pub fn hidden(&self, tokens: &[i32], plan: &GraphPlan) -> Result<Vec<f32>> {
+        if tokens.len() != self.bucket {
+            return Err(Error::msg(format!(
+                "expected {} tokens, got {}",
+                self.bucket,
+                tokens.len()
+            )));
+        }
+        let outs = self.engine.call(
+            &self.exe_embed,
+            &[
+                HostValue::i32(vec![self.bucket], tokens.to_vec()),
+                self.weights.get("emb")?.host(),
+            ],
+        )?;
+        let mut h = outs.into_iter().next().unwrap().into_f32()?;
+        for stage in &plan.stages {
+            self.apply_stage(&mut h, stage)?;
+        }
+        Ok(h)
+    }
+
+    /// Logits `[T, V]` after the plan.
+    pub fn logits(&self, tokens: &[i32], plan: &GraphPlan) -> Result<Vec<f32>> {
+        let h = self.hidden(tokens, plan)?;
+        let mut outs = self.engine.call(
+            &self.exe_logits,
+            &[
+                HostValue::f32(vec![self.bucket, self.d()], h),
+                self.weights.get("lnf")?.host(),
+                self.weights.get("wout")?.host(),
+            ],
+        )?;
+        outs.remove(0).into_f32()
+    }
+
+    /// Sum of next-token NLL over a window of `bucket + 1` tokens
+    /// (input = first T, target = shifted by one). PAD targets are masked.
+    pub fn window_nll(&self, window: &[i32], plan: &GraphPlan) -> Result<(f64, usize)> {
+        if window.len() != self.bucket + 1 {
+            return Err(Error::msg(format!(
+                "window must be bucket+1 = {} tokens, got {}",
+                self.bucket + 1,
+                window.len()
+            )));
+        }
+        let logits = self.logits(&window[..self.bucket], plan)?;
+        let v = self.entry.config.vocab;
+        let mut nll = 0.0f64;
+        let mut count = 0usize;
+        for t in 0..self.bucket {
+            let target = window[t + 1];
+            if target == PAD || window[t] == PAD {
+                continue;
+            }
+            nll -= log_softmax_at(&logits[t * v..(t + 1) * v], target as usize);
+            count += 1;
+        }
+        Ok((nll, count))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::transform;
+    use crate::runtime::Manifest;
+
+    struct Ctx {
+        engine: Engine,
+        manifest: Manifest,
+        weights: Weights,
+    }
+
+    fn ctx() -> Option<Ctx> {
+        let manifest = Manifest::load_default().ok()?;
+        let engine = Engine::cpu().ok()?;
+        let cfg = manifest.model("td-small").ok()?.config.clone();
+        let weights = Weights::random(&cfg, 42);
+        Some(Ctx { engine, manifest, weights })
+    }
+
+    fn toks(n: usize, seed: u64) -> Vec<i32> {
+        let mut rng = crate::util::rng::SplitMix64::new(seed);
+        (0..n).map(|_| rng.below(255) as i32).collect()
+    }
+
+    #[test]
+    fn sequential_logits_are_finite_and_shaped() {
+        let Some(c) = ctx() else { return };
+        let entry = c.manifest.model("td-small").unwrap();
+        let s = Scorer::new(&c.engine, entry, &c.weights, 32).unwrap();
+        let plan = transform::sequential(entry.config.n_layers);
+        let l = s.logits(&toks(32, 1), &plan).unwrap();
+        assert_eq!(l.len(), 32 * entry.config.vocab);
+        assert!(l.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn prune_changes_output_but_prune_nothing_matches_seq() {
+        let Some(c) = ctx() else { return };
+        let entry = c.manifest.model("td-small").unwrap();
+        let s = Scorer::new(&c.engine, entry, &c.weights, 32).unwrap();
+        let n = entry.config.n_layers;
+        let t = toks(32, 2);
+        let seq = s.logits(&t, &transform::sequential(n)).unwrap();
+        // prune an empty window == sequential
+        let noop = s.logits(&t, &transform::prune(n, 3, 3)).unwrap();
+        assert_eq!(seq, noop);
+        let pruned = s.logits(&t, &transform::prune(n, 3, 6)).unwrap();
+        assert_ne!(seq, pruned);
+    }
+
+    #[test]
+    fn lp_pair_and_par_block_agree_only_in_first_half() {
+        // PairLp and ParBlock share the attention phase but differ on the
+        // FFN inputs — outputs must differ (abl3's whole point).
+        let Some(c) = ctx() else { return };
+        let entry = c.manifest.model("td-small").unwrap();
+        let s = Scorer::new(&c.engine, entry, &c.weights, 32).unwrap();
+        let n = entry.config.n_layers;
+        let t = toks(32, 3);
+        let lp = s.logits(&t, &transform::pair_parallel(n, 4, 6, true)).unwrap();
+        let par = s.logits(&t, &transform::pair_parallel(n, 4, 6, false)).unwrap();
+        assert_ne!(lp, par);
+        // both still finite
+        assert!(lp.iter().chain(par.iter()).all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn window_nll_masks_pad() {
+        let Some(c) = ctx() else { return };
+        let entry = c.manifest.model("td-small").unwrap();
+        let s = Scorer::new(&c.engine, entry, &c.weights, 32).unwrap();
+        let plan = transform::sequential(entry.config.n_layers);
+        let mut w = toks(33, 4);
+        for x in w.iter_mut().skip(20) {
+            *x = PAD;
+        }
+        let (nll, count) = s.window_nll(&w, &plan).unwrap();
+        assert!(count < 20);
+        assert!(nll.is_finite() && nll > 0.0);
+    }
+
+    #[test]
+    fn merge_of_identical_layer_is_identity() {
+        // merging a layer with itself must equal running that layer
+        let Some(c) = ctx() else { return };
+        let entry = c.manifest.model("td-small").unwrap();
+        let s = Scorer::new(&c.engine, entry, &c.weights, 32).unwrap();
+        let n = entry.config.n_layers;
+        let t = toks(32, 5);
+        let plan_a = transform::sequential(n);
+        let mut stages = plan_a.stages.clone();
+        stages[2] = Stage::Merged(vec![2]);
+        let plan_b = GraphPlan { n_layers: n, stages };
+        let a = s.logits(&t, &plan_a).unwrap();
+        let b = s.logits(&t, &plan_b).unwrap();
+        assert_eq!(a, b);
+    }
+}

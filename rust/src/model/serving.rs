@@ -1,0 +1,437 @@
+//! Serving executor: the paper's §4 tensor-parallel deployment, with LP
+//! pairs as a first-class stage kind.
+//!
+//! Layout over a 2-rank mesh (paper's setup — one accelerator per LP path):
+//!
+//! * `Tp(i)` stage — classic Megatron sharding: each rank holds half the
+//!   heads of layer i (and half the FFN hidden), computes a low-rank
+//!   partial, and the pair of partials is **all-reduced twice per layer**
+//!   (after attention, after FFN).
+//! * `Lp(a, b)` stage — the paper's transform: rank 0 holds *all* of layer
+//!   a, rank 1 all of layer b. One all-reduce combines `A_a(x) + A_b(x)`
+//!   into the shared residual m, one more combines `F_a(m) + F_b(m)` —
+//!   **two all-reduces per layer pair**, i.e. half of sequential TP.
+//!
+//! KV caches live as named resident buffers on the owning rank(s); decode
+//! carries them in/out of the layer executables (see worker.rs for the
+//! tuple-output caveat).
+
+use std::path::Path;
+
+use crate::config::InterconnectConfig;
+use crate::error::{Error, Result};
+use crate::model::plan::{GraphPlan, Stage};
+use crate::model::weights::Weights;
+use crate::parallel::worker::ArgRef;
+use crate::parallel::Mesh;
+use crate::runtime::pjrt::HostValue;
+use crate::runtime::{Manifest, ModelEntry};
+use crate::tensor::add_slices;
+
+/// Serving-mode stage (subset of [`Stage`] that the TP runtime supports).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeStage {
+    Tp(usize),
+    Lp(usize, usize),
+}
+
+pub struct ServingModel {
+    pub mesh: Mesh,
+    pub entry: ModelEntry,
+    pub stages: Vec<ServeStage>,
+    pub buckets: Vec<usize>,
+    ranks: usize,
+}
+
+impl ServingModel {
+    /// Build from a graph plan (Seq → Tp, PairLp → Lp; other stages are a
+    /// scoring-only feature and rejected here).
+    pub fn new(
+        manifest: &Manifest,
+        model_name: &str,
+        weights: &Weights,
+        plan: &GraphPlan,
+        net: InterconnectConfig,
+    ) -> Result<ServingModel> {
+        plan.validate().map_err(|e| Error::Serving(format!("bad plan: {e}")))?;
+        let entry = manifest.model(model_name)?.clone();
+        let mut stages = Vec::new();
+        for st in &plan.stages {
+            match st {
+                Stage::Seq(i) => stages.push(ServeStage::Tp(*i)),
+                Stage::PairLp(a, b) => stages.push(ServeStage::Lp(*a, *b)),
+                other => {
+                    return Err(Error::Serving(format!(
+                        "stage {other} not servable under TP (scoring only)"
+                    )))
+                }
+            }
+        }
+        let ranks = 2;
+        let mesh = Mesh::new(ranks, net);
+        let m = ServingModel {
+            mesh,
+            entry,
+            stages,
+            buckets: manifest.seq_buckets.clone(),
+            ranks,
+        };
+        m.compile_artifacts()?;
+        m.upload_weights(weights)?;
+        m.init_caches()?;
+        Ok(m)
+    }
+
+    fn art(&self, name: &str) -> Result<&Path> {
+        Ok(self.entry.artifact(name)?.file.as_path())
+    }
+
+    fn compile_artifacts(&self) -> Result<()> {
+        let mut keys: Vec<String> = vec![
+            "tpattn_decode".into(),
+            "tpffn_decode".into(),
+            "lpattn_decode".into(),
+            "lpffn_decode".into(),
+            "embed_decode".into(),
+            "logits_decode".into(),
+        ];
+        for t in &self.buckets {
+            keys.push(format!("embed_t{t}"));
+            keys.push(format!("logits_t{t}"));
+            keys.push(format!("tpattn_prefill_t{t}"));
+            keys.push(format!("tpffn_prefill_t{t}"));
+            keys.push(format!("lpattn_prefill_t{t}"));
+            keys.push(format!("ffn_t{t}")); // LP FFN prefill (full width)
+            keys.push(format!("cache_insert_half_t{t}"));
+            keys.push(format!("cache_insert_full_t{t}"));
+        }
+        for key in keys {
+            self.mesh.compile_all(&key, self.art(&key)?)?;
+        }
+        Ok(())
+    }
+
+    fn upload_weights(&self, w: &Weights) -> Result<()> {
+        // rank 0 additionally owns embedding + head
+        self.mesh.workers[0].store("emb", w.get("emb")?.host())?;
+        self.mesh.workers[0].store("lnf", w.get("lnf")?.host())?;
+        self.mesh.workers[0].store("wout", w.get("wout")?.host())?;
+        for (sidx, stage) in self.stages.iter().enumerate() {
+            match stage {
+                ServeStage::Tp(i) => {
+                    for (rank, worker) in self.mesh.workers.iter().enumerate() {
+                        let attn = w.attn_shard(*i, rank, self.ranks)?;
+                        for (t, field) in
+                            attn.iter().zip(["ln1", "wq", "wk", "wv", "wo"])
+                        {
+                            worker.store(&format!("s{sidx}.{field}"), t.host())?;
+                        }
+                        let ffn = w.ffn_shard(*i, rank, self.ranks)?;
+                        for (t, field) in ffn.iter().zip(["ln2", "wg", "wu", "wd"]) {
+                            worker.store(&format!("s{sidx}.{field}"), t.host())?;
+                        }
+                    }
+                }
+                ServeStage::Lp(a, b) => {
+                    // rank r owns the r-th layer of the pair, full width
+                    for (rank, layer) in [(0usize, *a), (1usize, *b)] {
+                        let worker = &self.mesh.workers[rank];
+                        let attn = w.attn_full(layer)?;
+                        for (t, field) in
+                            attn.iter().zip(["ln1", "wq", "wk", "wv", "wo"])
+                        {
+                            worker.store(&format!("s{sidx}.{field}"), t.host())?;
+                        }
+                        let ffn = w.ffn_full(layer)?;
+                        for (t, field) in ffn.iter().zip(["ln2", "wg", "wu", "wd"]) {
+                            worker.store(&format!("s{sidx}.{field}"), t.host())?;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn cache_width(&self, stage: &ServeStage) -> usize {
+        match stage {
+            ServeStage::Tp(_) => self.entry.config.d_model / self.ranks,
+            ServeStage::Lp(..) => self.entry.config.d_model,
+        }
+    }
+
+    fn init_caches(&self) -> Result<()> {
+        let cfg = &self.entry.config;
+        for (sidx, stage) in self.stages.iter().enumerate() {
+            let w = self.cache_width(stage);
+            let zeros = HostValue::f32(
+                vec![cfg.slots, cfg.ctx, w],
+                vec![0.0; cfg.slots * cfg.ctx * w],
+            );
+            for worker in &self.mesh.workers {
+                worker.store(&format!("kv.k.{sidx}"), zeros.clone())?;
+                worker.store(&format!("kv.v.{sidx}"), zeros.clone())?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Effective depth of the serving plan (stages count).
+    pub fn effective_depth(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// All-reduce operations per decode token: 2 per stage.
+    pub fn all_reduces_per_token(&self) -> usize {
+        self.stages.len() * 2
+    }
+
+    fn weight_args(sidx: usize, fields: &[&str]) -> Vec<ArgRef> {
+        fields
+            .iter()
+            .map(|f| ArgRef::Resident(format!("s{sidx}.{f}")))
+            .collect()
+    }
+
+    /// Prefill `tokens` into `slot`. Returns the logits row for the last
+    /// real token ([V]) — the distribution of the first generated token.
+    pub fn prefill(&self, slot: usize, tokens: &[i32]) -> Result<Vec<f32>> {
+        let cfg = &self.entry.config;
+        let t = crate::text::tokenizer::bucket_for(tokens.len(), &self.buckets)
+            .ok_or_else(|| Error::Serving(format!("prompt too long: {}", tokens.len())))?;
+        let padded = crate::text::tokenizer::pad_to(tokens, t);
+        let d = cfg.d_model;
+
+        // rank 0: embed
+        let mut h = self.mesh.workers[0]
+            .exec(
+                &format!("embed_t{t}"),
+                vec![
+                    ArgRef::Host(HostValue::i32(vec![t], padded)),
+                    ArgRef::Resident("emb".into()),
+                ],
+            )?
+            .remove(0)
+            .into_f32()?;
+
+        for (sidx, stage) in self.stages.iter().enumerate() {
+            let (attn_key, ffn_key, insert_key) = match stage {
+                ServeStage::Tp(_) => (
+                    format!("tpattn_prefill_t{t}"),
+                    format!("tpffn_prefill_t{t}"),
+                    format!("cache_insert_half_t{t}"),
+                ),
+                ServeStage::Lp(..) => (
+                    format!("lpattn_prefill_t{t}"),
+                    format!("ffn_t{t}"),
+                    format!("cache_insert_full_t{t}"),
+                ),
+            };
+            // --- attention partials + KV stripes
+            let calls = (0..self.ranks)
+                .map(|_| {
+                    let mut args =
+                        vec![ArgRef::Host(HostValue::f32(vec![t, d], h.clone()))];
+                    args.extend(Self::weight_args(sidx, &["ln1", "wq", "wk", "wv", "wo"]));
+                    (
+                        attn_key.clone(),
+                        args,
+                        vec![None, Some("tmp.k".to_string()), Some("tmp.v".to_string())],
+                        vec![true, false, false],
+                    )
+                })
+                .collect();
+            let mut outs = self.mesh.exec_all(calls)?;
+            let parts: Vec<HostValue> =
+                outs.iter_mut().map(|o| o.remove(0)).collect();
+            let reduced = self.mesh.all_reduce(parts)?;
+            add_slices(&mut h, reduced.as_f32()?);
+
+            // --- insert KV stripes into the slot (both ranks, k then v)
+            for (stripe, cache) in [("tmp.k", "kv.k"), ("tmp.v", "kv.v")] {
+                let calls = (0..self.ranks)
+                    .map(|_| {
+                        (
+                            insert_key.clone(),
+                            vec![
+                                ArgRef::Resident(format!("{cache}.{sidx}")),
+                                ArgRef::Resident(stripe.to_string()),
+                                ArgRef::Host(HostValue::scalar_i32(slot as i32)),
+                            ],
+                            vec![Some(format!("{cache}.{sidx}"))],
+                            vec![false],
+                        )
+                    })
+                    .collect();
+                self.mesh.exec_all(calls)?;
+            }
+
+            // --- FFN partials
+            let calls = (0..self.ranks)
+                .map(|_| {
+                    let mut args =
+                        vec![ArgRef::Host(HostValue::f32(vec![t, d], h.clone()))];
+                    args.extend(Self::weight_args(sidx, &["ln2", "wg", "wu", "wd"]));
+                    (ffn_key.clone(), args, vec![], vec![true])
+                })
+                .collect();
+            let mut outs = self.mesh.exec_all(calls)?;
+            let parts: Vec<HostValue> =
+                outs.iter_mut().map(|o| o.remove(0)).collect();
+            let reduced = self.mesh.all_reduce(parts)?;
+            add_slices(&mut h, reduced.as_f32()?);
+        }
+
+        // rank 0: logits of the last real token
+        let logits = self.mesh.workers[0]
+            .exec(
+                &format!("logits_t{t}"),
+                vec![
+                    ArgRef::Host(HostValue::f32(vec![t, d], h)),
+                    ArgRef::Resident("lnf".into()),
+                    ArgRef::Resident("wout".into()),
+                ],
+            )?
+            .remove(0)
+            .into_f32()?;
+        let v = cfg.vocab;
+        let last = tokens.len() - 1;
+        Ok(logits[last * v..(last + 1) * v].to_vec())
+    }
+
+    /// One decode step over all S slots. `tokens[s]` / `pos[s]` from the
+    /// slot manager. Returns `[S, V]` logits (row-major).
+    pub fn decode_step(&self, tokens: &[i32], pos: &[i32]) -> Result<Vec<f32>> {
+        let cfg = &self.entry.config;
+        let s = cfg.slots;
+        if tokens.len() != s || pos.len() != s {
+            return Err(Error::Serving(format!(
+                "decode_step wants {s} slot tokens/positions"
+            )));
+        }
+        let d = cfg.d_model;
+        let mut x = self.mesh.workers[0]
+            .exec(
+                "embed_decode",
+                vec![
+                    ArgRef::Host(HostValue::i32(vec![s], tokens.to_vec())),
+                    ArgRef::Resident("emb".into()),
+                ],
+            )?
+            .remove(0)
+            .into_f32()?;
+
+        for (sidx, stage) in self.stages.iter().enumerate() {
+            let (attn_key, ffn_key) = match stage {
+                ServeStage::Tp(_) => ("tpattn_decode", "tpffn_decode"),
+                ServeStage::Lp(..) => ("lpattn_decode", "lpffn_decode"),
+            };
+            let calls = (0..self.ranks)
+                .map(|_| {
+                    let mut args =
+                        vec![ArgRef::Host(HostValue::f32(vec![s, d], x.clone()))];
+                    args.extend(Self::weight_args(sidx, &["ln1", "wq", "wk", "wv", "wo"]));
+                    args.push(ArgRef::Resident(format!("kv.k.{sidx}")));
+                    args.push(ArgRef::Resident(format!("kv.v.{sidx}")));
+                    args.push(ArgRef::Host(HostValue::i32(vec![s], pos.to_vec())));
+                    (
+                        attn_key.to_string(),
+                        args,
+                        vec![
+                            None,
+                            Some(format!("kv.k.{sidx}")),
+                            Some(format!("kv.v.{sidx}")),
+                        ],
+                        vec![true, false, false],
+                    )
+                })
+                .collect();
+            let mut outs = self.mesh.exec_all(calls)?;
+            let parts: Vec<HostValue> = outs.iter_mut().map(|o| o.remove(0)).collect();
+            let reduced = self.mesh.all_reduce(parts)?;
+            add_slices(&mut x, reduced.as_f32()?);
+
+            let calls = (0..self.ranks)
+                .map(|_| {
+                    let mut args =
+                        vec![ArgRef::Host(HostValue::f32(vec![s, d], x.clone()))];
+                    args.extend(Self::weight_args(sidx, &["ln2", "wg", "wu", "wd"]));
+                    (ffn_key.to_string(), args, vec![], vec![true])
+                })
+                .collect();
+            let mut outs = self.mesh.exec_all(calls)?;
+            let parts: Vec<HostValue> = outs.iter_mut().map(|o| o.remove(0)).collect();
+            let reduced = self.mesh.all_reduce(parts)?;
+            add_slices(&mut x, reduced.as_f32()?);
+        }
+
+        self.mesh.workers[0]
+            .exec(
+                "logits_decode",
+                vec![
+                    ArgRef::Host(HostValue::f32(vec![s, d], x)),
+                    ArgRef::Resident("lnf".into()),
+                    ArgRef::Resident("wout".into()),
+                ],
+            )?
+            .remove(0)
+            .into_f32()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::transform;
+    use crate::runtime::Manifest;
+
+    fn quiet() -> InterconnectConfig {
+        InterconnectConfig { enabled: false, ..Default::default() }
+    }
+
+    fn build(plan_fn: impl Fn(usize) -> GraphPlan) -> Option<ServingModel> {
+        let manifest = Manifest::load_default().ok()?;
+        let cfg = manifest.model("td-small").ok()?.config.clone();
+        let weights = Weights::random(&cfg, 7);
+        let plan = plan_fn(cfg.n_layers);
+        ServingModel::new(&manifest, "td-small", &weights, &plan, quiet()).ok()
+    }
+
+    #[test]
+    fn rejects_unservable_plans() {
+        let Ok(manifest) = Manifest::load_default() else { return };
+        let cfg = manifest.model("td-small").unwrap().config.clone();
+        let weights = Weights::random(&cfg, 7);
+        let plan = transform::merge(cfg.n_layers, 2, 5);
+        let r = ServingModel::new(&manifest, "td-small", &weights, &plan, quiet());
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn lp_plan_halves_all_reduces_in_window() {
+        let Some(m) = build(|n| transform::pair_parallel(n, 0, 12, true)) else { return };
+        assert_eq!(m.effective_depth(), 6);
+        assert_eq!(m.all_reduces_per_token(), 12); // vs 24 sequential
+    }
+
+    #[test]
+    fn prefill_then_decode_produces_finite_logits_and_counts_syncs() {
+        let Some(m) = build(|n| transform::pair_parallel(n, 4, 10, true)) else { return };
+        let prompt: Vec<i32> = "the red fox".bytes().map(|b| b as i32).collect();
+        let logits = m.prefill(0, &prompt).unwrap();
+        assert_eq!(logits.len(), m.entry.config.vocab);
+        assert!(logits.iter().all(|x| x.is_finite()));
+
+        m.mesh.metrics.reset();
+        let s = m.entry.config.slots;
+        let mut tokens = vec![0i32; s];
+        let mut pos = vec![0i32; s];
+        tokens[0] = crate::tensor::argmax(&logits) as i32;
+        pos[0] = prompt.len() as i32;
+        let out = m.decode_step(&tokens, &pos).unwrap();
+        assert_eq!(out.len(), s * m.entry.config.vocab);
+        assert!(out.iter().all(|x| x.is_finite()));
+        let (sync_ops, _, _, _) = m.mesh.metrics.snapshot();
+        assert_eq!(sync_ops as usize, m.all_reduces_per_token());
+    }
+}

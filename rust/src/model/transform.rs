@@ -1,0 +1,177 @@
+//! §3 transform builders: produce a [`GraphPlan`] from a base model and a
+//! contiguous window `[s, e)` of layers (the paper's search space).
+
+use crate::model::plan::{GraphPlan, Stage};
+use crate::util::rng::SplitMix64;
+
+/// The untransformed sequential model.
+pub fn sequential(n_layers: usize) -> GraphPlan {
+    GraphPlan { n_layers, stages: (0..n_layers).map(Stage::Seq).collect() }
+}
+
+/// Fig 3a: random re-ordering of the layers in `[s, e)`.
+pub fn shuffle(n_layers: usize, s: usize, e: usize, rng: &mut SplitMix64) -> GraphPlan {
+    let mut window: Vec<usize> = (s..e).collect();
+    rng.shuffle(&mut window);
+    let mut stages = Vec::with_capacity(n_layers);
+    stages.extend((0..s).map(Stage::Seq));
+    stages.extend(window.into_iter().map(Stage::Seq));
+    stages.extend((e..n_layers).map(Stage::Seq));
+    GraphPlan { n_layers, stages }
+}
+
+/// Fig 3b: remove the layers in `[s, e)` entirely.
+pub fn prune(n_layers: usize, s: usize, e: usize) -> GraphPlan {
+    let stages = (0..n_layers).filter(|i| !(s..e).contains(i)).map(Stage::Seq).collect();
+    GraphPlan { n_layers, stages }
+}
+
+/// Fig 3c: weight-average the layers in `[s, e)` into one layer.
+pub fn merge(n_layers: usize, s: usize, e: usize) -> GraphPlan {
+    let mut stages: Vec<Stage> = (0..s).map(Stage::Seq).collect();
+    stages.push(Stage::Merged((s..e).collect()));
+    stages.extend((e..n_layers).map(Stage::Seq));
+    GraphPlan { n_layers, stages }
+}
+
+/// Fig 3d: run the whole stretch `[s, e)` in parallel (PAR approximation).
+pub fn parallel(n_layers: usize, s: usize, e: usize) -> GraphPlan {
+    let mut stages: Vec<Stage> = (0..s).map(Stage::Seq).collect();
+    stages.push(Stage::ParBlock((s..e).collect()));
+    stages.extend((e..n_layers).map(Stage::Seq));
+    GraphPlan { n_layers, stages }
+}
+
+/// Fig 3e + §4: contiguous 2-parallel — consecutive disjoint pairs over
+/// `[s, e)`; an odd trailing layer stays sequential. `lp_numerics` selects
+/// the deployed LP-TP form (true) or the PAR approximation (false) for the
+/// abl3 comparison.
+pub fn pair_parallel(n_layers: usize, s: usize, e: usize, lp_numerics: bool) -> GraphPlan {
+    let mut stages: Vec<Stage> = (0..s).map(Stage::Seq).collect();
+    let mut i = s;
+    while i + 1 < e {
+        if lp_numerics {
+            stages.push(Stage::PairLp(i, i + 1));
+        } else {
+            stages.push(Stage::ParBlock(vec![i, i + 1]));
+        }
+        i += 2;
+    }
+    if i < e {
+        stages.push(Stage::Seq(i));
+    }
+    stages.extend((e..n_layers).map(Stage::Seq));
+    GraphPlan { n_layers, stages }
+}
+
+/// §3 "triplets perform worse" ablation: 3-wide parallel groups over [s,e).
+pub fn triplet_parallel(n_layers: usize, s: usize, e: usize) -> GraphPlan {
+    let mut stages: Vec<Stage> = (0..s).map(Stage::Seq).collect();
+    let mut i = s;
+    while i + 2 < e {
+        stages.push(Stage::ParBlock(vec![i, i + 1, i + 2]));
+        i += 3;
+    }
+    while i < e {
+        stages.push(Stage::Seq(i));
+        i += 1;
+    }
+    stages.extend((e..n_layers).map(Stage::Seq));
+    GraphPlan { n_layers, stages }
+}
+
+/// Experiment-protocol helper: the LP plan for a target effective depth,
+/// using the window-end convention of Fig. 6 (pairs packed so the window
+/// ends at `end`, the PPL-optimal end index per model).
+pub fn lp_for_depth(n_layers: usize, target_depth: usize, end: usize) -> Option<GraphPlan> {
+    if target_depth > n_layers || end > n_layers {
+        return None;
+    }
+    let n_pairs = n_layers - target_depth;
+    let s = end.checked_sub(2 * n_pairs)?;
+    let plan = pair_parallel(n_layers, s, end, true);
+    (plan.effective_depth() == target_depth).then_some(plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequential_is_identity_plan() {
+        let p = sequential(5);
+        p.validate().unwrap();
+        assert_eq!(p.effective_depth(), 5);
+        assert_eq!(p.delta(), 0);
+    }
+
+    #[test]
+    fn shuffle_permutes_only_the_window() {
+        let mut rng = SplitMix64::new(9);
+        let p = shuffle(8, 2, 6, &mut rng);
+        p.validate().unwrap();
+        assert_eq!(p.effective_depth(), 8);
+        let order: Vec<usize> = p.stages.iter().flat_map(|s| s.layers()).collect();
+        assert_eq!(&order[..2], &[0, 1]);
+        assert_eq!(&order[6..], &[6, 7]);
+        let mut win = order[2..6].to_vec();
+        win.sort_unstable();
+        assert_eq!(win, vec![2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn prune_drops_the_window() {
+        let p = prune(6, 2, 4);
+        p.validate().unwrap();
+        assert_eq!(p.effective_depth(), 4);
+        let order: Vec<usize> = p.stages.iter().flat_map(|s| s.layers()).collect();
+        assert_eq!(order, vec![0, 1, 4, 5]);
+    }
+
+    #[test]
+    fn merge_collapses_to_one_stage() {
+        let p = merge(6, 1, 4);
+        p.validate().unwrap();
+        assert_eq!(p.effective_depth(), 4);
+        assert!(matches!(&p.stages[1], Stage::Merged(v) if v == &vec![1, 2, 3]));
+    }
+
+    #[test]
+    fn pair_parallel_matches_paper_example() {
+        // layers {15..19}: pairs (15,16), (17,18), then 19 sequential
+        let p = pair_parallel(32, 15, 20, true);
+        p.validate().unwrap();
+        assert!(matches!(p.stages[15], Stage::PairLp(15, 16)));
+        assert!(matches!(p.stages[16], Stage::PairLp(17, 18)));
+        assert!(matches!(p.stages[17], Stage::Seq(19)));
+        // paper: LP from layer 4 to 29 on a 32-layer model → depth 19
+        let p = pair_parallel(32, 4, 29, true);
+        assert_eq!(p.effective_depth(), 32 - 12); // 12 pairs of the 25-window
+        assert_eq!(p.delta(), 24);
+    }
+
+    #[test]
+    fn triplets_group_by_three() {
+        let p = triplet_parallel(9, 0, 9);
+        p.validate().unwrap();
+        assert_eq!(p.effective_depth(), 3);
+    }
+
+    #[test]
+    fn lp_for_depth_hits_target() {
+        for depth in [10, 9, 8, 7] {
+            let p = lp_for_depth(12, depth, 11).unwrap();
+            p.validate().unwrap();
+            assert_eq!(p.effective_depth(), depth, "depth {depth}");
+        }
+        assert!(lp_for_depth(12, 3, 11).is_none()); // window would underflow
+    }
+
+    #[test]
+    fn par_numerics_flag_switches_stage_kind() {
+        let a = pair_parallel(6, 0, 4, true);
+        let b = pair_parallel(6, 0, 4, false);
+        assert!(matches!(a.stages[0], Stage::PairLp(0, 1)));
+        assert!(matches!(&b.stages[0], Stage::ParBlock(v) if v == &vec![0, 1]));
+    }
+}

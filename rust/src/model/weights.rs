@@ -1,0 +1,380 @@
+//! Weight store: `.tdw` reader (format defined in `python/compile/params.py`)
+//! plus the shard/merge views the executors need.
+
+use std::collections::HashMap;
+use std::io::Read;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::runtime::pjrt::HostValue;
+use crate::runtime::ModelConfig;
+
+/// A named tensor: shape + row-major f32 data.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn host(&self) -> HostValue {
+        HostValue::f32(self.shape.clone(), self.data.clone())
+    }
+
+    /// Columns `[c0, c1)` of a 2-D tensor (TP sharding of W_q/W_k/W_v/W_g/W_u).
+    pub fn col_slice(&self, c0: usize, c1: usize) -> Tensor {
+        assert_eq!(self.shape.len(), 2);
+        let (r, c) = (self.shape[0], self.shape[1]);
+        assert!(c1 <= c && c0 < c1, "cols [{c0},{c1}) of {c}");
+        let mut data = Vec::with_capacity(r * (c1 - c0));
+        for row in 0..r {
+            data.extend_from_slice(&self.data[row * c + c0..row * c + c1]);
+        }
+        Tensor { shape: vec![r, c1 - c0], data }
+    }
+
+    /// Rows `[r0, r1)` of a 2-D tensor (TP sharding of W_o/W_d).
+    pub fn row_slice(&self, r0: usize, r1: usize) -> Tensor {
+        assert_eq!(self.shape.len(), 2);
+        let c = self.shape[1];
+        assert!(r1 <= self.shape[0] && r0 < r1);
+        Tensor { shape: vec![r1 - r0, c], data: self.data[r0 * c..r1 * c].to_vec() }
+    }
+
+    /// Element-wise average with another tensor (the §3 merge transform).
+    pub fn average(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| 0.5 * (a + b))
+            .collect();
+        Tensor { shape: self.shape.clone(), data }
+    }
+}
+
+/// Per-layer weight field names, in artifact argument order.
+pub const ATTN_FIELDS: [&str; 5] = ["ln1", "wq", "wk", "wv", "wo"];
+pub const FFN_FIELDS: [&str; 4] = ["ln2", "wg", "wu", "wd"];
+
+#[derive(Clone)]
+pub struct Weights {
+    pub cfg: ModelConfig,
+    tensors: HashMap<String, Tensor>,
+}
+
+impl Weights {
+    /// Load `<ckpt_dir>/weights.tdw`, validating against `cfg`.
+    pub fn load(ckpt_dir: &Path, cfg: &ModelConfig) -> Result<Weights> {
+        let path = ckpt_dir.join("weights.tdw");
+        let mut f = std::fs::File::open(&path).map_err(|e| {
+            Error::Weights(format!(
+                "cannot open {} (run `make models` first): {e}",
+                path.display()
+            ))
+        })?;
+        let mut buf = Vec::new();
+        f.read_to_end(&mut buf)?;
+        let tensors = parse_tdw(&buf)?;
+        let w = Weights { cfg: cfg.clone(), tensors };
+        w.validate()?;
+        Ok(w)
+    }
+
+    pub fn from_tensors(cfg: ModelConfig, tensors: HashMap<String, Tensor>) -> Weights {
+        Weights { cfg, tensors }
+    }
+
+    /// Synthetic random weights (tests / benches without a checkpoint).
+    pub fn random(cfg: &ModelConfig, seed: u64) -> Weights {
+        let mut rng = crate::util::rng::SplitMix64::new(seed);
+        let mut tensors = HashMap::new();
+        let (d, f, v) = (cfg.d_model, cfg.d_ff, cfg.vocab);
+        let mut mk = |name: String, shape: Vec<usize>, scale: f32| {
+            let n: usize = shape.iter().product();
+            let data: Vec<f32> = (0..n)
+                .map(|_| (rng.next_f64() as f32 - 0.5) * 2.0 * scale)
+                .collect();
+            tensors.insert(name, Tensor { shape, data });
+        };
+        mk("emb".into(), vec![v, d], 0.02);
+        mk("lnf".into(), vec![d], 1.0);
+        mk("wout".into(), vec![d, v], 0.05);
+        let ws = 1.0 / (d as f32).sqrt();
+        for i in 0..cfg.n_layers {
+            mk(format!("layers.{i}.ln1"), vec![d], 1.0);
+            mk(format!("layers.{i}.wq"), vec![d, d], ws);
+            mk(format!("layers.{i}.wk"), vec![d, d], ws);
+            mk(format!("layers.{i}.wv"), vec![d, d], ws);
+            mk(format!("layers.{i}.wo"), vec![d, d], ws * 0.2);
+            mk(format!("layers.{i}.ln2"), vec![d], 1.0);
+            mk(format!("layers.{i}.wg"), vec![d, f], ws);
+            mk(format!("layers.{i}.wu"), vec![d, f], ws);
+            mk(format!("layers.{i}.wd"), vec![f, d], ws * 0.2);
+        }
+        Weights { cfg: cfg.clone(), tensors }
+    }
+
+    fn validate(&self) -> Result<()> {
+        let (d, f, v) = (self.cfg.d_model, self.cfg.d_ff, self.cfg.vocab);
+        let expect: &[(&str, Vec<usize>)] =
+            &[("emb", vec![v, d]), ("lnf", vec![d]), ("wout", vec![d, v])];
+        for (name, shape) in expect {
+            let t = self.get(name)?;
+            if &t.shape != shape {
+                return Err(Error::Weights(format!(
+                    "{name}: expected {shape:?}, got {:?}",
+                    t.shape
+                )));
+            }
+        }
+        for i in 0..self.cfg.n_layers {
+            for (field, shape) in [
+                ("ln1", vec![d]),
+                ("wq", vec![d, d]),
+                ("wk", vec![d, d]),
+                ("wv", vec![d, d]),
+                ("wo", vec![d, d]),
+                ("ln2", vec![d]),
+                ("wg", vec![d, f]),
+                ("wu", vec![d, f]),
+                ("wd", vec![f, d]),
+            ] {
+                let t = self.layer(i, field)?;
+                if t.shape != shape {
+                    return Err(Error::Weights(format!(
+                        "layers.{i}.{field}: expected {shape:?}, got {:?}",
+                        t.shape
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| Error::Weights(format!("missing tensor `{name}`")))
+    }
+
+    pub fn layer(&self, i: usize, field: &str) -> Result<&Tensor> {
+        self.get(&format!("layers.{i}.{field}"))
+    }
+
+    /// Merged (weight-averaged) layer tensors — the §3 merge transform.
+    /// Returns the 9 per-layer tensors of the averaged stack.
+    pub fn merged_layer(&self, layers: &[usize]) -> Result<HashMap<String, Tensor>> {
+        assert!(!layers.is_empty());
+        let fields = ["ln1", "wq", "wk", "wv", "wo", "ln2", "wg", "wu", "wd"];
+        let mut out = HashMap::new();
+        for f in fields {
+            let mut acc = self.layer(layers[0], f)?.clone();
+            for &l in &layers[1..] {
+                let t = self.layer(l, f)?;
+                for (a, b) in acc.data.iter_mut().zip(&t.data) {
+                    *a += *b;
+                }
+            }
+            let n = layers.len() as f32;
+            for a in acc.data.iter_mut() {
+                *a /= n;
+            }
+            out.insert(f.to_string(), acc);
+        }
+        Ok(out)
+    }
+
+    /// TP shard of layer `i` for `rank` of `g`: attention columns/rows.
+    pub fn attn_shard(&self, i: usize, rank: usize, g: usize) -> Result<Vec<Tensor>> {
+        let d = self.cfg.d_model;
+        let w = d / g;
+        let (c0, c1) = (rank * w, (rank + 1) * w);
+        Ok(vec![
+            self.layer(i, "ln1")?.clone(),
+            self.layer(i, "wq")?.col_slice(c0, c1),
+            self.layer(i, "wk")?.col_slice(c0, c1),
+            self.layer(i, "wv")?.col_slice(c0, c1),
+            self.layer(i, "wo")?.row_slice(c0, c1),
+        ])
+    }
+
+    pub fn ffn_shard(&self, i: usize, rank: usize, g: usize) -> Result<Vec<Tensor>> {
+        let f = self.cfg.d_ff;
+        let w = f / g;
+        let (c0, c1) = (rank * w, (rank + 1) * w);
+        Ok(vec![
+            self.layer(i, "ln2")?.clone(),
+            self.layer(i, "wg")?.col_slice(c0, c1),
+            self.layer(i, "wu")?.col_slice(c0, c1),
+            self.layer(i, "wd")?.row_slice(c0, c1),
+        ])
+    }
+
+    /// Full-width layer tensors in artifact order (LP paths, scoring).
+    pub fn attn_full(&self, i: usize) -> Result<Vec<Tensor>> {
+        Ok(ATTN_FIELDS
+            .iter()
+            .map(|f| self.layer(i, f).cloned())
+            .collect::<Result<_>>()?)
+    }
+
+    pub fn ffn_full(&self, i: usize) -> Result<Vec<Tensor>> {
+        Ok(FFN_FIELDS
+            .iter()
+            .map(|f| self.layer(i, f).cloned())
+            .collect::<Result<_>>()?)
+    }
+}
+
+fn parse_tdw(buf: &[u8]) -> Result<HashMap<String, Tensor>> {
+    let mut p = 0usize;
+    let take = |p: &mut usize, n: usize| -> Result<&[u8]> {
+        if *p + n > buf.len() {
+            return Err(Error::Weights("truncated .tdw".into()));
+        }
+        let s = &buf[*p..*p + n];
+        *p += n;
+        Ok(s)
+    };
+    if take(&mut p, 4)? != b"TDW1" {
+        return Err(Error::Weights("bad magic (not a .tdw file)".into()));
+    }
+    let count = u32::from_le_bytes(take(&mut p, 4)?.try_into().unwrap());
+    let mut out = HashMap::new();
+    for _ in 0..count {
+        let nlen = u16::from_le_bytes(take(&mut p, 2)?.try_into().unwrap()) as usize;
+        let name = String::from_utf8(take(&mut p, nlen)?.to_vec())
+            .map_err(|_| Error::Weights("bad tensor name".into()))?;
+        let dt = take(&mut p, 1)?[0];
+        let ndim = take(&mut p, 1)?[0] as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(u32::from_le_bytes(take(&mut p, 4)?.try_into().unwrap()) as usize);
+        }
+        let nbytes = u64::from_le_bytes(take(&mut p, 8)?.try_into().unwrap()) as usize;
+        let raw = take(&mut p, nbytes)?;
+        if dt != 0 {
+            return Err(Error::Weights(format!("{name}: only f32 weights supported")));
+        }
+        let n: usize = shape.iter().product();
+        if n * 4 != nbytes {
+            return Err(Error::Weights(format!("{name}: shape/bytes mismatch")));
+        }
+        let data: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        out.insert(name, Tensor { shape, data });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            vocab: 260,
+            d_model: 8,
+            n_layers: 2,
+            n_heads: 2,
+            head_dim: 4,
+            d_ff: 16,
+            ctx: 16,
+            slots: 2,
+        }
+    }
+
+    #[test]
+    fn random_weights_validate() {
+        let w = Weights::random(&tiny_cfg(), 1);
+        w.validate().unwrap();
+        assert_eq!(w.layer(0, "wq").unwrap().shape, vec![8, 8]);
+    }
+
+    #[test]
+    fn col_and_row_slices() {
+        let t = Tensor {
+            shape: vec![2, 4],
+            data: vec![0., 1., 2., 3., 10., 11., 12., 13.],
+        };
+        let c = t.col_slice(1, 3);
+        assert_eq!(c.shape, vec![2, 2]);
+        assert_eq!(c.data, vec![1., 2., 11., 12.]);
+        let r = t.row_slice(1, 2);
+        assert_eq!(r.shape, vec![1, 4]);
+        assert_eq!(r.data, vec![10., 11., 12., 13.]);
+    }
+
+    #[test]
+    fn shards_partition_the_tensor() {
+        let w = Weights::random(&tiny_cfg(), 2);
+        let full = w.layer(0, "wq").unwrap();
+        let s0 = w.attn_shard(0, 0, 2).unwrap();
+        let s1 = w.attn_shard(0, 1, 2).unwrap();
+        // wq is index 1 in ATTN_FIELDS order
+        let (a, b) = (&s0[1], &s1[1]);
+        assert_eq!(a.shape, vec![8, 4]);
+        for row in 0..8 {
+            for col in 0..4 {
+                assert_eq!(a.data[row * 4 + col], full.data[row * 8 + col]);
+                assert_eq!(b.data[row * 4 + col], full.data[row * 8 + 4 + col]);
+            }
+        }
+    }
+
+    #[test]
+    fn merge_is_elementwise_average() {
+        let w = Weights::random(&tiny_cfg(), 3);
+        let m = w.merged_layer(&[0, 1]).unwrap();
+        let a = w.layer(0, "wq").unwrap();
+        let b = w.layer(1, "wq").unwrap();
+        for (i, v) in m["wq"].data.iter().enumerate() {
+            assert!((v - 0.5 * (a.data[i] + b.data[i])).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn tdw_parser_roundtrips_via_python_format() {
+        // hand-build a tiny .tdw blob matching params.py layout
+        let mut blob: Vec<u8> = b"TDW1".to_vec();
+        blob.extend(1u32.to_le_bytes());
+        let name = b"x";
+        blob.extend((name.len() as u16).to_le_bytes());
+        blob.extend(name);
+        blob.push(0); // f32
+        blob.push(2); // ndim
+        blob.extend(2u32.to_le_bytes());
+        blob.extend(3u32.to_le_bytes());
+        let data: Vec<f32> = vec![1., 2., 3., 4., 5., 6.];
+        blob.extend((24u64).to_le_bytes());
+        for v in &data {
+            blob.extend(v.to_le_bytes());
+        }
+        let out = parse_tdw(&blob).unwrap();
+        assert_eq!(out["x"].shape, vec![2, 3]);
+        assert_eq!(out["x"].data, data);
+    }
+
+    #[test]
+    fn tdw_parser_rejects_garbage() {
+        assert!(parse_tdw(b"NOPE").is_err());
+        assert!(parse_tdw(b"TDW1\x01\x00\x00\x00").is_err());
+    }
+
+    #[test]
+    fn real_checkpoint_loads_if_present() {
+        let root = crate::repo_root();
+        let Ok(m) = crate::runtime::Manifest::load_default() else { return };
+        let dir = root.join("checkpoints/td-small");
+        if dir.join("weights.tdw").exists() {
+            let cfg = &m.model("td-small").unwrap().config;
+            let w = Weights::load(&dir, cfg).unwrap();
+            assert_eq!(w.get("emb").unwrap().shape, vec![cfg.vocab, cfg.d_model]);
+        }
+    }
+}

@@ -1,0 +1,58 @@
+//! Host-side collective combinators (the data plane of the simulated
+//! all-reduce; the control plane — barriers and cost — lives in the mesh).
+
+use crate::runtime::pjrt::HostValue;
+use crate::tensor::add_slices;
+use crate::error::{Error, Result};
+
+/// Element-wise sum of per-rank f32 partials: the all-reduce combinator for
+/// tensor parallelism (partial output projections sum to the full-rank
+/// output — Megatron §3 / paper Fig. 5).
+pub fn all_reduce_sum(parts: Vec<HostValue>) -> Result<HostValue> {
+    let mut it = parts.into_iter();
+    let first = it.next().ok_or_else(|| Error::msg("all_reduce of zero ranks"))?;
+    let (shape, mut acc) = match first {
+        HostValue::F32 { shape, data } => (shape, data),
+        _ => return Err(Error::msg("all_reduce expects f32")),
+    };
+    for p in it {
+        let d = p.as_f32()?;
+        if p.shape() != shape.as_slice() {
+            return Err(Error::msg(format!(
+                "all_reduce shape mismatch: {:?} vs {:?}",
+                p.shape(),
+                shape
+            )));
+        }
+        add_slices(&mut acc, d);
+    }
+    Ok(HostValue::F32 { shape, data: acc })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sums_ranks() {
+        let a = HostValue::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = HostValue::f32(vec![2, 2], vec![10.0, 20.0, 30.0, 40.0]);
+        let r = all_reduce_sum(vec![a, b]).unwrap();
+        assert_eq!(r.as_f32().unwrap(), &[11.0, 22.0, 33.0, 44.0]);
+    }
+
+    #[test]
+    fn single_rank_is_identity() {
+        let a = HostValue::f32(vec![3], vec![1.0, 2.0, 3.0]);
+        let r = all_reduce_sum(vec![a.clone()]).unwrap();
+        assert_eq!(r.as_f32().unwrap(), a.as_f32().unwrap());
+    }
+
+    #[test]
+    fn rejects_mismatch_and_empty() {
+        let a = HostValue::f32(vec![2], vec![1.0, 2.0]);
+        let b = HostValue::f32(vec![3], vec![1.0, 2.0, 3.0]);
+        assert!(all_reduce_sum(vec![a, b]).is_err());
+        assert!(all_reduce_sum(vec![]).is_err());
+    }
+}

@@ -1,0 +1,179 @@
+//! The mesh: a group of simulated accelerators plus the collective layer.
+//!
+//! `exec_all` dispatches one executable call per rank and joins — the ranks
+//! run concurrently on their own threads (the real parallelism in this
+//! testbed). `all_reduce` is the synchronization point the paper counts:
+//! it joins the ranks' partial outputs, charges the α–β interconnect cost,
+//! sums, and bumps the sync metrics that `table3_profile` reports.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use crate::config::InterconnectConfig;
+use crate::error::{Error, Result};
+use crate::parallel::collective::all_reduce_sum;
+use crate::parallel::simnet::SimNet;
+use crate::parallel::worker::{ArgRef, WorkerHandle};
+use crate::runtime::pjrt::HostValue;
+
+#[derive(Default, Debug)]
+pub struct MeshMetrics {
+    /// Number of all-reduce operations performed.
+    pub sync_ops: AtomicU64,
+    /// Wall time spent in all-reduce (modelled interconnect + host sum), ns.
+    pub sync_ns: AtomicU64,
+    /// Wall time spent in `exec_all` (shard compute, incl. host<->device), ns.
+    pub compute_ns: AtomicU64,
+    /// Number of exec_all dispatches.
+    pub exec_ops: AtomicU64,
+}
+
+impl MeshMetrics {
+    pub fn reset(&self) {
+        self.sync_ops.store(0, Ordering::Relaxed);
+        self.sync_ns.store(0, Ordering::Relaxed);
+        self.compute_ns.store(0, Ordering::Relaxed);
+        self.exec_ops.store(0, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> (u64, f64, f64, u64) {
+        (
+            self.sync_ops.load(Ordering::Relaxed),
+            self.sync_ns.load(Ordering::Relaxed) as f64 / 1e6,
+            self.compute_ns.load(Ordering::Relaxed) as f64 / 1e6,
+            self.exec_ops.load(Ordering::Relaxed),
+        )
+    }
+}
+
+pub struct Mesh {
+    pub workers: Vec<WorkerHandle>,
+    pub net: SimNet,
+    pub metrics: MeshMetrics,
+}
+
+impl Mesh {
+    pub fn new(n_ranks: usize, net_cfg: InterconnectConfig) -> Mesh {
+        let workers = (0..n_ranks).map(WorkerHandle::spawn).collect();
+        Mesh { workers, net: SimNet::new(net_cfg), metrics: MeshMetrics::default() }
+    }
+
+    pub fn ranks(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Compile `key` from `path` on every rank.
+    pub fn compile_all(&self, key: &str, path: &std::path::Path) -> Result<()> {
+        for w in &self.workers {
+            w.compile(key, path.to_path_buf())?;
+        }
+        Ok(())
+    }
+
+    /// Run one call per rank concurrently; returns per-rank outputs.
+    /// `calls[r]` = (executable key, args, persist, fetch) for rank r.
+    #[allow(clippy::type_complexity)]
+    pub fn exec_all(
+        &self,
+        calls: Vec<(String, Vec<ArgRef>, Vec<Option<String>>, Vec<bool>)>,
+    ) -> Result<Vec<Vec<HostValue>>> {
+        if calls.len() != self.workers.len() {
+            return Err(Error::msg(format!(
+                "exec_all: {} calls for {} ranks",
+                calls.len(),
+                self.workers.len()
+            )));
+        }
+        let t0 = Instant::now();
+        let mut rxs = Vec::with_capacity(calls.len());
+        for (w, (key, args, persist, fetch)) in self.workers.iter().zip(calls) {
+            rxs.push(w.exec_async(&key, args, persist, fetch)?);
+        }
+        let mut outs = Vec::with_capacity(rxs.len());
+        for rx in rxs {
+            outs.push(
+                rx.recv()
+                    .map_err(|_| Error::msg("worker died"))?
+                    .map_err(Error::Msg)?,
+            );
+        }
+        self.metrics
+            .compute_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        self.metrics.exec_ops.fetch_add(1, Ordering::Relaxed);
+        Ok(outs)
+    }
+
+    /// All-reduce (sum) of per-rank partials: charges the interconnect cost
+    /// model and the metrics, returns the combined tensor.
+    pub fn all_reduce(&self, parts: Vec<HostValue>) -> Result<HostValue> {
+        let t0 = Instant::now();
+        let bytes = parts.first().map(|p| p.num_bytes()).unwrap_or(0);
+        let g = parts.len();
+        let out = all_reduce_sum(parts)?;
+        self.net.charge_all_reduce(bytes, g);
+        self.metrics.sync_ops.fetch_add(1, Ordering::Relaxed);
+        self.metrics
+            .sync_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quiet_net() -> InterconnectConfig {
+        InterconnectConfig { enabled: false, ..Default::default() }
+    }
+
+    #[test]
+    fn mesh_spawns_and_counts_reduces() {
+        let mesh = Mesh::new(2, quiet_net());
+        assert_eq!(mesh.ranks(), 2);
+        let a = HostValue::f32(vec![4], vec![1.0; 4]);
+        let b = HostValue::f32(vec![4], vec![2.0; 4]);
+        let r = mesh.all_reduce(vec![a, b]).unwrap();
+        assert_eq!(r.as_f32().unwrap(), &[3.0; 4]);
+        let (ops, _, _, _) = mesh.metrics.snapshot();
+        assert_eq!(ops, 1);
+    }
+
+    #[test]
+    fn exec_all_arity_checked() {
+        let mesh = Mesh::new(2, quiet_net());
+        assert!(mesh.exec_all(vec![]).is_err());
+    }
+
+    #[test]
+    fn simnet_cost_is_charged() {
+        let mesh = Mesh::new(
+            1,
+            InterconnectConfig { alpha_s: 500e-6, beta_bytes_per_s: 1e12, enabled: true },
+        );
+        // g=1 in all_reduce parts => free even though enabled
+        let t = Instant::now();
+        mesh.all_reduce(vec![HostValue::f32(vec![1], vec![0.0])]).unwrap();
+        assert!(t.elapsed() < std::time::Duration::from_micros(400));
+        // two parts => alpha charged
+        let t = Instant::now();
+        mesh.all_reduce(vec![
+            HostValue::f32(vec![1], vec![0.0]),
+            HostValue::f32(vec![1], vec![0.0]),
+        ])
+        .unwrap();
+        assert!(t.elapsed() >= std::time::Duration::from_micros(500));
+    }
+
+    #[test]
+    fn metrics_reset() {
+        let mesh = Mesh::new(1, quiet_net());
+        mesh.all_reduce(vec![HostValue::f32(vec![1], vec![1.0])]).unwrap();
+        mesh.metrics.reset();
+        let (ops, sync_ms, comp_ms, execs) = mesh.metrics.snapshot();
+        assert_eq!((ops, execs), (0, 0));
+        assert_eq!(sync_ms, 0.0);
+        assert_eq!(comp_ms, 0.0);
+    }
+}

@@ -1,0 +1,23 @@
+//! Simulated multi-accelerator tensor-parallel runtime.
+//!
+//! The paper's testbed is 2×A100 over NVLink with NCCL all-reduce; this
+//! environment has neither, so we build the closest substrate that
+//! exercises the same code path (DESIGN.md §Substitutions):
+//!
+//! * each *worker* is an OS thread owning its own PJRT CPU client, its own
+//!   compiled executables and its own resident weight shards — the strict
+//!   isolation a real device would impose;
+//! * collectives are real synchronization points (both workers must finish
+//!   their shard before the sum is formed) plus an α–β interconnect cost
+//!   model ([`simnet`]) standing in for NVLink/NCCL latency+bandwidth;
+//! * the mesh counts every collective and its simulated cost — the
+//!   quantity the paper's Table 3 attributes the LP speedup to.
+
+pub mod collective;
+pub mod mesh;
+pub mod simnet;
+pub mod worker;
+
+pub use mesh::Mesh;
+pub use simnet::SimNet;
+pub use worker::{ArgRef, WorkerHandle};

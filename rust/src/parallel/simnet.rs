@@ -1,0 +1,108 @@
+//! α–β interconnect cost model.
+//!
+//! A ring all-reduce of `n` bytes over `g` accelerators costs
+//!     α + 2·(g−1)/g · n / β
+//! (latency term + two passes over the payload at link bandwidth). The
+//! defaults are calibrated in EXPERIMENTS.md so that the sync:compute ratio
+//! of two TP decoder layers lands near the paper's Table 3; sweeping α/β in
+//! `benches/bench_allreduce.rs` maps out when LP's halved sync count pays.
+
+use std::time::{Duration, Instant};
+
+use crate::config::InterconnectConfig;
+
+#[derive(Clone, Debug)]
+pub struct SimNet {
+    pub cfg: InterconnectConfig,
+}
+
+impl SimNet {
+    pub fn new(cfg: InterconnectConfig) -> SimNet {
+        SimNet { cfg }
+    }
+
+    pub fn disabled() -> SimNet {
+        SimNet { cfg: InterconnectConfig { enabled: false, ..Default::default() } }
+    }
+
+    /// Modelled wall-clock cost of one all-reduce of `bytes` over `g` ranks.
+    pub fn all_reduce_cost(&self, bytes: usize, g: usize) -> Duration {
+        if !self.cfg.enabled || g <= 1 {
+            return Duration::ZERO;
+        }
+        let ring = 2.0 * (g as f64 - 1.0) / g as f64;
+        let secs = self.cfg.alpha_s + ring * bytes as f64 / self.cfg.beta_bytes_per_s;
+        Duration::from_secs_f64(secs)
+    }
+
+    /// Block the caller for `d` with sub-sleep-granularity precision:
+    /// coarse sleep for the bulk, spin for the tail (Linux nanosleep
+    /// overshoots by ~50µs which would swamp a 30µs α).
+    pub fn block_for(&self, d: Duration) {
+        if d.is_zero() {
+            return;
+        }
+        let start = Instant::now();
+        if d > Duration::from_millis(2) {
+            // coarse sleep for the bulk; Linux nanosleep can overshoot by
+            // ~100µs+ under load, so leave a 1ms spin tail.
+            std::thread::sleep(d - Duration::from_millis(1));
+        }
+        while start.elapsed() < d {
+            std::hint::spin_loop();
+        }
+    }
+
+    /// Convenience: model + apply the cost; returns the modelled duration.
+    pub fn charge_all_reduce(&self, bytes: usize, g: usize) -> Duration {
+        let d = self.all_reduce_cost(bytes, g);
+        self.block_for(d);
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn net(alpha_us: f64, beta_gbs: f64) -> SimNet {
+        SimNet::new(InterconnectConfig {
+            alpha_s: alpha_us * 1e-6,
+            beta_bytes_per_s: beta_gbs * 1e9,
+            enabled: true,
+        })
+    }
+
+    #[test]
+    fn cost_model_formula() {
+        let n = net(10.0, 100.0);
+        // 1 MB over 2 ranks: 10µs + (2·1/2)·1e6/1e11 s = 10µs + 10µs
+        let d = n.all_reduce_cost(1_000_000, 2);
+        assert!((d.as_secs_f64() - 20e-6).abs() < 1e-9, "{d:?}");
+    }
+
+    #[test]
+    fn single_rank_and_disabled_are_free() {
+        assert_eq!(net(10.0, 1.0).all_reduce_cost(1 << 20, 1), Duration::ZERO);
+        assert_eq!(SimNet::disabled().all_reduce_cost(1 << 20, 2), Duration::ZERO);
+    }
+
+    #[test]
+    fn cost_scales_with_bytes() {
+        let n = net(5.0, 10.0);
+        assert!(n.all_reduce_cost(1 << 22, 2) > n.all_reduce_cost(1 << 12, 2));
+    }
+
+    #[test]
+    fn block_for_is_accurate() {
+        let n = net(0.0, 1.0);
+        for target_us in [30u64, 150, 600] {
+            let d = Duration::from_micros(target_us);
+            let t = Instant::now();
+            n.block_for(d);
+            let el = t.elapsed();
+            assert!(el >= d, "undershoot: {el:?} < {d:?}");
+            assert!(el < d + Duration::from_millis(2), "overshoot: {el:?} for {d:?}");
+        }
+    }
+}

@@ -1,0 +1,297 @@
+//! Worker thread = one simulated accelerator.
+//!
+//! Owns a private PJRT CPU client, compiled executables and resident weight
+//! buffers (uploaded once at init — weights never cross the channel on the
+//! hot path). Commands arrive over an mpsc channel; results return over a
+//! per-call reply channel. The PJRT wrapper types are not `Send`, so
+//! everything device-related is constructed inside the thread.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use xla::PjRtBuffer;
+
+use crate::error::{Error, Result};
+use crate::runtime::pjrt::{Engine, HostValue};
+
+/// Argument to a worker execution.
+#[derive(Clone, Debug)]
+pub enum ArgRef {
+    /// Fresh host data, uploaded for this call (activations, positions).
+    Host(HostValue),
+    /// A named buffer resident on the worker (weights, persisted states).
+    Resident(String),
+}
+
+type Reply = Result<Vec<HostValue>>;
+
+pub enum Cmd {
+    /// Upload a named resident buffer (weight shard / initial cache).
+    Store { name: String, value: HostValue, done: Sender<std::result::Result<(), String>> },
+    /// Drop a named resident buffer.
+    Evict { name: String },
+    /// Pre-compile an executable.
+    Compile { key: String, path: PathBuf, done: Sender<std::result::Result<(), String>> },
+    /// Execute `key` with args; optionally persist outputs under names
+    /// (`persist[i] = Some(name)` keeps output i on the device and returns
+    /// it to the caller only if `fetch[i]`).
+    Exec {
+        key: String,
+        args: Vec<ArgRef>,
+        persist: Vec<Option<String>>,
+        fetch: Vec<bool>,
+        reply: Sender<std::result::Result<Vec<HostValue>, String>>,
+    },
+    Shutdown,
+}
+
+pub struct WorkerHandle {
+    pub rank: usize,
+    tx: Sender<Cmd>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl WorkerHandle {
+    /// Spawn a worker. Executables are compiled lazily on first use or
+    /// eagerly via [`WorkerHandle::compile`].
+    pub fn spawn(rank: usize) -> WorkerHandle {
+        let (tx, rx) = channel::<Cmd>();
+        let join = std::thread::Builder::new()
+            .name(format!("accel{rank}"))
+            .spawn(move || worker_main(rx))
+            .expect("spawn worker");
+        WorkerHandle { rank, tx, join: Some(join) }
+    }
+
+    pub fn store(&self, name: &str, value: HostValue) -> Result<()> {
+        let (dtx, drx) = channel();
+        self.tx
+            .send(Cmd::Store { name: name.to_string(), value, done: dtx })
+            .map_err(|_| Error::msg("worker gone"))?;
+        drx.recv().map_err(|_| Error::msg("worker died"))?.map_err(Error::Msg)
+    }
+
+    pub fn evict(&self, name: &str) {
+        let _ = self.tx.send(Cmd::Evict { name: name.to_string() });
+    }
+
+    pub fn compile(&self, key: &str, path: PathBuf) -> Result<()> {
+        let (dtx, drx) = channel();
+        self.tx
+            .send(Cmd::Compile { key: key.to_string(), path, done: dtx })
+            .map_err(|_| Error::msg("worker gone"))?;
+        drx.recv().map_err(|_| Error::msg("worker died"))?.map_err(Error::Msg)
+    }
+
+    /// Fire an execution; returns the reply receiver immediately so the
+    /// coordinator can dispatch to all ranks before joining (true overlap).
+    pub fn exec_async(
+        &self,
+        key: &str,
+        args: Vec<ArgRef>,
+        persist: Vec<Option<String>>,
+        fetch: Vec<bool>,
+    ) -> Result<Receiver<std::result::Result<Vec<HostValue>, String>>> {
+        let (rtx, rrx) = channel();
+        self.tx
+            .send(Cmd::Exec { key: key.to_string(), args, persist, fetch, reply: rtx })
+            .map_err(|_| Error::msg("worker gone"))?;
+        Ok(rrx)
+    }
+
+    /// Synchronous execute-and-fetch-everything.
+    pub fn exec(&self, key: &str, args: Vec<ArgRef>) -> Reply {
+        let rx = self.exec_async(key, args, vec![], vec![])?;
+        rx.recv().map_err(|_| Error::msg("worker died"))?.map_err(Error::Msg)
+    }
+}
+
+impl Drop for WorkerHandle {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Cmd::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn worker_main(rx: Receiver<Cmd>) {
+    let engine = match Engine::cpu() {
+        Ok(e) => e,
+        Err(e) => {
+            // Fail every request with the boot error.
+            for cmd in rx {
+                match cmd {
+                    Cmd::Store { done, .. } => {
+                        let _ = done.send(Err(format!("engine boot failed: {e}")));
+                    }
+                    Cmd::Compile { done, .. } => {
+                        let _ = done.send(Err(format!("engine boot failed: {e}")));
+                    }
+                    Cmd::Exec { reply, .. } => {
+                        let _ = reply.send(Err(format!("engine boot failed: {e}")));
+                    }
+                    Cmd::Evict { .. } => {}
+                    Cmd::Shutdown => return,
+                }
+            }
+            return;
+        }
+    };
+    let mut resident: HashMap<String, PjRtBuffer> = HashMap::new();
+    let mut exes: HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>> = HashMap::new();
+
+    for cmd in rx {
+        match cmd {
+            Cmd::Store { name, value, done } => {
+                let r = engine
+                    .upload(&value)
+                    .map(|b| {
+                        resident.insert(name, b);
+                    })
+                    .map_err(|e| e.to_string());
+                let _ = done.send(r);
+            }
+            Cmd::Evict { name } => {
+                resident.remove(&name);
+            }
+            Cmd::Compile { key, path, done } => {
+                let r = engine
+                    .load(&path)
+                    .map(|e| {
+                        exes.insert(key, e);
+                    })
+                    .map_err(|e| e.to_string());
+                let _ = done.send(r);
+            }
+            Cmd::Exec { key, args, persist, fetch, reply } => {
+                let r = exec_one(&engine, &mut resident, &exes, &key, args, &persist, &fetch);
+                let _ = reply.send(r.map_err(|e| e.to_string()));
+            }
+            Cmd::Shutdown => return,
+        }
+    }
+}
+
+fn exec_one(
+    engine: &Engine,
+    resident: &mut HashMap<String, PjRtBuffer>,
+    exes: &HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>,
+    key: &str,
+    args: Vec<ArgRef>,
+    persist: &[Option<String>],
+    fetch: &[bool],
+) -> Result<Vec<HostValue>> {
+    let exe = exes
+        .get(key)
+        .ok_or_else(|| Error::msg(format!("executable `{key}` not compiled on this worker")))?
+        .clone();
+    // Build the arg buffer list: fresh uploads own their buffer; resident
+    // args borrow from the map.
+    let mut owned: Vec<PjRtBuffer> = Vec::new();
+    let mut order: Vec<(bool, usize, &str)> = Vec::new(); // (is_owned, idx, name)
+    for a in &args {
+        match a {
+            ArgRef::Host(v) => {
+                owned.push(engine.upload(v)?);
+                order.push((true, owned.len() - 1, ""));
+            }
+            ArgRef::Resident(name) => {
+                if !resident.contains_key(name.as_str()) {
+                    return Err(Error::msg(format!("resident buffer `{name}` missing")));
+                }
+                order.push((false, 0, name.as_str()));
+            }
+        }
+    }
+    let refs: Vec<&PjRtBuffer> = order
+        .iter()
+        .map(|(is_owned, idx, name)| {
+            if *is_owned {
+                &owned[*idx]
+            } else {
+                resident.get(*name).unwrap()
+            }
+        })
+        .collect();
+
+    // §Perf fast path: the patched xla crate returns each output as its own
+    // device buffer (untuple_result), so persisted outputs (KV caches) stay
+    // device-resident and fetched outputs download only their own bytes.
+    let bufs = engine.run_raw(&exe, &refs)?;
+    drop(owned);
+    let mut out = Vec::new();
+    for (i, buf) in bufs.into_iter().enumerate() {
+        let want_fetch = fetch.get(i).copied().unwrap_or(fetch.is_empty());
+        let want_persist = persist.get(i).and_then(|p| p.clone());
+        if want_fetch {
+            out.push(crate::runtime::pjrt::literal_to_host(&buf.to_literal_sync()?)?);
+        }
+        if let Some(name) = want_persist {
+            resident.insert(name, buf);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Option<crate::runtime::Manifest> {
+        crate::runtime::Manifest::load_default().ok()
+    }
+
+    #[test]
+    fn worker_boots_and_shuts_down() {
+        let w = WorkerHandle::spawn(0);
+        drop(w); // must not hang
+    }
+
+    #[test]
+    fn exec_unknown_key_errors() {
+        let w = WorkerHandle::spawn(0);
+        let r = w.exec("nope", vec![]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn store_compile_exec_roundtrip() {
+        let Some(m) = manifest() else { return };
+        let entry = m.model("td-small").unwrap();
+        let cfg = entry.config.clone();
+        let art = entry.artifact("embed_t32").unwrap();
+        let w = WorkerHandle::spawn(0);
+        w.compile("embed", art.file.clone()).unwrap();
+        let emb: Vec<f32> =
+            (0..cfg.vocab * cfg.d_model).map(|i| (i % 31) as f32 * 0.1).collect();
+        w.store("emb", HostValue::f32(vec![cfg.vocab, cfg.d_model], emb.clone())).unwrap();
+        let tokens: Vec<i32> = (0..32).collect();
+        let outs = w
+            .exec(
+                "embed",
+                vec![ArgRef::Host(HostValue::i32(vec![32], tokens)), ArgRef::Resident("emb".into())],
+            )
+            .unwrap();
+        assert_eq!(outs[0].shape(), &[32, cfg.d_model]);
+        assert_eq!(outs[0].as_f32().unwrap()[..cfg.d_model], emb[..cfg.d_model]);
+    }
+
+    #[test]
+    fn missing_resident_arg_errors() {
+        let Some(m) = manifest() else { return };
+        let art = m.model("td-small").unwrap().artifact("embed_t32").unwrap();
+        let w = WorkerHandle::spawn(0);
+        w.compile("embed", art.file.clone()).unwrap();
+        let r = w.exec(
+            "embed",
+            vec![
+                ArgRef::Host(HostValue::i32(vec![32], (0..32).collect())),
+                ArgRef::Resident("absent".into()),
+            ],
+        );
+        assert!(r.is_err());
+    }
+}

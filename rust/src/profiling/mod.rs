@@ -1,0 +1,119 @@
+//! Phase profiler: named wall-clock accumulators, the tool behind the
+//! Table-3 sync-vs-compute breakdown (paper App. C flame graphs).
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+#[derive(Default, Debug)]
+pub struct PhaseTimer {
+    acc: BTreeMap<String, (Duration, u64)>,
+}
+
+pub struct PhaseGuard<'a> {
+    timer: &'a mut PhaseTimer,
+    name: String,
+    start: Instant,
+}
+
+impl PhaseTimer {
+    pub fn new() -> PhaseTimer {
+        PhaseTimer::default()
+    }
+
+    /// Time a closure under `name`.
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(name, t0.elapsed());
+        out
+    }
+
+    pub fn add(&mut self, name: &str, d: Duration) {
+        let e = self.acc.entry(name.to_string()).or_insert((Duration::ZERO, 0));
+        e.0 += d;
+        e.1 += 1;
+    }
+
+    /// RAII variant for phases spanning non-closure code.
+    pub fn start(&mut self, name: &str) -> PhaseGuard<'_> {
+        PhaseGuard { name: name.to_string(), start: Instant::now(), timer: self }
+    }
+
+    pub fn total(&self, name: &str) -> Duration {
+        self.acc.get(name).map(|(d, _)| *d).unwrap_or(Duration::ZERO)
+    }
+
+    pub fn count(&self, name: &str) -> u64 {
+        self.acc.get(name).map(|(_, c)| *c).unwrap_or(0)
+    }
+
+    pub fn total_ms(&self, name: &str) -> f64 {
+        self.total(name).as_secs_f64() * 1e3
+    }
+
+    /// Table rows: (phase, total ms, calls, ms/call).
+    pub fn rows(&self) -> Vec<(String, f64, u64, f64)> {
+        self.acc
+            .iter()
+            .map(|(k, (d, c))| {
+                let ms = d.as_secs_f64() * 1e3;
+                (k.clone(), ms, *c, if *c > 0 { ms / *c as f64 } else { 0.0 })
+            })
+            .collect()
+    }
+
+    pub fn report(&self) -> String {
+        let mut out = format!("{:<24} {:>12} {:>8} {:>12}\n", "phase", "total ms", "calls", "ms/call");
+        for (name, ms, calls, per) in self.rows() {
+            out += &format!("{name:<24} {ms:>12.2} {calls:>8} {per:>12.3}\n");
+        }
+        out
+    }
+
+    pub fn reset(&mut self) {
+        self.acc.clear();
+    }
+}
+
+impl Drop for PhaseGuard<'_> {
+    fn drop(&mut self) {
+        let d = self.start.elapsed();
+        self.timer.add(&self.name, d);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_phases() {
+        let mut t = PhaseTimer::new();
+        t.time("a", || std::thread::sleep(Duration::from_millis(2)));
+        t.time("a", || std::thread::sleep(Duration::from_millis(2)));
+        t.time("b", || ());
+        assert_eq!(t.count("a"), 2);
+        assert!(t.total_ms("a") >= 4.0);
+        assert_eq!(t.count("b"), 1);
+        assert!(t.report().contains("a"));
+    }
+
+    #[test]
+    fn guard_records_on_drop() {
+        let mut t = PhaseTimer::new();
+        {
+            let _g = t.start("span");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(t.count("span"), 1);
+        assert!(t.total("span") >= Duration::from_millis(1));
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut t = PhaseTimer::new();
+        t.time("x", || ());
+        t.reset();
+        assert_eq!(t.count("x"), 0);
+    }
+}

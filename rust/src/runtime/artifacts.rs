@@ -1,0 +1,212 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime (artifact names, file paths, argument shapes, model
+//! hyper-parameters).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::Value;
+
+/// Model hyper-parameters (mirror of `python/compile/modelcfg.py`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub ctx: usize,
+    pub slots: usize,
+}
+
+impl ModelConfig {
+    fn from_json(v: &Value) -> Result<ModelConfig> {
+        let u = |k: &str| -> Result<usize> {
+            v.req(k)?
+                .as_usize()
+                .ok_or_else(|| Error::msg(format!("config key `{k}` not a number")))
+        };
+        Ok(ModelConfig {
+            name: v
+                .req("name")?
+                .as_str()
+                .ok_or_else(|| Error::msg("config name not a string"))?
+                .to_string(),
+            vocab: u("vocab")?,
+            d_model: u("d_model")?,
+            n_layers: u("n_layers")?,
+            n_heads: u("n_heads")?,
+            head_dim: u("head_dim")?,
+            d_ff: u("d_ff")?,
+            ctx: u("ctx")?,
+            slots: u("slots")?,
+        })
+    }
+
+    /// Approximate parameter count (same formula as the python side).
+    pub fn n_params(&self) -> usize {
+        let (d, f, v) = (self.d_model, self.d_ff, self.vocab);
+        let per_layer = 2 * d + 4 * d * d + 3 * d * f;
+        v * d + self.n_layers * per_layer + d + d * v
+    }
+}
+
+/// One AOT-compiled executable: path + argument signature.
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: PathBuf,
+    /// (arg_name, dtype, shape)
+    pub args: Vec<(String, String, Vec<usize>)>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub config: ModelConfig,
+    pub artifacts: BTreeMap<String, ArtifactInfo>,
+}
+
+impl ModelEntry {
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactInfo> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| Error::MissingArtifact(format!("{}:{}", self.config.name, name)))
+    }
+}
+
+/// The parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub impl_name: String,
+    pub seq_buckets: Vec<usize>,
+    pub models: BTreeMap<String, ModelEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json")).map_err(|e| {
+            Error::msg(format!(
+                "cannot read {}/manifest.json (run `make artifacts` first): {e}",
+                dir.display()
+            ))
+        })?;
+        let v = Value::parse(&text)?;
+        let mut models = BTreeMap::new();
+        for (mname, entry) in v
+            .req("models")?
+            .as_obj()
+            .ok_or_else(|| Error::msg("manifest `models` not an object"))?
+        {
+            let config = ModelConfig::from_json(entry.req("config")?)?;
+            let mut artifacts = BTreeMap::new();
+            for (aname, a) in entry
+                .req("artifacts")?
+                .as_obj()
+                .ok_or_else(|| Error::msg("artifacts not an object"))?
+            {
+                let file = dir.join(
+                    a.req("file")?
+                        .as_str()
+                        .ok_or_else(|| Error::msg("artifact file not a string"))?,
+                );
+                let mut args = Vec::new();
+                for arg in a.req("args")?.as_arr().unwrap_or(&[]) {
+                    let name = arg.req("name")?.as_str().unwrap_or("?").to_string();
+                    let dtype = arg.req("dtype")?.as_str().unwrap_or("?").to_string();
+                    let shape = arg
+                        .req("shape")?
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(|d| d.as_usize())
+                        .collect();
+                    args.push((name, dtype, shape));
+                }
+                artifacts.insert(
+                    aname.clone(),
+                    ArtifactInfo { name: aname.clone(), file, args },
+                );
+            }
+            models.insert(mname.clone(), ModelEntry { config, artifacts });
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            impl_name: v
+                .req("impl")?
+                .as_str()
+                .unwrap_or("pallas")
+                .to_string(),
+            seq_buckets: v
+                .req("seq_buckets")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|b| b.as_usize())
+                .collect(),
+            models,
+        })
+    }
+
+    /// Load from the repo's default `artifacts/` directory.
+    pub fn load_default() -> Result<Manifest> {
+        Self::load(&crate::repo_root().join("artifacts"))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models
+            .get(name)
+            .ok_or_else(|| Error::msg(format!("model `{name}` not in manifest")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Option<Manifest> {
+        Manifest::load_default().ok()
+    }
+
+    #[test]
+    fn manifest_loads_and_has_models() {
+        let Some(m) = manifest() else { return };
+        assert!(m.models.contains_key("td-small"));
+        assert!(m.models.contains_key("td-base"));
+        assert_eq!(m.seq_buckets, vec![32, 128, 256]);
+    }
+
+    #[test]
+    fn model_config_is_consistent() {
+        let Some(m) = manifest() else { return };
+        let c = &m.model("td-small").unwrap().config;
+        assert_eq!(c.d_model, c.n_heads * c.head_dim);
+        assert!(c.n_params() > 1_000_000);
+    }
+
+    #[test]
+    fn artifact_files_exist() {
+        let Some(m) = manifest() else { return };
+        for entry in m.models.values() {
+            for a in entry.artifacts.values() {
+                assert!(a.file.exists(), "missing {:?}", a.file);
+                assert!(!a.args.is_empty() || a.name.starts_with("embed"), "{}", a.name);
+            }
+        }
+    }
+
+    #[test]
+    fn decode_artifacts_have_expected_signature() {
+        let Some(m) = manifest() else { return };
+        let e = m.model("td-small").unwrap();
+        let a = e.artifact("tpattn_decode").unwrap();
+        let names: Vec<&str> = a.args.iter().map(|(n, _, _)| n.as_str()).collect();
+        assert_eq!(names, ["x", "ln1", "wq", "wk", "wv", "wo", "kcache", "vcache", "pos"]);
+        let (_, dt, shape) = &a.args[8];
+        assert_eq!(dt, "int32");
+        assert_eq!(shape, &vec![e.config.slots]);
+    }
+}

@@ -1,0 +1,11 @@
+//! PJRT runtime: artifact manifest + executable loading/execution.
+//!
+//! The request path never touches python: `python/compile/aot.py` lowered
+//! every entrypoint to HLO *text* at build time; this module loads the
+//! text, compiles it on the PJRT CPU client and executes it.
+
+pub mod artifacts;
+pub mod pjrt;
+
+pub use artifacts::{ArtifactInfo, Manifest, ModelConfig, ModelEntry};
+pub use pjrt::Engine;

@@ -1,0 +1,230 @@
+//! PJRT engine: compile HLO-text artifacts, manage device buffers, execute.
+//!
+//! One `Engine` per simulated accelerator (worker threads each construct
+//! their own — the PJRT wrapper types are not `Send`, which conveniently
+//! enforces the "each worker owns its device" discipline of the simulated
+//! mesh).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+use crate::error::{Error, Result};
+
+/// A host-side argument value shipped across threads (Literals are not
+/// Send; raw vectors are).
+#[derive(Clone, Debug)]
+pub enum HostValue {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostValue {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> HostValue {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostValue::F32 { shape, data }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> HostValue {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostValue::I32 { shape, data }
+    }
+
+    pub fn scalar_i32(v: i32) -> HostValue {
+        HostValue::I32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostValue::F32 { shape, .. } | HostValue::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostValue::F32 { data, .. } => Ok(data),
+            _ => Err(Error::msg("expected f32 value")),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            HostValue::F32 { data, .. } => Ok(data),
+            _ => Err(Error::msg("expected f32 value")),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostValue::I32 { data, .. } => Ok(data),
+            _ => Err(Error::msg("expected i32 value")),
+        }
+    }
+
+    pub fn num_bytes(&self) -> usize {
+        match self {
+            HostValue::F32 { data, .. } => data.len() * 4,
+            HostValue::I32 { data, .. } => data.len() * 4,
+        }
+    }
+}
+
+/// PJRT CPU engine with an executable cache.
+pub struct Engine {
+    client: PjRtClient,
+    cache: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Engine> {
+        Ok(Engine { client: PjRtClient::cpu()?, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the HLO-text artifact at `path`.
+    pub fn load(&self, path: &Path) -> Result<Rc<PjRtLoadedExecutable>> {
+        let key = path.to_string_lossy().to_string();
+        if let Some(exe) = self.cache.borrow().get(&key) {
+            return Ok(exe.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(path).map_err(|e| {
+            Error::msg(format!("loading HLO text {}: {e}", path.display()))
+        })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp)?);
+        self.cache.borrow_mut().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    // ---- buffers -----------------------------------------------------------
+
+    pub fn upload(&self, v: &HostValue) -> Result<PjRtBuffer> {
+        let b = match v {
+            HostValue::F32 { shape, data } => {
+                self.client.buffer_from_host_buffer::<f32>(data, shape, None)?
+            }
+            HostValue::I32 { shape, data } => {
+                self.client.buffer_from_host_buffer::<i32>(data, shape, None)?
+            }
+        };
+        Ok(b)
+    }
+
+    pub fn buf_f32(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer::<f32>(data, dims, None)?)
+    }
+
+    pub fn buf_i32(&self, data: &[i32], dims: &[usize]) -> Result<PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer::<i32>(data, dims, None)?)
+    }
+
+    // ---- execution -----------------------------------------------------------
+
+    /// Execute with device-resident buffers; outputs come back as host
+    /// literals. The patched xla crate sets `untuple_result`, so each tuple
+    /// element of the AOT executable arrives as its own device buffer.
+    pub fn run(&self, exe: &PjRtLoadedExecutable, args: &[&PjRtBuffer]) -> Result<Vec<Literal>> {
+        let outs = exe.execute_b::<&PjRtBuffer>(args)?;
+        outs[0].iter().map(|b| Ok(b.to_literal_sync()?)).collect()
+    }
+
+    /// Execute, keeping every output as a device-resident buffer.
+    pub fn run_raw(
+        &self,
+        exe: &PjRtLoadedExecutable,
+        args: &[&PjRtBuffer],
+    ) -> Result<Vec<PjRtBuffer>> {
+        let mut outs = exe.execute_b::<&PjRtBuffer>(args)?;
+        Ok(outs.remove(0))
+    }
+
+    /// Convenience: upload host values, execute, download host values.
+    pub fn call(&self, exe: &PjRtLoadedExecutable, args: &[HostValue]) -> Result<Vec<HostValue>> {
+        let bufs: Vec<PjRtBuffer> =
+            args.iter().map(|a| self.upload(a)).collect::<Result<_>>()?;
+        let refs: Vec<&PjRtBuffer> = bufs.iter().collect();
+        let lits = self.run(exe, &refs)?;
+        lits.iter().map(literal_to_host).collect()
+    }
+}
+
+/// Convert an output literal to a host value.
+pub fn literal_to_host(lit: &Literal) -> Result<HostValue> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match shape.ty() {
+        xla::ElementType::F32 => Ok(HostValue::F32 { shape: dims, data: lit.to_vec::<f32>()? }),
+        xla::ElementType::S32 => Ok(HostValue::I32 { shape: dims, data: lit.to_vec::<i32>()? }),
+        other => Err(Error::msg(format!("unsupported output element type {other:?}"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine_and_manifest() -> Option<(Engine, crate::runtime::Manifest)> {
+        let m = crate::runtime::Manifest::load_default().ok()?;
+        let e = Engine::cpu().ok()?;
+        Some((e, m))
+    }
+
+    #[test]
+    fn engine_boots_cpu() {
+        let e = Engine::cpu().unwrap();
+        assert!(e.platform().to_lowercase().contains("cpu") || !e.platform().is_empty());
+    }
+
+    #[test]
+    fn embed_artifact_runs_end_to_end() {
+        let Some((e, m)) = engine_and_manifest() else { return };
+        let entry = m.model("td-small").unwrap();
+        let cfg = &entry.config;
+        let art = entry.artifact("embed_t32").unwrap();
+        let exe = e.load(&art.file).unwrap();
+        // tokens 0..32, embedding = identity-ish random table
+        let tokens: Vec<i32> = (0..32).collect();
+        let emb: Vec<f32> = (0..cfg.vocab * cfg.d_model).map(|i| (i % 97) as f32 * 0.01).collect();
+        let outs = e
+            .call(
+                &exe,
+                &[
+                    HostValue::i32(vec![32], tokens),
+                    HostValue::f32(vec![cfg.vocab, cfg.d_model], emb.clone()),
+                ],
+            )
+            .unwrap();
+        assert_eq!(outs.len(), 1);
+        let h = outs[0].as_f32().unwrap();
+        assert_eq!(outs[0].shape(), &[32, cfg.d_model]);
+        // row t of the output must equal row t of the table (token ids 0..32)
+        for t in 0..32 {
+            assert_eq!(
+                h[t * cfg.d_model..(t + 1) * cfg.d_model],
+                emb[t * cfg.d_model..(t + 1) * cfg.d_model]
+            );
+        }
+    }
+
+    #[test]
+    fn executable_cache_hits() {
+        let Some((e, m)) = engine_and_manifest() else { return };
+        let art = m.model("td-small").unwrap().artifact("embed_t32").unwrap();
+        let a = e.load(&art.file).unwrap();
+        let b = e.load(&art.file).unwrap();
+        assert!(Rc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn host_value_shape_checks() {
+        let v = HostValue::f32(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(v.num_bytes(), 24);
+        assert!(v.as_i32().is_err());
+    }
+}

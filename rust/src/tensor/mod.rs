@@ -1,0 +1,162 @@
+//! Host tensor: the small dense f32 tensor type used on the coordinator's
+//! hot path (residual adds, all-reduce sums, logits post-processing).
+//!
+//! This is intentionally minimal — heavy math lives in the AOT'd XLA
+//! executables; the coordinator only ever touches activation-sized tensors
+//! ([T, D], [S, V]), so simple contiguous loops are at memory-bandwidth
+//! roofline already (verified in `benches/bench_hostops.rs`).
+
+use crate::error::{Error, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<HostTensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(Error::msg(format!(
+                "shape {:?} wants {} elements, got {}",
+                shape,
+                n,
+                data.len()
+            )));
+        }
+        Ok(HostTensor { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> HostTensor {
+        let n = shape.iter().product();
+        HostTensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// In-place element-wise add (residual / reduce combinator).
+    pub fn add_assign(&mut self, other: &HostTensor) -> Result<()> {
+        if self.shape != other.shape {
+            return Err(Error::msg(format!(
+                "shape mismatch {:?} vs {:?}",
+                self.shape, other.shape
+            )));
+        }
+        add_slices(&mut self.data, &other.data);
+        Ok(())
+    }
+
+    /// Row view for a 2-D tensor.
+    pub fn row(&self, r: usize) -> &[f32] {
+        let cols = *self.shape.last().unwrap();
+        &self.data[r * cols..(r + 1) * cols]
+    }
+
+    pub fn rows(&self) -> usize {
+        self.shape[0]
+    }
+}
+
+/// `dst += src`, the innermost loop of both the residual add and the
+/// all-reduce; written as an exact-size iterator pair so LLVM vectorizes.
+#[inline]
+pub fn add_slices(dst: &mut [f32], src: &[f32]) {
+    assert_eq!(dst.len(), src.len());
+    for (d, s) in dst.iter_mut().zip(src.iter()) {
+        *d += *s;
+    }
+}
+
+/// Sum of n slices into a fresh buffer (used by the collective).
+pub fn sum_slices(parts: &[&[f32]]) -> Vec<f32> {
+    let mut out = parts[0].to_vec();
+    for p in &parts[1..] {
+        add_slices(&mut out, p);
+    }
+    out
+}
+
+/// Index of the maximum element (greedy sampling).
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > bv {
+            bv = x;
+            best = i;
+        }
+    }
+    best
+}
+
+/// log-softmax value of `logits[target]` (perplexity scoring).
+pub fn log_softmax_at(logits: &[f32], target: usize) -> f64 {
+    let m = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let sum: f64 = logits.iter().map(|&x| ((x as f64) - m).exp()).sum();
+    (logits[target] as f64) - m - sum.ln()
+}
+
+/// Top-k indices by value, descending (sampling, debug introspection).
+pub fn top_k(xs: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&a, &b| xs[b].partial_cmp(&xs[a]).unwrap());
+    idx.truncate(k);
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_validates_shape() {
+        assert!(HostTensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(HostTensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn add_assign_works() {
+        let mut a = HostTensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let b = HostTensor::new(vec![2, 2], vec![10.0, 20.0, 30.0, 40.0]).unwrap();
+        a.add_assign(&b).unwrap();
+        assert_eq!(a.data, vec![11.0, 22.0, 33.0, 44.0]);
+        let c = HostTensor::zeros(vec![3]);
+        assert!(a.add_assign(&c).is_err());
+    }
+
+    #[test]
+    fn sum_and_argmax() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [0.5f32, 0.5, 0.5];
+        assert_eq!(sum_slices(&[&a, &b]), vec![1.5, 2.5, 3.5]);
+        assert_eq!(argmax(&[0.1, 0.9, 0.3]), 1);
+        assert_eq!(argmax(&[f32::NEG_INFINITY, -1.0]), 1);
+    }
+
+    #[test]
+    fn log_softmax_normalizes() {
+        let l = [1.0f32, 2.0, 3.0];
+        let total: f64 = (0..3).map(|i| log_softmax_at(&l, i).exp()).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+        assert!(log_softmax_at(&l, 2) > log_softmax_at(&l, 0));
+    }
+
+    #[test]
+    fn top_k_sorted() {
+        assert_eq!(top_k(&[0.1, 0.9, 0.5, 0.7], 2), vec![1, 3]);
+    }
+
+    #[test]
+    fn rows_view() {
+        let t = HostTensor::new(vec![2, 3], (0..6).map(|x| x as f32).collect()).unwrap();
+        assert_eq!(t.row(1), &[3.0, 4.0, 5.0]);
+        assert_eq!(t.rows(), 2);
+    }
+}

@@ -1,0 +1,221 @@
+//! Deterministic synthetic corpus — bit-exact mirror of
+//! `python/compile/data.py` (same word tables, same SplitMix64 draws, same
+//! templates). Python generates the training stream; rust generates eval
+//! and workload streams; golden tests on both sides pin the output.
+
+use crate::util::rng::SplitMix64;
+
+pub const ADJECTIVES: [&str; 16] = [
+    "red", "small", "quiet", "bright", "old", "swift", "calm", "brave", "green", "tall", "soft",
+    "sharp", "young", "cold", "warm", "plain",
+];
+pub const NOUNS: [&str; 16] = [
+    "fox", "river", "stone", "bird", "tree", "cloud", "wolf", "lamp", "ship", "tower", "field",
+    "storm", "book", "road", "horse", "flame",
+];
+pub const VERBS: [&str; 16] = [
+    "watches", "follows", "finds", "passes", "guards", "carries", "meets", "crosses", "holds",
+    "leaves", "seeks", "joins", "greets", "trails", "lifts", "turns",
+];
+pub const COUNTRIES: [&str; 32] = [
+    "avaria", "belmora", "cassia", "dorvan", "elyna", "fermont", "galdia", "harwick", "isolde",
+    "jorvik", "kelmar", "lorvina", "mendia", "norwell", "ostrava", "pellia", "quorath", "rivona",
+    "selwick", "tormund", "ulvania", "verdane", "wystan", "xanthe", "yorvale", "zembla",
+    "ardenne", "brovia", "cathmor", "drellin", "eswick", "farlone",
+];
+pub const CAPITALS: [&str; 32] = [
+    "avaport", "belcity", "casburg", "dorhaven", "elyton", "fermouth", "galford", "harmont",
+    "isoton", "jorholm", "kelport", "lorgrad", "menfort", "norbury", "ostwick", "pelgrove",
+    "quorton", "rivgate", "selmora", "torvale", "ulham", "verdun", "wysport", "xanburg",
+    "yorford", "zemholm", "ardfell", "broville", "cathwick", "drelport", "esgard", "farmont",
+];
+pub const LETTERS: &[u8; 26] = b"abcdefghijklmnopqrstuvwxyz";
+
+/// Positional relation used by the ICL relation-recall task.
+pub fn capital_of(country_idx: usize) -> &'static str {
+    CAPITALS[country_idx]
+}
+
+// --- atomic item generators (draw order must match data.py exactly) -------
+
+pub fn gen_sentence(rng: &mut SplitMix64) -> String {
+    let a = ADJECTIVES[rng.below(ADJECTIVES.len() as u64) as usize];
+    let n1 = NOUNS[rng.below(NOUNS.len() as u64) as usize];
+    let v = VERBS[rng.below(VERBS.len() as u64) as usize];
+    let n2 = NOUNS[rng.below(NOUNS.len() as u64) as usize];
+    format!("the {a} {n1} {v} the {n2} .")
+}
+
+pub fn gen_arith(rng: &mut SplitMix64) -> String {
+    // single-digit operands — see python/compile/data.py::gen_arith
+    let a = rng.below(10);
+    let b = rng.below(10);
+    if rng.below(2) == 0 {
+        format!("{a} + {b} = {} .", a + b)
+    } else {
+        let (hi, lo) = (a.max(b), a.min(b));
+        format!("{hi} - {lo} = {} .", hi - lo)
+    }
+}
+
+pub fn gen_relation(rng: &mut SplitMix64) -> String {
+    let i = rng.below(COUNTRIES.len() as u64) as usize;
+    format!("the capital of {} is {} .", COUNTRIES[i], capital_of(i))
+}
+
+fn rand_letters(rng: &mut SplitMix64, lo: u64, hi: u64) -> String {
+    let k = lo + rng.below(hi - lo + 1);
+    (0..k).map(|_| LETTERS[rng.below(26) as usize] as char).collect()
+}
+
+pub fn gen_copy(rng: &mut SplitMix64) -> String {
+    let w = rand_letters(rng, 3, 6);
+    format!("copy : {w} -> {w} .")
+}
+
+pub fn gen_reverse(rng: &mut SplitMix64) -> String {
+    let w = rand_letters(rng, 3, 6);
+    let r: String = w.chars().rev().collect();
+    format!("rev : {w} -> {r} .")
+}
+
+pub fn gen_pattern(rng: &mut SplitMix64) -> String {
+    let start = rng.below(22) as usize;
+    let seq: Vec<char> = (0..4).map(|j| LETTERS[start + j] as char).collect();
+    format!("next : {} {} {} -> {} .", seq[0], seq[1], seq[2], seq[3])
+}
+
+/// Sampling weights out of 16, matching `data.py::ITEM_WEIGHTS`.
+const ITEM_WEIGHTS: [u64; 6] = [6, 3, 3, 1, 1, 2];
+
+pub fn gen_item(rng: &mut SplitMix64) -> String {
+    let total: u64 = ITEM_WEIGHTS.iter().sum();
+    let r = rng.below(total);
+    let mut cum = 0;
+    for (k, w) in ITEM_WEIGHTS.iter().enumerate() {
+        cum += w;
+        if r < cum {
+            return match k {
+                0 => gen_sentence(rng),
+                1 => gen_arith(rng),
+                2 => gen_relation(rng),
+                3 => gen_copy(rng),
+                4 => gen_reverse(rng),
+                _ => gen_pattern(rng),
+            };
+        }
+    }
+    unreachable!()
+}
+
+pub fn gen_document_with(rng: &mut SplitMix64, n_items: usize) -> String {
+    (0..n_items).map(|_| gen_item(rng)).collect::<Vec<_>>().join(" ")
+}
+
+/// Document `i` of the stream for `seed` — mirror of
+/// `data.py::gen_corpus_doc` (per-doc stream, 8 items).
+pub fn gen_corpus_doc(seed: u64, i: u64) -> String {
+    let mut rng = SplitMix64::new(seed ^ i.wrapping_mul(0x9E3779B97F4A7C15));
+    gen_document_with(&mut rng, 8)
+}
+
+/// Train/eval split convention shared with python: eval docs start at this
+/// index offset.
+pub const EVAL_BASE: u64 = 0x4000_0000;
+
+pub fn eval_doc(seed: u64, i: u64) -> String {
+    gen_corpus_doc(seed, EVAL_BASE + i)
+}
+
+/// The data seed used by `python/train.py` (training distribution); eval
+/// must draw from the same distribution.
+pub const DATA_SEED: u64 = 20260711;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// sha256 is not in the vendor set; use the exact golden *prefix* plus
+    /// length instead (the full doc hash is pinned on the python side).
+    #[test]
+    fn golden_doc_matches_python() {
+        let doc = gen_corpus_doc(20260711, 0);
+        assert!(
+            doc.starts_with(
+                "the capital of ostrava is ostwick . the old field guards the tree . \
+                 the tall wolf seeks the bird . next : l m "
+            ),
+            "corpus drifted: {}",
+            &doc[..doc.len().min(120)]
+        );
+        assert_eq!(doc.len(), 174);
+    }
+
+    #[test]
+    fn determinism_and_distinctness() {
+        assert_eq!(gen_corpus_doc(1, 5), gen_corpus_doc(1, 5));
+        assert_ne!(gen_corpus_doc(1, 5), gen_corpus_doc(1, 6));
+        assert_eq!(eval_doc(1, 0), gen_corpus_doc(1, EVAL_BASE));
+    }
+
+    #[test]
+    fn arithmetic_items_are_correct() {
+        let mut rng = SplitMix64::new(123);
+        for _ in 0..200 {
+            let s = gen_arith(&mut rng);
+            let body = s.trim_end_matches(" .");
+            let (lhs, rhs) = body.split_once('=').unwrap();
+            let parts: Vec<&str> = lhs.split_whitespace().collect();
+            let (a, op, b): (i64, &str, i64) =
+                (parts[0].parse().unwrap(), parts[1], parts[2].parse().unwrap());
+            let expect = if op == "+" { a + b } else { a - b };
+            assert_eq!(rhs.trim().parse::<i64>().unwrap(), expect, "{s}");
+            assert!(expect >= 0);
+        }
+    }
+
+    #[test]
+    fn reverse_items_are_correct() {
+        let mut rng = SplitMix64::new(5);
+        for _ in 0..100 {
+            let s = gen_reverse(&mut rng);
+            let body = s.strip_prefix("rev : ").unwrap().trim_end_matches(" .");
+            let (w, r) = body.split_once(" -> ").unwrap();
+            assert_eq!(r, w.chars().rev().collect::<String>());
+        }
+    }
+
+    #[test]
+    fn pattern_items_are_consecutive() {
+        let mut rng = SplitMix64::new(9);
+        for _ in 0..100 {
+            let s = gen_pattern(&mut rng);
+            let body = s.strip_prefix("next : ").unwrap().trim_end_matches(" .");
+            let (seq, nxt) = body.split_once(" -> ").unwrap();
+            let idx: Vec<usize> = seq
+                .split_whitespace()
+                .map(|c| LETTERS.iter().position(|&l| l as char == c.chars().next().unwrap()).unwrap())
+                .collect();
+            assert_eq!(idx[1], idx[0] + 1);
+            assert_eq!(idx[2], idx[1] + 1);
+            let n = LETTERS
+                .iter()
+                .position(|&l| l as char == nxt.chars().next().unwrap())
+                .unwrap();
+            assert_eq!(n, idx[2] + 1);
+        }
+    }
+
+    #[test]
+    fn relation_tables_aligned() {
+        assert_eq!(COUNTRIES.len(), CAPITALS.len());
+        let mut rng = SplitMix64::new(1);
+        for _ in 0..50 {
+            let s = gen_relation(&mut rng);
+            let body = s.strip_prefix("the capital of ").unwrap().trim_end_matches(" .");
+            let (country, capital) = body.split_once(" is ").unwrap();
+            let i = COUNTRIES.iter().position(|&c| c == country).unwrap();
+            assert_eq!(capital, CAPITALS[i]);
+        }
+    }
+}

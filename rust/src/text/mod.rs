@@ -1,0 +1,5 @@
+//! Text substrate: byte tokenizer and the deterministic corpus generator
+//! (bit-exact mirrors of `python/compile/tok.py` / `data.py`).
+
+pub mod corpus;
+pub mod tokenizer;

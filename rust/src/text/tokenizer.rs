@@ -1,0 +1,80 @@
+//! Byte-level tokenizer — mirror of `python/compile/tok.py`.
+//!
+//! Vocabulary (V = 260): 0..255 raw bytes, 256 BOS, 257 EOS, 258 PAD,
+//! 259 reserved.
+
+pub const VOCAB_SIZE: usize = 260;
+pub const BOS: i32 = 256;
+pub const EOS: i32 = 257;
+pub const PAD: i32 = 258;
+
+/// UTF-8 bytes to token ids, optionally wrapped in BOS/EOS.
+pub fn encode(text: &str, bos: bool, eos: bool) -> Vec<i32> {
+    let mut ids = Vec::with_capacity(text.len() + 2);
+    if bos {
+        ids.push(BOS);
+    }
+    ids.extend(text.bytes().map(|b| b as i32));
+    if eos {
+        ids.push(EOS);
+    }
+    ids
+}
+
+/// Token ids back to text; specials dropped, invalid utf-8 replaced.
+pub fn decode(ids: &[i32]) -> String {
+    let bytes: Vec<u8> = ids
+        .iter()
+        .filter(|&&i| (0..256).contains(&i))
+        .map(|&i| i as u8)
+        .collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+/// Right-pad (or truncate) to exactly `length` tokens.
+pub fn pad_to(ids: &[i32], length: usize) -> Vec<i32> {
+    let mut out: Vec<i32> = ids.iter().copied().take(length).collect();
+    out.resize(length, PAD);
+    out
+}
+
+/// The smallest AOT sequence bucket that fits `len` tokens, if any.
+pub fn bucket_for(len: usize, buckets: &[usize]) -> Option<usize> {
+    buckets.iter().copied().find(|&b| b >= len)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_with_specials() {
+        let s = "the capital of avaria is avaport . 3 + 5 = 8 .";
+        let ids = encode(s, true, true);
+        assert_eq!(ids[0], BOS);
+        assert_eq!(*ids.last().unwrap(), EOS);
+        assert_eq!(decode(&ids), s);
+        assert!(ids.iter().all(|&i| (i as usize) < VOCAB_SIZE));
+    }
+
+    #[test]
+    fn pad_and_truncate() {
+        assert_eq!(pad_to(&[1, 2, 3], 5), vec![1, 2, 3, PAD, PAD]);
+        assert_eq!(pad_to(&[1, 2, 3, 4, 5], 3), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let b = [32, 128, 256];
+        assert_eq!(bucket_for(1, &b), Some(32));
+        assert_eq!(bucket_for(32, &b), Some(32));
+        assert_eq!(bucket_for(33, &b), Some(128));
+        assert_eq!(bucket_for(257, &b), None);
+    }
+
+    #[test]
+    fn unicode_text_roundtrips() {
+        let s = "héllo 中文";
+        assert_eq!(decode(&encode(s, false, false)), s);
+    }
+}

@@ -1,0 +1,5 @@
+//! Small zero-dependency substrates: PRNG, JSON, run statistics.
+
+pub mod json;
+pub mod rng;
+pub mod stats;

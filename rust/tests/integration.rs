@@ -1,0 +1,218 @@
+//! Cross-layer integration tests: the properties that tie the three layers
+//! together. All tests no-op gracefully when `make artifacts` hasn't run.
+//!
+//! The central invariant: the *scoring* executor (single-device, per-delta
+//! composition) and the *serving* executor (2-rank tensor-parallel mesh
+//! with all-reduces) are two implementations of the same mathematics and
+//! must agree numerically — for the sequential plan AND for LP pairs.
+
+use truedepth::config::{InterconnectConfig, ServerConfig};
+use truedepth::coordinator::{RequestOptions, Server};
+use truedepth::eval::ppl::eval_windows;
+use truedepth::gen::Sampler;
+use truedepth::model::{transform, Scorer, ServingModel, Weights};
+use truedepth::runtime::{Engine, Manifest};
+use truedepth::text::corpus::DATA_SEED;
+use truedepth::text::tokenizer;
+
+fn setup() -> Option<(Manifest, Weights)> {
+    let manifest = Manifest::load_default().ok()?;
+    let cfg = manifest.model("td-small").ok()?.config.clone();
+    Some((manifest, Weights::random(&cfg, 2026)))
+}
+
+fn no_net() -> InterconnectConfig {
+    InterconnectConfig { enabled: false, ..Default::default() }
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+/// Scoring (single device) vs serving (TP mesh, 2 all-reduces/layer): the
+/// sequential plan must produce identical last-token logits.
+#[test]
+fn scoring_and_tp_serving_agree_sequential() {
+    let Some((manifest, weights)) = setup() else { return };
+    let entry = manifest.model("td-small").unwrap();
+    let n = entry.config.n_layers;
+    let plan = transform::sequential(n);
+
+    let tokens: Vec<i32> = tokenizer::encode("the quiet river finds the stone", true, false);
+    let engine = Engine::cpu().unwrap();
+    let scorer = Scorer::new(&engine, entry, &weights, 32).unwrap();
+    let padded = tokenizer::pad_to(&tokens, 32);
+    let logits = scorer.logits(&padded, &plan).unwrap();
+    let v = entry.config.vocab;
+    let last = tokens.len() - 1;
+    let expect = &logits[last * v..(last + 1) * v];
+
+    let serving = ServingModel::new(&manifest, "td-small", &weights, &plan, no_net()).unwrap();
+    let got = serving.prefill(0, &tokens).unwrap();
+    let diff = max_abs_diff(expect, &got);
+    assert!(diff < 2e-3, "seq scoring vs serving diverged: {diff}");
+}
+
+/// Same agreement for an LP plan: the mesh's split across two ranks plus
+/// all-reduce must reproduce the scoring executor's PairLp numerics.
+#[test]
+fn scoring_and_lp_serving_agree() {
+    let Some((manifest, weights)) = setup() else { return };
+    let entry = manifest.model("td-small").unwrap();
+    let n = entry.config.n_layers;
+    let plan = transform::pair_parallel(n, 2, 10, true);
+
+    let tokens: Vec<i32> = tokenizer::encode("copy : abcd -> ", true, false);
+    let engine = Engine::cpu().unwrap();
+    let scorer = Scorer::new(&engine, entry, &weights, 32).unwrap();
+    let padded = tokenizer::pad_to(&tokens, 32);
+    let logits = scorer.logits(&padded, &plan).unwrap();
+    let v = entry.config.vocab;
+    let last = tokens.len() - 1;
+    let expect = &logits[last * v..(last + 1) * v];
+
+    let serving = ServingModel::new(&manifest, "td-small", &weights, &plan, no_net()).unwrap();
+    let got = serving.prefill(0, &tokens).unwrap();
+    let diff = max_abs_diff(expect, &got);
+    assert!(diff < 2e-3, "LP scoring vs serving diverged: {diff}");
+}
+
+/// Decode with a KV cache must continue exactly where prefill left off:
+/// prefill(t0..t_k) + decode(t_{k+1}) == prefill(t0..t_{k+1}).
+#[test]
+fn incremental_decode_matches_longer_prefill() {
+    let Some((manifest, weights)) = setup() else { return };
+    let entry = manifest.model("td-small").unwrap();
+    let cfg = entry.config.clone();
+    let plan = transform::pair_parallel(cfg.n_layers, 4, 8, true);
+    let serving = ServingModel::new(&manifest, "td-small", &weights, &plan, no_net()).unwrap();
+
+    let full: Vec<i32> = tokenizer::encode("the tall wolf seeks", true, false);
+    let k = full.len() - 1;
+
+    // reference: prefill the whole sequence, read last logits
+    let expect = serving.prefill(0, &full).unwrap();
+
+    // incremental: prefill k tokens into slot 0, then decode token k
+    let _ = serving.prefill(0, &full[..k]).unwrap();
+    let s = cfg.slots;
+    let mut tok = vec![0i32; s];
+    let mut pos = vec![0i32; s];
+    tok[0] = full[k];
+    pos[0] = k as i32;
+    let out = serving.decode_step(&tok, &pos).unwrap();
+    let got = &out[..cfg.vocab];
+
+    let diff = max_abs_diff(&expect, got);
+    assert!(diff < 2e-3, "decode continuation diverged from prefill: {diff}");
+}
+
+/// Slot isolation: concurrent sequences in different slots must not bleed
+/// into each other — decoding slot 0 must give the same logits whether or
+/// not slot 1 holds a different sequence.
+#[test]
+fn kv_slots_are_isolated() {
+    let Some((manifest, weights)) = setup() else { return };
+    let entry = manifest.model("td-small").unwrap();
+    let cfg = entry.config.clone();
+    let plan = transform::sequential(cfg.n_layers);
+    let serving = ServingModel::new(&manifest, "td-small", &weights, &plan, no_net()).unwrap();
+
+    let a: Vec<i32> = tokenizer::encode("the red fox", true, false);
+    let b: Vec<i32> = tokenizer::encode("9 - 4 = ", true, false);
+    let s = cfg.slots;
+
+    // run A alone
+    let _ = serving.prefill(0, &a).unwrap();
+    let mut tok = vec![0i32; s];
+    let mut pos = vec![0i32; s];
+    tok[0] = 32;
+    pos[0] = a.len() as i32;
+    let alone = serving.decode_step(&tok, &pos).unwrap()[..cfg.vocab].to_vec();
+
+    // run A in slot 0 with B active in slot 1
+    let _ = serving.prefill(0, &a).unwrap();
+    let _ = serving.prefill(1, &b).unwrap();
+    tok[1] = 53;
+    pos[1] = b.len() as i32;
+    let together = serving.decode_step(&tok, &pos).unwrap()[..cfg.vocab].to_vec();
+
+    let diff = max_abs_diff(&alone, &together);
+    assert!(diff < 1e-4, "slot bleed: {diff}");
+}
+
+/// Full-stack serving determinism: same prompt through the server twice
+/// (greedy) must give the same tokens, and LP vs sequential plans both
+/// produce well-formed responses.
+#[test]
+fn server_greedy_is_deterministic_across_plans() {
+    let Some((manifest, weights)) = setup() else { return };
+    let entry = manifest.model("td-small").unwrap();
+    let n = entry.config.n_layers;
+    for plan in [transform::sequential(n), transform::pair_parallel(n, 2, 10, true)] {
+        let serving =
+            ServingModel::new(&manifest, "td-small", &weights, &plan, no_net()).unwrap();
+        let server = Server::start(serving, &ServerConfig::default());
+        let opts = RequestOptions { max_new_tokens: 6, sampler: Sampler::Greedy };
+        let r1 = server.submit_blocking("the calm ship", opts.clone()).unwrap();
+        let r2 = server.submit_blocking("the calm ship", opts).unwrap();
+        assert!(r1.error.is_none() && r2.error.is_none());
+        assert_eq!(r1.tokens, r2.tokens, "greedy decode must be deterministic");
+        assert_eq!(r1.generated_tokens(), 6);
+        server.shutdown();
+    }
+}
+
+/// The simulated interconnect must make LP visibly cheaper per token than
+/// sequential TP at equal workload (the paper's core claim, in miniature).
+#[test]
+fn lp_reduces_sync_cost_per_decode_step() {
+    let Some((manifest, weights)) = setup() else { return };
+    let entry = manifest.model("td-small").unwrap();
+    let cfg = entry.config.clone();
+    let n = cfg.n_layers;
+    let net = InterconnectConfig { alpha_s: 200e-6, beta_bytes_per_s: 25e9, enabled: true };
+
+    let mut times = vec![];
+    for plan in [transform::sequential(n), transform::pair_parallel(n, 0, n, true)] {
+        let serving =
+            ServingModel::new(&manifest, "td-small", &weights, &plan, net.clone()).unwrap();
+        let prompt: Vec<i32> = (0..16).map(|i| 97 + (i % 26)).collect();
+        serving.prefill(0, &prompt).unwrap();
+        let tok = vec![65i32; cfg.slots];
+        let pos = vec![16i32; cfg.slots];
+        serving.decode_step(&tok, &pos).unwrap(); // warm
+        serving.mesh.metrics.reset();
+        let t0 = std::time::Instant::now();
+        for _ in 0..3 {
+            serving.decode_step(&tok, &pos).unwrap();
+        }
+        let wall = t0.elapsed();
+        let (sync_ops, _, _, _) = serving.mesh.metrics.snapshot();
+        times.push((plan.effective_depth(), sync_ops, wall));
+    }
+    let (d_seq, ops_seq, t_seq) = times[0];
+    let (d_lp, ops_lp, t_lp) = times[1];
+    assert_eq!(d_seq, n);
+    assert_eq!(d_lp, n / 2);
+    assert_eq!(ops_seq, 2 * ops_lp, "LP must halve the all-reduce count");
+    assert!(
+        t_lp < t_seq,
+        "with α=200µs the halved sync count must win: lp {t_lp:?} vs seq {t_seq:?}"
+    );
+}
+
+/// Perplexity pipeline sanity on random weights: ppl ≈ vocab for an
+/// untrained model (uniform predictions), for both executors' plans.
+#[test]
+fn random_model_ppl_is_near_uniform() {
+    let Some((manifest, weights)) = setup() else { return };
+    let entry = manifest.model("td-small").unwrap();
+    let engine = Engine::cpu().unwrap();
+    let scorer = Scorer::new(&engine, entry, &weights, 32).unwrap();
+    let windows = eval_windows(32, 1, DATA_SEED);
+    let plan = transform::sequential(entry.config.n_layers);
+    let ppl = truedepth::eval::ppl::perplexity(&scorer, &plan, &windows).unwrap();
+    let v = entry.config.vocab as f64;
+    assert!(ppl > v * 0.2 && ppl < v * 5.0, "untrained ppl {ppl} vs vocab {v}");
+}
