@@ -1,6 +1,11 @@
 //! Decode-step latency: vanilla TP vs Layer Parallelism, with and without
 //! the interconnect cost model — the per-token numbers behind Fig. 7's
 //! 1-token task and Table 3.
+//!
+//! Also reports the tentpole metric of the resident-activation pipeline:
+//! host↔device transfers per decode token (O(1) — token ids + positions
+//! in, embed shadow + logits out) against the pre-refactor host-round-trip
+//! reference path (O(stages)).
 
 use truedepth::bench::Bench;
 use truedepth::harness::{default_net, no_net};
@@ -41,6 +46,32 @@ fn main() {
                     serving.decode_step(&tok, &pos).unwrap();
                     t.elapsed()
                 },
+            );
+            if net_name == "nonet" {
+                b.bench_timed(
+                    &format!("decode_{plan_name}_{net_name}_hostpath_ref"),
+                    12,
+                    || {
+                        let t = std::time::Instant::now();
+                        serving.decode_step_host_reference(&tok, &pos).unwrap();
+                        t.elapsed()
+                    },
+                );
+            }
+
+            // host↔device transfers per token: resident vs reference
+            serving.mesh.metrics.reset();
+            serving.decode_step(&tok, &pos).unwrap();
+            let res = serving.mesh.metrics.host_transfers();
+            serving.mesh.metrics.reset();
+            serving.decode_step_host_reference(&tok, &pos).unwrap();
+            let refp = serving.mesh.metrics.host_transfers();
+            println!(
+                "   host transfers/token [{plan_name}_{net_name}]: resident {} ops ({} KiB) vs hostpath {} ops ({} KiB)",
+                res.ops(),
+                res.bytes() / 1024,
+                refp.ops(),
+                refp.bytes() / 1024,
             );
         }
     }

@@ -34,6 +34,15 @@ fn main() {
                 serving.prefill(0, &prompt).unwrap();
                 t0.elapsed()
             });
+            // resident pipeline: prefill host traffic is O(1) in depth too
+            serving.mesh.metrics.reset();
+            serving.prefill(0, &prompt).unwrap();
+            let h = serving.mesh.metrics.host_transfers();
+            println!(
+                "   host transfers/prefill [{plan_name}_T{t}]: {} ops ({} KiB)",
+                h.ops(),
+                h.bytes() / 1024,
+            );
         }
     }
 

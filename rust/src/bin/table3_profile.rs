@@ -50,10 +50,14 @@ fn main() -> truedepth::Result<()> {
         }
         let total_ms = t0.elapsed().as_secs_f64() * 1e3;
         let (sync_ops, sync_ms, compute_ms, _) = serving.mesh.metrics.snapshot();
+        let host = serving.mesh.metrics.host_transfers();
+        let host_per_tok = host.ops() as f64 / steps as f64;
         println!(
-            "{name:<16}: total {total_ms:>8.2} ms  sync {sync_ms:>8.2} ms ({sync_ops} ops)  compute {compute_ms:>8.2} ms"
+            "{name:<16}: total {total_ms:>8.2} ms  sync {sync_ms:>8.2} ms ({sync_ops} ops)  compute {compute_ms:>8.2} ms  host xfers/tok {host_per_tok:.1}"
         );
-        rows.push(format!("{name},{total_ms:.2},{sync_ms:.2},{compute_ms:.2},{sync_ops}"));
+        rows.push(format!(
+            "{name},{total_ms:.2},{sync_ms:.2},{compute_ms:.2},{sync_ops},{host_per_tok:.1}"
+        ));
         results.push((total_ms, sync_ms, compute_ms, sync_ops));
     }
 
@@ -67,7 +71,7 @@ fn main() -> truedepth::Result<()> {
 
     write_csv(
         &format!("table3_{model}.csv"),
-        "approach,total_ms,sync_ms,compute_ms,sync_ops",
+        "approach,total_ms,sync_ms,compute_ms,sync_ops,host_transfers_per_token",
         &rows,
     );
     Ok(())

@@ -25,6 +25,9 @@ struct InFlight {
     request: Request,
     reply: Sender<Response>,
     tokens: Vec<i32>,
+    /// Prompt length in tokens, recorded once at admit time (re-encoding
+    /// the prompt at completion just to count it was a hot-path bug).
+    prompt_tokens: usize,
     ttft_ms: f64,
     sampler: Sampler,
     rng: SplitMix64,
@@ -96,14 +99,28 @@ impl Scheduler {
         let first = sampler.sample(&logits, &mut rng);
         let ttft_ms = request.submitted_at.elapsed().as_secs_f64() * 1e3;
         self.slots.get_mut(slot).unwrap().next_token = first;
-        self.inflight
-            .insert(slot, InFlight { request, reply, tokens: vec![], ttft_ms, sampler, rng });
+        self.inflight.insert(
+            slot,
+            InFlight {
+                request,
+                reply,
+                tokens: vec![],
+                prompt_tokens: ids.len(),
+                ttft_ms,
+                sampler,
+                rng,
+            },
+        );
     }
 
     fn decode_round(&mut self) {
-        let (tokens, pos) = self.slots.step_inputs();
-        let logits = match self.model.decode_step(&tokens, &pos) {
-            Ok(l) => l,
+        // Compacted batch: only active slots cross the executor boundary,
+        // and only their logits rows are materialized for sampling. (The
+        // fixed-shape [S] executables still compute — and download — all
+        // lanes; see decode_active.)
+        let active = self.slots.active_inputs();
+        let rows = match self.model.decode_active(&active) {
+            Ok(r) => r,
             Err(e) => {
                 for (slot, inf) in self.inflight.drain() {
                     self.slots.free(slot);
@@ -117,14 +134,12 @@ impl Scheduler {
         self.metrics
             .decode_steps
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        let v = self.model.entry.config.vocab;
-        let active: Vec<usize> = self.inflight.keys().copied().collect();
-        for slot in active {
-            let inf = self.inflight.get_mut(&slot).unwrap();
+        for (slot, row) in rows {
+            let Some(inf) = self.inflight.get_mut(&slot) else { continue };
             // The token just processed at `pos` becomes output history.
             let current = self.slots.get(slot).unwrap().next_token;
             inf.tokens.push(current);
-            let next = inf.sampler.sample(&logits[slot * v..(slot + 1) * v], &mut inf.rng);
+            let next = inf.sampler.sample(&row, &mut inf.rng);
             let done = self.slots.advance(slot, next, EOS);
             if done {
                 let inf = self.inflight.remove(&slot).unwrap();
@@ -134,7 +149,7 @@ impl Scheduler {
                 let _ = inf.reply.send(Response {
                     id: inf.request.id,
                     text: tokenizer::decode(&inf.tokens),
-                    prompt_tokens: tokenizer::encode(&inf.request.prompt, true, false).len(),
+                    prompt_tokens: inf.prompt_tokens,
                     tokens: inf.tokens,
                     ttft_ms: inf.ttft_ms,
                     latency_ms: latency,

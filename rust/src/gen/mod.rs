@@ -20,7 +20,19 @@ impl Sampler {
         match self {
             Sampler::Greedy => argmax(logits) as i32,
             Sampler::TopK { k, temperature, .. } => {
-                let idx = top_k(logits, (*k).max(1));
+                // NaN logits sort behind every finite logit (tensor::top_k)
+                // and are dropped here: NaN must never be sampled.
+                let idx: Vec<usize> = top_k(logits, (*k).max(1))
+                    .into_iter()
+                    .filter(|&i| !logits[i].is_nan())
+                    .collect();
+                if idx.is_empty() {
+                    // Every logit is NaN — the distribution is garbage and
+                    // no pick can avoid a NaN logit; return a deterministic
+                    // token 0 (argmax's behavior on all-NaN) rather than
+                    // panicking in the weight math below.
+                    return argmax(logits) as i32;
+                }
                 let t = temperature.max(1e-4);
                 let mx = logits[idx[0]];
                 let weights: Vec<f64> =
@@ -69,7 +81,6 @@ pub fn generate(
     let logits = model.prefill(0, &ids)?;
     let prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
 
-    let s = cfg.slots;
     let mut out = Vec::new();
     let mut next = sampler.sample(&logits, &mut rng);
     let mut pos = ids.len();
@@ -79,12 +90,9 @@ pub fn generate(
             break;
         }
         out.push(next);
-        let mut tokens = vec![0i32; s];
-        let mut positions = vec![0i32; s];
-        tokens[0] = next;
-        positions[0] = pos as i32;
-        let all = model.decode_step(&tokens, &positions)?;
-        next = sampler.sample(&all[..cfg.vocab], &mut rng);
+        // Compact batch of one: only slot 0 is active.
+        let rows = model.decode_active(&[(0, next, pos as i32)])?;
+        next = sampler.sample(&rows[0].1, &mut rng);
         pos += 1;
     }
     let decode_ms = t1.elapsed().as_secs_f64() * 1e3;
@@ -117,6 +125,19 @@ mod tests {
         for _ in 0..50 {
             let t = s.sample(&logits, &mut rng);
             assert!(t == 0 || t == 1, "sampled {t}");
+        }
+    }
+
+    #[test]
+    fn topk_never_samples_nan() {
+        // regression: NaN logits used to panic in top_k; they must also
+        // never be *sampled* even when they fall inside the top-k window.
+        let mut rng = SplitMix64::new(9);
+        let s = Sampler::TopK { k: 4, temperature: 1.0, seed: 9 };
+        let logits = [f32::NAN, 0.5, f32::NAN, 1.0, 0.8];
+        for _ in 0..100 {
+            let t = s.sample(&logits, &mut rng);
+            assert!(t == 1 || t == 3 || t == 4, "sampled NaN index {t}");
         }
     }
 

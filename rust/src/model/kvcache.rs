@@ -98,6 +98,16 @@ impl SlotManager {
         (tokens, pos)
     }
 
+    /// Compacted decode-step inputs: one `(slot, next_token, pos)` triple
+    /// per *active* slot, in slot order — the batch the scheduler hands to
+    /// `ServingModel::decode_active` so the logits edge only materializes
+    /// rows that will actually be sampled.
+    pub fn active_inputs(&self) -> Vec<(usize, i32, i32)> {
+        self.active()
+            .map(|(i, info)| (i, info.next_token, info.pos as i32))
+            .collect()
+    }
+
     /// Advance a slot after a decode step produced `token`. Returns true if
     /// the sequence is finished (budget exhausted or ctx full).
     pub fn advance(&mut self, slot: usize, token: i32, eos: i32) -> bool {
@@ -142,6 +152,17 @@ mod tests {
         let (tokens, pos) = m.step_inputs();
         assert_eq!(tokens, vec![99, 0, 0]);
         assert_eq!(pos, vec![5, 0, 0]);
+    }
+
+    #[test]
+    fn active_inputs_compact_to_live_slots() {
+        let mut m = SlotManager::new(4, 64);
+        let a = m.alloc(7, 5, 10, 99).unwrap();
+        let b = m.alloc(8, 3, 10, 41).unwrap();
+        m.free(a);
+        assert_eq!(m.active_inputs(), vec![(b, 41, 3)]);
+        let c = m.alloc(9, 2, 10, 17).unwrap();
+        assert_eq!(m.active_inputs(), vec![(c, 17, 2), (b, 41, 3)]);
     }
 
     #[test]

@@ -11,5 +11,5 @@ pub mod weights;
 
 pub use plan::{GraphPlan, Stage};
 pub use scoring::Scorer;
-pub use serving::{ServeStage, ServingModel};
+pub use serving::{ActiveSlot, ServeStage, ServingModel};
 pub use weights::Weights;

@@ -12,6 +12,31 @@
 //!   into the shared residual m, one more combines `F_a(m) + F_b(m)` —
 //!   **two all-reduces per layer pair**, i.e. half of sequential TP.
 //!
+//! ## Resident-activation protocol
+//!
+//! The activation never round-trips through the host between stages. Each
+//! token enters the mesh once (token ids + positions uploaded, counted in
+//! [`crate::parallel::MeshMetrics::host_transfers`]) and leaves once
+//! (logits fetched on rank 0). In between, stages chain the named resident
+//! buffer `act`:
+//!
+//! 1. embed on rank 0, fan the embedding out to every rank as `act`
+//!    (device-to-device broadcast, not host traffic);
+//! 2. each stage half executes with `ArgRef::Resident("act")` as input and
+//!    persists its partial as `act.partial` on its own rank — nothing is
+//!    fetched;
+//! 3. [`Mesh::reduce_into`] gathers the per-rank partials, sums them into
+//!    the coordinator's shadow copy of the residual stream, and scatters
+//!    the combined activation back into `act` on every rank — one sync op
+//!    and one α–β charge, exactly like the value-level all-reduce it
+//!    replaces (2 per stage, `all_reduces_per_token` unchanged);
+//! 4. logits read `act` on rank 0 — the single device→host edge.
+//!
+//! The pre-refactor host-round-trip implementation is kept as
+//! [`ServingModel::decode_step_host_reference`]: it is the bit-exactness
+//! oracle for the resident path (same executables, same reduction order,
+//! same floats) and the baseline `bench_decode` reports against.
+//!
 //! KV caches live as named resident buffers on the owning rank(s); decode
 //! carries them in/out of the layer executables (see worker.rs for the
 //! tuple-output caveat).
@@ -34,6 +59,9 @@ pub enum ServeStage {
     Tp(usize),
     Lp(usize, usize),
 }
+
+/// One active slot's decode input: (slot index, token to feed, position).
+pub type ActiveSlot = (usize, i32, i32);
 
 pub struct ServingModel {
     pub mesh: Mesh,
@@ -195,6 +223,10 @@ impl ServingModel {
 
     /// Prefill `tokens` into `slot`. Returns the logits row for the last
     /// real token ([V]) — the distribution of the first generated token.
+    ///
+    /// Resident protocol: token ids and the slot index are the only
+    /// host→device uploads; the logits row is the only device→host fetch
+    /// besides the embed shadow. Stages chain the resident `act` buffer.
     pub fn prefill(&self, slot: usize, tokens: &[i32]) -> Result<Vec<f32>> {
         let cfg = &self.entry.config;
         let t = crate::text::tokenizer::bucket_for(tokens.len(), &self.buckets)
@@ -202,17 +234,26 @@ impl ServingModel {
         let padded = crate::text::tokenizer::pad_to(tokens, t);
         let d = cfg.d_model;
 
-        // rank 0: embed
-        let mut h = self.mesh.workers[0]
-            .exec(
+        // slot index is fresh host data, referenced by every cache insert
+        self.mesh.upload_all("slot", HostValue::scalar_i32(slot as i32))?;
+
+        // rank 0: embed (the host→device edge), then fan out as `act`
+        let mut shadow = self
+            .mesh
+            .exec_rank(
+                0,
                 &format!("embed_t{t}"),
                 vec![
                     ArgRef::Host(HostValue::i32(vec![t], padded)),
                     ArgRef::Resident("emb".into()),
                 ],
+                vec![],
+                vec![],
             )?
             .remove(0)
             .into_f32()?;
+        self.mesh
+            .broadcast_resident("act", &HostValue::f32(vec![t, d], shadow.clone()))?;
 
         for (sidx, stage) in self.stages.iter().enumerate() {
             let (attn_key, ffn_key, insert_key) = match stage {
@@ -227,25 +268,25 @@ impl ServingModel {
                     format!("cache_insert_full_t{t}"),
                 ),
             };
-            // --- attention partials + KV stripes
+            // --- attention partials (device-resident) + KV stripes
             let calls = (0..self.ranks)
                 .map(|_| {
-                    let mut args =
-                        vec![ArgRef::Host(HostValue::f32(vec![t, d], h.clone()))];
+                    let mut args = vec![ArgRef::Resident("act".into())];
                     args.extend(Self::weight_args(sidx, &["ln1", "wq", "wk", "wv", "wo"]));
                     (
                         attn_key.clone(),
                         args,
-                        vec![None, Some("tmp.k".to_string()), Some("tmp.v".to_string())],
-                        vec![true, false, false],
+                        vec![
+                            Some("act.partial".to_string()),
+                            Some("tmp.k".to_string()),
+                            Some("tmp.v".to_string()),
+                        ],
+                        vec![false, false, false],
                     )
                 })
                 .collect();
-            let mut outs = self.mesh.exec_all(calls)?;
-            let parts: Vec<HostValue> =
-                outs.iter_mut().map(|o| o.remove(0)).collect();
-            let reduced = self.mesh.all_reduce(parts)?;
-            add_slices(&mut h, reduced.as_f32()?);
+            self.mesh.exec_all(calls)?;
+            self.mesh.reduce_into("act.partial", &mut shadow, "act")?;
 
             // --- insert KV stripes into the slot (both ranks, k then v)
             for (stripe, cache) in [("tmp.k", "kv.k"), ("tmp.v", "kv.v")] {
@@ -256,7 +297,7 @@ impl ServingModel {
                             vec![
                                 ArgRef::Resident(format!("{cache}.{sidx}")),
                                 ArgRef::Resident(stripe.to_string()),
-                                ArgRef::Host(HostValue::scalar_i32(slot as i32)),
+                                ArgRef::Resident("slot".into()),
                             ],
                             vec![Some(format!("{cache}.{sidx}"))],
                             vec![false],
@@ -266,31 +307,31 @@ impl ServingModel {
                 self.mesh.exec_all(calls)?;
             }
 
-            // --- FFN partials
+            // --- FFN partials (device-resident)
             let calls = (0..self.ranks)
                 .map(|_| {
-                    let mut args =
-                        vec![ArgRef::Host(HostValue::f32(vec![t, d], h.clone()))];
+                    let mut args = vec![ArgRef::Resident("act".into())];
                     args.extend(Self::weight_args(sidx, &["ln2", "wg", "wu", "wd"]));
-                    (ffn_key.clone(), args, vec![], vec![true])
+                    (ffn_key.clone(), args, vec![Some("act.partial".to_string())], vec![false])
                 })
                 .collect();
-            let mut outs = self.mesh.exec_all(calls)?;
-            let parts: Vec<HostValue> =
-                outs.iter_mut().map(|o| o.remove(0)).collect();
-            let reduced = self.mesh.all_reduce(parts)?;
-            add_slices(&mut h, reduced.as_f32()?);
+            self.mesh.exec_all(calls)?;
+            self.mesh.reduce_into("act.partial", &mut shadow, "act")?;
         }
 
-        // rank 0: logits of the last real token
-        let logits = self.mesh.workers[0]
-            .exec(
+        // rank 0: logits of the last real token (the device→host edge)
+        let logits = self
+            .mesh
+            .exec_rank(
+                0,
                 &format!("logits_t{t}"),
                 vec![
-                    ArgRef::Host(HostValue::f32(vec![t, d], h)),
+                    ArgRef::Resident("act".into()),
                     ArgRef::Resident("lnf".into()),
                     ArgRef::Resident("wout".into()),
                 ],
+                vec![],
+                vec![],
             )?
             .remove(0)
             .into_f32()?;
@@ -299,24 +340,160 @@ impl ServingModel {
         Ok(logits[last * v..(last + 1) * v].to_vec())
     }
 
-    /// One decode step over all S slots. `tokens[s]` / `pos[s]` from the
-    /// slot manager. Returns `[S, V]` logits (row-major).
-    pub fn decode_step(&self, tokens: &[i32], pos: &[i32]) -> Result<Vec<f32>> {
-        let cfg = &self.entry.config;
-        let s = cfg.slots;
+    fn check_step_inputs(&self, tokens: &[i32], pos: &[i32]) -> Result<usize> {
+        let s = self.entry.config.slots;
         if tokens.len() != s || pos.len() != s {
             return Err(Error::Serving(format!(
                 "decode_step wants {s} slot tokens/positions"
             )));
         }
+        Ok(s)
+    }
+
+    /// One decode step over all S device lanes (resident-activation path).
+    /// `tokens[s]` / `pos[s]` from the slot manager. Returns `[S, V]`
+    /// logits (row-major). Host↔device traffic is O(1) in the stage count:
+    /// token ids + positions in, logits out.
+    pub fn decode_step(&self, tokens: &[i32], pos: &[i32]) -> Result<Vec<f32>> {
+        let cfg = &self.entry.config;
+        let s = self.check_step_inputs(tokens, pos)?;
         let d = cfg.d_model;
-        let mut x = self.mesh.workers[0]
-            .exec(
+
+        // positions are fresh host data each token, resident for the stages
+        self.mesh.upload_all("pos", HostValue::i32(vec![s], pos.to_vec()))?;
+
+        // rank 0: embed (host→device edge), fan out as `act`
+        let mut shadow = self
+            .mesh
+            .exec_rank(
+                0,
                 "embed_decode",
                 vec![
                     ArgRef::Host(HostValue::i32(vec![s], tokens.to_vec())),
                     ArgRef::Resident("emb".into()),
                 ],
+                vec![],
+                vec![],
+            )?
+            .remove(0)
+            .into_f32()?;
+        self.mesh
+            .broadcast_resident("act", &HostValue::f32(vec![s, d], shadow.clone()))?;
+
+        for (sidx, stage) in self.stages.iter().enumerate() {
+            let (attn_key, ffn_key) = match stage {
+                ServeStage::Tp(_) => ("tpattn_decode", "tpffn_decode"),
+                ServeStage::Lp(..) => ("lpattn_decode", "lpffn_decode"),
+            };
+            let calls = (0..self.ranks)
+                .map(|_| {
+                    let mut args = vec![ArgRef::Resident("act".into())];
+                    args.extend(Self::weight_args(sidx, &["ln1", "wq", "wk", "wv", "wo"]));
+                    args.push(ArgRef::Resident(format!("kv.k.{sidx}")));
+                    args.push(ArgRef::Resident(format!("kv.v.{sidx}")));
+                    args.push(ArgRef::Resident("pos".into()));
+                    (
+                        attn_key.to_string(),
+                        args,
+                        vec![
+                            Some("act.partial".to_string()),
+                            Some(format!("kv.k.{sidx}")),
+                            Some(format!("kv.v.{sidx}")),
+                        ],
+                        vec![false, false, false],
+                    )
+                })
+                .collect();
+            self.mesh.exec_all(calls)?;
+            self.mesh.reduce_into("act.partial", &mut shadow, "act")?;
+
+            let calls = (0..self.ranks)
+                .map(|_| {
+                    let mut args = vec![ArgRef::Resident("act".into())];
+                    args.extend(Self::weight_args(sidx, &["ln2", "wg", "wu", "wd"]));
+                    (
+                        ffn_key.to_string(),
+                        args,
+                        vec![Some("act.partial".to_string())],
+                        vec![false],
+                    )
+                })
+                .collect();
+            self.mesh.exec_all(calls)?;
+            self.mesh.reduce_into("act.partial", &mut shadow, "act")?;
+        }
+
+        // rank 0: logits (the device→host edge)
+        self.mesh
+            .exec_rank(
+                0,
+                "logits_decode",
+                vec![
+                    ArgRef::Resident("act".into()),
+                    ArgRef::Resident("lnf".into()),
+                    ArgRef::Resident("wout".into()),
+                ],
+                vec![],
+                vec![],
+            )?
+            .remove(0)
+            .into_f32()
+    }
+
+    /// One decode step over a *compacted* batch of active slots. Inactive
+    /// device lanes are padded with benign zeros (the AOT executables are
+    /// fixed-shape `[S]`, so device compute — and the `[S, V]` logits
+    /// download — still covers all lanes); the gather at the logits edge is
+    /// host-side: only the active slots' rows are materialized and handed
+    /// to the sampler. Bucketed decode executables would shrink the device
+    /// side too (see ROADMAP).
+    ///
+    /// Returns one `(slot, logits_row)` per input, in input order.
+    pub fn decode_active(&self, active: &[ActiveSlot]) -> Result<Vec<(usize, Vec<f32>)>> {
+        let cfg = &self.entry.config;
+        let s = cfg.slots;
+        if active.is_empty() {
+            return Ok(vec![]);
+        }
+        let mut tokens = vec![0i32; s];
+        let mut pos = vec![0i32; s];
+        for &(slot, tok, p) in active {
+            if slot >= s {
+                return Err(Error::Serving(format!("decode_active: slot {slot} >= {s}")));
+            }
+            tokens[slot] = tok;
+            pos[slot] = p;
+        }
+        let logits = self.decode_step(&tokens, &pos)?;
+        let v = cfg.vocab;
+        Ok(active
+            .iter()
+            .map(|&(slot, _, _)| (slot, logits[slot * v..(slot + 1) * v].to_vec()))
+            .collect())
+    }
+
+    /// Pre-refactor decode step: uploads the activation to every rank as a
+    /// fresh host value at each stage and pulls the partials back for a
+    /// host-side sum — 2 host↔device round-trips per rank per stage.
+    ///
+    /// Kept as the bit-exactness oracle for [`ServingModel::decode_step`]
+    /// (same executables, same reduction order ⇒ identical floats) and as
+    /// the baseline `bench_decode` compares host-transfer counts against.
+    pub fn decode_step_host_reference(&self, tokens: &[i32], pos: &[i32]) -> Result<Vec<f32>> {
+        let cfg = &self.entry.config;
+        let s = self.check_step_inputs(tokens, pos)?;
+        let d = cfg.d_model;
+        let mut x = self
+            .mesh
+            .exec_rank(
+                0,
+                "embed_decode",
+                vec![
+                    ArgRef::Host(HostValue::i32(vec![s], tokens.to_vec())),
+                    ArgRef::Resident("emb".into()),
+                ],
+                vec![],
+                vec![],
             )?
             .remove(0)
             .into_f32()?;
@@ -365,14 +542,17 @@ impl ServingModel {
             add_slices(&mut x, reduced.as_f32()?);
         }
 
-        self.mesh.workers[0]
-            .exec(
+        self.mesh
+            .exec_rank(
+                0,
                 "logits_decode",
                 vec![
                     ArgRef::Host(HostValue::f32(vec![s, d], x)),
                     ArgRef::Resident("lnf".into()),
                     ArgRef::Resident("wout".into()),
                 ],
+                vec![],
+                vec![],
             )?
             .remove(0)
             .into_f32()
@@ -433,5 +613,61 @@ mod tests {
         assert!(out.iter().all(|x| x.is_finite()));
         let (sync_ops, _, _, _) = m.mesh.metrics.snapshot();
         assert_eq!(sync_ops as usize, m.all_reduces_per_token());
+    }
+
+    /// The acceptance criterion in numbers: a decode token costs a constant
+    /// number of host↔device transfers — token ids + positions in, the
+    /// embed shadow and logits out — independent of the stage count.
+    #[test]
+    fn decode_host_transfers_are_constant_in_depth() {
+        let mut per_plan = Vec::new();
+        for (stages, planner) in [
+            (12, Box::new(|n| transform::sequential(n)) as Box<dyn Fn(usize) -> GraphPlan>),
+            (6, Box::new(|n| transform::pair_parallel(n, 0, 12, true))),
+        ] {
+            let Some(m) = build(&*planner) else { return };
+            assert_eq!(m.effective_depth(), stages);
+            let s = m.entry.config.slots;
+            let prompt: Vec<i32> = "warm".bytes().map(|b| b as i32).collect();
+            m.prefill(0, &prompt).unwrap();
+            m.mesh.metrics.reset();
+            let mut tokens = vec![0i32; s];
+            let mut pos = vec![0i32; s];
+            tokens[0] = 65;
+            pos[0] = prompt.len() as i32;
+            m.decode_step(&tokens, &pos).unwrap();
+            let h = m.mesh.metrics.host_transfers();
+            // tokens upload + pos upload per rank; embed shadow + logits out
+            assert_eq!(h.in_ops, 1 + m.mesh.ranks() as u64);
+            assert_eq!(h.out_ops, 2);
+            per_plan.push(h.ops());
+        }
+        assert_eq!(per_plan[0], per_plan[1], "host traffic must not scale with depth");
+    }
+
+    #[test]
+    fn decode_active_gathers_rows_of_full_step() {
+        let Some(m) = build(|n| transform::pair_parallel(n, 2, 10, true)) else { return };
+        let cfg = m.entry.config.clone();
+        let prompt: Vec<i32> = "ab".bytes().map(|b| b as i32).collect();
+        m.prefill(0, &prompt).unwrap();
+        m.prefill(1, &prompt).unwrap();
+
+        let active = vec![(1usize, 66i32, prompt.len() as i32)];
+        let rows = m.decode_active(&active).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].0, 1);
+        assert_eq!(rows[0].1.len(), cfg.vocab);
+
+        // same device lanes, full-step view: row 1 must match
+        let mut tokens = vec![0i32; cfg.slots];
+        let mut pos = vec![0i32; cfg.slots];
+        tokens[1] = 66;
+        pos[1] = prompt.len() as i32;
+        let full = m.decode_step(&tokens, &pos).unwrap();
+        assert_eq!(rows[0].1, full[cfg.vocab..2 * cfg.vocab].to_vec());
+
+        assert!(m.decode_active(&[(cfg.slots, 1, 0)]).is_err(), "slot bounds checked");
+        assert!(m.decode_active(&[]).unwrap().is_empty());
     }
 }

@@ -18,6 +18,6 @@ pub mod mesh;
 pub mod simnet;
 pub mod worker;
 
-pub use mesh::Mesh;
+pub use mesh::{HostTransfers, Mesh, MeshMetrics};
 pub use simnet::SimNet;
 pub use worker::{ArgRef, WorkerHandle};

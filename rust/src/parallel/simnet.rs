@@ -94,7 +94,10 @@ mod tests {
     }
 
     #[test]
-    fn block_for_is_accurate() {
+    fn block_for_never_undershoots() {
+        // Only the lower bound is guaranteed by the spin tail; an upper
+        // bound on wall-clock is inherently flaky under load (the scheduler
+        // can preempt us arbitrarily long), so we don't assert one.
         let n = net(0.0, 1.0);
         for target_us in [30u64, 150, 600] {
             let d = Duration::from_micros(target_us);
@@ -102,7 +105,6 @@ mod tests {
             n.block_for(d);
             let el = t.elapsed();
             assert!(el >= d, "undershoot: {el:?} < {d:?}");
-            assert!(el < d + Duration::from_millis(2), "overshoot: {el:?} for {d:?}");
         }
     }
 }

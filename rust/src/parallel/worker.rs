@@ -28,8 +28,11 @@ pub enum ArgRef {
 type Reply = Result<Vec<HostValue>>;
 
 pub enum Cmd {
-    /// Upload a named resident buffer (weight shard / initial cache).
+    /// Upload a named resident buffer (weight shard / activation / cache).
     Store { name: String, value: HostValue, done: Sender<std::result::Result<(), String>> },
+    /// Download a named resident buffer to the host (collective gather /
+    /// debugging; the serving hot path fetches only at the logits edge).
+    Fetch { name: String, reply: Sender<std::result::Result<HostValue, String>> },
     /// Drop a named resident buffer.
     Evict { name: String },
     /// Pre-compile an executable.
@@ -66,11 +69,45 @@ impl WorkerHandle {
     }
 
     pub fn store(&self, name: &str, value: HostValue) -> Result<()> {
+        self.store_async(name, value)?
+            .recv()
+            .map_err(|_| Error::msg("worker died"))?
+            .map_err(Error::Msg)
+    }
+
+    /// Fire a store; returns the completion receiver so the caller can
+    /// scatter to every rank before joining.
+    pub fn store_async(
+        &self,
+        name: &str,
+        value: HostValue,
+    ) -> Result<Receiver<std::result::Result<(), String>>> {
         let (dtx, drx) = channel();
         self.tx
             .send(Cmd::Store { name: name.to_string(), value, done: dtx })
             .map_err(|_| Error::msg("worker gone"))?;
-        drx.recv().map_err(|_| Error::msg("worker died"))?.map_err(Error::Msg)
+        Ok(drx)
+    }
+
+    /// Download a named resident buffer.
+    pub fn fetch(&self, name: &str) -> Result<HostValue> {
+        self.fetch_async(name)?
+            .recv()
+            .map_err(|_| Error::msg("worker died"))?
+            .map_err(Error::Msg)
+    }
+
+    /// Fire a fetch; returns the reply receiver so the caller can gather
+    /// from every rank before joining (the collective's gather half).
+    pub fn fetch_async(
+        &self,
+        name: &str,
+    ) -> Result<Receiver<std::result::Result<HostValue, String>>> {
+        let (rtx, rrx) = channel();
+        self.tx
+            .send(Cmd::Fetch { name: name.to_string(), reply: rtx })
+            .map_err(|_| Error::msg("worker gone"))?;
+        Ok(rrx)
     }
 
     pub fn evict(&self, name: &str) {
@@ -133,6 +170,9 @@ fn worker_main(rx: Receiver<Cmd>) {
                     Cmd::Exec { reply, .. } => {
                         let _ = reply.send(Err(format!("engine boot failed: {e}")));
                     }
+                    Cmd::Fetch { reply, .. } => {
+                        let _ = reply.send(Err(format!("engine boot failed: {e}")));
+                    }
                     Cmd::Evict { .. } => {}
                     Cmd::Shutdown => return,
                 }
@@ -153,6 +193,17 @@ fn worker_main(rx: Receiver<Cmd>) {
                     })
                     .map_err(|e| e.to_string());
                 let _ = done.send(r);
+            }
+            Cmd::Fetch { name, reply } => {
+                let r = match resident.get(&name) {
+                    Some(buf) => buf
+                        .to_literal_sync()
+                        .map_err(crate::error::Error::from)
+                        .and_then(|l| crate::runtime::pjrt::literal_to_host(&l))
+                        .map_err(|e| e.to_string()),
+                    None => Err(format!("resident buffer `{name}` missing")),
+                };
+                let _ = reply.send(r);
             }
             Cmd::Evict { name } => {
                 resident.remove(&name);

@@ -104,9 +104,14 @@ pub fn log_softmax_at(logits: &[f32], target: usize) -> f64 {
 }
 
 /// Top-k indices by value, descending (sampling, debug introspection).
+///
+/// Total order via `f32::total_cmp` — `partial_cmp(..).unwrap()` panicked
+/// the serving thread on NaN logits. NaNs are keyed as −∞ so they sink to
+/// the back and are never selected ahead of any finite logit.
 pub fn top_k(xs: &[f32], k: usize) -> Vec<usize> {
+    let key = |x: f32| if x.is_nan() { f32::NEG_INFINITY } else { x };
     let mut idx: Vec<usize> = (0..xs.len()).collect();
-    idx.sort_by(|&a, &b| xs[b].partial_cmp(&xs[a]).unwrap());
+    idx.sort_by(|&a, &b| key(xs[b]).total_cmp(&key(xs[a])));
     idx.truncate(k);
     idx
 }
@@ -151,6 +156,18 @@ mod tests {
     #[test]
     fn top_k_sorted() {
         assert_eq!(top_k(&[0.1, 0.9, 0.5, 0.7], 2), vec![1, 3]);
+    }
+
+    #[test]
+    fn top_k_never_panics_or_prefers_nan() {
+        // regression: partial_cmp(..).unwrap() panicked here
+        let xs = [f32::NAN, 1.0, f32::NAN, 2.0, 0.5];
+        assert_eq!(top_k(&xs, 3), vec![3, 1, 4]);
+        // NaNs only appear after every finite logit is exhausted
+        let all = top_k(&xs, 5);
+        assert_eq!(&all[..3], &[3, 1, 4]);
+        // degenerate all-NaN input: still total-ordered, no panic
+        assert_eq!(top_k(&[f32::NAN, f32::NAN], 1).len(), 1);
     }
 
     #[test]

@@ -163,8 +163,10 @@ fn server_greedy_is_deterministic_across_plans() {
     }
 }
 
-/// The simulated interconnect must make LP visibly cheaper per token than
+/// The simulated interconnect must make LP cheaper per token than
 /// sequential TP at equal workload (the paper's core claim, in miniature).
+/// Asserts on the SimNet's *charged* (modelled) cost, which is
+/// deterministic — wall-clock assertions here were flaky under load.
 #[test]
 fn lp_reduces_sync_cost_per_decode_step() {
     let Some((manifest, weights)) = setup() else { return };
@@ -173,7 +175,7 @@ fn lp_reduces_sync_cost_per_decode_step() {
     let n = cfg.n_layers;
     let net = InterconnectConfig { alpha_s: 200e-6, beta_bytes_per_s: 25e9, enabled: true };
 
-    let mut times = vec![];
+    let mut costs = vec![];
     for plan in [transform::sequential(n), transform::pair_parallel(n, 0, n, true)] {
         let serving =
             ServingModel::new(&manifest, "td-small", &weights, &plan, net.clone()).unwrap();
@@ -183,22 +185,72 @@ fn lp_reduces_sync_cost_per_decode_step() {
         let pos = vec![16i32; cfg.slots];
         serving.decode_step(&tok, &pos).unwrap(); // warm
         serving.mesh.metrics.reset();
-        let t0 = std::time::Instant::now();
         for _ in 0..3 {
             serving.decode_step(&tok, &pos).unwrap();
         }
-        let wall = t0.elapsed();
         let (sync_ops, _, _, _) = serving.mesh.metrics.snapshot();
-        times.push((plan.effective_depth(), sync_ops, wall));
+        let charged_ms = serving.mesh.metrics.modelled_sync_ms();
+        costs.push((plan.effective_depth(), sync_ops, charged_ms));
     }
-    let (d_seq, ops_seq, t_seq) = times[0];
-    let (d_lp, ops_lp, t_lp) = times[1];
+    let (d_seq, ops_seq, c_seq) = costs[0];
+    let (d_lp, ops_lp, c_lp) = costs[1];
     assert_eq!(d_seq, n);
     assert_eq!(d_lp, n / 2);
     assert_eq!(ops_seq, 2 * ops_lp, "LP must halve the all-reduce count");
     assert!(
-        t_lp < t_seq,
-        "with α=200µs the halved sync count must win: lp {t_lp:?} vs seq {t_seq:?}"
+        c_lp < c_seq,
+        "halved sync count must halve the charged α–β cost: lp {c_lp} ms vs seq {c_seq} ms"
+    );
+}
+
+/// Tentpole regression: the resident-activation decode path must be
+/// bit-identical to the pre-refactor host-round-trip path on a mixed
+/// Tp/Lp plan (same executables, same reduction order — same floats),
+/// with the all-reduce count unchanged (2 per stage) and host↔device
+/// activation traffic collapsed from O(stages) to O(1) per token.
+#[test]
+fn resident_decode_is_bit_identical_to_host_reference() {
+    let Some((manifest, weights)) = setup() else { return };
+    let entry = manifest.model("td-small").unwrap();
+    let cfg = entry.config.clone();
+    // mixed plan: Seq (Tp) stages outside the [4, 10) window, Lp pairs inside
+    let plan = transform::pair_parallel(cfg.n_layers, 4, 10, true);
+    let stages = plan.effective_depth();
+    let serving = ServingModel::new(&manifest, "td-small", &weights, &plan, no_net()).unwrap();
+
+    let a: Vec<i32> = tokenizer::encode("the red fox", true, false);
+    let b: Vec<i32> = tokenizer::encode("9 - 4 = ", true, false);
+    serving.prefill(0, &a).unwrap();
+    serving.prefill(1, &b).unwrap();
+    let s = cfg.slots;
+    let mut tok = vec![0i32; s];
+    let mut pos = vec![0i32; s];
+    tok[0] = 32;
+    pos[0] = a.len() as i32;
+    tok[1] = 53;
+    pos[1] = b.len() as i32;
+
+    serving.mesh.metrics.reset();
+    let resident = serving.decode_step(&tok, &pos).unwrap();
+    let (ops_resident, _, _, _) = serving.mesh.metrics.snapshot();
+    let host_resident = serving.mesh.metrics.host_transfers();
+
+    // Same token at the same positions: the reference path rewrites the
+    // same KV entries with the same values, so state stays consistent.
+    serving.mesh.metrics.reset();
+    let reference = serving.decode_step_host_reference(&tok, &pos).unwrap();
+    let (ops_reference, _, _, _) = serving.mesh.metrics.snapshot();
+    let host_reference = serving.mesh.metrics.host_transfers();
+
+    assert_eq!(resident, reference, "resident path diverged from host reference");
+    assert_eq!(ops_resident as usize, 2 * stages, "sync_ops must stay 2 per stage");
+    assert_eq!(ops_resident, ops_reference, "all-reduce accounting must not change");
+    // O(1) vs O(stages): tokens + positions in, embed shadow + logits out.
+    assert_eq!(host_resident.in_ops, 1 + serving.mesh.ranks() as u64);
+    assert_eq!(host_resident.out_ops, 2);
+    assert!(
+        host_reference.ops() >= 4 * stages as u64,
+        "reference path should pay per-stage host traffic, got {host_reference:?}"
     );
 }
 
