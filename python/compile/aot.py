@@ -19,8 +19,17 @@ Artifact inventory (per model, T ∈ SEQ_BUCKETS, S slots, C ctx, w ∈ {D/2, D}
     lpattn_prefill_t{T} (w=D)   [LP FFN prefill reuses ffn_t{T}]
   serving decode shards (KV caches in/out as PJRT buffers):
     tpattn_decode, tpffn_decode, lpattn_decode, lpffn_decode
+  batch-bucketed decode shards (B ∈ batch_buckets(S) = {1, 2, 4, …, S};
+  occupancy-proportional dispatch — see rust runtime::buckets):
+    {tp|lp}attn_decode_b{B} (full [S,C,w] caches + i32 lanes[B] gather/
+    scatter), {tp|lp}ffn_decode_b{B}, embed_decode_b{B}, logits_decode_b{B}
+    (B = S duplicates the fixed-shape non-attention entrypoints; accepted
+    so every bucket carries the same uniform six-key set)
   cache plumbing: cache_insert_{half|full}_t{T}, embed_decode, logits_decode
   ablation: lpfused_attn_t128 (single-device fused dual-layer attention)
+
+The manifest carries a per-model "batch_buckets" list naming the compiled
+B values; the rust BucketSet keys the per-bucket executables off it.
 """
 
 from __future__ import annotations
@@ -35,7 +44,7 @@ import jax.numpy as jnp
 from jax._src.lib import xla_client as xc
 
 from . import model as M
-from .modelcfg import CONFIGS, SEQ_BUCKETS, ModelConfig
+from .modelcfg import CONFIGS, SEQ_BUCKETS, ModelConfig, batch_buckets
 
 F32 = jnp.float32
 I32 = jnp.int32
@@ -121,6 +130,37 @@ def artifact_specs(cfg: ModelConfig, impl: str) -> dict[str, tuple]:
             ["x", "ln2", "wg", "wu", "wd"],
         )
 
+    # Batch-bucketed decode: one executable set per B ∈ batch_buckets(S).
+    # Attention carries the full [S, C, w] caches plus a lanes[B] mapping
+    # (gather row, step, scatter back); embed/ffn/logits are simply the
+    # same entrypoints lowered at batch shape B.
+    for b in batch_buckets(s):
+        for mode, w, fw in (("tp", dh, fh), ("lp", d, f)):
+            arts[f"{mode}attn_decode_b{b}"] = (
+                M.make_shard_attn_decode_bucket(cfg, impl, b),
+                [spec([b, d]), spec([d]), spec([d, w]), spec([d, w]),
+                 spec([d, w]), spec([w, d]), spec([s, c, w]), spec([s, c, w]),
+                 spec([b], I32), spec([b], I32)],
+                ["x", "ln1", "wq", "wk", "wv", "wo", "kcache", "vcache",
+                 "pos", "lanes"],
+            )
+            arts[f"{mode}ffn_decode_b{b}"] = (
+                M.make_shard_ffn_decode(cfg, impl),
+                [spec([b, d]), spec([d]), spec([d, fw]), spec([d, fw]),
+                 spec([fw, d])],
+                ["x", "ln2", "wg", "wu", "wd"],
+            )
+        arts[f"embed_decode_b{b}"] = (
+            M.make_embed_decode(cfg),
+            [spec([b], I32), spec([v, d])],
+            ["tokens", "emb"],
+        )
+        arts[f"logits_decode_b{b}"] = (
+            M.make_logits_decode(cfg, impl),
+            [spec([b, d]), spec([d]), spec([d, v])],
+            ["x", "lnf", "wout"],
+        )
+
     arts["embed_decode"] = (
         M.make_embed_decode(cfg),
         [spec([s], I32), spec([v, d])],
@@ -173,7 +213,11 @@ def build(out_dir: Path, impl: str = "pallas", force: bool = False,
         mdir = out_dir / name
         mdir.mkdir(exist_ok=True)
         arts = artifact_specs(cfg, impl)
-        entry = {"config": cfg.to_dict(), "artifacts": {}}
+        entry = {
+            "config": cfg.to_dict(),
+            "batch_buckets": list(batch_buckets(cfg.slots)),
+            "artifacts": {},
+        }
         for aname, (fn, arg_specs, arg_names) in arts.items():
             text = to_hlo_text(fn, arg_specs)
             rel = f"{name}/{aname}.hlo.txt"

@@ -254,8 +254,12 @@ def make_shard_ffn(cfg: ModelConfig, impl="pallas"):
     return ffn
 
 
-def make_shard_attn_decode(cfg: ModelConfig, impl="pallas"):
-    S, C, hd = cfg.slots, cfg.ctx, cfg.head_dim
+def _decode_step_one(cfg: ModelConfig, impl: str):
+    """Per-lane cached-attention decode step, shared by the full-[S] and
+    batch-bucketed decode makers so both lower the *same* per-lane HLO —
+    the bit-exactness contract between `decode_step` and the bucketed path
+    in the rust serving executor."""
+    C, hd = cfg.ctx, cfg.head_dim
 
     def step_one(x, ln, wq, wk, wv, wo, kc, vc, pos):
         """One slot. x: [D]; kc/vc: [C, w]; pos: scalar i32 (current index)."""
@@ -277,6 +281,13 @@ def make_shard_attn_decode(cfg: ModelConfig, impl="pallas"):
                                        vc2.reshape(C, nh, hd), pos)
         return att.reshape(w) @ wo, kc2, vc2
 
+    return step_one
+
+
+def make_shard_attn_decode(cfg: ModelConfig, impl="pallas"):
+    S = cfg.slots
+    step_one = _decode_step_one(cfg, impl)
+
     def attn(x, ln, wq, wk, wv, wo, kcache, vcache, pos):
         """All S slots. x: [S,D]; caches: [S,C,w]; pos: i32 [S].
 
@@ -292,6 +303,36 @@ def make_shard_attn_decode(cfg: ModelConfig, impl="pallas"):
             kcs.append(kc2)
             vcs.append(vc2)
         return (jnp.stack(parts), jnp.stack(kcs), jnp.stack(vcs))
+    return attn
+
+
+def make_shard_attn_decode_bucket(cfg: ModelConfig, impl="pallas", b=1):
+    """Batch-bucketed decode attention: B compute lanes over the full [S]
+    KV cache. Lane i serves slot `lanes[i]` — its cache row is gathered,
+    stepped with the shared per-lane kernel, and scattered back — so device
+    compute (and the partial handed to the all-reduce) scales with B, not S.
+
+    Padded lanes duplicate a live lane (the rust coordinator repeats lane
+    0): the scatter loop is sequential and a duplicate recomputes the same
+    per-lane step from identical inputs, so it rewrites the same cache row
+    with identical bits — benign whatever the other slots hold. Lanes
+    addressing a free slot are equally safe (the next prefill's
+    cache_insert overwrites the whole row).
+    """
+    step_one = _decode_step_one(cfg, impl)
+
+    def attn(x, ln, wq, wk, wv, wo, kcache, vcache, pos, lanes):
+        """x: [B,D]; caches: [S,C,w]; pos, lanes: i32 [B]."""
+        parts = []
+        kc, vc = kcache, vcache
+        for i in range(b):          # static unroll; B is small
+            lane = lanes[i]
+            part, kc2, vc2 = step_one(x[i], ln, wq, wk, wv, wo,
+                                      kc[lane], vc[lane], pos[i])
+            parts.append(part)
+            kc = jax.lax.dynamic_update_slice(kc, kc2[None], (lane, 0, 0))
+            vc = jax.lax.dynamic_update_slice(vc, vc2[None], (lane, 0, 0))
+        return (jnp.stack(parts), kc, vc)
     return attn
 
 

@@ -53,6 +53,23 @@ CONFIGS = {c.name: c for c in (SMALL, BASE)}
 SEQ_BUCKETS = (32, 128, 256)
 
 
+def batch_buckets(slots: int) -> tuple[int, ...]:
+    """Decode batch-shape buckets for a model with `slots` KV slots.
+
+    Powers of two up to (and always including) `slots`: the runtime's
+    `BucketSet` selects the smallest bucket covering the live-lane count, so
+    a 1-live-slot round dispatches the B=1 executables instead of paying the
+    full-[S] compute and logits download. Mirrors SEQ_BUCKETS for prefill.
+    """
+    ladder = []
+    b = 1
+    while b < slots:
+        ladder.append(b)
+        b *= 2
+    ladder.append(slots)
+    return tuple(ladder)
+
+
 def n_params(cfg: ModelConfig) -> int:
     d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
     per_layer = 2 * d + 4 * d * d + 3 * d * f

@@ -7,7 +7,7 @@ from pathlib import Path
 import pytest
 
 from compile import aot
-from compile.modelcfg import SMALL, SEQ_BUCKETS
+from compile.modelcfg import SMALL, SEQ_BUCKETS, batch_buckets
 
 
 @pytest.fixture(scope="module")
@@ -27,6 +27,31 @@ def test_inventory_complete(specs):
         assert f"{mode}ffn_decode" in specs
     assert "embed_decode" in specs and "logits_decode" in specs
     assert "lpfused_attn_t128" in specs
+    for b in batch_buckets(SMALL.slots):
+        for mode in ("tp", "lp"):
+            assert f"{mode}attn_decode_b{b}" in specs
+            assert f"{mode}ffn_decode_b{b}" in specs
+        assert f"embed_decode_b{b}" in specs
+        assert f"logits_decode_b{b}" in specs
+
+
+def test_batch_bucket_ladder():
+    assert batch_buckets(1) == (1,)
+    assert batch_buckets(4) == (1, 2, 4)
+    assert batch_buckets(6) == (1, 2, 4, 6)   # non-power-of-two slots capped
+    assert batch_buckets(8) == (1, 2, 4, 8)
+
+
+def test_bucket_attn_signature(specs):
+    """The bucketed attention carries the full-[S] caches plus a lanes
+    vector — the contract runtime::buckets binds against."""
+    b = batch_buckets(SMALL.slots)[0]
+    _, arg_specs, arg_names = specs[f"tpattn_decode_b{b}"]
+    assert arg_names == ["x", "ln1", "wq", "wk", "wv", "wo", "kcache",
+                         "vcache", "pos", "lanes"]
+    assert arg_specs[0].shape == (b, SMALL.d_model)
+    assert arg_specs[6].shape == (SMALL.slots, SMALL.ctx, SMALL.d_model // 2)
+    assert arg_specs[9].shape == (b,)
 
 
 @pytest.mark.parametrize("name", ["attn_t32", "tpattn_decode",
@@ -61,3 +86,6 @@ def test_built_manifest_matches_inventory():
         assert inv == have, f"{model}: missing {inv - have}, extra {have - inv}"
         for a in entry["artifacts"].values():
             assert (mpath.parent / a["file"]).exists()
+        assert entry["batch_buckets"] == list(
+            batch_buckets(entry["config"]["slots"])
+        ), f"{model}: manifest batch_buckets out of date"

@@ -1,0 +1,141 @@
+"""Batch-bucketed decode: the bit-exactness contract the rust runtime's
+shape-bucket dispatch relies on.
+
+`ServingModel::decode_active` routes a round with L live lanes to the
+smallest covering bucket B and maps lane i -> slot lanes[i]. Because both
+the full-[S] and bucketed attention makers unroll the *same* per-lane step
+(`model._decode_step_one`) and XLA CPU keeps row-wise reductions
+batch-size-independent, the bucketed outputs must equal the corresponding
+full-batch rows bit for bit — asserted here at the JAX level so a kernel or
+lowering change that breaks the contract fails before artifacts ship.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile import tok
+from compile.modelcfg import ModelConfig, batch_buckets
+
+CFG = ModelConfig(name="t", vocab=tok.VOCAB_SIZE, d_model=64, n_layers=4,
+                  n_heads=4, head_dim=16, d_ff=128, ctx=64, slots=4)
+
+
+@pytest.fixture(scope="module", params=["jnp", "pallas"])
+def impl(request):
+    return request.param
+
+
+@pytest.fixture(scope="module")
+def inputs():
+    rng = np.random.default_rng(7)
+    d, c, s = CFG.d_model, CFG.ctx, CFG.slots
+    w = d  # full (lp) width; the tp half-width path shares the same maker
+
+    def t(*shape, scale=0.1):
+        return jnp.asarray(rng.standard_normal(shape).astype(np.float32) * scale)
+
+    return {
+        "x": t(s, d, scale=1.0),
+        "ln": t(d, scale=1.0),
+        "wq": t(d, w), "wk": t(d, w), "wv": t(d, w), "wo": t(w, d),
+        "kc": t(s, c, w), "vc": t(s, c, w),
+        "pos": jnp.asarray(np.array([5, 9, 0, 3], np.int32)),
+    }
+
+
+def test_bucketed_attn_rows_bit_identical(impl, inputs):
+    i = inputs
+    full = jax.jit(M.make_shard_attn_decode(CFG, impl))
+    parts_full, kc_full, vc_full = full(i["x"], i["ln"], i["wq"], i["wk"],
+                                        i["wv"], i["wo"], i["kc"], i["vc"],
+                                        i["pos"])
+
+    lanes = np.array([1, 3], np.int32)  # non-contiguous live slots
+    b = len(lanes)
+    assert b in batch_buckets(CFG.slots)
+    bucket = jax.jit(M.make_shard_attn_decode_bucket(CFG, impl, b))
+    parts_b, kc_b, vc_b = bucket(
+        i["x"][jnp.asarray(lanes)], i["ln"], i["wq"], i["wk"], i["wv"],
+        i["wo"], i["kc"], i["vc"], i["pos"][jnp.asarray(lanes)],
+        jnp.asarray(lanes))
+
+    assert np.array_equal(np.asarray(parts_b), np.asarray(parts_full)[lanes])
+    # gathered rows updated exactly as the full path updates them
+    assert np.array_equal(np.asarray(kc_b)[lanes], np.asarray(kc_full)[lanes])
+    assert np.array_equal(np.asarray(vc_b)[lanes], np.asarray(vc_full)[lanes])
+    # untouched slots' cache rows pass through unmodified
+    idle = [s for s in range(CFG.slots) if s not in lanes]
+    assert np.array_equal(np.asarray(kc_b)[idle], np.asarray(i["kc"])[idle])
+    assert np.array_equal(np.asarray(vc_b)[idle], np.asarray(i["vc"])[idle])
+
+
+def test_padded_lane_duplicating_live_lane_is_idempotent(impl, inputs):
+    """The rust coordinator pads a short round by repeating its first live
+    lane. A duplicate recomputes the same per-lane step from identical
+    inputs, so it must rewrite the same cache row with identical bits and
+    leave every other slot untouched."""
+    i = inputs
+    b = 4
+    lanes = np.array([1, 3, 1, 1], np.int32)  # two pad lanes duplicate slot 1
+    bucket = jax.jit(M.make_shard_attn_decode_bucket(CFG, impl, b))
+    x = i["x"][jnp.asarray(lanes)]
+    pos = i["pos"][jnp.asarray(lanes)]
+    parts, kc, vc = bucket(x, i["ln"], i["wq"], i["wk"], i["wv"], i["wo"],
+                           i["kc"], i["vc"], pos, jnp.asarray(lanes))
+    full = jax.jit(M.make_shard_attn_decode(CFG, impl))
+    parts_full, kc_full, vc_full = full(i["x"], i["ln"], i["wq"], i["wk"],
+                                        i["wv"], i["wo"], i["kc"], i["vc"],
+                                        i["pos"])
+    # live lanes bit-match the full path; the duplicates equal lane 0
+    assert np.array_equal(np.asarray(parts)[0], np.asarray(parts_full)[1])
+    assert np.array_equal(np.asarray(parts)[1], np.asarray(parts_full)[3])
+    assert np.array_equal(np.asarray(parts)[2], np.asarray(parts)[0])
+    assert np.array_equal(np.asarray(parts)[3], np.asarray(parts)[0])
+    assert np.array_equal(np.asarray(kc)[[1, 3]], np.asarray(kc_full)[[1, 3]])
+    assert np.array_equal(np.asarray(vc)[[1, 3]], np.asarray(vc_full)[[1, 3]])
+    # slots not addressed by any lane pass through unmodified
+    assert np.array_equal(np.asarray(kc)[[0, 2]], np.asarray(i["kc"])[[0, 2]])
+    assert np.array_equal(np.asarray(vc)[[0, 2]], np.asarray(i["vc"])[[0, 2]])
+
+    # a lane addressing a free slot is equally benign: it writes only that row
+    lanes_free = np.array([1, 3, 0, 0], np.int32)
+    pos_free = jnp.asarray(np.array([9, 3, 0, 0], np.int32))  # pos[slot] 1, 3
+    parts2, kc2, _ = bucket(i["x"][jnp.asarray(lanes_free)], i["ln"], i["wq"],
+                            i["wk"], i["wv"], i["wo"], i["kc"], i["vc"],
+                            pos_free, jnp.asarray(lanes_free))
+    assert np.isfinite(np.asarray(parts2)).all()
+    assert np.array_equal(np.asarray(kc2)[[1, 3]], np.asarray(kc_full)[[1, 3]])
+    assert np.array_equal(np.asarray(kc2)[2], np.asarray(i["kc"])[2])
+
+
+def test_rowwise_entrypoints_bit_identical_across_widths(impl, inputs):
+    """ffn / logits / embed lowered at bucket width B must reproduce the
+    corresponding rows of the full-[S] lowering exactly."""
+    i = inputs
+    rng = np.random.default_rng(11)
+    d, f, v = CFG.d_model, CFG.d_ff, CFG.vocab
+
+    def t(*shape):
+        return jnp.asarray(rng.standard_normal(shape).astype(np.float32) * 0.1)
+
+    wg, wu, wd = t(d, f), t(d, f), t(f, d)
+    ffn = M.make_shard_ffn_decode(CFG, impl)
+    f_full = jax.jit(ffn)(i["x"], i["ln"], wg, wu, wd)[0]
+    f_b = jax.jit(ffn)(i["x"][1:3], i["ln"], wg, wu, wd)[0]
+    assert np.array_equal(np.asarray(f_full)[1:3], np.asarray(f_b))
+
+    wout = t(d, v)
+    logits = M.make_logits_decode(CFG, impl)
+    l_full = jax.jit(logits)(i["x"], i["ln"], wout)[0]
+    l_b = jax.jit(logits)(i["x"][2:3], i["ln"], wout)[0]
+    assert np.array_equal(np.asarray(l_full)[2:3], np.asarray(l_b))
+
+    emb = t(v, d)
+    tokens = jnp.asarray(np.array([4, 250, 7, 19], np.int32))
+    embed = M.make_embed_decode(CFG)
+    e_full = jax.jit(embed)(tokens, emb)[0]
+    e_b = jax.jit(embed)(tokens[1:2], emb)[0]
+    assert np.array_equal(np.asarray(e_full)[1:2], np.asarray(e_b))

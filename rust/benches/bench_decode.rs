@@ -6,6 +6,11 @@
 //! host↔device transfers per decode token (O(1) — token ids + positions
 //! in, embed shadow + logits out) against the pre-refactor host-round-trip
 //! reference path (O(stages)).
+//!
+//! The occupancy sweep at the end shows shape-bucket dispatch at work: a
+//! round with L live slots runs the smallest covering batch bucket, so
+//! modelled device compute and the logits download scale with L (a
+//! 1-live-slot round on an S-slot model dispatches B=1, not B=S).
 
 use truedepth::bench::Bench;
 use truedepth::harness::{default_net, no_net};
@@ -75,5 +80,39 @@ fn main() {
             );
         }
     }
+
+    // --- occupancy-proportional dispatch (shape buckets) -----------------
+    let plan = transform::pair_parallel(n, 2, 10, true);
+    let serving = ServingModel::new(&manifest, "td-small", &weights, &plan, no_net()).unwrap();
+    let s = cfg.slots;
+    let prompt: Vec<i32> = (0..16).map(|i| 97 + (i % 26)).collect();
+    for slot in 0..s {
+        serving.prefill(slot, &prompt).unwrap();
+    }
+    println!(
+        "   shape buckets {:?} (slots {s}, {} flops/lane/token):",
+        serving.bucket_set.buckets(),
+        serving.decode_flops_per_lane(),
+    );
+    for live in 1..=s {
+        let active: Vec<_> = (0..live).map(|slot| (slot, 65i32, prompt.len() as i32)).collect();
+        serving.mesh.metrics.reset();
+        serving.decode_active(&active).unwrap();
+        let flops = serving.mesh.metrics.modelled_flops();
+        let out = serving.mesh.metrics.host_transfers().out_bytes;
+        b.bench_timed(&format!("decode_bucketed_live{live}_of_{s}"), 12, || {
+            let t = std::time::Instant::now();
+            serving.decode_active(&active).unwrap();
+            t.elapsed()
+        });
+        println!(
+            "   occupancy {live}/{s}: modelled {:.2} Mflop/token, logits+shadow download {out} B",
+            flops as f64 / 1e6,
+        );
+    }
+    println!(
+        "   bucket dispatch stats (shape -> rounds/live/padded): {:?}",
+        serving.bucket_set.stats()
+    );
     b.finish();
 }

@@ -52,13 +52,35 @@ fn main() -> truedepth::Result<()> {
         let (sync_ops, sync_ms, compute_ms, _) = serving.mesh.metrics.snapshot();
         let host = serving.mesh.metrics.host_transfers();
         let host_per_tok = host.ops() as f64 / steps as f64;
+        // Modelled device compute per token (deterministic; scales with
+        // the dispatched batch shape — full [S] lanes here).
+        let mflop_per_tok = serving.mesh.metrics.modelled_flops() as f64 / steps as f64 / 1e6;
         println!(
-            "{name:<16}: total {total_ms:>8.2} ms  sync {sync_ms:>8.2} ms ({sync_ops} ops)  compute {compute_ms:>8.2} ms  host xfers/tok {host_per_tok:.1}"
+            "{name:<16}: total {total_ms:>8.2} ms  sync {sync_ms:>8.2} ms ({sync_ops} ops)  compute {compute_ms:>8.2} ms ({mflop_per_tok:.2} Mflop/tok)  host xfers/tok {host_per_tok:.1}"
         );
         rows.push(format!(
-            "{name},{total_ms:.2},{sync_ms:.2},{compute_ms:.2},{sync_ops},{host_per_tok:.1}"
+            "{name},{total_ms:.2},{sync_ms:.2},{compute_ms:.2},{sync_ops},{host_per_tok:.1},{mflop_per_tok:.2}"
         ));
         results.push((total_ms, sync_ms, compute_ms, sync_ops));
+    }
+
+    // Shape-bucket dispatch: the same 2-layer LP sub-model at occupancy 1
+    // bills the B=1 bucket — device compute and the logits download drop
+    // to 1/S of the full-batch round above.
+    {
+        let serving = ServingModel::new(&ctx.manifest, model, &weights, &lp_plan, default_net())?;
+        let prompt: Vec<i32> = (0..seqlen as i32).map(|i| 97 + (i % 26)).collect();
+        serving.prefill(0, &prompt)?;
+        serving.mesh.metrics.reset();
+        serving.decode_active(&[(0, 65, seqlen as i32)])?;
+        let flops = serving.mesh.metrics.modelled_flops();
+        let out = serving.mesh.metrics.host_transfers().out_bytes;
+        println!(
+            "occupancy 1/{}   : modelled {:.2} Mflop/tok  download {out} B  (buckets {:?})",
+            cfg.slots,
+            flops as f64 / 1e6,
+            serving.bucket_set.buckets(),
+        );
     }
 
     let (t_tp, s_tp, c_tp, o_tp) = results[0];
@@ -71,7 +93,7 @@ fn main() -> truedepth::Result<()> {
 
     write_csv(
         &format!("table3_{model}.csv"),
-        "approach,total_ms,sync_ms,compute_ms,sync_ops,host_transfers_per_token",
+        "approach,total_ms,sync_ms,compute_ms,sync_ops,host_transfers_per_token,mflop_per_token",
         &rows,
     );
     Ok(())

@@ -13,6 +13,13 @@ pub struct ServerMetrics {
     pub tokens_generated: AtomicU64,
     pub prefill_tokens: AtomicU64,
     pub decode_steps: AtomicU64,
+    /// Live-lane count of the most recent decode round (gauge).
+    pub live_lanes_last_round: AtomicU64,
+    /// Occupancy histogram: `hist[k]` = decode rounds with k live lanes.
+    /// Together with the gauge this makes bucket-selection quality
+    /// observable: rounds clustered at low occupancy should dispatch small
+    /// buckets (see `runtime::buckets`).
+    occupancy_hist: Mutex<Vec<u64>>,
     ttft_ms: Mutex<Vec<f64>>,
     latency_ms: Mutex<Vec<f64>>,
 }
@@ -23,6 +30,22 @@ impl ServerMetrics {
         self.tokens_generated.fetch_add(tokens as u64, Ordering::Relaxed);
         self.ttft_ms.lock().unwrap().push(ttft_ms);
         self.latency_ms.lock().unwrap().push(latency_ms);
+    }
+
+    /// Record one decode round with `live` occupied lanes.
+    pub fn record_decode_round(&self, live: usize) {
+        self.decode_steps.fetch_add(1, Ordering::Relaxed);
+        self.live_lanes_last_round.store(live as u64, Ordering::Relaxed);
+        let mut hist = self.occupancy_hist.lock().unwrap();
+        if hist.len() <= live {
+            hist.resize(live + 1, 0);
+        }
+        hist[live] += 1;
+    }
+
+    /// Snapshot of the occupancy histogram (index = live lanes per round).
+    pub fn occupancy_histogram(&self) -> Vec<u64> {
+        self.occupancy_hist.lock().unwrap().clone()
     }
 
     pub fn ttft_summary(&self) -> Option<Summary> {
@@ -45,6 +68,20 @@ impl ServerMetrics {
             self.prefill_tokens.load(Ordering::Relaxed),
             self.decode_steps.load(Ordering::Relaxed),
         );
+        let hist = self.occupancy_histogram();
+        if hist.iter().any(|&n| n > 0) {
+            let cells: Vec<String> = hist
+                .iter()
+                .enumerate()
+                .filter(|(_, &n)| n > 0)
+                .map(|(k, n)| format!("{k}×{n}"))
+                .collect();
+            s += &format!(
+                "\ndecode occupancy (live lanes × rounds): {}; last round: {} live",
+                cells.join(" "),
+                self.live_lanes_last_round.load(Ordering::Relaxed),
+            );
+        }
         if let Some(t) = self.ttft_summary() {
             s += &format!("\nttft ms: p50 {:.1} p90 {:.1} p99 {:.1}", t.p50, t.p90, t.p99);
         }
@@ -76,5 +113,22 @@ mod tests {
         let m = ServerMetrics::default();
         assert!(m.ttft_summary().is_none());
         assert!(m.latency_summary().is_none());
+        assert!(m.occupancy_histogram().is_empty());
+        assert!(!m.report().contains("decode occupancy"));
+    }
+
+    #[test]
+    fn occupancy_histogram_and_gauge_track_rounds() {
+        let m = ServerMetrics::default();
+        m.record_decode_round(2);
+        m.record_decode_round(2);
+        m.record_decode_round(4);
+        m.record_decode_round(1);
+        assert_eq!(m.occupancy_histogram(), vec![0, 1, 2, 0, 1]);
+        assert_eq!(m.live_lanes_last_round.load(Ordering::Relaxed), 1);
+        assert_eq!(m.decode_steps.load(Ordering::Relaxed), 4);
+        let r = m.report();
+        assert!(r.contains("1×1 2×2 4×1"), "{r}");
+        assert!(r.contains("last round: 1 live"), "{r}");
     }
 }

@@ -114,48 +114,81 @@ impl Scheduler {
     }
 
     fn decode_round(&mut self) {
-        // Compacted batch: only active slots cross the executor boundary,
-        // and only their logits rows are materialized for sampling. (The
-        // fixed-shape [S] executables still compute — and download — all
-        // lanes; see decode_active.)
+        // Compacted batch: only active slots cross the executor boundary;
+        // decode_active dispatches them at bucket granularity (the device
+        // computes — and downloads — the covering bucket, not all [S]
+        // lanes; see runtime::buckets).
         let active = self.slots.active_inputs();
         let rows = match self.model.decode_active(&active) {
             Ok(r) => r,
-            Err(e) => {
-                for (slot, inf) in self.inflight.drain() {
-                    self.slots.free(slot);
-                    let _ = inf
-                        .reply
-                        .send(Response::failed(inf.request.id, format!("decode failed: {e}")));
-                }
-                return;
-            }
+            // Failure isolation: a batch error must not fail every
+            // in-flight request. Retry each live slot alone; only the
+            // slots that still fail are drained, the rest keep decoding.
+            Err(e) => self.decode_round_isolated(&active, &e),
         };
-        self.metrics
-            .decode_steps
-            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        // Rounds that produced nothing (every slot failed) don't count as
+        // decode steps, matching the pre-isolation accounting; after a
+        // partial failure only the lanes that actually produced a row
+        // count toward the occupancy histogram.
+        if !rows.is_empty() {
+            self.metrics.record_decode_round(rows.len());
+        }
         for (slot, row) in rows {
-            let Some(inf) = self.inflight.get_mut(&slot) else { continue };
-            // The token just processed at `pos` becomes output history.
-            let current = self.slots.get(slot).unwrap().next_token;
-            inf.tokens.push(current);
-            let next = inf.sampler.sample(&row, &mut inf.rng);
-            let done = self.slots.advance(slot, next, EOS);
-            if done {
-                let inf = self.inflight.remove(&slot).unwrap();
-                self.slots.free(slot);
-                let latency = inf.request.submitted_at.elapsed().as_secs_f64() * 1e3;
-                self.metrics.record_completion(inf.ttft_ms, latency, inf.tokens.len());
-                let _ = inf.reply.send(Response {
-                    id: inf.request.id,
-                    text: tokenizer::decode(&inf.tokens),
-                    prompt_tokens: inf.prompt_tokens,
-                    tokens: inf.tokens,
-                    ttft_ms: inf.ttft_ms,
-                    latency_ms: latency,
-                    error: None,
-                });
+            self.apply_sampled_row(slot, &row);
+        }
+    }
+
+    /// Per-slot fallback after a batched decode error: decode each live
+    /// slot in its own round (the B=1 bucket), failing only the slots
+    /// whose single-lane step also errors. Returns the successfully
+    /// decoded rows.
+    fn decode_round_isolated(
+        &mut self,
+        active: &[(usize, i32, i32)],
+        batch_err: &crate::Error,
+    ) -> Vec<(usize, Vec<f32>)> {
+        let mut rows = Vec::new();
+        for &lane in active {
+            match self.model.decode_active(&[lane]) {
+                Ok(mut r) => rows.append(&mut r),
+                Err(e) => {
+                    let slot = lane.0;
+                    self.slots.free(slot);
+                    if let Some(inf) = self.inflight.remove(&slot) {
+                        let _ = inf.reply.send(Response::failed(
+                            inf.request.id,
+                            format!("decode failed: {e} (batch round failed: {batch_err})"),
+                        ));
+                    }
+                }
             }
+        }
+        rows
+    }
+
+    /// Fold one sampled logits row back into its slot: extend the output,
+    /// sample the next token, retire the sequence if finished.
+    fn apply_sampled_row(&mut self, slot: usize, row: &[f32]) {
+        let Some(inf) = self.inflight.get_mut(&slot) else { return };
+        // The token just processed at `pos` becomes output history.
+        let current = self.slots.get(slot).unwrap().next_token;
+        inf.tokens.push(current);
+        let next = inf.sampler.sample(row, &mut inf.rng);
+        let done = self.slots.advance(slot, next, EOS);
+        if done {
+            let inf = self.inflight.remove(&slot).unwrap();
+            self.slots.free(slot);
+            let latency = inf.request.submitted_at.elapsed().as_secs_f64() * 1e3;
+            self.metrics.record_completion(inf.ttft_ms, latency, inf.tokens.len());
+            let _ = inf.reply.send(Response {
+                id: inf.request.id,
+                text: tokenizer::decode(&inf.tokens),
+                prompt_tokens: inf.prompt_tokens,
+                tokens: inf.tokens,
+                ttft_ms: inf.ttft_ms,
+                latency_ms: latency,
+                error: None,
+            });
         }
     }
 }

@@ -41,7 +41,24 @@ impl SlotManager {
         self.free_count() == self.n_slots()
     }
 
+    /// Generation headroom for a prompt of `prompt_len` tokens. The ctx
+    /// stop in [`SlotManager::advance`] fires once `pos + 1 == ctx`, which
+    /// caps generation at `ctx - 1 - prompt_len` tokens — but it is checked
+    /// *after* a token is produced, so any admissible prompt (< ctx) always
+    /// gets at least one decode round (at pos ≤ ctx - 1).
+    pub fn capacity_for(&self, prompt_len: usize) -> usize {
+        if prompt_len >= self.ctx {
+            return 0;
+        }
+        self.ctx.saturating_sub(prompt_len + 1).max(1)
+    }
+
     /// Claim a free slot for a request whose prompt is `prompt_len` tokens.
+    ///
+    /// Admission is checked against the KV budget up front: a request whose
+    /// `prompt_len + max_new` can never fit in `ctx` is rejected here with
+    /// an actionable error instead of occupying a slot for decode rounds
+    /// that are guaranteed to end at the ctx stop.
     pub fn alloc(
         &mut self,
         request_id: u64,
@@ -52,6 +69,15 @@ impl SlotManager {
         if prompt_len >= self.ctx {
             return Err(Error::Serving(format!(
                 "prompt of {prompt_len} tokens exceeds ctx {}",
+                self.ctx
+            )));
+        }
+        let cap = self.capacity_for(prompt_len);
+        if max_new > cap {
+            return Err(Error::Serving(format!(
+                "request wants {max_new} new tokens but a {prompt_len}-token \
+                 prompt leaves room for only {cap} within ctx {} — lower \
+                 max_new_tokens or shorten the prompt",
                 self.ctx
             )));
         }
@@ -146,6 +172,23 @@ mod tests {
     }
 
     #[test]
+    fn rejects_budget_that_can_never_fit_ctx() {
+        let mut m = SlotManager::new(2, 16);
+        assert_eq!(m.capacity_for(10), 5);
+        // 10 prompt + 6 new tokens needs pos 16 — past the ctx stop
+        let err = m.alloc(1, 10, 6, 0).unwrap_err();
+        assert!(err.to_string().contains("max_new"), "{err}");
+        assert_eq!(m.free_count(), 2, "rejected request must not hold a slot");
+        // exactly at capacity is admitted
+        assert!(m.alloc(1, 10, 5, 0).is_ok());
+        // a prompt filling ctx-1 still gets one decode round (at pos ctx-1,
+        // the last valid KV index), so max_new == 1 stays admissible
+        assert_eq!(m.capacity_for(15), 1);
+        assert!(m.alloc(2, 15, 2, 0).is_err());
+        assert!(m.alloc(2, 15, 1, 0).is_ok());
+    }
+
+    #[test]
     fn step_inputs_mask_inactive() {
         let mut m = SlotManager::new(3, 64);
         m.alloc(7, 5, 10, 99).unwrap();
@@ -172,10 +215,12 @@ mod tests {
         assert!(!m.advance(s, 11, 999)); // 1 generated
         assert!(m.advance(s, 12, 999)); // budget of 2 reached
         m.free(s);
-        let s = m.alloc(2, 2, 100, 10).unwrap();
+        let s = m.alloc(2, 2, 5, 10).unwrap();
         assert!(m.advance(s, 999, 999)); // eos
         m.free(s);
-        let s = m.alloc(3, 5, 100, 10).unwrap();
+        // budget == capacity: the last admissible token lands on pos ctx-1,
+        // where the ctx stop and the budget stop coincide
+        let s = m.alloc(3, 5, 2, 10).unwrap();
         assert!(!m.advance(s, 1, 999)); // pos 6
         assert!(m.advance(s, 1, 999)); // pos 7 == ctx-1 → stop
     }

@@ -37,6 +37,27 @@
 //! oracle for the resident path (same executables, same reduction order,
 //! same floats) and the baseline `bench_decode` reports against.
 //!
+//! ## Shape-bucket dispatch
+//!
+//! Decode rounds are dispatched at the granularity the hardware executes:
+//! [`ServingModel::decode_active`] asks the model's
+//! [`crate::runtime::BucketSet`] for the smallest batch bucket
+//! B ∈ `batch_buckets` covering the live-lane count and runs the
+//! per-bucket executables (`{tp,lp}attn_decode_b{B}`, …), so device
+//! compute, the α–β-charged all-reduce payload and the `[B, V]` logits
+//! download all scale with occupancy instead of the slot count. Lane i
+//! serves slot `lanes[i]`; the full `[S, C, w]` KV caches stay resident
+//! and the bucket executables gather/scatter only the addressed rows.
+//! Pad lanes (live < B) duplicate the first live lane — an idempotent
+//! recomputation that rewrites the same cache row with identical bits, so
+//! padding never touches any other slot's state.
+//! Rounds with no covering bucket (legacy manifest,
+//! occupancy above a truncated registry) fall back to the fixed-`[S]`
+//! [`ServingModel::decode_step`]; both paths are bit-identical per row
+//! because the AOT side lowers the same per-lane HLO for every batch
+//! width. Modelled device compute is charged per dispatched lane via
+//! [`crate::parallel::MeshMetrics::charge_flops`].
+//!
 //! KV caches live as named resident buffers on the owning rank(s); decode
 //! carries them in/out of the layer executables (see worker.rs for the
 //! tuple-output caveat).
@@ -49,6 +70,7 @@ use crate::model::plan::{GraphPlan, Stage};
 use crate::model::weights::Weights;
 use crate::parallel::worker::ArgRef;
 use crate::parallel::Mesh;
+use crate::runtime::buckets::{decode_flops_per_lane, BucketChoice, BucketSet};
 use crate::runtime::pjrt::HostValue;
 use crate::runtime::{Manifest, ModelEntry};
 use crate::tensor::add_slices;
@@ -67,7 +89,12 @@ pub struct ServingModel {
     pub mesh: Mesh,
     pub entry: ModelEntry,
     pub stages: Vec<ServeStage>,
+    /// Prefill sequence-length buckets (manifest `seq_buckets`).
     pub buckets: Vec<usize>,
+    /// Decode batch-bucket registry (manifest `batch_buckets`).
+    pub bucket_set: BucketSet,
+    /// Modelled device compute of one decode lane through this plan.
+    flops_per_lane: u64,
     ranks: usize,
 }
 
@@ -97,17 +124,48 @@ impl ServingModel {
         }
         let ranks = 2;
         let mesh = Mesh::new(ranks, net);
+        // Register only buckets whose executables all exist (guards a
+        // manifest listing shapes it never emitted).
+        let usable: Vec<usize> = entry
+            .batch_buckets
+            .iter()
+            .copied()
+            .filter(|&b| {
+                BucketSet::artifact_keys(b)
+                    .iter()
+                    .all(|k| entry.artifacts.contains_key(k))
+            })
+            .collect();
+        let bucket_set = BucketSet::new(&usable, entry.config.slots);
+        // Tp stages split one layer across the mesh; Lp stages run two
+        // whole layers in parallel — twice the device compute per stage.
+        let layers_equiv = stages
+            .iter()
+            .map(|s| match s {
+                ServeStage::Tp(_) => 1,
+                ServeStage::Lp(..) => 2,
+            })
+            .sum();
+        let flops_per_lane = decode_flops_per_lane(&entry.config, layers_equiv);
         let m = ServingModel {
             mesh,
             entry,
             stages,
             buckets: manifest.seq_buckets.clone(),
+            bucket_set,
+            flops_per_lane,
             ranks,
         };
         m.compile_artifacts()?;
         m.upload_weights(weights)?;
         m.init_caches()?;
         Ok(m)
+    }
+
+    /// Modelled device compute one decode lane pays per token under this
+    /// plan (see [`crate::runtime::buckets::decode_flops_per_lane`]).
+    pub fn decode_flops_per_lane(&self) -> u64 {
+        self.flops_per_lane
     }
 
     fn art(&self, name: &str) -> Result<&Path> {
@@ -355,21 +413,41 @@ impl ServingModel {
     /// logits (row-major). Host↔device traffic is O(1) in the stage count:
     /// token ids + positions in, logits out.
     pub fn decode_step(&self, tokens: &[i32], pos: &[i32]) -> Result<Vec<f32>> {
-        let cfg = &self.entry.config;
         let s = self.check_step_inputs(tokens, pos)?;
-        let d = cfg.d_model;
+        self.decode_step_shaped(s, "", tokens, pos, None)
+    }
 
-        // positions are fresh host data each token, resident for the stages
-        self.mesh.upload_all("pos", HostValue::i32(vec![s], pos.to_vec()))?;
+    /// The resident-activation decode body shared by the fixed-`[S]` path
+    /// (`suffix = ""`) and the bucketed path (`suffix = "_b{B}"`, `lanes`
+    /// present): embed on rank 0 → per stage, attention + FFN partials
+    /// reduced into the `act` shadow → logits on rank 0. One body keeps the
+    /// two paths in lockstep — the bit-exactness contract between them.
+    fn decode_step_shaped(
+        &self,
+        shape: usize,
+        suffix: &str,
+        tokens: &[i32],
+        pos: &[i32],
+        lanes: Option<&[i32]>,
+    ) -> Result<Vec<f32>> {
+        let d = self.entry.config.d_model;
+        self.mesh.metrics.charge_flops(shape as u64 * self.flops_per_lane);
+
+        // positions (and the bucketed path's lane→slot mapping) are fresh
+        // host data each token, resident for the stages
+        self.mesh.upload_all("pos", HostValue::i32(vec![shape], pos.to_vec()))?;
+        if let Some(l) = lanes {
+            self.mesh.upload_all("lanes", HostValue::i32(vec![shape], l.to_vec()))?;
+        }
 
         // rank 0: embed (host→device edge), fan out as `act`
         let mut shadow = self
             .mesh
             .exec_rank(
                 0,
-                "embed_decode",
+                &format!("embed_decode{suffix}"),
                 vec![
-                    ArgRef::Host(HostValue::i32(vec![s], tokens.to_vec())),
+                    ArgRef::Host(HostValue::i32(vec![shape], tokens.to_vec())),
                     ArgRef::Resident("emb".into()),
                 ],
                 vec![],
@@ -378,13 +456,15 @@ impl ServingModel {
             .remove(0)
             .into_f32()?;
         self.mesh
-            .broadcast_resident("act", &HostValue::f32(vec![s, d], shadow.clone()))?;
+            .broadcast_resident("act", &HostValue::f32(vec![shape, d], shadow.clone()))?;
 
         for (sidx, stage) in self.stages.iter().enumerate() {
-            let (attn_key, ffn_key) = match stage {
+            let (attn_base, ffn_base) = match stage {
                 ServeStage::Tp(_) => ("tpattn_decode", "tpffn_decode"),
                 ServeStage::Lp(..) => ("lpattn_decode", "lpffn_decode"),
             };
+            let attn_key = format!("{attn_base}{suffix}");
+            let ffn_key = format!("{ffn_base}{suffix}");
             let calls = (0..self.ranks)
                 .map(|_| {
                     let mut args = vec![ArgRef::Resident("act".into())];
@@ -392,8 +472,11 @@ impl ServingModel {
                     args.push(ArgRef::Resident(format!("kv.k.{sidx}")));
                     args.push(ArgRef::Resident(format!("kv.v.{sidx}")));
                     args.push(ArgRef::Resident("pos".into()));
+                    if lanes.is_some() {
+                        args.push(ArgRef::Resident("lanes".into()));
+                    }
                     (
-                        attn_key.to_string(),
+                        attn_key.clone(),
                         args,
                         vec![
                             Some("act.partial".to_string()),
@@ -412,7 +495,7 @@ impl ServingModel {
                     let mut args = vec![ArgRef::Resident("act".into())];
                     args.extend(Self::weight_args(sidx, &["ln2", "wg", "wu", "wd"]));
                     (
-                        ffn_key.to_string(),
+                        ffn_key.clone(),
                         args,
                         vec![Some("act.partial".to_string())],
                         vec![false],
@@ -427,7 +510,7 @@ impl ServingModel {
         self.mesh
             .exec_rank(
                 0,
-                "logits_decode",
+                &format!("logits_decode{suffix}"),
                 vec![
                     ArgRef::Resident("act".into()),
                     ArgRef::Resident("lnf".into()),
@@ -440,36 +523,105 @@ impl ServingModel {
             .into_f32()
     }
 
-    /// One decode step over a *compacted* batch of active slots. Inactive
-    /// device lanes are padded with benign zeros (the AOT executables are
-    /// fixed-shape `[S]`, so device compute — and the `[S, V]` logits
-    /// download — still covers all lanes); the gather at the logits edge is
-    /// host-side: only the active slots' rows are materialized and handed
-    /// to the sampler. Bucketed decode executables would shrink the device
-    /// side too (see ROADMAP).
+    /// One decode step over a *compacted* batch of active slots, dispatched
+    /// at bucket granularity: the smallest batch bucket B covering the live
+    /// count is selected from [`ServingModel::bucket_set`] and the
+    /// per-bucket executables run B compute lanes against the full-`[S]`
+    /// resident KV caches (lane i gathers/scatters slot `lanes[i]`'s row).
+    /// Device compute, all-reduce payload and the `[B, V]` logits download
+    /// are occupancy-proportional; rounds with no covering bucket fall back
+    /// to the fixed-`[S]` [`ServingModel::decode_step`]. Both paths produce
+    /// bit-identical rows (same per-lane HLO on the AOT side).
     ///
     /// Returns one `(slot, logits_row)` per input, in input order.
     pub fn decode_active(&self, active: &[ActiveSlot]) -> Result<Vec<(usize, Vec<f32>)>> {
         let cfg = &self.entry.config;
         let s = cfg.slots;
-        if active.is_empty() {
-            return Ok(vec![]);
-        }
-        let mut tokens = vec![0i32; s];
-        let mut pos = vec![0i32; s];
-        for &(slot, tok, p) in active {
+        let v = cfg.vocab;
+        for &(slot, _, _) in active {
             if slot >= s {
                 return Err(Error::Serving(format!("decode_active: slot {slot} >= {s}")));
             }
-            tokens[slot] = tok;
-            pos[slot] = p;
         }
-        let logits = self.decode_step(&tokens, &pos)?;
-        let v = cfg.vocab;
-        Ok(active
-            .iter()
-            .map(|&(slot, _, _)| (slot, logits[slot * v..(slot + 1) * v].to_vec()))
-            .collect())
+        match self.bucket_set.select(active.len()) {
+            BucketChoice::Skip => Ok(vec![]),
+            BucketChoice::Full => {
+                // Fixed-[S] executables: inactive lanes padded with benign
+                // zeros; only the active rows are materialized for sampling.
+                let mut tokens = vec![0i32; s];
+                let mut pos = vec![0i32; s];
+                for &(slot, tok, p) in active {
+                    tokens[slot] = tok;
+                    pos[slot] = p;
+                }
+                let logits = self.decode_step(&tokens, &pos)?;
+                self.bucket_set.record(s, active.len());
+                Ok(active
+                    .iter()
+                    .map(|&(slot, _, _)| (slot, logits[slot * v..(slot + 1) * v].to_vec()))
+                    .collect())
+            }
+            BucketChoice::Bucket(b) => {
+                self.ensure_bucket_compiled(b)?;
+                let mut tokens = Vec::with_capacity(b);
+                let mut pos = Vec::with_capacity(b);
+                let mut lanes = Vec::with_capacity(b);
+                for &(slot, tok, p) in active {
+                    lanes.push(slot as i32);
+                    tokens.push(tok);
+                    pos.push(p);
+                }
+                // Pad lanes *duplicate* the first live lane: a duplicate
+                // recomputes the identical per-lane step and rewrites the
+                // same cache row with identical bits (sequential scatter,
+                // same inputs), so padding is benign regardless of which
+                // other slots are live — no liveness knowledge needed.
+                let (slot0, tok0, pos0) = active[0];
+                for _ in active.len()..b {
+                    lanes.push(slot0 as i32);
+                    tokens.push(tok0);
+                    pos.push(pos0);
+                }
+                let logits = self.decode_step_bucket(b, &tokens, &pos, &lanes)?;
+                self.bucket_set.record(b, active.len());
+                Ok(active
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &(slot, _, _))| (slot, logits[i * v..(i + 1) * v].to_vec()))
+                    .collect())
+            }
+        }
+    }
+
+    /// Compile one bucket's executables on every rank, once (the
+    /// [`BucketSet`]'s per-bucket cache makes later rounds free).
+    fn ensure_bucket_compiled(&self, b: usize) -> Result<()> {
+        self.bucket_set.ensure_compiled(b, || {
+            for key in BucketSet::artifact_keys(b) {
+                self.mesh.compile_all(&key, self.art(&key)?)?;
+            }
+            Ok(())
+        })
+    }
+
+    /// One decode step over B bucket lanes (resident-activation protocol,
+    /// same body as [`ServingModel::decode_step`] via
+    /// [`ServingModel::decode_step_shaped`]). `lanes[i]` names the KV slot
+    /// lane i serves; `tokens`/`pos` are lane-ordered. Returns `[B, V]`
+    /// logits (row-major, lane-ordered).
+    fn decode_step_bucket(
+        &self,
+        b: usize,
+        tokens: &[i32],
+        pos: &[i32],
+        lanes: &[i32],
+    ) -> Result<Vec<f32>> {
+        if tokens.len() != b || pos.len() != b || lanes.len() != b {
+            return Err(Error::Serving(format!(
+                "decode_step_bucket wants {b} lane tokens/positions/lanes"
+            )));
+        }
+        self.decode_step_shaped(b, &format!("_b{b}"), tokens, pos, Some(lanes))
     }
 
     /// Pre-refactor decode step: uploads the activation to every rank as a
@@ -483,6 +635,7 @@ impl ServingModel {
         let cfg = &self.entry.config;
         let s = self.check_step_inputs(tokens, pos)?;
         let d = cfg.d_model;
+        self.mesh.metrics.charge_flops(s as u64 * self.flops_per_lane);
         let mut x = self
             .mesh
             .exec_rank(
@@ -643,6 +796,114 @@ mod tests {
             per_plan.push(h.ops());
         }
         assert_eq!(per_plan[0], per_plan[1], "host traffic must not scale with depth");
+    }
+
+    /// Acceptance criterion of the shape-bucket subsystem: a bucketed
+    /// decode round on a mixed Tp/Lp plan is bit-identical to the
+    /// full-batch path, and the modelled device compute + logits download
+    /// scale with the dispatched bucket, not the slot count.
+    #[test]
+    fn bucketed_decode_bit_identical_and_occupancy_proportional() {
+        let Some(m) = build(|n| transform::pair_parallel(n, 4, 10, true)) else { return };
+        let cfg = m.entry.config.clone();
+        if m.bucket_set.buckets().is_empty() {
+            return; // legacy artifacts without batch buckets
+        }
+        let (s, v, d) = (cfg.slots, cfg.vocab, cfg.d_model);
+        let pa: Vec<i32> = "the red fox".bytes().map(|b| b as i32).collect();
+        let pb: Vec<i32> = "9 - 4 = ".bytes().map(|b| b as i32).collect();
+        m.prefill(0, &pa).unwrap();
+        m.prefill(2, &pb).unwrap();
+
+        // 2 live slots on a 4-slot model → the B=2 bucket, non-contiguous lanes
+        let active = vec![(0usize, 65i32, pa.len() as i32), (2usize, 66i32, pb.len() as i32)];
+        m.mesh.metrics.reset();
+        let rows = m.decode_active(&active).unwrap();
+        let bucket_flops = m.mesh.metrics.modelled_flops();
+        let bucket_out = m.mesh.metrics.host_transfers().out_bytes;
+        let (bucket_sync, _, _, _) = m.mesh.metrics.snapshot();
+
+        // same lanes through the fixed-[S] executables (idempotent KV writes:
+        // same tokens at the same positions)
+        let mut tok = vec![0i32; s];
+        let mut pos = vec![0i32; s];
+        tok[0] = 65;
+        pos[0] = pa.len() as i32;
+        tok[2] = 66;
+        pos[2] = pb.len() as i32;
+        m.mesh.metrics.reset();
+        let full = m.decode_step(&tok, &pos).unwrap();
+        let full_flops = m.mesh.metrics.modelled_flops();
+        let full_out = m.mesh.metrics.host_transfers().out_bytes;
+
+        assert_eq!(rows[0].0, 0);
+        assert_eq!(rows[1].0, 2);
+        assert_eq!(rows[0].1, full[..v].to_vec(), "slot 0 row diverged");
+        assert_eq!(rows[1].1, full[2 * v..3 * v].to_vec(), "slot 2 row diverged");
+
+        // device compute and downloads (embed shadow [B,D] + logits [B,V])
+        // are billed at the bucket shape
+        assert_eq!(bucket_flops, 2 * m.decode_flops_per_lane());
+        assert_eq!(full_flops, s as u64 * m.decode_flops_per_lane());
+        assert_eq!(bucket_out, (2 * (d + v) * 4) as u64);
+        assert_eq!(full_out, (s * (d + v) * 4) as u64);
+        // all-reduce accounting is unchanged: 2 per stage
+        assert_eq!(bucket_sync as usize, m.all_reduces_per_token());
+
+        let stats = m.bucket_set.stats();
+        assert_eq!(
+            stats,
+            vec![(
+                2,
+                crate::runtime::BucketStats { rounds: 1, live_lanes: 2, padded_lanes: 0 }
+            )]
+        );
+    }
+
+    /// live < B: the pad lane (a duplicate of the first live lane) must
+    /// not perturb any slot's output (bit-compared against the full-[S]
+    /// path) nor any other slot's cache row.
+    #[test]
+    fn bucketed_decode_pad_lane_is_benign() {
+        let Some(m) = build(|n| transform::pair_parallel(n, 2, 10, true)) else { return };
+        let cfg = m.entry.config.clone();
+        if m.bucket_set.buckets().is_empty() {
+            return;
+        }
+        let (s, v) = (cfg.slots, cfg.vocab);
+        let prompt: Vec<i32> = "abcd".bytes().map(|b| b as i32).collect();
+        for slot in 0..3 {
+            m.prefill(slot, &prompt).unwrap();
+        }
+        // 3 live slots → bucket 4 with one pad lane duplicating slot 0
+        let active: Vec<_> =
+            (0..3).map(|slot| (slot, 70 + slot as i32, prompt.len() as i32)).collect();
+        let rows = m.decode_active(&active).unwrap();
+
+        let mut tok = vec![0i32; s];
+        let mut pos = vec![0i32; s];
+        for &(slot, t, p) in &active {
+            tok[slot] = t;
+            pos[slot] = p;
+        }
+        let full = m.decode_step(&tok, &pos).unwrap();
+        for (i, (slot, row)) in rows.iter().enumerate() {
+            assert_eq!(*slot, i);
+            assert_eq!(row, &full[slot * v..(slot + 1) * v], "slot {slot} diverged");
+        }
+        assert_eq!(
+            m.bucket_set.stats(),
+            vec![(
+                4,
+                crate::runtime::BucketStats { rounds: 1, live_lanes: 3, padded_lanes: 1 }
+            )]
+        );
+
+        // untouched slot 3 admits a new sequence as usual
+        m.prefill(3, &prompt).unwrap();
+        let one = m.decode_active(&[(3, 70, prompt.len() as i32)]).unwrap();
+        assert_eq!(one.len(), 1);
+        assert!(one[0].1.iter().all(|x| x.is_finite()));
     }
 
     #[test]

@@ -48,6 +48,12 @@ pub struct MeshMetrics {
     pub modelled_sync_ns: AtomicU64,
     /// Wall time spent in `exec_all` (shard compute, incl. host<->device), ns.
     pub compute_ns: AtomicU64,
+    /// Modelled device compute (flops) charged by the executor. Unlike
+    /// `compute_ns` this is deterministic and shape-accurate: the serving
+    /// model charges `runtime::buckets::decode_flops_per_lane` per
+    /// *dispatched* lane, so a bucketed decode round is billed for the
+    /// bucket shape, not the full slot count.
+    pub modelled_flops: AtomicU64,
     /// Number of exec_all dispatches.
     pub exec_ops: AtomicU64,
     /// Host→device activation/input uploads initiated by the executor.
@@ -83,6 +89,7 @@ impl MeshMetrics {
         self.sync_ns.store(0, Ordering::Relaxed);
         self.modelled_sync_ns.store(0, Ordering::Relaxed);
         self.compute_ns.store(0, Ordering::Relaxed);
+        self.modelled_flops.store(0, Ordering::Relaxed);
         self.exec_ops.store(0, Ordering::Relaxed);
         self.host_in_ops.store(0, Ordering::Relaxed);
         self.host_in_bytes.store(0, Ordering::Relaxed);
@@ -102,6 +109,16 @@ impl MeshMetrics {
     /// Modelled interconnect cost so far, in milliseconds (deterministic).
     pub fn modelled_sync_ms(&self) -> f64 {
         self.modelled_sync_ns.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    /// Charge modelled device compute (see `modelled_flops`).
+    pub fn charge_flops(&self, flops: u64) {
+        self.modelled_flops.fetch_add(flops, Ordering::Relaxed);
+    }
+
+    /// Modelled device compute charged so far, in flops (deterministic).
+    pub fn modelled_flops(&self) -> u64 {
+        self.modelled_flops.load(Ordering::Relaxed)
     }
 
     pub fn host_transfers(&self) -> HostTransfers {
@@ -374,7 +391,10 @@ mod tests {
     fn metrics_reset() {
         let mesh = Mesh::new(1, quiet_net());
         mesh.all_reduce(vec![HostValue::f32(vec![1], vec![1.0])]).unwrap();
+        mesh.metrics.charge_flops(1234);
+        assert_eq!(mesh.metrics.modelled_flops(), 1234);
         mesh.metrics.reset();
+        assert_eq!(mesh.metrics.modelled_flops(), 0);
         let (ops, sync_ms, comp_ms, execs) = mesh.metrics.snapshot();
         assert_eq!((ops, execs), (0, 0));
         assert_eq!(sync_ms, 0.0);

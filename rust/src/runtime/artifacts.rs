@@ -1,6 +1,28 @@
 //! Artifact manifest: the contract between `python/compile/aot.py` and the
 //! rust runtime (artifact names, file paths, argument shapes, model
 //! hyper-parameters).
+//!
+//! ## Schema (format 1)
+//!
+//! ```text
+//! { "format": 1, "source_hash": "...", "impl": "pallas",
+//!   "seq_buckets": [32, 128, 256],          // prefill T buckets (global)
+//!   "models": { "<name>": {
+//!       "config": { vocab, d_model, n_layers, ... , slots },
+//!       "batch_buckets": [1, 2, 4],         // decode B buckets (per model,
+//!                                           // derived from `slots`)
+//!       "artifacts": { "<key>": { "file": "...", "args": [
+//!           { "name": "...", "dtype": "...", "shape": [...] }, ... ] } } } } }
+//! ```
+//!
+//! `batch_buckets` (added with the shape-bucket dispatch subsystem) names
+//! the decode batch shapes B for which per-bucket executables exist —
+//! `{tp,lp}attn_decode_b{B}` (full `[S, C, w]` caches + `i32 lanes[B]`),
+//! `{tp,lp}ffn_decode_b{B}`, `embed_decode_b{B}`, `logits_decode_b{B}` —
+//! each with its own argument signature under `artifacts` like any other
+//! entry. The section is optional: manifests that predate it parse with an
+//! empty list and `runtime::buckets::BucketSet` then routes every round to
+//! the fixed-`[S]` executables.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -66,6 +88,9 @@ pub struct ArtifactInfo {
 #[derive(Clone, Debug)]
 pub struct ModelEntry {
     pub config: ModelConfig,
+    /// Decode batch buckets with compiled per-bucket executables (ascending;
+    /// empty for manifests predating the `batch_buckets` section).
+    pub batch_buckets: Vec<usize>,
     pub artifacts: BTreeMap<String, ArtifactInfo>,
 }
 
@@ -102,6 +127,13 @@ impl Manifest {
             .ok_or_else(|| Error::msg("manifest `models` not an object"))?
         {
             let config = ModelConfig::from_json(entry.req("config")?)?;
+            let batch_buckets: Vec<usize> = entry
+                .get("batch_buckets")
+                .and_then(|v| v.as_arr())
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|b| b.as_usize())
+                .collect();
             let mut artifacts = BTreeMap::new();
             for (aname, a) in entry
                 .req("artifacts")?
@@ -131,7 +163,7 @@ impl Manifest {
                     ArtifactInfo { name: aname.clone(), file, args },
                 );
             }
-            models.insert(mname.clone(), ModelEntry { config, artifacts });
+            models.insert(mname.clone(), ModelEntry { config, batch_buckets, artifacts });
         }
         Ok(Manifest {
             dir: dir.to_path_buf(),
@@ -177,6 +209,53 @@ mod tests {
         assert!(m.models.contains_key("td-small"));
         assert!(m.models.contains_key("td-base"));
         assert_eq!(m.seq_buckets, vec![32, 128, 256]);
+    }
+
+    #[test]
+    fn batch_buckets_match_ladder_and_have_artifacts() {
+        let Some(m) = manifest() else { return };
+        for entry in m.models.values() {
+            let slots = entry.config.slots;
+            assert_eq!(
+                entry.batch_buckets,
+                crate::runtime::BucketSet::ladder(slots),
+                "{}: stale batch_buckets (re-run `make artifacts`)",
+                entry.config.name
+            );
+            for &b in &entry.batch_buckets {
+                for key in crate::runtime::BucketSet::artifact_keys(b) {
+                    assert!(
+                        entry.artifacts.contains_key(&key),
+                        "{}: bucket {b} missing artifact {key}",
+                        entry.config.name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bucket_attn_artifacts_carry_full_caches_and_lanes() {
+        let Some(m) = manifest() else { return };
+        let e = m.model("td-small").unwrap();
+        let cfg = &e.config;
+        for &b in &e.batch_buckets {
+            let a = e.artifact(&format!("tpattn_decode_b{b}")).unwrap();
+            let names: Vec<&str> = a.args.iter().map(|(n, _, _)| n.as_str()).collect();
+            assert_eq!(
+                names,
+                ["x", "ln1", "wq", "wk", "wv", "wo", "kcache", "vcache", "pos", "lanes"]
+            );
+            assert_eq!(a.args[0].2, vec![b, cfg.d_model], "x is bucket-shaped");
+            assert_eq!(
+                a.args[6].2,
+                vec![cfg.slots, cfg.ctx, cfg.d_model / 2],
+                "caches stay full-[S]"
+            );
+            let (_, dt, shape) = &a.args[9];
+            assert_eq!(dt, "int32");
+            assert_eq!(shape, &vec![b], "lanes is [B]");
+        }
     }
 
     #[test]

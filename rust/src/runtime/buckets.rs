@@ -1,0 +1,314 @@
+//! Shape-bucket dispatch: occupancy-proportional decode across the
+//! AOT/runtime boundary.
+//!
+//! The AOT pipeline compiles decode executables per *batch bucket*
+//! B ∈ {1, 2, 4, …, S} (`python/compile/aot.py`, manifest key
+//! `batch_buckets`), mirroring the `seq_buckets` mechanism for prefill.
+//! [`BucketSet`] is the runtime half of that contract: given the number of
+//! live KV slots in a decode round it selects the smallest covering bucket
+//! ([`BucketSet::select`]), lazily compiles that bucket's executables on
+//! every rank exactly once ([`BucketSet::ensure_compiled`]), and keeps
+//! padded-vs-live lane accounting per bucket ([`BucketSet::stats`]).
+//!
+//! Dispatch rules (the satellite edge cases, each covered by a test):
+//!
+//! * occupancy 0 → [`BucketChoice::Skip`] — the round runs nothing;
+//! * occupancy on an exact bucket boundary → that bucket, zero pad lanes;
+//! * occupancy between buckets → next bucket up, `B - live` pad lanes;
+//! * occupancy above the largest registered bucket (truncated registry, or
+//!   a manifest predating `batch_buckets`) → [`BucketChoice::Full`], the
+//!   fixed-`[S]` executables that always exist.
+//!
+//! Lane mapping: bucket executables take the full `[S, C, w]` KV caches
+//! plus an `i32 lanes[B]` vector; lane i gathers slot `lanes[i]`'s cache
+//! row, runs the same per-lane step as the full-batch path
+//! (`model._decode_step_one` on the python side — the bit-exactness
+//! contract), and scatters the updated row back. Pad lanes duplicate the
+//! first live lane: the sequential scatter makes a duplicate an idempotent
+//! rewrite of the same row with identical bits, so padding is safe without
+//! any knowledge of which other slots are live.
+//!
+//! [`decode_flops_per_lane`] is the modelled device-compute cost one lane
+//! pays per decode token; `ServingModel` charges it per dispatched lane
+//! into [`crate::parallel::MeshMetrics`] so `bench_decode` and
+//! `table3_profile` report compute that scales with the *bucket* shape,
+//! not the slot count.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Mutex;
+
+use crate::error::Result;
+use crate::runtime::artifacts::ModelConfig;
+
+/// Outcome of bucket selection for a decode round.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BucketChoice {
+    /// No live lanes — skip the round entirely.
+    Skip,
+    /// Dispatch the executables compiled for this batch bucket.
+    Bucket(usize),
+    /// No covering bucket registered — fall back to the fixed `[S]` path.
+    Full,
+}
+
+/// Per-bucket dispatch accounting.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BucketStats {
+    /// Decode rounds dispatched at this bucket shape.
+    pub rounds: u64,
+    /// Lanes that carried a live slot.
+    pub live_lanes: u64,
+    /// Lanes padded with a free slot to fill the bucket shape.
+    pub padded_lanes: u64,
+}
+
+/// Registry of compiled decode batch buckets for one serving model.
+#[derive(Debug)]
+pub struct BucketSet {
+    /// Ascending bucket shapes available in the manifest (≤ slots).
+    buckets: Vec<usize>,
+    slots: usize,
+    /// Buckets whose executables have been compiled on the mesh (lazy:
+    /// a bucket costs rank-count compilations, paid on first use only).
+    compiled: Mutex<BTreeSet<usize>>,
+    stats: Mutex<BTreeMap<usize, BucketStats>>,
+}
+
+impl BucketSet {
+    /// Build from the manifest's `batch_buckets` list. Shapes are sorted,
+    /// deduplicated and clamped to `(0, slots]`; an empty list (legacy
+    /// manifest) makes every selection fall back to [`BucketChoice::Full`].
+    pub fn new(buckets: &[usize], slots: usize) -> BucketSet {
+        let mut b: Vec<usize> =
+            buckets.iter().copied().filter(|&x| x > 0 && x <= slots).collect();
+        b.sort_unstable();
+        b.dedup();
+        BucketSet {
+            buckets: b,
+            slots,
+            compiled: Mutex::new(BTreeSet::new()),
+            stats: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// The power-of-two ladder `{1, 2, 4, …, slots}` — mirror of
+    /// `python/compile/modelcfg.batch_buckets` for tests and tooling.
+    pub fn ladder(slots: usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        let mut b = 1;
+        while b < slots {
+            out.push(b);
+            b *= 2;
+        }
+        out.push(slots);
+        out
+    }
+
+    pub fn buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+
+    pub fn slots(&self) -> usize {
+        self.slots
+    }
+
+    /// Smallest covering bucket for `live` lanes (see module docs for the
+    /// Skip / boundary / fallback rules).
+    pub fn select(&self, live: usize) -> BucketChoice {
+        if live == 0 {
+            return BucketChoice::Skip;
+        }
+        match self.buckets.iter().copied().find(|&b| b >= live) {
+            Some(b) => BucketChoice::Bucket(b),
+            None => BucketChoice::Full,
+        }
+    }
+
+    /// Executable keys a bucket dispatch binds, in compile order. The
+    /// attention entries additionally take `(kcache, vcache, pos, lanes)`.
+    pub fn artifact_keys(bucket: usize) -> Vec<String> {
+        vec![
+            format!("embed_decode_b{bucket}"),
+            format!("logits_decode_b{bucket}"),
+            format!("tpattn_decode_b{bucket}"),
+            format!("tpffn_decode_b{bucket}"),
+            format!("lpattn_decode_b{bucket}"),
+            format!("lpffn_decode_b{bucket}"),
+        ]
+    }
+
+    /// Run `compile` exactly once per bucket (per-bucket executable cache).
+    /// The lock is held across `compile` so a bucket is never compiled
+    /// twice even under concurrent callers.
+    pub fn ensure_compiled(
+        &self,
+        bucket: usize,
+        compile: impl FnOnce() -> Result<()>,
+    ) -> Result<()> {
+        let mut done = self.compiled.lock().unwrap();
+        if !done.contains(&bucket) {
+            compile()?;
+            done.insert(bucket);
+        }
+        Ok(())
+    }
+
+    /// Record one dispatched round: `shape` lanes bound, `live` of them
+    /// carrying real slots (Full rounds record under `slots`).
+    pub fn record(&self, shape: usize, live: usize) {
+        let mut stats = self.stats.lock().unwrap();
+        let s = stats.entry(shape).or_default();
+        s.rounds += 1;
+        s.live_lanes += live as u64;
+        s.padded_lanes += shape.saturating_sub(live) as u64;
+    }
+
+    /// Snapshot of per-bucket accounting, ascending by bucket shape.
+    pub fn stats(&self) -> Vec<(usize, BucketStats)> {
+        self.stats.lock().unwrap().iter().map(|(&b, &s)| (b, s)).collect()
+    }
+}
+
+/// Modelled device compute of ONE decode lane through `layers_equiv`
+/// transformer layers (Tp stage = 1 layer split across ranks, Lp stage = 2
+/// whole layers — total mesh flops, not per rank), plus the logits head:
+///
+/// * attention projections: 4 matmuls `[1,D]·[D,D]` → `8·D²`
+/// * cached attention over C positions: QK + AV → `4·C·D`
+/// * SwiGLU FFN: 3 matmuls `[1,D]·[D,F]` → `6·D·F`
+/// * logits head: `[1,D]·[D,V]` → `2·D·V`
+///
+/// Deterministic by construction — benches and tests assert that total
+/// charged flops scale with the dispatched bucket shape.
+pub fn decode_flops_per_lane(cfg: &ModelConfig, layers_equiv: usize) -> u64 {
+    let (d, f, c, v) =
+        (cfg.d_model as u64, cfg.d_ff as u64, cfg.ctx as u64, cfg.vocab as u64);
+    let per_layer = 8 * d * d + 4 * c * d + 6 * d * f;
+    layers_equiv as u64 * per_layer + 2 * d * v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn set() -> BucketSet {
+        BucketSet::new(&[1, 2, 4], 4)
+    }
+
+    #[test]
+    fn ladder_matches_python_batch_buckets() {
+        assert_eq!(BucketSet::ladder(1), vec![1]);
+        assert_eq!(BucketSet::ladder(4), vec![1, 2, 4]);
+        assert_eq!(BucketSet::ladder(6), vec![1, 2, 4, 6]);
+        assert_eq!(BucketSet::ladder(8), vec![1, 2, 4, 8]);
+    }
+
+    #[test]
+    fn occupancy_zero_skips_the_round() {
+        assert_eq!(set().select(0), BucketChoice::Skip);
+    }
+
+    #[test]
+    fn exact_boundary_selects_that_bucket() {
+        let s = set();
+        assert_eq!(s.select(1), BucketChoice::Bucket(1));
+        assert_eq!(s.select(2), BucketChoice::Bucket(2));
+        assert_eq!(s.select(4), BucketChoice::Bucket(4));
+    }
+
+    #[test]
+    fn between_buckets_rounds_up() {
+        assert_eq!(set().select(3), BucketChoice::Bucket(4));
+    }
+
+    #[test]
+    fn occupancy_above_largest_bucket_falls_back_to_full() {
+        // truncated registry: buckets stop below the slot count
+        let s = BucketSet::new(&[1, 2], 8);
+        assert_eq!(s.select(2), BucketChoice::Bucket(2));
+        assert_eq!(s.select(5), BucketChoice::Full);
+        // legacy manifest with no batch_buckets section at all
+        let legacy = BucketSet::new(&[], 8);
+        assert_eq!(legacy.select(1), BucketChoice::Full);
+        assert_eq!(legacy.select(0), BucketChoice::Skip);
+    }
+
+    #[test]
+    fn new_clamps_and_sorts_shapes() {
+        let s = BucketSet::new(&[4, 2, 0, 2, 9], 4);
+        assert_eq!(s.buckets(), &[2, 4]);
+        assert_eq!(s.slots(), 4);
+    }
+
+    #[test]
+    fn ensure_compiled_runs_once_per_bucket() {
+        let s = set();
+        let mut calls = 0;
+        s.ensure_compiled(2, || {
+            calls += 1;
+            Ok(())
+        })
+        .unwrap();
+        s.ensure_compiled(2, || {
+            calls += 1;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(calls, 1);
+        // a failed compile is retried on the next call
+        assert!(s.ensure_compiled(4, || Err(crate::Error::msg("boom"))).is_err());
+        s.ensure_compiled(4, || {
+            calls += 1;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(calls, 2);
+    }
+
+    #[test]
+    fn stats_account_live_and_padded_lanes() {
+        let s = set();
+        s.record(2, 2); // exact fit
+        s.record(4, 3); // one pad lane
+        s.record(4, 3);
+        let stats = s.stats();
+        assert_eq!(
+            stats,
+            vec![
+                (2, BucketStats { rounds: 1, live_lanes: 2, padded_lanes: 0 }),
+                (4, BucketStats { rounds: 2, live_lanes: 6, padded_lanes: 2 }),
+            ]
+        );
+    }
+
+    #[test]
+    fn flop_model_scales_with_depth_and_width() {
+        let cfg = ModelConfig {
+            name: "t".into(),
+            vocab: 260,
+            d_model: 128,
+            n_layers: 12,
+            n_heads: 4,
+            head_dim: 32,
+            d_ff: 256,
+            ctx: 256,
+            slots: 4,
+        };
+        let f6 = decode_flops_per_lane(&cfg, 6);
+        let f12 = decode_flops_per_lane(&cfg, 12);
+        assert!(f12 > f6);
+        let head = 2 * cfg.d_model as u64 * cfg.vocab as u64;
+        assert_eq!(f12 - head, 2 * (f6 - head), "per-layer cost is linear in depth");
+    }
+
+    #[test]
+    fn artifact_keys_cover_all_six_entrypoints() {
+        let keys = BucketSet::artifact_keys(2);
+        assert_eq!(keys.len(), 6);
+        for k in &keys {
+            assert!(k.ends_with("_b2"), "{k}");
+        }
+        assert!(keys.contains(&"embed_decode_b2".to_string()));
+        assert!(keys.contains(&"lpattn_decode_b2".to_string()));
+    }
+}

@@ -5,7 +5,9 @@
 //! text, compiles it on the PJRT CPU client and executes it.
 
 pub mod artifacts;
+pub mod buckets;
 pub mod pjrt;
 
 pub use artifacts::{ArtifactInfo, Manifest, ModelConfig, ModelEntry};
+pub use buckets::{BucketChoice, BucketSet, BucketStats};
 pub use pjrt::Engine;
