@@ -14,9 +14,16 @@ Artifact inventory (per model, T ∈ SEQ_BUCKETS, S slots, C ctx, w ∈ {D/2, D}
 
   scoring (single device, full width — composed per-layer by rust):
     embed_t{T}, attn_t{T}, ffn_t{T}, logits_t{T}
-  serving prefill shards:
+  serving prefill shards (monolithic fixed-T path — the bit-exactness
+  oracle for the chunked protocol, and the legacy-manifest fallback):
     tpattn_prefill_t{T} (w=D/2), tpffn_prefill_t{T} (fw=F/2),
     lpattn_prefill_t{T} (w=D)   [LP FFN prefill reuses ffn_t{T}]
+  chunked streaming prefill (K = PREFILL_CHUNK tokens per step at a
+  position offset against the live [S,C,w] caches; fresh K/V rows are
+  inserted in the same pass, masked by the true valid length — see
+  rust model::prefill for the runtime half):
+    {tp|lp}attn_chunk (h [K,D] + caches + slot/off/valid scalars),
+    {tp|lp}ffn_chunk, embed_chunk, logits_chunk
   serving decode shards (KV caches in/out as PJRT buffers):
     tpattn_decode, tpffn_decode, lpattn_decode, lpffn_decode
   batch-bucketed decode shards (B ∈ batch_buckets(S) = {1, 2, 4, …, S};
@@ -29,7 +36,9 @@ Artifact inventory (per model, T ∈ SEQ_BUCKETS, S slots, C ctx, w ∈ {D/2, D}
   ablation: lpfused_attn_t128 (single-device fused dual-layer attention)
 
 The manifest carries a per-model "batch_buckets" list naming the compiled
-B values; the rust BucketSet keys the per-bucket executables off it.
+B values (the rust BucketSet keys the per-bucket executables off it) and a
+top-level "prefill_chunk" giving the chunk token count K; manifests
+predating either section fall back to the fixed-shape paths.
 """
 
 from __future__ import annotations
@@ -44,7 +53,13 @@ import jax.numpy as jnp
 from jax._src.lib import xla_client as xc
 
 from . import model as M
-from .modelcfg import CONFIGS, SEQ_BUCKETS, ModelConfig, batch_buckets
+from .modelcfg import (
+    CONFIGS,
+    PREFILL_CHUNK,
+    SEQ_BUCKETS,
+    ModelConfig,
+    batch_buckets,
+)
 
 F32 = jnp.float32
 I32 = jnp.int32
@@ -161,6 +176,40 @@ def artifact_specs(cfg: ModelConfig, impl: str) -> dict[str, tuple]:
             ["x", "lnf", "wout"],
         )
 
+    # Chunked streaming prefill: one fixed-[K] executable per stage kind,
+    # consuming K tokens at offset `off` against the live [S, C, w] caches.
+    # Attention inserts this chunk's K/V rows itself (masked by `valid` so
+    # the PAD tail of a final partial chunk never lands in the cache) and
+    # attends over the cache prefix — the resumable-prefill contract of
+    # rust model::prefill.
+    k_ = PREFILL_CHUNK
+    assert c % k_ == 0, f"ctx {c} must be a multiple of PREFILL_CHUNK {k_}"
+    for mode, w, fw in (("tp", dh, fh), ("lp", d, f)):
+        arts[f"{mode}attn_chunk"] = (
+            M.make_shard_attn_chunk(cfg, impl, k_),
+            [spec([k_, d]), spec([d]), spec([d, w]), spec([d, w]),
+             spec([d, w]), spec([w, d]), spec([s, c, w]), spec([s, c, w]),
+             spec([], I32), spec([], I32), spec([], I32)],
+            ["h", "ln1", "wq", "wk", "wv", "wo", "kcache", "vcache",
+             "slot", "off", "valid"],
+        )
+        arts[f"{mode}ffn_chunk"] = (
+            M.make_shard_ffn(cfg, impl),
+            [spec([k_, d]), spec([d]), spec([d, fw]), spec([d, fw]),
+             spec([fw, d])],
+            ["h", "ln2", "wg", "wu", "wd"],
+        )
+    arts["embed_chunk"] = (
+        M.make_embed(cfg),
+        [spec([k_], I32), spec([v, d])],
+        ["tokens", "emb"],
+    )
+    arts["logits_chunk"] = (
+        M.make_logits(cfg, impl),
+        [spec([k_, d]), spec([d]), spec([d, v])],
+        ["h", "lnf", "wout"],
+    )
+
     arts["embed_decode"] = (
         M.make_embed_decode(cfg),
         [spec([s], I32), spec([v, d])],
@@ -205,6 +254,7 @@ def build(out_dir: Path, impl: str = "pallas", force: bool = False,
         "source_hash": src_hash,
         "impl": impl,
         "seq_buckets": list(SEQ_BUCKETS),
+        "prefill_chunk": PREFILL_CHUNK,
         "models": {},
     }
     for name, cfg in CONFIGS.items():

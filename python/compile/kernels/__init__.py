@@ -12,9 +12,14 @@ Kernels:
   dual_rmsnorm   — LP fused dual-path norm (one HBM read of x, two outputs)
   flash_attention— causal attention, grid over (head, q-block)
   cached_attention — decode-step attention against a KV cache slot
+  chunk_attention — streaming-prefill chunk against a KV cache slot
   swiglu_ffn     — fused SwiGLU MLP
 """
 
 from .rmsnorm import rmsnorm, dual_rmsnorm            # noqa: F401
-from .attention import flash_attention, cached_attention  # noqa: F401
+from .attention import (                              # noqa: F401
+    flash_attention,
+    cached_attention,
+    chunk_attention,
+)
 from .ffn import swiglu_ffn                           # noqa: F401

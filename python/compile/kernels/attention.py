@@ -14,6 +14,13 @@ for the TPU memory hierarchy — DESIGN.md §Hardware-Adaptation):
   stripe [C, hd]; grid over heads. Positions beyond `pos` are masked, so a
   statically-shaped cache (C = ctx) serves every sequence length.
 
+* ``chunk_attention`` — streaming prefill: a chunk of K queries at global
+  positions off..off+K-1 against the full cache stripe [C, hd] (earlier
+  chunks already inserted). Same grid/tiling as ``flash_attention`` with
+  the causal mask shifted by ``off``; masked columns are exact zeros after
+  the softmax, which keeps chunked prefill bit-identical to the monolithic
+  kernel (trailing zeros drop out of row-wise reductions).
+
 Both are numerically checked against kernels.ref by pytest/hypothesis.
 """
 
@@ -67,6 +74,54 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((t, h, hd), jnp.float32),
         interpret=True,
     )(q, k, v)
+    return out
+
+
+def _chunk_kernel(q_ref, k_ref, v_ref, off_ref, o_ref, *, block_q: int):
+    # q_ref: [block_q, 1, hd] for (head h, q-block i); k/v_ref: [C, 1, hd].
+    i = pl.program_id(1)
+    q = q_ref[:, 0, :]          # [Bq, hd]
+    k = k_ref[:, 0, :]          # [C, hd]
+    v = v_ref[:, 0, :]
+    off = off_ref[0]
+    hd = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # [Bq,C]
+    rows = off + i * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(cols <= rows, s, NEG)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[:, 0, :] = jnp.dot(p, v, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q",))
+def chunk_attention(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                    off: jnp.ndarray, block_q: int = 64) -> jnp.ndarray:
+    """Chunked-prefill MHA. q: [K, H, hd] (RoPE at positions off..off+K-1);
+    k_cache/v_cache: [C, H, hd] with rows [off, off+K) freshly inserted;
+    off: int32 scalar. Row i attends to cache columns j <= off+i. -> [K,H,hd].
+    """
+    t, h, hd = q.shape
+    c = k_cache.shape[0]
+    bq = min(block_q, t)
+    assert t % bq == 0, f"block_q={bq} must divide K={t}"
+    off_arr = jnp.broadcast_to(jnp.asarray(off, jnp.int32).reshape(1), (1,))
+    grid = (h, t // bq)
+    out = pl.pallas_call(
+        functools.partial(_chunk_kernel, block_q=bq),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, 1, hd), lambda h_, i: (i, h_, 0)),
+            pl.BlockSpec((c, 1, hd), lambda h_, i: (0, h_, 0)),
+            pl.BlockSpec((c, 1, hd), lambda h_, i: (0, h_, 0)),
+            pl.BlockSpec((1,), lambda h_, i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bq, 1, hd), lambda h_, i: (i, h_, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, h, hd), jnp.float32),
+        interpret=True,
+    )(q, k_cache, v_cache, off_arr)
     return out
 
 

@@ -69,6 +69,25 @@ def cached_attention(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
     return jnp.einsum("hc,chd->hd", softmax(scores, axis=-1), v_cache)
 
 
+def chunk_attention(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                    off: jnp.ndarray) -> jnp.ndarray:
+    """Chunked-prefill attention against a KV cache stripe.
+
+    q: [K,H,hd] — a chunk of K queries at global positions off..off+K-1;
+    k_cache/v_cache: [C,H,hd] with rows < off filled by earlier chunks and
+    rows [off, off+K) holding this chunk's freshly inserted K/V; off: scalar
+    int32. Row i attends to cache columns j <= off + i.
+    """
+    c, h, hd = k_cache.shape
+    k = q.shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    scores = jnp.einsum("khd,chd->hkc", q, k_cache) * scale    # [H,K,C]
+    rows = off + jnp.arange(k, dtype=jnp.int32)
+    valid = jnp.arange(c)[None, :] <= rows[:, None]            # [K,C]
+    scores = jnp.where(valid[None, :, :], scores, -1e30)
+    return jnp.einsum("hkc,chd->khd", softmax(scores, axis=-1), v_cache)
+
+
 def swiglu_ffn(x: jnp.ndarray, wg: jnp.ndarray, wu: jnp.ndarray,
                wd: jnp.ndarray) -> jnp.ndarray:
     """SwiGLU: (silu(x@wg) * (x@wu)) @ wd. x: [T,D]."""

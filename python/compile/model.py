@@ -32,6 +32,7 @@ from .kernels import (
     rmsnorm as pl_rmsnorm,
     flash_attention as pl_flash,
     cached_attention as pl_cached,
+    chunk_attention as pl_chunk,
     swiglu_ffn as pl_ffn,
 )
 from .kernels import ref
@@ -244,6 +245,63 @@ def make_shard_attn_prefill(cfg: ModelConfig, impl="pallas"):
         kr = ref.apply_rope(k, cos[:, None, :], sin[:, None, :])
         att = _attention(qr, kr, v, impl).reshape(t, w)
         return att @ wo, kr.reshape(t, w), v.reshape(t, w)
+    return attn
+
+
+def make_shard_attn_chunk(cfg: ModelConfig, impl="pallas", chunk=32):
+    """Chunked streaming-prefill attention shard: `chunk` tokens at position
+    offset `off` against the live `[S, C, w]` KV caches, with the fresh K/V
+    rows inserted in the same pass (no separate cache_insert step).
+
+    Bit-exactness contract with `make_shard_attn_prefill`: the projections,
+    RoPE and full-row softmax are the same row-wise math (XLA CPU keeps
+    row-wise ops batch-size-invariant), and every masked cache column is an
+    exact zero after the softmax (exp(-1e30 - m) underflows to 0.0), so a
+    prompt prefilled in chunks reproduces the monolithic fixed-T lowering
+    bit for bit — pinned by `python/tests/test_chunk_prefill.py` and the
+    rust serving test `chunked_prefill_bit_identical_to_monolithic`.
+
+    K/V insertion is masked by `valid`: rows >= valid (the PAD tail of the
+    final partial chunk) keep the cache's previous contents, so PAD-token
+    K/V never lands in the cache. Pad rows still compute (discarded)
+    attention outputs against whatever the unwritten columns hold — finite
+    garbage, never read by callers.
+    """
+    C, hd = cfg.ctx, cfg.head_dim
+    K = chunk
+
+    def attn(h, ln, wq, wk, wv, wo, kcache, vcache, slot, off, valid):
+        """h: [K, D]; caches: [S, C, w]; slot/off/valid: scalar i32 ->
+        (partial [K, D], kcache', vcache')."""
+        w = wq.shape[1]
+        nh = w // hd
+        xn = _norm(h, ln, impl)
+        q = (xn @ wq).reshape(K, nh, hd)
+        k = (xn @ wk).reshape(K, nh, hd)
+        v = (xn @ wv).reshape(K, nh, hd)
+        posv = jnp.arange(K, dtype=jnp.int32) + off
+        cos, sin = ref.rope_angles(posv, hd, cfg.rope_theta)
+        qr = ref.apply_rope(q, cos[:, None, :], sin[:, None, :])
+        kr = ref.apply_rope(k, cos[:, None, :], sin[:, None, :])
+        kslot = jax.lax.dynamic_slice(kcache, (slot, 0, 0), (1, C, w))[0]
+        vslot = jax.lax.dynamic_slice(vcache, (slot, 0, 0), (1, C, w))[0]
+        rows = jnp.arange(K, dtype=jnp.int32)[:, None]
+        ins_k = jnp.where(rows < valid, kr.reshape(K, w),
+                          jax.lax.dynamic_slice(kslot, (off, 0), (K, w)))
+        ins_v = jnp.where(rows < valid, v.reshape(K, w),
+                          jax.lax.dynamic_slice(vslot, (off, 0), (K, w)))
+        kslot = jax.lax.dynamic_update_slice(kslot, ins_k, (off, 0))
+        vslot = jax.lax.dynamic_update_slice(vslot, ins_v, (off, 0))
+        if impl == "pallas":
+            att = pl_chunk(qr, kslot.reshape(C, nh, hd),
+                           vslot.reshape(C, nh, hd), off)
+        else:
+            att = ref.chunk_attention(qr, kslot.reshape(C, nh, hd),
+                                      vslot.reshape(C, nh, hd), off)
+        part = att.reshape(K, w) @ wo
+        kc2 = jax.lax.dynamic_update_slice(kcache, kslot[None], (slot, 0, 0))
+        vc2 = jax.lax.dynamic_update_slice(vcache, vslot[None], (slot, 0, 0))
+        return part, kc2, vc2
     return attn
 
 

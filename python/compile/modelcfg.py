@@ -52,6 +52,13 @@ CONFIGS = {c.name: c for c in (SMALL, BASE)}
 # nearest bucket by the rust coordinator.
 SEQ_BUCKETS = (32, 128, 256)
 
+# Chunked streaming prefill: one fixed-shape executable per stage consumes
+# PREFILL_CHUNK tokens at a position offset against the live KV cache, so a
+# prompt of L tokens costs ceil(L / PREFILL_CHUNK) chunk steps instead of
+# padding to the covering SEQ_BUCKET. Must divide every model ctx (the last
+# chunk's cache window [off, off+chunk) must stay in bounds).
+PREFILL_CHUNK = 32
+
 
 def batch_buckets(slots: int) -> tuple[int, ...]:
     """Decode batch-shape buckets for a model with `slots` KV slots.

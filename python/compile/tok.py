@@ -35,7 +35,14 @@ def decode(ids: list[int]) -> str:
 
 
 def pad_to(ids: list[int], length: int) -> list[int]:
-    """Right-pad (or truncate) to exactly `length` tokens."""
-    if len(ids) >= length:
-        return ids[:length]
+    """Right-pad to exactly `length` tokens.
+
+    `length < len(ids)` used to silently truncate — dropping the prompt
+    tail; it is a caller bug (a mis-sized bucket) and now raises.
+    """
+    if length < len(ids):
+        raise ValueError(
+            f"pad_to: {len(ids)} tokens do not fit length {length} "
+            "(would silently drop the tail)"
+        )
     return ids + [PAD] * (length - len(ids))

@@ -7,7 +7,7 @@ from pathlib import Path
 import pytest
 
 from compile import aot
-from compile.modelcfg import SMALL, SEQ_BUCKETS, batch_buckets
+from compile.modelcfg import PREFILL_CHUNK, SMALL, SEQ_BUCKETS, batch_buckets
 
 
 @pytest.fixture(scope="module")
@@ -33,6 +33,10 @@ def test_inventory_complete(specs):
             assert f"{mode}ffn_decode_b{b}" in specs
         assert f"embed_decode_b{b}" in specs
         assert f"logits_decode_b{b}" in specs
+    for mode in ("tp", "lp"):
+        assert f"{mode}attn_chunk" in specs
+        assert f"{mode}ffn_chunk" in specs
+    assert "embed_chunk" in specs and "logits_chunk" in specs
 
 
 def test_batch_bucket_ladder():
@@ -54,8 +58,25 @@ def test_bucket_attn_signature(specs):
     assert arg_specs[9].shape == (b,)
 
 
+def test_chunk_attn_signature(specs):
+    """The chunk prefill attention carries the full-[S] caches plus the
+    slot/off/valid scalars — the contract rust model::prefill binds
+    against (and inserts its own K/V rows: no separate cache_insert)."""
+    _, arg_specs, arg_names = specs["tpattn_chunk"]
+    assert arg_names == ["h", "ln1", "wq", "wk", "wv", "wo", "kcache",
+                         "vcache", "slot", "off", "valid"]
+    assert arg_specs[0].shape == (PREFILL_CHUNK, SMALL.d_model)
+    assert arg_specs[6].shape == (SMALL.slots, SMALL.ctx, SMALL.d_model // 2)
+    for i in (8, 9, 10):
+        assert arg_specs[i].shape == ()
+        assert arg_specs[i].dtype == aot.I32
+    _, lp_specs, _ = specs["lpattn_chunk"]
+    assert lp_specs[6].shape == (SMALL.slots, SMALL.ctx, SMALL.d_model)
+    assert SMALL.ctx % PREFILL_CHUNK == 0
+
+
 @pytest.mark.parametrize("name", ["attn_t32", "tpattn_decode",
-                                  "cache_insert_half_t32"])
+                                  "cache_insert_half_t32", "tpattn_chunk"])
 def test_lowering_produces_hlo_text(specs, name):
     fn, arg_specs, arg_names = specs[name]
     text = aot.to_hlo_text(fn, arg_specs)
@@ -89,3 +110,5 @@ def test_built_manifest_matches_inventory():
         assert entry["batch_buckets"] == list(
             batch_buckets(entry["config"]["slots"])
         ), f"{model}: manifest batch_buckets out of date"
+    assert manifest.get("prefill_chunk") == PREFILL_CHUNK, \
+        "manifest prefill_chunk out of date (re-run `make artifacts`)"

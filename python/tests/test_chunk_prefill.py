@@ -1,0 +1,207 @@
+"""Chunked streaming prefill: the bit-exactness contract the rust runtime's
+resumable-prefill protocol relies on.
+
+A prompt of L tokens prefilled in ceil(L / K) fixed-[K] chunk steps
+(`model.make_shard_attn_chunk` + the chunk ffn/embed/logits lowerings) must
+reproduce the monolithic fixed-T prefill (`make_shard_attn_prefill` et al.)
+bit for bit: the projections/RoPE/softmax are the same row-wise math (XLA
+CPU keeps row-wise ops batch-size-invariant) and every masked cache column
+is an exact zero after the softmax, so widening the reduction from T to C
+columns cannot change any row. Asserted here at the JAX level so a kernel
+or lowering change that breaks the contract fails before artifacts ship.
+
+Also pinned: the final partial chunk masks its K/V insert by the true
+length (no PAD-token K/V in the cache), and decode never attends to cache
+positions >= L — the monolithic path's padded K/V tail is dead state.
+"""
+
+import math
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile import tok
+from compile.kernels import chunk_attention, ref
+from compile.modelcfg import ModelConfig
+
+CFG = ModelConfig(name="t", vocab=tok.VOCAB_SIZE, d_model=64, n_layers=3,
+                  n_heads=4, head_dim=16, d_ff=128, ctx=64, slots=2)
+K = 16          # chunk size under test (ctx % K == 0, mirroring aot.py)
+T = 64          # monolithic prefill bucket
+L = 39          # true prompt length: 3 chunks, final one partial (valid=7)
+
+
+@pytest.fixture(scope="module", params=["jnp", "pallas"])
+def impl(request):
+    return request.param
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(jax.random.PRNGKey(3), CFG)
+
+
+@pytest.fixture(scope="module")
+def tokens():
+    rng = np.random.default_rng(5)
+    return jnp.asarray(rng.integers(0, 256, size=(L,)).astype(np.int32))
+
+
+def monolithic_prefill(p, tokens, impl):
+    """The serving executor's fixed-T path, single-rank full width: embed ->
+    per layer (attn partial + residual, cache insert, ffn partial +
+    residual) -> logits. Returns (logits [T,V], kcaches, vcaches)."""
+    padded = jnp.concatenate(
+        [tokens, jnp.full((T - len(tokens),), tok.PAD, jnp.int32)])
+    h = M.make_embed(CFG)(padded, p["emb"])[0]
+    attn = M.make_shard_attn_prefill(CFG, impl)
+    ffn = M.make_shard_ffn(CFG, impl)
+    insert = M.make_cache_insert(CFG)
+    kcs, vcs = [], []
+    for lp in p["layers"]:
+        part, k, v = attn(h, lp["ln1"], lp["wq"], lp["wk"], lp["wv"], lp["wo"])
+        h = h + part
+        kc = jnp.zeros((CFG.slots, CFG.ctx, CFG.d_model), jnp.float32)
+        vc = jnp.zeros_like(kc)
+        kcs.append(insert(kc, k, jnp.int32(0))[0])
+        vcs.append(insert(vc, v, jnp.int32(0))[0])
+        h = h + ffn(h, lp["ln2"], lp["wg"], lp["wu"], lp["wd"])[0]
+    logits = M.make_logits(CFG, impl)(h, p["lnf"], p["wout"])[0]
+    return logits, kcs, vcs
+
+
+def chunked_prefill(p, tokens, impl, slot=0):
+    """The resumable chunk protocol: ceil(L/K) chunk steps against live
+    caches. Returns (last-chunk logits [K,V], kcaches, vcaches, valid)."""
+    attn = M.make_shard_attn_chunk(CFG, impl, K)
+    ffn = M.make_shard_ffn(CFG, impl)
+    kcs = [jnp.zeros((CFG.slots, CFG.ctx, CFG.d_model), jnp.float32)
+           for _ in p["layers"]]
+    vcs = [jnp.zeros_like(kcs[0]) for _ in p["layers"]]
+    n = math.ceil(len(tokens) / K)
+    logits = valid = None
+    for j in range(n):
+        off = j * K
+        valid = min(len(tokens) - off, K)
+        chunk = jnp.concatenate(
+            [tokens[off:off + valid],
+             jnp.full((K - valid,), tok.PAD, jnp.int32)])
+        h = M.make_embed(CFG)(chunk, p["emb"])[0]
+        for i, lp in enumerate(p["layers"]):
+            part, kcs[i], vcs[i] = attn(
+                h, lp["ln1"], lp["wq"], lp["wk"], lp["wv"], lp["wo"],
+                kcs[i], vcs[i], jnp.int32(slot), jnp.int32(off),
+                jnp.int32(valid))
+            h = h + part
+            h = h + ffn(h, lp["ln2"], lp["wg"], lp["wu"], lp["wd"])[0]
+        if j == n - 1:
+            logits = M.make_logits(CFG, impl)(h, p["lnf"], p["wout"])[0]
+    return logits, kcs, vcs, valid
+
+
+def test_chunked_prefill_bit_identical_to_monolithic(impl, params, tokens):
+    mono_logits, mono_k, mono_v = monolithic_prefill(params, tokens, impl)
+    chunk_logits, chunk_k, chunk_v, valid = chunked_prefill(
+        params, tokens, impl)
+
+    # the serving executor reads the last real token's logits row
+    expect = np.asarray(mono_logits)[L - 1]
+    got = np.asarray(chunk_logits)[valid - 1]
+    assert np.array_equal(expect, got), \
+        f"last-token logits diverged (impl={impl})"
+
+    # every real position's K/V in every layer matches the monolithic insert
+    for i in range(CFG.n_layers):
+        assert np.array_equal(np.asarray(chunk_k[i])[0, :L],
+                              np.asarray(mono_k[i])[0, :L]), f"layer {i} K"
+        assert np.array_equal(np.asarray(chunk_v[i])[0, :L],
+                              np.asarray(mono_v[i])[0, :L]), f"layer {i} V"
+
+
+def test_final_partial_chunk_masks_pad_kv(impl, params, tokens):
+    """Rows >= L keep the cache's prior contents: the PAD tail of the final
+    partial chunk must not write K/V (poisoned sentinels survive)."""
+    attn = M.make_shard_attn_chunk(CFG, impl, K)
+    sentinel = jnp.full((CFG.slots, CFG.ctx, CFG.d_model), 7.5, jnp.float32)
+    lp = params["layers"][0]
+    off = (L // K) * K           # final chunk
+    valid = L - off
+    chunk = jnp.concatenate(
+        [tokens[off:], jnp.full((K - valid,), tok.PAD, jnp.int32)])
+    h = M.make_embed(CFG)(chunk, params["emb"])[0]
+    part, kc, vc = attn(h, lp["ln1"], lp["wq"], lp["wk"], lp["wv"], lp["wo"],
+                        sentinel, sentinel, jnp.int32(1), jnp.int32(off),
+                        jnp.int32(valid))
+    for c in (kc, vc):
+        c = np.asarray(c)
+        # written rows: [off, off+valid) of slot 1 only
+        assert not np.any(c[1, off:off + valid] == 7.5)
+        assert np.all(c[1, off + valid:] == 7.5), "PAD rows were written"
+        assert np.all(c[0] == 7.5), "other slot touched"
+    assert np.isfinite(np.asarray(part)).all()
+
+
+def test_decode_never_attends_past_prompt_length(impl, params, tokens):
+    """The monolithic path writes PAD-token K/V at rows [L, T); decode at
+    pos >= L must mask them (its own insert overwrites row pos before
+    attending), so corrupting every row >= L changes nothing."""
+    _, mono_k, mono_v = monolithic_prefill(params, tokens, impl)
+    step = M._decode_step_one(CFG, impl)
+    lp = params["layers"][0]
+    x = jnp.asarray(np.random.default_rng(9).standard_normal(
+        (CFG.d_model,)).astype(np.float32))
+
+    kc = np.asarray(mono_k[0])[0]
+    vc = np.asarray(mono_v[0])[0]
+    assert np.any(kc[L:T] != 0.0), "PAD K/V expected in the padded tail"
+    kc_bad, vc_bad = kc.copy(), vc.copy()
+    kc_bad[L:] = 1e9
+    vc_bad[L:] = -1e9
+
+    # run a short decode sequence over both caches: each step overwrites
+    # row `pos` before attending (cols <= pos), so the corrupted tail must
+    # never leak into any step's output
+    kc_a, vc_a = jnp.asarray(kc), jnp.asarray(vc)
+    kc_b, vc_b = jnp.asarray(kc_bad), jnp.asarray(vc_bad)
+    for pos in range(L, L + 4):
+        part_a, kc_a, vc_a = step(
+            x, lp["ln1"], lp["wq"], lp["wk"], lp["wv"], lp["wo"],
+            kc_a, vc_a, jnp.int32(pos))
+        part_b, kc_b, vc_b = step(
+            x, lp["ln1"], lp["wq"], lp["wk"], lp["wv"], lp["wo"],
+            kc_b, vc_b, jnp.int32(pos))
+        assert np.array_equal(np.asarray(part_a), np.asarray(part_b)), \
+            f"decode at pos {pos} attended to positions >= L"
+
+
+def test_chunk_attention_kernel_matches_ref():
+    rng = np.random.default_rng(11)
+    h, hd, c, k = 4, 16, 64, 16
+    q = jnp.asarray(rng.standard_normal((k, h, hd)).astype(np.float32))
+    kc = jnp.asarray(rng.standard_normal((c, h, hd)).astype(np.float32))
+    vc = jnp.asarray(rng.standard_normal((c, h, hd)).astype(np.float32))
+    for off in (0, 16, 48):
+        got = chunk_attention(q, kc, vc, jnp.int32(off))
+        want = ref.chunk_attention(q, kc, vc, jnp.int32(off))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_chunk_attention_masks_future_columns():
+    """Columns > off+row must not influence the output at all."""
+    rng = np.random.default_rng(13)
+    h, hd, c, k = 2, 16, 64, 16
+    off = 16
+    q = jnp.asarray(rng.standard_normal((k, h, hd)).astype(np.float32))
+    kc = np.asarray(rng.standard_normal((c, h, hd)), np.float32)
+    vc = np.asarray(rng.standard_normal((c, h, hd)), np.float32)
+    a = ref.chunk_attention(q, jnp.asarray(kc), jnp.asarray(vc),
+                            jnp.int32(off))
+    kc[off + k:] = 1e9
+    vc[off + k:] = -1e9
+    b = ref.chunk_attention(q, jnp.asarray(kc), jnp.asarray(vc),
+                            jnp.int32(off))
+    assert np.array_equal(np.asarray(a), np.asarray(b))

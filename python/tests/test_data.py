@@ -4,6 +4,8 @@ The GOLDEN_* constants below are duplicated in rust/src/util/rng.rs and
 rust/src/text/corpus.rs tests; a drift on either side fails both suites.
 """
 
+import pytest
+
 from compile import data as D
 from compile import tok
 
@@ -98,4 +100,7 @@ def test_tokenizer_pad():
     ids = tok.encode("abc")
     p = tok.pad_to(ids, 8)
     assert len(p) == 8 and p[3:] == [tok.PAD] * 5
-    assert tok.pad_to(list(range(10)), 4) == [0, 1, 2, 3]
+    assert tok.pad_to(ids, 3) == ids  # exact fit is a no-op
+    # regression: undersized lengths used to silently drop the tail
+    with pytest.raises(ValueError):
+        tok.pad_to(list(range(10)), 4)

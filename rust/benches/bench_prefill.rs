@@ -1,4 +1,6 @@
 //! Prefill latency across sequence buckets, TP vs LP (Fig. 7 prefill task),
+//! a prompt-length sweep of the chunked streaming prefill (modelled flops
+//! must scale with ceil(L / chunk) rather than the covering bucket T),
 //! plus the abl2 single-device fused-pair kernel ablation (paper §4: naive
 //! fusion on one device yields no meaningful gain — the win is in the sync
 //! count, not the kernel).
@@ -43,6 +45,43 @@ fn main() {
                 h.ops(),
                 h.bytes() / 1024,
             );
+        }
+    }
+
+    // Prompt-length sweep: the chunked streaming protocol bills modelled
+    // compute for the ceil(L / K) chunks actually run; the monolithic path
+    // pays the covering bucket T (plus its full [T, V] logits block). The
+    // two are bit-identical in output — only the cost scales differently.
+    {
+        let plan = transform::pair_parallel(n, 2, 10, true);
+        let serving =
+            ServingModel::new(&manifest, "td-small", &weights, &plan, no_net()).unwrap();
+        match serving.prefill_chunk() {
+            None => eprintln!("   (no prefill_chunk in manifest — sweep skipped)"),
+            Some(k) => {
+                println!("   prompt-length sweep (chunk K={k}):");
+                for l in [8usize, 33, 77, 150, 224] {
+                    let prompt: Vec<i32> = (0..l as i32).map(|i| 97 + (i % 26)).collect();
+                    serving.mesh.metrics.reset();
+                    serving.prefill(0, &prompt).unwrap();
+                    let mono = serving.mesh.metrics.modelled_flops();
+                    serving.mesh.metrics.reset();
+                    serving.prefill_chunked(0, &prompt).unwrap();
+                    let chunked = serving.mesh.metrics.modelled_flops();
+                    let chunks = l.div_ceil(k);
+                    println!(
+                        "     L={l:>3}: monolithic {:>7.2} Mflop (bucket pad) vs chunked {:>7.2} Mflop ({chunks} chunks, x{:.2})",
+                        mono as f64 / 1e6,
+                        chunked as f64 / 1e6,
+                        mono as f64 / chunked as f64,
+                    );
+                    b.bench_timed(&format!("prefill_chunked_L{l}"), 8, || {
+                        let t0 = std::time::Instant::now();
+                        serving.prefill_chunked(0, &prompt).unwrap();
+                        t0.elapsed()
+                    });
+                }
+            }
         }
     }
 

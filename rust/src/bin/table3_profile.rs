@@ -83,6 +83,41 @@ fn main() -> truedepth::Result<()> {
         );
     }
 
+    // Chunked streaming prefill: modelled prefill flops scale with
+    // ceil(L / chunk) chunk steps instead of the covering seq bucket T.
+    {
+        let serving = ServingModel::new(&ctx.manifest, model, &weights, &lp_plan, default_net())?;
+        if let Some(k) = serving.prefill_chunk() {
+            let mut prows = Vec::new();
+            for l in [16usize, 72, 136, 224] {
+                let prompt: Vec<i32> = (0..l as i32).map(|i| 97 + (i % 26)).collect();
+                serving.mesh.metrics.reset();
+                serving.prefill(0, &prompt)?;
+                let mono = serving.mesh.metrics.modelled_flops();
+                serving.mesh.metrics.reset();
+                serving.prefill_chunked(0, &prompt)?;
+                let chunked = serving.mesh.metrics.modelled_flops();
+                println!(
+                    "prefill L={l:>3}   : monolithic {:>7.2} Mflop vs chunked {:>7.2} Mflop ({} chunks of {k})",
+                    mono as f64 / 1e6,
+                    chunked as f64 / 1e6,
+                    l.div_ceil(k),
+                );
+                prows.push(format!(
+                    "{l},{k},{},{:.4},{:.4}",
+                    l.div_ceil(k),
+                    mono as f64 / 1e6,
+                    chunked as f64 / 1e6
+                ));
+            }
+            write_csv(
+                &format!("table3_prefill_{model}.csv"),
+                "prompt_len,chunk,chunks,monolithic_mflop,chunked_mflop",
+                &prows,
+            );
+        }
+    }
+
     let (t_tp, s_tp, c_tp, o_tp) = results[0];
     let (t_lp, s_lp, c_lp, o_lp) = results[1];
     println!("\npaper Table 3 shape (TP/LP ratios):");

@@ -1,13 +1,26 @@
 //! Continuous-batching scheduler: the decode loop at the heart of the
 //! serving stack.
 //!
-//! Policy (vLLM-style, prefill-prioritized): each iteration first admits
-//! waiting requests into free KV slots (prefill runs alone — the AOT
-//! prefill executables are batch-1), then runs ONE batched decode step
-//! across all active slots, samples each slot's next token, and retires
-//! finished sequences.
+//! Policy (vLLM-style chunked admission): each iteration first admits
+//! waiting requests — validating BOTH admission bounds (prefill-path
+//! prompt limit and ctx generation budget) via
+//! `ServingModel::check_admission` *before* a KV slot is claimed — then
+//! advances the head of the pending-prefill queue by AT MOST ONE chunk
+//! (`ServingModel::prefill_step`), then runs one batched decode round
+//! across all fully-prefilled slots, samples each slot's next token, and
+//! retires finished sequences.
+//!
+//! Chunked streaming prefill is what keeps long prompts from stalling the
+//! batch: a prompt of L tokens occupies the mesh for `ceil(L / K)` short
+//! chunk steps spread over as many iterations, with a full decode round
+//! for every live slot between consecutive chunks (see `model::prefill`).
+//! On legacy manifests without chunk executables, `prefill_step` degrades
+//! to the monolithic single-pass prefill and the loop behaves exactly like
+//! the pre-chunking scheduler. Slots being prefilled hold their KV
+//! reservation but are skipped by `SlotManager::active_inputs` until their
+//! prompt is fully consumed.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::Sender;
 use std::sync::Arc;
 use std::time::Duration;
@@ -17,6 +30,7 @@ use crate::coordinator::metrics::ServerMetrics;
 use crate::coordinator::request::{Job, Request, Response};
 use crate::gen::Sampler;
 use crate::model::kvcache::SlotManager;
+use crate::model::prefill::ChunkedPrefill;
 use crate::model::ServingModel;
 use crate::text::tokenizer::{self, EOS};
 use crate::util::rng::SplitMix64;
@@ -33,10 +47,23 @@ struct InFlight {
     rng: SplitMix64,
 }
 
+/// An admitted request whose prompt is still streaming into its KV slot,
+/// one chunk per scheduler iteration.
+struct PendingPrefill {
+    state: ChunkedPrefill,
+    request: Request,
+    reply: Sender<Response>,
+    sampler: Sampler,
+    prompt_tokens: usize,
+}
+
 pub struct Scheduler {
     model: ServingModel,
     slots: SlotManager,
     inflight: HashMap<usize, InFlight>, // slot -> request state
+    /// Admitted-but-still-prefilling requests, FIFO; only the head makes
+    /// progress (one chunk per iteration) so chunk steps never compete.
+    pending: VecDeque<PendingPrefill>,
     metrics: Arc<ServerMetrics>,
 }
 
@@ -44,7 +71,7 @@ impl Scheduler {
     pub fn new(model: ServingModel, metrics: Arc<ServerMetrics>) -> Scheduler {
         let cfg = &model.entry.config;
         let slots = SlotManager::new(cfg.slots, cfg.ctx);
-        Scheduler { model, slots, inflight: HashMap::new(), metrics }
+        Scheduler { model, slots, inflight: HashMap::new(), pending: VecDeque::new(), metrics }
     }
 
     pub fn model(&self) -> &ServingModel {
@@ -55,8 +82,9 @@ impl Scheduler {
     pub fn run(&mut self, batcher: &Batcher, batch_wait: Duration) {
         loop {
             let free = self.slots.free_count();
-            // Block on the queue only when idle; when decoding, poll.
-            let wait = if self.inflight.is_empty() {
+            let idle = self.inflight.is_empty() && self.pending.is_empty();
+            // Block on the queue only when idle; when working, poll.
+            let wait = if idle {
                 Duration::from_millis(50)
             } else {
                 batch_wait.min(Duration::from_millis(1))
@@ -65,60 +93,116 @@ impl Scheduler {
             for job in admitted {
                 self.admit(job);
             }
-            if self.inflight.is_empty() {
+            if self.inflight.is_empty() && self.pending.is_empty() {
                 if batcher.is_closed() && batcher.is_empty() {
                     return;
                 }
                 continue;
             }
-            self.decode_round();
+            self.tick();
         }
     }
 
+    /// One scheduler iteration: at most one prefill chunk for the head of
+    /// the pending queue, then one batched decode round over every live
+    /// (fully prefilled) slot. The interleaving contract: a long prompt
+    /// adds `ceil(L / K)` iterations, and every one of them still decodes
+    /// all live slots.
+    fn tick(&mut self) {
+        self.step_pending_prefill();
+        self.decode_round();
+    }
+
+    /// Validate + claim a slot + enqueue the prompt for chunked prefill.
+    /// Both admission bounds are checked before the slot is touched, so a
+    /// rejected request never occupies (or churns) KV state.
     fn admit(&mut self, job: Job) {
         let Job { request, reply } = job;
         let ids = tokenizer::encode(&request.prompt, true, false);
         let max_new = request.opts.max_new_tokens;
         let sampler = request.opts.sampler.clone();
-        let (slot, logits) = match self.model.prefill_slot_checked(
-            &mut self.slots,
-            request.id,
-            &ids,
-            max_new,
-        ) {
-            Ok(x) => x,
+        if let Err(e) = self.model.check_admission(ids.len(), max_new) {
+            self.metrics
+                .requests_rejected
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            let _ = reply.send(Response::failed(request.id, e.to_string()));
+            return;
+        }
+        let slot = match self.slots.alloc(request.id, ids.len(), max_new, 0) {
+            Ok(s) => s,
             Err(e) => {
                 let _ = reply.send(Response::failed(request.id, e.to_string()));
                 return;
             }
         };
-        self.metrics
-            .prefill_tokens
-            .fetch_add(ids.len() as u64, std::sync::atomic::Ordering::Relaxed);
-        let mut rng = SplitMix64::new(request.id ^ 0x5eed);
-        let first = sampler.sample(&logits, &mut rng);
-        let ttft_ms = request.submitted_at.elapsed().as_secs_f64() * 1e3;
-        self.slots.get_mut(slot).unwrap().next_token = first;
-        self.inflight.insert(
-            slot,
-            InFlight {
-                request,
-                reply,
-                tokens: vec![],
-                prompt_tokens: ids.len(),
-                ttft_ms,
-                sampler,
-                rng,
-            },
-        );
+        let state = match self.model.begin_prefill(slot, &ids) {
+            Ok(st) => st,
+            Err(e) => {
+                self.slots.free(slot);
+                let _ = reply.send(Response::failed(request.id, e.to_string()));
+                return;
+            }
+        };
+        self.slots.set_prefilling(slot, true);
+        self.pending.push_back(PendingPrefill {
+            state,
+            request,
+            reply,
+            sampler,
+            prompt_tokens: ids.len(),
+        });
+    }
+
+    /// Advance the head pending prefill by one chunk. On completion the
+    /// request samples its first token and joins the decode batch from the
+    /// same iteration onward.
+    fn step_pending_prefill(&mut self) {
+        let Some(head) = self.pending.front_mut() else { return };
+        match self.model.prefill_step(&mut head.state) {
+            Ok(None) => {} // chunk consumed; resume next iteration
+            Ok(Some(logits)) => {
+                let p = self.pending.pop_front().unwrap();
+                let slot = p.state.slot();
+                self.metrics
+                    .prefill_tokens
+                    .fetch_add(p.prompt_tokens as u64, std::sync::atomic::Ordering::Relaxed);
+                let mut rng = SplitMix64::new(p.request.id ^ 0x5eed);
+                let first = p.sampler.sample(&logits, &mut rng);
+                let ttft_ms = p.request.submitted_at.elapsed().as_secs_f64() * 1e3;
+                self.slots.set_prefilling(slot, false);
+                self.slots.get_mut(slot).unwrap().next_token = first;
+                self.inflight.insert(
+                    slot,
+                    InFlight {
+                        request: p.request,
+                        reply: p.reply,
+                        tokens: vec![],
+                        prompt_tokens: p.prompt_tokens,
+                        ttft_ms,
+                        sampler: p.sampler,
+                        rng,
+                    },
+                );
+            }
+            Err(e) => {
+                let p = self.pending.pop_front().unwrap();
+                self.slots.free(p.state.slot());
+                let _ = p
+                    .reply
+                    .send(Response::failed(p.request.id, format!("prefill failed: {e}")));
+            }
+        }
     }
 
     fn decode_round(&mut self) {
         // Compacted batch: only active slots cross the executor boundary;
         // decode_active dispatches them at bucket granularity (the device
         // computes — and downloads — the covering bucket, not all [S]
-        // lanes; see runtime::buckets).
+        // lanes; see runtime::buckets). Slots mid-prefill are skipped.
         let active = self.slots.active_inputs();
+        if active.is_empty() {
+            return;
+        }
         let rows = match self.model.decode_active(&active) {
             Ok(r) => r,
             // Failure isolation: a batch error must not fail every
@@ -195,6 +279,9 @@ impl Scheduler {
 
 impl ServingModel {
     /// Allocate a slot + prefill as one transaction (slot freed on error).
+    /// Single-shot path for callers outside the scheduler loop (benches,
+    /// tests); the scheduler itself streams chunks via `begin_prefill` /
+    /// `prefill_step` so decode rounds can interleave.
     pub fn prefill_slot_checked(
         &self,
         slots: &mut SlotManager,
@@ -202,13 +289,121 @@ impl ServingModel {
         ids: &[i32],
         max_new: usize,
     ) -> crate::Result<(usize, Vec<f32>)> {
+        self.check_admission(ids.len(), max_new)?;
         let slot = slots.alloc(request_id, ids.len(), max_new, 0)?;
-        match self.prefill(slot, ids) {
+        match self.prefill_chunked(slot, ids) {
             Ok(logits) => Ok((slot, logits)),
             Err(e) => {
                 slots.free(slot);
                 Err(e)
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::InterconnectConfig;
+    use crate::coordinator::request::RequestOptions;
+    use crate::model::{transform, Weights};
+    use crate::runtime::Manifest;
+    use std::sync::mpsc::{channel, Receiver};
+    use std::time::Instant;
+
+    fn build() -> Option<ServingModel> {
+        let manifest = Manifest::load_default().ok()?;
+        let cfg = manifest.model("td-small").ok()?.config.clone();
+        let weights = Weights::random(&cfg, 23);
+        let plan = transform::pair_parallel(cfg.n_layers, 2, 10, true);
+        let net = InterconnectConfig { enabled: false, ..Default::default() };
+        ServingModel::new(&manifest, "td-small", &weights, &plan, net).ok()
+    }
+
+    fn job(id: u64, prompt: &str, max_new: usize) -> (Job, Receiver<Response>) {
+        let (tx, rx) = channel();
+        (
+            Job {
+                request: Request {
+                    id,
+                    prompt: prompt.into(),
+                    opts: RequestOptions { max_new_tokens: max_new, sampler: Sampler::Greedy },
+                    submitted_at: Instant::now(),
+                },
+                reply: tx,
+            },
+            rx,
+        )
+    }
+
+    /// The interleaving contract in numbers: while a long prompt streams
+    /// in chunk by chunk, the already-live request keeps producing exactly
+    /// one token per iteration — no full-prompt stall.
+    #[test]
+    fn decode_rounds_proceed_between_prefill_chunks() {
+        let Some(model) = build() else { return };
+        let Some(k) = model.prefill_chunk() else { return };
+        let metrics = Arc::new(ServerMetrics::default());
+        let mut sched = Scheduler::new(model, metrics);
+
+        // short prompt A: BOS + 2 bytes = 3 tokens -> a single chunk
+        let (job_a, _rx_a) = job(1, "hi", 32);
+        sched.admit(job_a);
+        assert_eq!(sched.pending.len(), 1);
+        sched.tick(); // A finishes prefill and decodes its first token
+        assert!(sched.pending.is_empty());
+        assert_eq!(sched.inflight.len(), 1);
+        let slot_a = *sched.inflight.keys().next().unwrap();
+        let a_before = sched.inflight[&slot_a].tokens.len();
+
+        // long prompt B: BOS + 100 bytes = 101 tokens -> 4 chunks of 32
+        let long = "y".repeat(100);
+        let (job_b, _rx_b) = job(2, &long, 8);
+        sched.admit(job_b);
+        let chunks = (100 + 1usize).div_ceil(k);
+        assert!(chunks > 1, "prompt must span several chunks for this test");
+        for i in 0..chunks {
+            assert_eq!(sched.pending.len(), 1, "B done prefilling early, at tick {i}");
+            sched.tick();
+        }
+        assert!(sched.pending.is_empty(), "B should be live after {chunks} chunks");
+        assert_eq!(sched.inflight.len(), 2);
+        let a_after = sched.inflight[&slot_a].tokens.len();
+        assert_eq!(
+            a_after - a_before,
+            chunks,
+            "A must decode one token per iteration while B's prompt streams in"
+        );
+    }
+
+    /// Satellite regression: admission validates both bounds before a slot
+    /// is claimed — an over-long prompt (or an impossible token budget) is
+    /// rejected with one clear error and zero slot churn.
+    #[test]
+    fn admission_rejects_before_claiming_a_slot() {
+        let Some(model) = build() else { return };
+        let ctx = model.entry.config.ctx;
+        let metrics = Arc::new(ServerMetrics::default());
+        let mut sched = Scheduler::new(model, metrics.clone());
+        let free_before = sched.slots.free_count();
+
+        // prompt longer than any admissible bound (ctx bytes + BOS > ctx-1)
+        let (job_long, rx_long) = job(1, &"z".repeat(ctx), 4);
+        sched.admit(job_long);
+        let r = rx_long.try_recv().expect("rejection must reply immediately");
+        assert!(r.error.as_deref().unwrap_or("").contains("admission limit"), "{r:?}");
+
+        // budget that can never fit ctx
+        let (job_budget, rx_budget) = job(2, "ok", ctx);
+        sched.admit(job_budget);
+        let r = rx_budget.try_recv().expect("rejection must reply immediately");
+        assert!(r.error.as_deref().unwrap_or("").contains("max_new"), "{r:?}");
+
+        assert_eq!(sched.slots.free_count(), free_before, "rejections must not hold slots");
+        assert!(sched.pending.is_empty() && sched.inflight.is_empty());
+        assert_eq!(
+            metrics.requests_rejected.load(std::sync::atomic::Ordering::Relaxed),
+            2
+        );
     }
 }

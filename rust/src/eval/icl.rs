@@ -112,7 +112,7 @@ pub fn sample_correct(scorers: &[&Scorer], plan: &GraphPlan, sample: &Sample) ->
     let bucket = scorer.bucket;
     let v = scorer.entry.config.vocab;
     let answer_len = ids.len() - prompt_len;
-    let padded = tokenizer::pad_to(&ids, bucket);
+    let padded = tokenizer::pad_to(&ids, bucket)?;
     let logits = scorer.logits(&padded, plan)?;
     for i in 0..answer_len {
         let pos = prompt_len + i; // token at `pos` predicted from `pos - 1`

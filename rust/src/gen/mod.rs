@@ -78,7 +78,9 @@ pub fn generate(
     });
 
     let t0 = std::time::Instant::now();
-    let logits = model.prefill(0, &ids)?;
+    // Streaming chunk protocol (monolithic fallback on legacy manifests):
+    // bit-identical to `prefill`, but billed per chunk actually run.
+    let logits = model.prefill_chunked(0, &ids)?;
     let prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
 
     let mut out = Vec::new();

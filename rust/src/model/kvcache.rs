@@ -16,6 +16,10 @@ pub struct SlotInfo {
     pub max_new: usize,
     /// The token to feed at the next decode step.
     pub next_token: i32,
+    /// Slot is mid-prefill (chunked streaming prefill): it holds its KV
+    /// reservation but must not join decode rounds until the prompt is
+    /// fully consumed — [`SlotManager::active_inputs`] skips it.
+    pub prefilling: bool,
 }
 
 #[derive(Debug)]
@@ -47,10 +51,7 @@ impl SlotManager {
     /// *after* a token is produced, so any admissible prompt (< ctx) always
     /// gets at least one decode round (at pos ≤ ctx - 1).
     pub fn capacity_for(&self, prompt_len: usize) -> usize {
-        if prompt_len >= self.ctx {
-            return 0;
-        }
-        self.ctx.saturating_sub(prompt_len + 1).max(1)
+        generation_capacity(self.ctx, prompt_len)
     }
 
     /// Claim a free slot for a request whose prompt is `prompt_len` tokens.
@@ -92,8 +93,16 @@ impl SlotManager {
             generated: 0,
             max_new,
             next_token: first_token,
+            prefilling: false,
         });
         Ok(idx)
+    }
+
+    /// Mark/unmark a slot as mid-prefill (see [`SlotInfo::prefilling`]).
+    pub fn set_prefilling(&mut self, slot: usize, prefilling: bool) {
+        if let Some(info) = self.get_mut(slot) {
+            info.prefilling = prefilling;
+        }
     }
 
     pub fn free(&mut self, slot: usize) {
@@ -125,11 +134,14 @@ impl SlotManager {
     }
 
     /// Compacted decode-step inputs: one `(slot, next_token, pos)` triple
-    /// per *active* slot, in slot order — the batch the scheduler hands to
-    /// `ServingModel::decode_active` so the logits edge only materializes
-    /// rows that will actually be sampled.
+    /// per *active, fully prefilled* slot, in slot order — the batch the
+    /// scheduler hands to `ServingModel::decode_active` so the logits edge
+    /// only materializes rows that will actually be sampled. Slots still
+    /// mid-prefill (chunked admission) hold their reservation but are
+    /// skipped until their prompt is fully consumed.
     pub fn active_inputs(&self) -> Vec<(usize, i32, i32)> {
         self.active()
+            .filter(|(_, info)| !info.prefilling)
             .map(|(i, info)| (i, info.next_token, info.pos as i32))
             .collect()
     }
@@ -144,6 +156,17 @@ impl SlotManager {
         info.next_token = token;
         token == eos || info.generated >= info.max_new || info.pos + 1 >= ctx
     }
+}
+
+/// Generation headroom within a `ctx`-position KV budget for a prompt of
+/// `prompt_len` tokens (the formula behind [`SlotManager::capacity_for`],
+/// shared with `ServingModel::check_admission` so the pre-dequeue admission
+/// check and the slot allocator can never disagree).
+pub fn generation_capacity(ctx: usize, prompt_len: usize) -> usize {
+    if prompt_len >= ctx {
+        return 0;
+    }
+    ctx.saturating_sub(prompt_len + 1).max(1)
 }
 
 #[cfg(test)]
@@ -206,6 +229,18 @@ mod tests {
         assert_eq!(m.active_inputs(), vec![(b, 41, 3)]);
         let c = m.alloc(9, 2, 10, 17).unwrap();
         assert_eq!(m.active_inputs(), vec![(c, 17, 2), (b, 41, 3)]);
+    }
+
+    #[test]
+    fn prefilling_slots_hold_reservation_but_skip_decode() {
+        let mut m = SlotManager::new(3, 64);
+        let a = m.alloc(7, 5, 10, 99).unwrap();
+        let b = m.alloc(8, 3, 10, 41).unwrap();
+        m.set_prefilling(b, true);
+        assert_eq!(m.active_inputs(), vec![(a, 99, 5)], "prefilling slot joined decode");
+        assert_eq!(m.free_count(), 1, "prefilling slot must keep its reservation");
+        m.set_prefilling(b, false);
+        assert_eq!(m.active_inputs(), vec![(a, 99, 5), (b, 41, 3)]);
     }
 
     #[test]

@@ -4,12 +4,14 @@
 
 pub mod kvcache;
 pub mod plan;
+pub mod prefill;
 pub mod scoring;
 pub mod serving;
 pub mod transform;
 pub mod weights;
 
 pub use plan::{GraphPlan, Stage};
+pub use prefill::ChunkedPrefill;
 pub use scoring::Scorer;
 pub use serving::{ActiveSlot, ServeStage, ServingModel};
 pub use weights::Weights;

@@ -1,0 +1,431 @@
+//! Chunked streaming prefill: the resumable-prefill protocol of the
+//! serving executor.
+//!
+//! ## Why
+//!
+//! The monolithic prefill ([`ServingModel::prefill`]) pads every prompt to
+//! the smallest covering seq bucket `T` and monopolizes the mesh for the
+//! whole pass — the head-of-line serialization that stalls every live
+//! decode slot while a long prompt runs, and bills compute for `T` padded
+//! tokens regardless of the true prompt length `L`.
+//!
+//! The chunked protocol replaces the per-`T` executable family on the hot
+//! path with ONE fixed-`K` executable per stage kind (`{tp,lp}attn_chunk`,
+//! `{tp,lp}ffn_chunk`, `embed_chunk`, `logits_chunk`; K = the manifest's
+//! `prefill_chunk`): a prompt of `L` tokens runs `ceil(L / K)` chunk steps,
+//! each consuming `K` tokens at position offset `off` against the live
+//! `[S, C, w]` KV caches. Modelled flops and the α–β all-reduce payload
+//! scale with the chunk count, and — because the state between chunks is
+//! nothing but the KV cache rows already written plus a host-side cursor —
+//! prefill becomes *resumable*: the scheduler runs at most one chunk per
+//! iteration and decodes all live slots in between
+//! (`coordinator::scheduler`).
+//!
+//! ## Protocol
+//!
+//! 1. [`ServingModel::begin_prefill`] validates the prompt and returns a
+//!    [`ChunkedPrefill`] cursor;
+//! 2. each [`ServingModel::prefill_step`] uploads the chunk's token ids
+//!    plus the `slot`/`off`/`valid` scalars, embeds on rank 0, fans the
+//!    chunk activation out as the resident `act` buffer, and chains the
+//!    stages exactly like the monolithic pass (attention partial →
+//!    [`crate::parallel::Mesh::reduce_into`] → FFN partial → reduce; two
+//!    all-reduces per stage per chunk). The chunk attention executable
+//!    inserts its own K/V rows — masked by `valid`, so the PAD tail of the
+//!    final partial chunk never writes the cache — and attends over the
+//!    cache prefix `[0, off + row]`;
+//! 3. the final chunk additionally runs `logits_chunk` and returns the
+//!    last real token's logits row, exactly like the monolithic path.
+//!
+//! ## Bit-exactness
+//!
+//! The chunk executables share the per-token math of the monolithic
+//! lowering (row-wise projections/RoPE/softmax are batch-size-invariant on
+//! XLA CPU, and masked cache columns are exact zeros), so a chunked prefill
+//! followed by decode is bit-identical to the fixed-`T` path row for row —
+//! pinned by `chunked_prefill_bit_identical_to_monolithic` below and by
+//! `python/tests/test_chunk_prefill.py` at the JAX level.
+
+use crate::error::{Error, Result};
+use crate::model::serving::{ServeStage, ServingModel};
+use crate::parallel::worker::ArgRef;
+use crate::runtime::buckets::prefill_flops;
+use crate::runtime::pjrt::HostValue;
+
+/// Executable keys of the chunk prefill family — all six must exist in the
+/// manifest for the chunked path to activate (`ServingModel::prefill_chunk`).
+pub const CHUNK_ARTIFACT_KEYS: [&str; 6] = [
+    "embed_chunk",
+    "logits_chunk",
+    "tpattn_chunk",
+    "tpffn_chunk",
+    "lpattn_chunk",
+    "lpffn_chunk",
+];
+
+/// Resumable prefill cursor: which slot is being filled, the full prompt,
+/// and how many tokens the chunk steps have consumed so far. The device
+/// state between steps lives entirely in the slot's KV cache rows, so the
+/// scheduler can run decode rounds (which reuse the resident `act` buffer)
+/// between any two steps.
+#[derive(Debug)]
+pub struct ChunkedPrefill {
+    slot: usize,
+    tokens: Vec<i32>,
+    consumed: usize,
+}
+
+impl ChunkedPrefill {
+    pub fn slot(&self) -> usize {
+        self.slot
+    }
+
+    /// Prompt length in tokens.
+    pub fn total_tokens(&self) -> usize {
+        self.tokens.len()
+    }
+
+    /// Tokens consumed by completed chunk steps.
+    pub fn consumed(&self) -> usize {
+        self.consumed
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.consumed == self.tokens.len()
+    }
+
+    /// Steps still to run under chunk size `k` (1 for the legacy
+    /// monolithic fallback, which consumes everything in one step).
+    pub fn steps_remaining(&self, k: Option<usize>) -> usize {
+        let left = self.tokens.len() - self.consumed;
+        match k {
+            Some(k) => left.div_ceil(k),
+            None => usize::from(left > 0),
+        }
+    }
+}
+
+impl ServingModel {
+    /// Start a resumable prefill of `tokens` into `slot`. Validates the
+    /// prompt against the active prefill path's bound up front (chunked:
+    /// the KV context; legacy fixed-`T`: the largest seq bucket) so a
+    /// cursor, once issued, cannot fail on length mid-flight.
+    pub fn begin_prefill(&self, slot: usize, tokens: &[i32]) -> Result<ChunkedPrefill> {
+        let cfg = &self.entry.config;
+        if tokens.is_empty() {
+            return Err(Error::Serving("empty prompt (nothing to prefill)".into()));
+        }
+        if slot >= cfg.slots {
+            return Err(Error::Serving(format!("prefill slot {slot} >= {}", cfg.slots)));
+        }
+        // Same bound as `check_admission` — the protocol entry point and
+        // the scheduler's admission check can never disagree on length.
+        if tokens.len() > self.max_prompt_len() {
+            return Err(Error::Serving(format!(
+                "prompt of {} tokens exceeds the admission limit {} (ctx {})",
+                tokens.len(),
+                self.max_prompt_len(),
+                cfg.ctx
+            )));
+        }
+        Ok(ChunkedPrefill { slot, tokens: tokens.to_vec(), consumed: 0 })
+    }
+
+    /// Run ONE chunk step (or, on a legacy manifest without chunk
+    /// executables, the whole monolithic prefill). Returns `Some(logits
+    /// row)` of the last real token once the prompt is fully consumed,
+    /// `None` while chunks remain.
+    pub fn prefill_step(&self, st: &mut ChunkedPrefill) -> Result<Option<Vec<f32>>> {
+        if st.is_done() {
+            return Err(Error::Serving("prefill_step on a completed prefill".into()));
+        }
+        let Some(k) = self.prefill_chunk else {
+            let logits = self.prefill(st.slot, &st.tokens)?;
+            st.consumed = st.tokens.len();
+            return Ok(Some(logits));
+        };
+
+        let cfg = &self.entry.config;
+        let d = cfg.d_model;
+        let off = st.consumed;
+        let valid = (st.tokens.len() - off).min(k);
+        let last = off + valid == st.tokens.len();
+        let mut chunk_tokens = st.tokens[off..off + valid].to_vec();
+        chunk_tokens.resize(k, crate::text::tokenizer::PAD);
+        // modelled device compute: K padded tokens at prefix offset `off`,
+        // plus the [K, V] logits head on the final chunk only
+        self.mesh.metrics.charge_flops(prefill_flops(
+            cfg,
+            self.layers_equiv,
+            off,
+            k,
+            if last { k } else { 0 },
+        ));
+
+        // chunk coordinates are fresh host data, resident for the stages
+        self.mesh.upload_all("slot", HostValue::scalar_i32(st.slot as i32))?;
+        self.mesh.upload_all("off", HostValue::scalar_i32(off as i32))?;
+        self.mesh.upload_all("valid", HostValue::scalar_i32(valid as i32))?;
+
+        // rank 0: embed the chunk (host→device edge), fan out as `act`
+        let mut shadow = self
+            .mesh
+            .exec_rank(
+                0,
+                "embed_chunk",
+                vec![
+                    ArgRef::Host(HostValue::i32(vec![k], chunk_tokens)),
+                    ArgRef::Resident("emb".into()),
+                ],
+                vec![],
+                vec![],
+            )?
+            .remove(0)
+            .into_f32()?;
+        self.mesh
+            .broadcast_resident("act", &HostValue::f32(vec![k, d], shadow.clone()))?;
+
+        for (sidx, stage) in self.stages.iter().enumerate() {
+            let (attn_key, ffn_key) = match stage {
+                ServeStage::Tp(_) => ("tpattn_chunk", "tpffn_chunk"),
+                ServeStage::Lp(..) => ("lpattn_chunk", "lpffn_chunk"),
+            };
+            // --- attention partials; the executable gathers the slot's
+            // cache rows, inserts this chunk's K/V (masked by `valid`) and
+            // attends over the prefix — caches persist in place
+            let calls = (0..self.ranks)
+                .map(|_| {
+                    let mut args = vec![ArgRef::Resident("act".into())];
+                    args.extend(Self::weight_args(sidx, &["ln1", "wq", "wk", "wv", "wo"]));
+                    args.push(ArgRef::Resident(format!("kv.k.{sidx}")));
+                    args.push(ArgRef::Resident(format!("kv.v.{sidx}")));
+                    args.push(ArgRef::Resident("slot".into()));
+                    args.push(ArgRef::Resident("off".into()));
+                    args.push(ArgRef::Resident("valid".into()));
+                    (
+                        attn_key.to_string(),
+                        args,
+                        vec![
+                            Some("act.partial".to_string()),
+                            Some(format!("kv.k.{sidx}")),
+                            Some(format!("kv.v.{sidx}")),
+                        ],
+                        vec![false, false, false],
+                    )
+                })
+                .collect();
+            self.mesh.exec_all(calls)?;
+            self.mesh.reduce_into("act.partial", &mut shadow, "act")?;
+
+            // --- FFN partials (device-resident)
+            let calls = (0..self.ranks)
+                .map(|_| {
+                    let mut args = vec![ArgRef::Resident("act".into())];
+                    args.extend(Self::weight_args(sidx, &["ln2", "wg", "wu", "wd"]));
+                    (
+                        ffn_key.to_string(),
+                        args,
+                        vec![Some("act.partial".to_string())],
+                        vec![false],
+                    )
+                })
+                .collect();
+            self.mesh.exec_all(calls)?;
+            self.mesh.reduce_into("act.partial", &mut shadow, "act")?;
+        }
+
+        st.consumed = off + valid;
+        if !last {
+            return Ok(None);
+        }
+
+        // rank 0: logits of the last real token (the device→host edge)
+        let logits = self
+            .mesh
+            .exec_rank(
+                0,
+                "logits_chunk",
+                vec![
+                    ArgRef::Resident("act".into()),
+                    ArgRef::Resident("lnf".into()),
+                    ArgRef::Resident("wout".into()),
+                ],
+                vec![],
+                vec![],
+            )?
+            .remove(0)
+            .into_f32()?;
+        let v = cfg.vocab;
+        Ok(Some(logits[(valid - 1) * v..valid * v].to_vec()))
+    }
+
+    /// Convenience: run a full prefill through the chunked protocol (the
+    /// streaming counterpart of [`ServingModel::prefill`]; falls back to
+    /// the monolithic pass on legacy manifests). Returns the last real
+    /// token's logits row.
+    pub fn prefill_chunked(&self, slot: usize, tokens: &[i32]) -> Result<Vec<f32>> {
+        let mut st = self.begin_prefill(slot, tokens)?;
+        loop {
+            if let Some(logits) = self.prefill_step(&mut st)? {
+                return Ok(logits);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::InterconnectConfig;
+    use crate::model::transform;
+    use crate::model::weights::Weights;
+    use crate::runtime::Manifest;
+
+    fn quiet() -> InterconnectConfig {
+        InterconnectConfig { enabled: false, ..Default::default() }
+    }
+
+    fn build(window: (usize, usize)) -> Option<ServingModel> {
+        let manifest = Manifest::load_default().ok()?;
+        let cfg = manifest.model("td-small").ok()?.config.clone();
+        let weights = Weights::random(&cfg, 41);
+        let plan = transform::pair_parallel(cfg.n_layers, window.0, window.1, true);
+        ServingModel::new(&manifest, "td-small", &weights, &plan, quiet()).ok()
+    }
+
+    #[test]
+    fn empty_prompt_is_rejected_not_a_panic() {
+        let Some(m) = build((4, 10)) else { return };
+        assert!(m.prefill(0, &[]).is_err(), "monolithic path must reject");
+        assert!(m.begin_prefill(0, &[]).is_err(), "chunked path must reject");
+        assert!(m.begin_prefill(m.entry.config.slots, &[1]).is_err(), "slot bounds");
+    }
+
+    /// Tentpole regression: a prompt prefilled in ceil(L/K) chunk steps
+    /// must reproduce the monolithic fixed-T pass bit for bit — the
+    /// returned first-token logits row AND every subsequent decode row —
+    /// while charging modelled flops for the chunks actually run, not the
+    /// covering bucket.
+    #[test]
+    fn chunked_prefill_bit_identical_to_monolithic() {
+        let Some(m) = build((4, 10)) else { return };
+        let Some(k) = m.prefill_chunk() else { return };
+        let cfg = m.entry.config.clone();
+        // L = 77: covering bucket T = 128, but only 3 chunks of 32
+        let prompt: Vec<i32> = (0..77).map(|i| 40 + (i % 50)).collect();
+        let steps = prompt.len().div_ceil(k);
+
+        m.mesh.metrics.reset();
+        let mono = m.prefill(1, &prompt).unwrap();
+        let mono_flops = m.mesh.metrics.modelled_flops();
+        let (mono_sync, _, _, _) = m.mesh.metrics.snapshot();
+
+        m.mesh.metrics.reset();
+        let mut st = m.begin_prefill(0, &prompt).unwrap();
+        let mut got = None;
+        let mut ran = 0;
+        while got.is_none() {
+            assert_eq!(st.steps_remaining(Some(k)), steps - ran);
+            got = m.prefill_step(&mut st).unwrap();
+            ran += 1;
+        }
+        assert!(st.is_done());
+        assert_eq!(ran, steps, "ceil(L / K) chunk steps expected");
+        let chunked = got.unwrap();
+        let chunk_flops = m.mesh.metrics.modelled_flops();
+        let (chunk_sync, _, _, _) = m.mesh.metrics.snapshot();
+
+        assert_eq!(chunked, mono, "first-token logits diverged");
+
+        // modelled compute scales with the chunks actually run (96 padded
+        // positions + [K, V] head), not the covering bucket (128 + [T, V])
+        let expect_chunk: u64 = (0..steps)
+            .map(|j| {
+                prefill_flops(&cfg, m.layers_equiv, j * k, k, if j == steps - 1 { k } else { 0 })
+            })
+            .sum();
+        assert_eq!(chunk_flops, expect_chunk);
+        assert_eq!(mono_flops, prefill_flops(&cfg, m.layers_equiv, 0, 128, 128));
+        assert!(chunk_flops < mono_flops, "chunked must bill fewer modelled flops");
+        // α–β accounting: 2 reduces per stage per pass vs per chunk
+        assert_eq!(mono_sync as usize, m.all_reduces_per_token());
+        assert_eq!(chunk_sync as usize, steps * m.all_reduces_per_token());
+
+        // decode continuation: both slots hold the same sequence, so the
+        // decode rows must be bit-identical lane for lane
+        let next = crate::tensor::argmax(&mono) as i32;
+        let rows = m
+            .decode_active(&[(0, next, prompt.len() as i32), (1, next, prompt.len() as i32)])
+            .unwrap();
+        assert_eq!(rows[0].1, rows[1].1, "decode after chunked prefill diverged");
+    }
+
+    /// A prompt longer than the largest seq bucket can't run monolithically
+    /// but streams fine through chunks (admission frees the batch-1 /
+    /// bucket-bound restriction up to ctx).
+    #[test]
+    fn chunked_prefill_handles_prompts_beyond_seq_buckets() {
+        let Some(m) = build((2, 10)) else { return };
+        if m.prefill_chunk().is_none() {
+            return;
+        }
+        let ctx = m.entry.config.ctx;
+        let largest = m.buckets.iter().copied().max().unwrap_or(0);
+        if largest >= ctx {
+            // buckets already cover ctx; the admission bound is ctx - 1
+            assert_eq!(m.max_prompt_len(), ctx - 1);
+        }
+        let prompt: Vec<i32> = (0..(ctx - 1) as i32).map(|i| 40 + (i % 50)).collect();
+        let logits = m.prefill_chunked(0, &prompt).unwrap();
+        assert_eq!(logits.len(), m.entry.config.vocab);
+        assert!(logits.iter().all(|x| x.is_finite()));
+    }
+
+    /// Satellite regression: decode must never attend to cache positions
+    /// >= L. The monolithic path writes PAD-token K/V at [L, T); poisoning
+    /// every row >= L (stand-in for any stale garbage) must not change a
+    /// single decode bit, because each step overwrites row `pos` before
+    /// attending and masks columns > pos.
+    #[test]
+    fn decode_never_attends_past_prompt_length() {
+        let Some(m) = build((4, 10)) else { return };
+        let cfg = m.entry.config.clone();
+        let prompt: Vec<i32> = (0..42).map(|i| 60 + (i % 30)).collect();
+        let l = prompt.len();
+        // identical prefills; slot 1's cache tail then gets poisoned
+        m.prefill(0, &prompt).unwrap();
+        m.prefill(1, &prompt).unwrap();
+        for sidx in 0..m.stages.len() {
+            for cache in ["kv.k", "kv.v"] {
+                let name = format!("{cache}.{sidx}");
+                for w in &m.mesh.workers {
+                    let hv = w.fetch(&name).unwrap();
+                    let shape = hv.shape().to_vec();
+                    let mut data = hv.as_f32().unwrap().to_vec();
+                    let (c, width) = (shape[1], shape[2]);
+                    let slot1 = c * width; // row-major [S, C, w]: slot 1's block
+                    for row in l..c {
+                        let base = slot1 + row * width;
+                        for x in &mut data[base..base + width] {
+                            *x = 1e9;
+                        }
+                    }
+                    w.store(&name, HostValue::f32(shape, data)).unwrap();
+                }
+            }
+        }
+        // two decode steps so the second attends rows the first wrote
+        let mut next = 65i32;
+        for (i, pos) in (l..l + 2).enumerate() {
+            let rows = m
+                .decode_active(&[(0, next, pos as i32), (1, next, pos as i32)])
+                .unwrap();
+            assert_eq!(
+                rows[0].1, rows[1].1,
+                "decode step {i} attended to a position >= L"
+            );
+            next = crate::tensor::argmax(&rows[0].1) as i32;
+            assert_eq!(rows[0].1.len(), cfg.vocab);
+        }
+    }
+}

@@ -58,6 +58,18 @@
 //! width. Modelled device compute is charged per dispatched lane via
 //! [`crate::parallel::MeshMetrics::charge_flops`].
 //!
+//! ## Chunked streaming prefill
+//!
+//! The serving hot path no longer pads a prompt to the covering fixed-`T`
+//! bucket: [`ServingModel::begin_prefill`] / [`ServingModel::prefill_step`]
+//! (in [`crate::model::prefill`]) consume the prompt in fixed-`K` chunk
+//! steps against the live KV caches, so modelled compute and the α–β
+//! payload scale with `ceil(L / K)` and the scheduler can interleave
+//! decode rounds between chunks. [`ServingModel::prefill`] keeps the
+//! monolithic fixed-`T` pass as the bit-exactness oracle and the
+//! legacy-manifest fallback. Admission validates BOTH bounds up front via
+//! [`ServingModel::check_admission`].
+//!
 //! KV caches live as named resident buffers on the owning rank(s); decode
 //! carries them in/out of the layer executables (see worker.rs for the
 //! tuple-output caveat).
@@ -93,9 +105,15 @@ pub struct ServingModel {
     pub buckets: Vec<usize>,
     /// Decode batch-bucket registry (manifest `batch_buckets`).
     pub bucket_set: BucketSet,
+    /// Streaming-prefill chunk size K (manifest `prefill_chunk`; `None`
+    /// for legacy manifests — prefill then runs the monolithic path).
+    pub(crate) prefill_chunk: Option<usize>,
     /// Modelled device compute of one decode lane through this plan.
     flops_per_lane: u64,
-    ranks: usize,
+    /// Whole-layer equivalents of the plan (Tp = 1, Lp = 2) — the depth
+    /// scale of the modelled prefill/decode flop charges.
+    pub(crate) layers_equiv: usize,
+    pub(crate) ranks: usize,
 }
 
 impl ServingModel {
@@ -137,6 +155,14 @@ impl ServingModel {
             })
             .collect();
         let bucket_set = BucketSet::new(&usable, entry.config.slots);
+        // Chunked streaming prefill is available only when every chunk
+        // executable exists (guards a manifest naming a chunk size it
+        // never emitted artifacts for).
+        let prefill_chunk = manifest.prefill_chunk.filter(|_| {
+            crate::model::prefill::CHUNK_ARTIFACT_KEYS
+                .iter()
+                .all(|k| entry.artifacts.contains_key(*k))
+        });
         // Tp stages split one layer across the mesh; Lp stages run two
         // whole layers in parallel — twice the device compute per stage.
         let layers_equiv = stages
@@ -153,7 +179,9 @@ impl ServingModel {
             stages,
             buckets: manifest.seq_buckets.clone(),
             bucket_set,
+            prefill_chunk,
             flops_per_lane,
+            layers_equiv,
             ranks,
         };
         m.compile_artifacts()?;
@@ -168,7 +196,13 @@ impl ServingModel {
         self.flops_per_lane
     }
 
-    fn art(&self, name: &str) -> Result<&Path> {
+    /// Streaming-prefill chunk size, when the manifest carries the chunk
+    /// executable family (see [`crate::model::prefill`]).
+    pub fn prefill_chunk(&self) -> Option<usize> {
+        self.prefill_chunk
+    }
+
+    pub(crate) fn art(&self, name: &str) -> Result<&Path> {
         Ok(self.entry.artifact(name)?.file.as_path())
     }
 
@@ -190,6 +224,11 @@ impl ServingModel {
             keys.push(format!("ffn_t{t}")); // LP FFN prefill (full width)
             keys.push(format!("cache_insert_half_t{t}"));
             keys.push(format!("cache_insert_full_t{t}"));
+        }
+        if self.prefill_chunk.is_some() {
+            keys.extend(
+                crate::model::prefill::CHUNK_ARTIFACT_KEYS.iter().map(|k| k.to_string()),
+            );
         }
         for key in keys {
             self.mesh.compile_all(&key, self.art(&key)?)?;
@@ -272,25 +311,88 @@ impl ServingModel {
         self.stages.len() * 2
     }
 
-    fn weight_args(sidx: usize, fields: &[&str]) -> Vec<ArgRef> {
+    /// Longest admissible prompt: bounded by the KV context (one position
+    /// must stay free for decode) and — on the monolithic fixed-`T` path —
+    /// by the largest compiled seq bucket. The chunked streaming path has
+    /// no bucket bound: any prompt that fits the cache is admissible.
+    pub fn max_prompt_len(&self) -> usize {
+        let ctx_cap = self.entry.config.ctx.saturating_sub(1);
+        match self.prefill_chunk {
+            Some(_) => ctx_cap,
+            None => self.buckets.iter().copied().max().unwrap_or(0).min(ctx_cap),
+        }
+    }
+
+    /// Validate a request against BOTH admission bounds — the prefill
+    /// path's maximum prompt length and the ctx generation budget — before
+    /// any slot is claimed. Pre-refactor these checks disagreed
+    /// (`SlotManager::alloc` validated against ctx while `prefill`
+    /// validated against the largest seq bucket), so an over-long prompt
+    /// was admitted, allocated a slot, and only then errored; the scheduler
+    /// now calls this before dequeueing a request into a slot and returns
+    /// one clear rejection.
+    pub fn check_admission(&self, prompt_len: usize, max_new: usize) -> Result<()> {
+        let ctx = self.entry.config.ctx;
+        if prompt_len == 0 {
+            return Err(Error::Serving("empty prompt (nothing to prefill)".into()));
+        }
+        let max_prompt = self.max_prompt_len();
+        if prompt_len > max_prompt {
+            let bound = match self.prefill_chunk {
+                Some(_) => "the KV context (ctx - 1)".to_string(),
+                None => format!("the largest prefill bucket and ctx {ctx}"),
+            };
+            return Err(Error::Serving(format!(
+                "prompt of {prompt_len} tokens exceeds the admission limit \
+                 {max_prompt} ({bound}) — shorten the prompt"
+            )));
+        }
+        let cap = crate::model::kvcache::generation_capacity(ctx, prompt_len);
+        if max_new > cap {
+            return Err(Error::Serving(format!(
+                "request wants {max_new} new tokens but a {prompt_len}-token \
+                 prompt leaves room for only {cap} within ctx {ctx} — lower \
+                 max_new_tokens or shorten the prompt"
+            )));
+        }
+        Ok(())
+    }
+
+    pub(crate) fn weight_args(sidx: usize, fields: &[&str]) -> Vec<ArgRef> {
         fields
             .iter()
             .map(|f| ArgRef::Resident(format!("s{sidx}.{f}")))
             .collect()
     }
 
-    /// Prefill `tokens` into `slot`. Returns the logits row for the last
-    /// real token ([V]) — the distribution of the first generated token.
+    /// Monolithic fixed-`T` prefill of `tokens` into `slot`: the whole
+    /// prompt is padded to the smallest covering seq bucket and runs in one
+    /// pass. Returns the logits row for the last real token ([V]) — the
+    /// distribution of the first generated token.
+    ///
+    /// This is the bit-exactness oracle for (and the legacy-manifest
+    /// fallback of) the chunked streaming path in [`crate::model::prefill`];
+    /// the serving hot path goes through
+    /// [`ServingModel::begin_prefill`] / [`ServingModel::prefill_step`].
     ///
     /// Resident protocol: token ids and the slot index are the only
     /// host→device uploads; the logits row is the only device→host fetch
     /// besides the embed shadow. Stages chain the resident `act` buffer.
     pub fn prefill(&self, slot: usize, tokens: &[i32]) -> Result<Vec<f32>> {
         let cfg = &self.entry.config;
+        if tokens.is_empty() {
+            // guards the `tokens.len() - 1` logits-row read below — an
+            // empty prompt used to underflow-panic in the scheduler thread
+            return Err(Error::Serving("empty prompt (nothing to prefill)".into()));
+        }
         let t = crate::text::tokenizer::bucket_for(tokens.len(), &self.buckets)
             .ok_or_else(|| Error::Serving(format!("prompt too long: {}", tokens.len())))?;
-        let padded = crate::text::tokenizer::pad_to(tokens, t);
+        let padded = crate::text::tokenizer::pad_to(tokens, t)?;
         let d = cfg.d_model;
+        // modelled device compute: T padded tokens + the [T, V] logits head
+        self.mesh
+            .metrics
+            .charge_flops(crate::runtime::buckets::prefill_flops(cfg, self.layers_equiv, 0, t, t));
 
         // slot index is fresh host data, referenced by every cache insert
         self.mesh.upload_all("slot", HostValue::scalar_i32(slot as i32))?;
@@ -904,6 +1006,29 @@ mod tests {
         let one = m.decode_active(&[(3, 70, prompt.len() as i32)]).unwrap();
         assert_eq!(one.len(), 1);
         assert!(one[0].1.iter().all(|x| x.is_finite()));
+    }
+
+    /// Both admission bounds live in one check: the prefill path's prompt
+    /// limit and the ctx token budget. Anything `check_admission` admits,
+    /// `SlotManager::alloc` must admit too (no admit-then-fail churn).
+    #[test]
+    fn admission_bounds_are_unified() {
+        let Some(m) = build(|n| transform::sequential(n)) else { return };
+        let ctx = m.entry.config.ctx;
+        assert!(m.check_admission(0, 1).is_err(), "empty prompt");
+        assert!(m.check_admission(m.max_prompt_len(), 1).is_ok());
+        assert!(m.check_admission(m.max_prompt_len() + 1, 1).is_err());
+        assert!(m.check_admission(10, ctx).is_err(), "impossible budget");
+        let mut slots =
+            crate::model::kvcache::SlotManager::new(m.entry.config.slots, ctx);
+        for (pl, mn) in [(1usize, 1usize), (m.max_prompt_len(), 1), (10, ctx - 11)] {
+            if m.check_admission(pl, mn).is_ok() {
+                assert!(
+                    slots.alloc(1, pl, mn, 0).is_ok(),
+                    "alloc disagreed with check_admission for ({pl}, {mn})"
+                );
+            }
+        }
     }
 
     #[test]

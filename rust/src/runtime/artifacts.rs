@@ -7,6 +7,7 @@
 //! ```text
 //! { "format": 1, "source_hash": "...", "impl": "pallas",
 //!   "seq_buckets": [32, 128, 256],          // prefill T buckets (global)
+//!   "prefill_chunk": 32,                    // streaming-prefill chunk K
 //!   "models": { "<name>": {
 //!       "config": { vocab, d_model, n_layers, ... , slots },
 //!       "batch_buckets": [1, 2, 4],         // decode B buckets (per model,
@@ -23,6 +24,17 @@
 //! entry. The section is optional: manifests that predate it parse with an
 //! empty list and `runtime::buckets::BucketSet` then routes every round to
 //! the fixed-`[S]` executables.
+//!
+//! `prefill_chunk` (added with the chunked streaming-prefill subsystem)
+//! gives the fixed chunk token count K of the resumable prefill executables
+//! `{tp,lp}attn_chunk` (chunk activations + full `[S, C, w]` caches +
+//! `slot`/`off`/`valid` i32 scalars; the attention inserts its own K/V
+//! rows, masked by `valid`), `{tp,lp}ffn_chunk`, `embed_chunk` and
+//! `logits_chunk`. K always divides every model's `ctx` (the AOT side
+//! asserts it), so the final chunk's cache window stays in bounds. The
+//! section is optional: legacy manifests parse with `None` and
+//! `model::prefill` then routes every prompt through the monolithic
+//! fixed-`T` path in a single step.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -108,6 +120,10 @@ pub struct Manifest {
     pub dir: PathBuf,
     pub impl_name: String,
     pub seq_buckets: Vec<usize>,
+    /// Streaming-prefill chunk token count K (`None` for legacy manifests
+    /// predating the `prefill_chunk` section — prefill then runs the
+    /// monolithic fixed-`T` path).
+    pub prefill_chunk: Option<usize>,
     pub models: BTreeMap<String, ModelEntry>,
 }
 
@@ -179,6 +195,10 @@ impl Manifest {
                 .iter()
                 .filter_map(|b| b.as_usize())
                 .collect(),
+            prefill_chunk: v
+                .get("prefill_chunk")
+                .and_then(|c| c.as_usize())
+                .filter(|&c| c > 0),
             models,
         })
     }
@@ -255,6 +275,42 @@ mod tests {
             let (_, dt, shape) = &a.args[9];
             assert_eq!(dt, "int32");
             assert_eq!(shape, &vec![b], "lanes is [B]");
+        }
+    }
+
+    #[test]
+    fn prefill_chunk_section_and_artifacts_are_consistent() {
+        let Some(m) = manifest() else { return };
+        let chunk = m
+            .prefill_chunk
+            .expect("manifest predates prefill_chunk — re-run `make artifacts`");
+        for entry in m.models.values() {
+            let cfg = &entry.config;
+            assert_eq!(cfg.ctx % chunk, 0, "{}: chunk must divide ctx", cfg.name);
+            for key in crate::model::prefill::CHUNK_ARTIFACT_KEYS {
+                assert!(
+                    entry.artifacts.contains_key(key),
+                    "{}: missing chunk artifact {key}",
+                    cfg.name
+                );
+            }
+            let a = entry.artifact("tpattn_chunk").unwrap();
+            let names: Vec<&str> = a.args.iter().map(|(n, _, _)| n.as_str()).collect();
+            assert_eq!(
+                names,
+                ["h", "ln1", "wq", "wk", "wv", "wo", "kcache", "vcache", "slot", "off", "valid"]
+            );
+            assert_eq!(a.args[0].2, vec![chunk, cfg.d_model], "h is chunk-shaped");
+            assert_eq!(
+                a.args[6].2,
+                vec![cfg.slots, cfg.ctx, cfg.d_model / 2],
+                "caches stay full-[S]"
+            );
+            for i in [8, 9, 10] {
+                let (_, dt, shape) = &a.args[i];
+                assert_eq!(dt, "int32");
+                assert!(shape.is_empty(), "slot/off/valid are scalars");
+            }
         }
     }
 

@@ -187,6 +187,35 @@ pub fn decode_flops_per_lane(cfg: &ModelConfig, layers_equiv: usize) -> u64 {
     layers_equiv as u64 * per_layer + 2 * d * v
 }
 
+/// Modelled device compute of prefilling the padded positions
+/// `[off, off + n)` of one sequence, plus `logits_rows` rows of the logits
+/// head (`T` on the monolithic path, which materializes the full `[T, V]`
+/// block; `chunk` on the final chunk step only — earlier chunks skip the
+/// head entirely):
+///
+/// * per token: the same projection (`8·D²`) and SwiGLU (`6·D·F`) cost as a
+///   decode lane;
+/// * attention at global position p attends its causal prefix: `4·(p+1)·D`
+///   (QK + AV). The masked tail columns are exact zeros a real kernel never
+///   touches, so the charge is quadratic in the *prompt*, not in the padded
+///   executable width — which is exactly why chunked prefill's total scales
+///   with `ceil(L / chunk)` chunks while the monolithic path pays the full
+///   covering bucket `T` (see `bench_prefill`'s prompt-length sweep).
+pub fn prefill_flops(
+    cfg: &ModelConfig,
+    layers_equiv: usize,
+    off: usize,
+    n: usize,
+    logits_rows: usize,
+) -> u64 {
+    let (d, f, v) = (cfg.d_model as u64, cfg.d_ff as u64, cfg.vocab as u64);
+    let linear_per_tok = 8 * d * d + 6 * d * f;
+    // sum of (p + 1) over p in [off, off + n)
+    let attended: u64 = (off as u64 + 1..=(off + n) as u64).sum();
+    layers_equiv as u64 * (n as u64 * linear_per_tok + 4 * attended * d)
+        + logits_rows as u64 * 2 * d * v
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -299,6 +328,35 @@ mod tests {
         assert!(f12 > f6);
         let head = 2 * cfg.d_model as u64 * cfg.vocab as u64;
         assert_eq!(f12 - head, 2 * (f6 - head), "per-layer cost is linear in depth");
+    }
+
+    #[test]
+    fn prefill_flop_model_scales_with_chunks_not_buckets() {
+        let cfg = ModelConfig {
+            name: "t".into(),
+            vocab: 260,
+            d_model: 128,
+            n_layers: 12,
+            n_heads: 4,
+            head_dim: 32,
+            d_ff: 256,
+            ctx: 256,
+            slots: 4,
+        };
+        // chunked prefill of L=40 under chunk=32: two chunk steps, logits
+        // only on the final one — identical total to one [0, 64) pass
+        let chunked = prefill_flops(&cfg, 6, 0, 32, 0) + prefill_flops(&cfg, 6, 32, 32, 32);
+        assert_eq!(chunked, prefill_flops(&cfg, 6, 0, 64, 32));
+        // the covering bucket T=128 pays for 128 padded tokens and the
+        // full [128, V] logits block — strictly more than 2 chunks
+        let mono = prefill_flops(&cfg, 6, 0, 128, 128);
+        assert!(mono > 2 * chunked, "mono {mono} vs chunked {chunked}");
+        // attention term is quadratic: a later chunk costs more than an
+        // earlier one at equal width
+        assert!(
+            prefill_flops(&cfg, 6, 64, 32, 0) > prefill_flops(&cfg, 6, 0, 32, 0),
+            "prefix-proportional attention charge missing"
+        );
     }
 
     #[test]

@@ -31,11 +31,21 @@ pub fn decode(ids: &[i32]) -> String {
     String::from_utf8_lossy(&bytes).into_owned()
 }
 
-/// Right-pad (or truncate) to exactly `length` tokens.
-pub fn pad_to(ids: &[i32], length: usize) -> Vec<i32> {
-    let mut out: Vec<i32> = ids.iter().copied().take(length).collect();
+/// Right-pad to exactly `length` tokens.
+///
+/// `length < ids.len()` used to silently truncate — dropping the prompt
+/// tail and serving a logits row for the wrong token; it is a caller bug
+/// (a mis-sized bucket) and is now an error.
+pub fn pad_to(ids: &[i32], length: usize) -> crate::error::Result<Vec<i32>> {
+    if length < ids.len() {
+        return Err(crate::error::Error::msg(format!(
+            "pad_to: {} tokens do not fit length {length} (would silently drop the tail)",
+            ids.len()
+        )));
+    }
+    let mut out = ids.to_vec();
     out.resize(length, PAD);
-    out
+    Ok(out)
 }
 
 /// The smallest AOT sequence bucket that fits `len` tokens, if any.
@@ -58,9 +68,12 @@ mod tests {
     }
 
     #[test]
-    fn pad_and_truncate() {
-        assert_eq!(pad_to(&[1, 2, 3], 5), vec![1, 2, 3, PAD, PAD]);
-        assert_eq!(pad_to(&[1, 2, 3, 4, 5], 3), vec![1, 2, 3]);
+    fn pad_fills_and_rejects_truncation() {
+        assert_eq!(pad_to(&[1, 2, 3], 5).unwrap(), vec![1, 2, 3, PAD, PAD]);
+        assert_eq!(pad_to(&[1, 2, 3], 3).unwrap(), vec![1, 2, 3]);
+        // regression: undersized lengths used to silently drop the tail
+        let err = pad_to(&[1, 2, 3, 4, 5], 3).unwrap_err();
+        assert!(err.to_string().contains("drop the tail"), "{err}");
     }
 
     #[test]

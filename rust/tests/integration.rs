@@ -41,7 +41,7 @@ fn scoring_and_tp_serving_agree_sequential() {
     let tokens: Vec<i32> = tokenizer::encode("the quiet river finds the stone", true, false);
     let engine = Engine::cpu().unwrap();
     let scorer = Scorer::new(&engine, entry, &weights, 32).unwrap();
-    let padded = tokenizer::pad_to(&tokens, 32);
+    let padded = tokenizer::pad_to(&tokens, 32).unwrap();
     let logits = scorer.logits(&padded, &plan).unwrap();
     let v = entry.config.vocab;
     let last = tokens.len() - 1;
@@ -65,7 +65,7 @@ fn scoring_and_lp_serving_agree() {
     let tokens: Vec<i32> = tokenizer::encode("copy : abcd -> ", true, false);
     let engine = Engine::cpu().unwrap();
     let scorer = Scorer::new(&engine, entry, &weights, 32).unwrap();
-    let padded = tokenizer::pad_to(&tokens, 32);
+    let padded = tokenizer::pad_to(&tokens, 32).unwrap();
     let logits = scorer.logits(&padded, &plan).unwrap();
     let v = entry.config.vocab;
     let last = tokens.len() - 1;
