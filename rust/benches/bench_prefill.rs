@@ -6,7 +6,10 @@
 //! count, not the kernel).
 
 use truedepth::bench::Bench;
-use truedepth::harness::no_net;
+use truedepth::config::ServerConfig;
+use truedepth::coordinator::{RequestOptions, Server};
+use truedepth::gen::Sampler;
+use truedepth::harness::{default_net, no_net};
 use truedepth::model::{transform, ServingModel, Weights};
 use truedepth::runtime::pjrt::HostValue;
 use truedepth::runtime::{Engine, Manifest};
@@ -52,28 +55,44 @@ fn main() {
     // compute for the ceil(L / K) chunks actually run; the monolithic path
     // pays the covering bucket T (plus its full [T, V] logits block). The
     // two are bit-identical in output — only the cost scales differently.
+    // Wall-clock samples stay on the no_net model (pure executor time);
+    // the deterministic modelled metrics (modelled prefill time ∝
+    // ceil(L / K), modelled TTFT) come from a default_net twin so the
+    // timeline includes the α–β term — the figures the CI perf gate
+    // compares against rust/bench-baseline.json.
     {
         let plan = transform::pair_parallel(n, 2, 10, true);
         let serving =
             ServingModel::new(&manifest, "td-small", &weights, &plan, no_net()).unwrap();
+        let sim =
+            ServingModel::new(&manifest, "td-small", &weights, &plan, default_net()).unwrap();
         match serving.prefill_chunk() {
             None => eprintln!("   (no prefill_chunk in manifest — sweep skipped)"),
             Some(k) => {
                 println!("   prompt-length sweep (chunk K={k}):");
                 for l in [8usize, 33, 77, 150, 224] {
                     let prompt: Vec<i32> = (0..l as i32).map(|i| 97 + (i % 26)).collect();
-                    serving.mesh.metrics.reset();
-                    serving.prefill(0, &prompt).unwrap();
-                    let mono = serving.mesh.metrics.modelled_flops();
-                    serving.mesh.metrics.reset();
-                    serving.prefill_chunked(0, &prompt).unwrap();
-                    let chunked = serving.mesh.metrics.modelled_flops();
+                    sim.mesh.metrics.reset();
+                    sim.prefill(0, &prompt).unwrap();
+                    let mono = sim.mesh.metrics.modelled_flops();
+                    sim.mesh.metrics.reset();
+                    sim.prefill_chunked(0, &prompt).unwrap();
+                    let chunked = sim.mesh.metrics.modelled_flops();
+                    let prefill_ms = sim.mesh.metrics.modelled_total_ms();
+                    let payload = sim.mesh.metrics.sync_bytes();
                     let chunks = l.div_ceil(k);
                     println!(
-                        "     L={l:>3}: monolithic {:>7.2} Mflop (bucket pad) vs chunked {:>7.2} Mflop ({chunks} chunks, x{:.2})",
+                        "     L={l:>3}: monolithic {:>7.2} Mflop (bucket pad) vs chunked {:>7.2} Mflop ({chunks} chunks, x{:.2}) — {prefill_ms:.3} ms modelled",
                         mono as f64 / 1e6,
                         chunked as f64 / 1e6,
                         mono as f64 / chunked as f64,
+                    );
+                    b.metric(&format!("modelled_prefill_ms_L{l}"), prefill_ms);
+                    b.metric(&format!("prefill_chunks_L{l}"), chunks as f64);
+                    b.metric(&format!("prefill_mflop_L{l}"), chunked as f64 / 1e6);
+                    b.metric(
+                        &format!("prefill_allreduce_bytes_L{l}"),
+                        payload as f64,
                     );
                     b.bench_timed(&format!("prefill_chunked_L{l}"), 8, || {
                         let t0 = std::time::Instant::now();
@@ -82,6 +101,34 @@ fn main() {
                     });
                 }
             }
+        }
+    }
+
+    // End-to-end scheduler-attribution gate: one request through the real
+    // Server/Scheduler over a default_net model. On an idle server the
+    // first token samples from the FINAL prefill chunk's logits, so the
+    // scheduler's modelled TTFT (admission → first token on the simulated
+    // clock) must equal the 77-token chunked prefill cost, and its
+    // modelled decode throughput must match the B = 1 bucketed round —
+    // gating the attribution path itself, not just the raw cost formulas.
+    {
+        let plan = transform::pair_parallel(n, 2, 10, true);
+        let sim =
+            ServingModel::new(&manifest, "td-small", &weights, &plan, default_net()).unwrap();
+        if sim.prefill_chunk().is_some() {
+            let server = Server::start(sim, &ServerConfig::default());
+            let opts = RequestOptions { max_new_tokens: 4, sampler: Sampler::Greedy };
+            // BOS + 76 bytes = 77 prompt tokens (3 chunks of K = 32)
+            let resp = server.submit_blocking(&"x".repeat(76), opts).unwrap();
+            assert!(resp.error.is_none(), "{:?}", resp.error);
+            let ttft = server.metrics.modelled_ttft_summary().unwrap().p50;
+            let tps = server.metrics.modelled_decode_tok_per_s().unwrap();
+            println!(
+                "   scheduler attribution: modelled ttft {ttft:.3} ms, decode {tps:.1} tok/s"
+            );
+            b.metric("modelled_sched_ttft_ms_77tok", ttft);
+            b.metric("modelled_sched_decode_tok_per_s", tps);
+            server.shutdown();
         }
     }
 

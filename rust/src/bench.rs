@@ -7,7 +7,11 @@
 //! b.finish();
 //! ```
 //! Prints criterion-style `name  time/iter ± σ  (n iters)` lines and writes
-//! a machine-readable JSON report next to the target dir.
+//! a machine-readable JSON report next to the target dir. Besides timing
+//! samples, a report can carry named **deterministic metrics**
+//! ([`Bench::metric`]) — modelled tokens/sec, flops/token, α–β payloads —
+//! which is what the CI perf-regression gate (`bin/perf_gate.rs`) compares
+//! against the checked-in `rust/bench-baseline.json`.
 
 use std::time::{Duration, Instant};
 
@@ -17,6 +21,8 @@ use crate::util::stats::{fmt_duration, Summary};
 pub struct Bench {
     group: String,
     results: Vec<(String, Summary)>,
+    /// Named deterministic metrics for the JSON report (`"metrics"` key).
+    metrics: Vec<(String, f64)>,
     /// Minimum measurement time per benchmark.
     pub measure_time: Duration,
     /// Warmup time before measuring.
@@ -31,10 +37,20 @@ impl Bench {
         Bench {
             group: group.to_string(),
             results: vec![],
+            metrics: vec![],
             measure_time: Duration::from_millis(800),
             warmup_time: Duration::from_millis(150),
             max_iters: 1_000_000,
         }
+    }
+
+    /// Record a named deterministic metric (modelled time, flop counts,
+    /// payload bytes, …) into the JSON report's `"metrics"` object. Unlike
+    /// the timing samples these are machine-independent, so CI can fail a
+    /// PR on a small relative change (`bin/perf_gate.rs`).
+    pub fn metric(&mut self, name: &str, value: f64) {
+        println!("   metric {name} = {value:.4}");
+        self.metrics.push((name.to_string(), value));
     }
 
     /// Benchmark `f`, auto-picking the iteration count.
@@ -76,7 +92,13 @@ impl Bench {
 
     /// Benchmark with a measured-section closure returning its own duration
     /// (for workloads needing per-iter setup that must not be timed).
+    ///
+    /// The first invocation is a discarded warmup: it pays one-time costs
+    /// (lazy executable compilation, cache fill) that would otherwise skew
+    /// the reported stats — and with them any baseline comparison — by
+    /// folding first-compile cost into the sample mean.
     pub fn bench_timed(&mut self, name: &str, samples: usize, mut f: impl FnMut() -> Duration) {
+        let _cold = f(); // warmup, excluded from the stats
         let mut times = Vec::with_capacity(samples);
         for _ in 0..samples {
             times.push(f().as_nanos() as f64);
@@ -105,7 +127,17 @@ impl Bench {
                 ])
             })
             .collect();
-        let report = obj(vec![("group", s(self.group.clone())), ("results", arr(entries))]);
+        let metrics = obj(
+            self.metrics
+                .iter()
+                .map(|(name, v)| (name.as_str(), num(*v)))
+                .collect(),
+        );
+        let report = obj(vec![
+            ("group", s(self.group.clone())),
+            ("results", arr(entries)),
+            ("metrics", metrics),
+        ]);
         let dir = crate::repo_root().join("target/bench-reports");
         let _ = std::fs::create_dir_all(&dir);
         let path = dir.join(format!("{}.json", self.group));
@@ -137,5 +169,44 @@ mod tests {
         let mut b = Bench::new("selftest2");
         b.bench_timed("fixed", 5, || Duration::from_micros(100));
         assert_eq!(b.finish(), 1);
+    }
+
+    /// Satellite bugfix regression: the cold first iteration (lazy compile,
+    /// cache fill) must be excluded from the reported stats.
+    #[test]
+    fn bench_timed_discards_cold_first_iteration() {
+        let mut b = Bench::new("selftest3");
+        let mut calls = 0u32;
+        b.bench_timed("warm", 4, || {
+            calls += 1;
+            if calls == 1 {
+                Duration::from_secs(10) // pathological first-compile cost
+            } else {
+                Duration::from_micros(50)
+            }
+        });
+        assert_eq!(calls, 5, "warmup + 4 samples");
+        let (_, summary) = &b.results[0];
+        assert_eq!(summary.n, 4);
+        assert!(
+            (summary.mean - 50_000.0).abs() < 1e-6,
+            "cold iteration leaked into the stats: mean {} ns",
+            summary.mean
+        );
+        assert_eq!(b.finish(), 1);
+    }
+
+    #[test]
+    fn metrics_land_in_the_json_report() {
+        let mut b = Bench::new("selftest4");
+        b.metric("modelled_tok_per_s", 123.5);
+        b.metric("payload_bytes", 4096.0);
+        b.finish();
+        let path = crate::repo_root().join("target/bench-reports/selftest4.json");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let v = crate::util::json::Value::parse(&text).unwrap();
+        let m = v.get("metrics").expect("metrics object");
+        assert_eq!(m.get("modelled_tok_per_s").unwrap().as_f64(), Some(123.5));
+        assert_eq!(m.get("payload_bytes").unwrap().as_f64(), Some(4096.0));
     }
 }

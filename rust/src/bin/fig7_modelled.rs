@@ -1,0 +1,203 @@
+//! Fig. 7 regenerator from **modelled time**: the throughput-vs-depth
+//! (throughput-vs-accuracy proxy) tradeoff curve of Layer Parallelism,
+//! computed analytically from the unified cost model — no GPU, no
+//! artifacts, fully deterministic.
+//!
+//!     cargo run --release --bin fig7_modelled [-- --model llama7b|td-small]
+//!
+//! For each LP window size Δ (depth n − Δ/2) the decode-token cost is the
+//! sum of the `parallel::simnet::CostModel` terms over the serving
+//! executor's protocol shape (mirrors `ServingModel::decode_step_shaped`):
+//!
+//! * roofline compute: `B · decode_flops_per_lane` flops over
+//!   `decode_bytes(B)` bytes (weights stream once per round, K/V per lane);
+//! * `2 + 2·stages` kernel launches (embed + 2 per stage + logits);
+//! * `2·stages` all-reduces of the `[B, D]` f32 partial (α–β);
+//! * host link: token ids + positions (+ lane map) in, embed shadow +
+//!   `[B, V]` logits out.
+//!
+//! The `llama7b` preset prices Llama-2-7B shapes on an A100-like
+//! [`DeviceProfile`] with α calibrated so modelled sync:compute matches the
+//! paper's Table 3 ratio (100.8 : 217 ≈ 0.46); at full LP coverage the
+//! modelled speedup lands at the paper's headline ≈1.19× (printed, and
+//! loosely asserted whenever the binary runs — it is not yet wired into a
+//! CI job; see the ROADMAP follow-up). The accuracy axis
+//! of the paper's figure is proxied by the depth fraction here — pair with
+//! `fig6_ppl_sweep` for measured td-small perplexity at each depth.
+//!
+//! Output: results/fig7_modelled_<model>.csv
+//!   (task, delta, eff_depth, depth_fraction, occupancy,
+//!    modelled_ms_per_tok, tok_per_s, speedup_vs_d0)
+
+use truedepth::cli::Args;
+use truedepth::config::{DeviceProfile, InterconnectConfig};
+use truedepth::harness::write_csv;
+use truedepth::model::plan::{GraphPlan, Stage};
+use truedepth::model::transform;
+use truedepth::parallel::CostModel;
+use truedepth::runtime::buckets::{decode_bytes, decode_flops_per_lane};
+use truedepth::runtime::ModelConfig;
+
+const RANKS: usize = 2;
+
+struct Preset {
+    cfg: ModelConfig,
+    cost: CostModel,
+}
+
+fn preset(name: &str) -> Option<Preset> {
+    match name {
+        // The testbed model priced with the calibrated testbed defaults.
+        "td-small" => Some(Preset {
+            cfg: ModelConfig {
+                name: "td-small".into(),
+                vocab: 260,
+                d_model: 128,
+                n_layers: 12,
+                n_heads: 4,
+                head_dim: 32,
+                d_ff: 256,
+                ctx: 256,
+                slots: 4,
+            },
+            cost: CostModel::from_net(InterconnectConfig::default()),
+        }),
+        // Llama-2 7B shapes on an A100-like profile. α is calibrated so
+        // modelled sync:compute for full-depth TP decode sits at the
+        // paper's Table 3 ratio (≈0.46); β/peak/HBM are public A100 specs
+        // (f32 traffic, hence the conservative HBM figure).
+        "llama7b" => Some(Preset {
+            cfg: ModelConfig {
+                name: "llama7b".into(),
+                vocab: 32000,
+                d_model: 4096,
+                n_layers: 32,
+                n_heads: 32,
+                head_dim: 128,
+                d_ff: 11008,
+                ctx: 4096,
+                slots: 4,
+            },
+            cost: CostModel::new(
+                InterconnectConfig {
+                    alpha_s: 115e-6,
+                    beta_bytes_per_s: 300e9,
+                    enabled: true,
+                },
+                DeviceProfile {
+                    peak_flops_per_s: 312e12,
+                    hbm_bytes_per_s: 1.9e12,
+                    launch_s: 5e-6,
+                    host_bytes_per_s: 25e9,
+                },
+            ),
+        }),
+        _ => None,
+    }
+}
+
+/// Layer-equivalents of a serving plan (Tp = 1 whole layer of compute
+/// across the mesh, Lp = 2) — mirrors `ServingModel::new`.
+fn layers_equiv(plan: &GraphPlan) -> usize {
+    plan.stages
+        .iter()
+        .map(|s| match s {
+            Stage::Seq(_) => 1,
+            Stage::PairLp(..) => 2,
+            _ => unreachable!("fig7_modelled sweeps only servable plans"),
+        })
+        .sum()
+}
+
+/// Modelled wall time of one decode round over `b` dispatched lanes,
+/// in seconds (the protocol shape documented in the module docs).
+fn decode_round_s(cost: &CostModel, cfg: &ModelConfig, plan: &GraphPlan, b: usize) -> f64 {
+    let stages = plan.stages.len();
+    let le = layers_equiv(plan);
+    let d = cfg.d_model;
+    let compute = cost
+        .compute_cost(b as u64 * decode_flops_per_lane(cfg, le), decode_bytes(cfg, le, b));
+    let launches = cost.launch_cost(2 + 2 * stages as u64);
+    let sync_one = cost.all_reduce_cost(b * d * 4, RANKS);
+    let host_bytes = (RANKS * b * 4)      // positions, uploaded per rank
+        + (RANKS * b * 4)                 // lane map, uploaded per rank
+        + b * 4                           // token ids (rank-0 embed arg)
+        + b * d * 4                       // embed shadow download
+        + b * cfg.vocab * 4; // [B, V] logits download
+    let host = cost.host_transfer_cost(host_bytes as u64);
+    compute.as_secs_f64()
+        + launches.as_secs_f64()
+        + 2.0 * stages as f64 * sync_one.as_secs_f64()
+        + host.as_secs_f64()
+}
+
+fn main() -> truedepth::Result<()> {
+    let args = Args::from_env(&[]);
+    let model = args.get_or("model", "llama7b");
+    let Some(p) = preset(model) else {
+        return Err(truedepth::Error::msg(format!(
+            "fig7_modelled: unknown preset `{model}` (llama7b | td-small)"
+        )));
+    };
+    let n = p.cfg.n_layers;
+
+    // Δ sweep: 0 (sequential TP) up to full pair-parallel coverage.
+    let mut rows = Vec::new();
+    let mut headline = None;
+    let mut base: std::collections::HashMap<(String, usize), f64> =
+        std::collections::HashMap::new();
+    println!("== fig7 (modelled) — {model}, {n} layers ==");
+    for delta in (0..=n).step_by(4) {
+        let plan = if delta == 0 {
+            transform::sequential(n)
+        } else {
+            match transform::lp_for_depth(n, n - delta / 2, n) {
+                Some(p) => p,
+                None => continue,
+            }
+        };
+        let depth = plan.effective_depth();
+        let frac = depth as f64 / n as f64;
+        for (task, b) in [("one_token", 1usize), ("batch_decode", p.cfg.slots)] {
+            let secs = decode_round_s(&p.cost, &p.cfg, &plan, b);
+            let ms = secs * 1e3;
+            let tps = b as f64 / secs;
+            let key = (task.to_string(), b);
+            if delta == 0 {
+                base.insert(key.clone(), ms);
+            }
+            let speedup = base.get(&key).map(|m0| m0 / ms).unwrap_or(1.0);
+            println!(
+                "  Δ={delta:<3} depth {depth:<3} {task:<12} B={b}: {ms:>8.3} ms/round  {tps:>9.1} tok/s  ×{speedup:.3}"
+            );
+            rows.push(format!(
+                "{task},{delta},{depth},{frac:.4},{b},{ms:.4},{tps:.2},{speedup:.4}"
+            ));
+            if task == "one_token" && delta == n {
+                headline = Some(speedup);
+            }
+        }
+    }
+
+    if let Some(x) = headline {
+        println!(
+            "\nheadline: full-LP single-stream decode speedup ×{x:.3} (paper: ×1.19 on Llama 2 7B)"
+        );
+        if model == "llama7b" {
+            // Loose envelope: the calibration should keep the modelled
+            // headline in the paper's neighborhood; a drift outside it
+            // means the cost model or the protocol shape changed.
+            assert!(
+                (1.05..1.40).contains(&x),
+                "modelled llama7b speedup ×{x:.3} left the paper's neighborhood"
+            );
+        }
+    }
+
+    write_csv(
+        &format!("fig7_modelled_{model}.csv"),
+        "task,delta,eff_depth,depth_fraction,occupancy,modelled_ms_per_tok,tok_per_s,speedup_vs_d0",
+        &rows,
+    );
+    Ok(())
+}

@@ -1,0 +1,232 @@
+//! Deterministic perf-regression gate (the CI `perf-gate` job).
+//!
+//!     cargo run --release --bin perf_gate [-- --baseline rust/bench-baseline.json \
+//!         --reports target/bench-reports --tolerance 0.02] [--write-baseline] \
+//!         [--allow-regress]
+//!
+//! Compares the **deterministic** `"metrics"` objects of the bench JSON
+//! reports (`Bench::metric` — modelled tokens/sec, modelled TTFT,
+//! flops/token, α–β payload bytes; never wall-clock samples) against the
+//! checked-in `rust/bench-baseline.json` and exits non-zero when any
+//! metric regresses by more than the tolerance (default 2%). Because every
+//! gated figure derives from the cost model and shape formulas rather than
+//! machine speed, the gate is bit-stable across hosts: a failure means a
+//! PR actually changed the modelled cost of the serving protocol.
+//!
+//! Re-baselining an intentional change: run with `--write-baseline` and
+//! commit the refreshed file, including `[perf-baseline]` in the commit
+//! message — CI passes `--allow-regress` for such commits so the gate
+//! reports the diff without failing the run.
+//!
+//! Baseline schema: `{"tolerance": 0.02, "metrics": {"<group>.<name>":
+//! {"value": f64, "better": "higher"|"lower"}}}`. Direction is stored per
+//! metric (inferred from the name at `--write-baseline` time: throughput
+//! names containing `per_s` are higher-is-better, everything else —
+//! latency, flops, bytes, chunk counts — lower-is-better).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use truedepth::cli::Args;
+use truedepth::util::json::{num, obj, s, Value};
+
+fn fail(msg: &str) -> ! {
+    eprintln!("perf_gate: {msg}");
+    std::process::exit(1);
+}
+
+/// Read every `<dir>/*.json` bench report into `group.name -> value`,
+/// skipping the unit tests' `selftest*` scratch groups.
+fn collect_metrics(dir: &Path) -> BTreeMap<String, f64> {
+    let mut out = BTreeMap::new();
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(e) => fail(&format!("cannot read reports dir {}: {e}", dir.display())),
+    };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.extension().and_then(|e| e.to_str()) != Some("json") {
+            continue;
+        }
+        let Ok(text) = std::fs::read_to_string(&path) else { continue };
+        let Ok(v) = Value::parse(&text) else {
+            eprintln!("perf_gate: skipping unparsable {}", path.display());
+            continue;
+        };
+        let group = v.get("group").and_then(|g| g.as_str()).unwrap_or("").to_string();
+        if group.is_empty() || group.starts_with("selftest") {
+            continue;
+        }
+        if let Some(metrics) = v.get("metrics").and_then(|m| m.as_obj()) {
+            for (name, val) in metrics {
+                if let Some(x) = val.as_f64() {
+                    out.insert(format!("{group}.{name}"), x);
+                }
+            }
+        }
+    }
+    out
+}
+
+fn infer_direction(name: &str) -> &'static str {
+    if name.contains("per_s") {
+        "higher"
+    } else {
+        "lower"
+    }
+}
+
+fn write_baseline(path: &Path, current: &BTreeMap<String, f64>, tolerance: f64) {
+    let metrics = obj(
+        current
+            .iter()
+            .map(|(k, &v)| {
+                (
+                    k.as_str(),
+                    obj(vec![("value", num(v)), ("better", s(infer_direction(k)))]),
+                )
+            })
+            .collect(),
+    );
+    let doc = obj(vec![("tolerance", num(tolerance)), ("metrics", metrics)]);
+    if let Err(e) = std::fs::write(path, doc.to_string_pretty() + "\n") {
+        fail(&format!("cannot write baseline {}: {e}", path.display()));
+    }
+    println!(
+        "perf_gate: wrote baseline with {} metrics to {}",
+        current.len(),
+        path.display()
+    );
+}
+
+fn main() {
+    let args = Args::from_env(&["write-baseline", "allow-regress"]);
+    let root = truedepth::repo_root();
+    let baseline_path = match args.get_or("baseline", "") {
+        "" => {
+            // repo_root() is the workspace root under TRUEDEPTH_ROOT (CI),
+            // but resolves to rust/ itself when invoked from inside the
+            // crate — the baseline lives next to Cargo.toml either way.
+            let from_workspace = root.join("rust/bench-baseline.json");
+            if from_workspace.parent().is_some_and(|p| p.is_dir()) {
+                from_workspace
+            } else {
+                root.join("bench-baseline.json")
+            }
+        }
+        p => PathBuf::from(p),
+    };
+    let reports_dir = match args.get_or("reports", "") {
+        "" => root.join("target/bench-reports"),
+        p => PathBuf::from(p),
+    };
+    let current = collect_metrics(&reports_dir);
+    if current.is_empty() {
+        fail(&format!(
+            "no deterministic metrics found under {} — run `cargo bench --bench \
+             bench_decode --bench bench_prefill` first",
+            reports_dir.display()
+        ));
+    }
+
+    let cli_tol: Option<f64> = args
+        .get("tolerance")
+        .map(|t| t.parse().unwrap_or_else(|_| fail("bad --tolerance")));
+
+    if args.flag("write-baseline") {
+        write_baseline(&baseline_path, &current, cli_tol.unwrap_or(0.02));
+        return;
+    }
+
+    let text = match std::fs::read_to_string(&baseline_path) {
+        Ok(t) => t,
+        Err(e) => fail(&format!(
+            "cannot read baseline {} ({e}) — generate one with --write-baseline",
+            baseline_path.display()
+        )),
+    };
+    let doc =
+        Value::parse(&text).unwrap_or_else(|e| fail(&format!("bad baseline json: {e}")));
+    let tolerance = cli_tol
+        .or_else(|| doc.get("tolerance").and_then(|t| t.as_f64()))
+        .unwrap_or(0.02);
+    let Some(base_metrics) = doc.get("metrics").and_then(|m| m.as_obj()) else {
+        fail("baseline has no `metrics` object");
+    };
+
+    let mut failures = Vec::new();
+    let mut improvements = 0usize;
+    let mut checked = 0usize;
+    for (name, entry) in base_metrics {
+        let base = entry
+            .get("value")
+            .and_then(|v| v.as_f64())
+            .unwrap_or_else(|| fail(&format!("baseline metric `{name}` has no value")));
+        let better = entry.get("better").and_then(|b| b.as_str()).unwrap_or("lower");
+        let Some(&cur) = current.get(name) else {
+            failures.push(format!(
+                "{name}: missing from the bench reports (baseline {base:.4})"
+            ));
+            continue;
+        };
+        checked += 1;
+        // relative change in the "worse" direction
+        let rel = if base == 0.0 {
+            if cur == 0.0 {
+                0.0
+            } else if better == "higher" {
+                -1.0 // anything above a zero floor is an improvement
+            } else {
+                f64::INFINITY
+            }
+        } else {
+            match better {
+                "higher" => (base - cur) / base,
+                _ => (cur - base) / base,
+            }
+        };
+        if rel > tolerance {
+            failures.push(format!(
+                "{name}: {cur:.4} vs baseline {base:.4} ({:+.2}% in the worse \
+                 direction, tolerance {:.1}%)",
+                rel * 100.0,
+                tolerance * 100.0
+            ));
+        } else if rel < -tolerance {
+            improvements += 1;
+            println!(
+                "perf_gate: {name} improved: {cur:.4} vs baseline {base:.4} \
+                 (consider re-baselining with --write-baseline + [perf-baseline])"
+            );
+        }
+    }
+    for name in current.keys() {
+        if !base_metrics.contains_key(name) {
+            println!(
+                "perf_gate: note: new metric `{name}` not in the baseline \
+                 (re-baseline to start gating it)"
+            );
+        }
+    }
+
+    println!(
+        "perf_gate: {checked} metrics checked against {} (tolerance {:.1}%), \
+         {improvements} improved, {} regressed",
+        baseline_path.display(),
+        tolerance * 100.0,
+        failures.len()
+    );
+    if !failures.is_empty() {
+        for f in &failures {
+            eprintln!("perf_gate: REGRESSION {f}");
+        }
+        if args.flag("allow-regress") {
+            println!(
+                "perf_gate: --allow-regress set ([perf-baseline] override) — \
+                 reporting without failing"
+            );
+        } else {
+            std::process::exit(1);
+        }
+    }
+}

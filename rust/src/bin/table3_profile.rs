@@ -55,13 +55,23 @@ fn main() -> truedepth::Result<()> {
         // Modelled device compute per token (deterministic; scales with
         // the dispatched batch shape — full [S] lanes here).
         let mflop_per_tok = serving.mesh.metrics.modelled_flops() as f64 / steps as f64 / 1e6;
+        // The modelled timeline (deterministic, per token): α–β sync +
+        // roofline compute/launches + host link = the simulated clock.
+        let m_sync = serving.mesh.metrics.modelled_sync_ms() / steps as f64;
+        let m_comp = serving.mesh.metrics.modelled_compute_ms() / steps as f64;
+        let m_host = serving.mesh.metrics.modelled_host_ms() / steps as f64;
+        let m_total = serving.mesh.metrics.modelled_total_ms() / steps as f64;
         println!(
             "{name:<16}: total {total_ms:>8.2} ms  sync {sync_ms:>8.2} ms ({sync_ops} ops)  compute {compute_ms:>8.2} ms ({mflop_per_tok:.2} Mflop/tok)  host xfers/tok {host_per_tok:.1}"
         );
+        println!(
+            "{:<16}  modelled/tok: total {m_total:>7.3} ms = sync {m_sync:.3} + compute {m_comp:.3} + host {m_host:.4}",
+            ""
+        );
         rows.push(format!(
-            "{name},{total_ms:.2},{sync_ms:.2},{compute_ms:.2},{sync_ops},{host_per_tok:.1},{mflop_per_tok:.2}"
+            "{name},{total_ms:.2},{sync_ms:.2},{compute_ms:.2},{sync_ops},{host_per_tok:.1},{mflop_per_tok:.2},{m_sync:.4},{m_comp:.4},{m_host:.4},{m_total:.4}"
         ));
-        results.push((total_ms, sync_ms, compute_ms, sync_ops));
+        results.push((m_total, m_sync, m_comp, sync_ops));
     }
 
     // Shape-bucket dispatch: the same 2-layer LP sub-model at occupancy 1
@@ -76,9 +86,10 @@ fn main() -> truedepth::Result<()> {
         let flops = serving.mesh.metrics.modelled_flops();
         let out = serving.mesh.metrics.host_transfers().out_bytes;
         println!(
-            "occupancy 1/{}   : modelled {:.2} Mflop/tok  download {out} B  (buckets {:?})",
+            "occupancy 1/{}   : modelled {:.2} Mflop/tok  download {out} B  {:.3} ms modelled/tok  (buckets {:?})",
             cfg.slots,
             flops as f64 / 1e6,
+            serving.mesh.metrics.modelled_total_ms(),
             serving.bucket_set.buckets(),
         );
     }
@@ -97,14 +108,15 @@ fn main() -> truedepth::Result<()> {
                 serving.mesh.metrics.reset();
                 serving.prefill_chunked(0, &prompt)?;
                 let chunked = serving.mesh.metrics.modelled_flops();
+                let m_ms = serving.mesh.metrics.modelled_total_ms();
                 println!(
-                    "prefill L={l:>3}   : monolithic {:>7.2} Mflop vs chunked {:>7.2} Mflop ({} chunks of {k})",
+                    "prefill L={l:>3}   : monolithic {:>7.2} Mflop vs chunked {:>7.2} Mflop ({} chunks of {k}, {m_ms:.3} ms modelled)",
                     mono as f64 / 1e6,
                     chunked as f64 / 1e6,
                     l.div_ceil(k),
                 );
                 prows.push(format!(
-                    "{l},{k},{},{:.4},{:.4}",
+                    "{l},{k},{},{:.4},{:.4},{m_ms:.4}",
                     l.div_ceil(k),
                     mono as f64 / 1e6,
                     chunked as f64 / 1e6
@@ -112,7 +124,7 @@ fn main() -> truedepth::Result<()> {
             }
             write_csv(
                 &format!("table3_prefill_{model}.csv"),
-                "prompt_len,chunk,chunks,monolithic_mflop,chunked_mflop",
+                "prompt_len,chunk,chunks,monolithic_mflop,chunked_mflop,chunked_modelled_ms",
                 &prows,
             );
         }
@@ -120,7 +132,7 @@ fn main() -> truedepth::Result<()> {
 
     let (t_tp, s_tp, c_tp, o_tp) = results[0];
     let (t_lp, s_lp, c_lp, o_lp) = results[1];
-    println!("\npaper Table 3 shape (TP/LP ratios):");
+    println!("\npaper Table 3 shape (TP/LP ratios, modelled — deterministic):");
     println!("  sync ops : {o_tp} → {o_lp} (×{:.2}; paper ×2.00)", o_tp as f64 / o_lp as f64);
     println!("  sync ms  : ×{:.2}  (paper ×1.99)", s_tp / s_lp);
     println!("  compute  : ×{:.2}  (paper ×1.04)", c_tp / c_lp);
@@ -128,7 +140,7 @@ fn main() -> truedepth::Result<()> {
 
     write_csv(
         &format!("table3_{model}.csv"),
-        "approach,total_ms,sync_ms,compute_ms,sync_ops,host_transfers_per_token,mflop_per_token",
+        "approach,total_ms,sync_ms,compute_ms,sync_ops,host_transfers_per_token,mflop_per_token,modelled_sync_ms_per_tok,modelled_compute_ms_per_tok,modelled_host_ms_per_tok,modelled_total_ms_per_tok",
         &rows,
     );
     Ok(())

@@ -1,4 +1,15 @@
 //! Serving metrics: counters + latency reservoirs, shared via Arc.
+//!
+//! Two parallel sets of latency figures coexist here:
+//!
+//! * **wall-clock** TTFT/latency — what a caller experienced on this
+//!   machine, inherently load-dependent;
+//! * **modelled** TTFT/latency/throughput — deltas of the mesh's simulated
+//!   clock (`MeshMetrics::modelled_total_ns`: roofline compute + α–β
+//!   collectives + host link), attributed to requests and decode rounds by
+//!   the scheduler. Deterministic: two identical runs report bit-identical
+//!   modelled figures, which is what lets CI gate on them
+//!   (`bin/perf_gate.rs`) where wall-clock would flake.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -15,6 +26,14 @@ pub struct ServerMetrics {
     pub decode_steps: AtomicU64,
     /// Live-lane count of the most recent decode round (gauge).
     pub live_lanes_last_round: AtomicU64,
+    /// Modelled device time spent in decode rounds, ns (simulated-clock
+    /// deltas recorded by the scheduler around each round).
+    pub modelled_decode_ns: AtomicU64,
+    /// Tokens produced by those rounds (= Σ live lanes per round); with
+    /// `modelled_decode_ns` this yields modelled decode throughput.
+    pub modelled_decode_tokens: AtomicU64,
+    /// Modelled device time spent in prefill passes/chunks, ns.
+    pub modelled_prefill_ns: AtomicU64,
     /// Occupancy histogram: `hist[k]` = decode rounds with k live lanes.
     /// Together with the gauge this makes bucket-selection quality
     /// observable: rounds clustered at low occupancy should dispatch small
@@ -22,25 +41,46 @@ pub struct ServerMetrics {
     occupancy_hist: Mutex<Vec<u64>>,
     ttft_ms: Mutex<Vec<f64>>,
     latency_ms: Mutex<Vec<f64>>,
+    modelled_ttft_ms: Mutex<Vec<f64>>,
+    modelled_latency_ms: Mutex<Vec<f64>>,
 }
 
 impl ServerMetrics {
-    pub fn record_completion(&self, ttft_ms: f64, latency_ms: f64, tokens: usize) {
+    /// Record a finished request: wall-clock TTFT/latency plus the modelled
+    /// (simulated-clock) equivalents attributed by the scheduler.
+    pub fn record_completion(
+        &self,
+        ttft_ms: f64,
+        latency_ms: f64,
+        tokens: usize,
+        modelled_ttft_ms: f64,
+        modelled_latency_ms: f64,
+    ) {
         self.requests_completed.fetch_add(1, Ordering::Relaxed);
         self.tokens_generated.fetch_add(tokens as u64, Ordering::Relaxed);
         self.ttft_ms.lock().unwrap().push(ttft_ms);
         self.latency_ms.lock().unwrap().push(latency_ms);
+        self.modelled_ttft_ms.lock().unwrap().push(modelled_ttft_ms);
+        self.modelled_latency_ms.lock().unwrap().push(modelled_latency_ms);
     }
 
-    /// Record one decode round with `live` occupied lanes.
-    pub fn record_decode_round(&self, live: usize) {
+    /// Record one decode round: `live` occupied lanes, `modelled_ns` of
+    /// simulated-clock time the round cost.
+    pub fn record_decode_round(&self, live: usize, modelled_ns: u64) {
         self.decode_steps.fetch_add(1, Ordering::Relaxed);
         self.live_lanes_last_round.store(live as u64, Ordering::Relaxed);
+        self.modelled_decode_ns.fetch_add(modelled_ns, Ordering::Relaxed);
+        self.modelled_decode_tokens.fetch_add(live as u64, Ordering::Relaxed);
         let mut hist = self.occupancy_hist.lock().unwrap();
         if hist.len() <= live {
             hist.resize(live + 1, 0);
         }
         hist[live] += 1;
+    }
+
+    /// Record one prefill pass/chunk step's simulated-clock cost.
+    pub fn record_prefill_step(&self, modelled_ns: u64) {
+        self.modelled_prefill_ns.fetch_add(modelled_ns, Ordering::Relaxed);
     }
 
     /// Snapshot of the occupancy histogram (index = live lanes per round).
@@ -56,6 +96,26 @@ impl ServerMetrics {
     pub fn latency_summary(&self) -> Option<Summary> {
         let v = self.latency_ms.lock().unwrap();
         (!v.is_empty()).then(|| Summary::from(&v))
+    }
+
+    /// Modelled admission→first-token latency distribution (deterministic).
+    pub fn modelled_ttft_summary(&self) -> Option<Summary> {
+        let v = self.modelled_ttft_ms.lock().unwrap();
+        (!v.is_empty()).then(|| Summary::from(&v))
+    }
+
+    /// Modelled end-to-end request latency distribution (deterministic).
+    pub fn modelled_latency_summary(&self) -> Option<Summary> {
+        let v = self.modelled_latency_ms.lock().unwrap();
+        (!v.is_empty()).then(|| Summary::from(&v))
+    }
+
+    /// Modelled decode throughput: tokens produced per second of simulated
+    /// decode-round time. `None` until a round has been recorded.
+    pub fn modelled_decode_tok_per_s(&self) -> Option<f64> {
+        let ns = self.modelled_decode_ns.load(Ordering::Relaxed);
+        let toks = self.modelled_decode_tokens.load(Ordering::Relaxed);
+        (ns > 0).then(|| toks as f64 / (ns as f64 / 1e9))
     }
 
     pub fn report(&self) -> String {
@@ -88,6 +148,32 @@ impl ServerMetrics {
         if let Some(l) = self.latency_summary() {
             s += &format!("\nlatency ms: p50 {:.1} p90 {:.1} p99 {:.1}", l.p50, l.p90, l.p99);
         }
+        if let Some(t) = self.modelled_ttft_summary() {
+            s += &format!(
+                "\nmodelled ttft ms: p50 {:.2} p90 {:.2} p99 {:.2}",
+                t.p50, t.p90, t.p99
+            );
+        }
+        if let Some(l) = self.modelled_latency_summary() {
+            s += &format!(
+                "\nmodelled latency ms: p50 {:.2} p90 {:.2} p99 {:.2}",
+                l.p50, l.p90, l.p99
+            );
+        }
+        if let Some(tps) = self.modelled_decode_tok_per_s() {
+            s += &format!(
+                "\nmodelled decode: {:.1} tok/s ({:.2} ms over {} tokens)",
+                tps,
+                self.modelled_decode_ns.load(Ordering::Relaxed) as f64 / 1e6,
+                self.modelled_decode_tokens.load(Ordering::Relaxed),
+            );
+        }
+        // reported independently of decode: a run can have prefilled
+        // without completing a single decode round yet
+        let prefill_ns = self.modelled_prefill_ns.load(Ordering::Relaxed);
+        if prefill_ns > 0 {
+            s += &format!("\nmodelled prefill: {:.2} ms", prefill_ns as f64 / 1e6);
+        }
         s
     }
 }
@@ -100,12 +186,17 @@ mod tests {
     fn records_and_reports() {
         let m = ServerMetrics::default();
         m.requests_submitted.store(3, Ordering::Relaxed);
-        m.record_completion(10.0, 50.0, 8);
-        m.record_completion(20.0, 70.0, 8);
+        m.record_completion(10.0, 50.0, 8, 9.0, 45.0);
+        m.record_completion(20.0, 70.0, 8, 19.0, 65.0);
         assert_eq!(m.tokens_generated.load(Ordering::Relaxed), 16);
         let t = m.ttft_summary().unwrap();
         assert!((t.p50 - 15.0).abs() < 1e-9);
+        let mt = m.modelled_ttft_summary().unwrap();
+        assert!((mt.p50 - 14.0).abs() < 1e-9);
+        let ml = m.modelled_latency_summary().unwrap();
+        assert!((ml.p50 - 55.0).abs() < 1e-9);
         assert!(m.report().contains("2 completed"));
+        assert!(m.report().contains("modelled ttft"));
     }
 
     #[test]
@@ -113,22 +204,30 @@ mod tests {
         let m = ServerMetrics::default();
         assert!(m.ttft_summary().is_none());
         assert!(m.latency_summary().is_none());
+        assert!(m.modelled_ttft_summary().is_none());
+        assert!(m.modelled_latency_summary().is_none());
+        assert!(m.modelled_decode_tok_per_s().is_none());
         assert!(m.occupancy_histogram().is_empty());
         assert!(!m.report().contains("decode occupancy"));
+        assert!(!m.report().contains("modelled"));
     }
 
     #[test]
     fn occupancy_histogram_and_gauge_track_rounds() {
         let m = ServerMetrics::default();
-        m.record_decode_round(2);
-        m.record_decode_round(2);
-        m.record_decode_round(4);
-        m.record_decode_round(1);
+        m.record_decode_round(2, 1_000_000);
+        m.record_decode_round(2, 1_000_000);
+        m.record_decode_round(4, 2_000_000);
+        m.record_decode_round(1, 500_000);
         assert_eq!(m.occupancy_histogram(), vec![0, 1, 2, 0, 1]);
         assert_eq!(m.live_lanes_last_round.load(Ordering::Relaxed), 1);
         assert_eq!(m.decode_steps.load(Ordering::Relaxed), 4);
         let r = m.report();
         assert!(r.contains("1×1 2×2 4×1"), "{r}");
         assert!(r.contains("last round: 1 live"), "{r}");
+        // modelled throughput: 9 tokens over 4.5 ms simulated = 2000 tok/s
+        let tps = m.modelled_decode_tok_per_s().unwrap();
+        assert!((tps - 2000.0).abs() < 1e-9, "{tps}");
+        assert!(r.contains("modelled decode: 2000.0 tok/s"), "{r}");
     }
 }

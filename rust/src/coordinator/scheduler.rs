@@ -19,6 +19,18 @@
 //! the pre-chunking scheduler. Slots being prefilled hold their KV
 //! reservation but are skipped by `SlotManager::active_inputs` until their
 //! prompt is fully consumed.
+//!
+//! ## Modelled latency attribution
+//!
+//! Alongside wall-clock, the scheduler reads the mesh's simulated clock
+//! (`MeshMetrics::modelled_total_ns` — roofline compute + α–β collectives
+//! + host link, see `parallel::simnet`) and attributes deltas of it: each
+//! request's modelled TTFT spans admission → first-token sampling (so
+//! interleaved decode rounds and other prompts' chunks count as modelled
+//! queueing delay), its modelled latency spans admission → retirement, and
+//! every decode round / prefill chunk records its own modelled cost into
+//! `ServerMetrics`. All of it is deterministic: two identical runs produce
+//! bit-identical modelled timelines (`modelled_timeline_is_deterministic`).
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::Sender;
@@ -43,6 +55,13 @@ struct InFlight {
     /// the prompt at completion just to count it was a hot-path bug).
     prompt_tokens: usize,
     ttft_ms: f64,
+    /// Simulated-clock reading at admission (see `MeshMetrics::
+    /// modelled_total_ns`); deltas of the clock attribute modelled
+    /// latency to this request.
+    modelled_start_ns: u64,
+    /// Modelled admission→first-token latency, fixed when prefill
+    /// completed.
+    modelled_ttft_ms: f64,
     sampler: Sampler,
     rng: SplitMix64,
 }
@@ -55,6 +74,10 @@ struct PendingPrefill {
     reply: Sender<Response>,
     sampler: Sampler,
     prompt_tokens: usize,
+    /// Simulated-clock reading at admission; the request's modelled TTFT
+    /// spans from here to the sampling of its first token, so time spent
+    /// in interleaved decode rounds counts as modelled queueing delay.
+    modelled_start_ns: u64,
 }
 
 pub struct Scheduler {
@@ -76,6 +99,12 @@ impl Scheduler {
 
     pub fn model(&self) -> &ServingModel {
         &self.model
+    }
+
+    /// The mesh's simulated clock (total modelled ns so far) — the time
+    /// base for all modelled latency attribution below.
+    fn modelled_clock_ns(&self) -> u64 {
+        self.model.mesh.metrics.modelled_total_ns()
     }
 
     /// Run until the batcher closes and all in-flight work drains.
@@ -144,12 +173,14 @@ impl Scheduler {
             }
         };
         self.slots.set_prefilling(slot, true);
+        let modelled_start_ns = self.modelled_clock_ns();
         self.pending.push_back(PendingPrefill {
             state,
             request,
             reply,
             sampler,
             prompt_tokens: ids.len(),
+            modelled_start_ns,
         });
     }
 
@@ -158,7 +189,11 @@ impl Scheduler {
     /// same iteration onward.
     fn step_pending_prefill(&mut self) {
         let Some(head) = self.pending.front_mut() else { return };
-        match self.model.prefill_step(&mut head.state) {
+        let clock0 = self.model.mesh.metrics.modelled_total_ns();
+        let step = self.model.prefill_step(&mut head.state);
+        let clock1 = self.model.mesh.metrics.modelled_total_ns();
+        self.metrics.record_prefill_step(clock1 - clock0);
+        match step {
             Ok(None) => {} // chunk consumed; resume next iteration
             Ok(Some(logits)) => {
                 let p = self.pending.pop_front().unwrap();
@@ -169,6 +204,10 @@ impl Scheduler {
                 let mut rng = SplitMix64::new(p.request.id ^ 0x5eed);
                 let first = p.sampler.sample(&logits, &mut rng);
                 let ttft_ms = p.request.submitted_at.elapsed().as_secs_f64() * 1e3;
+                // Admission → first token on the simulated clock: covers
+                // this request's own chunk steps plus every decode round
+                // and other-prompt chunk interleaved since admit.
+                let modelled_ttft_ms = (clock1 - p.modelled_start_ns) as f64 / 1e6;
                 self.slots.set_prefilling(slot, false);
                 self.slots.get_mut(slot).unwrap().next_token = first;
                 self.inflight.insert(
@@ -179,6 +218,8 @@ impl Scheduler {
                         tokens: vec![],
                         prompt_tokens: p.prompt_tokens,
                         ttft_ms,
+                        modelled_start_ns: p.modelled_start_ns,
+                        modelled_ttft_ms,
                         sampler: p.sampler,
                         rng,
                     },
@@ -203,6 +244,7 @@ impl Scheduler {
         if active.is_empty() {
             return;
         }
+        let clock0 = self.modelled_clock_ns();
         let rows = match self.model.decode_active(&active) {
             Ok(r) => r,
             // Failure isolation: a batch error must not fail every
@@ -215,7 +257,8 @@ impl Scheduler {
         // partial failure only the lanes that actually produced a row
         // count toward the occupancy histogram.
         if !rows.is_empty() {
-            self.metrics.record_decode_round(rows.len());
+            self.metrics
+                .record_decode_round(rows.len(), self.modelled_clock_ns() - clock0);
         }
         for (slot, row) in rows {
             self.apply_sampled_row(slot, &row);
@@ -263,7 +306,15 @@ impl Scheduler {
             let inf = self.inflight.remove(&slot).unwrap();
             self.slots.free(slot);
             let latency = inf.request.submitted_at.elapsed().as_secs_f64() * 1e3;
-            self.metrics.record_completion(inf.ttft_ms, latency, inf.tokens.len());
+            let modelled_latency_ms =
+                (self.modelled_clock_ns() - inf.modelled_start_ns) as f64 / 1e6;
+            self.metrics.record_completion(
+                inf.ttft_ms,
+                latency,
+                inf.tokens.len(),
+                inf.modelled_ttft_ms,
+                modelled_latency_ms,
+            );
             let _ = inf.reply.send(Response {
                 id: inf.request.id,
                 text: tokenizer::decode(&inf.tokens),
@@ -374,6 +425,72 @@ mod tests {
             chunks,
             "A must decode one token per iteration while B's prompt streams in"
         );
+    }
+
+    /// The cost-model acceptance criterion end to end: two identical
+    /// scheduler runs must produce bit-identical modelled timelines —
+    /// the simulated clock, every per-request modelled TTFT/latency, and
+    /// the per-round decode/prefill accounting. Wall-clock fields are
+    /// explicitly NOT compared (they are load-dependent by nature).
+    #[test]
+    fn modelled_timeline_is_deterministic() {
+        #[derive(Debug, PartialEq)]
+        struct Timeline {
+            clock_ns: u64,
+            decode_ns: u64,
+            prefill_ns: u64,
+            ttft_ms: Vec<f64>,
+            latency_ms: Vec<f64>,
+            occupancy: Vec<u64>,
+        }
+        let run = || -> Option<Timeline> {
+            let model = build()?;
+            let metrics = Arc::new(ServerMetrics::default());
+            let mut sched = Scheduler::new(model, metrics.clone());
+            let mut replies = Vec::new();
+            for (id, prompt, max_new) in [
+                (1u64, "the red fox", 3usize),
+                (2, "a longer prompt, still admissible", 2),
+                (3, "hi", 4),
+            ] {
+                let (j, rx) = job(id, prompt, max_new);
+                sched.admit(j);
+                replies.push(rx);
+            }
+            // drive to quiescence (every request retires)
+            for _ in 0..200 {
+                if sched.inflight.is_empty() && sched.pending.is_empty() {
+                    break;
+                }
+                sched.tick();
+            }
+            assert!(sched.inflight.is_empty() && sched.pending.is_empty());
+            for rx in replies {
+                let r = rx.try_recv().expect("request must have completed");
+                assert!(r.error.is_none(), "{:?}", r.error);
+            }
+            // the modelled reservoirs, read through the sorted summaries:
+            // min/p50/p99/max pin the full 3-sample distributions exactly
+            let mt = metrics.modelled_ttft_summary().unwrap();
+            let ml = metrics.modelled_latency_summary().unwrap();
+            Some(Timeline {
+                clock_ns: sched.model.mesh.metrics.modelled_total_ns(),
+                decode_ns: metrics
+                    .modelled_decode_ns
+                    .load(std::sync::atomic::Ordering::Relaxed),
+                prefill_ns: metrics
+                    .modelled_prefill_ns
+                    .load(std::sync::atomic::Ordering::Relaxed),
+                ttft_ms: vec![mt.min, mt.p50, mt.p99, mt.max],
+                latency_ms: vec![ml.min, ml.p50, ml.p99, ml.max],
+                occupancy: metrics.occupancy_histogram(),
+            })
+        };
+        let Some(a) = run() else { return };
+        let b = run().unwrap();
+        assert!(a.clock_ns > 0, "clock never ticked");
+        assert!(a.decode_ns > 0 && a.prefill_ns > 0, "rounds must be attributed");
+        assert_eq!(a, b, "two identical runs must tick the clock identically");
     }
 
     /// Satellite regression: admission validates both bounds before a slot

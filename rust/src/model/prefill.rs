@@ -49,7 +49,7 @@
 use crate::error::{Error, Result};
 use crate::model::serving::{ServeStage, ServingModel};
 use crate::parallel::worker::ArgRef;
-use crate::runtime::buckets::prefill_flops;
+use crate::runtime::buckets::{prefill_bytes, prefill_flops};
 use crate::runtime::pjrt::HostValue;
 
 /// Executable keys of the chunk prefill family — all six must exist in the
@@ -153,14 +153,15 @@ impl ServingModel {
         let mut chunk_tokens = st.tokens[off..off + valid].to_vec();
         chunk_tokens.resize(k, crate::text::tokenizer::PAD);
         // modelled device compute: K padded tokens at prefix offset `off`,
-        // plus the [K, V] logits head on the final chunk only
-        self.mesh.metrics.charge_flops(prefill_flops(
-            cfg,
-            self.layers_equiv,
-            off,
-            k,
-            if last { k } else { 0 },
-        ));
+        // plus the [K, V] logits head on the final chunk only — priced on
+        // the roofline with the chunk's memory traffic (each chunk pass
+        // re-streams the layer weights, so modelled time scales with
+        // ceil(L / K), the property bench_prefill's sweep gates on)
+        let logits_rows = if last { k } else { 0 };
+        self.mesh.charge_compute(
+            prefill_flops(cfg, self.layers_equiv, off, k, logits_rows),
+            prefill_bytes(cfg, self.layers_equiv, off, k, logits_rows),
+        );
 
         // chunk coordinates are fresh host data, resident for the stages
         self.mesh.upload_all("slot", HostValue::scalar_i32(st.slot as i32))?;

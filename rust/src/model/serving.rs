@@ -56,7 +56,10 @@
 //! [`ServingModel::decode_step`]; both paths are bit-identical per row
 //! because the AOT side lowers the same per-lane HLO for every batch
 //! width. Modelled device compute is charged per dispatched lane via
-//! [`crate::parallel::MeshMetrics::charge_flops`].
+//! [`crate::parallel::Mesh::charge_compute`] — flops from
+//! [`decode_flops_per_lane`] plus the matching memory traffic from
+//! [`decode_bytes`], priced in deterministic modelled device time by the
+//! mesh's [`crate::parallel::CostModel`].
 //!
 //! ## Chunked streaming prefill
 //!
@@ -82,7 +85,7 @@ use crate::model::plan::{GraphPlan, Stage};
 use crate::model::weights::Weights;
 use crate::parallel::worker::ArgRef;
 use crate::parallel::Mesh;
-use crate::runtime::buckets::{decode_flops_per_lane, BucketChoice, BucketSet};
+use crate::runtime::buckets::{decode_bytes, decode_flops_per_lane, BucketChoice, BucketSet};
 use crate::runtime::pjrt::HostValue;
 use crate::runtime::{Manifest, ModelEntry};
 use crate::tensor::add_slices;
@@ -126,6 +129,24 @@ impl ServingModel {
         plan: &GraphPlan,
         net: InterconnectConfig,
     ) -> Result<ServingModel> {
+        Self::new_with_cost(
+            manifest,
+            model_name,
+            weights,
+            plan,
+            crate::parallel::CostModel::from_net(net),
+        )
+    }
+
+    /// Build with an explicit cost model (custom
+    /// [`crate::config::DeviceProfile`], e.g. from `RunConfig::device`).
+    pub fn new_with_cost(
+        manifest: &Manifest,
+        model_name: &str,
+        weights: &Weights,
+        plan: &GraphPlan,
+        cost: crate::parallel::CostModel,
+    ) -> Result<ServingModel> {
         plan.validate().map_err(|e| Error::Serving(format!("bad plan: {e}")))?;
         let entry = manifest.model(model_name)?.clone();
         let mut stages = Vec::new();
@@ -141,7 +162,7 @@ impl ServingModel {
             }
         }
         let ranks = 2;
-        let mesh = Mesh::new(ranks, net);
+        let mesh = Mesh::with_cost(ranks, cost);
         // Register only buckets whose executables all exist (guards a
         // manifest listing shapes it never emitted).
         let usable: Vec<usize> = entry
@@ -389,10 +410,12 @@ impl ServingModel {
             .ok_or_else(|| Error::Serving(format!("prompt too long: {}", tokens.len())))?;
         let padded = crate::text::tokenizer::pad_to(tokens, t)?;
         let d = cfg.d_model;
-        // modelled device compute: T padded tokens + the [T, V] logits head
-        self.mesh
-            .metrics
-            .charge_flops(crate::runtime::buckets::prefill_flops(cfg, self.layers_equiv, 0, t, t));
+        // modelled device compute: T padded tokens + the [T, V] logits
+        // head, priced on the roofline with the matching memory traffic
+        self.mesh.charge_compute(
+            crate::runtime::buckets::prefill_flops(cfg, self.layers_equiv, 0, t, t),
+            crate::runtime::buckets::prefill_bytes(cfg, self.layers_equiv, 0, t, t),
+        );
 
         // slot index is fresh host data, referenced by every cache insert
         self.mesh.upload_all("slot", HostValue::scalar_i32(slot as i32))?;
@@ -533,7 +556,10 @@ impl ServingModel {
         lanes: Option<&[i32]>,
     ) -> Result<Vec<f32>> {
         let d = self.entry.config.d_model;
-        self.mesh.metrics.charge_flops(shape as u64 * self.flops_per_lane);
+        self.mesh.charge_compute(
+            shape as u64 * self.flops_per_lane,
+            decode_bytes(&self.entry.config, self.layers_equiv, shape),
+        );
 
         // positions (and the bucketed path's lane→slot mapping) are fresh
         // host data each token, resident for the stages
@@ -737,7 +763,10 @@ impl ServingModel {
         let cfg = &self.entry.config;
         let s = self.check_step_inputs(tokens, pos)?;
         let d = cfg.d_model;
-        self.mesh.metrics.charge_flops(s as u64 * self.flops_per_lane);
+        self.mesh.charge_compute(
+            s as u64 * self.flops_per_lane,
+            decode_bytes(cfg, self.layers_equiv, s),
+        );
         let mut x = self
             .mesh
             .exec_rank(

@@ -25,14 +25,27 @@
 //! charged to the α–β model, not to the host counters. Under the resident
 //! protocol a decode token costs O(1) host transfers (token ids + positions
 //! in, logits out) instead of O(stages).
+//!
+//! ## Modelled time (the simulated clock)
+//!
+//! Besides metering *work*, the mesh prices it in deterministic modelled
+//! *time* via its [`CostModel`] (equations in `parallel::simnet`):
+//! collectives charge the α–β term (`modelled_sync_ns` + payload
+//! `sync_bytes`), every `exec_all`/`exec_rank` dispatch charges one kernel
+//! launch and the executor adds the roofline term through
+//! [`Mesh::charge_compute`] (`modelled_compute_ns`), and the metered
+//! host↔device traffic is priced on the host link (`modelled_host_ns`).
+//! The sum, [`MeshMetrics::modelled_total_ns`], is the mesh's simulated
+//! clock — the scheduler turns deltas of it into per-request modelled
+//! TTFT/latency and CI gates on it (`bin/perf_gate.rs`).
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::config::InterconnectConfig;
 use crate::error::{Error, Result};
 use crate::parallel::collective::all_reduce_sum;
-use crate::parallel::simnet::SimNet;
+use crate::parallel::simnet::CostModel;
 use crate::parallel::worker::{ArgRef, WorkerHandle};
 use crate::runtime::pjrt::HostValue;
 use crate::tensor::add_slices;
@@ -46,6 +59,16 @@ pub struct MeshMetrics {
     /// Modelled (α–β) interconnect cost of those collectives, ns. Unlike
     /// `sync_ns` this is deterministic — tests assert on it.
     pub modelled_sync_ns: AtomicU64,
+    /// Total α–β payload bytes those collectives carried (per-collective
+    /// `n` of the cost equation; deterministic, gated in CI).
+    pub sync_bytes: AtomicU64,
+    /// Modelled device time, ns: roofline compute charged via
+    /// [`Mesh::charge_compute`] plus per-dispatch kernel-launch overhead
+    /// charged by `exec_all`/`exec_rank`. Deterministic.
+    pub modelled_compute_ns: AtomicU64,
+    /// Modelled host↔device link time, ns, for exactly the traffic the
+    /// `host_*` counters meter. Deterministic.
+    pub modelled_host_ns: AtomicU64,
     /// Wall time spent in `exec_all` (shard compute, incl. host<->device), ns.
     pub compute_ns: AtomicU64,
     /// Modelled device compute (flops) charged by the executor. Unlike
@@ -88,6 +111,9 @@ impl MeshMetrics {
         self.sync_ops.store(0, Ordering::Relaxed);
         self.sync_ns.store(0, Ordering::Relaxed);
         self.modelled_sync_ns.store(0, Ordering::Relaxed);
+        self.sync_bytes.store(0, Ordering::Relaxed);
+        self.modelled_compute_ns.store(0, Ordering::Relaxed);
+        self.modelled_host_ns.store(0, Ordering::Relaxed);
         self.compute_ns.store(0, Ordering::Relaxed);
         self.modelled_flops.store(0, Ordering::Relaxed);
         self.exec_ops.store(0, Ordering::Relaxed);
@@ -111,9 +137,48 @@ impl MeshMetrics {
         self.modelled_sync_ns.load(Ordering::Relaxed) as f64 / 1e6
     }
 
+    /// Modelled device time (roofline + launches), ms (deterministic).
+    pub fn modelled_compute_ms(&self) -> f64 {
+        self.modelled_compute_ns.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    /// Modelled host-link time, ms (deterministic).
+    pub fn modelled_host_ms(&self) -> f64 {
+        self.modelled_host_ns.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    /// The mesh's simulated clock: total modelled time across all three
+    /// cost terms (sync + compute + host), in nanoseconds. Monotone over a
+    /// run; the scheduler reads deltas of this clock to attribute modelled
+    /// latency to requests and decode rounds. Deterministic — two identical
+    /// runs tick the clock identically.
+    pub fn modelled_total_ns(&self) -> u64 {
+        self.modelled_sync_ns.load(Ordering::Relaxed)
+            + self.modelled_compute_ns.load(Ordering::Relaxed)
+            + self.modelled_host_ns.load(Ordering::Relaxed)
+    }
+
+    /// Simulated clock in milliseconds (see [`MeshMetrics::modelled_total_ns`]).
+    pub fn modelled_total_ms(&self) -> f64 {
+        self.modelled_total_ns() as f64 / 1e6
+    }
+
+    /// Total α–β payload bytes carried by collectives so far.
+    pub fn sync_bytes(&self) -> u64 {
+        self.sync_bytes.load(Ordering::Relaxed)
+    }
+
     /// Charge modelled device compute (see `modelled_flops`).
     pub fn charge_flops(&self, flops: u64) {
         self.modelled_flops.fetch_add(flops, Ordering::Relaxed);
+    }
+
+    fn charge_compute_time(&self, d: Duration) {
+        self.modelled_compute_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    fn charge_host_time(&self, d: Duration) {
+        self.modelled_host_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
     }
 
     /// Modelled device compute charged so far, in flops (deterministic).
@@ -130,37 +195,64 @@ impl MeshMetrics {
         }
     }
 
-    fn count_host_in(&self, args: &[ArgRef]) {
+    /// Count `ArgRef::Host` uploads; returns the bytes so the mesh can
+    /// price them on the modelled host link.
+    fn count_host_in(&self, args: &[ArgRef]) -> u64 {
+        let mut bytes = 0u64;
         for a in args {
             if let ArgRef::Host(v) = a {
                 self.host_in_ops.fetch_add(1, Ordering::Relaxed);
-                self.host_in_bytes.fetch_add(v.num_bytes() as u64, Ordering::Relaxed);
+                bytes += v.num_bytes() as u64;
             }
         }
+        self.host_in_bytes.fetch_add(bytes, Ordering::Relaxed);
+        bytes
     }
 
-    fn count_host_out(&self, outs: &[HostValue]) {
+    /// Count fetched outputs; returns the bytes (same contract as
+    /// [`MeshMetrics::count_host_in`]).
+    fn count_host_out(&self, outs: &[HostValue]) -> u64 {
+        let mut bytes = 0u64;
         for o in outs {
             self.host_out_ops.fetch_add(1, Ordering::Relaxed);
-            self.host_out_bytes.fetch_add(o.num_bytes() as u64, Ordering::Relaxed);
+            bytes += o.num_bytes() as u64;
         }
+        self.host_out_bytes.fetch_add(bytes, Ordering::Relaxed);
+        bytes
     }
 }
 
 pub struct Mesh {
     pub workers: Vec<WorkerHandle>,
-    pub net: SimNet,
+    /// Device-time cost model (α–β interconnect + roofline + host link).
+    pub cost: CostModel,
     pub metrics: MeshMetrics,
 }
 
 impl Mesh {
     pub fn new(n_ranks: usize, net_cfg: InterconnectConfig) -> Mesh {
+        Mesh::with_cost(n_ranks, CostModel::from_net(net_cfg))
+    }
+
+    /// Build with an explicit cost model (custom [`crate::config::DeviceProfile`]).
+    pub fn with_cost(n_ranks: usize, cost: CostModel) -> Mesh {
         let workers = (0..n_ranks).map(WorkerHandle::spawn).collect();
-        Mesh { workers, net: SimNet::new(net_cfg), metrics: MeshMetrics::default() }
+        Mesh { workers, cost, metrics: MeshMetrics::default() }
     }
 
     pub fn ranks(&self) -> usize {
         self.workers.len()
+    }
+
+    /// Charge one dispatch's modelled device work: `flops` of arithmetic
+    /// over `bytes` of device-memory traffic, priced by the roofline term
+    /// of the cost model. The executor calls this once per protocol step
+    /// (decode round, prefill pass/chunk) with shape-accurate totals from
+    /// `runtime::buckets`; kernel-launch overhead is charged separately by
+    /// `exec_all`/`exec_rank` per dispatch event.
+    pub fn charge_compute(&self, flops: u64, bytes: u64) {
+        self.metrics.charge_flops(flops);
+        self.metrics.charge_compute_time(self.cost.compute_cost(flops, bytes));
     }
 
     /// Compile `key` from `path` on every rank.
@@ -186,9 +278,16 @@ impl Mesh {
             )));
         }
         let t0 = Instant::now();
+        // One modelled kernel launch per dispatch event (the ranks run the
+        // same kernel concurrently — device time, not rank-count time).
+        // Launch and host-link time are charged at metering time, so the
+        // modelled clock can never diverge from the host_* counters even
+        // when a worker dies mid-round and we bail with Err.
+        self.metrics.charge_compute_time(self.cost.launch_cost(1));
         let mut rxs = Vec::with_capacity(calls.len());
         for (w, (key, args, persist, fetch)) in self.workers.iter().zip(calls) {
-            self.metrics.count_host_in(&args);
+            let bytes = self.metrics.count_host_in(&args);
+            self.metrics.charge_host_time(self.cost.host_transfer_cost(bytes));
             rxs.push(w.exec_async(&key, args, persist, fetch)?);
         }
         let mut outs = Vec::with_capacity(rxs.len());
@@ -197,7 +296,8 @@ impl Mesh {
                 .recv()
                 .map_err(|_| Error::msg("worker died"))?
                 .map_err(Error::Msg)?;
-            self.metrics.count_host_out(&o);
+            let bytes = self.metrics.count_host_out(&o);
+            self.metrics.charge_host_time(self.cost.host_transfer_cost(bytes));
             outs.push(o);
         }
         self.metrics
@@ -221,13 +321,17 @@ impl Mesh {
             .workers
             .get(rank)
             .ok_or_else(|| Error::msg(format!("exec_rank: no rank {rank}")))?;
-        self.metrics.count_host_in(&args);
+        // charge at metering time — see the invariant note in `exec_all`
+        self.metrics.charge_compute_time(self.cost.launch_cost(1));
+        let bytes = self.metrics.count_host_in(&args);
+        self.metrics.charge_host_time(self.cost.host_transfer_cost(bytes));
         let rx = w.exec_async(key, args, persist, fetch)?;
         let o = rx
             .recv()
             .map_err(|_| Error::msg("worker died"))?
             .map_err(Error::Msg)?;
-        self.metrics.count_host_out(&o);
+        let bytes = self.metrics.count_host_out(&o);
+        self.metrics.charge_host_time(self.cost.host_transfer_cost(bytes));
         Ok(o)
     }
 
@@ -252,12 +356,12 @@ impl Mesh {
     pub fn upload_all(&self, name: &str, value: HostValue) -> Result<()> {
         let bytes = value.num_bytes() as u64;
         self.store_all(name, &value)?;
+        let total = bytes * self.workers.len() as u64;
         self.metrics
             .host_in_ops
             .fetch_add(self.workers.len() as u64, Ordering::Relaxed);
-        self.metrics
-            .host_in_bytes
-            .fetch_add(bytes * self.workers.len() as u64, Ordering::Relaxed);
+        self.metrics.host_in_bytes.fetch_add(total, Ordering::Relaxed);
+        self.metrics.charge_host_time(self.cost.host_transfer_cost(total));
         Ok(())
     }
 
@@ -278,8 +382,9 @@ impl Mesh {
         let bytes = parts.first().map(|p| p.num_bytes()).unwrap_or(0);
         let g = parts.len();
         let out = all_reduce_sum(parts)?;
-        let modelled = self.net.charge_all_reduce(bytes, g);
+        let modelled = self.cost.net.charge_all_reduce(bytes, g);
         self.metrics.sync_ops.fetch_add(1, Ordering::Relaxed);
+        self.metrics.sync_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
         self.metrics
             .modelled_sync_ns
             .fetch_add(modelled.as_nanos() as u64, Ordering::Relaxed);
@@ -322,8 +427,9 @@ impl Mesh {
             )));
         }
         add_slices(shadow, rdata);
-        let modelled = self.net.charge_all_reduce(bytes, g);
+        let modelled = self.cost.net.charge_all_reduce(bytes, g);
         self.metrics.sync_ops.fetch_add(1, Ordering::Relaxed);
+        self.metrics.sync_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
         self.metrics
             .modelled_sync_ns
             .fetch_add(modelled.as_nanos() as u64, Ordering::Relaxed);
@@ -340,6 +446,8 @@ impl Mesh {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::DeviceProfile;
+    use crate::parallel::simnet::SimNet;
 
     fn quiet_net() -> InterconnectConfig {
         InterconnectConfig { enabled: false, ..Default::default() }
@@ -393,6 +501,10 @@ mod tests {
         mesh.all_reduce(vec![HostValue::f32(vec![1], vec![1.0])]).unwrap();
         mesh.metrics.charge_flops(1234);
         assert_eq!(mesh.metrics.modelled_flops(), 1234);
+        mesh.charge_compute(1000, 1000);
+        mesh.upload_all("x", HostValue::i32(vec![2], vec![1, 2])).unwrap();
+        assert!(mesh.metrics.modelled_compute_ms() > 0.0);
+        assert!(mesh.metrics.modelled_host_ms() > 0.0);
         mesh.metrics.reset();
         assert_eq!(mesh.metrics.modelled_flops(), 0);
         let (ops, sync_ms, comp_ms, execs) = mesh.metrics.snapshot();
@@ -401,6 +513,51 @@ mod tests {
         assert_eq!(comp_ms, 0.0);
         assert_eq!(mesh.metrics.host_transfers().ops(), 0);
         assert_eq!(mesh.metrics.modelled_sync_ms(), 0.0);
+        assert_eq!(mesh.metrics.sync_bytes(), 0);
+        assert_eq!(mesh.metrics.modelled_total_ns(), 0);
+        assert_eq!(mesh.metrics.modelled_total_ms(), 0.0);
+    }
+
+    /// The simulated clock ticks by exactly the cost model's sum of terms,
+    /// and two identical op sequences tick it bit-identically.
+    #[test]
+    fn modelled_clock_sums_terms_and_is_deterministic() {
+        let run = || {
+            let net = InterconnectConfig {
+                alpha_s: 100e-6,
+                beta_bytes_per_s: 1e10,
+                enabled: true,
+            };
+            let dev = DeviceProfile {
+                peak_flops_per_s: 1e9,
+                hbm_bytes_per_s: 1e9,
+                launch_s: 10e-6,
+                host_bytes_per_s: 1e9,
+            };
+            let mesh = Mesh::with_cost(2, CostModel::new(net, dev));
+            mesh.charge_compute(2_000_000, 500); // 2 ms, flop-bound
+            mesh.upload_all("pos", HostValue::i32(vec![4], vec![0; 4])).unwrap(); // 2×16 B
+            mesh.all_reduce(vec![
+                HostValue::f32(vec![8], vec![0.0; 8]),
+                HostValue::f32(vec![8], vec![0.0; 8]),
+            ])
+            .unwrap();
+            (
+                mesh.metrics.modelled_compute_ns.load(Ordering::Relaxed),
+                mesh.metrics.modelled_host_ns.load(Ordering::Relaxed),
+                mesh.metrics.modelled_sync_ns.load(Ordering::Relaxed),
+                mesh.metrics.sync_bytes(),
+                mesh.metrics.modelled_total_ns(),
+            )
+        };
+        let (comp, host, sync, payload, total) = run();
+        assert_eq!(comp, 2_000_000, "roofline term");
+        assert_eq!(host, 32, "2 ranks × 16 B at 1 GB/s = 32 ns");
+        // α + 2·(1/2)·32/1e10 s = 100µs + 3.2ns
+        assert_eq!(sync, 100_003);
+        assert_eq!(payload, 32);
+        assert_eq!(total, comp + host + sync);
+        assert_eq!(run(), (comp, host, sync, payload, total), "clock must be deterministic");
     }
 
     #[test]

@@ -19,5 +19,5 @@ pub mod simnet;
 pub mod worker;
 
 pub use mesh::{HostTransfers, Mesh, MeshMetrics};
-pub use simnet::SimNet;
+pub use simnet::{CostModel, SimNet};
 pub use worker::{ArgRef, WorkerHandle};

@@ -32,7 +32,10 @@
 //! pays per decode token; `ServingModel` charges it per dispatched lane
 //! into [`crate::parallel::MeshMetrics`] so `bench_decode` and
 //! `table3_profile` report compute that scales with the *bucket* shape,
-//! not the slot count.
+//! not the slot count. [`decode_bytes`] / [`prefill_bytes`] are the
+//! matching device-memory traffic models — together they feed the roofline
+//! term of `parallel::simnet::CostModel`, which prices each charge in
+//! deterministic modelled device time.
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Mutex;
@@ -216,6 +219,57 @@ pub fn prefill_flops(
         + logits_rows as u64 * 2 * d * v
 }
 
+/// Modelled device-memory traffic (bytes) of one decode round over `lanes`
+/// dispatched lanes — the memory side of the roofline the cost model
+/// prices ([`crate::parallel::CostModel::compute_cost`]):
+///
+/// * weights stream once per round regardless of batch (`4·D² + 3·D·F`
+///   params per layer-equivalent, plus the logits head `D·V`, `lnf` and the
+///   gathered embedding rows) — the term batching amortizes;
+/// * per lane per layer: the cached K/V prefix is read (`2·C·D`) and the
+///   new row written (`2·D`) — the term that scales with occupancy.
+///
+/// All f32 (4 bytes/element); activations are O(lanes·D) per stage and
+/// folded into the lane term's write. Deterministic by construction.
+pub fn decode_bytes(cfg: &ModelConfig, layers_equiv: usize, lanes: usize) -> u64 {
+    let (d, f, c, v) =
+        (cfg.d_model as u64, cfg.d_ff as u64, cfg.ctx as u64, cfg.vocab as u64);
+    let le = layers_equiv as u64;
+    let lanes = lanes as u64;
+    let weights = le * (4 * d * d + 3 * d * f) + d * v + d + lanes * d;
+    let kv = lanes * le * (2 * c * d + 2 * d);
+    4 * (weights + kv)
+}
+
+/// Modelled device-memory traffic (bytes) of prefilling the padded
+/// positions `[off, off + n)` of one sequence — the memory companion of
+/// [`prefill_flops`], with the same shape rules (`logits_rows` > 0 adds the
+/// head weights; the attention read is proportional to the attended
+/// prefix, so chunked prefill's total scales with `ceil(L / K)` chunk
+/// passes while each pass re-streams the layer weights once):
+///
+/// * per pass: layer weights `4·D² + 3·D·F` per layer-equivalent, the
+///   embedding rows `n·D`, and (final chunk / monolithic only) the logits
+///   head `D·V + D`;
+/// * per token: its K/V row written (`2·D` per layer) and the causal
+///   prefix read (`2·(p+1)·D` at global position p).
+pub fn prefill_bytes(
+    cfg: &ModelConfig,
+    layers_equiv: usize,
+    off: usize,
+    n: usize,
+    logits_rows: usize,
+) -> u64 {
+    let (d, f, v) = (cfg.d_model as u64, cfg.d_ff as u64, cfg.vocab as u64);
+    let le = layers_equiv as u64;
+    let attended: u64 = (off as u64 + 1..=(off + n) as u64).sum();
+    let weights = le * (4 * d * d + 3 * d * f)
+        + n as u64 * d
+        + if logits_rows > 0 { d * v + d } else { 0 };
+    let kv = le * (2 * n as u64 * d + 2 * attended * d);
+    4 * (weights + kv)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -357,6 +411,43 @@ mod tests {
             prefill_flops(&cfg, 6, 64, 32, 0) > prefill_flops(&cfg, 6, 0, 32, 0),
             "prefix-proportional attention charge missing"
         );
+    }
+
+    #[test]
+    fn byte_model_amortizes_weights_and_scales_kv_per_lane() {
+        let cfg = ModelConfig {
+            name: "t".into(),
+            vocab: 260,
+            d_model: 128,
+            n_layers: 12,
+            n_heads: 4,
+            head_dim: 32,
+            d_ff: 256,
+            ctx: 256,
+            slots: 4,
+        };
+        let b1 = decode_bytes(&cfg, 6, 1);
+        let b2 = decode_bytes(&cfg, 6, 2);
+        let b4 = decode_bytes(&cfg, 6, 4);
+        // monotone in lanes, but sublinear: the weight stream is shared
+        assert!(b1 < b2 && b2 < b4);
+        assert!(b4 < 4 * b1, "weights must amortize across lanes");
+        // the per-lane increment is constant (pure KV + embedding row)
+        assert_eq!(2 * (b2 - b1), b4 - b2);
+        // monotone in depth
+        assert!(decode_bytes(&cfg, 12, 2) > decode_bytes(&cfg, 6, 2));
+
+        // prefill: chunk passes re-stream weights, so 2 chunks cost more
+        // bytes than one pass over the same tokens...
+        let chunked =
+            prefill_bytes(&cfg, 6, 0, 32, 0) + prefill_bytes(&cfg, 6, 32, 32, 32);
+        let one_pass = prefill_bytes(&cfg, 6, 0, 64, 32);
+        assert!(chunked > one_pass);
+        // ...but the K/V read term is prefix-proportional either way: a
+        // later chunk reads a longer prefix than an earlier one
+        assert!(prefill_bytes(&cfg, 6, 64, 32, 0) > prefill_bytes(&cfg, 6, 0, 32, 0));
+        // the logits head weights only appear when logits rows are priced
+        assert!(prefill_bytes(&cfg, 6, 0, 32, 32) > prefill_bytes(&cfg, 6, 0, 32, 0));
     }
 
     #[test]
