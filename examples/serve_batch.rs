@@ -7,6 +7,10 @@
 //!
 //!     cargo run --release --example serve_batch            # LP on
 //!     cargo run --release --example serve_batch -- --depth 12   # baseline
+//!     cargo run --release --example serve_batch -- --tiers      # one weight
+//!         # set, every manifest plan variant (dense/lp/lp_aggr) served
+//!         # concurrently — requests cycle through the tiers and the report
+//!         # shows per-tier modelled tokens/sec
 
 use std::sync::Arc;
 
@@ -20,41 +24,61 @@ use truedepth::model::{transform, ServingModel};
 use truedepth::text::corpus::{self, DATA_SEED};
 
 fn main() -> truedepth::Result<()> {
-    let args = Args::from_env(&[]);
+    let args = Args::from_env(&["tiers"]);
     let model_name = args.get_or("model", "td-small");
     let n_requests = args.get_usize("requests", 24);
     let max_new = args.get_usize("max-new", 16);
+    let multi = args.flag("tiers");
 
     let ctx = ScoringCtx::load(model_name)?;
     let weights = ctx.weights()?;
     let n = ctx.entry().config.n_layers;
-    let depth = args.get_usize("depth", n - 4); // default: Δ=8 LP
-    let plan = if depth == n {
-        transform::sequential(n)
+    let serving = if multi {
+        // the plan-variant registry: every manifest tier from one weight set
+        ServingModel::from_manifest(&ctx.manifest, model_name, &weights, default_net())?
     } else {
-        transform::lp_for_depth(n, depth, n - 2)
-            .ok_or_else(|| truedepth::Error::msg("bad depth"))?
+        let depth = args.get_usize("depth", n - 4); // default: Δ=8 LP
+        let plan = if depth == n {
+            transform::sequential(n)
+        } else {
+            transform::lp_for_depth(n, depth, n - 2)
+                .ok_or_else(|| truedepth::Error::msg("bad depth"))?
+        };
+        ServingModel::new(&ctx.manifest, model_name, &weights, &plan, default_net())?
     };
-    println!(
-        "== serve_batch: {model_name}, depth {} (Δ={}), {} all-reduces/token ==",
-        plan.effective_depth(),
-        plan.delta(),
-        plan.all_reduces_per_token()
-    );
+    let tiers: Vec<String> =
+        serving.variant_ids().iter().map(|v| v.as_str().to_string()).collect();
+    let summary: Vec<String> = serving
+        .variant_ids()
+        .iter()
+        .map(|v| {
+            let var = serving.variant(v).unwrap();
+            format!(
+                "{v}: depth {} ({} all-reduces/token)",
+                var.effective_depth(),
+                var.all_reduces_per_token()
+            )
+        })
+        .collect();
+    println!("== serve_batch: {model_name} — {} ==", summary.join("; "));
 
-    let serving = ServingModel::new(&ctx.manifest, model_name, &weights, &plan, default_net())?;
     let server = Arc::new(Server::start(serving, &ServerConfig::default()));
     let mut router = Router::new();
     router.add_backend(model_name, server.clone());
 
-    // fire all requests up-front (continuous batching shares decode steps)
+    // fire all requests up-front (continuous batching shares decode steps;
+    // under --tiers the requests cycle through the registry's tiers)
     let t0 = std::time::Instant::now();
     let rxs: Vec<_> = (0..n_requests)
         .map(|i| {
             let doc = corpus::eval_doc(DATA_SEED, 5000 + i as u64);
             let prompt = doc[..doc.len().min(64)].to_string();
             let backend = router.pick(model_name)?;
-            backend.submit(&prompt, RequestOptions { max_new_tokens: max_new, sampler: Sampler::Greedy })
+            let tier = multi.then(|| tiers[i % tiers.len()].clone());
+            backend.submit(
+                &prompt,
+                RequestOptions { max_new_tokens: max_new, sampler: Sampler::Greedy, tier },
+            )
         })
         .collect::<truedepth::Result<_>>()?;
 

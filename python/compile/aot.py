@@ -39,6 +39,16 @@ The manifest carries a per-model "batch_buckets" list naming the compiled
 B values (the rust BucketSet keys the per-bucket executables off it) and a
 top-level "prefill_chunk" giving the chunk token count K; manifests
 predating either section fall back to the fixed-shape paths.
+
+Plan-variant registry: the per-model "variants" section names the serving
+tiers one weight set supports (`dense`, `lp`, `lp_aggr` — see
+modelcfg.plan_variants). Each variant is a stage list ([i] = TP-sharded
+layer, [a, b] = LP pair); no extra executables are emitted because every
+stage executable above is plan-agnostic — variants only select which
+stages the rust runtime walks (runtime::artifacts parses the section,
+model::serving serves all tiers concurrently from one resident weight
+set). Manifests predating the section serve a single synthesized `dense`
+tier.
 """
 
 from __future__ import annotations
@@ -59,6 +69,7 @@ from .modelcfg import (
     SEQ_BUCKETS,
     ModelConfig,
     batch_buckets,
+    plan_variants,
 )
 
 F32 = jnp.float32
@@ -266,6 +277,10 @@ def build(out_dir: Path, impl: str = "pallas", force: bool = False,
         entry = {
             "config": cfg.to_dict(),
             "batch_buckets": list(batch_buckets(cfg.slots)),
+            "variants": {
+                vname: {"stages": stages}
+                for vname, stages in plan_variants(cfg).items()
+            },
             "artifacts": {},
         }
         for aname, (fn, arg_specs, arg_names) in arts.items():

@@ -60,6 +60,46 @@ SEQ_BUCKETS = (32, 128, 256)
 PREFILL_CHUNK = 32
 
 
+def _pair_stages(n: int, s: int, e: int) -> list[list[int]]:
+    """Stage list of contiguous 2-parallel LP over the window [s, e) —
+    mirror of the rust `transform::pair_parallel` (an odd trailing layer
+    stays sequential)."""
+    stages: list[list[int]] = [[i] for i in range(s)]
+    i = s
+    while i + 1 < e:
+        stages.append([i, i + 1])
+        i += 2
+    if i < e:
+        stages.append([i])
+    stages.extend([i] for i in range(e, n))
+    return stages
+
+
+def plan_variants(cfg: ModelConfig) -> dict[str, list[list[int]]]:
+    """Named plan variants compiled into the manifest's per-model
+    ``variants`` section — the serving tiers one weight set supports.
+
+    Each variant is a stage list: ``[i]`` is a TP-sharded single layer,
+    ``[a, b]`` an LP pair (rank r runs layer r of the pair at full width).
+    All variants reuse the same stage/embed/logits/chunk executables (the
+    artifacts are weight- and plan-agnostic); the manifest entry only
+    records *which* stages each tier walks.
+
+    * ``dense``  — the untransformed sequential model (full quality);
+    * ``lp``     — LP pairs over the paper's best contiguous band (first
+      and last ~n/6 layers stay sequential, the placement Fig. 6's PPL
+      sweep favours);
+    * ``lp_aggr``— LP over the whole stack (max speed, lowest depth).
+    """
+    n = cfg.n_layers
+    lo = max(1, round(n / 6))
+    return {
+        "dense": [[i] for i in range(n)],
+        "lp": _pair_stages(n, lo, n - lo),
+        "lp_aggr": _pair_stages(n, 0, n),
+    }
+
+
 def batch_buckets(slots: int) -> tuple[int, ...]:
     """Decode batch-shape buckets for a model with `slots` KV slots.
 

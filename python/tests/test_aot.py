@@ -7,7 +7,14 @@ from pathlib import Path
 import pytest
 
 from compile import aot
-from compile.modelcfg import PREFILL_CHUNK, SMALL, SEQ_BUCKETS, batch_buckets
+from compile.modelcfg import (
+    BASE,
+    PREFILL_CHUNK,
+    SMALL,
+    SEQ_BUCKETS,
+    batch_buckets,
+    plan_variants,
+)
 
 
 @pytest.fixture(scope="module")
@@ -89,6 +96,39 @@ def test_lowering_produces_hlo_text(specs, name):
     assert max_idx == len(arg_specs) - 1 == len(arg_names) - 1
 
 
+def test_plan_variants_are_valid_tiers():
+    """Every variant uses each layer at most once, stays in range, has
+    stage arity 1 or 2, and the tiers strictly descend in effective depth
+    (dense > lp > lp_aggr) — the ordering the serving cost model turns
+    into tokens/sec."""
+    for cfg in (SMALL, BASE):
+        variants = plan_variants(cfg)
+        assert list(variants) == ["dense", "lp", "lp_aggr"]
+        depths = []
+        for name, stages in variants.items():
+            used = [i for st in stages for i in st]
+            assert sorted(used) == sorted(set(used)), f"{name}: layer reuse"
+            assert all(0 <= i < cfg.n_layers for i in used), f"{name}: range"
+            assert all(len(st) in (1, 2) for st in stages), f"{name}: arity"
+            depths.append(len(stages))
+        assert depths[0] == cfg.n_layers, "dense must be the full stack"
+        assert depths[0] > depths[1] > depths[2], f"{cfg.name}: {depths}"
+        # lp keeps the head/tail sequential (the paper's band placement);
+        # lp_aggr pairs from layer 0
+        assert variants["lp"][0] == [0]
+        assert len(variants["lp_aggr"][0]) == 2
+
+
+def test_variant_stages_only_reference_existing_executables(specs):
+    """Variants add no artifacts: every stage kind they can produce maps to
+    an executable family the inventory already carries."""
+    for stages in plan_variants(SMALL).values():
+        for st in stages:
+            mode = "tp" if len(st) == 1 else "lp"
+            assert f"{mode}attn_decode" in specs
+            assert f"{mode}attn_chunk" in specs
+
+
 def test_source_hash_is_stable():
     assert aot._source_hash("pallas") == aot._source_hash("pallas")
     assert aot._source_hash("pallas") != aot._source_hash("jnp")
@@ -110,5 +150,10 @@ def test_built_manifest_matches_inventory():
         assert entry["batch_buckets"] == list(
             batch_buckets(entry["config"]["slots"])
         ), f"{model}: manifest batch_buckets out of date"
+        from compile.modelcfg import CONFIGS
+        assert entry.get("variants") == {
+            vname: {"stages": stages}
+            for vname, stages in plan_variants(CONFIGS[model]).items()
+        }, f"{model}: manifest variants out of date"
     assert manifest.get("prefill_chunk") == PREFILL_CHUNK, \
         "manifest prefill_chunk out of date (re-run `make artifacts`)"

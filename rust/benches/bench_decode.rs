@@ -99,7 +99,7 @@ fn main() {
     }
     println!(
         "   shape buckets {:?} (slots {s}, {} flops/lane/token):",
-        serving.bucket_set.buckets(),
+        serving.bucket_set().buckets(),
         serving.decode_flops_per_lane(),
     );
     b.metric("decode_mflop_per_lane", serving.decode_flops_per_lane() as f64 / 1e6);
@@ -134,7 +134,49 @@ fn main() {
     }
     println!(
         "   bucket dispatch stats (shape -> rounds/live/padded): {:?}",
-        serving.bucket_set.stats()
+        serving.bucket_set().stats()
     );
+
+    // --- per-request depth tiers (plan-variant registry) -----------------
+    // One manifest, one resident weight set, three computational graphs:
+    // each tier's full-occupancy decode round is priced by the cost model
+    // at ITS depth, so modelled tokens/sec must strictly order
+    // lp_aggr > lp > dense. These are deterministic metrics the perf gate
+    // pins against rust/bench-baseline.json.
+    match ServingModel::from_manifest(&manifest, "td-small", &weights, default_net()) {
+        Err(e) => eprintln!("   (tier sweep skipped: {e})"),
+        Ok(tiers) => {
+            let ids = tiers.variant_ids();
+            println!("   tier sweep ({} variants, one weight set):", ids.len());
+            let mut ordered: Vec<(String, usize, f64)> = Vec::new();
+            for vid in &ids {
+                for slot in 0..s {
+                    tiers.prefill_v(vid, slot, &prompt).unwrap();
+                }
+                let active: Vec<_> =
+                    (0..s).map(|slot| (slot, 65i32, prompt.len() as i32)).collect();
+                tiers.decode_active_v(vid, &active).unwrap(); // warm (lazy compile)
+                tiers.mesh.metrics.reset();
+                tiers.decode_active_v(vid, &active).unwrap();
+                let round_ms = tiers.mesh.metrics.modelled_total_ms();
+                let var = tiers.variant(vid).unwrap();
+                let tok_per_s = s as f64 / (round_ms / 1e3);
+                println!(
+                    "     tier {vid}: depth {} ({} reduces/tok) — {round_ms:.3} ms/round modelled, {tok_per_s:.1} tok/s",
+                    var.effective_depth(),
+                    var.all_reduces_per_token(),
+                );
+                b.metric(&format!("modelled_decode_tok_per_s_tier_{vid}"), tok_per_s);
+                ordered.push((vid.to_string(), var.effective_depth(), tok_per_s));
+            }
+            // dense > lp > lp_aggr in depth ⇒ strictly the reverse in tok/s
+            for w in ordered.windows(2) {
+                assert!(
+                    w[0].1 > w[1].1 && w[0].2 < w[1].2,
+                    "tier ordering violated: {ordered:?}"
+                );
+            }
+        }
+    }
     b.finish();
 }

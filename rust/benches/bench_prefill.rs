@@ -117,7 +117,7 @@ fn main() {
             ServingModel::new(&manifest, "td-small", &weights, &plan, default_net()).unwrap();
         if sim.prefill_chunk().is_some() {
             let server = Server::start(sim, &ServerConfig::default());
-            let opts = RequestOptions { max_new_tokens: 4, sampler: Sampler::Greedy };
+            let opts = RequestOptions { max_new_tokens: 4, sampler: Sampler::Greedy, tier: None };
             // BOS + 76 bytes = 77 prompt tokens (3 chunks of K = 32)
             let resp = server.submit_blocking(&"x".repeat(76), opts).unwrap();
             assert!(resp.error.is_none(), "{:?}", resp.error);

@@ -90,7 +90,51 @@ fn main() -> truedepth::Result<()> {
             cfg.slots,
             flops as f64 / 1e6,
             serving.mesh.metrics.modelled_total_ms(),
-            serving.bucket_set.buckets(),
+            serving.bucket_set().buckets(),
+        );
+    }
+
+    // Plan-variant registry: the per-tier sync/compute split over the FULL
+    // serving plans (not the 2-layer sub-model above) — one weight set,
+    // one manifest, each tier priced at its own depth. The sync column is
+    // where the tiers diverge (2 all-reduces per stage); the flop term of
+    // compute stays flat because every tier runs the same layer-equivalents
+    // — exactly the paper's Table 3 shape, now as a per-request dial.
+    if let Ok(tiers) = ServingModel::from_manifest(&ctx.manifest, model, &weights, default_net())
+    {
+        let profile_steps = steps.min(10);
+        println!("\nper-tier modelled split ({profile_steps} decode rounds, full plans):");
+        let mut trows = Vec::new();
+        for vid in tiers.variant_ids() {
+            let prompt: Vec<i32> = (0..seqlen as i32).map(|i| 97 + (i % 26)).collect();
+            tiers.prefill_v(&vid, 0, &prompt)?;
+            tiers.decode_active_v(&vid, &[(0, 65, seqlen as i32)])?; // warm
+            tiers.mesh.metrics.reset();
+            for _ in 0..profile_steps {
+                tiers.decode_active_v(&vid, &[(0, 65, seqlen as i32)])?;
+            }
+            let n = profile_steps as f64;
+            let m_sync = tiers.mesh.metrics.modelled_sync_ms() / n;
+            let m_comp = tiers.mesh.metrics.modelled_compute_ms() / n;
+            let m_host = tiers.mesh.metrics.modelled_host_ms() / n;
+            let m_total = tiers.mesh.metrics.modelled_total_ms() / n;
+            let var = tiers.variant(&vid)?;
+            println!(
+                "tier {:<8} depth {:>2} ({:>2} reduces/tok): total {m_total:>7.3} ms = sync {m_sync:.3} + compute {m_comp:.3} + host {m_host:.4}",
+                vid.to_string(),
+                var.effective_depth(),
+                var.all_reduces_per_token(),
+            );
+            trows.push(format!(
+                "{vid},{},{},{m_sync:.4},{m_comp:.4},{m_host:.4},{m_total:.4}",
+                var.effective_depth(),
+                var.all_reduces_per_token(),
+            ));
+        }
+        write_csv(
+            &format!("table3_tiers_{model}.csv"),
+            "tier,effective_depth,all_reduces_per_token,modelled_sync_ms_per_tok,modelled_compute_ms_per_tok,modelled_host_ms_per_tok,modelled_total_ms_per_tok",
+            &trows,
         );
     }
 

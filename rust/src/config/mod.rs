@@ -69,6 +69,19 @@ impl Default for DeviceProfile {
     }
 }
 
+/// Runtime executable-cache parameters (see `runtime::buckets::ExecCache`).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RuntimeConfig {
+    /// Cap on compiled executables cached per serving model; beyond it the
+    /// least-recently-used ones are evicted (and transparently recompiled
+    /// on next use — evictions are visible as a `ServerMetrics` gauge).
+    /// Config key `[runtime] max_cached_execs`; 0 or absent = unbounded.
+    /// Consumed by `truedepth serve --config <file>` (CLI
+    /// `--max-cached-execs` overrides) — programmatic builds apply it via
+    /// `ServingModel::set_exec_cache_cap`.
+    pub max_cached_execs: Option<usize>,
+}
+
 /// Serving/coordination parameters.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
@@ -96,6 +109,7 @@ pub struct RunConfig {
     pub interconnect: InterconnectConfig,
     pub device: DeviceProfile,
     pub server: ServerConfig,
+    pub runtime: RuntimeConfig,
 }
 
 impl RunConfig {
@@ -130,6 +144,10 @@ impl RunConfig {
                 ("device", "launch_us") => cfg.device.launch_s = val.f64()? * 1e-6,
                 ("device", "host_gb_per_s") => {
                     cfg.device.host_bytes_per_s = val.f64()? * 1e9
+                }
+                ("runtime", "max_cached_execs") => {
+                    let v = val.f64()? as usize;
+                    cfg.runtime.max_cached_execs = (v > 0).then_some(v);
                 }
                 ("server", "slots") => cfg.server.slots = val.f64()? as usize,
                 ("server", "queue_depth") => cfg.server.queue_depth = val.f64()? as usize,
@@ -178,6 +196,9 @@ mod tests {
             launch_us = 5.0
             host_gb_per_s = 25.0
 
+            [runtime]
+            max_cached_execs = 64
+
             [server]
             slots = 4
             queue_depth = 32
@@ -194,6 +215,16 @@ mod tests {
         assert!((c.device.launch_s - 5e-6).abs() < 1e-12);
         assert!((c.device.host_bytes_per_s - 25e9).abs() < 1.0);
         assert_eq!(c.server.queue_depth, 32);
+        assert_eq!(c.runtime.max_cached_execs, Some(64));
+        // 0 (and absence) mean unbounded
+        assert_eq!(
+            RunConfig::from_toml("[runtime]\nmax_cached_execs = 0")
+                .unwrap()
+                .runtime
+                .max_cached_execs,
+            None
+        );
+        assert_eq!(RunConfig::default().runtime.max_cached_execs, None);
         // the parsed sections flow into a usable cost model
         let cm = c.cost_model();
         assert!((cm.net.cfg.alpha_s - 12.5e-6).abs() < 1e-12);
@@ -206,5 +237,6 @@ mod tests {
         assert!(RunConfig::from_toml("wat = 3").is_err());
         assert!(RunConfig::from_toml("[interconnect]\nbogus = 1").is_err());
         assert!(RunConfig::from_toml("[device]\nbogus = 1").is_err());
+        assert!(RunConfig::from_toml("[runtime]\nbogus = 1").is_err());
     }
 }

@@ -11,10 +11,32 @@
 //!   modelled figures, which is what lets CI gate on them
 //!   (`bin/perf_gate.rs`) where wall-clock would flake.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::util::stats::Summary;
+
+/// Per-tier decode accounting (plan-variant serving): each entry is one
+/// serving tier's share of the decode rounds, keyed by `VariantId` name.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TierStats {
+    /// Decode rounds dispatched for this tier (one bucketed dispatch per
+    /// tier per scheduler round).
+    pub rounds: u64,
+    /// Tokens those rounds produced (= Σ live lanes).
+    pub tokens: u64,
+    /// Modelled simulated-clock time those rounds cost, ns.
+    pub modelled_ns: u64,
+}
+
+impl TierStats {
+    /// Modelled decode throughput of this tier, tokens per simulated
+    /// second (`None` until a round has been attributed).
+    pub fn modelled_tok_per_s(&self) -> Option<f64> {
+        (self.modelled_ns > 0).then(|| self.tokens as f64 / (self.modelled_ns as f64 / 1e9))
+    }
+}
 
 #[derive(Default)]
 pub struct ServerMetrics {
@@ -34,6 +56,12 @@ pub struct ServerMetrics {
     pub modelled_decode_tokens: AtomicU64,
     /// Modelled device time spent in prefill passes/chunks, ns.
     pub modelled_prefill_ns: AtomicU64,
+    /// Executables evicted from the serving model's exec cache so far
+    /// (gauge, mirrored from `runtime::buckets::ExecCacheStats` by the
+    /// scheduler; non-zero only under a `[runtime] max_cached_execs` cap).
+    pub exec_cache_evictions: AtomicU64,
+    /// Per-tier decode attribution (see [`TierStats`]); keyed by tier name.
+    tier_stats: Mutex<BTreeMap<String, TierStats>>,
     /// Occupancy histogram: `hist[k]` = decode rounds with k live lanes.
     /// Together with the gauge this makes bucket-selection quality
     /// observable: rounds clustered at low occupancy should dispatch small
@@ -81,6 +109,27 @@ impl ServerMetrics {
     /// Record one prefill pass/chunk step's simulated-clock cost.
     pub fn record_prefill_step(&self, modelled_ns: u64) {
         self.modelled_prefill_ns.fetch_add(modelled_ns, Ordering::Relaxed);
+    }
+
+    /// Attribute one decode round to a serving tier (called alongside
+    /// [`ServerMetrics::record_decode_round`] — the scheduler dispatches
+    /// one bucketed round per tier per iteration).
+    pub fn record_tier_round(&self, tier: &str, tokens: usize, modelled_ns: u64) {
+        let mut m = self.tier_stats.lock().unwrap();
+        let s = m.entry(tier.to_string()).or_default();
+        s.rounds += 1;
+        s.tokens += tokens as u64;
+        s.modelled_ns += modelled_ns;
+    }
+
+    /// Snapshot of the per-tier decode attribution, in tier-name order.
+    pub fn tier_stats(&self) -> Vec<(String, TierStats)> {
+        self.tier_stats
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, &v)| (k.clone(), v))
+            .collect()
     }
 
     /// Snapshot of the occupancy histogram (index = live lanes per round).
@@ -168,11 +217,25 @@ impl ServerMetrics {
                 self.modelled_decode_tokens.load(Ordering::Relaxed),
             );
         }
+        // per-tier attribution: the speed/quality dial in numbers (one
+        // line per plan variant that decoded this run)
+        for (tier, st) in self.tier_stats() {
+            if let Some(tps) = st.modelled_tok_per_s() {
+                s += &format!(
+                    "\n  tier {tier}: {tps:.1} modelled tok/s ({} rounds, {} tokens)",
+                    st.rounds, st.tokens,
+                );
+            }
+        }
         // reported independently of decode: a run can have prefilled
         // without completing a single decode round yet
         let prefill_ns = self.modelled_prefill_ns.load(Ordering::Relaxed);
         if prefill_ns > 0 {
             s += &format!("\nmodelled prefill: {:.2} ms", prefill_ns as f64 / 1e6);
+        }
+        let evictions = self.exec_cache_evictions.load(Ordering::Relaxed);
+        if evictions > 0 {
+            s += &format!("\nexec cache evictions: {evictions}");
         }
         s
     }
@@ -210,6 +273,31 @@ mod tests {
         assert!(m.occupancy_histogram().is_empty());
         assert!(!m.report().contains("decode occupancy"));
         assert!(!m.report().contains("modelled"));
+    }
+
+    #[test]
+    fn tier_attribution_and_eviction_gauge_appear_in_report() {
+        let m = ServerMetrics::default();
+        assert!(m.tier_stats().is_empty());
+        m.record_tier_round("dense", 4, 2_000_000);
+        m.record_tier_round("lp", 4, 1_000_000);
+        m.record_tier_round("lp", 4, 1_000_000);
+        let stats = m.tier_stats();
+        assert_eq!(stats.len(), 2);
+        assert_eq!(stats[0].0, "dense");
+        assert_eq!(
+            stats[0].1,
+            TierStats { rounds: 1, tokens: 4, modelled_ns: 2_000_000 }
+        );
+        // lp: 8 tokens over 2 simulated ms = 4000 tok/s
+        assert!((stats[1].1.modelled_tok_per_s().unwrap() - 4000.0).abs() < 1e-9);
+        assert!(TierStats::default().modelled_tok_per_s().is_none());
+        let r = m.report();
+        assert!(r.contains("tier dense: 2000.0 modelled tok/s"), "{r}");
+        assert!(r.contains("tier lp: 4000.0 modelled tok/s"), "{r}");
+        assert!(!r.contains("exec cache evictions"), "{r}");
+        m.exec_cache_evictions.store(3, Ordering::Relaxed);
+        assert!(m.report().contains("exec cache evictions: 3"));
     }
 
     #[test]

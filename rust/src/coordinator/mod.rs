@@ -12,5 +12,6 @@ pub mod router;
 pub mod scheduler;
 pub mod server;
 
+pub use metrics::{ServerMetrics, TierStats};
 pub use request::{Request, RequestOptions, Response};
 pub use server::Server;

@@ -6,11 +6,25 @@ use crate::gen::Sampler;
 pub struct RequestOptions {
     pub max_new_tokens: usize,
     pub sampler: Sampler,
+    /// Serving tier: names a plan variant of the model's manifest
+    /// (`runtime::VariantId` — e.g. `dense`, `lp`, `lp_aggr`), selecting
+    /// the speed/quality point this request is decoded at. `None` = the
+    /// model's default tier. An unknown tier is rejected at admission,
+    /// before any KV slot is claimed.
+    pub tier: Option<String>,
 }
 
 impl Default for RequestOptions {
     fn default() -> Self {
-        RequestOptions { max_new_tokens: 32, sampler: Sampler::Greedy }
+        RequestOptions { max_new_tokens: 32, sampler: Sampler::Greedy, tier: None }
+    }
+}
+
+impl RequestOptions {
+    /// Convenience: this options set, pinned to a named serving tier.
+    pub fn with_tier(mut self, tier: &str) -> RequestOptions {
+        self.tier = Some(tier.to_string());
+        self
     }
 }
 
@@ -71,6 +85,8 @@ mod tests {
         let o = RequestOptions::default();
         assert_eq!(o.max_new_tokens, 32);
         assert!(matches!(o.sampler, Sampler::Greedy));
+        assert!(o.tier.is_none(), "default tier is the model's default variant");
+        assert_eq!(o.with_tier("lp").tier.as_deref(), Some("lp"));
     }
 
     #[test]

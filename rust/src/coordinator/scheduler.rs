@@ -2,23 +2,38 @@
 //! serving stack.
 //!
 //! Policy (vLLM-style chunked admission): each iteration first admits
-//! waiting requests — validating BOTH admission bounds (prefill-path
-//! prompt limit and ctx generation budget) via
-//! `ServingModel::check_admission` *before* a KV slot is claimed — then
-//! advances the head of the pending-prefill queue by AT MOST ONE chunk
-//! (`ServingModel::prefill_step`), then runs one batched decode round
+//! waiting requests — resolving the request's serving **tier** to a plan
+//! variant (`ServingModel::resolve_tier`; unknown tiers are rejected here)
+//! and validating BOTH admission bounds (prefill-path prompt limit and ctx
+//! generation budget) via `ServingModel::check_admission` *before* a KV
+//! slot is claimed — then advances the pending-prefill queue by AT MOST
+//! ONE chunk (`ServingModel::prefill_step`), then runs the decode round
 //! across all fully-prefilled slots, samples each slot's next token, and
 //! retires finished sequences.
+//!
+//! ## Per-request depth tiers
+//!
+//! Slots of different tiers coexist (KV caches are per-variant but share
+//! the slot dimension), so the decode round groups the live slots by tier
+//! and dispatches **one bucketed round per tier** (`decode_active_v`), in
+//! deterministic `VariantId` order. Each tier's round is charged to the
+//! cost model with that tier's own depth scale, and attributed per tier in
+//! `ServerMetrics::tier_stats` — modelled tokens/sec per tier is the
+//! speed/quality dial the registry exists for.
 //!
 //! Chunked streaming prefill is what keeps long prompts from stalling the
 //! batch: a prompt of L tokens occupies the mesh for `ceil(L / K)` short
 //! chunk steps spread over as many iterations, with a full decode round
 //! for every live slot between consecutive chunks (see `model::prefill`).
-//! On legacy manifests without chunk executables, `prefill_step` degrades
-//! to the monolithic single-pass prefill and the loop behaves exactly like
-//! the pre-chunking scheduler. Slots being prefilled hold their KV
-//! reservation but are skipped by `SlotManager::active_inputs` until their
-//! prompt is fully consumed.
+//! The pending-prefill queue is served **round-robin**: the head prompt
+//! advances one chunk, then rotates to the back, so several long prompts
+//! make interleaved progress instead of one monopolizing the head-of-line
+//! chunk (PR 3 follow-up — FIFO used to starve every later prefill until
+//! the first prompt finished). On legacy manifests without chunk
+//! executables, `prefill_step` degrades to the monolithic single-pass
+//! prefill and the loop behaves exactly like the pre-chunking scheduler.
+//! Slots being prefilled hold their KV reservation but are skipped by
+//! `SlotManager::active_inputs` until their prompt is fully consumed.
 //!
 //! ## Modelled latency attribution
 //!
@@ -32,7 +47,7 @@
 //! `ServerMetrics`. All of it is deterministic: two identical runs produce
 //! bit-identical modelled timelines (`modelled_timeline_is_deterministic`).
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::mpsc::Sender;
 use std::sync::Arc;
 use std::time::Duration;
@@ -43,7 +58,9 @@ use crate::coordinator::request::{Job, Request, Response};
 use crate::gen::Sampler;
 use crate::model::kvcache::SlotManager;
 use crate::model::prefill::ChunkedPrefill;
+use crate::model::serving::ActiveSlot;
 use crate::model::ServingModel;
+use crate::runtime::VariantId;
 use crate::text::tokenizer::{self, EOS};
 use crate::util::rng::SplitMix64;
 
@@ -54,6 +71,9 @@ struct InFlight {
     /// Prompt length in tokens, recorded once at admit time (re-encoding
     /// the prompt at completion just to count it was a hot-path bug).
     prompt_tokens: usize,
+    /// The serving tier this request decodes at (resolved at admission;
+    /// decode rounds group slots by this).
+    variant: VariantId,
     ttft_ms: f64,
     /// Simulated-clock reading at admission (see `MeshMetrics::
     /// modelled_total_ns`); deltas of the clock attribute modelled
@@ -84,8 +104,9 @@ pub struct Scheduler {
     model: ServingModel,
     slots: SlotManager,
     inflight: HashMap<usize, InFlight>, // slot -> request state
-    /// Admitted-but-still-prefilling requests, FIFO; only the head makes
-    /// progress (one chunk per iteration) so chunk steps never compete.
+    /// Admitted-but-still-prefilling requests, served round-robin: the
+    /// head advances one chunk per iteration, then rotates to the back,
+    /// so several long prompts interleave instead of serializing.
     pending: VecDeque<PendingPrefill>,
     metrics: Arc<ServerMetrics>,
 }
@@ -143,13 +164,24 @@ impl Scheduler {
     }
 
     /// Validate + claim a slot + enqueue the prompt for chunked prefill.
-    /// Both admission bounds are checked before the slot is touched, so a
-    /// rejected request never occupies (or churns) KV state.
+    /// The serving tier and both admission bounds are checked before the
+    /// slot is touched, so a rejected request — unknown tier included —
+    /// never occupies (or churns) KV state.
     fn admit(&mut self, job: Job) {
         let Job { request, reply } = job;
         let ids = tokenizer::encode(&request.prompt, true, false);
         let max_new = request.opts.max_new_tokens;
         let sampler = request.opts.sampler.clone();
+        let vid = match self.model.resolve_tier(request.opts.tier.as_deref()) {
+            Ok(v) => v,
+            Err(e) => {
+                self.metrics
+                    .requests_rejected
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                let _ = reply.send(Response::failed(request.id, e.to_string()));
+                return;
+            }
+        };
         if let Err(e) = self.model.check_admission(ids.len(), max_new) {
             self.metrics
                 .requests_rejected
@@ -164,7 +196,7 @@ impl Scheduler {
                 return;
             }
         };
-        let state = match self.model.begin_prefill(slot, &ids) {
+        let state = match self.model.begin_prefill_v(&vid, slot, &ids) {
             Ok(st) => st,
             Err(e) => {
                 self.slots.free(slot);
@@ -184,20 +216,26 @@ impl Scheduler {
         });
     }
 
-    /// Advance the head pending prefill by one chunk. On completion the
-    /// request samples its first token and joins the decode batch from the
-    /// same iteration onward.
+    /// Advance the head pending prefill by one chunk, then rotate it to
+    /// the back of the queue (round-robin fairness: with several long
+    /// prompts pending, each gets every len(pending)-th chunk slot instead
+    /// of the first prompt monopolizing the head of the line). On
+    /// completion the request samples its first token and joins the decode
+    /// batch from the same iteration onward.
     fn step_pending_prefill(&mut self) {
-        let Some(head) = self.pending.front_mut() else { return };
+        let Some(mut head) = self.pending.pop_front() else { return };
         let clock0 = self.model.mesh.metrics.modelled_total_ns();
         let step = self.model.prefill_step(&mut head.state);
         let clock1 = self.model.mesh.metrics.modelled_total_ns();
         self.metrics.record_prefill_step(clock1 - clock0);
         match step {
-            Ok(None) => {} // chunk consumed; resume next iteration
+            // chunk consumed; the NEXT pending prompt gets the next
+            // iteration's chunk slot
+            Ok(None) => self.pending.push_back(head),
             Ok(Some(logits)) => {
-                let p = self.pending.pop_front().unwrap();
+                let p = head;
                 let slot = p.state.slot();
+                let variant = p.state.variant().clone();
                 self.metrics
                     .prefill_tokens
                     .fetch_add(p.prompt_tokens as u64, std::sync::atomic::Ordering::Relaxed);
@@ -217,6 +255,7 @@ impl Scheduler {
                         reply: p.reply,
                         tokens: vec![],
                         prompt_tokens: p.prompt_tokens,
+                        variant,
                         ttft_ms,
                         modelled_start_ns: p.modelled_start_ns,
                         modelled_ttft_ms,
@@ -226,57 +265,75 @@ impl Scheduler {
                 );
             }
             Err(e) => {
-                let p = self.pending.pop_front().unwrap();
-                self.slots.free(p.state.slot());
-                let _ = p
+                self.slots.free(head.state.slot());
+                let _ = head
                     .reply
-                    .send(Response::failed(p.request.id, format!("prefill failed: {e}")));
+                    .send(Response::failed(head.request.id, format!("prefill failed: {e}")));
             }
         }
     }
 
     fn decode_round(&mut self) {
         // Compacted batch: only active slots cross the executor boundary;
-        // decode_active dispatches them at bucket granularity (the device
-        // computes — and downloads — the covering bucket, not all [S]
-        // lanes; see runtime::buckets). Slots mid-prefill are skipped.
+        // decode_active_v dispatches them at bucket granularity (the
+        // device computes — and downloads — the covering bucket, not all
+        // [S] lanes; see runtime::buckets). Slots mid-prefill are skipped.
+        // Slots are grouped by serving tier: one bucketed dispatch per
+        // plan variant per round, in deterministic VariantId order, each
+        // charged at ITS depth scale and attributed per tier.
         let active = self.slots.active_inputs();
         if active.is_empty() {
             return;
         }
-        let clock0 = self.modelled_clock_ns();
-        let rows = match self.model.decode_active(&active) {
-            Ok(r) => r,
-            // Failure isolation: a batch error must not fail every
-            // in-flight request. Retry each live slot alone; only the
-            // slots that still fail are drained, the rest keep decoding.
-            Err(e) => self.decode_round_isolated(&active, &e),
-        };
-        // Rounds that produced nothing (every slot failed) don't count as
-        // decode steps, matching the pre-isolation accounting; after a
-        // partial failure only the lanes that actually produced a row
-        // count toward the occupancy histogram.
-        if !rows.is_empty() {
-            self.metrics
-                .record_decode_round(rows.len(), self.modelled_clock_ns() - clock0);
+        let mut groups: BTreeMap<VariantId, Vec<ActiveSlot>> = BTreeMap::new();
+        for lane in active {
+            let Some(inf) = self.inflight.get(&lane.0) else { continue };
+            groups.entry(inf.variant.clone()).or_default().push(lane);
         }
-        for (slot, row) in rows {
-            self.apply_sampled_row(slot, &row);
+        for (vid, lanes) in groups {
+            let clock0 = self.modelled_clock_ns();
+            let rows = match self.model.decode_active_v(&vid, &lanes) {
+                Ok(r) => r,
+                // Failure isolation: a batch error must not fail every
+                // in-flight request. Retry each live slot alone; only the
+                // slots that still fail are drained, the rest keep
+                // decoding.
+                Err(e) => self.decode_round_isolated(&vid, &lanes, &e),
+            };
+            // Rounds that produced nothing (every slot failed) don't count
+            // as decode steps, matching the pre-isolation accounting;
+            // after a partial failure only the lanes that actually
+            // produced a row count toward the occupancy histogram.
+            if !rows.is_empty() {
+                let modelled_ns = self.modelled_clock_ns() - clock0;
+                self.metrics.record_decode_round(rows.len(), modelled_ns);
+                self.metrics.record_tier_round(vid.as_str(), rows.len(), modelled_ns);
+            }
+            for (slot, row) in rows {
+                self.apply_sampled_row(slot, &row);
+            }
         }
+        // surface exec-cache pressure (non-zero only under a
+        // `[runtime] max_cached_execs` cap)
+        self.metrics.exec_cache_evictions.store(
+            self.model.exec_cache().stats().evictions,
+            std::sync::atomic::Ordering::Relaxed,
+        );
     }
 
     /// Per-slot fallback after a batched decode error: decode each live
-    /// slot in its own round (the B=1 bucket), failing only the slots
-    /// whose single-lane step also errors. Returns the successfully
-    /// decoded rows.
+    /// slot of the tier in its own round (the B=1 bucket), failing only
+    /// the slots whose single-lane step also errors. Returns the
+    /// successfully decoded rows.
     fn decode_round_isolated(
         &mut self,
-        active: &[(usize, i32, i32)],
+        vid: &VariantId,
+        active: &[ActiveSlot],
         batch_err: &crate::Error,
     ) -> Vec<(usize, Vec<f32>)> {
         let mut rows = Vec::new();
         for &lane in active {
-            match self.model.decode_active(&[lane]) {
+            match self.model.decode_active_v(vid, &[lane]) {
                 Ok(mut r) => rows.append(&mut r),
                 Err(e) => {
                     let slot = lane.0;
@@ -371,19 +428,42 @@ mod tests {
         ServingModel::new(&manifest, "td-small", &weights, &plan, net).ok()
     }
 
-    fn job(id: u64, prompt: &str, max_new: usize) -> (Job, Receiver<Response>) {
+    /// Multi-variant build over the manifest's registry (None when the
+    /// artifacts predate the `variants` section).
+    fn build_multi() -> Option<ServingModel> {
+        let manifest = Manifest::load_default().ok()?;
+        let cfg = manifest.model("td-small").ok()?.config.clone();
+        let weights = Weights::random(&cfg, 23);
+        let net = InterconnectConfig { enabled: false, ..Default::default() };
+        let m = ServingModel::from_manifest(&manifest, "td-small", &weights, net).ok()?;
+        (m.variant_ids().len() >= 3).then_some(m)
+    }
+
+    fn job_opts(
+        id: u64,
+        prompt: &str,
+        opts: RequestOptions,
+    ) -> (Job, Receiver<Response>) {
         let (tx, rx) = channel();
         (
             Job {
                 request: Request {
                     id,
                     prompt: prompt.into(),
-                    opts: RequestOptions { max_new_tokens: max_new, sampler: Sampler::Greedy },
+                    opts,
                     submitted_at: Instant::now(),
                 },
                 reply: tx,
             },
             rx,
+        )
+    }
+
+    fn job(id: u64, prompt: &str, max_new: usize) -> (Job, Receiver<Response>) {
+        job_opts(
+            id,
+            prompt,
+            RequestOptions { max_new_tokens: max_new, sampler: Sampler::Greedy, tier: None },
         )
     }
 
@@ -491,6 +571,148 @@ mod tests {
         assert!(a.clock_ns > 0, "clock never ticked");
         assert!(a.decode_ns > 0 && a.prefill_ns > 0, "rounds must be attributed");
         assert_eq!(a, b, "two identical runs must tick the clock identically");
+    }
+
+    /// Round-robin fairness (PR 3 follow-up): with several long prompts
+    /// pending, each gets every len(pending)-th chunk — one prompt can no
+    /// longer starve the others' head-of-line chunk.
+    #[test]
+    fn pending_prefills_round_robin_one_chunk_each() {
+        let Some(model) = build() else { return };
+        let Some(k) = model.prefill_chunk() else { return };
+        let metrics = Arc::new(ServerMetrics::default());
+        let mut sched = Scheduler::new(model, metrics);
+
+        // two long prompts, each spanning several chunks
+        let long = "y".repeat(3 * k);
+        let (job_a, _rx_a) = job(1, &long, 4);
+        let (job_b, _rx_b) = job(2, &long, 4);
+        sched.admit(job_a);
+        sched.admit(job_b);
+        assert_eq!(sched.pending.len(), 2);
+
+        // tick 1 advances A one chunk and rotates it behind B; tick 2
+        // advances B — after two ticks BOTH have consumed exactly one chunk
+        sched.tick();
+        sched.tick();
+        let consumed: Vec<usize> =
+            sched.pending.iter().map(|p| p.state.consumed()).collect();
+        assert_eq!(consumed, vec![k, k], "chunks must interleave across prompts");
+
+        // drive to completion: both prompts finish despite interleaving
+        for _ in 0..50 {
+            if sched.pending.is_empty() {
+                break;
+            }
+            sched.tick();
+        }
+        assert!(sched.pending.is_empty());
+        assert_eq!(sched.inflight.len(), 2);
+    }
+
+    /// Tentpole: one scheduler serves concurrent requests on three tiers
+    /// from one manifest — each decode round dispatches once per tier, the
+    /// per-tier attribution is populated, and two identical runs produce
+    /// bit-identical modelled timelines and tokens (mixed-tier rounds are
+    /// deterministic).
+    #[test]
+    fn mixed_tier_rounds_are_deterministic_and_tier_attributed() {
+        #[derive(Debug, PartialEq)]
+        struct Outcome {
+            tiers: Vec<(String, crate::coordinator::metrics::TierStats)>,
+            tokens: Vec<Vec<i32>>,
+            clock_ns: u64,
+        }
+        let run = || -> Option<Outcome> {
+            let model = build_multi()?;
+            let metrics = Arc::new(ServerMetrics::default());
+            let mut sched = Scheduler::new(model, metrics.clone());
+            let mut replies = Vec::new();
+            for (id, tier) in [(1u64, "dense"), (2, "lp"), (3, "lp_aggr")] {
+                let opts = RequestOptions {
+                    max_new_tokens: 3,
+                    sampler: Sampler::Greedy,
+                    tier: Some(tier.to_string()),
+                };
+                let (j, rx) = job_opts(id, "the red fox", opts);
+                sched.admit(j);
+                replies.push(rx);
+            }
+            for _ in 0..100 {
+                if sched.inflight.is_empty() && sched.pending.is_empty() {
+                    break;
+                }
+                sched.tick();
+            }
+            assert!(sched.inflight.is_empty() && sched.pending.is_empty());
+            let mut tokens = Vec::new();
+            for rx in replies {
+                let r = rx.try_recv().expect("request must have completed");
+                assert!(r.error.is_none(), "{:?}", r.error);
+                assert_eq!(r.generated_tokens(), 3);
+                tokens.push(r.tokens);
+            }
+            Some(Outcome {
+                tiers: metrics.tier_stats(),
+                tokens,
+                clock_ns: sched.model.mesh.metrics.modelled_total_ns(),
+            })
+        };
+        let Some(a) = run() else { return };
+        let names: Vec<&str> = a.tiers.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, ["dense", "lp", "lp_aggr"], "all three tiers must decode");
+        for (name, st) in &a.tiers {
+            assert_eq!(st.tokens, 3, "tier {name} decodes its request's tokens");
+            assert!(st.rounds >= 3 && st.modelled_ns > 0, "tier {name}: {st:?}");
+        }
+        let b = run().unwrap();
+        assert_eq!(a, b, "mixed-tier rounds must be deterministic (clock, tokens, tiers)");
+        assert!(a.clock_ns > 0, "clock never ticked");
+    }
+
+    /// Satellite: a tier the manifest does not carry is rejected at
+    /// admission — immediately, with the available tiers named, and with
+    /// zero slot churn.
+    #[test]
+    fn unknown_tier_rejected_at_admission_without_slot_churn() {
+        let Some(model) = build_multi() else { return };
+        let metrics = Arc::new(ServerMetrics::default());
+        let mut sched = Scheduler::new(model, metrics.clone());
+        let free_before = sched.slots.free_count();
+
+        let opts = RequestOptions {
+            max_new_tokens: 4,
+            sampler: Sampler::Greedy,
+            tier: Some("turbo".to_string()),
+        };
+        let (j, rx) = job_opts(1, "hello", opts);
+        sched.admit(j);
+        let r = rx.try_recv().expect("rejection must reply immediately");
+        let err = r.error.as_deref().unwrap_or("");
+        assert!(err.contains("turbo") && err.contains("dense"), "{err}");
+        assert_eq!(sched.slots.free_count(), free_before, "no slot churn");
+        assert!(sched.pending.is_empty() && sched.inflight.is_empty());
+        assert_eq!(
+            metrics.requests_rejected.load(std::sync::atomic::Ordering::Relaxed),
+            1
+        );
+
+        // a known tier on the same scheduler still admits fine
+        let opts = RequestOptions {
+            max_new_tokens: 2,
+            sampler: Sampler::Greedy,
+            tier: Some("lp".to_string()),
+        };
+        let (j, rx) = job_opts(2, "hello", opts);
+        sched.admit(j);
+        for _ in 0..50 {
+            if sched.inflight.is_empty() && sched.pending.is_empty() {
+                break;
+            }
+            sched.tick();
+        }
+        let r = rx.try_recv().expect("lp request must complete");
+        assert!(r.error.is_none(), "{:?}", r.error);
     }
 
     /// Satellite regression: admission validates both bounds before a slot

@@ -136,6 +136,55 @@ mod tests {
         server.shutdown();
     }
 
+    /// Tentpole acceptance, server half: a single `Server` serves
+    /// concurrent requests on all three manifest tiers from one resident
+    /// weight set — every request completes on its tier, and the per-tier
+    /// attribution shows all three decoded.
+    #[test]
+    fn serves_three_tiers_concurrently_from_one_manifest() {
+        let Ok(manifest) = Manifest::load_default() else { return };
+        let cfg = manifest.model("td-small").unwrap().config.clone();
+        let weights = Weights::random(&cfg, 11);
+        let Ok(model) = ServingModel::from_manifest(
+            &manifest,
+            "td-small",
+            &weights,
+            InterconnectConfig { enabled: false, ..Default::default() },
+        ) else {
+            return;
+        };
+        if model.variant_ids().len() < 3 {
+            return; // legacy artifacts without the variants section
+        }
+        let server = Server::start(model, &ServerConfig { queue_depth: 16, ..Default::default() });
+        let tiers = ["dense", "lp", "lp_aggr"];
+        let rxs: Vec<_> = (0..6)
+            .map(|i| {
+                let opts = RequestOptions { max_new_tokens: 3, ..Default::default() }
+                    .with_tier(tiers[i % tiers.len()]);
+                server.submit(&format!("prompt {i} the red fox"), opts).unwrap()
+            })
+            .collect();
+        for rx in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+            assert!(resp.error.is_none(), "{:?}", resp.error);
+            assert_eq!(resp.generated_tokens(), 3);
+        }
+        let stats = server.metrics.tier_stats();
+        let names: Vec<&str> = stats.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, tiers, "all three tiers must have decoded");
+        for (name, st) in &stats {
+            assert_eq!(st.tokens, 6, "tier {name}: 2 requests × 3 tokens");
+        }
+        // unknown tier: rejected end to end with the available tiers named
+        let resp = server
+            .submit_blocking("hi", RequestOptions::default().with_tier("turbo"))
+            .unwrap();
+        let err = resp.error.as_deref().unwrap_or("");
+        assert!(err.contains("turbo") && err.contains("lp_aggr"), "{err}");
+        server.shutdown();
+    }
+
     #[test]
     fn oversized_prompt_fails_cleanly() {
         let Some(server) = server() else { return };

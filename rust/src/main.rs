@@ -4,7 +4,15 @@
 //!   info                         manifest + checkpoint inventory
 //!   generate  --model M --prompt P [--depth D] [--max-new N] [--no-simnet]
 //!   ppl       --model M [--transform T --s S --e E]
-//!   serve     --model M [--depth D] --requests N   synthetic load demo
+//!   serve     --model M [--depth D | --tiers] [--config run.toml]
+//!             [--max-cached-execs N] --requests N
+//!                                synthetic load demo; --tiers serves every
+//!                                manifest plan variant concurrently
+//!                                (requests cycle dense/lp/lp_aggr).
+//!                                --config applies a RunConfig TOML
+//!                                ([interconnect]/[device] cost model +
+//!                                [runtime] max_cached_execs); the CLI flag
+//!                                overrides the [runtime] knob
 //!
 //! Examples live in `examples/` (quickstart, serve_batch, depth_explorer);
 //! experiment regenerators in `rust/src/bin/` (see DESIGN.md).
@@ -20,7 +28,7 @@ use truedepth::text::corpus::{self, DATA_SEED};
 use truedepth::util::rng::SplitMix64;
 
 fn main() {
-    let args = Args::from_env(&["no-simnet", "help"]);
+    let args = Args::from_env(&["no-simnet", "tiers", "help"]);
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let r = match cmd {
         "info" => info(),
@@ -125,21 +133,64 @@ fn cmd_serve(args: &Args) -> truedepth::Result<()> {
     let ctx = ScoringCtx::load(model)?;
     let weights = ctx.weights()?;
     let n = ctx.entry().config.n_layers;
-    let plan = plan_for(args, n)?;
-    let net = if args.flag("no-simnet") { no_net() } else { default_net() };
-    let serving = ServingModel::new(&ctx.manifest, model, &weights, &plan, net)?;
+    // --config: a RunConfig TOML supplies the cost model ([interconnect] +
+    // [device]) and the [runtime] section; without it the calibrated
+    // defaults apply (--no-simnet still disables the α–β term either way).
+    let run_cfg = match args.get("config") {
+        Some(p) => truedepth::config::RunConfig::from_file(std::path::Path::new(p))?,
+        None => truedepth::config::RunConfig::default(),
+    };
+    let mut net = if args.get("config").is_some() {
+        run_cfg.interconnect.clone()
+    } else if args.flag("no-simnet") {
+        no_net()
+    } else {
+        default_net()
+    };
+    if args.flag("no-simnet") {
+        net.enabled = false;
+    }
+    let cost = truedepth::parallel::CostModel::new(net, run_cfg.device.clone());
+    // --tiers: one resident weight set, every manifest plan variant served
+    // concurrently (the plan-variant registry); default: one --depth plan.
+    let multi = args.flag("tiers");
+    let serving = if multi {
+        ServingModel::from_manifest_with_cost(&ctx.manifest, model, &weights, cost)?
+    } else {
+        let plan = plan_for(args, n)?;
+        ServingModel::new_with_cost(&ctx.manifest, model, &weights, &plan, cost)?
+    };
+    // `[runtime] max_cached_execs` (CLI flag overrides the config file;
+    // 0 / absent = unbounded): LRU-evict compiled executables beyond the
+    // cap, recompiling transparently on reuse.
+    let cap = match args.get_usize("max-cached-execs", 0) {
+        0 => run_cfg.runtime.max_cached_execs,
+        c => Some(c),
+    };
+    serving.set_exec_cache_cap(cap);
+    let tiers: Vec<String> =
+        serving.variant_ids().iter().map(|v| v.as_str().to_string()).collect();
+    let depths: Vec<String> = serving
+        .variant_ids()
+        .iter()
+        .map(|v| format!("{v}:{}", serving.variant(v).unwrap().effective_depth()))
+        .collect();
     let server = Server::start(serving, &ServerConfig::default());
 
     println!(
-        "serving {model} at depth {} — {n_requests} synthetic requests",
-        plan.effective_depth()
+        "serving {model} [{}] — {n_requests} synthetic requests",
+        depths.join(" ")
     );
     let t0 = std::time::Instant::now();
     let rxs: Vec<_> = (0..n_requests)
         .map(|i| {
             let doc = corpus::eval_doc(DATA_SEED, 1000 + i as u64);
             let prompt = &doc[..doc.len().min(48)];
-            server.submit(prompt, RequestOptions { max_new_tokens: 16, sampler: Sampler::Greedy })
+            let tier = multi.then(|| tiers[i % tiers.len()].clone());
+            server.submit(
+                prompt,
+                RequestOptions { max_new_tokens: 16, sampler: Sampler::Greedy, tier },
+            )
         })
         .collect::<truedepth::Result<_>>()?;
     let mut total_tokens = 0;

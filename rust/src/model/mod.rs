@@ -13,5 +13,5 @@ pub mod weights;
 pub use plan::{GraphPlan, Stage};
 pub use prefill::ChunkedPrefill;
 pub use scoring::Scorer;
-pub use serving::{ActiveSlot, ServeStage, ServingModel};
+pub use serving::{ActiveSlot, PlanVariant, ServeStage, ServingModel};
 pub use weights::Weights;

@@ -59,6 +59,37 @@ pub struct GraphPlan {
 }
 
 impl GraphPlan {
+    /// Build from a manifest plan variant's stage lists (see
+    /// `runtime::artifacts::VariantSpec`): `[i]` → [`Stage::Seq`],
+    /// `[a, b]` → [`Stage::PairLp`]. Validates the result, so a malformed
+    /// manifest variant errors here instead of at serve time.
+    pub fn from_stage_lists(
+        n_layers: usize,
+        stages: &[Vec<usize>],
+    ) -> crate::Result<GraphPlan> {
+        if stages.is_empty() {
+            // a zero-stage plan would "serve" embed→logits with every
+            // transformer layer skipped — reject it up front
+            return Err(crate::Error::Plan("variant has no stages".into()));
+        }
+        let mut out = Vec::with_capacity(stages.len());
+        for st in stages {
+            match st.as_slice() {
+                [i] => out.push(Stage::Seq(*i)),
+                [a, b] => out.push(Stage::PairLp(*a, *b)),
+                other => {
+                    return Err(crate::Error::Plan(format!(
+                        "variant stage arity {} unsupported (want 1 or 2 layers)",
+                        other.len()
+                    )))
+                }
+            }
+        }
+        let plan = GraphPlan { n_layers, stages: out };
+        plan.validate()?;
+        Ok(plan)
+    }
+
     /// Paper's *effective depth*: sequential stages from input to output.
     pub fn effective_depth(&self) -> usize {
         self.stages.len()
@@ -150,6 +181,24 @@ mod tests {
         assert!(p.validate().is_err());
         let p = GraphPlan { n_layers: 3, stages: vec![Stage::ParBlock(vec![])] };
         assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn from_stage_lists_maps_variant_specs() {
+        let p =
+            GraphPlan::from_stage_lists(6, &[vec![0], vec![1, 2], vec![3], vec![4, 5]])
+                .unwrap();
+        assert_eq!(
+            p.stages,
+            vec![Stage::Seq(0), Stage::PairLp(1, 2), Stage::Seq(3), Stage::PairLp(4, 5)]
+        );
+        assert_eq!(p.effective_depth(), 4);
+        // arity, emptiness, reuse and range all rejected
+        assert!(GraphPlan::from_stage_lists(6, &[vec![0, 1, 2]]).is_err());
+        assert!(GraphPlan::from_stage_lists(6, &[vec![]]).is_err());
+        assert!(GraphPlan::from_stage_lists(6, &[]).is_err(), "zero-stage plan");
+        assert!(GraphPlan::from_stage_lists(6, &[vec![0], vec![0, 1]]).is_err());
+        assert!(GraphPlan::from_stage_lists(2, &[vec![5]]).is_err());
     }
 
     #[test]

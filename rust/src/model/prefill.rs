@@ -51,6 +51,7 @@ use crate::model::serving::{ServeStage, ServingModel};
 use crate::parallel::worker::ArgRef;
 use crate::runtime::buckets::{prefill_bytes, prefill_flops};
 use crate::runtime::pjrt::HostValue;
+use crate::runtime::VariantId;
 
 /// Executable keys of the chunk prefill family — all six must exist in the
 /// manifest for the chunked path to activate (`ServingModel::prefill_chunk`).
@@ -63,14 +64,16 @@ pub const CHUNK_ARTIFACT_KEYS: [&str; 6] = [
     "lpffn_chunk",
 ];
 
-/// Resumable prefill cursor: which slot is being filled, the full prompt,
-/// and how many tokens the chunk steps have consumed so far. The device
-/// state between steps lives entirely in the slot's KV cache rows, so the
-/// scheduler can run decode rounds (which reuse the resident `act` buffer)
-/// between any two steps.
+/// Resumable prefill cursor: which slot (and plan-variant tier) is being
+/// filled, the full prompt, and how many tokens the chunk steps have
+/// consumed so far. The device state between steps lives entirely in the
+/// tier's KV cache rows for the slot, so the scheduler can run decode
+/// rounds (which reuse the resident `act` buffer) between any two steps —
+/// including rounds of *other* tiers.
 #[derive(Debug)]
 pub struct ChunkedPrefill {
     slot: usize,
+    variant: VariantId,
     tokens: Vec<i32>,
     consumed: usize,
 }
@@ -78,6 +81,11 @@ pub struct ChunkedPrefill {
 impl ChunkedPrefill {
     pub fn slot(&self) -> usize {
         self.slot
+    }
+
+    /// The plan-variant tier this prefill streams into.
+    pub fn variant(&self) -> &VariantId {
+        &self.variant
     }
 
     /// Prompt length in tokens.
@@ -106,11 +114,23 @@ impl ChunkedPrefill {
 }
 
 impl ServingModel {
-    /// Start a resumable prefill of `tokens` into `slot`. Validates the
-    /// prompt against the active prefill path's bound up front (chunked:
-    /// the KV context; legacy fixed-`T`: the largest seq bucket) so a
-    /// cursor, once issued, cannot fail on length mid-flight.
+    /// [`ServingModel::begin_prefill_v`] on the default tier.
     pub fn begin_prefill(&self, slot: usize, tokens: &[i32]) -> Result<ChunkedPrefill> {
+        self.begin_prefill_v(self.default_tier(), slot, tokens)
+    }
+
+    /// Start a resumable prefill of `tokens` into `slot` under tier `vid`.
+    /// Validates the tier and the prompt against the active prefill path's
+    /// bound up front (chunked: the KV context; legacy fixed-`T`: the
+    /// largest seq bucket) so a cursor, once issued, cannot fail on tier
+    /// or length mid-flight.
+    pub fn begin_prefill_v(
+        &self,
+        vid: &VariantId,
+        slot: usize,
+        tokens: &[i32],
+    ) -> Result<ChunkedPrefill> {
+        self.variant(vid)?;
         let cfg = &self.entry.config;
         if tokens.is_empty() {
             return Err(Error::Serving("empty prompt (nothing to prefill)".into()));
@@ -128,22 +148,29 @@ impl ServingModel {
                 cfg.ctx
             )));
         }
-        Ok(ChunkedPrefill { slot, tokens: tokens.to_vec(), consumed: 0 })
+        Ok(ChunkedPrefill {
+            slot,
+            variant: vid.clone(),
+            tokens: tokens.to_vec(),
+            consumed: 0,
+        })
     }
 
     /// Run ONE chunk step (or, on a legacy manifest without chunk
-    /// executables, the whole monolithic prefill). Returns `Some(logits
-    /// row)` of the last real token once the prompt is fully consumed,
-    /// `None` while chunks remain.
+    /// executables, the whole monolithic prefill) under the cursor's tier.
+    /// Returns `Some(logits row)` of the last real token once the prompt
+    /// is fully consumed, `None` while chunks remain.
     pub fn prefill_step(&self, st: &mut ChunkedPrefill) -> Result<Option<Vec<f32>>> {
         if st.is_done() {
             return Err(Error::Serving("prefill_step on a completed prefill".into()));
         }
+        let var = self.variant(&st.variant)?;
         let Some(k) = self.prefill_chunk else {
-            let logits = self.prefill(st.slot, &st.tokens)?;
+            let logits = self.prefill_v(&st.variant, st.slot, &st.tokens)?;
             st.consumed = st.tokens.len();
             return Ok(Some(logits));
         };
+        self.ensure_execs(&Self::chunk_exec_keys(var))?;
 
         let cfg = &self.entry.config;
         let d = cfg.d_model;
@@ -156,11 +183,12 @@ impl ServingModel {
         // plus the [K, V] logits head on the final chunk only — priced on
         // the roofline with the chunk's memory traffic (each chunk pass
         // re-streams the layer weights, so modelled time scales with
-        // ceil(L / K), the property bench_prefill's sweep gates on)
+        // ceil(L / K), the property bench_prefill's sweep gates on).
+        // Charged with the cursor tier's own depth scale.
         let logits_rows = if last { k } else { 0 };
         self.mesh.charge_compute(
-            prefill_flops(cfg, self.layers_equiv, off, k, logits_rows),
-            prefill_bytes(cfg, self.layers_equiv, off, k, logits_rows),
+            prefill_flops(cfg, var.layers_equiv, off, k, logits_rows),
+            prefill_bytes(cfg, var.layers_equiv, off, k, logits_rows),
         );
 
         // chunk coordinates are fresh host data, resident for the stages
@@ -186,20 +214,26 @@ impl ServingModel {
         self.mesh
             .broadcast_resident("act", &HostValue::f32(vec![k, d], shadow.clone()))?;
 
-        for (sidx, stage) in self.stages.iter().enumerate() {
+        for (sidx, stage) in var.stages.iter().enumerate() {
             let (attn_key, ffn_key) = match stage {
                 ServeStage::Tp(_) => ("tpattn_chunk", "tpffn_chunk"),
                 ServeStage::Lp(..) => ("lpattn_chunk", "lpffn_chunk"),
             };
+            let kname = Self::cache_name(&st.variant, "k", sidx);
+            let vname = Self::cache_name(&st.variant, "v", sidx);
             // --- attention partials; the executable gathers the slot's
             // cache rows, inserts this chunk's K/V (masked by `valid`) and
             // attends over the prefix — caches persist in place
             let calls = (0..self.ranks)
-                .map(|_| {
+                .map(|rank| {
                     let mut args = vec![ArgRef::Resident("act".into())];
-                    args.extend(Self::weight_args(sidx, &["ln1", "wq", "wk", "wv", "wo"]));
-                    args.push(ArgRef::Resident(format!("kv.k.{sidx}")));
-                    args.push(ArgRef::Resident(format!("kv.v.{sidx}")));
+                    args.extend(Self::stage_weight_args(
+                        stage,
+                        rank,
+                        &["ln1", "wq", "wk", "wv", "wo"],
+                    ));
+                    args.push(ArgRef::Resident(kname.clone()));
+                    args.push(ArgRef::Resident(vname.clone()));
                     args.push(ArgRef::Resident("slot".into()));
                     args.push(ArgRef::Resident("off".into()));
                     args.push(ArgRef::Resident("valid".into()));
@@ -208,8 +242,8 @@ impl ServingModel {
                         args,
                         vec![
                             Some("act.partial".to_string()),
-                            Some(format!("kv.k.{sidx}")),
-                            Some(format!("kv.v.{sidx}")),
+                            Some(kname.clone()),
+                            Some(vname.clone()),
                         ],
                         vec![false, false, false],
                     )
@@ -220,9 +254,13 @@ impl ServingModel {
 
             // --- FFN partials (device-resident)
             let calls = (0..self.ranks)
-                .map(|_| {
+                .map(|rank| {
                     let mut args = vec![ArgRef::Resident("act".into())];
-                    args.extend(Self::weight_args(sidx, &["ln2", "wg", "wu", "wd"]));
+                    args.extend(Self::stage_weight_args(
+                        stage,
+                        rank,
+                        &["ln2", "wg", "wu", "wd"],
+                    ));
                     (
                         ffn_key.to_string(),
                         args,
@@ -265,7 +303,17 @@ impl ServingModel {
     /// the monolithic pass on legacy manifests). Returns the last real
     /// token's logits row.
     pub fn prefill_chunked(&self, slot: usize, tokens: &[i32]) -> Result<Vec<f32>> {
-        let mut st = self.begin_prefill(slot, tokens)?;
+        self.prefill_chunked_v(self.default_tier(), slot, tokens)
+    }
+
+    /// [`ServingModel::prefill_chunked`] under an explicit tier.
+    pub fn prefill_chunked_v(
+        &self,
+        vid: &VariantId,
+        slot: usize,
+        tokens: &[i32],
+    ) -> Result<Vec<f32>> {
+        let mut st = self.begin_prefill_v(vid, slot, tokens)?;
         loop {
             if let Some(logits) = self.prefill_step(&mut st)? {
                 return Ok(logits);
@@ -316,6 +364,7 @@ mod tests {
         let prompt: Vec<i32> = (0..77).map(|i| 40 + (i % 50)).collect();
         let steps = prompt.len().div_ceil(k);
 
+        let le = m.default_variant().layers_equiv;
         m.mesh.metrics.reset();
         let mono = m.prefill(1, &prompt).unwrap();
         let mono_flops = m.mesh.metrics.modelled_flops();
@@ -341,12 +390,10 @@ mod tests {
         // modelled compute scales with the chunks actually run (96 padded
         // positions + [K, V] head), not the covering bucket (128 + [T, V])
         let expect_chunk: u64 = (0..steps)
-            .map(|j| {
-                prefill_flops(&cfg, m.layers_equiv, j * k, k, if j == steps - 1 { k } else { 0 })
-            })
+            .map(|j| prefill_flops(&cfg, le, j * k, k, if j == steps - 1 { k } else { 0 }))
             .sum();
         assert_eq!(chunk_flops, expect_chunk);
-        assert_eq!(mono_flops, prefill_flops(&cfg, m.layers_equiv, 0, 128, 128));
+        assert_eq!(mono_flops, prefill_flops(&cfg, le, 0, 128, 128));
         assert!(chunk_flops < mono_flops, "chunked must bill fewer modelled flops");
         // α–β accounting: 2 reduces per stage per pass vs per chunk
         assert_eq!(mono_sync as usize, m.all_reduces_per_token());
@@ -359,6 +406,32 @@ mod tests {
             .decode_active(&[(0, next, prompt.len() as i32), (1, next, prompt.len() as i32)])
             .unwrap();
         assert_eq!(rows[0].1, rows[1].1, "decode after chunked prefill diverged");
+    }
+
+    /// Plan-variant registry: a chunked prefill under a named tier is
+    /// bit-identical to the monolithic pass under the same tier, and the
+    /// cursor rejects tiers the model does not serve.
+    #[test]
+    fn chunked_prefill_respects_the_cursor_tier() {
+        let Ok(manifest) = Manifest::load_default() else { return };
+        let cfg = manifest.model("td-small").unwrap().config.clone();
+        let weights = Weights::random(&cfg, 41);
+        let Ok(m) = ServingModel::from_manifest(&manifest, "td-small", &weights, quiet())
+        else {
+            return;
+        };
+        if m.prefill_chunk().is_none() || m.variant_ids().len() < 3 {
+            return;
+        }
+        let prompt: Vec<i32> = (0..50).map(|i| 40 + (i % 50)).collect();
+        for vid in m.variant_ids() {
+            let mono = m.prefill_v(&vid, 0, &prompt).unwrap();
+            let chunked = m.prefill_chunked_v(&vid, 1, &prompt).unwrap();
+            assert_eq!(chunked, mono, "tier {vid}: chunked diverged from monolithic");
+            let st = m.begin_prefill_v(&vid, 0, &prompt).unwrap();
+            assert_eq!(st.variant(), &vid);
+        }
+        assert!(m.begin_prefill_v(&crate::runtime::VariantId::new("nope"), 0, &prompt).is_err());
     }
 
     /// A prompt longer than the largest seq bucket can't run monolithically
@@ -396,9 +469,10 @@ mod tests {
         // identical prefills; slot 1's cache tail then gets poisoned
         m.prefill(0, &prompt).unwrap();
         m.prefill(1, &prompt).unwrap();
-        for sidx in 0..m.stages.len() {
-            for cache in ["kv.k", "kv.v"] {
-                let name = format!("{cache}.{sidx}");
+        let tier = m.default_tier().clone();
+        for sidx in 0..m.stages().len() {
+            for kv in ["k", "v"] {
+                let name = ServingModel::cache_name(&tier, kv, sidx);
                 for w in &m.mesh.workers {
                     let hv = w.fetch(&name).unwrap();
                     let shape = hv.shape().to_vec();

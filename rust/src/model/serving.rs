@@ -1,5 +1,6 @@
 //! Serving executor: the paper's §4 tensor-parallel deployment, with LP
-//! pairs as a first-class stage kind.
+//! pairs as a first-class stage kind and a **plan-variant registry** so one
+//! resident weight set serves several computational graphs concurrently.
 //!
 //! Layout over a 2-rank mesh (paper's setup — one accelerator per LP path):
 //!
@@ -11,6 +12,37 @@
 //!   a, rank 1 all of layer b. One all-reduce combines `A_a(x) + A_b(x)`
 //!   into the shared residual m, one more combines `F_a(m) + F_b(m)` —
 //!   **two all-reduces per layer pair**, i.e. half of sequential TP.
+//!
+//! ## Plan-variant registry (per-request depth tiers)
+//!
+//! The paper's point is that one checkpoint supports many computational
+//! graphs trading accuracy for speed. [`ServingModel`] therefore no longer
+//! hard-wires a single [`GraphPlan`]: it holds a [`VariantId`]-keyed
+//! registry of [`PlanVariant`]s — each a stage walk with its own
+//! [`BucketSet`], flop/byte model and KV caches — built either from an
+//! explicit plan list ([`ServingModel::with_variants`]; the single-plan
+//! [`ServingModel::new`] wraps it with one variant named `plan`) or from
+//! the manifest's `variants` section ([`ServingModel::from_manifest`]:
+//! `dense`, `lp`, `lp_aggr`, default tier `dense`).
+//!
+//! One weight set, many graphs: weights are uploaded once, keyed by layer
+//! and sharding form (`l{i}.tp.*` = this rank's Megatron shard,
+//! `l{i}.full.*` = the full-width copy an LP stage binds), and every
+//! variant's stage walk references the same resident buffers. KV caches
+//! are per-variant (`kv.{tier}.{k,v}.{sidx}` — stage widths differ across
+//! tiers) but share the slot dimension, so slots of different tiers
+//! coexist and the scheduler batches each decode round per tier.
+//! Executables are plan-agnostic (weights arrive as arguments), so all
+//! variants share one lazily-filled [`ExecCache`]: each dispatch path
+//! ensures exactly the keys it binds, compiling on first use and — under
+//! the `[runtime] max_cached_execs` cap — evicting least-recently-used
+//! executables, which transparently recompile on their next use.
+//!
+//! The cost model is charged per variant: a tier's decode round bills
+//! `shape ·` [`PlanVariant::decode_flops_per_lane`] and pays one α–β
+//! charge per stage reduce, so modelled tokens/sec reflects each tier's
+//! `effective_depth()` / `all_reduces_per_token()` — the speed/quality
+//! dial `bench_decode`'s tier sweep and `table3_profile` report.
 //!
 //! ## Resident-activation protocol
 //!
@@ -40,26 +72,21 @@
 //! ## Shape-bucket dispatch
 //!
 //! Decode rounds are dispatched at the granularity the hardware executes:
-//! [`ServingModel::decode_active`] asks the model's
-//! [`crate::runtime::BucketSet`] for the smallest batch bucket
-//! B ∈ `batch_buckets` covering the live-lane count and runs the
-//! per-bucket executables (`{tp,lp}attn_decode_b{B}`, …), so device
-//! compute, the α–β-charged all-reduce payload and the `[B, V]` logits
-//! download all scale with occupancy instead of the slot count. Lane i
-//! serves slot `lanes[i]`; the full `[S, C, w]` KV caches stay resident
-//! and the bucket executables gather/scatter only the addressed rows.
-//! Pad lanes (live < B) duplicate the first live lane — an idempotent
-//! recomputation that rewrites the same cache row with identical bits, so
-//! padding never touches any other slot's state.
-//! Rounds with no covering bucket (legacy manifest,
+//! [`ServingModel::decode_active_v`] asks the variant's [`BucketSet`] for
+//! the smallest batch bucket B ∈ `batch_buckets` covering the live-lane
+//! count and runs the per-bucket executables
+//! (`{tp,lp}attn_decode_b{B}`, …), so device compute, the α–β-charged
+//! all-reduce payload and the `[B, V]` logits download all scale with
+//! occupancy instead of the slot count. Lane i serves slot `lanes[i]`; the
+//! full `[S, C, w]` KV caches stay resident and the bucket executables
+//! gather/scatter only the addressed rows. Pad lanes (live < B) duplicate
+//! the first live lane — an idempotent recomputation that rewrites the
+//! same cache row with identical bits, so padding never touches any other
+//! slot's state. Rounds with no covering bucket (legacy manifest,
 //! occupancy above a truncated registry) fall back to the fixed-`[S]`
 //! [`ServingModel::decode_step`]; both paths are bit-identical per row
 //! because the AOT side lowers the same per-lane HLO for every batch
-//! width. Modelled device compute is charged per dispatched lane via
-//! [`crate::parallel::Mesh::charge_compute`] — flops from
-//! [`decode_flops_per_lane`] plus the matching memory traffic from
-//! [`decode_bytes`], priced in deterministic modelled device time by the
-//! mesh's [`crate::parallel::CostModel`].
+//! width.
 //!
 //! ## Chunked streaming prefill
 //!
@@ -71,13 +98,15 @@
 //! decode rounds between chunks. [`ServingModel::prefill`] keeps the
 //! monolithic fixed-`T` pass as the bit-exactness oracle and the
 //! legacy-manifest fallback. Admission validates BOTH bounds up front via
-//! [`ServingModel::check_admission`].
+//! [`ServingModel::check_admission`]; the tier itself is validated by
+//! [`ServingModel::resolve_tier`] (an unknown tier is rejected before any
+//! slot is claimed).
 //!
 //! KV caches live as named resident buffers on the owning rank(s); decode
 //! carries them in/out of the layer executables (see worker.rs for the
 //! tuple-output caveat).
 
-use std::path::Path;
+use std::collections::{BTreeMap, BTreeSet};
 
 use crate::config::InterconnectConfig;
 use crate::error::{Error, Result};
@@ -85,9 +114,11 @@ use crate::model::plan::{GraphPlan, Stage};
 use crate::model::weights::Weights;
 use crate::parallel::worker::ArgRef;
 use crate::parallel::Mesh;
-use crate::runtime::buckets::{decode_bytes, decode_flops_per_lane, BucketChoice, BucketSet};
+use crate::runtime::buckets::{
+    decode_bytes, decode_flops_per_lane, BucketChoice, BucketSet, ExecCache,
+};
 use crate::runtime::pjrt::HostValue;
-use crate::runtime::{Manifest, ModelEntry};
+use crate::runtime::{Manifest, ModelEntry, VariantId};
 use crate::tensor::add_slices;
 
 /// Serving-mode stage (subset of [`Stage`] that the TP runtime supports).
@@ -100,28 +131,116 @@ pub enum ServeStage {
 /// One active slot's decode input: (slot index, token to feed, position).
 pub type ActiveSlot = (usize, i32, i32);
 
-pub struct ServingModel {
-    pub mesh: Mesh,
-    pub entry: ModelEntry,
+/// One registered plan variant: the stage walk of a serving tier plus its
+/// per-tier bucket registry and cost-model constants. All variants of a
+/// [`ServingModel`] execute over the same resident weight set and share
+/// the compiled-executable pool; what differs is which stages they walk —
+/// and therefore their effective depth, all-reduce count and modelled
+/// device time per token.
+#[derive(Debug)]
+pub struct PlanVariant {
+    pub id: VariantId,
     pub stages: Vec<ServeStage>,
-    /// Prefill sequence-length buckets (manifest `seq_buckets`).
-    pub buckets: Vec<usize>,
-    /// Decode batch-bucket registry (manifest `batch_buckets`).
+    /// Decode batch-bucket registry (selection + live/padded stats are
+    /// per-tier; the executables themselves are shared via the model's
+    /// [`ExecCache`]).
     pub bucket_set: BucketSet,
-    /// Streaming-prefill chunk size K (manifest `prefill_chunk`; `None`
-    /// for legacy manifests — prefill then runs the monolithic path).
-    pub(crate) prefill_chunk: Option<usize>,
     /// Modelled device compute of one decode lane through this plan.
     flops_per_lane: u64,
     /// Whole-layer equivalents of the plan (Tp = 1, Lp = 2) — the depth
     /// scale of the modelled prefill/decode flop charges.
     pub(crate) layers_equiv: usize,
+}
+
+impl PlanVariant {
+    fn from_plan(id: VariantId, plan: &GraphPlan, entry: &ModelEntry) -> Result<PlanVariant> {
+        plan.validate()
+            .map_err(|e| Error::Serving(format!("variant `{id}`: bad plan: {e}")))?;
+        let mut stages = Vec::new();
+        for st in &plan.stages {
+            match st {
+                Stage::Seq(i) => stages.push(ServeStage::Tp(*i)),
+                Stage::PairLp(a, b) => stages.push(ServeStage::Lp(*a, *b)),
+                other => {
+                    return Err(Error::Serving(format!(
+                        "variant `{id}`: stage {other} not servable under TP (scoring only)"
+                    )))
+                }
+            }
+        }
+        // Register only buckets whose executables all exist (guards a
+        // manifest listing shapes it never emitted).
+        let usable: Vec<usize> = entry
+            .batch_buckets
+            .iter()
+            .copied()
+            .filter(|&b| {
+                BucketSet::artifact_keys(b)
+                    .iter()
+                    .all(|k| entry.artifacts.contains_key(k))
+            })
+            .collect();
+        let bucket_set = BucketSet::new(&usable, entry.config.slots);
+        // Tp stages split one layer across the mesh; Lp stages run two
+        // whole layers in parallel — twice the device compute per stage.
+        let layers_equiv = stages
+            .iter()
+            .map(|s| match s {
+                ServeStage::Tp(_) => 1,
+                ServeStage::Lp(..) => 2,
+            })
+            .sum();
+        let flops_per_lane = decode_flops_per_lane(&entry.config, layers_equiv);
+        Ok(PlanVariant { id, stages, bucket_set, flops_per_lane, layers_equiv })
+    }
+
+    /// Effective depth of this tier's plan (stage count).
+    pub fn effective_depth(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// All-reduce operations per decode token: 2 per stage.
+    pub fn all_reduces_per_token(&self) -> usize {
+        self.stages.len() * 2
+    }
+
+    /// Modelled device compute one decode lane pays per token under this
+    /// tier (see [`crate::runtime::buckets::decode_flops_per_lane`]).
+    pub fn decode_flops_per_lane(&self) -> u64 {
+        self.flops_per_lane
+    }
+
+    fn has_tp(&self) -> bool {
+        self.stages.iter().any(|s| matches!(s, ServeStage::Tp(_)))
+    }
+
+    fn has_lp(&self) -> bool {
+        self.stages.iter().any(|s| matches!(s, ServeStage::Lp(..)))
+    }
+}
+
+pub struct ServingModel {
+    pub mesh: Mesh,
+    pub entry: ModelEntry,
+    /// The plan-variant registry, keyed by tier name.
+    variants: BTreeMap<VariantId, PlanVariant>,
+    /// Tier served when a request names none (`dense` on manifest builds).
+    default_id: VariantId,
+    /// Prefill sequence-length buckets (manifest `seq_buckets`).
+    pub buckets: Vec<usize>,
+    /// Streaming-prefill chunk size K (manifest `prefill_chunk`; `None`
+    /// for legacy manifests — prefill then runs the monolithic path).
+    pub(crate) prefill_chunk: Option<usize>,
+    /// Compiled-executable pool shared by every variant (lazy compile +
+    /// LRU eviction under `[runtime] max_cached_execs`).
+    exec_cache: ExecCache,
     pub(crate) ranks: usize,
 }
 
 impl ServingModel {
-    /// Build from a graph plan (Seq → Tp, PairLp → Lp; other stages are a
-    /// scoring-only feature and rejected here).
+    /// Build a single-variant model from an explicit graph plan (Seq → Tp,
+    /// PairLp → Lp; other stages are a scoring-only feature and rejected).
+    /// The variant is registered under the tier name `plan`.
     pub fn new(
         manifest: &Manifest,
         model_name: &str,
@@ -138,7 +257,7 @@ impl ServingModel {
         )
     }
 
-    /// Build with an explicit cost model (custom
+    /// Single-variant build with an explicit cost model (custom
     /// [`crate::config::DeviceProfile`], e.g. from `RunConfig::device`).
     pub fn new_with_cost(
         manifest: &Manifest,
@@ -147,35 +266,82 @@ impl ServingModel {
         plan: &GraphPlan,
         cost: crate::parallel::CostModel,
     ) -> Result<ServingModel> {
-        plan.validate().map_err(|e| Error::Serving(format!("bad plan: {e}")))?;
-        let entry = manifest.model(model_name)?.clone();
-        let mut stages = Vec::new();
-        for st in &plan.stages {
-            match st {
-                Stage::Seq(i) => stages.push(ServeStage::Tp(*i)),
-                Stage::PairLp(a, b) => stages.push(ServeStage::Lp(*a, *b)),
-                other => {
-                    return Err(Error::Serving(format!(
-                        "stage {other} not servable under TP (scoring only)"
-                    )))
-                }
-            }
+        Self::with_variants(
+            manifest,
+            model_name,
+            weights,
+            vec![(VariantId::new("plan"), plan.clone())],
+            cost,
+        )
+    }
+
+    /// Build every plan variant the manifest's `variants` section names —
+    /// the registry behind per-request depth tiers. One resident weight
+    /// set serves all of them; the default tier is `dense` when present
+    /// (legacy manifests synthesize exactly that one variant).
+    pub fn from_manifest(
+        manifest: &Manifest,
+        model_name: &str,
+        weights: &Weights,
+        net: InterconnectConfig,
+    ) -> Result<ServingModel> {
+        Self::from_manifest_with_cost(
+            manifest,
+            model_name,
+            weights,
+            crate::parallel::CostModel::from_net(net),
+        )
+    }
+
+    /// [`ServingModel::from_manifest`] with an explicit cost model.
+    pub fn from_manifest_with_cost(
+        manifest: &Manifest,
+        model_name: &str,
+        weights: &Weights,
+        cost: crate::parallel::CostModel,
+    ) -> Result<ServingModel> {
+        let entry = manifest.model(model_name)?;
+        let n = entry.config.n_layers;
+        let mut plans = Vec::new();
+        for spec in entry.variants.values() {
+            let plan = GraphPlan::from_stage_lists(n, &spec.stages)
+                .map_err(|e| Error::Serving(format!("variant `{}`: {e}", spec.id)))?;
+            plans.push((spec.id.clone(), plan));
         }
+        Self::with_variants(manifest, model_name, weights, plans, cost)
+    }
+
+    /// The core constructor: register one [`PlanVariant`] per `(id, plan)`
+    /// pair over one resident weight set. The default tier is `dense` when
+    /// present, else the first pair's id. Executable *paths* are validated
+    /// up front; compilation itself is lazy (first dispatch per key, via
+    /// the shared [`ExecCache`]).
+    pub fn with_variants(
+        manifest: &Manifest,
+        model_name: &str,
+        weights: &Weights,
+        plans: Vec<(VariantId, GraphPlan)>,
+        cost: crate::parallel::CostModel,
+    ) -> Result<ServingModel> {
+        if plans.is_empty() {
+            return Err(Error::Serving("at least one plan variant required".into()));
+        }
+        let entry = manifest.model(model_name)?.clone();
         let ranks = 2;
         let mesh = Mesh::with_cost(ranks, cost);
-        // Register only buckets whose executables all exist (guards a
-        // manifest listing shapes it never emitted).
-        let usable: Vec<usize> = entry
-            .batch_buckets
+        let default_id = plans
             .iter()
-            .copied()
-            .filter(|&b| {
-                BucketSet::artifact_keys(b)
-                    .iter()
-                    .all(|k| entry.artifacts.contains_key(k))
-            })
-            .collect();
-        let bucket_set = BucketSet::new(&usable, entry.config.slots);
+            .map(|(id, _)| id)
+            .find(|id| **id == VariantId::dense())
+            .unwrap_or(&plans[0].0)
+            .clone();
+        let mut variants = BTreeMap::new();
+        for (id, plan) in &plans {
+            let var = PlanVariant::from_plan(id.clone(), plan, &entry)?;
+            if variants.insert(id.clone(), var).is_some() {
+                return Err(Error::Serving(format!("duplicate variant id `{id}`")));
+            }
+        }
         // Chunked streaming prefill is available only when every chunk
         // executable exists (guards a manifest naming a chunk size it
         // never emitted artifacts for).
@@ -184,37 +350,79 @@ impl ServingModel {
                 .iter()
                 .all(|k| entry.artifacts.contains_key(*k))
         });
-        // Tp stages split one layer across the mesh; Lp stages run two
-        // whole layers in parallel — twice the device compute per stage.
-        let layers_equiv = stages
-            .iter()
-            .map(|s| match s {
-                ServeStage::Tp(_) => 1,
-                ServeStage::Lp(..) => 2,
-            })
-            .sum();
-        let flops_per_lane = decode_flops_per_lane(&entry.config, layers_equiv);
         let m = ServingModel {
             mesh,
             entry,
-            stages,
+            variants,
+            default_id,
             buckets: manifest.seq_buckets.clone(),
-            bucket_set,
             prefill_chunk,
-            flops_per_lane,
-            layers_equiv,
+            exec_cache: ExecCache::new(None),
             ranks,
         };
-        m.compile_artifacts()?;
+        m.validate_artifacts()?;
         m.upload_weights(weights)?;
         m.init_caches()?;
         Ok(m)
     }
 
-    /// Modelled device compute one decode lane pays per token under this
-    /// plan (see [`crate::runtime::buckets::decode_flops_per_lane`]).
+    // ---- registry ----------------------------------------------------------
+
+    /// Look up a tier; the error names the tiers this model does serve.
+    pub fn variant(&self, id: &VariantId) -> Result<&PlanVariant> {
+        self.variants.get(id).ok_or_else(|| {
+            let have: Vec<&str> = self.variants.keys().map(|v| v.as_str()).collect();
+            Error::Serving(format!(
+                "tier `{id}` not served by this model (manifest variants: {})",
+                have.join(", ")
+            ))
+        })
+    }
+
+    /// Registered tier ids, in [`VariantId`] order.
+    pub fn variant_ids(&self) -> Vec<VariantId> {
+        self.variants.keys().cloned().collect()
+    }
+
+    /// The tier served when a request names none.
+    pub fn default_tier(&self) -> &VariantId {
+        &self.default_id
+    }
+
+    pub fn default_variant(&self) -> &PlanVariant {
+        &self.variants[&self.default_id]
+    }
+
+    /// Map a request's optional tier name to a [`VariantId`] — the
+    /// admission-time half of tier validation (`None` = default tier; an
+    /// unknown name is rejected before any slot is claimed).
+    pub fn resolve_tier(&self, tier: Option<&str>) -> Result<VariantId> {
+        match tier {
+            None => Ok(self.default_id.clone()),
+            Some(name) => {
+                let id = VariantId::new(name);
+                self.variant(&id)?;
+                Ok(id)
+            }
+        }
+    }
+
+    /// The shared compiled-executable pool (stats: compiles/evictions).
+    pub fn exec_cache(&self) -> &ExecCache {
+        &self.exec_cache
+    }
+
+    /// Apply the `[runtime] max_cached_execs` knob (`None` = unbounded).
+    pub fn set_exec_cache_cap(&self, cap: Option<usize>) {
+        self.exec_cache.set_cap(cap);
+    }
+
+    // ---- default-tier conveniences (single-plan API, benches, tests) ------
+
+    /// Modelled device compute one decode lane pays per token under the
+    /// default tier.
     pub fn decode_flops_per_lane(&self) -> u64 {
-        self.flops_per_lane
+        self.default_variant().flops_per_lane
     }
 
     /// Streaming-prefill chunk size, when the manifest carries the chunk
@@ -223,80 +431,188 @@ impl ServingModel {
         self.prefill_chunk
     }
 
-    pub(crate) fn art(&self, name: &str) -> Result<&Path> {
+    /// Effective depth of the default tier's plan (stage count).
+    pub fn effective_depth(&self) -> usize {
+        self.default_variant().effective_depth()
+    }
+
+    /// All-reduce operations per decode token under the default tier.
+    pub fn all_reduces_per_token(&self) -> usize {
+        self.default_variant().all_reduces_per_token()
+    }
+
+    /// The default tier's stage walk.
+    pub fn stages(&self) -> &[ServeStage] {
+        &self.default_variant().stages
+    }
+
+    /// The default tier's decode bucket registry.
+    pub fn bucket_set(&self) -> &BucketSet {
+        &self.default_variant().bucket_set
+    }
+
+    // ---- executables / weights / caches ------------------------------------
+
+    pub(crate) fn art(&self, name: &str) -> Result<&std::path::Path> {
         Ok(self.entry.artifact(name)?.file.as_path())
     }
 
-    fn compile_artifacts(&self) -> Result<()> {
-        let mut keys: Vec<String> = vec![
-            "tpattn_decode".into(),
-            "tpffn_decode".into(),
-            "lpattn_decode".into(),
-            "lpffn_decode".into(),
-            "embed_decode".into(),
-            "logits_decode".into(),
-        ];
-        for t in &self.buckets {
-            keys.push(format!("embed_t{t}"));
-            keys.push(format!("logits_t{t}"));
+    /// Compile-or-touch `keys` through the shared [`ExecCache`] (lazy
+    /// per-variant compile caching: every dispatch path calls this with
+    /// exactly the keys it is about to bind, so an evicted executable
+    /// transparently recompiles on its next use).
+    pub(crate) fn ensure_execs(&self, keys: &[String]) -> Result<()> {
+        self.exec_cache.ensure(
+            keys,
+            |k| self.mesh.compile_all(k, self.art(k)?),
+            |k| self.mesh.release_all(k),
+        )
+    }
+
+    /// Fixed-shape decode executable keys a variant binds (`suffix` = ""
+    /// for the full-`[S]` path, `_b{B}` for a batch bucket). Tiers without
+    /// Lp stages never touch the `lp*` family and vice versa — the
+    /// "reuse shared kernels where shapes agree" half of the registry.
+    fn decode_exec_keys(var: &PlanVariant, suffix: &str) -> Vec<String> {
+        let mut keys =
+            vec![format!("embed_decode{suffix}"), format!("logits_decode{suffix}")];
+        if var.has_tp() {
+            keys.push(format!("tpattn_decode{suffix}"));
+            keys.push(format!("tpffn_decode{suffix}"));
+        }
+        if var.has_lp() {
+            keys.push(format!("lpattn_decode{suffix}"));
+            keys.push(format!("lpffn_decode{suffix}"));
+        }
+        keys
+    }
+
+    /// Monolithic fixed-`T` prefill executable keys a variant binds.
+    fn prefill_exec_keys(var: &PlanVariant, t: usize) -> Vec<String> {
+        let mut keys = vec![format!("embed_t{t}"), format!("logits_t{t}")];
+        if var.has_tp() {
             keys.push(format!("tpattn_prefill_t{t}"));
             keys.push(format!("tpffn_prefill_t{t}"));
+            keys.push(format!("cache_insert_half_t{t}"));
+        }
+        if var.has_lp() {
             keys.push(format!("lpattn_prefill_t{t}"));
             keys.push(format!("ffn_t{t}")); // LP FFN prefill (full width)
-            keys.push(format!("cache_insert_half_t{t}"));
             keys.push(format!("cache_insert_full_t{t}"));
         }
-        if self.prefill_chunk.is_some() {
-            keys.extend(
-                crate::model::prefill::CHUNK_ARTIFACT_KEYS.iter().map(|k| k.to_string()),
-            );
+        keys
+    }
+
+    /// Chunk-prefill executable keys a variant binds (see
+    /// [`crate::model::prefill`]).
+    pub(crate) fn chunk_exec_keys(var: &PlanVariant) -> Vec<String> {
+        let mut keys = vec!["embed_chunk".to_string(), "logits_chunk".to_string()];
+        if var.has_tp() {
+            keys.push("tpattn_chunk".to_string());
+            keys.push("tpffn_chunk".to_string());
         }
-        for key in keys {
-            self.mesh.compile_all(&key, self.art(&key)?)?;
+        if var.has_lp() {
+            keys.push("lpattn_chunk".to_string());
+            keys.push("lpffn_chunk".to_string());
+        }
+        keys
+    }
+
+    /// Every executable each variant can bind must exist in the manifest —
+    /// checked at build time so a broken manifest fails construction, not a
+    /// live decode round (compilation itself stays lazy).
+    fn validate_artifacts(&self) -> Result<()> {
+        for var in self.variants.values() {
+            for key in Self::decode_exec_keys(var, "") {
+                self.entry.artifact(&key)?;
+            }
+            for &t in &self.buckets {
+                for key in Self::prefill_exec_keys(var, t) {
+                    self.entry.artifact(&key)?;
+                }
+            }
+            if self.prefill_chunk.is_some() {
+                for key in Self::chunk_exec_keys(var) {
+                    self.entry.artifact(&key)?;
+                }
+            }
         }
         Ok(())
     }
 
+    /// Upload the single resident weight set, keyed by layer and sharding
+    /// form instead of by plan position: `l{i}.tp.{field}` holds each
+    /// rank's Megatron shard of layer i, `l{i}.full.{field}` the full-width
+    /// copy on the rank(s) whose Lp stages run the layer. Every variant's
+    /// stage walk references these shared buffers — no per-tier
+    /// duplication, which is the point of the registry.
     fn upload_weights(&self, w: &Weights) -> Result<()> {
         // rank 0 additionally owns embedding + head
         self.mesh.workers[0].store("emb", w.get("emb")?.host())?;
         self.mesh.workers[0].store("lnf", w.get("lnf")?.host())?;
         self.mesh.workers[0].store("wout", w.get("wout")?.host())?;
-        for (sidx, stage) in self.stages.iter().enumerate() {
-            match stage {
-                ServeStage::Tp(i) => {
-                    for (rank, worker) in self.mesh.workers.iter().enumerate() {
-                        let attn = w.attn_shard(*i, rank, self.ranks)?;
-                        for (t, field) in
-                            attn.iter().zip(["ln1", "wq", "wk", "wv", "wo"])
-                        {
-                            worker.store(&format!("s{sidx}.{field}"), t.host())?;
-                        }
-                        let ffn = w.ffn_shard(*i, rank, self.ranks)?;
-                        for (t, field) in ffn.iter().zip(["ln2", "wg", "wu", "wd"]) {
-                            worker.store(&format!("s{sidx}.{field}"), t.host())?;
-                        }
+        let mut tp_layers: BTreeSet<usize> = BTreeSet::new();
+        let mut full_needs: BTreeSet<(usize, usize)> = BTreeSet::new(); // (rank, layer)
+        for var in self.variants.values() {
+            for st in &var.stages {
+                match st {
+                    ServeStage::Tp(i) => {
+                        tp_layers.insert(*i);
                     }
-                }
-                ServeStage::Lp(a, b) => {
-                    // rank r owns the r-th layer of the pair, full width
-                    for (rank, layer) in [(0usize, *a), (1usize, *b)] {
-                        let worker = &self.mesh.workers[rank];
-                        let attn = w.attn_full(layer)?;
-                        for (t, field) in
-                            attn.iter().zip(["ln1", "wq", "wk", "wv", "wo"])
-                        {
-                            worker.store(&format!("s{sidx}.{field}"), t.host())?;
-                        }
-                        let ffn = w.ffn_full(layer)?;
-                        for (t, field) in ffn.iter().zip(["ln2", "wg", "wu", "wd"]) {
-                            worker.store(&format!("s{sidx}.{field}"), t.host())?;
-                        }
+                    ServeStage::Lp(a, b) => {
+                        full_needs.insert((0, *a));
+                        full_needs.insert((1, *b));
                     }
                 }
             }
         }
+        for &i in &tp_layers {
+            for (rank, worker) in self.mesh.workers.iter().enumerate() {
+                let attn = w.attn_shard(i, rank, self.ranks)?;
+                for (t, field) in attn.iter().zip(["ln1", "wq", "wk", "wv", "wo"]) {
+                    worker.store(&format!("l{i}.tp.{field}"), t.host())?;
+                }
+                let ffn = w.ffn_shard(i, rank, self.ranks)?;
+                for (t, field) in ffn.iter().zip(["ln2", "wg", "wu", "wd"]) {
+                    worker.store(&format!("l{i}.tp.{field}"), t.host())?;
+                }
+            }
+        }
+        for &(rank, layer) in &full_needs {
+            let worker = &self.mesh.workers[rank];
+            let attn = w.attn_full(layer)?;
+            for (t, field) in attn.iter().zip(["ln1", "wq", "wk", "wv", "wo"]) {
+                worker.store(&format!("l{layer}.full.{field}"), t.host())?;
+            }
+            let ffn = w.ffn_full(layer)?;
+            for (t, field) in ffn.iter().zip(["ln2", "wg", "wu", "wd"]) {
+                worker.store(&format!("l{layer}.full.{field}"), t.host())?;
+            }
+        }
         Ok(())
+    }
+
+    /// The resident-buffer names of one stage's weights on `rank`: a Tp
+    /// stage binds the rank's shard of its layer, an Lp stage the full
+    /// width of the rank's layer of the pair.
+    pub(crate) fn stage_weight_args(
+        stage: &ServeStage,
+        rank: usize,
+        fields: &[&str],
+    ) -> Vec<ArgRef> {
+        let (layer, form) = match stage {
+            ServeStage::Tp(i) => (*i, "tp"),
+            ServeStage::Lp(a, b) => (if rank == 0 { *a } else { *b }, "full"),
+        };
+        fields
+            .iter()
+            .map(|f| ArgRef::Resident(format!("l{layer}.{form}.{f}")))
+            .collect()
+    }
+
+    /// Resident KV-cache buffer name of one variant stage (`kv` ∈ {k, v}).
+    pub(crate) fn cache_name(vid: &VariantId, kv: &str, sidx: usize) -> String {
+        format!("kv.{vid}.{kv}.{sidx}")
     }
 
     fn cache_width(&self, stage: &ServeStage) -> usize {
@@ -308,34 +624,29 @@ impl ServingModel {
 
     fn init_caches(&self) -> Result<()> {
         let cfg = &self.entry.config;
-        for (sidx, stage) in self.stages.iter().enumerate() {
-            let w = self.cache_width(stage);
-            let zeros = HostValue::f32(
-                vec![cfg.slots, cfg.ctx, w],
-                vec![0.0; cfg.slots * cfg.ctx * w],
-            );
-            for worker in &self.mesh.workers {
-                worker.store(&format!("kv.k.{sidx}"), zeros.clone())?;
-                worker.store(&format!("kv.v.{sidx}"), zeros.clone())?;
+        for var in self.variants.values() {
+            for (sidx, stage) in var.stages.iter().enumerate() {
+                let w = self.cache_width(stage);
+                let zeros = HostValue::f32(
+                    vec![cfg.slots, cfg.ctx, w],
+                    vec![0.0; cfg.slots * cfg.ctx * w],
+                );
+                for worker in &self.mesh.workers {
+                    worker.store(&Self::cache_name(&var.id, "k", sidx), zeros.clone())?;
+                    worker.store(&Self::cache_name(&var.id, "v", sidx), zeros.clone())?;
+                }
             }
         }
         Ok(())
     }
 
-    /// Effective depth of the serving plan (stages count).
-    pub fn effective_depth(&self) -> usize {
-        self.stages.len()
-    }
-
-    /// All-reduce operations per decode token: 2 per stage.
-    pub fn all_reduces_per_token(&self) -> usize {
-        self.stages.len() * 2
-    }
+    // ---- admission ---------------------------------------------------------
 
     /// Longest admissible prompt: bounded by the KV context (one position
     /// must stay free for decode) and — on the monolithic fixed-`T` path —
     /// by the largest compiled seq bucket. The chunked streaming path has
     /// no bucket bound: any prompt that fits the cache is admissible.
+    /// Tier-independent: every variant shares ctx and the prefill path.
     pub fn max_prompt_len(&self) -> usize {
         let ctx_cap = self.entry.config.ctx.saturating_sub(1);
         match self.prefill_chunk {
@@ -350,8 +661,8 @@ impl ServingModel {
     /// (`SlotManager::alloc` validated against ctx while `prefill`
     /// validated against the largest seq bucket), so an over-long prompt
     /// was admitted, allocated a slot, and only then errored; the scheduler
-    /// now calls this before dequeueing a request into a slot and returns
-    /// one clear rejection.
+    /// now calls this (after [`ServingModel::resolve_tier`]) before
+    /// dequeueing a request into a slot and returns one clear rejection.
     pub fn check_admission(&self, prompt_len: usize, max_new: usize) -> Result<()> {
         let ctx = self.entry.config.ctx;
         if prompt_len == 0 {
@@ -379,17 +690,18 @@ impl ServingModel {
         Ok(())
     }
 
-    pub(crate) fn weight_args(sidx: usize, fields: &[&str]) -> Vec<ArgRef> {
-        fields
-            .iter()
-            .map(|f| ArgRef::Resident(format!("s{sidx}.{f}")))
-            .collect()
+    // ---- prefill (monolithic fixed-T path) ---------------------------------
+
+    /// Monolithic fixed-`T` prefill into the default tier's caches (see
+    /// [`ServingModel::prefill_v`]).
+    pub fn prefill(&self, slot: usize, tokens: &[i32]) -> Result<Vec<f32>> {
+        self.prefill_v(&self.default_id, slot, tokens)
     }
 
-    /// Monolithic fixed-`T` prefill of `tokens` into `slot`: the whole
-    /// prompt is padded to the smallest covering seq bucket and runs in one
-    /// pass. Returns the logits row for the last real token ([V]) — the
-    /// distribution of the first generated token.
+    /// Monolithic fixed-`T` prefill of `tokens` into `slot` under tier
+    /// `vid`: the whole prompt is padded to the smallest covering seq
+    /// bucket and runs in one pass. Returns the logits row for the last
+    /// real token ([V]) — the distribution of the first generated token.
     ///
     /// This is the bit-exactness oracle for (and the legacy-manifest
     /// fallback of) the chunked streaming path in [`crate::model::prefill`];
@@ -399,7 +711,8 @@ impl ServingModel {
     /// Resident protocol: token ids and the slot index are the only
     /// host→device uploads; the logits row is the only device→host fetch
     /// besides the embed shadow. Stages chain the resident `act` buffer.
-    pub fn prefill(&self, slot: usize, tokens: &[i32]) -> Result<Vec<f32>> {
+    pub fn prefill_v(&self, vid: &VariantId, slot: usize, tokens: &[i32]) -> Result<Vec<f32>> {
+        let var = self.variant(vid)?;
         let cfg = &self.entry.config;
         if tokens.is_empty() {
             // guards the `tokens.len() - 1` logits-row read below — an
@@ -408,13 +721,14 @@ impl ServingModel {
         }
         let t = crate::text::tokenizer::bucket_for(tokens.len(), &self.buckets)
             .ok_or_else(|| Error::Serving(format!("prompt too long: {}", tokens.len())))?;
+        self.ensure_execs(&Self::prefill_exec_keys(var, t))?;
         let padded = crate::text::tokenizer::pad_to(tokens, t)?;
         let d = cfg.d_model;
         // modelled device compute: T padded tokens + the [T, V] logits
         // head, priced on the roofline with the matching memory traffic
         self.mesh.charge_compute(
-            crate::runtime::buckets::prefill_flops(cfg, self.layers_equiv, 0, t, t),
-            crate::runtime::buckets::prefill_bytes(cfg, self.layers_equiv, 0, t, t),
+            crate::runtime::buckets::prefill_flops(cfg, var.layers_equiv, 0, t, t),
+            crate::runtime::buckets::prefill_bytes(cfg, var.layers_equiv, 0, t, t),
         );
 
         // slot index is fresh host data, referenced by every cache insert
@@ -438,7 +752,7 @@ impl ServingModel {
         self.mesh
             .broadcast_resident("act", &HostValue::f32(vec![t, d], shadow.clone()))?;
 
-        for (sidx, stage) in self.stages.iter().enumerate() {
+        for (sidx, stage) in var.stages.iter().enumerate() {
             let (attn_key, ffn_key, insert_key) = match stage {
                 ServeStage::Tp(_) => (
                     format!("tpattn_prefill_t{t}"),
@@ -453,9 +767,13 @@ impl ServingModel {
             };
             // --- attention partials (device-resident) + KV stripes
             let calls = (0..self.ranks)
-                .map(|_| {
+                .map(|rank| {
                     let mut args = vec![ArgRef::Resident("act".into())];
-                    args.extend(Self::weight_args(sidx, &["ln1", "wq", "wk", "wv", "wo"]));
+                    args.extend(Self::stage_weight_args(
+                        stage,
+                        rank,
+                        &["ln1", "wq", "wk", "wv", "wo"],
+                    ));
                     (
                         attn_key.clone(),
                         args,
@@ -472,17 +790,18 @@ impl ServingModel {
             self.mesh.reduce_into("act.partial", &mut shadow, "act")?;
 
             // --- insert KV stripes into the slot (both ranks, k then v)
-            for (stripe, cache) in [("tmp.k", "kv.k"), ("tmp.v", "kv.v")] {
+            for (stripe, kv) in [("tmp.k", "k"), ("tmp.v", "v")] {
+                let cache = Self::cache_name(vid, kv, sidx);
                 let calls = (0..self.ranks)
                     .map(|_| {
                         (
                             insert_key.clone(),
                             vec![
-                                ArgRef::Resident(format!("{cache}.{sidx}")),
+                                ArgRef::Resident(cache.clone()),
                                 ArgRef::Resident(stripe.to_string()),
                                 ArgRef::Resident("slot".into()),
                             ],
-                            vec![Some(format!("{cache}.{sidx}"))],
+                            vec![Some(cache.clone())],
                             vec![false],
                         )
                     })
@@ -492,9 +811,13 @@ impl ServingModel {
 
             // --- FFN partials (device-resident)
             let calls = (0..self.ranks)
-                .map(|_| {
+                .map(|rank| {
                     let mut args = vec![ArgRef::Resident("act".into())];
-                    args.extend(Self::weight_args(sidx, &["ln2", "wg", "wu", "wd"]));
+                    args.extend(Self::stage_weight_args(
+                        stage,
+                        rank,
+                        &["ln2", "wg", "wu", "wd"],
+                    ));
                     (ffn_key.clone(), args, vec![Some("act.partial".to_string())], vec![false])
                 })
                 .collect();
@@ -523,6 +846,8 @@ impl ServingModel {
         Ok(logits[last * v..(last + 1) * v].to_vec())
     }
 
+    // ---- decode ------------------------------------------------------------
+
     fn check_step_inputs(&self, tokens: &[i32], pos: &[i32]) -> Result<usize> {
         let s = self.entry.config.slots;
         if tokens.len() != s || pos.len() != s {
@@ -533,22 +858,37 @@ impl ServingModel {
         Ok(s)
     }
 
-    /// One decode step over all S device lanes (resident-activation path).
-    /// `tokens[s]` / `pos[s]` from the slot manager. Returns `[S, V]`
-    /// logits (row-major). Host↔device traffic is O(1) in the stage count:
-    /// token ids + positions in, logits out.
+    /// One decode step over all S device lanes of the default tier (see
+    /// [`ServingModel::decode_step_v`]).
     pub fn decode_step(&self, tokens: &[i32], pos: &[i32]) -> Result<Vec<f32>> {
+        self.decode_step_v(&self.default_id, tokens, pos)
+    }
+
+    /// One decode step over all S device lanes under tier `vid`
+    /// (resident-activation path). `tokens[s]` / `pos[s]` from the slot
+    /// manager. Returns `[S, V]` logits (row-major). Host↔device traffic
+    /// is O(1) in the stage count: token ids + positions in, logits out.
+    pub fn decode_step_v(
+        &self,
+        vid: &VariantId,
+        tokens: &[i32],
+        pos: &[i32],
+    ) -> Result<Vec<f32>> {
+        let var = self.variant(vid)?;
         let s = self.check_step_inputs(tokens, pos)?;
-        self.decode_step_shaped(s, "", tokens, pos, None)
+        self.decode_step_shaped(var, s, "", tokens, pos, None)
     }
 
     /// The resident-activation decode body shared by the fixed-`[S]` path
     /// (`suffix = ""`) and the bucketed path (`suffix = "_b{B}"`, `lanes`
     /// present): embed on rank 0 → per stage, attention + FFN partials
     /// reduced into the `act` shadow → logits on rank 0. One body keeps the
-    /// two paths in lockstep — the bit-exactness contract between them.
+    /// two paths in lockstep — the bit-exactness contract between them —
+    /// and serves every variant (the stage walk, cache names and cost
+    /// charges are the variant's own).
     fn decode_step_shaped(
         &self,
+        var: &PlanVariant,
         shape: usize,
         suffix: &str,
         tokens: &[i32],
@@ -556,9 +896,10 @@ impl ServingModel {
         lanes: Option<&[i32]>,
     ) -> Result<Vec<f32>> {
         let d = self.entry.config.d_model;
+        self.ensure_execs(&Self::decode_exec_keys(var, suffix))?;
         self.mesh.charge_compute(
-            shape as u64 * self.flops_per_lane,
-            decode_bytes(&self.entry.config, self.layers_equiv, shape),
+            shape as u64 * var.flops_per_lane,
+            decode_bytes(&self.entry.config, var.layers_equiv, shape),
         );
 
         // positions (and the bucketed path's lane→slot mapping) are fresh
@@ -586,19 +927,25 @@ impl ServingModel {
         self.mesh
             .broadcast_resident("act", &HostValue::f32(vec![shape, d], shadow.clone()))?;
 
-        for (sidx, stage) in self.stages.iter().enumerate() {
+        for (sidx, stage) in var.stages.iter().enumerate() {
             let (attn_base, ffn_base) = match stage {
                 ServeStage::Tp(_) => ("tpattn_decode", "tpffn_decode"),
                 ServeStage::Lp(..) => ("lpattn_decode", "lpffn_decode"),
             };
             let attn_key = format!("{attn_base}{suffix}");
             let ffn_key = format!("{ffn_base}{suffix}");
+            let kname = Self::cache_name(&var.id, "k", sidx);
+            let vname = Self::cache_name(&var.id, "v", sidx);
             let calls = (0..self.ranks)
-                .map(|_| {
+                .map(|rank| {
                     let mut args = vec![ArgRef::Resident("act".into())];
-                    args.extend(Self::weight_args(sidx, &["ln1", "wq", "wk", "wv", "wo"]));
-                    args.push(ArgRef::Resident(format!("kv.k.{sidx}")));
-                    args.push(ArgRef::Resident(format!("kv.v.{sidx}")));
+                    args.extend(Self::stage_weight_args(
+                        stage,
+                        rank,
+                        &["ln1", "wq", "wk", "wv", "wo"],
+                    ));
+                    args.push(ArgRef::Resident(kname.clone()));
+                    args.push(ArgRef::Resident(vname.clone()));
                     args.push(ArgRef::Resident("pos".into()));
                     if lanes.is_some() {
                         args.push(ArgRef::Resident("lanes".into()));
@@ -608,8 +955,8 @@ impl ServingModel {
                         args,
                         vec![
                             Some("act.partial".to_string()),
-                            Some(format!("kv.k.{sidx}")),
-                            Some(format!("kv.v.{sidx}")),
+                            Some(kname.clone()),
+                            Some(vname.clone()),
                         ],
                         vec![false, false, false],
                     )
@@ -619,9 +966,13 @@ impl ServingModel {
             self.mesh.reduce_into("act.partial", &mut shadow, "act")?;
 
             let calls = (0..self.ranks)
-                .map(|_| {
+                .map(|rank| {
                     let mut args = vec![ArgRef::Resident("act".into())];
-                    args.extend(Self::weight_args(sidx, &["ln2", "wg", "wu", "wd"]));
+                    args.extend(Self::stage_weight_args(
+                        stage,
+                        rank,
+                        &["ln2", "wg", "wu", "wd"],
+                    ));
                     (
                         ffn_key.clone(),
                         args,
@@ -651,18 +1002,29 @@ impl ServingModel {
             .into_f32()
     }
 
-    /// One decode step over a *compacted* batch of active slots, dispatched
-    /// at bucket granularity: the smallest batch bucket B covering the live
-    /// count is selected from [`ServingModel::bucket_set`] and the
-    /// per-bucket executables run B compute lanes against the full-`[S]`
-    /// resident KV caches (lane i gathers/scatters slot `lanes[i]`'s row).
-    /// Device compute, all-reduce payload and the `[B, V]` logits download
-    /// are occupancy-proportional; rounds with no covering bucket fall back
-    /// to the fixed-`[S]` [`ServingModel::decode_step`]. Both paths produce
-    /// bit-identical rows (same per-lane HLO on the AOT side).
+    /// [`ServingModel::decode_active_v`] on the default tier.
+    pub fn decode_active(&self, active: &[ActiveSlot]) -> Result<Vec<(usize, Vec<f32>)>> {
+        self.decode_active_v(&self.default_id, active)
+    }
+
+    /// One decode step over a *compacted* batch of active slots of tier
+    /// `vid`, dispatched at bucket granularity: the smallest batch bucket B
+    /// covering the live count is selected from the variant's
+    /// [`BucketSet`] and the per-bucket executables run B compute lanes
+    /// against the tier's full-`[S]` resident KV caches (lane i
+    /// gathers/scatters slot `lanes[i]`'s row). Device compute, all-reduce
+    /// payload and the `[B, V]` logits download are occupancy-proportional;
+    /// rounds with no covering bucket fall back to the fixed-`[S]`
+    /// [`ServingModel::decode_step_v`]. Both paths produce bit-identical
+    /// rows (same per-lane HLO on the AOT side).
     ///
     /// Returns one `(slot, logits_row)` per input, in input order.
-    pub fn decode_active(&self, active: &[ActiveSlot]) -> Result<Vec<(usize, Vec<f32>)>> {
+    pub fn decode_active_v(
+        &self,
+        vid: &VariantId,
+        active: &[ActiveSlot],
+    ) -> Result<Vec<(usize, Vec<f32>)>> {
+        let var = self.variant(vid)?;
         let cfg = &self.entry.config;
         let s = cfg.slots;
         let v = cfg.vocab;
@@ -671,7 +1033,7 @@ impl ServingModel {
                 return Err(Error::Serving(format!("decode_active: slot {slot} >= {s}")));
             }
         }
-        match self.bucket_set.select(active.len()) {
+        match var.bucket_set.select(active.len()) {
             BucketChoice::Skip => Ok(vec![]),
             BucketChoice::Full => {
                 // Fixed-[S] executables: inactive lanes padded with benign
@@ -682,15 +1044,14 @@ impl ServingModel {
                     tokens[slot] = tok;
                     pos[slot] = p;
                 }
-                let logits = self.decode_step(&tokens, &pos)?;
-                self.bucket_set.record(s, active.len());
+                let logits = self.decode_step_shaped(var, s, "", &tokens, &pos, None)?;
+                var.bucket_set.record(s, active.len());
                 Ok(active
                     .iter()
                     .map(|&(slot, _, _)| (slot, logits[slot * v..(slot + 1) * v].to_vec()))
                     .collect())
             }
             BucketChoice::Bucket(b) => {
-                self.ensure_bucket_compiled(b)?;
                 let mut tokens = Vec::with_capacity(b);
                 let mut pos = Vec::with_capacity(b);
                 let mut lanes = Vec::with_capacity(b);
@@ -710,8 +1071,15 @@ impl ServingModel {
                     tokens.push(tok0);
                     pos.push(pos0);
                 }
-                let logits = self.decode_step_bucket(b, &tokens, &pos, &lanes)?;
-                self.bucket_set.record(b, active.len());
+                let logits = self.decode_step_shaped(
+                    var,
+                    b,
+                    &format!("_b{b}"),
+                    &tokens,
+                    &pos,
+                    Some(&lanes),
+                )?;
+                var.bucket_set.record(b, active.len());
                 Ok(active
                     .iter()
                     .enumerate()
@@ -721,51 +1089,23 @@ impl ServingModel {
         }
     }
 
-    /// Compile one bucket's executables on every rank, once (the
-    /// [`BucketSet`]'s per-bucket cache makes later rounds free).
-    fn ensure_bucket_compiled(&self, b: usize) -> Result<()> {
-        self.bucket_set.ensure_compiled(b, || {
-            for key in BucketSet::artifact_keys(b) {
-                self.mesh.compile_all(&key, self.art(&key)?)?;
-            }
-            Ok(())
-        })
-    }
-
-    /// One decode step over B bucket lanes (resident-activation protocol,
-    /// same body as [`ServingModel::decode_step`] via
-    /// [`ServingModel::decode_step_shaped`]). `lanes[i]` names the KV slot
-    /// lane i serves; `tokens`/`pos` are lane-ordered. Returns `[B, V]`
-    /// logits (row-major, lane-ordered).
-    fn decode_step_bucket(
-        &self,
-        b: usize,
-        tokens: &[i32],
-        pos: &[i32],
-        lanes: &[i32],
-    ) -> Result<Vec<f32>> {
-        if tokens.len() != b || pos.len() != b || lanes.len() != b {
-            return Err(Error::Serving(format!(
-                "decode_step_bucket wants {b} lane tokens/positions/lanes"
-            )));
-        }
-        self.decode_step_shaped(b, &format!("_b{b}"), tokens, pos, Some(lanes))
-    }
-
-    /// Pre-refactor decode step: uploads the activation to every rank as a
-    /// fresh host value at each stage and pulls the partials back for a
-    /// host-side sum — 2 host↔device round-trips per rank per stage.
+    /// Pre-refactor decode step over the default tier: uploads the
+    /// activation to every rank as a fresh host value at each stage and
+    /// pulls the partials back for a host-side sum — 2 host↔device
+    /// round-trips per rank per stage.
     ///
     /// Kept as the bit-exactness oracle for [`ServingModel::decode_step`]
     /// (same executables, same reduction order ⇒ identical floats) and as
     /// the baseline `bench_decode` compares host-transfer counts against.
     pub fn decode_step_host_reference(&self, tokens: &[i32], pos: &[i32]) -> Result<Vec<f32>> {
+        let var = self.default_variant();
         let cfg = &self.entry.config;
         let s = self.check_step_inputs(tokens, pos)?;
         let d = cfg.d_model;
+        self.ensure_execs(&Self::decode_exec_keys(var, ""))?;
         self.mesh.charge_compute(
-            s as u64 * self.flops_per_lane,
-            decode_bytes(cfg, self.layers_equiv, s),
+            s as u64 * var.flops_per_lane,
+            decode_bytes(cfg, var.layers_equiv, s),
         );
         let mut x = self
             .mesh
@@ -782,27 +1122,29 @@ impl ServingModel {
             .remove(0)
             .into_f32()?;
 
-        for (sidx, stage) in self.stages.iter().enumerate() {
+        for (sidx, stage) in var.stages.iter().enumerate() {
             let (attn_key, ffn_key) = match stage {
                 ServeStage::Tp(_) => ("tpattn_decode", "tpffn_decode"),
                 ServeStage::Lp(..) => ("lpattn_decode", "lpffn_decode"),
             };
+            let kname = Self::cache_name(&var.id, "k", sidx);
+            let vname = Self::cache_name(&var.id, "v", sidx);
             let calls = (0..self.ranks)
-                .map(|_| {
+                .map(|rank| {
                     let mut args =
                         vec![ArgRef::Host(HostValue::f32(vec![s, d], x.clone()))];
-                    args.extend(Self::weight_args(sidx, &["ln1", "wq", "wk", "wv", "wo"]));
-                    args.push(ArgRef::Resident(format!("kv.k.{sidx}")));
-                    args.push(ArgRef::Resident(format!("kv.v.{sidx}")));
+                    args.extend(Self::stage_weight_args(
+                        stage,
+                        rank,
+                        &["ln1", "wq", "wk", "wv", "wo"],
+                    ));
+                    args.push(ArgRef::Resident(kname.clone()));
+                    args.push(ArgRef::Resident(vname.clone()));
                     args.push(ArgRef::Host(HostValue::i32(vec![s], pos.to_vec())));
                     (
                         attn_key.to_string(),
                         args,
-                        vec![
-                            None,
-                            Some(format!("kv.k.{sidx}")),
-                            Some(format!("kv.v.{sidx}")),
-                        ],
+                        vec![None, Some(kname.clone()), Some(vname.clone())],
                         vec![true, false, false],
                     )
                 })
@@ -813,10 +1155,14 @@ impl ServingModel {
             add_slices(&mut x, reduced.as_f32()?);
 
             let calls = (0..self.ranks)
-                .map(|_| {
+                .map(|rank| {
                     let mut args =
                         vec![ArgRef::Host(HostValue::f32(vec![s, d], x.clone()))];
-                    args.extend(Self::weight_args(sidx, &["ln2", "wg", "wu", "wd"]));
+                    args.extend(Self::stage_weight_args(
+                        stage,
+                        rank,
+                        &["ln2", "wg", "wu", "wd"],
+                    ));
                     (ffn_key.to_string(), args, vec![], vec![true])
                 })
                 .collect();
@@ -914,11 +1260,13 @@ mod tests {
             let s = m.entry.config.slots;
             let prompt: Vec<i32> = "warm".bytes().map(|b| b as i32).collect();
             m.prefill(0, &prompt).unwrap();
-            m.mesh.metrics.reset();
+            // warm once so lazy compiles are done before metering
             let mut tokens = vec![0i32; s];
             let mut pos = vec![0i32; s];
             tokens[0] = 65;
             pos[0] = prompt.len() as i32;
+            m.decode_step(&tokens, &pos).unwrap();
+            m.mesh.metrics.reset();
             m.decode_step(&tokens, &pos).unwrap();
             let h = m.mesh.metrics.host_transfers();
             // tokens upload + pos upload per rank; embed shadow + logits out
@@ -937,7 +1285,7 @@ mod tests {
     fn bucketed_decode_bit_identical_and_occupancy_proportional() {
         let Some(m) = build(|n| transform::pair_parallel(n, 4, 10, true)) else { return };
         let cfg = m.entry.config.clone();
-        if m.bucket_set.buckets().is_empty() {
+        if m.bucket_set().buckets().is_empty() {
             return; // legacy artifacts without batch buckets
         }
         let (s, v, d) = (cfg.slots, cfg.vocab, cfg.d_model);
@@ -981,7 +1329,7 @@ mod tests {
         // all-reduce accounting is unchanged: 2 per stage
         assert_eq!(bucket_sync as usize, m.all_reduces_per_token());
 
-        let stats = m.bucket_set.stats();
+        let stats = m.bucket_set().stats();
         assert_eq!(
             stats,
             vec![(
@@ -998,7 +1346,7 @@ mod tests {
     fn bucketed_decode_pad_lane_is_benign() {
         let Some(m) = build(|n| transform::pair_parallel(n, 2, 10, true)) else { return };
         let cfg = m.entry.config.clone();
-        if m.bucket_set.buckets().is_empty() {
+        if m.bucket_set().buckets().is_empty() {
             return;
         }
         let (s, v) = (cfg.slots, cfg.vocab);
@@ -1023,7 +1371,7 @@ mod tests {
             assert_eq!(row, &full[slot * v..(slot + 1) * v], "slot {slot} diverged");
         }
         assert_eq!(
-            m.bucket_set.stats(),
+            m.bucket_set().stats(),
             vec![(
                 4,
                 crate::runtime::BucketStats { rounds: 1, live_lanes: 3, padded_lanes: 1 }
@@ -1084,5 +1432,135 @@ mod tests {
 
         assert!(m.decode_active(&[(cfg.slots, 1, 0)]).is_err(), "slot bounds checked");
         assert!(m.decode_active(&[]).unwrap().is_empty());
+    }
+
+    // ---- plan-variant registry ---------------------------------------------
+
+    /// Unknown tiers are rejected with the list of served tiers — the
+    /// admission-time half of the registry contract.
+    #[test]
+    fn unknown_tier_is_rejected_with_available_list() {
+        let Some(m) = build(transform::sequential) else { return };
+        assert_eq!(m.resolve_tier(None).unwrap(), VariantId::new("plan"));
+        let err = m.resolve_tier(Some("turbo")).unwrap_err().to_string();
+        assert!(err.contains("turbo") && err.contains("plan"), "{err}");
+        assert!(m.decode_active_v(&VariantId::new("turbo"), &[]).is_err());
+        assert!(m.prefill_v(&VariantId::new("turbo"), 0, &[1]).is_err());
+    }
+
+    /// The tentpole acceptance criterion, model half: every manifest tier
+    /// served by one multi-variant build produces logits bit-identical to
+    /// a dedicated single-plan build of the same graph — prefill AND the
+    /// decode continuation.
+    #[test]
+    fn tiers_bit_identical_to_dedicated_single_plan_builds() {
+        let Ok(manifest) = Manifest::load_default() else { return };
+        let entry = manifest.model("td-small").unwrap().clone();
+        let cfg = entry.config.clone();
+        let weights = Weights::random(&cfg, 7);
+        let Ok(multi) = ServingModel::from_manifest(&manifest, "td-small", &weights, quiet())
+        else {
+            return;
+        };
+        if multi.variant_ids().len() < 3 {
+            return; // legacy artifacts without the variants section
+        }
+        assert_eq!(multi.default_tier(), &VariantId::dense());
+        let prompt: Vec<i32> = "the red fox".bytes().map(|b| b as i32).collect();
+        for vid in multi.variant_ids() {
+            let spec = entry.variants.get(&vid).unwrap();
+            let plan = GraphPlan::from_stage_lists(cfg.n_layers, &spec.stages).unwrap();
+            let solo =
+                ServingModel::new(&manifest, "td-small", &weights, &plan, quiet()).unwrap();
+            let a = multi.prefill_v(&vid, 0, &prompt).unwrap();
+            let b = solo.prefill(0, &prompt).unwrap();
+            assert_eq!(a, b, "tier {vid}: prefill logits diverged from dedicated build");
+            let next = crate::tensor::argmax(&a) as i32;
+            let ra =
+                multi.decode_active_v(&vid, &[(0, next, prompt.len() as i32)]).unwrap();
+            let rb = solo.decode_active(&[(0, next, prompt.len() as i32)]).unwrap();
+            assert_eq!(ra[0].1, rb[0].1, "tier {vid}: decode row diverged");
+            assert_eq!(
+                multi.variant(&vid).unwrap().effective_depth(),
+                solo.effective_depth()
+            );
+        }
+    }
+
+    /// The speed half of the tradeoff: per-variant cost charging must
+    /// strictly order the tiers' modelled round time by effective depth
+    /// (dense > lp > lp_aggr), i.e. modelled tokens/sec the other way.
+    #[test]
+    fn modelled_tier_round_cost_orders_by_depth() {
+        let Ok(manifest) = Manifest::load_default() else { return };
+        let cfg = manifest.model("td-small").unwrap().config.clone();
+        let weights = Weights::random(&cfg, 11);
+        // small but live α so the sync term differentiates tiers without
+        // slowing the test down (block_for sleeps for real)
+        let net = InterconnectConfig { alpha_s: 30e-6, beta_bytes_per_s: 25e9, enabled: true };
+        let Ok(multi) = ServingModel::from_manifest(&manifest, "td-small", &weights, net)
+        else {
+            return;
+        };
+        if multi.variant_ids().len() < 3 {
+            return;
+        }
+        let s = cfg.slots;
+        let prompt: Vec<i32> = (0..16).map(|i| 97 + (i % 26)).collect();
+        let mut costs: Vec<(usize, u64)> = Vec::new(); // (depth, modelled ns/round)
+        for vid in multi.variant_ids() {
+            for slot in 0..s {
+                multi.prefill_v(&vid, slot, &prompt).unwrap();
+            }
+            let active: Vec<ActiveSlot> =
+                (0..s).map(|slot| (slot, 65i32, prompt.len() as i32)).collect();
+            multi.decode_active_v(&vid, &active).unwrap(); // warm (lazy compile)
+            multi.mesh.metrics.reset();
+            multi.decode_active_v(&vid, &active).unwrap();
+            let var = multi.variant(&vid).unwrap();
+            assert_eq!(
+                m_sync_ops(&multi) as usize,
+                var.all_reduces_per_token(),
+                "tier {vid}: sync count must reflect ITS stage walk"
+            );
+            costs.push((var.effective_depth(), multi.mesh.metrics.modelled_total_ns()));
+        }
+        // VariantId order is dense, lp, lp_aggr — strictly shallower
+        assert!(costs[0].0 > costs[1].0 && costs[1].0 > costs[2].0, "{costs:?}");
+        assert!(
+            costs[0].1 > costs[1].1 && costs[1].1 > costs[2].1,
+            "modelled round cost must strictly order the tiers: {costs:?}"
+        );
+    }
+
+    fn m_sync_ops(m: &ServingModel) -> u64 {
+        let (sync_ops, _, _, _) = m.mesh.metrics.snapshot();
+        sync_ops
+    }
+
+    /// Satellite: the exec-cache cap evicts LRU executables and the next
+    /// round transparently recompiles them — same bits, eviction metric
+    /// visible.
+    #[test]
+    fn exec_cache_cap_evicts_and_recompiles_transparently() {
+        let Some(m) = build(|n| transform::pair_parallel(n, 4, 10, true)) else { return };
+        if m.bucket_set().buckets().len() < 2 {
+            return;
+        }
+        let prompt: Vec<i32> = "abcd".bytes().map(|b| b as i32).collect();
+        m.prefill(0, &prompt).unwrap();
+        m.prefill(1, &prompt).unwrap();
+        let l = prompt.len() as i32;
+        let r1 = m.decode_active(&[(0, 65, l)]).unwrap(); // compiles the B=1 set
+        m.set_exec_cache_cap(Some(4));
+        m.decode_active(&[(0, 65, l), (1, 66, l)]).unwrap(); // B=2 set evicts
+        let st = m.exec_cache().stats();
+        assert!(st.evictions > 0, "cap must evict: {st:?}");
+        assert!(st.cached <= 6, "only the working set may survive a tiny cap: {st:?}");
+        let r2 = m.decode_active(&[(0, 65, l)]).unwrap(); // recompiles B=1
+        assert_eq!(r1, r2, "eviction must not change a single bit");
+        let st2 = m.exec_cache().stats();
+        assert!(st2.compiles > st.compiles, "evicted keys must recompile on reuse");
+        assert!(st2.evictions > st.evictions, "the B=1 re-ensure evicts B=2 keys");
     }
 }

@@ -263,6 +263,14 @@ impl Mesh {
         Ok(())
     }
 
+    /// Drop a compiled executable on every rank (the exec-cache eviction
+    /// path — see `runtime::buckets::ExecCache`).
+    pub fn release_all(&self, key: &str) {
+        for w in &self.workers {
+            w.release(key);
+        }
+    }
+
     /// Run one call per rank concurrently; returns per-rank outputs.
     /// `calls[r]` = (executable key, args, persist, fetch) for rank r.
     #[allow(clippy::type_complexity)]

@@ -35,6 +35,9 @@ pub enum Cmd {
     Fetch { name: String, reply: Sender<std::result::Result<HostValue, String>> },
     /// Drop a named resident buffer.
     Evict { name: String },
+    /// Drop a compiled executable (the exec-cache LRU eviction path; a
+    /// later `Compile` of the same key re-registers it).
+    Release { key: String },
     /// Pre-compile an executable.
     Compile { key: String, path: PathBuf, done: Sender<std::result::Result<(), String>> },
     /// Execute `key` with args; optionally persist outputs under names
@@ -114,6 +117,12 @@ impl WorkerHandle {
         let _ = self.tx.send(Cmd::Evict { name: name.to_string() });
     }
 
+    /// Drop a compiled executable (fire-and-forget; the per-worker channel
+    /// keeps it ordered before any later `compile` of the same key).
+    pub fn release(&self, key: &str) {
+        let _ = self.tx.send(Cmd::Release { key: key.to_string() });
+    }
+
     pub fn compile(&self, key: &str, path: PathBuf) -> Result<()> {
         let (dtx, drx) = channel();
         self.tx
@@ -173,7 +182,7 @@ fn worker_main(rx: Receiver<Cmd>) {
                     Cmd::Fetch { reply, .. } => {
                         let _ = reply.send(Err(format!("engine boot failed: {e}")));
                     }
-                    Cmd::Evict { .. } => {}
+                    Cmd::Evict { .. } | Cmd::Release { .. } => {}
                     Cmd::Shutdown => return,
                 }
             }
@@ -207,6 +216,9 @@ fn worker_main(rx: Receiver<Cmd>) {
             }
             Cmd::Evict { name } => {
                 resident.remove(&name);
+            }
+            Cmd::Release { key } => {
+                exes.remove(&key);
             }
             Cmd::Compile { key, path, done } => {
                 let r = engine
@@ -328,6 +340,28 @@ mod tests {
             .unwrap();
         assert_eq!(outs[0].shape(), &[32, cfg.d_model]);
         assert_eq!(outs[0].as_f32().unwrap()[..cfg.d_model], emb[..cfg.d_model]);
+    }
+
+    #[test]
+    fn release_drops_executable_until_recompiled() {
+        let Some(m) = manifest() else { return };
+        let entry = m.model("td-small").unwrap();
+        let cfg = entry.config.clone();
+        let art = entry.artifact("embed_t32").unwrap();
+        let w = WorkerHandle::spawn(0);
+        w.compile("embed", art.file.clone()).unwrap();
+        w.store(
+            "emb",
+            HostValue::f32(vec![cfg.vocab, cfg.d_model], vec![0.0; cfg.vocab * cfg.d_model]),
+        )
+        .unwrap();
+        let ids = || HostValue::i32(vec![32], (0..32).collect());
+        let args = || vec![ArgRef::Host(ids()), ArgRef::Resident("emb".into())];
+        assert!(w.exec("embed", args()).is_ok());
+        w.release("embed");
+        assert!(w.exec("embed", args()).is_err(), "released executable must be gone");
+        w.compile("embed", art.file.clone()).unwrap();
+        assert!(w.exec("embed", args()).is_ok(), "recompile must restore it");
     }
 
     #[test]

@@ -12,6 +12,10 @@
 //!       "config": { vocab, d_model, n_layers, ... , slots },
 //!       "batch_buckets": [1, 2, 4],         // decode B buckets (per model,
 //!                                           // derived from `slots`)
+//!       "variants": {                       // plan-variant registry
+//!           "dense":   { "stages": [[0], [1], ...] },
+//!           "lp":      { "stages": [[0], [1], [2, 3], ...] },
+//!           "lp_aggr": { "stages": [[0, 1], [2, 3], ...] } },
 //!       "artifacts": { "<key>": { "file": "...", "args": [
 //!           { "name": "...", "dtype": "...", "shape": [...] }, ... ] } } } } }
 //! ```
@@ -35,6 +39,24 @@
 //! section is optional: legacy manifests parse with `None` and
 //! `model::prefill` then routes every prompt through the monolithic
 //! fixed-`T` path in a single step.
+//!
+//! ## Plan-variant registry (`variants`)
+//!
+//! `variants` (added with the per-request depth-tier redesign) names the
+//! serving tiers one weight set supports. Each [`VariantSpec`] is a stage
+//! list: `[i]` executes original layer `i` TP-sharded across the mesh
+//! (`{tp}attn/ffn` executable family), `[a, b]` executes the pair as one
+//! Layer-Parallelism stage (rank 0 runs layer `a`, rank 1 layer `b`, full
+//! width — `{lp}` family). Variants add **no executables**: every stage,
+//! embed, logits, chunk and bucket executable above is plan-agnostic
+//! (weights arrive as arguments), so all tiers share the compiled pool and
+//! the section only records which stages each tier walks.
+//! `model::serving::ServingModel::from_manifest` builds every listed
+//! variant over one resident weight set and serves them concurrently,
+//! keyed by [`VariantId`] (the tier name a `RequestOptions::tier`
+//! selects). The section is optional: legacy manifests parse with a single
+//! synthesized `dense` variant (the sequential plan over `n_layers`), so
+//! the registry degrades to exactly the pre-redesign single-plan serving.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -97,12 +119,73 @@ pub struct ArtifactInfo {
     pub args: Vec<(String, String, Vec<usize>)>,
 }
 
+/// Identifier of a plan variant — the key of the manifest `variants`
+/// section and the serving-tier name a request selects
+/// (`coordinator::request::RequestOptions::tier`).
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct VariantId(String);
+
+impl VariantId {
+    pub fn new(name: impl Into<String>) -> VariantId {
+        VariantId(name.into())
+    }
+
+    /// The baseline full-depth tier every multi-variant manifest carries
+    /// (and the tier legacy manifests synthesize).
+    pub fn dense() -> VariantId {
+        VariantId("dense".into())
+    }
+
+    pub fn as_str(&self) -> &str {
+        &self.0
+    }
+}
+
+impl std::fmt::Display for VariantId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.pad(&self.0)
+    }
+}
+
+impl From<&str> for VariantId {
+    fn from(s: &str) -> VariantId {
+        VariantId(s.to_string())
+    }
+}
+
+/// One named plan variant: the stage walk a serving tier executes (see the
+/// module docs for the `[i]` / `[a, b]` encoding). Converted to a
+/// `model::plan::GraphPlan` via `GraphPlan::from_stage_lists`, which also
+/// validates layer reuse/range.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct VariantSpec {
+    pub id: VariantId,
+    /// One entry per effective layer: 1 index = TP-sharded stage, 2 = LP
+    /// pair.
+    pub stages: Vec<Vec<usize>>,
+}
+
+impl VariantSpec {
+    /// The synthesized full-depth sequential variant (legacy-manifest
+    /// fallback).
+    pub fn dense(n_layers: usize) -> VariantSpec {
+        VariantSpec {
+            id: VariantId::dense(),
+            stages: (0..n_layers).map(|i| vec![i]).collect(),
+        }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct ModelEntry {
     pub config: ModelConfig,
     /// Decode batch buckets with compiled per-bucket executables (ascending;
     /// empty for manifests predating the `batch_buckets` section).
     pub batch_buckets: Vec<usize>,
+    /// Plan-variant registry: the serving tiers this weight set supports,
+    /// in `VariantId` order. Manifests predating the `variants` section
+    /// get a single synthesized `dense` (sequential) variant.
+    pub variants: BTreeMap<VariantId, VariantSpec>,
     pub artifacts: BTreeMap<String, ArtifactInfo>,
 }
 
@@ -150,6 +233,52 @@ impl Manifest {
                 .iter()
                 .filter_map(|b| b.as_usize())
                 .collect();
+            let mut variants = BTreeMap::new();
+            if let Some(vs) = entry.get("variants").and_then(|v| v.as_obj()) {
+                for (vname, vspec) in vs {
+                    // Strict parsing: a malformed variant must error here,
+                    // not serve a silently-wrong graph (e.g. a non-array
+                    // `stages` must not decay to a zero-stage tier, and a
+                    // non-numeric layer entry must not shrink an LP pair
+                    // into a TP stage).
+                    let raw = vspec.req("stages")?.as_arr().ok_or_else(|| {
+                        Error::msg(format!(
+                            "{mname}: variant `{vname}` stages not an array"
+                        ))
+                    })?;
+                    if raw.is_empty() {
+                        return Err(Error::msg(format!(
+                            "{mname}: variant `{vname}` has no stages"
+                        )));
+                    }
+                    let mut stages = Vec::new();
+                    for st in raw {
+                        let layers = st.as_arr().ok_or_else(|| {
+                            Error::msg(format!(
+                                "{mname}: variant `{vname}` stage not an array"
+                            ))
+                        })?;
+                        let idx: Vec<usize> = layers
+                            .iter()
+                            .filter_map(|x| x.as_usize())
+                            .collect();
+                        if idx.len() != layers.len() || idx.is_empty() || idx.len() > 2 {
+                            return Err(Error::msg(format!(
+                                "{mname}: variant `{vname}` stage {layers:?} \
+                                 malformed (want 1 or 2 layer indices)"
+                            )));
+                        }
+                        stages.push(idx);
+                    }
+                    let id = VariantId::new(vname.clone());
+                    variants.insert(id.clone(), VariantSpec { id, stages });
+                }
+            }
+            if variants.is_empty() {
+                // legacy manifest: serve a single synthesized dense tier
+                let spec = VariantSpec::dense(config.n_layers);
+                variants.insert(spec.id.clone(), spec);
+            }
             let mut artifacts = BTreeMap::new();
             for (aname, a) in entry
                 .req("artifacts")?
@@ -179,7 +308,10 @@ impl Manifest {
                     ArtifactInfo { name: aname.clone(), file, args },
                 );
             }
-            models.insert(mname.clone(), ModelEntry { config, batch_buckets, artifacts });
+            models.insert(
+                mname.clone(),
+                ModelEntry { config, batch_buckets, variants, artifacts },
+            );
         }
         Ok(Manifest {
             dir: dir.to_path_buf(),
@@ -312,6 +444,52 @@ mod tests {
                 assert!(shape.is_empty(), "slot/off/valid are scalars");
             }
         }
+    }
+
+    #[test]
+    fn variants_section_lists_strictly_descending_depth_tiers() {
+        let Some(m) = manifest() else { return };
+        for entry in m.models.values() {
+            let n = entry.config.n_layers;
+            let ids: Vec<&str> =
+                entry.variants.keys().map(|v| v.as_str()).collect();
+            assert_eq!(
+                ids,
+                ["dense", "lp", "lp_aggr"],
+                "{}: stale variants (re-run `make artifacts`)",
+                entry.config.name
+            );
+            let dense = &entry.variants[&VariantId::dense()];
+            assert_eq!(dense.stages.len(), n, "dense must be the full stack");
+            assert!(dense.stages.iter().all(|s| s.len() == 1));
+            let mut prev = usize::MAX;
+            for spec in entry.variants.values() {
+                // each layer at most once, in range, arity 1 or 2
+                let mut seen = vec![false; n];
+                for st in &spec.stages {
+                    assert!(matches!(st.len(), 1 | 2), "{}: arity", spec.id);
+                    for &l in st {
+                        assert!(l < n && !seen[l], "{}: layer {l}", spec.id);
+                        seen[l] = true;
+                    }
+                }
+                assert!(
+                    spec.stages.len() < prev,
+                    "tiers must strictly descend in depth"
+                );
+                prev = spec.stages.len();
+            }
+        }
+    }
+
+    #[test]
+    fn legacy_manifest_synthesizes_a_dense_variant() {
+        let spec = VariantSpec::dense(3);
+        assert_eq!(spec.id, VariantId::dense());
+        assert_eq!(spec.stages, vec![vec![0], vec![1], vec![2]]);
+        assert_eq!(VariantId::new("lp").to_string(), "lp");
+        assert_eq!(VariantId::from("lp").as_str(), "lp");
+        assert!(VariantId::dense() < VariantId::new("lp"), "BTreeMap order");
     }
 
     #[test]

@@ -6,9 +6,9 @@
 //! `batch_buckets`), mirroring the `seq_buckets` mechanism for prefill.
 //! [`BucketSet`] is the runtime half of that contract: given the number of
 //! live KV slots in a decode round it selects the smallest covering bucket
-//! ([`BucketSet::select`]), lazily compiles that bucket's executables on
-//! every rank exactly once ([`BucketSet::ensure_compiled`]), and keeps
-//! padded-vs-live lane accounting per bucket ([`BucketSet::stats`]).
+//! ([`BucketSet::select`]) and keeps padded-vs-live lane accounting per
+//! bucket ([`BucketSet::stats`]); the bucket's executables are compiled
+//! lazily on first dispatch through the model-wide [`ExecCache`].
 //!
 //! Dispatch rules (the satellite edge cases, each covered by a test):
 //!
@@ -36,12 +36,129 @@
 //! matching device-memory traffic models — together they feed the roofline
 //! term of `parallel::simnet::CostModel`, which prices each charge in
 //! deterministic modelled device time.
+//!
+//! Under the plan-variant registry (per-request depth tiers) each
+//! `model::serving::PlanVariant` owns its own [`BucketSet`], so bucket
+//! selection and the live/padded accounting are per-tier, while the
+//! *compiled* executables — plan-agnostic by construction — are shared
+//! across variants through one [`ExecCache`] (lazy compile on first use,
+//! LRU eviction under the `[runtime] max_cached_execs` cap).
 
-use std::collections::{BTreeMap, BTreeSet};
+use std::collections::BTreeMap;
 use std::sync::Mutex;
 
 use crate::error::Result;
 use crate::runtime::artifacts::ModelConfig;
+
+/// Snapshot of [`ExecCache`] accounting.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ExecCacheStats {
+    /// Executables currently compiled on the mesh.
+    pub cached: usize,
+    /// Compilations performed (first use + recompiles after eviction).
+    pub compiles: u64,
+    /// Executables evicted to stay under the cap.
+    pub evictions: u64,
+}
+
+#[derive(Debug, Default)]
+struct ExecCacheInner {
+    /// Cap on live compiled executables (`None` = unbounded; config knob
+    /// `[runtime] max_cached_execs`).
+    cap: Option<usize>,
+    /// key → last-use tick (the LRU order).
+    live: BTreeMap<String, u64>,
+    tick: u64,
+    compiles: u64,
+    evictions: u64,
+}
+
+/// LRU cache of compiled executables shared by every plan variant of one
+/// serving model.
+///
+/// The plan-variant registry serves several computational graphs from one
+/// compiled pool (the AOT artifacts are plan-agnostic — weights arrive as
+/// arguments), so compilation is lazy and centralized here: every dispatch
+/// path calls [`ExecCache::ensure`] with exactly the keys it is about to
+/// bind, which compiles the missing ones once, refreshes the LRU ticks of
+/// the rest, and — when a cap is set — evicts the least-recently-used
+/// executables beyond it (never a key of the current call, so a round's
+/// working set always stays live even under a cap smaller than it).
+/// Eviction is safe by construction: the next round that needs an evicted
+/// key just recompiles it.
+#[derive(Debug)]
+pub struct ExecCache {
+    inner: Mutex<ExecCacheInner>,
+}
+
+impl ExecCache {
+    pub fn new(cap: Option<usize>) -> ExecCache {
+        ExecCache {
+            inner: Mutex::new(ExecCacheInner { cap, ..Default::default() }),
+        }
+    }
+
+    /// Change the cap (`None` = unbounded); enforced from the next
+    /// [`ExecCache::ensure`] on.
+    pub fn set_cap(&self, cap: Option<usize>) {
+        self.inner.lock().unwrap().cap = cap;
+    }
+
+    /// Make every key in `keys` live: `compile` the missing ones (a failed
+    /// compile is not inserted and will be retried on the next call),
+    /// touch the LRU tick of the rest, then `evict` least-recently-used
+    /// entries outside `keys` until the cap holds. The lock is held across
+    /// `compile`, so an executable is never compiled twice under
+    /// concurrent callers.
+    pub fn ensure(
+        &self,
+        keys: &[String],
+        mut compile: impl FnMut(&str) -> Result<()>,
+        mut evict: impl FnMut(&str),
+    ) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        for k in keys {
+            inner.tick += 1;
+            let tick = inner.tick;
+            if let Some(t) = inner.live.get_mut(k) {
+                *t = tick;
+                continue;
+            }
+            compile(k)?;
+            inner.compiles += 1;
+            inner.live.insert(k.clone(), tick);
+        }
+        if let Some(cap) = inner.cap {
+            while inner.live.len() > cap {
+                let victim = inner
+                    .live
+                    .iter()
+                    .filter(|&(k, _)| !keys.contains(k))
+                    .min_by_key(|&(_, t)| *t)
+                    .map(|(k, _)| k.clone());
+                let Some(v) = victim else { break };
+                inner.live.remove(&v);
+                inner.evictions += 1;
+                evict(&v);
+            }
+        }
+        Ok(())
+    }
+
+    /// Whether `key` is currently compiled (tests / diagnostics).
+    pub fn contains(&self, key: &str) -> bool {
+        self.inner.lock().unwrap().live.contains_key(key)
+    }
+
+    pub fn stats(&self) -> ExecCacheStats {
+        let inner = self.inner.lock().unwrap();
+        ExecCacheStats {
+            cached: inner.live.len(),
+            compiles: inner.compiles,
+            evictions: inner.evictions,
+        }
+    }
+}
 
 /// Outcome of bucket selection for a decode round.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -65,15 +182,14 @@ pub struct BucketStats {
     pub padded_lanes: u64,
 }
 
-/// Registry of compiled decode batch buckets for one serving model.
+/// Registry of decode batch buckets for one serving-model plan variant
+/// (selection + dispatch accounting; executable compilation lives in the
+/// model-wide [`ExecCache`]).
 #[derive(Debug)]
 pub struct BucketSet {
     /// Ascending bucket shapes available in the manifest (≤ slots).
     buckets: Vec<usize>,
     slots: usize,
-    /// Buckets whose executables have been compiled on the mesh (lazy:
-    /// a bucket costs rank-count compilations, paid on first use only).
-    compiled: Mutex<BTreeSet<usize>>,
     stats: Mutex<BTreeMap<usize, BucketStats>>,
 }
 
@@ -86,12 +202,7 @@ impl BucketSet {
             buckets.iter().copied().filter(|&x| x > 0 && x <= slots).collect();
         b.sort_unstable();
         b.dedup();
-        BucketSet {
-            buckets: b,
-            slots,
-            compiled: Mutex::new(BTreeSet::new()),
-            stats: Mutex::new(BTreeMap::new()),
-        }
+        BucketSet { buckets: b, slots, stats: Mutex::new(BTreeMap::new()) }
     }
 
     /// The power-of-two ladder `{1, 2, 4, …, slots}` — mirror of
@@ -138,22 +249,6 @@ impl BucketSet {
             format!("lpattn_decode_b{bucket}"),
             format!("lpffn_decode_b{bucket}"),
         ]
-    }
-
-    /// Run `compile` exactly once per bucket (per-bucket executable cache).
-    /// The lock is held across `compile` so a bucket is never compiled
-    /// twice even under concurrent callers.
-    pub fn ensure_compiled(
-        &self,
-        bucket: usize,
-        compile: impl FnOnce() -> Result<()>,
-    ) -> Result<()> {
-        let mut done = self.compiled.lock().unwrap();
-        if !done.contains(&bucket) {
-            compile()?;
-            done.insert(bucket);
-        }
-        Ok(())
     }
 
     /// Record one dispatched round: `shape` lanes bound, `live` of them
@@ -324,31 +419,6 @@ mod tests {
     }
 
     #[test]
-    fn ensure_compiled_runs_once_per_bucket() {
-        let s = set();
-        let mut calls = 0;
-        s.ensure_compiled(2, || {
-            calls += 1;
-            Ok(())
-        })
-        .unwrap();
-        s.ensure_compiled(2, || {
-            calls += 1;
-            Ok(())
-        })
-        .unwrap();
-        assert_eq!(calls, 1);
-        // a failed compile is retried on the next call
-        assert!(s.ensure_compiled(4, || Err(crate::Error::msg("boom"))).is_err());
-        s.ensure_compiled(4, || {
-            calls += 1;
-            Ok(())
-        })
-        .unwrap();
-        assert_eq!(calls, 2);
-    }
-
-    #[test]
     fn stats_account_live_and_padded_lanes() {
         let s = set();
         s.record(2, 2); // exact fit
@@ -448,6 +518,76 @@ mod tests {
         assert!(prefill_bytes(&cfg, 6, 64, 32, 0) > prefill_bytes(&cfg, 6, 0, 32, 0));
         // the logits head weights only appear when logits rows are priced
         assert!(prefill_bytes(&cfg, 6, 0, 32, 32) > prefill_bytes(&cfg, 6, 0, 32, 0));
+    }
+
+    fn keys(names: &[&str]) -> Vec<String> {
+        names.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn exec_cache_compiles_once_and_counts() {
+        let c = ExecCache::new(None);
+        let mut compiled = Vec::new();
+        c.ensure(&keys(&["a", "b"]), |k| Ok(compiled.push(k.to_string())), |_| {}).unwrap();
+        c.ensure(&keys(&["a", "b"]), |k| Ok(compiled.push(k.to_string())), |_| {}).unwrap();
+        assert_eq!(compiled, vec!["a", "b"], "second ensure must be a no-op");
+        let st = c.stats();
+        assert_eq!((st.cached, st.compiles, st.evictions), (2, 2, 0));
+        assert!(c.contains("a") && !c.contains("z"));
+    }
+
+    #[test]
+    fn exec_cache_failed_compile_is_retried() {
+        let c = ExecCache::new(None);
+        assert!(c
+            .ensure(&keys(&["a"]), |_| Err(crate::Error::msg("boom")), |_| {})
+            .is_err());
+        assert!(!c.contains("a"), "failed compile must not be cached");
+        c.ensure(&keys(&["a"]), |_| Ok(()), |_| {}).unwrap();
+        assert!(c.contains("a"));
+    }
+
+    #[test]
+    fn exec_cache_evicts_lru_beyond_cap() {
+        let c = ExecCache::new(Some(2));
+        let mut evicted = Vec::new();
+        c.ensure(&keys(&["a"]), |_| Ok(()), |_| {}).unwrap();
+        c.ensure(&keys(&["b"]), |_| Ok(()), |_| {}).unwrap();
+        // touch `a` so `b` becomes the LRU victim
+        c.ensure(&keys(&["a"]), |_| Ok(()), |_| {}).unwrap();
+        c.ensure(&keys(&["c"]), |_| Ok(()), |k| evicted.push(k.to_string())).unwrap();
+        assert_eq!(evicted, vec!["b"]);
+        assert!(c.contains("a") && c.contains("c") && !c.contains("b"));
+        assert_eq!(c.stats().evictions, 1);
+        // an evicted key recompiles on next use
+        let mut recompiled = 0;
+        c.ensure(
+            &keys(&["b"]),
+            |_| {
+                recompiled += 1;
+                Ok(())
+            },
+            |k| evicted.push(k.to_string()),
+        )
+        .unwrap();
+        assert_eq!(recompiled, 1);
+    }
+
+    #[test]
+    fn exec_cache_never_evicts_the_current_working_set() {
+        // cap smaller than one round's key set: the round still runs (all
+        // its keys stay live); only foreign entries get evicted
+        let c = ExecCache::new(Some(1));
+        let round = keys(&["x", "y", "z"]);
+        c.ensure(&keys(&["old"]), |_| Ok(()), |_| {}).unwrap();
+        let mut evicted = Vec::new();
+        c.ensure(&round, |_| Ok(()), |k| evicted.push(k.to_string())).unwrap();
+        assert_eq!(evicted, vec!["old"]);
+        assert_eq!(c.stats().cached, 3, "working set must survive a tiny cap");
+        // raising / clearing the cap is dynamic
+        c.set_cap(None);
+        c.ensure(&keys(&["w"]), |_| Ok(()), |_| panic!("unbounded")).unwrap();
+        assert_eq!(c.stats().cached, 4);
     }
 
     #[test]

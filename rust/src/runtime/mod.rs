@@ -8,6 +8,6 @@ pub mod artifacts;
 pub mod buckets;
 pub mod pjrt;
 
-pub use artifacts::{ArtifactInfo, Manifest, ModelConfig, ModelEntry};
-pub use buckets::{BucketChoice, BucketSet, BucketStats};
+pub use artifacts::{ArtifactInfo, Manifest, ModelConfig, ModelEntry, VariantId, VariantSpec};
+pub use buckets::{BucketChoice, BucketSet, BucketStats, ExecCache, ExecCacheStats};
 pub use pjrt::Engine;

@@ -153,7 +153,7 @@ fn server_greedy_is_deterministic_across_plans() {
         let serving =
             ServingModel::new(&manifest, "td-small", &weights, &plan, no_net()).unwrap();
         let server = Server::start(serving, &ServerConfig::default());
-        let opts = RequestOptions { max_new_tokens: 6, sampler: Sampler::Greedy };
+        let opts = RequestOptions { max_new_tokens: 6, sampler: Sampler::Greedy, tier: None };
         let r1 = server.submit_blocking("the calm ship", opts.clone()).unwrap();
         let r2 = server.submit_blocking("the calm ship", opts).unwrap();
         assert!(r1.error.is_none() && r2.error.is_none());
