@@ -11,7 +11,7 @@ use truedepth::model::kvcache::SlotManager;
 
 fn job(id: u64) -> Job {
     let (tx, rx) = std::sync::mpsc::channel();
-    std::mem::forget(rx); // keep the channel alive without a receiver loop
+    Box::leak(Box::new(rx)); // keep the channel alive without a receiver loop
     Job {
         request: Request {
             id,

@@ -1,0 +1,29 @@
+//! CI artifact-verification gate (the `verify` job).
+//!
+//!     cargo run --release --bin verify_artifacts [-- --artifacts DIR] [--lenient]
+//!
+//! Runs the full static verification pass (`truedepth::verify`) over the
+//! AOT artifact manifest the python `compile.aot` job produced: plan
+//! coverage/adjacency/executable consistency, abstract-interpretation
+//! binding analysis of every variant's dispatch sequence, and MPI-style
+//! collective matching across ranks. Strict by default — artifact files
+//! must exist on disk and *warnings fail the gate* (a shipped manifest
+//! should carry zero findings); `--lenient` downgrades to the same policy
+//! `Manifest::load` applies at serve time (errors only, no file checks).
+//!
+//! Exit status is the gate: 0 = manifest verified, 1 = findings (all of
+//! them printed, not just the first).
+
+use truedepth::cli::Args;
+
+fn main() {
+    let args = Args::from_env(&["lenient", "help"]);
+    let dir = match args.get("artifacts") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => truedepth::repo_root().join("artifacts"),
+    };
+    if let Err(e) = truedepth::verify::run_cli(&dir, !args.flag("lenient")) {
+        eprintln!("verify_artifacts: {e}");
+        std::process::exit(1);
+    }
+}

@@ -28,6 +28,9 @@ pub enum Error {
     #[error("serving: {0}")]
     Serving(String),
 
+    #[error("verify: {0}")]
+    Verify(String),
+
     #[error("{0}")]
     Msg(String),
 }

@@ -17,6 +17,8 @@
 //! * [`runtime`] — PJRT client + artifact manifest loading (HLO text AOT'd
 //!   by `python/compile/aot.py`; python never runs at request time).
 //! * [`eval`] — perplexity + the synthetic 5-shot ICL suite.
+//! * [`verify`] — static plan/binding/collective checker over the artifact
+//!   manifest: runs at load time, as `truedepth verify`, and as a CI gate.
 //!
 //! See DESIGN.md for the experiment index and EXPERIMENTS.md for results.
 
@@ -35,6 +37,7 @@ pub mod runtime;
 pub mod tensor;
 pub mod text;
 pub mod util;
+pub mod verify;
 
 pub use error::{Error, Result};
 

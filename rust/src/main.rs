@@ -2,6 +2,11 @@
 //!
 //! Subcommands:
 //!   info                         manifest + checkpoint inventory
+//!   verify    [--artifacts DIR] [--strict]
+//!                                static plan/binding/collective check of the
+//!                                artifact manifest (prints every diagnostic;
+//!                                --strict also requires artifact files on
+//!                                disk and promotes warnings to errors)
 //!   generate  --model M --prompt P [--depth D] [--max-new N] [--no-simnet]
 //!   ppl       --model M [--transform T --s S --e E]
 //!   serve     --model M [--depth D | --tiers] [--config run.toml]
@@ -28,10 +33,11 @@ use truedepth::text::corpus::{self, DATA_SEED};
 use truedepth::util::rng::SplitMix64;
 
 fn main() {
-    let args = Args::from_env(&["no-simnet", "tiers", "help"]);
+    let args = Args::from_env(&["no-simnet", "tiers", "strict", "help"]);
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let r = match cmd {
         "info" => info(),
+        "verify" => cmd_verify(&args),
         "generate" => cmd_generate(&args),
         "ppl" => cmd_ppl(&args),
         "serve" => cmd_serve(&args),
@@ -47,7 +53,15 @@ fn main() {
 }
 
 const HELP: &str = "truedepth — Layer Parallelism for LLM inference
-usage: truedepth <info|generate|ppl|serve> [options]   (see src/main.rs docs)";
+usage: truedepth <info|verify|generate|ppl|serve> [options]   (see src/main.rs docs)";
+
+fn cmd_verify(args: &Args) -> truedepth::Result<()> {
+    let dir = match args.get("artifacts") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => truedepth::repo_root().join("artifacts"),
+    };
+    truedepth::verify::run_cli(&dir, args.flag("strict"))
+}
 
 fn info() -> truedepth::Result<()> {
     let manifest = truedepth::runtime::Manifest::load_default()?;

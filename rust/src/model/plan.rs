@@ -150,6 +150,28 @@ impl GraphPlan {
     pub fn all_reduces_per_token(&self) -> usize {
         self.stages.len() * 2
     }
+
+    /// Layers covered by [`Stage::PairLp`] stages, in stage order.
+    pub fn lp_layers(&self) -> Vec<usize> {
+        self.stages
+            .iter()
+            .filter_map(|s| match s {
+                Stage::PairLp(a, b) => Some([*a, *b]),
+                _ => None,
+            })
+            .flatten()
+            .collect()
+    }
+
+    /// Whether the LP pairs cover one contiguous band of layers — the shape
+    /// the paper's §3 transform always produces (parallelize layers
+    /// `[start, end)`). A gapped band still serves, but the verifier warns:
+    /// it is almost always a manifest typo. Vacuously true with no pairs.
+    pub fn lp_band_contiguous(&self) -> bool {
+        let mut layers = self.lp_layers();
+        layers.sort_unstable();
+        layers.windows(2).all(|w| w[1] == w[0] + 1)
+    }
 }
 
 #[cfg(test)]
@@ -199,6 +221,26 @@ mod tests {
         assert!(GraphPlan::from_stage_lists(6, &[]).is_err(), "zero-stage plan");
         assert!(GraphPlan::from_stage_lists(6, &[vec![0], vec![0, 1]]).is_err());
         assert!(GraphPlan::from_stage_lists(2, &[vec![5]]).is_err());
+    }
+
+    #[test]
+    fn lp_band_contiguity() {
+        let band = GraphPlan::from_stage_lists(
+            8,
+            &[vec![0], vec![1, 2], vec![3, 4], vec![5], vec![6], vec![7]],
+        )
+        .unwrap();
+        assert_eq!(band.lp_layers(), vec![1, 2, 3, 4]);
+        assert!(band.lp_band_contiguous());
+
+        let gapped =
+            GraphPlan::from_stage_lists(8, &[vec![0, 1], vec![2], vec![4, 5], vec![3]])
+                .unwrap();
+        assert!(!gapped.lp_band_contiguous());
+
+        let none = GraphPlan::from_stage_lists(2, &[vec![0], vec![1]]).unwrap();
+        assert!(none.lp_layers().is_empty());
+        assert!(none.lp_band_contiguous(), "vacuously contiguous");
     }
 
     #[test]

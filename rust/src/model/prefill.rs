@@ -47,11 +47,15 @@
 //! `python/tests/test_chunk_prefill.py` at the JAX level.
 
 use crate::error::{Error, Result};
-use crate::model::serving::{ServeStage, ServingModel};
+use crate::model::serving::{
+    cache_name, chunk_exec_keys, stage_weight_args, stage_weight_names, ServeStage,
+    ServingModel, ATTN_FIELDS, FFN_FIELDS,
+};
 use crate::parallel::worker::ArgRef;
 use crate::runtime::buckets::{prefill_bytes, prefill_flops};
 use crate::runtime::pjrt::HostValue;
 use crate::runtime::VariantId;
+use crate::verify::{DispatchTrace, RankIo, TraceOp};
 
 /// Executable keys of the chunk prefill family — all six must exist in the
 /// manifest for the chunked path to activate (`ServingModel::prefill_chunk`).
@@ -170,7 +174,7 @@ impl ServingModel {
             st.consumed = st.tokens.len();
             return Ok(Some(logits));
         };
-        self.ensure_execs(&Self::chunk_exec_keys(var))?;
+        self.ensure_execs(&chunk_exec_keys(&var.stages))?;
 
         let cfg = &self.entry.config;
         let d = cfg.d_model;
@@ -219,19 +223,15 @@ impl ServingModel {
                 ServeStage::Tp(_) => ("tpattn_chunk", "tpffn_chunk"),
                 ServeStage::Lp(..) => ("lpattn_chunk", "lpffn_chunk"),
             };
-            let kname = Self::cache_name(&st.variant, "k", sidx);
-            let vname = Self::cache_name(&st.variant, "v", sidx);
+            let kname = cache_name(&st.variant, "k", sidx);
+            let vname = cache_name(&st.variant, "v", sidx);
             // --- attention partials; the executable gathers the slot's
             // cache rows, inserts this chunk's K/V (masked by `valid`) and
             // attends over the prefix — caches persist in place
             let calls = (0..self.ranks)
                 .map(|rank| {
                     let mut args = vec![ArgRef::Resident("act".into())];
-                    args.extend(Self::stage_weight_args(
-                        stage,
-                        rank,
-                        &["ln1", "wq", "wk", "wv", "wo"],
-                    ));
+                    args.extend(stage_weight_args(stage, rank, &ATTN_FIELDS));
                     args.push(ArgRef::Resident(kname.clone()));
                     args.push(ArgRef::Resident(vname.clone()));
                     args.push(ArgRef::Resident("slot".into()));
@@ -256,11 +256,7 @@ impl ServingModel {
             let calls = (0..self.ranks)
                 .map(|rank| {
                     let mut args = vec![ArgRef::Resident("act".into())];
-                    args.extend(Self::stage_weight_args(
-                        stage,
-                        rank,
-                        &["ln2", "wg", "wu", "wd"],
-                    ));
+                    args.extend(stage_weight_args(stage, rank, &FFN_FIELDS));
                     (
                         ffn_key.to_string(),
                         args,
@@ -319,6 +315,90 @@ impl ServingModel {
                 return Ok(logits);
             }
         }
+    }
+}
+
+/// Emit the abstract dispatch trace of one chunk step — the op sequence
+/// [`ServingModel::prefill_step`] issues for a mid-stream (`last = false`)
+/// or final (`last = true`, adds the `logits_chunk` head) chunk. Kept next
+/// to the dispatch body it mirrors; [`crate::verify::crosscheck_trace`]
+/// pins the two together.
+pub fn chunk_step_trace(
+    vid: &VariantId,
+    stages: &[ServeStage],
+    ranks: usize,
+    d_model: usize,
+    k: usize,
+    last: bool,
+) -> DispatchTrace {
+    let elems = k * d_model;
+    let mut ops = vec![TraceOp::EnsureExecs { keys: chunk_exec_keys(stages) }];
+    for name in ["slot", "off", "valid"] {
+        ops.push(TraceOp::UploadAll { name: name.into() });
+    }
+    ops.push(TraceOp::ExecRank {
+        rank: 0,
+        key: "embed_chunk".into(),
+        reads: vec!["emb".into()],
+        writes: vec![],
+    });
+    ops.push(TraceOp::BroadcastResident { name: "act".into(), elems });
+    for (sidx, stage) in stages.iter().enumerate() {
+        let (attn_key, ffn_key) = match stage {
+            ServeStage::Tp(_) => ("tpattn_chunk", "tpffn_chunk"),
+            ServeStage::Lp(..) => ("lpattn_chunk", "lpffn_chunk"),
+        };
+        let kname = cache_name(vid, "k", sidx);
+        let vname = cache_name(vid, "v", sidx);
+        ops.push(TraceOp::ExecAll {
+            key: attn_key.into(),
+            per_rank: (0..ranks)
+                .map(|rank| {
+                    let mut reads = vec!["act".to_string()];
+                    reads.extend(stage_weight_names(stage, rank, &ATTN_FIELDS));
+                    reads.push(kname.clone());
+                    reads.push(vname.clone());
+                    reads.extend(["slot".into(), "off".into(), "valid".into()]);
+                    RankIo {
+                        reads,
+                        writes: vec!["act.partial".into(), kname.clone(), vname.clone()],
+                    }
+                })
+                .collect(),
+        });
+        ops.push(TraceOp::ReduceInto {
+            partial: "act.partial".into(),
+            dest: "act".into(),
+            elems,
+        });
+        ops.push(TraceOp::ExecAll {
+            key: ffn_key.into(),
+            per_rank: (0..ranks)
+                .map(|rank| {
+                    let mut reads = vec!["act".to_string()];
+                    reads.extend(stage_weight_names(stage, rank, &FFN_FIELDS));
+                    RankIo { reads, writes: vec!["act.partial".into()] }
+                })
+                .collect(),
+        });
+        ops.push(TraceOp::ReduceInto {
+            partial: "act.partial".into(),
+            dest: "act".into(),
+            elems,
+        });
+    }
+    if last {
+        ops.push(TraceOp::ExecRank {
+            rank: 0,
+            key: "logits_chunk".into(),
+            reads: vec!["act".into(), "lnf".into(), "wout".into()],
+            writes: vec![],
+        });
+    }
+    DispatchTrace {
+        label: format!("chunk[{vid}]@k{k}{}", if last { "+logits" } else { "" }),
+        ranks,
+        ops,
     }
 }
 
@@ -472,7 +552,7 @@ mod tests {
         let tier = m.default_tier().clone();
         for sidx in 0..m.stages().len() {
             for kv in ["k", "v"] {
-                let name = ServingModel::cache_name(&tier, kv, sidx);
+                let name = cache_name(&tier, kv, sidx);
                 for w in &m.mesh.workers {
                     let hv = w.fetch(&name).unwrap();
                     let shape = hv.shape().to_vec();

@@ -120,6 +120,7 @@ use crate::runtime::buckets::{
 use crate::runtime::pjrt::HostValue;
 use crate::runtime::{Manifest, ModelEntry, VariantId};
 use crate::tensor::add_slices;
+use crate::verify::{DispatchTrace, RankIo, TraceOp};
 
 /// Serving-mode stage (subset of [`Stage`] that the TP runtime supports).
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -130,6 +131,316 @@ pub enum ServeStage {
 
 /// One active slot's decode input: (slot index, token to feed, position).
 pub type ActiveSlot = (usize, i32, i32);
+
+/// Mesh ranks the serving executor spans — the paper's 2-accelerator
+/// deployment, one LP path per rank.
+pub const SERVE_RANKS: usize = 2;
+
+/// Per-layer attention weight fields, in executable binding order.
+pub const ATTN_FIELDS: [&str; 5] = ["ln1", "wq", "wk", "wv", "wo"];
+
+/// Per-layer FFN weight fields, in executable binding order.
+pub const FFN_FIELDS: [&str; 4] = ["ln2", "wg", "wu", "wd"];
+
+/// Lower a [`GraphPlan`] to the serve-time stage walk (Seq → Tp, PairLp →
+/// Lp). Other stage kinds are a scoring-only feature and rejected — the
+/// error the caller prefixes with its variant id.
+pub fn serve_stages(plan: &GraphPlan) -> Result<Vec<ServeStage>> {
+    plan.stages
+        .iter()
+        .map(|st| match st {
+            Stage::Seq(i) => Ok(ServeStage::Tp(*i)),
+            Stage::PairLp(a, b) => Ok(ServeStage::Lp(*a, *b)),
+            other => Err(Error::Serving(format!(
+                "stage {other} not servable under TP (scoring only)"
+            ))),
+        })
+        .collect()
+}
+
+fn stages_have_tp(stages: &[ServeStage]) -> bool {
+    stages.iter().any(|s| matches!(s, ServeStage::Tp(_)))
+}
+
+fn stages_have_lp(stages: &[ServeStage]) -> bool {
+    stages.iter().any(|s| matches!(s, ServeStage::Lp(..)))
+}
+
+/// Fixed-shape decode executable keys a stage walk binds (`suffix` = ""
+/// for the full-`[S]` path, `_b{B}` for a batch bucket). Walks without Lp
+/// stages never touch the `lp*` family and vice versa — the "reuse shared
+/// kernels where shapes agree" half of the registry.
+pub fn decode_exec_keys(stages: &[ServeStage], suffix: &str) -> Vec<String> {
+    let mut keys = vec![format!("embed_decode{suffix}"), format!("logits_decode{suffix}")];
+    if stages_have_tp(stages) {
+        keys.push(format!("tpattn_decode{suffix}"));
+        keys.push(format!("tpffn_decode{suffix}"));
+    }
+    if stages_have_lp(stages) {
+        keys.push(format!("lpattn_decode{suffix}"));
+        keys.push(format!("lpffn_decode{suffix}"));
+    }
+    keys
+}
+
+/// Monolithic fixed-`T` prefill executable keys a stage walk binds.
+pub fn prefill_exec_keys(stages: &[ServeStage], t: usize) -> Vec<String> {
+    let mut keys = vec![format!("embed_t{t}"), format!("logits_t{t}")];
+    if stages_have_tp(stages) {
+        keys.push(format!("tpattn_prefill_t{t}"));
+        keys.push(format!("tpffn_prefill_t{t}"));
+        keys.push(format!("cache_insert_half_t{t}"));
+    }
+    if stages_have_lp(stages) {
+        keys.push(format!("lpattn_prefill_t{t}"));
+        keys.push(format!("ffn_t{t}")); // LP FFN prefill (full width)
+        keys.push(format!("cache_insert_full_t{t}"));
+    }
+    keys
+}
+
+/// Chunk-prefill executable keys a stage walk binds (see
+/// [`crate::model::prefill`]).
+pub fn chunk_exec_keys(stages: &[ServeStage]) -> Vec<String> {
+    let mut keys = vec!["embed_chunk".to_string(), "logits_chunk".to_string()];
+    if stages_have_tp(stages) {
+        keys.push("tpattn_chunk".to_string());
+        keys.push("tpffn_chunk".to_string());
+    }
+    if stages_have_lp(stages) {
+        keys.push("lpattn_chunk".to_string());
+        keys.push("lpffn_chunk".to_string());
+    }
+    keys
+}
+
+/// The resident-buffer names of one stage's weights on `rank`: a Tp stage
+/// binds the rank's Megatron shard of its layer (`l{i}.tp.*`), an Lp stage
+/// the full width of the rank's layer of the pair (`l{a|b}.full.*`).
+pub fn stage_weight_names(stage: &ServeStage, rank: usize, fields: &[&str]) -> Vec<String> {
+    let (layer, form) = match stage {
+        ServeStage::Tp(i) => (*i, "tp"),
+        ServeStage::Lp(a, b) => (if rank == 0 { *a } else { *b }, "full"),
+    };
+    fields.iter().map(|f| format!("l{layer}.{form}.{f}")).collect()
+}
+
+/// [`stage_weight_names`] as executable arguments.
+pub fn stage_weight_args(stage: &ServeStage, rank: usize, fields: &[&str]) -> Vec<ArgRef> {
+    stage_weight_names(stage, rank, fields).into_iter().map(ArgRef::Resident).collect()
+}
+
+/// Resident KV-cache buffer name of one variant stage (`kv` ∈ {k, v}).
+pub fn cache_name(vid: &VariantId, kv: &str, sidx: usize) -> String {
+    format!("kv.{vid}.{kv}.{sidx}")
+}
+
+/// The per-rank resident-buffer sets `upload_weights` + `init_caches`
+/// establish for a set of plan variants — the initial abstract state of
+/// [`crate::verify::binding_check`] and the ground truth
+/// [`ServingModel::static_residents`] exposes.
+pub fn initial_resident_names(
+    variants: &[(VariantId, Vec<ServeStage>)],
+    ranks: usize,
+) -> Vec<BTreeSet<String>> {
+    let mut sets: Vec<BTreeSet<String>> = vec![BTreeSet::new(); ranks];
+    // rank 0 additionally owns embedding + head
+    for name in ["emb", "lnf", "wout"] {
+        sets[0].insert(name.to_string());
+    }
+    let fields: Vec<&str> = ATTN_FIELDS.iter().chain(FFN_FIELDS.iter()).copied().collect();
+    for (vid, stages) in variants {
+        for (sidx, stage) in stages.iter().enumerate() {
+            for (rank, set) in sets.iter_mut().enumerate() {
+                match stage {
+                    // every rank holds its shard of a Tp layer; an Lp rank
+                    // holds the full width of its own layer of the pair
+                    ServeStage::Tp(_) | ServeStage::Lp(..) => {
+                        set.extend(stage_weight_names(stage, rank, &fields));
+                    }
+                }
+                set.insert(cache_name(vid, "k", sidx));
+                set.insert(cache_name(vid, "v", sidx));
+            }
+        }
+    }
+    sets
+}
+
+/// Emit the abstract dispatch trace of one decode round — the same op
+/// sequence [`ServingModel::decode_step_shaped`] issues, with every
+/// `ArgRef::Resident` binding named per rank (`suffix` / `lanes` select
+/// the fixed-`[S]` or bucketed path). Kept next to the dispatch body it
+/// mirrors; [`crate::verify::crosscheck_trace`] pins the two together.
+pub fn decode_trace(
+    vid: &VariantId,
+    stages: &[ServeStage],
+    ranks: usize,
+    d_model: usize,
+    shape: usize,
+    suffix: &str,
+    lanes: bool,
+) -> DispatchTrace {
+    let elems = shape * d_model;
+    let mut ops = vec![
+        TraceOp::EnsureExecs { keys: decode_exec_keys(stages, suffix) },
+        TraceOp::UploadAll { name: "pos".into() },
+    ];
+    if lanes {
+        ops.push(TraceOp::UploadAll { name: "lanes".into() });
+    }
+    ops.push(TraceOp::ExecRank {
+        rank: 0,
+        key: format!("embed_decode{suffix}"),
+        reads: vec!["emb".into()],
+        writes: vec![],
+    });
+    ops.push(TraceOp::BroadcastResident { name: "act".into(), elems });
+    for (sidx, stage) in stages.iter().enumerate() {
+        let (attn_base, ffn_base) = match stage {
+            ServeStage::Tp(_) => ("tpattn_decode", "tpffn_decode"),
+            ServeStage::Lp(..) => ("lpattn_decode", "lpffn_decode"),
+        };
+        let kname = cache_name(vid, "k", sidx);
+        let vname = cache_name(vid, "v", sidx);
+        ops.push(TraceOp::ExecAll {
+            key: format!("{attn_base}{suffix}"),
+            per_rank: (0..ranks)
+                .map(|rank| {
+                    let mut reads = vec!["act".to_string()];
+                    reads.extend(stage_weight_names(stage, rank, &ATTN_FIELDS));
+                    reads.push(kname.clone());
+                    reads.push(vname.clone());
+                    reads.push("pos".into());
+                    if lanes {
+                        reads.push("lanes".into());
+                    }
+                    RankIo {
+                        reads,
+                        writes: vec!["act.partial".into(), kname.clone(), vname.clone()],
+                    }
+                })
+                .collect(),
+        });
+        ops.push(TraceOp::ReduceInto {
+            partial: "act.partial".into(),
+            dest: "act".into(),
+            elems,
+        });
+        ops.push(TraceOp::ExecAll {
+            key: format!("{ffn_base}{suffix}"),
+            per_rank: (0..ranks)
+                .map(|rank| {
+                    let mut reads = vec!["act".to_string()];
+                    reads.extend(stage_weight_names(stage, rank, &FFN_FIELDS));
+                    RankIo { reads, writes: vec!["act.partial".into()] }
+                })
+                .collect(),
+        });
+        ops.push(TraceOp::ReduceInto {
+            partial: "act.partial".into(),
+            dest: "act".into(),
+            elems,
+        });
+    }
+    ops.push(TraceOp::ExecRank {
+        rank: 0,
+        key: format!("logits_decode{suffix}"),
+        reads: vec!["act".into(), "lnf".into(), "wout".into()],
+        writes: vec![],
+    });
+    DispatchTrace { label: format!("decode[{vid}]{suffix}@{shape}"), ranks, ops }
+}
+
+/// Emit the abstract dispatch trace of one monolithic fixed-`T` prefill
+/// pass — the op sequence [`ServingModel::prefill_v`] issues, including
+/// the per-stage KV-stripe insert pair.
+pub fn prefill_trace(
+    vid: &VariantId,
+    stages: &[ServeStage],
+    ranks: usize,
+    d_model: usize,
+    t: usize,
+) -> DispatchTrace {
+    let elems = t * d_model;
+    let mut ops = vec![
+        TraceOp::EnsureExecs { keys: prefill_exec_keys(stages, t) },
+        TraceOp::UploadAll { name: "slot".into() },
+        TraceOp::ExecRank {
+            rank: 0,
+            key: format!("embed_t{t}"),
+            reads: vec!["emb".into()],
+            writes: vec![],
+        },
+        TraceOp::BroadcastResident { name: "act".into(), elems },
+    ];
+    for (sidx, stage) in stages.iter().enumerate() {
+        let (attn_key, insert_key, ffn_key) = match stage {
+            ServeStage::Tp(_) => (
+                format!("tpattn_prefill_t{t}"),
+                format!("cache_insert_half_t{t}"),
+                format!("tpffn_prefill_t{t}"),
+            ),
+            ServeStage::Lp(..) => (
+                format!("lpattn_prefill_t{t}"),
+                format!("cache_insert_full_t{t}"),
+                format!("ffn_t{t}"),
+            ),
+        };
+        ops.push(TraceOp::ExecAll {
+            key: attn_key,
+            per_rank: (0..ranks)
+                .map(|rank| {
+                    let mut reads = vec!["act".to_string()];
+                    reads.extend(stage_weight_names(stage, rank, &ATTN_FIELDS));
+                    RankIo {
+                        reads,
+                        writes: vec!["act.partial".into(), "tmp.k".into(), "tmp.v".into()],
+                    }
+                })
+                .collect(),
+        });
+        ops.push(TraceOp::ReduceInto {
+            partial: "act.partial".into(),
+            dest: "act".into(),
+            elems,
+        });
+        for (stripe, kv) in [("tmp.k", "k"), ("tmp.v", "v")] {
+            let cache = cache_name(vid, kv, sidx);
+            ops.push(TraceOp::ExecAll {
+                key: insert_key.clone(),
+                per_rank: (0..ranks)
+                    .map(|_| RankIo {
+                        reads: vec![cache.clone(), stripe.to_string(), "slot".into()],
+                        writes: vec![cache.clone()],
+                    })
+                    .collect(),
+            });
+        }
+        ops.push(TraceOp::ExecAll {
+            key: ffn_key,
+            per_rank: (0..ranks)
+                .map(|rank| {
+                    let mut reads = vec!["act".to_string()];
+                    reads.extend(stage_weight_names(stage, rank, &FFN_FIELDS));
+                    RankIo { reads, writes: vec!["act.partial".into()] }
+                })
+                .collect(),
+        });
+        ops.push(TraceOp::ReduceInto {
+            partial: "act.partial".into(),
+            dest: "act".into(),
+            elems,
+        });
+    }
+    ops.push(TraceOp::ExecRank {
+        rank: 0,
+        key: format!("logits_t{t}"),
+        reads: vec!["act".into(), "lnf".into(), "wout".into()],
+        writes: vec![],
+    });
+    DispatchTrace { label: format!("prefill[{vid}]@t{t}"), ranks, ops }
+}
 
 /// One registered plan variant: the stage walk of a serving tier plus its
 /// per-tier bucket registry and cost-model constants. All variants of a
@@ -156,18 +467,10 @@ impl PlanVariant {
     fn from_plan(id: VariantId, plan: &GraphPlan, entry: &ModelEntry) -> Result<PlanVariant> {
         plan.validate()
             .map_err(|e| Error::Serving(format!("variant `{id}`: bad plan: {e}")))?;
-        let mut stages = Vec::new();
-        for st in &plan.stages {
-            match st {
-                Stage::Seq(i) => stages.push(ServeStage::Tp(*i)),
-                Stage::PairLp(a, b) => stages.push(ServeStage::Lp(*a, *b)),
-                other => {
-                    return Err(Error::Serving(format!(
-                        "variant `{id}`: stage {other} not servable under TP (scoring only)"
-                    )))
-                }
-            }
-        }
+        let stages = serve_stages(plan).map_err(|e| match e {
+            Error::Serving(msg) => Error::Serving(format!("variant `{id}`: {msg}")),
+            other => other,
+        })?;
         // Register only buckets whose executables all exist (guards a
         // manifest listing shapes it never emitted).
         let usable: Vec<usize> = entry
@@ -210,13 +513,6 @@ impl PlanVariant {
         self.flops_per_lane
     }
 
-    fn has_tp(&self) -> bool {
-        self.stages.iter().any(|s| matches!(s, ServeStage::Tp(_)))
-    }
-
-    fn has_lp(&self) -> bool {
-        self.stages.iter().any(|s| matches!(s, ServeStage::Lp(..)))
-    }
 }
 
 pub struct ServingModel {
@@ -327,7 +623,7 @@ impl ServingModel {
             return Err(Error::Serving("at least one plan variant required".into()));
         }
         let entry = manifest.model(model_name)?.clone();
-        let ranks = 2;
+        let ranks = SERVE_RANKS;
         let mesh = Mesh::with_cost(ranks, cost);
         let default_id = plans
             .iter()
@@ -469,70 +765,21 @@ impl ServingModel {
         )
     }
 
-    /// Fixed-shape decode executable keys a variant binds (`suffix` = ""
-    /// for the full-`[S]` path, `_b{B}` for a batch bucket). Tiers without
-    /// Lp stages never touch the `lp*` family and vice versa — the
-    /// "reuse shared kernels where shapes agree" half of the registry.
-    fn decode_exec_keys(var: &PlanVariant, suffix: &str) -> Vec<String> {
-        let mut keys =
-            vec![format!("embed_decode{suffix}"), format!("logits_decode{suffix}")];
-        if var.has_tp() {
-            keys.push(format!("tpattn_decode{suffix}"));
-            keys.push(format!("tpffn_decode{suffix}"));
-        }
-        if var.has_lp() {
-            keys.push(format!("lpattn_decode{suffix}"));
-            keys.push(format!("lpffn_decode{suffix}"));
-        }
-        keys
-    }
-
-    /// Monolithic fixed-`T` prefill executable keys a variant binds.
-    fn prefill_exec_keys(var: &PlanVariant, t: usize) -> Vec<String> {
-        let mut keys = vec![format!("embed_t{t}"), format!("logits_t{t}")];
-        if var.has_tp() {
-            keys.push(format!("tpattn_prefill_t{t}"));
-            keys.push(format!("tpffn_prefill_t{t}"));
-            keys.push(format!("cache_insert_half_t{t}"));
-        }
-        if var.has_lp() {
-            keys.push(format!("lpattn_prefill_t{t}"));
-            keys.push(format!("ffn_t{t}")); // LP FFN prefill (full width)
-            keys.push(format!("cache_insert_full_t{t}"));
-        }
-        keys
-    }
-
-    /// Chunk-prefill executable keys a variant binds (see
-    /// [`crate::model::prefill`]).
-    pub(crate) fn chunk_exec_keys(var: &PlanVariant) -> Vec<String> {
-        let mut keys = vec!["embed_chunk".to_string(), "logits_chunk".to_string()];
-        if var.has_tp() {
-            keys.push("tpattn_chunk".to_string());
-            keys.push("tpffn_chunk".to_string());
-        }
-        if var.has_lp() {
-            keys.push("lpattn_chunk".to_string());
-            keys.push("lpffn_chunk".to_string());
-        }
-        keys
-    }
-
     /// Every executable each variant can bind must exist in the manifest —
     /// checked at build time so a broken manifest fails construction, not a
     /// live decode round (compilation itself stays lazy).
     fn validate_artifacts(&self) -> Result<()> {
         for var in self.variants.values() {
-            for key in Self::decode_exec_keys(var, "") {
+            for key in decode_exec_keys(&var.stages, "") {
                 self.entry.artifact(&key)?;
             }
             for &t in &self.buckets {
-                for key in Self::prefill_exec_keys(var, t) {
+                for key in prefill_exec_keys(&var.stages, t) {
                     self.entry.artifact(&key)?;
                 }
             }
             if self.prefill_chunk.is_some() {
-                for key in Self::chunk_exec_keys(var) {
+                for key in chunk_exec_keys(&var.stages) {
                     self.entry.artifact(&key)?;
                 }
             }
@@ -569,11 +816,11 @@ impl ServingModel {
         for &i in &tp_layers {
             for (rank, worker) in self.mesh.workers.iter().enumerate() {
                 let attn = w.attn_shard(i, rank, self.ranks)?;
-                for (t, field) in attn.iter().zip(["ln1", "wq", "wk", "wv", "wo"]) {
+                for (t, field) in attn.iter().zip(ATTN_FIELDS) {
                     worker.store(&format!("l{i}.tp.{field}"), t.host())?;
                 }
                 let ffn = w.ffn_shard(i, rank, self.ranks)?;
-                for (t, field) in ffn.iter().zip(["ln2", "wg", "wu", "wd"]) {
+                for (t, field) in ffn.iter().zip(FFN_FIELDS) {
                     worker.store(&format!("l{i}.tp.{field}"), t.host())?;
                 }
             }
@@ -581,38 +828,15 @@ impl ServingModel {
         for &(rank, layer) in &full_needs {
             let worker = &self.mesh.workers[rank];
             let attn = w.attn_full(layer)?;
-            for (t, field) in attn.iter().zip(["ln1", "wq", "wk", "wv", "wo"]) {
+            for (t, field) in attn.iter().zip(ATTN_FIELDS) {
                 worker.store(&format!("l{layer}.full.{field}"), t.host())?;
             }
             let ffn = w.ffn_full(layer)?;
-            for (t, field) in ffn.iter().zip(["ln2", "wg", "wu", "wd"]) {
+            for (t, field) in ffn.iter().zip(FFN_FIELDS) {
                 worker.store(&format!("l{layer}.full.{field}"), t.host())?;
             }
         }
         Ok(())
-    }
-
-    /// The resident-buffer names of one stage's weights on `rank`: a Tp
-    /// stage binds the rank's shard of its layer, an Lp stage the full
-    /// width of the rank's layer of the pair.
-    pub(crate) fn stage_weight_args(
-        stage: &ServeStage,
-        rank: usize,
-        fields: &[&str],
-    ) -> Vec<ArgRef> {
-        let (layer, form) = match stage {
-            ServeStage::Tp(i) => (*i, "tp"),
-            ServeStage::Lp(a, b) => (if rank == 0 { *a } else { *b }, "full"),
-        };
-        fields
-            .iter()
-            .map(|f| ArgRef::Resident(format!("l{layer}.{form}.{f}")))
-            .collect()
-    }
-
-    /// Resident KV-cache buffer name of one variant stage (`kv` ∈ {k, v}).
-    pub(crate) fn cache_name(vid: &VariantId, kv: &str, sidx: usize) -> String {
-        format!("kv.{vid}.{kv}.{sidx}")
     }
 
     fn cache_width(&self, stage: &ServeStage) -> usize {
@@ -632,12 +856,75 @@ impl ServingModel {
                     vec![0.0; cfg.slots * cfg.ctx * w],
                 );
                 for worker in &self.mesh.workers {
-                    worker.store(&Self::cache_name(&var.id, "k", sidx), zeros.clone())?;
-                    worker.store(&Self::cache_name(&var.id, "v", sidx), zeros.clone())?;
+                    worker.store(&cache_name(&var.id, "k", sidx), zeros.clone())?;
+                    worker.store(&cache_name(&var.id, "v", sidx), zeros.clone())?;
                 }
             }
         }
         Ok(())
+    }
+
+    // ---- static verification hooks -----------------------------------------
+
+    /// The abstract dispatch trace of one decode round under tier `vid`
+    /// (`bucket` = `None` for the fixed-`[S]` path, `Some(B)` for a batch
+    /// bucket) — what this model's [`ServingModel::decode_step_v`] /
+    /// bucketed dispatch will issue, op for op
+    /// ([`crate::verify::crosscheck_trace`] holds the two together).
+    pub fn static_decode_trace(
+        &self,
+        vid: &VariantId,
+        bucket: Option<usize>,
+    ) -> Result<DispatchTrace> {
+        let var = self.variant(vid)?;
+        let d = self.entry.config.d_model;
+        Ok(match bucket {
+            None => decode_trace(
+                vid,
+                &var.stages,
+                self.ranks,
+                d,
+                self.entry.config.slots,
+                "",
+                false,
+            ),
+            Some(b) => {
+                decode_trace(vid, &var.stages, self.ranks, d, b, &format!("_b{b}"), true)
+            }
+        })
+    }
+
+    /// The abstract dispatch trace of one chunk-prefill step under tier
+    /// `vid` (`None` on legacy manifests without the chunk family).
+    pub fn static_chunk_trace(
+        &self,
+        vid: &VariantId,
+        last: bool,
+    ) -> Result<Option<DispatchTrace>> {
+        let var = self.variant(vid)?;
+        Ok(self.prefill_chunk.map(|k| {
+            crate::model::prefill::chunk_step_trace(
+                vid,
+                &var.stages,
+                self.ranks,
+                self.entry.config.d_model,
+                k,
+                last,
+            )
+        }))
+    }
+
+    /// The per-rank resident-buffer sets this model's construction
+    /// establishes — the initial abstract state the binding checker
+    /// interprets against (and a testable claim: every name here must be
+    /// fetchable on the live mesh).
+    pub fn static_residents(&self) -> Vec<BTreeSet<String>> {
+        let variants: Vec<(VariantId, Vec<ServeStage>)> = self
+            .variants
+            .values()
+            .map(|v| (v.id.clone(), v.stages.clone()))
+            .collect();
+        initial_resident_names(&variants, self.ranks)
     }
 
     // ---- admission ---------------------------------------------------------
@@ -721,7 +1008,7 @@ impl ServingModel {
         }
         let t = crate::text::tokenizer::bucket_for(tokens.len(), &self.buckets)
             .ok_or_else(|| Error::Serving(format!("prompt too long: {}", tokens.len())))?;
-        self.ensure_execs(&Self::prefill_exec_keys(var, t))?;
+        self.ensure_execs(&prefill_exec_keys(&var.stages, t))?;
         let padded = crate::text::tokenizer::pad_to(tokens, t)?;
         let d = cfg.d_model;
         // modelled device compute: T padded tokens + the [T, V] logits
@@ -769,11 +1056,7 @@ impl ServingModel {
             let calls = (0..self.ranks)
                 .map(|rank| {
                     let mut args = vec![ArgRef::Resident("act".into())];
-                    args.extend(Self::stage_weight_args(
-                        stage,
-                        rank,
-                        &["ln1", "wq", "wk", "wv", "wo"],
-                    ));
+                    args.extend(stage_weight_args(stage, rank, &ATTN_FIELDS));
                     (
                         attn_key.clone(),
                         args,
@@ -791,7 +1074,7 @@ impl ServingModel {
 
             // --- insert KV stripes into the slot (both ranks, k then v)
             for (stripe, kv) in [("tmp.k", "k"), ("tmp.v", "v")] {
-                let cache = Self::cache_name(vid, kv, sidx);
+                let cache = cache_name(vid, kv, sidx);
                 let calls = (0..self.ranks)
                     .map(|_| {
                         (
@@ -813,11 +1096,7 @@ impl ServingModel {
             let calls = (0..self.ranks)
                 .map(|rank| {
                     let mut args = vec![ArgRef::Resident("act".into())];
-                    args.extend(Self::stage_weight_args(
-                        stage,
-                        rank,
-                        &["ln2", "wg", "wu", "wd"],
-                    ));
+                    args.extend(stage_weight_args(stage, rank, &FFN_FIELDS));
                     (ffn_key.clone(), args, vec![Some("act.partial".to_string())], vec![false])
                 })
                 .collect();
@@ -896,7 +1175,7 @@ impl ServingModel {
         lanes: Option<&[i32]>,
     ) -> Result<Vec<f32>> {
         let d = self.entry.config.d_model;
-        self.ensure_execs(&Self::decode_exec_keys(var, suffix))?;
+        self.ensure_execs(&decode_exec_keys(&var.stages, suffix))?;
         self.mesh.charge_compute(
             shape as u64 * var.flops_per_lane,
             decode_bytes(&self.entry.config, var.layers_equiv, shape),
@@ -934,16 +1213,12 @@ impl ServingModel {
             };
             let attn_key = format!("{attn_base}{suffix}");
             let ffn_key = format!("{ffn_base}{suffix}");
-            let kname = Self::cache_name(&var.id, "k", sidx);
-            let vname = Self::cache_name(&var.id, "v", sidx);
+            let kname = cache_name(&var.id, "k", sidx);
+            let vname = cache_name(&var.id, "v", sidx);
             let calls = (0..self.ranks)
                 .map(|rank| {
                     let mut args = vec![ArgRef::Resident("act".into())];
-                    args.extend(Self::stage_weight_args(
-                        stage,
-                        rank,
-                        &["ln1", "wq", "wk", "wv", "wo"],
-                    ));
+                    args.extend(stage_weight_args(stage, rank, &ATTN_FIELDS));
                     args.push(ArgRef::Resident(kname.clone()));
                     args.push(ArgRef::Resident(vname.clone()));
                     args.push(ArgRef::Resident("pos".into()));
@@ -968,11 +1243,7 @@ impl ServingModel {
             let calls = (0..self.ranks)
                 .map(|rank| {
                     let mut args = vec![ArgRef::Resident("act".into())];
-                    args.extend(Self::stage_weight_args(
-                        stage,
-                        rank,
-                        &["ln2", "wg", "wu", "wd"],
-                    ));
+                    args.extend(stage_weight_args(stage, rank, &FFN_FIELDS));
                     (
                         ffn_key.clone(),
                         args,
@@ -1102,7 +1373,7 @@ impl ServingModel {
         let cfg = &self.entry.config;
         let s = self.check_step_inputs(tokens, pos)?;
         let d = cfg.d_model;
-        self.ensure_execs(&Self::decode_exec_keys(var, ""))?;
+        self.ensure_execs(&decode_exec_keys(&var.stages, ""))?;
         self.mesh.charge_compute(
             s as u64 * var.flops_per_lane,
             decode_bytes(cfg, var.layers_equiv, s),
@@ -1127,17 +1398,13 @@ impl ServingModel {
                 ServeStage::Tp(_) => ("tpattn_decode", "tpffn_decode"),
                 ServeStage::Lp(..) => ("lpattn_decode", "lpffn_decode"),
             };
-            let kname = Self::cache_name(&var.id, "k", sidx);
-            let vname = Self::cache_name(&var.id, "v", sidx);
+            let kname = cache_name(&var.id, "k", sidx);
+            let vname = cache_name(&var.id, "v", sidx);
             let calls = (0..self.ranks)
                 .map(|rank| {
                     let mut args =
                         vec![ArgRef::Host(HostValue::f32(vec![s, d], x.clone()))];
-                    args.extend(Self::stage_weight_args(
-                        stage,
-                        rank,
-                        &["ln1", "wq", "wk", "wv", "wo"],
-                    ));
+                    args.extend(stage_weight_args(stage, rank, &ATTN_FIELDS));
                     args.push(ArgRef::Resident(kname.clone()));
                     args.push(ArgRef::Resident(vname.clone()));
                     args.push(ArgRef::Host(HostValue::i32(vec![s], pos.to_vec())));
@@ -1158,11 +1425,7 @@ impl ServingModel {
                 .map(|rank| {
                     let mut args =
                         vec![ArgRef::Host(HostValue::f32(vec![s, d], x.clone()))];
-                    args.extend(Self::stage_weight_args(
-                        stage,
-                        rank,
-                        &["ln2", "wg", "wu", "wd"],
-                    ));
+                    args.extend(stage_weight_args(stage, rank, &FFN_FIELDS));
                     (ffn_key.to_string(), args, vec![], vec![true])
                 })
                 .collect();

@@ -2,7 +2,6 @@
 //! plus the shard/merge views the executors need.
 
 use std::collections::HashMap;
-use std::io::Read;
 use std::path::Path;
 
 use crate::error::{Error, Result};
@@ -68,14 +67,12 @@ impl Weights {
     /// Load `<ckpt_dir>/weights.tdw`, validating against `cfg`.
     pub fn load(ckpt_dir: &Path, cfg: &ModelConfig) -> Result<Weights> {
         let path = ckpt_dir.join("weights.tdw");
-        let mut f = std::fs::File::open(&path).map_err(|e| {
+        let buf = std::fs::read(&path).map_err(|e| {
             Error::Weights(format!(
                 "cannot open {} (run `make models` first): {e}",
                 path.display()
             ))
         })?;
-        let mut buf = Vec::new();
-        f.read_to_end(&mut buf)?;
         let tensors = parse_tdw(&buf)?;
         let w = Weights { cfg: cfg.clone(), tensors };
         w.validate()?;

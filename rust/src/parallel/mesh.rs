@@ -40,6 +40,7 @@
 //! TTFT/latency and CI gates on it (`bin/perf_gate.rs`).
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use crate::config::InterconnectConfig;
@@ -222,11 +223,34 @@ impl MeshMetrics {
     }
 }
 
+/// One dispatch-layer event, as the mesh actually performed it. Recorded
+/// only while a trace is armed ([`Mesh::begin_trace`]) — the verifier's
+/// `crosscheck_trace` replays a protocol step with recording on and diffs
+/// the result against the *static* [`crate::verify::DispatchTrace`] the
+/// plan predicts, proving the abstract interpretation models the real
+/// dispatch sequence rather than a parallel fiction.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum MeshEvent {
+    /// `exec_all`: the same executable dispatched on every rank.
+    Exec { key: String, ranks: usize },
+    /// `exec_rank`: a single-rank dispatch (embed/logits edges).
+    ExecRank { key: String, rank: usize },
+    /// `upload_all`: fresh host data pushed to every rank.
+    Upload { name: String, ranks: usize },
+    /// `broadcast_resident`: device-to-device fan-out of an activation.
+    Broadcast { name: String },
+    /// `all_reduce` / `reduce_into`: a payload-bearing collective.
+    Collective { kind: &'static str, bytes: u64, ranks: usize },
+}
+
 pub struct Mesh {
     pub workers: Vec<WorkerHandle>,
     /// Device-time cost model (α–β interconnect + roofline + host link).
     pub cost: CostModel,
     pub metrics: MeshMetrics,
+    /// Armed event recorder (None = off, the default). Debug/verification
+    /// hook only — the hot path pays one uncontended lock + `is_some()`.
+    trace: Mutex<Option<Vec<MeshEvent>>>,
 }
 
 impl Mesh {
@@ -237,11 +261,29 @@ impl Mesh {
     /// Build with an explicit cost model (custom [`crate::config::DeviceProfile`]).
     pub fn with_cost(n_ranks: usize, cost: CostModel) -> Mesh {
         let workers = (0..n_ranks).map(WorkerHandle::spawn).collect();
-        Mesh { workers, cost, metrics: MeshMetrics::default() }
+        Mesh { workers, cost, metrics: MeshMetrics::default(), trace: Mutex::new(None) }
     }
 
     pub fn ranks(&self) -> usize {
         self.workers.len()
+    }
+
+    /// Arm the event recorder: subsequent dispatches/collectives append to
+    /// an in-order [`MeshEvent`] log until [`Mesh::take_trace`] drains it.
+    pub fn begin_trace(&self) {
+        *self.trace.lock().unwrap() = Some(Vec::new());
+    }
+
+    /// Drain the recorded events and disarm the recorder. Returns an empty
+    /// log if [`Mesh::begin_trace`] was never called.
+    pub fn take_trace(&self) -> Vec<MeshEvent> {
+        self.trace.lock().unwrap().take().unwrap_or_default()
+    }
+
+    fn record(&self, ev: MeshEvent) {
+        if let Some(log) = self.trace.lock().unwrap().as_mut() {
+            log.push(ev);
+        }
     }
 
     /// Charge one dispatch's modelled device work: `flops` of arithmetic
@@ -284,6 +326,9 @@ impl Mesh {
                 calls.len(),
                 self.workers.len()
             )));
+        }
+        if let Some((key, ..)) = calls.first() {
+            self.record(MeshEvent::Exec { key: key.clone(), ranks: calls.len() });
         }
         let t0 = Instant::now();
         // One modelled kernel launch per dispatch event (the ranks run the
@@ -329,6 +374,7 @@ impl Mesh {
             .workers
             .get(rank)
             .ok_or_else(|| Error::msg(format!("exec_rank: no rank {rank}")))?;
+        self.record(MeshEvent::ExecRank { key: key.to_string(), rank });
         // charge at metering time — see the invariant note in `exec_all`
         self.metrics.charge_compute_time(self.cost.launch_cost(1));
         let bytes = self.metrics.count_host_in(&args);
@@ -362,6 +408,7 @@ impl Mesh {
     /// buffer on every rank. Counted as host→device transfers — this is
     /// real host traffic in any deployment.
     pub fn upload_all(&self, name: &str, value: HostValue) -> Result<()> {
+        self.record(MeshEvent::Upload { name: name.to_string(), ranks: self.workers.len() });
         let bytes = value.num_bytes() as u64;
         self.store_all(name, &value)?;
         let total = bytes * self.workers.len() as u64;
@@ -379,6 +426,7 @@ impl Mesh {
     /// traffic; the simulation merely routes the bytes through the
     /// coordinator because the PJRT CPU devices share no interconnect.
     pub fn broadcast_resident(&self, name: &str, value: &HostValue) -> Result<()> {
+        self.record(MeshEvent::Broadcast { name: name.to_string() });
         self.store_all(name, value)
     }
 
@@ -389,6 +437,7 @@ impl Mesh {
         let t0 = Instant::now();
         let bytes = parts.first().map(|p| p.num_bytes()).unwrap_or(0);
         let g = parts.len();
+        self.record(MeshEvent::Collective { kind: "all_reduce", bytes: bytes as u64, ranks: g });
         let out = all_reduce_sum(parts)?;
         let modelled = self.cost.net.charge_all_reduce(bytes, g);
         self.metrics.sync_ops.fetch_add(1, Ordering::Relaxed);
@@ -424,6 +473,7 @@ impl Mesh {
         }
         let bytes = parts.first().map(|p| p.num_bytes()).unwrap_or(0);
         let g = parts.len();
+        self.record(MeshEvent::Collective { kind: "reduce_into", bytes: bytes as u64, ranks: g });
         let reduced = all_reduce_sum(parts)?;
         let shape = reduced.shape().to_vec();
         let rdata = reduced.as_f32()?;
@@ -596,6 +646,35 @@ mod tests {
         let (ops, _, _, _) = mesh.metrics.snapshot();
         assert_eq!(ops, 1, "reduce_into is one sync op");
         assert_eq!(mesh.metrics.host_transfers().ops(), 0, "collective legs are not host traffic");
+    }
+
+    #[test]
+    fn trace_records_dispatches_only_while_armed() {
+        let mesh = Mesh::new(2, quiet_net());
+        let v = HostValue::f32(vec![2], vec![1.0, 2.0]);
+        // recorder off: nothing logged
+        mesh.upload_all("pos", v.clone()).unwrap();
+        assert!(mesh.take_trace().is_empty());
+        // armed: events appear in dispatch order with exact payload fields
+        mesh.begin_trace();
+        mesh.upload_all("pos", v.clone()).unwrap();
+        mesh.broadcast_resident("act", &v).unwrap();
+        mesh.workers[0].store("p", v.clone()).unwrap();
+        mesh.workers[1].store("p", v.clone()).unwrap();
+        let mut shadow = vec![0.0f32; 2];
+        mesh.reduce_into("p", &mut shadow, "act").unwrap();
+        let tr = mesh.take_trace();
+        assert_eq!(
+            tr,
+            vec![
+                MeshEvent::Upload { name: "pos".into(), ranks: 2 },
+                MeshEvent::Broadcast { name: "act".into() },
+                MeshEvent::Collective { kind: "reduce_into", bytes: 8, ranks: 2 },
+            ]
+        );
+        // draining disarms the recorder
+        mesh.broadcast_resident("act", &v).unwrap();
+        assert!(mesh.take_trace().is_empty());
     }
 
     #[test]

@@ -18,6 +18,6 @@ pub mod mesh;
 pub mod simnet;
 pub mod worker;
 
-pub use mesh::{HostTransfers, Mesh, MeshMetrics};
+pub use mesh::{HostTransfers, Mesh, MeshEvent, MeshMetrics};
 pub use simnet::{CostModel, SimNet};
 pub use worker::{ArgRef, WorkerHandle};

@@ -57,6 +57,41 @@
 //! selects). The section is optional: legacy manifests parse with a single
 //! synthesized `dense` variant (the sequential plan over `n_layers`), so
 //! the registry degrades to exactly the pre-redesign single-plan serving.
+//!
+//! ## Invariants (statically verified)
+//!
+//! [`Manifest::load`] runs the `crate::verify` pass over every parsed
+//! manifest and rejects it — at load time, with `VariantId`-qualified
+//! diagnostics — if any of these invariants fail:
+//!
+//! * **Coverage** — every variant covers each of the model's `n_layers`
+//!   transformer layers exactly once; stage arity is 1 (TP) or 2 (LP pair);
+//!   LP pairs are adjacent `[i, i+1]`. (Pairs forming a non-contiguous band
+//!   are a warning: servable, but not a shape the paper's transform emits.)
+//! * **Executables** — every executable a variant's stage walk dispatches
+//!   (decode, per-`seq_buckets` prefill, chunk when `prefill_chunk` is set)
+//!   exists in the `artifacts` section. Missing per-`batch_buckets`
+//!   executables are a warning (the runtime falls back to fixed-`[S]`).
+//! * **Buckets/chunk** — `batch_buckets` unique and within `slots`;
+//!   `prefill_chunk` divides every model's `ctx`.
+//! * **Bindings** — abstract interpretation of each variant's dispatch
+//!   sequence: every resident buffer is written before read, no executable
+//!   is used after release, and every weight key (`l{i}.tp.*` /
+//!   `l{i}.full.*`) and KV key (`kv.{tier}.*`) a stage references exists in
+//!   the resident set the loader would build.
+//! * **Collectives** — all ranks issue the same collective sequence with
+//!   identical payload shapes, so a rank-divergent plan is a load-time
+//!   error instead of a serving-time deadlock.
+//!
+//! In addition the *parser itself* rejects malformed sections outright
+//! (duplicate JSON keys — e.g. two variants with one id — via
+//! `util::json`; a present-but-empty `variants` section; non-numeric or
+//! duplicate `batch_buckets` / `seq_buckets`; a zero `prefill_chunk`)
+//! rather than silently coercing them. `Manifest::load_strict` additionally
+//! promotes warnings to errors and checks artifact files on disk;
+//! `Manifest::load_unverified` parses without the verify pass (the `verify`
+//! CLI uses it so it can render *all* diagnostics, not just the first
+//! error).
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -211,7 +246,33 @@ pub struct Manifest {
 }
 
 impl Manifest {
+    /// Parse `dir/manifest.json` and reject it with `VariantId`-qualified
+    /// diagnostics if the static verification pass (`crate::verify`) finds
+    /// any error — see the module-level *Invariants* section.
     pub fn load(dir: &Path) -> Result<Manifest> {
+        let m = Self::parse(dir)?;
+        crate::verify::check_load(&m)?;
+        Ok(m)
+    }
+
+    /// Strict load: the verify pass additionally checks that every
+    /// artifact file exists on disk, and *any* finding — warnings
+    /// included — rejects the manifest. The CI artifact-verification gate
+    /// goes through here (`bin/verify_artifacts.rs`).
+    pub fn load_strict(dir: &Path) -> Result<Manifest> {
+        let m = Self::parse(dir)?;
+        crate::verify::check_strict(&m)?;
+        Ok(m)
+    }
+
+    /// Parse without the verify pass. The `truedepth verify` CLI uses this
+    /// so it can render *every* diagnostic instead of failing on the first
+    /// error; everything that serves should go through [`Manifest::load`].
+    pub fn load_unverified(dir: &Path) -> Result<Manifest> {
+        Self::parse(dir)
+    }
+
+    fn parse(dir: &Path) -> Result<Manifest> {
         let text = std::fs::read_to_string(dir.join("manifest.json")).map_err(|e| {
             Error::msg(format!(
                 "cannot read {}/manifest.json (run `make artifacts` first): {e}",
@@ -226,15 +287,46 @@ impl Manifest {
             .ok_or_else(|| Error::msg("manifest `models` not an object"))?
         {
             let config = ModelConfig::from_json(entry.req("config")?)?;
-            let batch_buckets: Vec<usize> = entry
-                .get("batch_buckets")
-                .and_then(|v| v.as_arr())
-                .unwrap_or(&[])
-                .iter()
-                .filter_map(|b| b.as_usize())
-                .collect();
+            // Strict bucket parsing: a non-numeric or duplicate entry must
+            // not silently vanish from the registry (the runtime would then
+            // quietly never route to that bucket's executables).
+            let mut batch_buckets: Vec<usize> = Vec::new();
+            if let Some(bb) = entry.get("batch_buckets") {
+                let arr = bb.as_arr().ok_or_else(|| {
+                    Error::msg(format!("{mname}: `batch_buckets` not an array"))
+                })?;
+                for b in arr {
+                    let b = b
+                        .as_f64()
+                        .filter(|f| f.fract() == 0.0 && *f > 0.0)
+                        .map(|f| f as usize)
+                        .ok_or_else(|| {
+                            Error::msg(format!(
+                                "{mname}: `batch_buckets` entry not a positive integer"
+                            ))
+                        })?;
+                    if batch_buckets.contains(&b) {
+                        return Err(Error::msg(format!(
+                            "{mname}: duplicate batch bucket {b}"
+                        )));
+                    }
+                    batch_buckets.push(b);
+                }
+            }
             let mut variants = BTreeMap::new();
-            if let Some(vs) = entry.get("variants").and_then(|v| v.as_obj()) {
+            if let Some(vsec) = entry.get("variants") {
+                let vs = vsec.as_obj().ok_or_else(|| {
+                    Error::msg(format!("{mname}: `variants` not an object"))
+                })?;
+                if vs.is_empty() {
+                    // an empty registry would serve *no* tiers; only a fully
+                    // absent section means "legacy manifest, synthesize dense"
+                    return Err(Error::msg(format!(
+                        "{mname}: `variants` section is empty — list at least one \
+                         tier, or delete the section to get the legacy synthesized \
+                         `dense` variant"
+                    )));
+                }
                 for (vname, vspec) in vs {
                     // Strict parsing: a malformed variant must error here,
                     // not serve a silently-wrong graph (e.g. a non-array
@@ -313,6 +405,35 @@ impl Manifest {
                 ModelEntry { config, batch_buckets, variants, artifacts },
             );
         }
+        let mut seq_buckets: Vec<usize> = Vec::new();
+        for b in v
+            .req("seq_buckets")?
+            .as_arr()
+            .ok_or_else(|| Error::msg("manifest `seq_buckets` not an array"))?
+        {
+            let b = b
+                .as_f64()
+                .filter(|f| f.fract() == 0.0 && *f > 0.0)
+                .map(|f| f as usize)
+                .ok_or_else(|| {
+                    Error::msg("manifest `seq_buckets` entry not a positive integer")
+                })?;
+            if seq_buckets.contains(&b) {
+                return Err(Error::msg(format!("duplicate seq bucket {b}")));
+            }
+            seq_buckets.push(b);
+        }
+        let prefill_chunk = match v.get("prefill_chunk") {
+            None | Some(Value::Null) => None,
+            Some(c) => Some(
+                c.as_f64()
+                    .filter(|f| f.fract() == 0.0 && *f > 0.0)
+                    .map(|f| f as usize)
+                    .ok_or_else(|| {
+                        Error::msg("manifest `prefill_chunk` must be a positive integer")
+                    })?,
+            ),
+        };
         Ok(Manifest {
             dir: dir.to_path_buf(),
             impl_name: v
@@ -320,17 +441,8 @@ impl Manifest {
                 .as_str()
                 .unwrap_or("pallas")
                 .to_string(),
-            seq_buckets: v
-                .req("seq_buckets")?
-                .as_arr()
-                .unwrap_or(&[])
-                .iter()
-                .filter_map(|b| b.as_usize())
-                .collect(),
-            prefill_chunk: v
-                .get("prefill_chunk")
-                .and_then(|c| c.as_usize())
-                .filter(|&c| c > 0),
+            seq_buckets,
+            prefill_chunk,
             models,
         })
     }

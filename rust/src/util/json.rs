@@ -255,6 +255,12 @@ impl<'a> Parser<'a> {
             self.eat(b':')?;
             self.ws();
             let v = self.value()?;
+            // RFC 8259 leaves duplicate names undefined behaviour; for the
+            // manifest they are always a bug (e.g. two plan variants under
+            // one id, where last-wins would silently drop a tier) — reject.
+            if m.contains_key(&k) {
+                return Err(self.err(&format!("duplicate object key `{k}`")));
+            }
             m.insert(k, v);
             self.ws();
             match self.peek() {
@@ -412,6 +418,15 @@ mod tests {
         assert!(Value::parse("[1,]").is_err());
         assert!(Value::parse("hello").is_err());
         assert!(Value::parse("{}extra").is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_object_keys() {
+        let e = Value::parse(r#"{"a": 1, "a": 2}"#).unwrap_err();
+        assert!(e.to_string().contains("duplicate object key `a`"), "{e}");
+        // nested objects are checked too; distinct keys still parse
+        assert!(Value::parse(r#"{"v": {"lp": 1, "lp": 2}}"#).is_err());
+        assert!(Value::parse(r#"{"a": 1, "b": {"a": 2}}"#).is_ok());
     }
 
     #[test]

@@ -1,0 +1,310 @@
+//! binding_check: abstract interpretation of a dispatch trace against the
+//! resident-buffer state of each rank.
+//!
+//! The interpreter walks one [`DispatchTrace`] op by op, tracking per rank
+//! the set of resident buffer names written so far (seeded with the
+//! post-`upload_weights`/`init_caches` resident set) and the set of
+//! ensured executables. Every `ArgRef::Resident` read must be preceded by
+//! a write on that rank; every exec key must be ensured and not released;
+//! weight-key and KV-key misses get their own diagnostic codes so a
+//! manifest/schema mismatch reads differently from a protocol ordering
+//! bug.
+
+use std::collections::BTreeSet;
+
+use crate::runtime::VariantId;
+
+use super::trace::{DispatchTrace, TraceOp};
+use super::{Check, Diagnostic};
+
+/// Classify a missing-read diagnostic by the name's key schema.
+fn missing_read_code(name: &str) -> &'static str {
+    if name.starts_with("kv.") {
+        "binding.missing-kv-key"
+    } else if name == "emb"
+        || name == "lnf"
+        || name == "wout"
+        || (name.starts_with('l') && (name.contains(".tp.") || name.contains(".full.")))
+    {
+        "binding.missing-weight-key"
+    } else {
+        "binding.read-before-write"
+    }
+}
+
+/// Interpret `trace` against the per-rank initial resident sets (index =
+/// rank). Returns one diagnostic per violation, `VariantId`-qualified and
+/// carrying the trace label so a finding points at one protocol step of
+/// one variant.
+pub fn binding_check(
+    model: &str,
+    vid: &VariantId,
+    trace: &DispatchTrace,
+    initial: &[BTreeSet<String>],
+) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    let label = &trace.label;
+    let mut err = |code: &'static str, message: String| {
+        diags.push(Diagnostic::error(Check::Binding, model, Some(vid), code, message));
+    };
+
+    if initial.len() != trace.ranks {
+        err(
+            "binding.rank-out-of-range",
+            format!(
+                "{label}: trace spans {} ranks but the resident model covers {}",
+                trace.ranks,
+                initial.len()
+            ),
+        );
+        return diags;
+    }
+
+    let mut residents: Vec<BTreeSet<String>> = initial.to_vec();
+    let mut ensured: BTreeSet<String> = BTreeSet::new();
+    let mut released: BTreeSet<String> = BTreeSet::new();
+
+    // shared read/write walk for both exec forms
+    let mut step =
+        |residents: &mut Vec<BTreeSet<String>>,
+         diags: &mut Vec<Diagnostic>,
+         rank: usize,
+         key: &str,
+         reads: &[String],
+         writes: &[String]| {
+            for r in reads {
+                if !residents[rank].contains(r) {
+                    diags.push(Diagnostic::error(
+                        Check::Binding,
+                        model,
+                        Some(vid),
+                        missing_read_code(r),
+                        format!(
+                            "{label}: `{key}` on rank {rank} reads resident `{r}` \
+                             which was never written on that rank"
+                        ),
+                    ));
+                }
+            }
+            for w in writes {
+                residents[rank].insert(w.clone());
+            }
+        };
+
+    for op in &trace.ops {
+        match op {
+            TraceOp::EnsureExecs { keys } => {
+                for k in keys {
+                    released.remove(k);
+                    ensured.insert(k.clone());
+                }
+            }
+            TraceOp::ReleaseExec { key } => {
+                ensured.remove(key);
+                released.insert(key.clone());
+            }
+            TraceOp::UploadAll { name } => {
+                for r in &mut residents {
+                    r.insert(name.clone());
+                }
+            }
+            TraceOp::BroadcastResident { name, .. } => {
+                // store_all under the hood: the buffer lands on every rank
+                for r in &mut residents {
+                    r.insert(name.clone());
+                }
+            }
+            TraceOp::ExecRank { rank, key, reads, writes } => {
+                if released.contains(key) {
+                    err(
+                        "binding.exec-released",
+                        format!(
+                            "{label}: executable `{key}` used after release \
+                             (dangling across ExecCache eviction)"
+                        ),
+                    );
+                } else if !ensured.contains(key) {
+                    err(
+                        "binding.exec-not-ensured",
+                        format!("{label}: executable `{key}` dispatched without EnsureExecs"),
+                    );
+                }
+                if *rank >= trace.ranks {
+                    err(
+                        "binding.rank-out-of-range",
+                        format!(
+                            "{label}: `{key}` targets rank {rank} of a {}-rank mesh",
+                            trace.ranks
+                        ),
+                    );
+                    continue;
+                }
+                step(&mut residents, &mut diags, *rank, key, reads, writes);
+            }
+            TraceOp::ExecAll { key, per_rank } => {
+                if released.contains(key) {
+                    err(
+                        "binding.exec-released",
+                        format!(
+                            "{label}: executable `{key}` used after release \
+                             (dangling across ExecCache eviction)"
+                        ),
+                    );
+                } else if !ensured.contains(key) {
+                    err(
+                        "binding.exec-not-ensured",
+                        format!("{label}: executable `{key}` dispatched without EnsureExecs"),
+                    );
+                }
+                if per_rank.len() != trace.ranks {
+                    err(
+                        "binding.arity",
+                        format!(
+                            "{label}: exec_all `{key}` carries {} per-rank calls on a \
+                             {}-rank mesh",
+                            per_rank.len(),
+                            trace.ranks
+                        ),
+                    );
+                    continue;
+                }
+                for (rank, io) in per_rank.iter().enumerate() {
+                    step(&mut residents, &mut diags, rank, key, &io.reads, &io.writes);
+                }
+            }
+            TraceOp::ReduceInto { partial, dest, .. } => {
+                // fetches `partial` from every rank, then store_all(dest)
+                for (rank, r) in residents.iter_mut().enumerate() {
+                    if !r.contains(partial) {
+                        diags.push(Diagnostic::error(
+                            Check::Binding,
+                            model,
+                            Some(vid),
+                            missing_read_code(partial),
+                            format!(
+                                "{label}: reduce_into reads partial `{partial}` on rank \
+                                 {rank} which was never written on that rank"
+                            ),
+                        ));
+                    }
+                    r.insert(dest.clone());
+                }
+            }
+        }
+    }
+    diags
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::trace::RankIo;
+    use super::*;
+
+    fn vid() -> VariantId {
+        VariantId::new("lp")
+    }
+
+    fn residents_with(names: &[&str]) -> Vec<BTreeSet<String>> {
+        let set: BTreeSet<String> = names.iter().map(|s| (*s).to_string()).collect();
+        vec![set.clone(), set]
+    }
+
+    fn trace(ops: Vec<TraceOp>) -> DispatchTrace {
+        DispatchTrace { label: "decode[lp]@2".into(), ranks: 2, ops }
+    }
+
+    fn codes(d: &[Diagnostic]) -> Vec<&'static str> {
+        d.iter().map(|x| x.code).collect()
+    }
+
+    #[test]
+    fn read_before_write_on_plain_buffer() {
+        let t = trace(vec![
+            TraceOp::EnsureExecs { keys: vec!["k".into()] },
+            TraceOp::ExecAll {
+                key: "k".into(),
+                per_rank: vec![
+                    RankIo { reads: vec!["act".into()], writes: vec![] },
+                    RankIo { reads: vec!["act".into()], writes: vec![] },
+                ],
+            },
+        ]);
+        let d = binding_check("m", &vid(), &t, &residents_with(&[]));
+        assert_eq!(codes(&d), vec!["binding.read-before-write", "binding.read-before-write"]);
+        assert!(d[0].to_string().contains("variant `lp`"), "{}", d[0]);
+        assert!(d[0].message.contains("decode[lp]@2"), "{}", d[0]);
+    }
+
+    #[test]
+    fn write_then_read_is_clean_and_per_rank() {
+        let t = trace(vec![
+            TraceOp::EnsureExecs { keys: vec!["k".into()] },
+            TraceOp::BroadcastResident { name: "act".into(), elems: 4 },
+            TraceOp::ExecAll {
+                key: "k".into(),
+                per_rank: vec![
+                    RankIo { reads: vec!["act".into()], writes: vec!["act.partial".into()] },
+                    RankIo { reads: vec!["act".into()], writes: vec![] },
+                ],
+            },
+            // rank 1 never wrote act.partial → exactly one finding
+            TraceOp::ReduceInto { partial: "act.partial".into(), dest: "act".into(), elems: 4 },
+        ]);
+        let d = binding_check("m", &vid(), &t, &residents_with(&[]));
+        assert_eq!(codes(&d), vec!["binding.read-before-write"]);
+        assert!(d[0].message.contains("rank 1"), "{}", d[0]);
+    }
+
+    #[test]
+    fn missing_weight_and_kv_keys_get_schema_codes() {
+        let t = trace(vec![
+            TraceOp::EnsureExecs { keys: vec!["k".into()] },
+            TraceOp::ExecAll {
+                key: "k".into(),
+                per_rank: vec![
+                    RankIo {
+                        reads: vec!["l0.tp.wq".into(), "kv.lp.k.0".into(), "lnf".into()],
+                        writes: vec![],
+                    },
+                    RankIo { reads: vec![], writes: vec![] },
+                ],
+            },
+        ]);
+        let d = binding_check("m", &vid(), &t, &residents_with(&["lnf"]));
+        assert_eq!(codes(&d), vec!["binding.missing-weight-key", "binding.missing-kv-key"]);
+    }
+
+    #[test]
+    fn exec_lifecycle_violations() {
+        let t = trace(vec![
+            TraceOp::ExecRank { rank: 0, key: "cold".into(), reads: vec![], writes: vec![] },
+            TraceOp::EnsureExecs { keys: vec!["k".into()] },
+            TraceOp::ReleaseExec { key: "k".into() },
+            TraceOp::ExecRank { rank: 0, key: "k".into(), reads: vec![], writes: vec![] },
+        ]);
+        let d = binding_check("m", &vid(), &t, &residents_with(&[]));
+        assert_eq!(codes(&d), vec!["binding.exec-not-ensured", "binding.exec-released"]);
+        // re-ensure after release clears the dangle
+        let t = trace(vec![
+            TraceOp::EnsureExecs { keys: vec!["k".into()] },
+            TraceOp::ReleaseExec { key: "k".into() },
+            TraceOp::EnsureExecs { keys: vec!["k".into()] },
+            TraceOp::ExecRank { rank: 0, key: "k".into(), reads: vec![], writes: vec![] },
+        ]);
+        assert!(binding_check("m", &vid(), &t, &residents_with(&[])).is_empty());
+    }
+
+    #[test]
+    fn structural_violations() {
+        let t = trace(vec![
+            TraceOp::EnsureExecs { keys: vec!["k".into()] },
+            TraceOp::ExecRank { rank: 5, key: "k".into(), reads: vec![], writes: vec![] },
+            TraceOp::ExecAll {
+                key: "k".into(),
+                per_rank: vec![RankIo { reads: vec![], writes: vec![] }],
+            },
+        ]);
+        let d = binding_check("m", &vid(), &t, &residents_with(&[]));
+        assert_eq!(codes(&d), vec!["binding.rank-out-of-range", "binding.arity"]);
+    }
+}

@@ -1,0 +1,150 @@
+//! collective_check: MPI-style matching of per-rank collective streams.
+//!
+//! The mesh's collectives (`broadcast_resident`, `reduce_into`) are
+//! rendezvous points: every rank must issue the same collective, in the
+//! same order, with the same payload shape, or some rank blocks forever
+//! waiting for a peer that went elsewhere. This analysis compares each
+//! rank's projected collective stream ([`DispatchTrace::
+//! rank_collective_streams`](super::trace::DispatchTrace::rank_collective_streams))
+//! against rank 0's and turns the three SPMD divergence classes into
+//! load-time diagnostics:
+//!
+//! * `collective.sequence-diverged` — rank r's i-th collective is a
+//!   different op or buffer than rank 0's i-th;
+//! * `collective.payload-diverged` — same op, different element count
+//!   (shape mismatch corrupts the reduction);
+//! * `collective.count-diverged` — one rank issues fewer collectives, so
+//!   its peers block in a rendezvous it never enters: the deadlock.
+
+use crate::runtime::VariantId;
+
+use super::trace::CollectiveEvent;
+use super::{Check, Diagnostic};
+
+/// Match every rank's collective stream against rank 0's. `label` names
+/// the protocol step (the trace label) in diagnostics.
+pub fn collective_check(
+    model: &str,
+    vid: &VariantId,
+    label: &str,
+    streams: &[Vec<CollectiveEvent>],
+) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    let Some(base) = streams.first() else { return diags };
+    let mut err = |code: &'static str, message: String| {
+        diags.push(Diagnostic::error(Check::Collective, model, Some(vid), code, message));
+    };
+
+    for (rank, stream) in streams.iter().enumerate().skip(1) {
+        let mut diverged = false;
+        for (i, (a, b)) in base.iter().zip(stream.iter()).enumerate() {
+            if a.kind != b.kind || a.name != b.name {
+                err(
+                    "collective.sequence-diverged",
+                    format!(
+                        "{label}: collective #{i} diverges — rank 0 issues {a}, \
+                         rank {rank} issues {b}; the ranks rendezvous in different \
+                         collectives and the mesh deadlocks"
+                    ),
+                );
+                diverged = true;
+                break; // everything after the first divergence is noise
+            }
+            if a.elems != b.elems {
+                err(
+                    "collective.payload-diverged",
+                    format!(
+                        "{label}: collective #{i} ({a}) carries {} elems on rank \
+                         {rank} — shape-mismatched reduction",
+                        b.elems
+                    ),
+                );
+            }
+        }
+        if !diverged && base.len() != stream.len() {
+            let (short, long) = if stream.len() < base.len() { (rank, 0) } else { (0, rank) };
+            err(
+                "collective.count-diverged",
+                format!(
+                    "{label}: rank 0 issues {} collectives, rank {rank} issues {} — \
+                     rank {short} exits the step while rank {long} blocks in its next \
+                     collective forever (deadlock)",
+                    base.len(),
+                    stream.len()
+                ),
+            );
+        }
+    }
+    diags
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::trace::CollectiveKind;
+    use super::*;
+
+    fn vid() -> VariantId {
+        VariantId::new("lp")
+    }
+
+    fn ev(kind: CollectiveKind, name: &str, elems: usize) -> CollectiveEvent {
+        CollectiveEvent { kind, name: name.into(), elems }
+    }
+
+    fn codes(d: &[Diagnostic]) -> Vec<&'static str> {
+        d.iter().map(|x| x.code).collect()
+    }
+
+    #[test]
+    fn uniform_streams_are_clean() {
+        let s = vec![
+            ev(CollectiveKind::Broadcast, "act", 8),
+            ev(CollectiveKind::Reduce, "act.partial", 8),
+        ];
+        let d = collective_check("m", &vid(), "decode[lp]@2", &[s.clone(), s]);
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn single_rank_or_empty_is_vacuously_clean() {
+        assert!(collective_check("m", &vid(), "t", &[]).is_empty());
+        let s = vec![ev(CollectiveKind::Reduce, "x", 1)];
+        assert!(collective_check("m", &vid(), "t", &[s]).is_empty());
+    }
+
+    #[test]
+    fn sequence_divergence_reports_once_per_rank() {
+        let a = vec![
+            ev(CollectiveKind::Broadcast, "act", 8),
+            ev(CollectiveKind::Reduce, "act.partial", 8),
+        ];
+        let b = vec![
+            ev(CollectiveKind::Reduce, "act.partial", 8),
+            ev(CollectiveKind::Broadcast, "act", 8),
+        ];
+        let d = collective_check("m", &vid(), "decode[lp]@2", &[a, b]);
+        assert_eq!(codes(&d), vec!["collective.sequence-diverged"]);
+        assert!(d[0].to_string().contains("variant `lp`"), "{}", d[0]);
+        assert!(d[0].message.contains("rank 1"), "{}", d[0]);
+    }
+
+    #[test]
+    fn payload_divergence_flags_shape_mismatch() {
+        let a = vec![ev(CollectiveKind::Reduce, "act.partial", 8)];
+        let b = vec![ev(CollectiveKind::Reduce, "act.partial", 16)];
+        let d = collective_check("m", &vid(), "t", &[a, b]);
+        assert_eq!(codes(&d), vec!["collective.payload-diverged"]);
+    }
+
+    #[test]
+    fn count_divergence_names_the_blocked_rank() {
+        let a = vec![
+            ev(CollectiveKind::Reduce, "act.partial", 8),
+            ev(CollectiveKind::Reduce, "act.partial", 8),
+        ];
+        let b = vec![ev(CollectiveKind::Reduce, "act.partial", 8)];
+        let d = collective_check("m", &vid(), "t", &[a, b]);
+        assert_eq!(codes(&d), vec!["collective.count-diverged"]);
+        assert!(d[0].message.contains("deadlock"), "{}", d[0]);
+    }
+}

@@ -1,0 +1,513 @@
+//! Static verification of artifacts and plans: the load-time checker
+//! behind `truedepth verify`, `bin/verify_artifacts` and the CI verify job.
+//!
+//! Since the plan-variant registry, the computational graph is *data* — a
+//! manifest `variants` section of stage lists, picked per request. This
+//! module proves a manifest's plans are well-formed **before** they reach
+//! the hot path, the way sharded training stacks verify SPMD programs
+//! before launch. Three analyses:
+//!
+//! * [`plan_check`] — every [`crate::runtime::VariantSpec`] covers each
+//!   transformer layer exactly once, LP pairs are adjacent (bands
+//!   contiguous, as a warning), every stage resolves to executables that
+//!   exist in the manifest, and bucket sets / `prefill_chunk` / the
+//!   KV-cache schema are mutually consistent.
+//! * [`binding_check`] — abstract interpretation of the dispatch sequence
+//!   each plan induces (a [`trace::DispatchTrace`] emitted by the serving
+//!   executor's own dispatch code): every `ArgRef::Resident` is written
+//!   before it is read, no exec key is used after `ExecCache` release, and
+//!   the weight (`l{i}.tp.*` / `l{i}.full.*`) and KV (`kv.{tier}.*`) keys a
+//!   stage binds all exist in the initial resident set.
+//! * [`collective_check`] — MPI-style matching of the per-rank collective
+//!   streams, proving all ranks issue the same collective sequence with
+//!   identical payload shapes, so a rank-divergent plan is a load-time
+//!   error instead of a mesh deadlock.
+//!
+//! Every diagnostic is `VariantId`-qualified ([`Diagnostic`]). Entry
+//! points: [`verify_manifest`] (pure), [`verify_manifest_files`] (adds
+//! artifact-file existence), [`check_load`] (error-severity gate run by
+//! `Manifest::load`), [`check_strict`] (warnings fail too — the CI mode),
+//! and [`run_cli`] (the printer both CLIs share). [`crosscheck_trace`]
+//! pins the static traces to the mesh's recorded dispatch events
+//! ([`crate::parallel::Mesh::begin_trace`]).
+
+pub mod binding_check;
+pub mod collective_check;
+pub mod plan_check;
+pub mod trace;
+
+pub use binding_check::binding_check;
+pub use collective_check::collective_check;
+pub use plan_check::check_model;
+pub use trace::{CollectiveEvent, CollectiveKind, DispatchTrace, RankIo, TraceOp};
+
+use std::fmt;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::model::plan::GraphPlan;
+use crate::model::prefill::chunk_step_trace;
+use crate::model::serving::{
+    decode_trace, initial_resident_names, prefill_trace, serve_stages, ServeStage, SERVE_RANKS,
+};
+use crate::parallel::MeshEvent;
+use crate::runtime::{Manifest, VariantId};
+
+/// Which analysis produced a diagnostic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Check {
+    Plan,
+    Binding,
+    Collective,
+    /// The static-trace/recorded-dispatch cross-check ([`crosscheck_trace`]).
+    Trace,
+}
+
+impl fmt::Display for Check {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Check::Plan => write!(f, "plan"),
+            Check::Binding => write!(f, "binding"),
+            Check::Collective => write!(f, "collective"),
+            Check::Trace => write!(f, "trace"),
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    /// Suspicious but servable — fails only `--strict` / [`check_strict`].
+    Warn,
+    /// Malformed — [`check_load`] rejects the manifest.
+    Error,
+}
+
+/// One finding, qualified by model and (where applicable) plan variant, so
+/// a broken tier names itself: `td-small / variant `lp`: [plan.pair-not-adjacent] …`.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    pub model: String,
+    pub variant: Option<VariantId>,
+    pub check: Check,
+    pub severity: Severity,
+    /// Stable machine-readable code, e.g. `plan.layer-covered-twice` — the
+    /// corpus tests key on these.
+    pub code: &'static str,
+    pub message: String,
+}
+
+impl Diagnostic {
+    pub fn error(
+        check: Check,
+        model: &str,
+        variant: Option<&VariantId>,
+        code: &'static str,
+        message: String,
+    ) -> Diagnostic {
+        Diagnostic {
+            model: model.to_string(),
+            variant: variant.cloned(),
+            check,
+            severity: Severity::Error,
+            code,
+            message,
+        }
+    }
+
+    pub fn warn(
+        check: Check,
+        model: &str,
+        variant: Option<&VariantId>,
+        code: &'static str,
+        message: String,
+    ) -> Diagnostic {
+        Diagnostic { severity: Severity::Warn, ..Diagnostic::error(check, model, variant, code, message) }
+    }
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let sev = match self.severity {
+            Severity::Error => "error",
+            Severity::Warn => "warn",
+        };
+        match &self.variant {
+            Some(vid) => write!(
+                f,
+                "{sev}: {} / variant `{vid}`: [{}] {}",
+                self.model, self.code, self.message
+            ),
+            None => write!(f, "{sev}: {}: [{}] {}", self.model, self.code, self.message),
+        }
+    }
+}
+
+/// The outcome of a verification pass.
+#[derive(Debug, Default)]
+pub struct VerifyReport {
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl VerifyReport {
+    pub fn is_clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    pub fn has_errors(&self) -> bool {
+        self.diagnostics.iter().any(|d| d.severity == Severity::Error)
+    }
+
+    pub fn errors(&self) -> impl Iterator<Item = &Diagnostic> {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Error)
+    }
+
+    /// All diagnostics, one per line, errors first.
+    pub fn render(&self) -> String {
+        let mut lines: Vec<String> = self.errors().map(|d| d.to_string()).collect();
+        lines.extend(
+            self.diagnostics
+                .iter()
+                .filter(|d| d.severity == Severity::Warn)
+                .map(|d| d.to_string()),
+        );
+        lines.join("\n")
+    }
+
+    /// Error-severity diagnostics only, one per line.
+    pub fn render_errors(&self) -> String {
+        self.errors().map(|d| d.to_string()).collect::<Vec<_>>().join("\n")
+    }
+}
+
+/// The serve-time stage walks of a model's parseable variants — the inputs
+/// of the dispatch-level (binding/collective) analyses. Variants whose
+/// plans do not parse are reported by [`plan_check`] and skipped here.
+fn servable_variants(
+    entry: &crate::runtime::ModelEntry,
+) -> Vec<(VariantId, Vec<ServeStage>)> {
+    entry
+        .variants
+        .values()
+        .filter_map(|spec| {
+            let plan = GraphPlan::from_stage_lists(entry.config.n_layers, &spec.stages).ok()?;
+            let stages = serve_stages(&plan).ok()?;
+            Some((spec.id.clone(), stages))
+        })
+        .collect()
+}
+
+/// The abstract dispatch traces one variant induces: the fixed-`[S]`
+/// decode round, one bucketed decode round per registered batch bucket,
+/// one monolithic prefill pass per seq bucket, and (when the manifest
+/// carries the chunk family) a mid-stream and a final chunk step.
+fn variant_traces(
+    vid: &VariantId,
+    stages: &[ServeStage],
+    entry: &crate::runtime::ModelEntry,
+    seq_buckets: &[usize],
+    prefill_chunk: Option<usize>,
+) -> Vec<DispatchTrace> {
+    let cfg = &entry.config;
+    let mut traces =
+        vec![decode_trace(vid, stages, SERVE_RANKS, cfg.d_model, cfg.slots, "", false)];
+    for &b in &entry.batch_buckets {
+        traces.push(decode_trace(
+            vid,
+            stages,
+            SERVE_RANKS,
+            cfg.d_model,
+            b,
+            &format!("_b{b}"),
+            true,
+        ));
+    }
+    for &t in seq_buckets {
+        traces.push(prefill_trace(vid, stages, SERVE_RANKS, cfg.d_model, t));
+    }
+    if let Some(k) = prefill_chunk {
+        traces.push(chunk_step_trace(vid, stages, SERVE_RANKS, cfg.d_model, k, false));
+        traces.push(chunk_step_trace(vid, stages, SERVE_RANKS, cfg.d_model, k, true));
+    }
+    traces
+}
+
+/// Run all three analyses over every model of a parsed manifest (pure —
+/// no filesystem access; see [`verify_manifest_files`] for the CI pass).
+pub fn verify_manifest(m: &Manifest) -> VerifyReport {
+    let mut diagnostics = Vec::new();
+    for (mname, entry) in &m.models {
+        diagnostics.extend(plan_check::check_model(
+            mname,
+            entry,
+            &m.seq_buckets,
+            m.prefill_chunk,
+        ));
+        let variants = servable_variants(entry);
+        let residents = initial_resident_names(&variants, SERVE_RANKS);
+        for (vid, stages) in &variants {
+            for tr in variant_traces(vid, stages, entry, &m.seq_buckets, m.prefill_chunk) {
+                diagnostics.extend(binding_check(mname, vid, &tr, &residents));
+                diagnostics.extend(collective_check(
+                    mname,
+                    vid,
+                    &tr.label,
+                    &tr.rank_collective_streams(),
+                ));
+            }
+        }
+    }
+    VerifyReport { diagnostics }
+}
+
+/// [`verify_manifest`] plus artifact-file existence — the standalone /
+/// CI-mode pass (load-time verification stays pure so a manifest can be
+/// checked without its `.hlo` payloads present).
+pub fn verify_manifest_files(m: &Manifest) -> VerifyReport {
+    let mut report = verify_manifest(m);
+    for (mname, entry) in &m.models {
+        for a in entry.artifacts.values() {
+            if !a.file.exists() {
+                report.diagnostics.push(Diagnostic::error(
+                    Check::Plan,
+                    mname,
+                    None,
+                    "plan.artifact-file-missing",
+                    format!("artifact `{}` file {} does not exist", a.name, a.file.display()),
+                ));
+            }
+        }
+    }
+    report
+}
+
+/// The load-time gate `Manifest::load` runs: error-severity findings
+/// reject the manifest; warnings pass (use [`check_strict`] to fail them).
+pub fn check_load(m: &Manifest) -> Result<()> {
+    let report = verify_manifest(m);
+    if report.has_errors() {
+        return Err(Error::Verify(report.render_errors()));
+    }
+    Ok(())
+}
+
+/// The strict gate (`Manifest::load_strict`, `truedepth verify --strict`,
+/// CI): any finding — including warnings and missing artifact files —
+/// fails.
+pub fn check_strict(m: &Manifest) -> Result<()> {
+    let report = verify_manifest_files(m);
+    if !report.is_clean() {
+        return Err(Error::Verify(report.render()));
+    }
+    Ok(())
+}
+
+/// Shared CLI driver of `truedepth verify` and `bin/verify_artifacts`:
+/// load the manifest unverified, run the full pass, print every finding,
+/// and fail on errors (or, under `strict`, on any finding).
+pub fn run_cli(dir: &Path, strict: bool) -> Result<()> {
+    let m = Manifest::load_unverified(dir)?;
+    let n_variants: usize = m.models.values().map(|e| e.variants.len()).sum();
+    println!(
+        "verify: {} — {} model(s), {} plan variant(s), strict={}",
+        dir.join("manifest.json").display(),
+        m.models.len(),
+        n_variants,
+        strict
+    );
+    let report = verify_manifest_files(&m);
+    for d in &report.diagnostics {
+        println!("{d}");
+    }
+    let n_err = report.errors().count();
+    let n_warn = report.diagnostics.len() - n_err;
+    if n_err > 0 || (strict && n_warn > 0) {
+        return Err(Error::Verify(format!(
+            "{n_err} error(s), {n_warn} warning(s) — manifest rejected"
+        )));
+    }
+    println!("verify: OK ({n_warn} warning(s))");
+    Ok(())
+}
+
+/// Cross-check a static [`DispatchTrace`] against the dispatch events the
+/// mesh actually recorded ([`crate::parallel::Mesh::begin_trace`] /
+/// `take_trace`) — the debug-mode assertion that the emitters mirror the
+/// real hot path op for op. `EnsureExecs` / `ReleaseExec` have no mesh
+/// event (compilation is lazy and unrecorded); every other op maps 1:1.
+pub fn crosscheck_trace(
+    model: &str,
+    vid: &VariantId,
+    tr: &DispatchTrace,
+    events: &[MeshEvent],
+) -> Vec<Diagnostic> {
+    let mut expected = Vec::new();
+    for op in &tr.ops {
+        match op {
+            TraceOp::EnsureExecs { .. } | TraceOp::ReleaseExec { .. } => {}
+            TraceOp::UploadAll { name } => {
+                expected.push(MeshEvent::Upload { name: name.clone(), ranks: tr.ranks })
+            }
+            TraceOp::ExecRank { rank, key, .. } => {
+                expected.push(MeshEvent::ExecRank { key: key.clone(), rank: *rank })
+            }
+            TraceOp::ExecAll { key, .. } => {
+                expected.push(MeshEvent::Exec { key: key.clone(), ranks: tr.ranks })
+            }
+            TraceOp::BroadcastResident { name, .. } => {
+                expected.push(MeshEvent::Broadcast { name: name.clone() })
+            }
+            TraceOp::ReduceInto { elems, .. } => expected.push(MeshEvent::Collective {
+                kind: "reduce_into",
+                bytes: *elems as u64 * 4,
+                ranks: tr.ranks,
+            }),
+        }
+    }
+    let mut diags = Vec::new();
+    if expected.len() != events.len() {
+        diags.push(Diagnostic::error(
+            Check::Trace,
+            model,
+            Some(vid),
+            "trace.dispatch-count",
+            format!(
+                "`{}`: static trace has {} dispatch ops, the mesh recorded {}",
+                tr.label,
+                expected.len(),
+                events.len()
+            ),
+        ));
+    }
+    for (i, (e, g)) in expected.iter().zip(events.iter()).enumerate() {
+        if e != g {
+            diags.push(Diagnostic::error(
+                Check::Trace,
+                model,
+                Some(vid),
+                "trace.dispatch-mismatch",
+                format!("`{}`: op #{i}: static trace says {e:?}, mesh recorded {g:?}", tr.label),
+            ));
+        }
+    }
+    diags
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::InterconnectConfig;
+    use crate::model::serving::ServingModel;
+    use crate::model::weights::Weights;
+
+    fn quiet() -> InterconnectConfig {
+        InterconnectConfig { enabled: false, ..Default::default() }
+    }
+
+    /// The shipped AOT artifacts must verify clean — the tentpole
+    /// acceptance criterion, library half.
+    #[test]
+    fn shipped_manifest_verifies_clean() {
+        let Ok(m) = Manifest::load_default() else { return };
+        let report = verify_manifest_files(&m);
+        assert!(report.is_clean(), "shipped artifacts must verify clean:\n{}", report.render());
+        assert!(check_strict(&m).is_ok());
+    }
+
+    /// The static decode trace must match the mesh's recorded dispatch
+    /// events op for op — the emitters cannot drift from the hot path.
+    #[test]
+    fn static_decode_trace_matches_recorded_dispatch() {
+        let Ok(manifest) = Manifest::load_default() else { return };
+        let cfg = manifest.model("td-small").unwrap().config.clone();
+        let weights = Weights::random(&cfg, 7);
+        let Ok(m) = ServingModel::from_manifest(&manifest, "td-small", &weights, quiet())
+        else {
+            return;
+        };
+        let prompt: Vec<i32> = "the red fox".bytes().map(|b| b as i32).collect();
+        for vid in m.variant_ids() {
+            m.prefill_v(&vid, 0, &prompt).unwrap();
+            let tokens = vec![0i32; cfg.slots];
+            let pos = vec![0i32; cfg.slots];
+            m.decode_step_v(&vid, &tokens, &pos).unwrap(); // warm (lazy compiles)
+            m.mesh.begin_trace();
+            m.decode_step_v(&vid, &tokens, &pos).unwrap();
+            let events = m.mesh.take_trace();
+            let tr = m.static_decode_trace(&vid, None).unwrap();
+            let diags = crosscheck_trace("td-small", &vid, &tr, &events);
+            assert!(
+                diags.is_empty(),
+                "tier {vid}: static decode trace diverged from dispatch:\n{}",
+                diags.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("\n")
+            );
+        }
+    }
+
+    /// Same cross-check for the chunk-prefill step — mid-stream and final.
+    #[test]
+    fn static_chunk_trace_matches_recorded_dispatch() {
+        let Ok(manifest) = Manifest::load_default() else { return };
+        let cfg = manifest.model("td-small").unwrap().config.clone();
+        let weights = Weights::random(&cfg, 9);
+        let Ok(m) = ServingModel::from_manifest(&manifest, "td-small", &weights, quiet())
+        else {
+            return;
+        };
+        let Some(k) = m.prefill_chunk() else { return };
+        let vid = m.default_tier().clone();
+        let prompt: Vec<i32> = (0..(k + 3) as i32).map(|i| 40 + (i % 50)).collect();
+        let mut st = m.begin_prefill_v(&vid, 0, &prompt).unwrap();
+        m.prefill_chunked_v(&vid, 1, &prompt).unwrap(); // warm (lazy compiles)
+        for last in [false, true] {
+            m.mesh.begin_trace();
+            let out = m.prefill_step(&mut st).unwrap();
+            assert_eq!(out.is_some(), last);
+            let events = m.mesh.take_trace();
+            let tr = m.static_chunk_trace(&vid, last).unwrap().unwrap();
+            let diags = crosscheck_trace("td-small", &vid, &tr, &events);
+            assert!(
+                diags.is_empty(),
+                "chunk step (last={last}) diverged from dispatch:\n{}",
+                diags.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("\n")
+            );
+        }
+    }
+
+    /// Every buffer the static resident model claims exists must actually
+    /// be fetchable on the mesh after construction.
+    #[test]
+    fn static_residents_all_fetchable_on_the_mesh() {
+        let Ok(manifest) = Manifest::load_default() else { return };
+        let cfg = manifest.model("td-small").unwrap().config.clone();
+        let weights = Weights::random(&cfg, 5);
+        let Ok(m) = ServingModel::from_manifest(&manifest, "td-small", &weights, quiet())
+        else {
+            return;
+        };
+        for (rank, names) in m.static_residents().iter().enumerate() {
+            for name in names {
+                assert!(
+                    m.mesh.workers[rank].fetch(name).is_ok(),
+                    "rank {rank}: static model claims `{name}` resident but the mesh has no such buffer"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn diagnostic_display_is_variant_qualified() {
+        let d = Diagnostic::error(
+            Check::Plan,
+            "td-x",
+            Some(&VariantId::new("lp")),
+            "plan.layer-missing",
+            "layer 3 not covered by any stage".into(),
+        );
+        assert_eq!(
+            d.to_string(),
+            "error: td-x / variant `lp`: [plan.layer-missing] layer 3 not covered by any stage"
+        );
+        let w = Diagnostic::warn(Check::Plan, "td-x", None, "plan.band-not-contiguous", "x".into());
+        assert!(w.to_string().starts_with("warn: td-x: [plan.band-not-contiguous]"));
+    }
+}

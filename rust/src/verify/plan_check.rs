@@ -1,0 +1,315 @@
+//! plan_check: structural verification of the manifest's plan-variant
+//! registry and its executable/bucket/chunk consistency.
+//!
+//! Per variant: each transformer layer covered **exactly once**, stage
+//! arity 1 (TP) or 2 (LP pair), LP pairs adjacent (`[i, i+1]`), LP pairs
+//! forming a contiguous band (warning — a gapped band is servable but
+//! almost certainly a manifest typo), and every executable the stage walk
+//! binds present in the `artifacts` section. Per model: batch buckets
+//! within the slot count and unique, `prefill_chunk` dividing `ctx`.
+
+use crate::model::plan::GraphPlan;
+use crate::model::serving::{chunk_exec_keys, decode_exec_keys, prefill_exec_keys, serve_stages};
+use crate::runtime::ModelEntry;
+
+use super::{Check, Diagnostic, Severity};
+
+/// Run the plan analysis over one model entry. `seq_buckets` and
+/// `prefill_chunk` come from the manifest top level.
+pub fn check_model(
+    model: &str,
+    entry: &ModelEntry,
+    seq_buckets: &[usize],
+    prefill_chunk: Option<usize>,
+) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    let cfg = &entry.config;
+
+    // ---- model-level: bucket registry + chunk consistency ------------------
+    let mut seen_buckets = std::collections::BTreeSet::new();
+    for &b in &entry.batch_buckets {
+        if b > cfg.slots {
+            diags.push(Diagnostic::error(
+                Check::Plan,
+                model,
+                None,
+                "plan.bucket-exceeds-slots",
+                format!("batch bucket {b} exceeds the slot count {}", cfg.slots),
+            ));
+        }
+        if !seen_buckets.insert(b) {
+            diags.push(Diagnostic::error(
+                Check::Plan,
+                model,
+                None,
+                "plan.bucket-duplicate",
+                format!("batch bucket {b} listed more than once"),
+            ));
+        }
+    }
+    if let Some(k) = prefill_chunk {
+        if cfg.ctx % k != 0 {
+            diags.push(Diagnostic::error(
+                Check::Plan,
+                model,
+                None,
+                "plan.chunk-not-dividing-ctx",
+                format!(
+                    "prefill_chunk {k} does not divide ctx {} — the final chunk's \
+                     cache window would run out of bounds",
+                    cfg.ctx
+                ),
+            ));
+        }
+    }
+
+    // ---- per-variant: coverage, adjacency, executables ---------------------
+    for spec in entry.variants.values() {
+        let vid = &spec.id;
+        let n = cfg.n_layers;
+        let err = |code, message| Diagnostic::error(Check::Plan, model, Some(vid), code, message);
+        let mut counts = vec![0usize; n];
+        // arity/range problems make "layer missing" cascade noise — track
+        // them and report coverage only for structurally sound walks
+        let mut structural = true;
+        if spec.stages.is_empty() {
+            diags.push(err(
+                "plan.no-stages",
+                "variant has no stages (embed→logits with every layer skipped)".into(),
+            ));
+            continue;
+        }
+        for st in &spec.stages {
+            if st.is_empty() || st.len() > 2 {
+                diags.push(err(
+                    "plan.stage-arity",
+                    format!("stage {st:?} has arity {}, want 1 (TP) or 2 (LP pair)", st.len()),
+                ));
+                structural = false;
+                continue;
+            }
+            for &l in st {
+                if l >= n {
+                    diags.push(err(
+                        "plan.layer-out-of-range",
+                        format!("layer {l} out of range (model has {n} layers)"),
+                    ));
+                    structural = false;
+                } else {
+                    counts[l] += 1;
+                }
+            }
+            if let &[a, b] = st.as_slice() {
+                if b != a + 1 {
+                    diags.push(err(
+                        "plan.pair-not-adjacent",
+                        format!("LP pair [{a}, {b}] is not adjacent (want [i, i+1])"),
+                    ));
+                }
+            }
+        }
+        for (l, &c) in counts.iter().enumerate() {
+            if c > 1 {
+                diags.push(err(
+                    "plan.layer-covered-twice",
+                    format!("layer {l} covered by {c} stages (want exactly once)"),
+                ));
+            } else if c == 0 && structural {
+                diags.push(err(
+                    "plan.layer-missing",
+                    format!("layer {l} not covered by any stage (want exactly once)"),
+                ));
+            }
+        }
+
+        // Dispatch-level structure needs a parseable plan; GraphPlan
+        // re-validates reuse/range, so a failure here was reported above.
+        let Ok(plan) = GraphPlan::from_stage_lists(n, &spec.stages) else { continue };
+        if !plan.lp_band_contiguous() {
+            diags.push(Diagnostic::warn(
+                Check::Plan,
+                model,
+                Some(vid),
+                "plan.band-not-contiguous",
+                format!(
+                    "LP pairs cover layers {:?} — not one contiguous band; servable, \
+                     but the paper's transform always parallelizes a contiguous window",
+                    plan.lp_layers()
+                ),
+            ));
+        }
+        let Ok(stages) = serve_stages(&plan) else { continue };
+
+        for key in decode_exec_keys(&stages, "") {
+            if !entry.artifacts.contains_key(&key) {
+                diags.push(err(
+                    "plan.missing-executable",
+                    format!("decode executable `{key}` not in the manifest artifacts"),
+                ));
+            }
+        }
+        for &t in seq_buckets {
+            for key in prefill_exec_keys(&stages, t) {
+                if !entry.artifacts.contains_key(&key) {
+                    diags.push(err(
+                        "plan.missing-executable",
+                        format!(
+                            "prefill executable `{key}` (seq bucket {t}) not in the \
+                             manifest artifacts"
+                        ),
+                    ));
+                }
+            }
+        }
+        if prefill_chunk.is_some() {
+            for key in chunk_exec_keys(&stages) {
+                if !entry.artifacts.contains_key(&key) {
+                    diags.push(err(
+                        "plan.chunk-missing-executable",
+                        format!(
+                            "chunk executable `{key}` not in the manifest artifacts \
+                             (prefill_chunk is set)"
+                        ),
+                    ));
+                }
+            }
+        }
+        // Missing bucket executables are a warning: the runtime registers
+        // only complete buckets and falls back to the fixed-[S] path.
+        for &b in &entry.batch_buckets {
+            for key in decode_exec_keys(&stages, &format!("_b{b}")) {
+                if !entry.artifacts.contains_key(&key) {
+                    diags.push(Diagnostic {
+                        severity: Severity::Warn,
+                        ..err(
+                            "plan.bucket-missing-executable",
+                            format!(
+                                "bucket executable `{key}` (batch bucket {b}) not in the \
+                                 manifest artifacts — the bucket will silently fall back \
+                                 to the fixed-[S] path"
+                            ),
+                        )
+                    });
+                }
+            }
+        }
+    }
+    diags
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{ModelConfig, VariantId, VariantSpec};
+    use std::collections::BTreeMap;
+
+    fn mini_cfg() -> ModelConfig {
+        ModelConfig {
+            name: "td-mini".into(),
+            vocab: 64,
+            d_model: 16,
+            n_layers: 4,
+            n_heads: 2,
+            head_dim: 8,
+            d_ff: 32,
+            ctx: 64,
+            slots: 2,
+        }
+    }
+
+    fn entry_with(stages: Vec<Vec<usize>>) -> ModelEntry {
+        let mut variants = BTreeMap::new();
+        let id = VariantId::new("t");
+        variants.insert(id.clone(), VariantSpec { id, stages });
+        ModelEntry {
+            config: mini_cfg(),
+            batch_buckets: vec![],
+            variants,
+            artifacts: BTreeMap::new(),
+        }
+    }
+
+    fn codes(diags: &[Diagnostic]) -> Vec<&'static str> {
+        diags.iter().map(|d| d.code).collect()
+    }
+
+    #[test]
+    fn exactly_once_violations_are_flagged() {
+        let d = check_model("m", &entry_with(vec![vec![0], vec![0], vec![1], vec![2], vec![3]]), &[], None);
+        assert!(codes(&d).contains(&"plan.layer-covered-twice"), "{d:?}");
+        let d = check_model("m", &entry_with(vec![vec![0], vec![1], vec![2]]), &[], None);
+        assert!(codes(&d).contains(&"plan.layer-missing"), "{d:?}");
+        let d = check_model("m", &entry_with(vec![vec![0], vec![1], vec![2], vec![9]]), &[], None);
+        assert!(codes(&d).contains(&"plan.layer-out-of-range"), "{d:?}");
+        assert!(
+            !codes(&d).contains(&"plan.layer-missing"),
+            "range errors must not cascade into missing-layer noise: {d:?}"
+        );
+    }
+
+    #[test]
+    fn pair_adjacency_and_band_contiguity() {
+        let d = check_model("m", &entry_with(vec![vec![0, 2], vec![1], vec![3]]), &[], None);
+        assert!(codes(&d).contains(&"plan.pair-not-adjacent"), "{d:?}");
+        // a single (trivially contiguous) pair: no band warning
+        let d = check_model("m", &entry_with(vec![vec![0, 1], vec![2], vec![3]]), &[], None);
+        assert!(!codes(&d).contains(&"plan.band-not-contiguous"), "single pair: {d:?}");
+        // two adjacent pairs with a TP layer between them: servable, warned
+        let mut cfg = mini_cfg();
+        cfg.n_layers = 6;
+        let mut variants = BTreeMap::new();
+        let id = VariantId::new("t");
+        variants.insert(
+            id.clone(),
+            VariantSpec { id, stages: vec![vec![0, 1], vec![2], vec![4, 5], vec![3]] },
+        );
+        let gapped = ModelEntry {
+            config: cfg,
+            batch_buckets: vec![],
+            variants,
+            artifacts: BTreeMap::new(),
+        };
+        let d = check_model("m", &gapped, &[], None);
+        let band: Vec<_> =
+            d.iter().filter(|x| x.code == "plan.band-not-contiguous").collect();
+        assert_eq!(band.len(), 1, "{d:?}");
+        assert_eq!(band[0].severity, Severity::Warn);
+        assert!(band[0].to_string().contains("variant `t`"));
+    }
+
+    #[test]
+    fn missing_executables_are_variant_qualified() {
+        // empty artifacts section: every decode key the walk binds is missing
+        let d = check_model("m", &entry_with(vec![vec![0], vec![1], vec![2, 3]]), &[32], None);
+        let missing: Vec<_> =
+            d.iter().filter(|x| x.code == "plan.missing-executable").collect();
+        assert!(!missing.is_empty());
+        assert!(missing.iter().all(|x| x.variant == Some(VariantId::new("t"))));
+        // both families bound: tp (stages [0],[1]) and lp (pair [2,3])
+        let msgs: Vec<String> = missing.iter().map(|x| x.message.clone()).collect();
+        assert!(msgs.iter().any(|m| m.contains("tpattn_decode")), "{msgs:?}");
+        assert!(msgs.iter().any(|m| m.contains("lpattn_decode")), "{msgs:?}");
+        assert!(msgs.iter().any(|m| m.contains("lpattn_prefill_t32")), "{msgs:?}");
+    }
+
+    #[test]
+    fn bucket_and_chunk_consistency() {
+        let mut e = entry_with(vec![vec![0], vec![1], vec![2], vec![3]]);
+        e.batch_buckets = vec![1, 2, 2, 64];
+        let d = check_model("m", &e, &[], Some(24));
+        let c = codes(&d);
+        assert!(c.contains(&"plan.bucket-exceeds-slots"), "{d:?}");
+        assert!(c.contains(&"plan.bucket-duplicate"), "{d:?}");
+        assert!(c.contains(&"plan.chunk-not-dividing-ctx"), "{d:?}");
+        assert!(c.contains(&"plan.chunk-missing-executable"), "{d:?}");
+        assert!(c.contains(&"plan.bucket-missing-executable"), "{d:?}");
+    }
+
+    #[test]
+    fn stage_arity_and_empty_walks() {
+        let d = check_model("m", &entry_with(vec![vec![0, 1, 2], vec![3]]), &[], None);
+        assert!(codes(&d).contains(&"plan.stage-arity"), "{d:?}");
+        let d = check_model("m", &entry_with(vec![]), &[], None);
+        assert_eq!(codes(&d), vec!["plan.no-stages"]);
+    }
+}

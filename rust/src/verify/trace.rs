@@ -1,0 +1,192 @@
+//! Abstract dispatch traces: the IR the static checkers interpret.
+//!
+//! A [`DispatchTrace`] is the sequence of mesh operations one protocol
+//! step of the serving executor issues — one decode round, one monolithic
+//! prefill pass, one chunk step — with every `ArgRef::Resident` binding
+//! named explicitly per rank. The emitters live next to the dispatch code
+//! they mirror ([`crate::model::serving::decode_trace`],
+//! [`crate::model::serving::prefill_trace`],
+//! [`crate::model::prefill::chunk_step_trace`]) so the trace doubles as
+//! documentation of the hot path, and the mesh's debug trace recorder
+//! ([`crate::parallel::Mesh::begin_trace`]) pins each emitter to the real
+//! dispatch sequence bit for bit (see [`super::crosscheck_trace`]).
+//!
+//! Two analyses interpret the IR:
+//!
+//! * [`super::binding_check`] walks the ops in order against the initial
+//!   resident set, proving every resident read was written first;
+//! * [`super::collective_check`] projects the ops onto per-rank collective
+//!   streams ([`DispatchTrace::rank_collective_streams`]) and proves the
+//!   ranks agree on the collective sequence and payload shapes.
+
+use std::fmt;
+
+/// Per-rank resident-buffer IO of one [`TraceOp::ExecAll`] call.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RankIo {
+    /// Resident buffer names the call reads (`ArgRef::Resident` args).
+    pub reads: Vec<String>,
+    /// Resident buffer names the call persists outputs into.
+    pub writes: Vec<String>,
+}
+
+/// One abstract mesh operation of a dispatch sequence. Host-value args
+/// (`ArgRef::Host`) are not bindings and do not appear; `elems` fields
+/// carry the f32 element count of the payload so collective shapes can be
+/// matched across ranks.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TraceOp {
+    /// `ExecCache::ensure` over the keys the step is about to bind.
+    EnsureExecs { keys: Vec<String> },
+    /// Exec-cache eviction of one key (`Mesh::release_all`).
+    ReleaseExec { key: String },
+    /// `Mesh::upload_all`: fresh host data becomes a resident buffer on
+    /// every rank.
+    UploadAll { name: String },
+    /// `Mesh::exec_rank`: one call on one rank.
+    ExecRank { rank: usize, key: String, reads: Vec<String>, writes: Vec<String> },
+    /// `Mesh::exec_all`: one call per rank, joined.
+    ExecAll { key: String, per_rank: Vec<RankIo> },
+    /// `Mesh::broadcast_resident`: device-to-device fan-out of `name`.
+    BroadcastResident { name: String, elems: usize },
+    /// `Mesh::reduce_into`: gather `partial` from every rank, sum, scatter
+    /// into `dest` on every rank — the resident-buffer all-reduce.
+    ReduceInto { partial: String, dest: String, elems: usize },
+}
+
+/// The abstract dispatch sequence of one protocol step.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DispatchTrace {
+    /// Human-readable step label, e.g. `decode[lp]@4` — used verbatim in
+    /// diagnostics.
+    pub label: String,
+    pub ranks: usize,
+    pub ops: Vec<TraceOp>,
+}
+
+/// Kind of a collective event as seen by one rank.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CollectiveKind {
+    /// Fan-out of a resident buffer to every rank (`broadcast_resident`).
+    Broadcast,
+    /// All-reduce of per-rank partials (`reduce_into` / `all_reduce`).
+    Reduce,
+}
+
+impl fmt::Display for CollectiveKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CollectiveKind::Broadcast => write!(f, "broadcast"),
+            CollectiveKind::Reduce => write!(f, "reduce"),
+        }
+    }
+}
+
+/// One collective a rank participates in: kind, buffer name, payload
+/// element count. Every rank of the mesh must issue the same sequence of
+/// these or the joint dispatch deadlocks — the property
+/// [`super::collective_check`] proves.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CollectiveEvent {
+    pub kind: CollectiveKind,
+    pub name: String,
+    pub elems: usize,
+}
+
+impl fmt::Display for CollectiveEvent {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} `{}` [{} elems]", self.kind, self.name, self.elems)
+    }
+}
+
+impl DispatchTrace {
+    /// Project the trace onto per-rank collective streams. The emitted
+    /// traces are uniform by construction (every collective op names all
+    /// ranks), so the interesting inputs to [`super::collective_check`]
+    /// are hand-built divergent streams — the SPMD bug class where one
+    /// rank skips a collective the peers are blocked in.
+    pub fn rank_collective_streams(&self) -> Vec<Vec<CollectiveEvent>> {
+        let mut streams: Vec<Vec<CollectiveEvent>> = vec![Vec::new(); self.ranks];
+        for op in &self.ops {
+            let ev = match op {
+                TraceOp::BroadcastResident { name, elems } => CollectiveEvent {
+                    kind: CollectiveKind::Broadcast,
+                    name: name.clone(),
+                    elems: *elems,
+                },
+                TraceOp::ReduceInto { partial, elems, .. } => CollectiveEvent {
+                    kind: CollectiveKind::Reduce,
+                    name: partial.clone(),
+                    elems: *elems,
+                },
+                _ => continue,
+            };
+            for s in &mut streams {
+                s.push(ev.clone());
+            }
+        }
+        streams
+    }
+
+    /// Every executable key the trace binds (exec ops only).
+    pub fn exec_keys(&self) -> Vec<&str> {
+        let mut keys = Vec::new();
+        for op in &self.ops {
+            match op {
+                TraceOp::ExecRank { key, .. } | TraceOp::ExecAll { key, .. } => {
+                    keys.push(key.as_str())
+                }
+                _ => {}
+            }
+        }
+        keys
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_trace_projects_identical_streams() {
+        let t = DispatchTrace {
+            label: "t".into(),
+            ranks: 2,
+            ops: vec![
+                TraceOp::UploadAll { name: "pos".into() },
+                TraceOp::BroadcastResident { name: "act".into(), elems: 8 },
+                TraceOp::ReduceInto {
+                    partial: "act.partial".into(),
+                    dest: "act".into(),
+                    elems: 8,
+                },
+            ],
+        };
+        let streams = t.rank_collective_streams();
+        assert_eq!(streams.len(), 2);
+        assert_eq!(streams[0], streams[1]);
+        assert_eq!(streams[0].len(), 2, "upload is not a collective");
+        assert_eq!(streams[0][0].kind, CollectiveKind::Broadcast);
+        assert_eq!(streams[0][1].kind, CollectiveKind::Reduce);
+        assert_eq!(streams[0][1].to_string(), "reduce `act.partial` [8 elems]");
+    }
+
+    #[test]
+    fn exec_keys_lists_both_exec_forms() {
+        let t = DispatchTrace {
+            label: "t".into(),
+            ranks: 1,
+            ops: vec![
+                TraceOp::EnsureExecs { keys: vec!["a".into()] },
+                TraceOp::ExecRank {
+                    rank: 0,
+                    key: "a".into(),
+                    reads: vec![],
+                    writes: vec![],
+                },
+                TraceOp::ExecAll { key: "b".into(), per_rank: vec![] },
+            ],
+        };
+        assert_eq!(t.exec_keys(), vec!["a", "b"]);
+    }
+}

@@ -1,0 +1,81 @@
+//! Regression: a rank-divergent plan (one rank issuing a collective the
+//! other never reaches) used to **hang** the mesh at serve time — the
+//! blocked rank waits in its collective forever. The dynamic half of this
+//! test reproduces that hang in miniature with rendezvous-style
+//! collectives under a timeout; the static half shows `collective_check`
+//! flags exactly the same stream pair at load time, turning the deadlock
+//! into a diagnosable error before any request is admitted.
+
+use std::sync::mpsc;
+use std::thread;
+use std::time::Duration;
+
+use truedepth::verify::{collective_check, CollectiveEvent, CollectiveKind};
+
+fn reduce(name: &str, elems: usize) -> CollectiveEvent {
+    CollectiveEvent { kind: CollectiveKind::Reduce, name: name.to_string(), elems }
+}
+
+/// Walk two ranks' collective streams concurrently. Each collective is a
+/// rendezvous: a rank announces its event and blocks until the peer
+/// announces one too (the NCCL model — a collective completes only when
+/// every rank has entered it). Returns false if any rank was still
+/// blocked in a collective when the timeout fired — the observed hang.
+fn ranks_complete(streams: &[Vec<CollectiveEvent>; 2]) -> bool {
+    let (tx0, rx1) = mpsc::channel::<String>();
+    let (tx1, rx0) = mpsc::channel::<String>();
+    let spawn = |events: Vec<CollectiveEvent>,
+                 tx: mpsc::Sender<String>,
+                 rx: mpsc::Receiver<String>| {
+        thread::spawn(move || {
+            for ev in events {
+                tx.send(ev.to_string()).ok();
+                if rx.recv_timeout(Duration::from_millis(250)).is_err() {
+                    return false; // peer never rendezvoused: deadlock
+                }
+            }
+            true
+        })
+    };
+    let h0 = spawn(streams[0].clone(), tx0, rx0);
+    let h1 = spawn(streams[1].clone(), tx1, rx1);
+    h0.join().unwrap() & h1.join().unwrap()
+}
+
+#[test]
+fn uniform_collective_streams_complete() {
+    let stream = vec![reduce("act.partial", 32), reduce("act.partial", 32)];
+    let streams = [stream.clone(), stream];
+    assert!(ranks_complete(&streams), "uniform streams must not deadlock");
+    let d = collective_check("m", &"lp".into(), "decode", &streams);
+    assert!(d.is_empty(), "{d:?}");
+}
+
+#[test]
+fn divergent_plan_hangs_dynamically_and_is_flagged_statically() {
+    // rank 0 issues two all-reduces per step, rank 1 only one — the shape
+    // a rank-divergent stage walk produces (e.g. ranks disagreeing on the
+    // number of stages). Dynamically this deadlocks: rank 0 blocks in its
+    // second collective while rank 1 has already exited the step.
+    let streams = [
+        vec![reduce("act.partial", 32), reduce("act.partial", 32)],
+        vec![reduce("act.partial", 32)],
+    ];
+    assert!(!ranks_complete(&streams), "divergent streams must hang");
+
+    // the same stream pair is a *load-time error* under the checker
+    let d = collective_check("m", &"lp".into(), "decode", &streams);
+    assert_eq!(d.len(), 1, "{d:?}");
+    let msg = d[0].to_string();
+    assert!(msg.contains("collective.count-diverged"), "{msg}");
+    assert!(msg.contains("deadlock"), "{msg}");
+    assert!(msg.contains("variant `lp`"), "diagnostic must name the tier: {msg}");
+}
+
+#[test]
+fn payload_divergence_is_flagged_before_it_corrupts_a_reduce() {
+    let streams = [vec![reduce("act.partial", 32)], vec![reduce("act.partial", 64)]];
+    let d = collective_check("m", &"lp".into(), "decode", &streams);
+    assert_eq!(d.len(), 1, "{d:?}");
+    assert!(d[0].to_string().contains("collective.payload-diverged"), "{}", d[0]);
+}

@@ -1,0 +1,88 @@
+//! Malformed-manifest corpus: every diagnostic class the static verifier
+//! (and the strict loader) can emit is exercised by a checked-in corpus
+//! entry under `tests/corpus/<case>/manifest.json`, each asserting the
+//! specific rejection it provokes. Regenerate with the generator snippet
+//! in the PR that introduced them — the files are plain JSON, hand-edits
+//! are fine too.
+
+use std::path::{Path, PathBuf};
+
+use truedepth::runtime::Manifest;
+use truedepth::verify;
+
+fn corpus(case: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/corpus").join(case)
+}
+
+#[test]
+fn wellformed_corpus_manifest_loads_and_verifies_clean() {
+    let m = Manifest::load(&corpus("wellformed")).expect("wellformed must load");
+    let report = verify::verify_manifest(&m);
+    assert!(report.is_clean(), "{}", report.render());
+}
+
+/// Every malformed entry is rejected *at load time* with its specific
+/// diagnostic; variant-scoped findings carry the `VariantId`.
+#[test]
+fn every_malformed_corpus_entry_fails_with_its_diagnostic() {
+    // (case, expected substring of the load error, variant-qualified?)
+    let cases = [
+        ("layer_covered_twice", "plan.layer-covered-twice", true),
+        ("layer_missing", "plan.layer-missing", true),
+        ("layer_out_of_range", "plan.layer-out-of-range", true),
+        ("pair_not_adjacent", "plan.pair-not-adjacent", true),
+        ("missing_lp_executable", "lpattn_decode", true),
+        ("missing_prefill_bucket", "seq bucket 64", true),
+        // parser-level rejections (satellite of the verify pass: the
+        // loader no longer silently accepts these)
+        ("stage_arity", "malformed", true),
+        ("duplicate_variant_id", "duplicate object key `lp`", false),
+        ("empty_variants", "`variants` section is empty", false),
+        ("duplicate_batch_bucket", "duplicate batch bucket 1", false),
+        // model-level plan findings
+        ("bucket_exceeds_slots", "plan.bucket-exceeds-slots", false),
+        ("chunk_not_dividing_ctx", "plan.chunk-not-dividing-ctx", false),
+    ];
+    for (case, want, qualified) in cases {
+        let err = Manifest::load(&corpus(case))
+            .err()
+            .unwrap_or_else(|| panic!("{case}: must be rejected at load time"));
+        let msg = err.to_string();
+        assert!(msg.contains(want), "{case}: error must mention `{want}`:\n{msg}");
+        if qualified {
+            assert!(
+                msg.contains("variant `"),
+                "{case}: diagnostic must be variant-qualified:\n{msg}"
+            );
+        }
+    }
+}
+
+/// Warning-class findings (degraded-but-servable manifests) pass the
+/// normal load, surface in the report, and fail only the strict load.
+#[test]
+fn warning_class_corpus_entries_load_but_fail_strict() {
+    let cases = [
+        ("bucket_missing_executable", "plan.bucket-missing-executable"),
+        ("band_gap", "plan.band-not-contiguous"),
+    ];
+    for (case, code) in cases {
+        let dir = corpus(case);
+        let m = Manifest::load(&dir)
+            .unwrap_or_else(|e| panic!("{case}: warnings must not reject a load: {e}"));
+        let report = verify::verify_manifest(&m);
+        assert!(
+            !report.is_clean() && !report.has_errors(),
+            "{case}: want warnings only:\n{}",
+            report.render()
+        );
+        assert!(report.render().contains(code), "{case}:\n{}", report.render());
+        assert!(
+            Manifest::load_strict(&dir).is_err(),
+            "{case}: strict load must reject warnings"
+        );
+    }
+    // the band-gap warning names the tier it applies to
+    let report = verify::verify_manifest(&Manifest::load(&corpus("band_gap")).unwrap());
+    assert!(report.render().contains("variant `lp`"), "{}", report.render());
+}
