@@ -11,6 +11,10 @@
 //!         # set, every manifest plan variant (dense/lp/lp_aggr) served
 //!         # concurrently — requests cycle through the tiers and the report
 //!         # shows per-tier modelled tokens/sec
+//!     cargo run --release --example serve_batch -- --tiers \
+//!         --trace-out trace.json --metrics-out metrics.json
+//!         # also export a Chrome/Perfetto trace + metrics snapshot of the
+//!         # run on the simulated clock (README "Observability")
 
 use std::sync::Arc;
 
@@ -21,6 +25,7 @@ use truedepth::coordinator::{RequestOptions, Server};
 use truedepth::gen::Sampler;
 use truedepth::harness::{default_net, ScoringCtx};
 use truedepth::model::{transform, ServingModel};
+use truedepth::obs::{MetricsSnapshot, Tracer};
 use truedepth::text::corpus::{self, DATA_SEED};
 
 fn main() -> truedepth::Result<()> {
@@ -62,7 +67,13 @@ fn main() -> truedepth::Result<()> {
         .collect();
     println!("== serve_batch: {model_name} — {} ==", summary.join("; "));
 
-    let server = Arc::new(Server::start(serving, &ServerConfig::default()));
+    let trace_out = args.get("trace-out").map(std::path::PathBuf::from);
+    let metrics_out = args.get("metrics-out").map(std::path::PathBuf::from);
+    let tracer = trace_out.as_ref().map(|_| Arc::new(Tracer::new()));
+    let server = Arc::new(match &tracer {
+        Some(t) => Server::start_traced(serving, &ServerConfig::default(), t.clone()),
+        None => Server::start(serving, &ServerConfig::default()),
+    });
     let mut router = Router::new();
     router.add_backend(model_name, server.clone());
 
@@ -100,5 +111,23 @@ fn main() -> truedepth::Result<()> {
         "\n{ok}/{n_requests} ok; {tokens} tokens in {wall:.2}s → {:.1} tok/s end-to-end",
         tokens as f64 / wall
     );
+
+    // exports: shut the server down first so the scheduler drains and
+    // flushes the mesh event track into the tracer
+    if trace_out.is_some() || metrics_out.is_some() {
+        let metrics = server.metrics.clone();
+        drop(router);
+        if let Ok(s) = Arc::try_unwrap(server) {
+            s.shutdown();
+        }
+        if let (Some(tr), Some(path)) = (&tracer, &trace_out) {
+            tr.write_chrome(path)?;
+            println!("trace: {} ({} events)", path.display(), tr.len());
+        }
+        if let Some(path) = &metrics_out {
+            MetricsSnapshot::new("serve_batch").with_server(&metrics).write(path)?;
+            println!("metrics snapshot: {}", path.display());
+        }
+    }
     Ok(())
 }

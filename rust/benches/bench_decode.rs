@@ -13,11 +13,17 @@
 //! 1-live-slot round on an S-slot model dispatches B=1, not B=S).
 
 use truedepth::bench::Bench;
+use truedepth::cli::Args;
 use truedepth::harness::{default_net, no_net};
 use truedepth::model::{transform, ServingModel, Weights};
+use truedepth::obs::{MetricsSnapshot, Tracer};
 use truedepth::runtime::Manifest;
 
 fn main() {
+    // cargo passes `--bench` to harness-less bench binaries; accept it as
+    // a flag. --trace-out / --metrics-out override the default export
+    // paths under target/bench-reports.
+    let args = Args::from_env(&["bench"]);
     let Ok(manifest) = Manifest::load_default() else {
         eprintln!("bench_decode: artifacts missing (run `make artifacts`) — skipping");
         return;
@@ -178,5 +184,34 @@ fn main() {
             }
         }
     }
+    // --- observability export (README "Observability") -------------------
+    // One traced full-occupancy decode round on the simulated clock: the
+    // Chrome/Perfetto trace + metrics snapshot land next to the bench
+    // report in target/bench-reports, so the CI bench job uploads them as
+    // workflow artifacts and the perf gate can read the snapshot.
+    let reports = truedepth::repo_root().join("target/bench-reports");
+    let trace_path = args
+        .get("trace-out")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| reports.join("bench_decode.trace.json"));
+    let snap_path = args
+        .get("metrics-out")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| reports.join("bench_decode.metrics.json"));
+    let active: Vec<_> = (0..s).map(|slot| (slot, 65i32, prompt.len() as i32)).collect();
+    let tracer = Tracer::new();
+    sim.mesh.metrics.reset();
+    sim.mesh.begin_trace();
+    sim.decode_active(&active).unwrap();
+    tracer.record_mesh_events(sim.mesh.take_timed_trace());
+    tracer.write_chrome(&trace_path).unwrap();
+    MetricsSnapshot::new("bench_decode").with_mesh(&sim.mesh.metrics).write(&snap_path).unwrap();
+    println!(
+        "   trace: {} ({} events); metrics snapshot: {}",
+        trace_path.display(),
+        tracer.len(),
+        snap_path.display(),
+    );
+
     b.finish();
 }

@@ -6,15 +6,21 @@
 //! count, not the kernel).
 
 use truedepth::bench::Bench;
+use truedepth::cli::Args;
 use truedepth::config::ServerConfig;
 use truedepth::coordinator::{RequestOptions, Server};
 use truedepth::gen::Sampler;
 use truedepth::harness::{default_net, no_net};
 use truedepth::model::{transform, ServingModel, Weights};
+use truedepth::obs::{MetricsSnapshot, Tracer};
 use truedepth::runtime::pjrt::HostValue;
 use truedepth::runtime::{Engine, Manifest};
 
 fn main() {
+    // cargo passes `--bench` to harness-less bench binaries; accept it as
+    // a flag. --trace-out / --metrics-out override the default export
+    // paths under target/bench-reports.
+    let args = Args::from_env(&["bench"]);
     let Ok(manifest) = Manifest::load_default() else {
         eprintln!("bench_prefill: artifacts missing (run `make artifacts`) — skipping");
         return;
@@ -100,6 +106,38 @@ fn main() {
                         t0.elapsed()
                     });
                 }
+
+                // observability export: one traced L=224 chunked prefill
+                // on the simulated clock (ceil(224/K) chunk dispatches +
+                // their collectives on the mesh track). Lands next to the
+                // bench report so CI uploads it; --trace-out /
+                // --metrics-out override (README "Observability").
+                let reports = truedepth::repo_root().join("target/bench-reports");
+                let trace_path = args
+                    .get("trace-out")
+                    .map(std::path::PathBuf::from)
+                    .unwrap_or_else(|| reports.join("bench_prefill.trace.json"));
+                let snap_path = args
+                    .get("metrics-out")
+                    .map(std::path::PathBuf::from)
+                    .unwrap_or_else(|| reports.join("bench_prefill.metrics.json"));
+                let prompt: Vec<i32> = (0..224).map(|i| 97 + (i % 26)).collect();
+                let tracer = Tracer::new();
+                sim.mesh.metrics.reset();
+                sim.mesh.begin_trace();
+                sim.prefill_chunked(0, &prompt).unwrap();
+                tracer.record_mesh_events(sim.mesh.take_timed_trace());
+                tracer.write_chrome(&trace_path).unwrap();
+                MetricsSnapshot::new("bench_prefill")
+                    .with_mesh(&sim.mesh.metrics)
+                    .write(&snap_path)
+                    .unwrap();
+                println!(
+                    "   trace: {} ({} events); metrics snapshot: {}",
+                    trace_path.display(),
+                    tracer.len(),
+                    snap_path.display(),
+                );
             }
         }
     }

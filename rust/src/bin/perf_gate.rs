@@ -13,6 +13,14 @@
 //! machine speed, the gate is bit-stable across hosts: a failure means a
 //! PR actually changed the modelled cost of the serving protocol.
 //!
+//! `MetricsSnapshot` files (`truedepth.metrics/v1`, written next to the
+//! bench reports by the benches' observability export — see
+//! `src/obs/snapshot.rs`) are read too: their flattened numeric leaves
+//! join the metric map, and where a key collides with a scraped bench
+//! metric the snapshot value wins, since the snapshot is the structured
+//! source the report line was printed from. Chrome trace files in the same
+//! directory have no `group`/schema key and are skipped.
+//!
 //! Re-baselining an intentional change: run with `--write-baseline` and
 //! commit the refreshed file, including `[perf-baseline]` in the commit
 //! message — CI passes `--allow-regress` for such commits so the gate
@@ -28,6 +36,7 @@ use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 use truedepth::cli::Args;
+use truedepth::obs::MetricsSnapshot;
 use truedepth::util::json::{num, obj, s, Value};
 
 fn fail(msg: &str) -> ! {
@@ -36,9 +45,12 @@ fn fail(msg: &str) -> ! {
 }
 
 /// Read every `<dir>/*.json` bench report into `group.name -> value`,
-/// skipping the unit tests' `selftest*` scratch groups.
+/// skipping the unit tests' `selftest*` scratch groups. `MetricsSnapshot`
+/// documents flatten to `source.section.path` keys and are merged second,
+/// so on a key collision the structured snapshot wins over the scrape.
 fn collect_metrics(dir: &Path) -> BTreeMap<String, f64> {
     let mut out = BTreeMap::new();
+    let mut snapshots = BTreeMap::new();
     let entries = match std::fs::read_dir(dir) {
         Ok(e) => e,
         Err(e) => fail(&format!("cannot read reports dir {}: {e}", dir.display())),
@@ -53,6 +65,10 @@ fn collect_metrics(dir: &Path) -> BTreeMap<String, f64> {
             eprintln!("perf_gate: skipping unparsable {}", path.display());
             continue;
         };
+        if MetricsSnapshot::is_snapshot_json(&v) {
+            snapshots.extend(MetricsSnapshot::flatten(&v));
+            continue;
+        }
         let group = v.get("group").and_then(|g| g.as_str()).unwrap_or("").to_string();
         if group.is_empty() || group.starts_with("selftest") {
             continue;
@@ -65,6 +81,7 @@ fn collect_metrics(dir: &Path) -> BTreeMap<String, f64> {
             }
         }
     }
+    out.extend(snapshots);
     out
 }
 

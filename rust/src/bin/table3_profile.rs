@@ -2,23 +2,45 @@
 //! consecutive decoder layers under vanilla TP vs Layer Parallelism.
 //!
 //!     cargo run --release --bin table3_profile [-- --model td-small \
-//!         --steps 50 --seqlen 128]
+//!         --steps 50 --seqlen 128 --trace-out table3.trace.json]
 //!
 //! Runs `--steps` decode iterations over a 2-layer sub-model in each mode
 //! and reports total / sync / compute time plus the ratios the paper
 //! highlights (sync ≈ ×2 reduction, compute ≈ flat, total ≈ ×1.2).
-//! Output: results/table3_<model>.csv
+//! Output: results/table3_<model>.csv, plus a hottest-first wall-clock
+//! phase profile (results/table3_phases_<model>.json). With --trace-out
+//! the per-tier sweep also exports a Chrome/Perfetto trace of its
+//! simulated-clock timeline, making the sync/compute split visible as a
+//! timeline instead of a CSV (README "Observability").
 
 use truedepth::cli::Args;
-use truedepth::harness::{default_net, write_csv, ScoringCtx};
+use truedepth::harness::{default_net, results_dir, write_csv, ScoringCtx};
 use truedepth::model::plan::{GraphPlan, Stage};
 use truedepth::model::{ServingModel, Weights};
+use truedepth::obs::{Tracer, Track};
+use truedepth::parallel::MeshMetrics;
+use truedepth::profiling::PhaseTimer;
+
+/// The deterministic modelled-clock split (sync, compute, host, total), ns.
+/// Read as deltas so the per-tier sweep can keep one monotone timeline
+/// (resetting the clock mid-trace would fold the timestamps over).
+fn modelled_split_ns(m: &MeshMetrics) -> (u64, u64, u64, u64) {
+    use std::sync::atomic::Ordering::Relaxed;
+    (
+        m.modelled_sync_ns.load(Relaxed),
+        m.modelled_compute_ns.load(Relaxed),
+        m.modelled_host_ns.load(Relaxed),
+        m.modelled_total_ns(),
+    )
+}
 
 fn main() -> truedepth::Result<()> {
     let args = Args::from_env(&[]);
     let model = args.get_or("model", "td-small");
     let steps = args.get_usize("steps", 50);
     let seqlen = args.get_usize("seqlen", 128);
+    let trace_out = args.get("trace-out").map(std::path::PathBuf::from);
+    let mut timer = PhaseTimer::new();
 
     let ctx = ScoringCtx::load(model)?;
     let entry = ctx.entry();
@@ -32,6 +54,7 @@ fn main() -> truedepth::Result<()> {
 
     let mut rows = Vec::new();
     let mut results = Vec::new();
+    let guard = timer.start("tp_vs_lp_sweep");
     for (name, plan) in [("tensor_parallel", &tp_plan), ("layer_parallel", &lp_plan)] {
         let serving = ServingModel::new(&ctx.manifest, model, &weights, plan, default_net())?;
         // prefill a cache so decode attends over `seqlen` positions
@@ -73,11 +96,13 @@ fn main() -> truedepth::Result<()> {
         ));
         results.push((m_total, m_sync, m_comp, sync_ops));
     }
+    drop(guard);
 
     // Shape-bucket dispatch: the same 2-layer LP sub-model at occupancy 1
     // bills the B=1 bucket — device compute and the logits download drop
     // to 1/S of the full-batch round above.
     {
+        let _g = timer.start("occupancy_1");
         let serving = ServingModel::new(&ctx.manifest, model, &weights, &lp_plan, default_net())?;
         let prompt: Vec<i32> = (0..seqlen as i32).map(|i| 97 + (i % 26)).collect();
         serving.prefill(0, &prompt)?;
@@ -102,22 +127,32 @@ fn main() -> truedepth::Result<()> {
     // — exactly the paper's Table 3 shape, now as a per-request dial.
     if let Ok(tiers) = ServingModel::from_manifest(&ctx.manifest, model, &weights, default_net())
     {
+        let _g = timer.start("tier_sweep");
         let profile_steps = steps.min(10);
         println!("\nper-tier modelled split ({profile_steps} decode rounds, full plans):");
+        if trace_out.is_some() {
+            tiers.mesh.begin_trace();
+        }
         let mut trows = Vec::new();
+        let mut tier_spans: Vec<(String, u64, u64)> = Vec::new();
         for vid in tiers.variant_ids() {
             let prompt: Vec<i32> = (0..seqlen as i32).map(|i| 97 + (i % 26)).collect();
             tiers.prefill_v(&vid, 0, &prompt)?;
             tiers.decode_active_v(&vid, &[(0, 65, seqlen as i32)])?; // warm
-            tiers.mesh.metrics.reset();
+            // Delta-based accounting (no reset): the simulated clock keeps
+            // running across tiers, so --trace-out sees one monotone
+            // timeline while the per-tier figures stay identical.
+            let (s0, c0, h0, clk0) = modelled_split_ns(&tiers.mesh.metrics);
             for _ in 0..profile_steps {
                 tiers.decode_active_v(&vid, &[(0, 65, seqlen as i32)])?;
             }
+            let (s1, c1, h1, clk1) = modelled_split_ns(&tiers.mesh.metrics);
             let n = profile_steps as f64;
-            let m_sync = tiers.mesh.metrics.modelled_sync_ms() / n;
-            let m_comp = tiers.mesh.metrics.modelled_compute_ms() / n;
-            let m_host = tiers.mesh.metrics.modelled_host_ms() / n;
-            let m_total = tiers.mesh.metrics.modelled_total_ms() / n;
+            let m_sync = (s1 - s0) as f64 / 1e6 / n;
+            let m_comp = (c1 - c0) as f64 / 1e6 / n;
+            let m_host = (h1 - h0) as f64 / 1e6 / n;
+            let m_total = (clk1 - clk0) as f64 / 1e6 / n;
+            tier_spans.push((vid.to_string(), clk0, clk1));
             let var = tiers.variant(&vid)?;
             println!(
                 "tier {:<8} depth {:>2} ({:>2} reduces/tok): total {m_total:>7.3} ms = sync {m_sync:.3} + compute {m_comp:.3} + host {m_host:.4}",
@@ -136,11 +171,30 @@ fn main() -> truedepth::Result<()> {
             "tier,effective_depth,all_reduces_per_token,modelled_sync_ms_per_tok,modelled_compute_ms_per_tok,modelled_host_ms_per_tok,modelled_total_ms_per_tok",
             &trows,
         );
+        // --trace-out: the tier sweep as a Chrome/Perfetto timeline — one
+        // span per tier's profiled window on its own track, over the mesh
+        // track's per-dispatch events (see README "Observability").
+        if let Some(path) = &trace_out {
+            let tracer = Tracer::new();
+            tracer.record_mesh_events(tiers.mesh.take_timed_trace());
+            for (vid, a, b) in &tier_spans {
+                tracer.span(
+                    Track::Tier(vid.clone()),
+                    format!("profile {vid}"),
+                    *a,
+                    *b,
+                    &[("tier", vid.clone())],
+                );
+            }
+            tracer.write_chrome(path)?;
+            println!("tier-sweep trace: {} ({} events)", path.display(), tracer.len());
+        }
     }
 
     // Chunked streaming prefill: modelled prefill flops scale with
     // ceil(L / chunk) chunk steps instead of the covering seq bucket T.
     {
+        let _g = timer.start("chunked_prefill");
         let serving = ServingModel::new(&ctx.manifest, model, &weights, &lp_plan, default_net())?;
         if let Some(k) = serving.prefill_chunk() {
             let mut prows = Vec::new();
@@ -187,5 +241,12 @@ fn main() -> truedepth::Result<()> {
         "approach,total_ms,sync_ms,compute_ms,sync_ops,host_transfers_per_token,mflop_per_token,modelled_sync_ms_per_tok,modelled_compute_ms_per_tok,modelled_host_ms_per_tok,modelled_total_ms_per_tok",
         &rows,
     );
+
+    // Wall-clock phase breakdown (hottest section first) as a
+    // machine-readable artifact, via PhaseTimer::to_json().
+    let ppath = results_dir().join(format!("table3_phases_{model}.json"));
+    std::fs::write(&ppath, timer.to_json().to_string_pretty() + "\n")?;
+    println!("phase profile (hottest first): {}", ppath.display());
+    print!("{}", timer.report());
     Ok(())
 }

@@ -15,7 +15,13 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
-use crate::util::stats::Summary;
+use crate::util::stats::{Reservoir, Summary};
+
+/// Capacity of each latency reservoir. Under sustained load the metrics
+/// footprint stays fixed at 4 × this many `f64`s; percentiles come from a
+/// deterministic uniform sample (see [`Reservoir`]) while n/min/max stay
+/// exact.
+const RESERVOIR_CAP: usize = 1024;
 
 /// Per-tier decode accounting (plan-variant serving): each entry is one
 /// serving tier's share of the decode rounds, keyed by `VariantId` name.
@@ -38,7 +44,6 @@ impl TierStats {
     }
 }
 
-#[derive(Default)]
 pub struct ServerMetrics {
     pub requests_submitted: AtomicU64,
     pub requests_completed: AtomicU64,
@@ -67,10 +72,39 @@ pub struct ServerMetrics {
     /// observable: rounds clustered at low occupancy should dispatch small
     /// buckets (see `runtime::buckets`).
     occupancy_hist: Mutex<Vec<u64>>,
-    ttft_ms: Mutex<Vec<f64>>,
-    latency_ms: Mutex<Vec<f64>>,
-    modelled_ttft_ms: Mutex<Vec<f64>>,
-    modelled_latency_ms: Mutex<Vec<f64>>,
+    /// Latency reservoirs: bounded at [`RESERVOIR_CAP`] samples each via
+    /// deterministic reservoir sampling, so sustained load cannot grow them.
+    ttft_ms: Mutex<Reservoir>,
+    latency_ms: Mutex<Reservoir>,
+    modelled_ttft_ms: Mutex<Reservoir>,
+    modelled_latency_ms: Mutex<Reservoir>,
+}
+
+impl Default for ServerMetrics {
+    fn default() -> ServerMetrics {
+        // Fixed distinct seeds keep the four sampling streams independent
+        // AND reproducible: identical runs yield bit-identical summaries,
+        // the property `obs::MetricsSnapshot` and the perf gate rely on.
+        ServerMetrics {
+            requests_submitted: AtomicU64::new(0),
+            requests_completed: AtomicU64::new(0),
+            requests_rejected: AtomicU64::new(0),
+            tokens_generated: AtomicU64::new(0),
+            prefill_tokens: AtomicU64::new(0),
+            decode_steps: AtomicU64::new(0),
+            live_lanes_last_round: AtomicU64::new(0),
+            modelled_decode_ns: AtomicU64::new(0),
+            modelled_decode_tokens: AtomicU64::new(0),
+            modelled_prefill_ns: AtomicU64::new(0),
+            exec_cache_evictions: AtomicU64::new(0),
+            tier_stats: Mutex::new(BTreeMap::new()),
+            occupancy_hist: Mutex::new(Vec::new()),
+            ttft_ms: Mutex::new(Reservoir::new(RESERVOIR_CAP, 0x7f71)),
+            latency_ms: Mutex::new(Reservoir::new(RESERVOIR_CAP, 0x1a7e)),
+            modelled_ttft_ms: Mutex::new(Reservoir::new(RESERVOIR_CAP, 0x0de1_7f71)),
+            modelled_latency_ms: Mutex::new(Reservoir::new(RESERVOIR_CAP, 0x0de1_1a7e)),
+        }
+    }
 }
 
 impl ServerMetrics {
@@ -138,25 +172,21 @@ impl ServerMetrics {
     }
 
     pub fn ttft_summary(&self) -> Option<Summary> {
-        let v = self.ttft_ms.lock().unwrap();
-        (!v.is_empty()).then(|| Summary::from(&v))
+        self.ttft_ms.lock().unwrap().summary()
     }
 
     pub fn latency_summary(&self) -> Option<Summary> {
-        let v = self.latency_ms.lock().unwrap();
-        (!v.is_empty()).then(|| Summary::from(&v))
+        self.latency_ms.lock().unwrap().summary()
     }
 
     /// Modelled admission→first-token latency distribution (deterministic).
     pub fn modelled_ttft_summary(&self) -> Option<Summary> {
-        let v = self.modelled_ttft_ms.lock().unwrap();
-        (!v.is_empty()).then(|| Summary::from(&v))
+        self.modelled_ttft_ms.lock().unwrap().summary()
     }
 
     /// Modelled end-to-end request latency distribution (deterministic).
     pub fn modelled_latency_summary(&self) -> Option<Summary> {
-        let v = self.modelled_latency_ms.lock().unwrap();
-        (!v.is_empty()).then(|| Summary::from(&v))
+        self.modelled_latency_ms.lock().unwrap().summary()
     }
 
     /// Modelled decode throughput: tokens produced per second of simulated
@@ -298,6 +328,33 @@ mod tests {
         assert!(!r.contains("exec cache evictions"), "{r}");
         m.exec_cache_evictions.store(3, Ordering::Relaxed);
         assert!(m.report().contains("exec cache evictions: 3"));
+    }
+
+    /// The latency reservoirs are bounded: far more completions than the
+    /// reservoir capacity must not grow memory, exact figures (n/min/max)
+    /// must survive sampling, and two identical runs must agree bit for bit.
+    #[test]
+    fn reservoir_summaries_stay_stable_under_load() {
+        let run = || {
+            let m = ServerMetrics::default();
+            for i in 0..5000 {
+                let x = (i % 97) as f64;
+                m.record_completion(x, x + 100.0, 1, x + 0.5, x + 100.5);
+            }
+            m
+        };
+        let m = run();
+        let t = m.ttft_summary().unwrap();
+        assert_eq!(t.n, 5000, "count is exact, not the sample size");
+        assert_eq!((t.min, t.max), (0.0, 96.0), "min/max are exact");
+        let l = m.latency_summary().unwrap();
+        assert_eq!((l.min, l.max), (100.0, 196.0));
+        // the sampled median of a uniform 0..97 stream stays near 48
+        assert!((t.p50 - 48.0).abs() < 15.0, "sampled p50 drifted: {}", t.p50);
+        let m2 = run();
+        assert_eq!(m2.ttft_summary().unwrap(), t, "summaries must be run-stable");
+        assert_eq!(m2.modelled_ttft_summary().unwrap(), m.modelled_ttft_summary().unwrap());
+        assert_eq!(m2.modelled_latency_summary().unwrap(), m.modelled_latency_summary().unwrap());
     }
 
     #[test]

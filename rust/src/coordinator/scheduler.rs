@@ -60,6 +60,7 @@ use crate::model::kvcache::SlotManager;
 use crate::model::prefill::ChunkedPrefill;
 use crate::model::serving::ActiveSlot;
 use crate::model::ServingModel;
+use crate::obs::{Tracer, Track};
 use crate::runtime::VariantId;
 use crate::text::tokenizer::{self, EOS};
 use crate::util::rng::SplitMix64;
@@ -109,13 +110,38 @@ pub struct Scheduler {
     /// so several long prompts interleave instead of serializing.
     pending: VecDeque<PendingPrefill>,
     metrics: Arc<ServerMetrics>,
+    /// Optional span recorder (`crate::obs`): when set, the scheduler
+    /// emits request-lifecycle spans on the simulated clock and the mesh
+    /// recorder is armed so dispatch/collective events land on the mesh
+    /// track (drained by [`Scheduler::flush_mesh_trace`]).
+    tracer: Option<Arc<Tracer>>,
 }
 
 impl Scheduler {
     pub fn new(model: ServingModel, metrics: Arc<ServerMetrics>) -> Scheduler {
+        Scheduler::with_tracer(model, metrics, None)
+    }
+
+    /// Like [`Scheduler::new`], but recording spans into `tracer`; also
+    /// arms the mesh's event recorder so the trace gets a mesh track.
+    pub fn with_tracer(
+        model: ServingModel,
+        metrics: Arc<ServerMetrics>,
+        tracer: Option<Arc<Tracer>>,
+    ) -> Scheduler {
+        if tracer.is_some() {
+            model.mesh.begin_trace();
+        }
         let cfg = &model.entry.config;
         let slots = SlotManager::new(cfg.slots, cfg.ctx);
-        Scheduler { model, slots, inflight: HashMap::new(), pending: VecDeque::new(), metrics }
+        Scheduler {
+            model,
+            slots,
+            inflight: HashMap::new(),
+            pending: VecDeque::new(),
+            metrics,
+            tracer,
+        }
     }
 
     pub fn model(&self) -> &ServingModel {
@@ -126,6 +152,15 @@ impl Scheduler {
     /// base for all modelled latency attribution below.
     fn modelled_clock_ns(&self) -> u64 {
         self.model.mesh.metrics.modelled_total_ns()
+    }
+
+    /// Drain the mesh's timed event log into the tracer (no-op without
+    /// one). Called once when the run loop exits; draining disarms the
+    /// mesh recorder, so this must come after the last dispatch.
+    pub fn flush_mesh_trace(&self) {
+        if let Some(tr) = &self.tracer {
+            tr.record_mesh_events(self.model.mesh.take_timed_trace());
+        }
     }
 
     /// Run until the batcher closes and all in-flight work drains.
@@ -145,6 +180,7 @@ impl Scheduler {
             }
             if self.inflight.is_empty() && self.pending.is_empty() {
                 if batcher.is_closed() && batcher.is_empty() {
+                    self.flush_mesh_trace();
                     return;
                 }
                 continue;
@@ -178,6 +214,7 @@ impl Scheduler {
                 self.metrics
                     .requests_rejected
                     .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                self.trace_reject(request.id, &e.to_string());
                 let _ = reply.send(Response::failed(request.id, e.to_string()));
                 return;
             }
@@ -186,6 +223,7 @@ impl Scheduler {
             self.metrics
                 .requests_rejected
                 .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            self.trace_reject(request.id, &e.to_string());
             let _ = reply.send(Response::failed(request.id, e.to_string()));
             return;
         }
@@ -206,6 +244,18 @@ impl Scheduler {
         };
         self.slots.set_prefilling(slot, true);
         let modelled_start_ns = self.modelled_clock_ns();
+        if let Some(tr) = &self.tracer {
+            tr.instant(
+                Track::Slot(slot),
+                "admit",
+                modelled_start_ns,
+                &[
+                    ("request", request.id.to_string()),
+                    ("tier", vid.to_string()),
+                    ("prompt_tokens", ids.len().to_string()),
+                ],
+            );
+        }
         self.pending.push_back(PendingPrefill {
             state,
             request,
@@ -216,6 +266,19 @@ impl Scheduler {
         });
     }
 
+    /// Mark a rejection on the scheduler track (admission control is a
+    /// scheduler decision, not tied to any slot).
+    fn trace_reject(&self, request_id: u64, error: &str) {
+        if let Some(tr) = &self.tracer {
+            tr.instant(
+                Track::Scheduler,
+                "reject",
+                self.modelled_clock_ns(),
+                &[("request", request_id.to_string()), ("error", error.to_string())],
+            );
+        }
+    }
+
     /// Advance the head pending prefill by one chunk, then rotate it to
     /// the back of the queue (round-robin fairness: with several long
     /// prompts pending, each gets every len(pending)-th chunk slot instead
@@ -224,10 +287,37 @@ impl Scheduler {
     /// batch from the same iteration onward.
     fn step_pending_prefill(&mut self) {
         let Some(mut head) = self.pending.pop_front() else { return };
+        let first_chunk = head.state.consumed() == 0;
         let clock0 = self.model.mesh.metrics.modelled_total_ns();
         let step = self.model.prefill_step(&mut head.state);
         let clock1 = self.model.mesh.metrics.modelled_total_ns();
         self.metrics.record_prefill_step(clock1 - clock0);
+        if let Some(tr) = &self.tracer {
+            let slot = head.state.slot();
+            let req = head.request.id.to_string();
+            if first_chunk {
+                // admission → first chunk: time spent waiting behind other
+                // prompts' chunks and interleaved decode rounds
+                tr.span(
+                    Track::Slot(slot),
+                    "queued",
+                    head.modelled_start_ns,
+                    clock0,
+                    &[("request", req.clone())],
+                );
+            }
+            tr.span(
+                Track::Slot(slot),
+                "prefill_chunk",
+                clock0,
+                clock1,
+                &[
+                    ("request", req),
+                    ("tier", head.state.variant().to_string()),
+                    ("consumed", format!("{}/{}", head.state.consumed(), head.prompt_tokens)),
+                ],
+            );
+        }
         match step {
             // chunk consumed; the NEXT pending prompt gets the next
             // iteration's chunk slot
@@ -246,6 +336,18 @@ impl Scheduler {
                 // this request's own chunk steps plus every decode round
                 // and other-prompt chunk interleaved since admit.
                 let modelled_ttft_ms = (clock1 - p.modelled_start_ns) as f64 / 1e6;
+                if let Some(tr) = &self.tracer {
+                    tr.instant(
+                        Track::Slot(slot),
+                        "first_token",
+                        clock1,
+                        &[
+                            ("request", p.request.id.to_string()),
+                            ("tier", variant.to_string()),
+                            ("modelled_ttft_ms", format!("{modelled_ttft_ms:.3}")),
+                        ],
+                    );
+                }
                 self.slots.set_prefilling(slot, false);
                 self.slots.get_mut(slot).unwrap().next_token = first;
                 self.inflight.insert(
@@ -266,6 +368,14 @@ impl Scheduler {
             }
             Err(e) => {
                 self.slots.free(head.state.slot());
+                if let Some(tr) = &self.tracer {
+                    tr.instant(
+                        Track::Scheduler,
+                        "prefill_failed",
+                        clock1,
+                        &[("request", head.request.id.to_string()), ("error", e.to_string())],
+                    );
+                }
                 let _ = head
                     .reply
                     .send(Response::failed(head.request.id, format!("prefill failed: {e}")));
@@ -305,9 +415,19 @@ impl Scheduler {
             // after a partial failure only the lanes that actually
             // produced a row count toward the occupancy histogram.
             if !rows.is_empty() {
-                let modelled_ns = self.modelled_clock_ns() - clock0;
+                let clock1 = self.modelled_clock_ns();
+                let modelled_ns = clock1 - clock0;
                 self.metrics.record_decode_round(rows.len(), modelled_ns);
                 self.metrics.record_tier_round(vid.as_str(), rows.len(), modelled_ns);
+                if let Some(tr) = &self.tracer {
+                    tr.span(
+                        Track::Tier(vid.as_str().to_string()),
+                        "decode_round",
+                        clock0,
+                        clock1,
+                        &[("tier", vid.to_string()), ("live", rows.len().to_string())],
+                    );
+                }
             }
             for (slot, row) in rows {
                 self.apply_sampled_row(slot, &row);
@@ -363,8 +483,24 @@ impl Scheduler {
             let inf = self.inflight.remove(&slot).unwrap();
             self.slots.free(slot);
             let latency = inf.request.submitted_at.elapsed().as_secs_f64() * 1e3;
-            let modelled_latency_ms =
-                (self.modelled_clock_ns() - inf.modelled_start_ns) as f64 / 1e6;
+            let end_ns = self.modelled_clock_ns();
+            let modelled_latency_ms = (end_ns - inf.modelled_start_ns) as f64 / 1e6;
+            if let Some(tr) = &self.tracer {
+                // the whole request as one span: admission → retirement
+                tr.span(
+                    Track::Slot(slot),
+                    format!("req {}", inf.request.id),
+                    inf.modelled_start_ns,
+                    end_ns,
+                    &[
+                        ("request", inf.request.id.to_string()),
+                        ("tier", inf.variant.to_string()),
+                        ("prompt_tokens", inf.prompt_tokens.to_string()),
+                        ("tokens", inf.tokens.len().to_string()),
+                        ("modelled_ttft_ms", format!("{:.3}", inf.modelled_ttft_ms)),
+                    ],
+                );
+            }
             self.metrics.record_completion(
                 inf.ttft_ms,
                 latency,
@@ -668,6 +804,66 @@ mod tests {
         let b = run().unwrap();
         assert_eq!(a, b, "mixed-tier rounds must be deterministic (clock, tokens, tiers)");
         assert!(a.clock_ns > 0, "clock never ticked");
+    }
+
+    /// Tentpole acceptance: the export layer inherits the modelled
+    /// determinism — two identical mixed-tier scheduler runs emit
+    /// byte-identical Chrome trace JSON and metrics snapshots, and the
+    /// trace carries per-request spans with tier attributes plus
+    /// mesh-track collective events.
+    #[test]
+    fn trace_and_snapshot_exports_are_byte_identical() {
+        use crate::obs::MetricsSnapshot;
+        let run = || -> Option<(String, String)> {
+            let model = build_multi()?;
+            let metrics = Arc::new(ServerMetrics::default());
+            let tracer = Arc::new(Tracer::new());
+            let mut sched = Scheduler::with_tracer(model, metrics.clone(), Some(tracer.clone()));
+            let mut replies = Vec::new();
+            for (id, tier) in [(1u64, "dense"), (2, "lp"), (3, "lp_aggr")] {
+                let opts = RequestOptions {
+                    max_new_tokens: 3,
+                    sampler: Sampler::Greedy,
+                    tier: Some(tier.to_string()),
+                };
+                let (j, rx) = job_opts(id, "the red fox", opts);
+                sched.admit(j);
+                replies.push(rx);
+            }
+            for _ in 0..100 {
+                if sched.inflight.is_empty() && sched.pending.is_empty() {
+                    break;
+                }
+                sched.tick();
+            }
+            assert!(sched.inflight.is_empty() && sched.pending.is_empty());
+            sched.flush_mesh_trace();
+            let trace = tracer.to_chrome_json().to_string_pretty();
+            let snap = MetricsSnapshot::new("test")
+                .with_server(&metrics)
+                .with_mesh(&sched.model.mesh.metrics)
+                .to_string_pretty();
+            Some((trace, snap))
+        };
+        let Some((trace_a, snap_a)) = run() else { return };
+        // the trace parses as trace-event JSON and carries the spans the
+        // acceptance criteria name
+        let doc = crate::util::json::Value::parse(&trace_a).unwrap();
+        assert!(doc.get("traceEvents").is_some());
+        assert!(trace_a.contains("\"req 1\""), "per-request span missing");
+        assert!(trace_a.contains("\"decode_round\""), "tier decode spans missing");
+        assert!(trace_a.contains("\"tier\": \"lp_aggr\""), "tier attribute missing");
+        assert!(trace_a.contains("\"first_token\""), "first-token instant missing");
+        assert!(trace_a.contains("\"cat\": \"mesh\""), "mesh track missing");
+        assert!(
+            trace_a.contains("reduce_into") || trace_a.contains("all_reduce"),
+            "mesh collective events missing"
+        );
+        assert!(snap_a.contains(MetricsSnapshot::SCHEMA));
+        assert!(snap_a.contains("\"tiers\"") && snap_a.contains("\"mesh\""));
+        let (trace_b, snap_b) = run().unwrap();
+        assert_eq!(trace_a, trace_b, "identical runs must emit byte-identical traces");
+        assert_eq!(snap_a, snap_b, "identical runs must emit byte-identical snapshots");
     }
 
     /// Satellite: a tier the manifest does not carry is rejected at

@@ -13,6 +13,7 @@ use crate::coordinator::request::{Job, Request, RequestOptions, Response};
 use crate::coordinator::scheduler::Scheduler;
 use crate::error::{Error, Result};
 use crate::model::ServingModel;
+use crate::obs::Tracer;
 
 pub struct Server {
     batcher: Arc<Batcher>,
@@ -24,6 +25,18 @@ pub struct Server {
 impl Server {
     /// Spawn the scheduler thread over a ready serving model.
     pub fn start(model: ServingModel, cfg: &ServerConfig) -> Server {
+        Server::spawn(model, cfg, None)
+    }
+
+    /// Like [`Server::start`], but with a span recorder (`crate::obs`):
+    /// the scheduler emits simulated-clock lifecycle spans into `tracer`
+    /// and drains the mesh event track into it on shutdown, so after
+    /// [`Server::shutdown`] the tracer holds the complete trace.
+    pub fn start_traced(model: ServingModel, cfg: &ServerConfig, tracer: Arc<Tracer>) -> Server {
+        Server::spawn(model, cfg, Some(tracer))
+    }
+
+    fn spawn(model: ServingModel, cfg: &ServerConfig, tracer: Option<Arc<Tracer>>) -> Server {
         let batcher = Arc::new(Batcher::new(cfg.queue_depth));
         let metrics = Arc::new(ServerMetrics::default());
         let b2 = batcher.clone();
@@ -32,7 +45,7 @@ impl Server {
         let join = std::thread::Builder::new()
             .name("scheduler".into())
             .spawn(move || {
-                let mut sched = Scheduler::new(model, m2);
+                let mut sched = Scheduler::with_tracer(model, m2, tracer);
                 sched.run(&b2, wait);
             })
             .expect("spawn scheduler");

@@ -19,6 +19,8 @@
 //! * [`eval`] — perplexity + the synthetic 5-shot ICL suite.
 //! * [`verify`] — static plan/binding/collective checker over the artifact
 //!   manifest: runs at load time, as `truedepth verify`, and as a CI gate.
+//! * [`obs`] — deterministic tracing + metrics export on the simulated
+//!   clock: Chrome/Perfetto traces and machine-readable snapshots.
 //!
 //! See DESIGN.md for the experiment index and EXPERIMENTS.md for results.
 
@@ -31,6 +33,7 @@ pub mod eval;
 pub mod gen;
 pub mod harness;
 pub mod model;
+pub mod obs;
 pub mod parallel;
 pub mod profiling;
 pub mod runtime;

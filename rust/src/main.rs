@@ -11,13 +11,19 @@
 //!   ppl       --model M [--transform T --s S --e E]
 //!   serve     --model M [--depth D | --tiers] [--config run.toml]
 //!             [--max-cached-execs N] --requests N
+//!             [--trace-out F] [--metrics-out F]
 //!                                synthetic load demo; --tiers serves every
 //!                                manifest plan variant concurrently
 //!                                (requests cycle dense/lp/lp_aggr).
 //!                                --config applies a RunConfig TOML
 //!                                ([interconnect]/[device] cost model +
 //!                                [runtime] max_cached_execs); the CLI flag
-//!                                overrides the [runtime] knob
+//!                                overrides the [runtime] knob.
+//!                                --trace-out writes a Chrome/Perfetto trace
+//!                                of the run on the simulated clock;
+//!                                --metrics-out writes a machine-readable
+//!                                metrics snapshot (both deterministic; see
+//!                                README "Observability")
 //!
 //! Examples live in `examples/` (quickstart, serve_batch, depth_explorer);
 //! experiment regenerators in `rust/src/bin/` (see DESIGN.md).
@@ -29,6 +35,7 @@ use truedepth::eval::ppl::{eval_windows, perplexity};
 use truedepth::gen::{generate, Sampler};
 use truedepth::harness::{default_net, no_net, ScoringCtx};
 use truedepth::model::{transform, Scorer, ServingModel};
+use truedepth::obs::{MetricsSnapshot, Tracer};
 use truedepth::text::corpus::{self, DATA_SEED};
 use truedepth::util::rng::SplitMix64;
 
@@ -189,7 +196,13 @@ fn cmd_serve(args: &Args) -> truedepth::Result<()> {
         .iter()
         .map(|v| format!("{v}:{}", serving.variant(v).unwrap().effective_depth()))
         .collect();
-    let server = Server::start(serving, &ServerConfig::default());
+    let trace_out = args.get("trace-out").map(std::path::PathBuf::from);
+    let metrics_out = args.get("metrics-out").map(std::path::PathBuf::from);
+    let tracer = trace_out.as_ref().map(|_| std::sync::Arc::new(Tracer::new()));
+    let server = match &tracer {
+        Some(t) => Server::start_traced(serving, &ServerConfig::default(), t.clone()),
+        None => Server::start(serving, &ServerConfig::default()),
+    };
 
     println!(
         "serving {model} [{}] — {n_requests} synthetic requests",
@@ -218,6 +231,17 @@ fn cmd_serve(args: &Args) -> truedepth::Result<()> {
         "throughput: {:.1} generated tok/s ({total_tokens} tokens / {wall:.2}s)",
         total_tokens as f64 / wall
     );
+    let metrics = server.metrics.clone();
+    // shutdown drains the scheduler, which flushes the mesh event track
+    // into the tracer — export only after it returns
     server.shutdown();
+    if let (Some(tr), Some(path)) = (&tracer, &trace_out) {
+        tr.write_chrome(path)?;
+        println!("trace: {} ({} events)", path.display(), tr.len());
+    }
+    if let Some(path) = &metrics_out {
+        MetricsSnapshot::new("serve").with_server(&metrics).write(path)?;
+        println!("metrics snapshot: {}", path.display());
+    }
     Ok(())
 }

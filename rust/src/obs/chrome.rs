@@ -1,0 +1,173 @@
+//! Chrome trace-event JSON exporter.
+//!
+//! Emits the [trace-event format] understood by Perfetto and
+//! `chrome://tracing`: one process, one "thread" (track) per
+//! [`Track`], `"X"` complete events for spans and `"i"` instants for
+//! point events, timestamps in microseconds of the *simulated* clock.
+//! Output is deterministic: tracks get ids in [`Track`]'s `Ord` order,
+//! events are stably sorted by start time, and object keys serialize
+//! sorted (`util/json.rs` uses `BTreeMap`) — so byte-identical runs
+//! yield byte-identical trace files.
+//!
+//! [trace-event format]: https://docs.google.com/document/d/1CvAClvFfyA5R-PhYUmn5OOQtYMH4h6I0nSsKchNAySU
+
+use std::collections::BTreeMap;
+
+use crate::util::json::{self, Value};
+
+use super::tracer::{TraceEvent, Track};
+
+/// Build the trace-event JSON document for a set of recorded events.
+pub fn chrome_trace(events: &[TraceEvent]) -> Value {
+    // Deterministic track → tid assignment: collect the distinct tracks
+    // and number them in Track's Ord order (scheduler, mesh, slots, tiers).
+    let mut tids: BTreeMap<Track, u64> = BTreeMap::new();
+    for ev in events {
+        tids.entry(ev.track.clone()).or_insert(0);
+    }
+    for (i, tid) in tids.values_mut().enumerate() {
+        *tid = i as u64;
+    }
+
+    let mut out: Vec<Value> = Vec::new();
+    out.push(json::obj(vec![
+        ("ph", json::s("M")),
+        ("name", json::s("process_name")),
+        ("pid", json::num(0.0)),
+        ("args", json::obj(vec![("name", json::s("truedepth (simulated clock)"))])),
+    ]));
+    for (track, &tid) in &tids {
+        out.push(json::obj(vec![
+            ("ph", json::s("M")),
+            ("name", json::s("thread_name")),
+            ("pid", json::num(0.0)),
+            ("tid", json::num(tid as f64)),
+            ("args", json::obj(vec![("name", json::s(track.label()))])),
+        ]));
+        out.push(json::obj(vec![
+            ("ph", json::s("M")),
+            ("name", json::s("thread_sort_index")),
+            ("pid", json::num(0.0)),
+            ("tid", json::num(tid as f64)),
+            ("args", json::obj(vec![("sort_index", json::num(tid as f64))])),
+        ]));
+    }
+
+    // Stable sort by start time: events at the same simulated instant
+    // keep their recording order, so the output is reproducible even
+    // when many events share a timestamp.
+    let mut evs: Vec<&TraceEvent> = events.iter().collect();
+    evs.sort_by_key(|e| e.at_ns);
+    for ev in evs {
+        let mut pairs = vec![
+            ("name", json::s(ev.name.clone())),
+            ("cat", json::s(ev.track.category())),
+            ("pid", json::num(0.0)),
+            ("tid", json::num(tids[&ev.track] as f64)),
+            // trace-event timestamps are microseconds
+            ("ts", json::num(ev.at_ns as f64 / 1e3)),
+        ];
+        match ev.dur_ns {
+            Some(d) => {
+                pairs.push(("ph", json::s("X")));
+                pairs.push(("dur", json::num(d as f64 / 1e3)));
+            }
+            None => {
+                pairs.push(("ph", json::s("i")));
+                pairs.push(("s", json::s("t"))); // instant scoped to its thread/track
+            }
+        }
+        if !ev.args.is_empty() {
+            let m: BTreeMap<String, Value> =
+                ev.args.iter().map(|(k, v)| (k.clone(), Value::Str(v.clone()))).collect();
+            pairs.push(("args", Value::Obj(m)));
+        }
+        out.push(json::obj(pairs));
+    }
+
+    json::obj(vec![("displayTimeUnit", json::s("ms")), ("traceEvents", json::arr(out))])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_events() -> Vec<TraceEvent> {
+        vec![
+            TraceEvent {
+                name: "req 1".to_string(),
+                track: Track::Slot(0),
+                at_ns: 2_000,
+                dur_ns: Some(5_000),
+                args: vec![("tier".to_string(), "lp".to_string())],
+            },
+            TraceEvent {
+                name: "all_reduce".to_string(),
+                track: Track::Mesh,
+                at_ns: 1_000,
+                dur_ns: Some(500),
+                args: vec![("bytes".to_string(), "4096".to_string())],
+            },
+            TraceEvent {
+                name: "first_token".to_string(),
+                track: Track::Slot(0),
+                at_ns: 4_000,
+                dur_ns: None,
+                args: Vec::new(),
+            },
+        ]
+    }
+
+    #[test]
+    fn exports_valid_trace_event_json() {
+        let doc = chrome_trace(&sample_events());
+        // round-trips through the repo's own parser
+        let re = Value::parse(&doc.to_string_pretty()).unwrap();
+        assert_eq!(re.get("displayTimeUnit").and_then(Value::as_str), Some("ms"));
+        let evs = re.get("traceEvents").and_then(Value::as_arr).unwrap();
+        // 1 process + 2 tracks × 2 metadata + 3 events
+        assert_eq!(evs.len(), 8);
+        // tids follow Track order: Mesh (0) before Slot(0) (1)
+        let thread_names: Vec<(&str, f64)> = evs
+            .iter()
+            .filter(|e| e.get("name").and_then(Value::as_str) == Some("thread_name"))
+            .map(|e| {
+                (
+                    e.get("args").unwrap().get("name").and_then(Value::as_str).unwrap(),
+                    e.get("tid").and_then(Value::as_f64).unwrap(),
+                )
+            })
+            .collect();
+        assert_eq!(thread_names, vec![("mesh", 0.0), ("slot 0", 1.0)]);
+        // events are time-sorted: all_reduce (1µs) precedes req 1 (2µs)
+        let bodies: Vec<&Value> =
+            evs.iter().filter(|e| e.get("ph").and_then(Value::as_str) != Some("M")).collect();
+        assert_eq!(bodies[0].get("name").and_then(Value::as_str), Some("all_reduce"));
+        assert_eq!(bodies[0].get("ts").and_then(Value::as_f64), Some(1.0));
+        assert_eq!(bodies[0].get("dur").and_then(Value::as_f64), Some(0.5));
+        assert_eq!(bodies[0].get("ph").and_then(Value::as_str), Some("X"));
+        // span args survive; instant carries scope but no duration
+        assert_eq!(
+            bodies[1].get("args").unwrap().get("tier").and_then(Value::as_str),
+            Some("lp")
+        );
+        assert_eq!(bodies[2].get("ph").and_then(Value::as_str), Some("i"));
+        assert_eq!(bodies[2].get("s").and_then(Value::as_str), Some("t"));
+        assert!(bodies[2].get("dur").is_none());
+    }
+
+    #[test]
+    fn export_is_deterministic() {
+        let a = chrome_trace(&sample_events()).to_string_pretty();
+        let b = chrome_trace(&sample_events()).to_string_pretty();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn empty_trace_is_still_valid() {
+        let doc = chrome_trace(&[]);
+        let re = Value::parse(&doc.to_string_compact()).unwrap();
+        // just the process-name metadata record
+        assert_eq!(re.get("traceEvents").and_then(Value::as_arr).unwrap().len(), 1);
+    }
+}

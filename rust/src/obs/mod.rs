@@ -1,0 +1,39 @@
+//! Observability: deterministic tracing + metrics export.
+//!
+//! Everything in this module runs on the **simulated clock** — the
+//! mesh's modelled time (`MeshMetrics::modelled_total_ns`, fed by the
+//! `parallel/simnet.rs` cost model: roofline compute, α–β collectives,
+//! host-link transfers) — never wall clock. That makes every artifact
+//! deterministic: two identical runs export byte-identical traces and
+//! snapshots, so they can be diffed, archived, and gated in CI exactly
+//! like the modelled throughput figures already are.
+//!
+//! Three layers:
+//!
+//! * [`Tracer`] ([`tracer`]) — records request-lifecycle spans from the
+//!   scheduler (admit → queued → prefill chunks → per-tier decode
+//!   rounds → first token → complete, with request/tier attributes) and
+//!   absorbs mesh-level events (dispatches, collectives, host
+//!   transfers) from the `Mesh::begin_trace` recorder's timed form.
+//! * [`chrome`] — exports those events as Chrome trace-event JSON that
+//!   loads in Perfetto / `chrome://tracing`: one track per serving slot
+//!   and per tier, plus a mesh track.
+//! * [`MetricsSnapshot`] ([`snapshot`]) — a machine-readable snapshot
+//!   of the counters, histograms and summaries that
+//!   `coordinator/metrics.rs` (`ServerMetrics::report`) and
+//!   `MeshMetrics` otherwise render only as text; serialized via
+//!   `util/json.rs` and flattenable to dotted-key metrics for
+//!   `bin/perf_gate.rs`.
+//!
+//! Wiring: `truedepth serve --trace-out t.json --metrics-out m.json`,
+//! the same flags on `examples/serve_batch.rs` and the benches, and
+//! `table3_profile --trace-out` for the paper's sync-vs-compute
+//! timeline. See the README "Observability" section for the Perfetto
+//! workflow.
+
+pub mod chrome;
+pub mod snapshot;
+pub mod tracer;
+
+pub use snapshot::MetricsSnapshot;
+pub use tracer::{TraceEvent, Tracer, Track};

@@ -1,0 +1,248 @@
+//! Machine-readable metrics snapshots.
+//!
+//! [`MetricsSnapshot`] captures the counters, histograms and latency
+//! summaries that `ServerMetrics::report` (`coordinator/metrics.rs`)
+//! and `MeshMetrics` (`parallel/mesh.rs`) otherwise render only as
+//! text, as one JSON document with a schema marker. Only
+//! **deterministic** figures are included — modelled (simulated-clock,
+//! `parallel/simnet.rs`) times and pure counters, never wall clock —
+//! so two identical runs serialize byte-identically and the file can
+//! be diffed or CI-gated like any other modelled metric.
+//!
+//! `bin/perf_gate.rs` consumes these files via [`MetricsSnapshot::
+//! is_snapshot_json`] + [`MetricsSnapshot::flatten`], which turns the
+//! nested document into the flat `source.path.to.metric → f64` map the
+//! baseline comparison already speaks.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::Ordering;
+
+use crate::coordinator::ServerMetrics;
+use crate::error::Result;
+use crate::parallel::mesh::MeshMetrics;
+use crate::util::json::{self, Value};
+use crate::util::stats::Summary;
+
+/// Snapshot of serving + mesh metrics, built section by section.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsSnapshot {
+    source: String,
+    sections: BTreeMap<String, Value>,
+}
+
+impl MetricsSnapshot {
+    /// Schema marker carried by every snapshot document.
+    pub const SCHEMA: &'static str = "truedepth.metrics/v1";
+
+    /// `source` names the producing run (e.g. `serve`, `bench_decode`);
+    /// it prefixes every flattened metric key.
+    pub fn new(source: impl Into<String>) -> MetricsSnapshot {
+        MetricsSnapshot { source: source.into(), sections: BTreeMap::new() }
+    }
+
+    /// Add the serving-layer section: request/token counters, occupancy
+    /// histogram, per-tier decode attribution and the *modelled* latency
+    /// summaries. Wall-clock TTFT/latency are deliberately excluded —
+    /// they would break run-to-run byte identity.
+    pub fn with_server(mut self, m: &ServerMetrics) -> MetricsSnapshot {
+        let load = |a: &std::sync::atomic::AtomicU64| json::num(a.load(Ordering::Relaxed) as f64);
+        let mut sec: Vec<(&str, Value)> = vec![
+            ("requests_submitted", load(&m.requests_submitted)),
+            ("requests_completed", load(&m.requests_completed)),
+            ("requests_rejected", load(&m.requests_rejected)),
+            ("tokens_generated", load(&m.tokens_generated)),
+            ("prefill_tokens", load(&m.prefill_tokens)),
+            ("decode_steps", load(&m.decode_steps)),
+            ("exec_cache_evictions", load(&m.exec_cache_evictions)),
+            ("modelled_decode_ns", load(&m.modelled_decode_ns)),
+            ("modelled_decode_tokens", load(&m.modelled_decode_tokens)),
+            ("modelled_prefill_ns", load(&m.modelled_prefill_ns)),
+            (
+                "occupancy_hist",
+                json::arr(m.occupancy_histogram().iter().map(|&n| json::num(n as f64)).collect()),
+            ),
+        ];
+        if let Some(tps) = m.modelled_decode_tok_per_s() {
+            sec.push(("modelled_decode_tok_per_s", json::num(tps)));
+        }
+        if let Some(s) = m.modelled_ttft_summary() {
+            sec.push(("modelled_ttft_ms", summary_json(&s)));
+        }
+        if let Some(s) = m.modelled_latency_summary() {
+            sec.push(("modelled_latency_ms", summary_json(&s)));
+        }
+        let tiers: BTreeMap<String, Value> = m
+            .tier_stats()
+            .into_iter()
+            .map(|(name, st)| {
+                let mut t = vec![
+                    ("rounds", json::num(st.rounds as f64)),
+                    ("tokens", json::num(st.tokens as f64)),
+                    ("modelled_ns", json::num(st.modelled_ns as f64)),
+                ];
+                if let Some(tps) = st.modelled_tok_per_s() {
+                    t.push(("modelled_tok_per_s", json::num(tps)));
+                }
+                (name, json::obj(t))
+            })
+            .collect();
+        if !tiers.is_empty() {
+            sec.push(("tiers", Value::Obj(tiers)));
+        }
+        self.sections.insert("server".to_string(), json::obj(sec));
+        self
+    }
+
+    /// Add the mesh section: collective/dispatch/host-transfer counters
+    /// plus the modelled clock split (sync / compute / host). The wall
+    /// `sync_ns`/`compute_ns` are excluded for the same determinism
+    /// reason as above.
+    pub fn with_mesh(mut self, m: &MeshMetrics) -> MetricsSnapshot {
+        let h = m.host_transfers();
+        let sec = json::obj(vec![
+            ("sync_ops", json::num(m.sync_ops.load(Ordering::Relaxed) as f64)),
+            ("sync_bytes", json::num(m.sync_bytes() as f64)),
+            ("exec_ops", json::num(m.exec_ops.load(Ordering::Relaxed) as f64)),
+            ("modelled_sync_ns", json::num(m.modelled_sync_ns.load(Ordering::Relaxed) as f64)),
+            (
+                "modelled_compute_ns",
+                json::num(m.modelled_compute_ns.load(Ordering::Relaxed) as f64),
+            ),
+            ("modelled_host_ns", json::num(m.modelled_host_ns.load(Ordering::Relaxed) as f64)),
+            ("modelled_total_ns", json::num(m.modelled_total_ns() as f64)),
+            ("modelled_flops", json::num(m.modelled_flops.load(Ordering::Relaxed) as f64)),
+            ("host_in_ops", json::num(h.in_ops as f64)),
+            ("host_in_bytes", json::num(h.in_bytes as f64)),
+            ("host_out_ops", json::num(h.out_ops as f64)),
+            ("host_out_bytes", json::num(h.out_bytes as f64)),
+        ]);
+        self.sections.insert("mesh".to_string(), sec);
+        self
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut m = BTreeMap::new();
+        m.insert("schema".to_string(), json::s(Self::SCHEMA));
+        m.insert("source".to_string(), json::s(self.source.clone()));
+        for (k, v) in &self.sections {
+            m.insert(k.clone(), v.clone());
+        }
+        Value::Obj(m)
+    }
+
+    pub fn to_string_pretty(&self) -> String {
+        self.to_json().to_string_pretty() + "\n"
+    }
+
+    /// Write the snapshot to `path` (creating parent directories).
+    pub fn write(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_string_pretty())?;
+        Ok(())
+    }
+
+    /// Does a parsed JSON document carry this snapshot schema?
+    pub fn is_snapshot_json(doc: &Value) -> bool {
+        doc.get("schema").and_then(Value::as_str) == Some(Self::SCHEMA)
+    }
+
+    /// Flatten a snapshot document into `source.section.path → value`
+    /// for the perf gate: numeric leaves get dotted keys, nested objects
+    /// recurse, arrays and strings are skipped.
+    pub fn flatten(doc: &Value) -> BTreeMap<String, f64> {
+        let mut out = BTreeMap::new();
+        let src = doc.get("source").and_then(Value::as_str).unwrap_or("snapshot").to_string();
+        if let Some(m) = doc.as_obj() {
+            for (k, v) in m {
+                if k == "schema" || k == "source" {
+                    continue;
+                }
+                walk(&format!("{src}.{k}"), v, &mut out);
+            }
+        }
+        out
+    }
+}
+
+fn walk(prefix: &str, v: &Value, out: &mut BTreeMap<String, f64>) {
+    match v {
+        Value::Num(n) => {
+            out.insert(prefix.to_string(), *n);
+        }
+        Value::Obj(m) => {
+            for (k, v) in m {
+                walk(&format!("{prefix}.{k}"), v, out);
+            }
+        }
+        _ => {}
+    }
+}
+
+fn summary_json(s: &Summary) -> Value {
+    json::obj(vec![
+        ("n", json::num(s.n as f64)),
+        ("mean", json::num(s.mean)),
+        ("std", json::num(s.std)),
+        ("min", json::num(s.min)),
+        ("p50", json::num(s.p50)),
+        ("p90", json::num(s.p90)),
+        ("p99", json::num(s.p99)),
+        ("max", json::num(s.max)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn loaded_metrics() -> ServerMetrics {
+        let m = ServerMetrics::default();
+        m.requests_submitted.store(2, Ordering::Relaxed);
+        m.record_completion(10.0, 50.0, 8, 9.0, 45.0);
+        m.record_completion(20.0, 70.0, 8, 19.0, 65.0);
+        m.record_decode_round(2, 1_000_000);
+        m.record_tier_round("lp", 2, 1_000_000);
+        m
+    }
+
+    #[test]
+    fn snapshot_roundtrips_and_flattens() {
+        let snap = MetricsSnapshot::new("serve").with_server(&loaded_metrics());
+        let doc = Value::parse(&snap.to_string_pretty()).unwrap();
+        assert!(MetricsSnapshot::is_snapshot_json(&doc));
+        assert_eq!(doc.get("source").and_then(Value::as_str), Some("serve"));
+        let flat = MetricsSnapshot::flatten(&doc);
+        assert_eq!(flat.get("serve.server.requests_completed"), Some(&2.0));
+        assert_eq!(flat.get("serve.server.modelled_ttft_ms.p50"), Some(&14.0));
+        assert_eq!(flat.get("serve.server.tiers.lp.modelled_tok_per_s"), Some(&2000.0));
+        // strings/arrays don't leak into the metric map
+        assert!(flat.keys().all(|k| k.starts_with("serve.server.")));
+        assert!(!flat.contains_key("serve.server.occupancy_hist"));
+    }
+
+    #[test]
+    fn snapshot_excludes_wall_clock_figures() {
+        let text = MetricsSnapshot::new("serve").with_server(&loaded_metrics()).to_string_pretty();
+        // wall TTFT/latency were recorded (10/20, 50/70 ms) but must not
+        // appear: only modelled figures keep the file run-stable
+        assert!(!text.contains("\"ttft_ms\""), "{text}");
+        assert!(!text.contains("\"latency_ms\""), "{text}");
+        assert!(text.contains("\"modelled_ttft_ms\""), "{text}");
+    }
+
+    #[test]
+    fn identical_metric_states_serialize_identically() {
+        let a = MetricsSnapshot::new("x").with_server(&loaded_metrics()).to_string_pretty();
+        let b = MetricsSnapshot::new("x").with_server(&loaded_metrics()).to_string_pretty();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn bench_reports_are_not_snapshots() {
+        let report = Value::parse(r#"{"group": "g", "metrics": {"m": 1}}"#).unwrap();
+        assert!(!MetricsSnapshot::is_snapshot_json(&report));
+    }
+}

@@ -1,0 +1,242 @@
+//! Span/event recorder on the simulated clock.
+//!
+//! The scheduler emits request-lifecycle spans directly; mesh-level
+//! events arrive pre-timestamped as [`TimedMeshEvent`]s drained from
+//! `Mesh::take_timed_trace` — one recorder in the mesh serves both the
+//! static verifier and this exporter. All timestamps are modelled-clock
+//! nanoseconds, so recorded traces are deterministic.
+
+use std::path::Path;
+use std::sync::Mutex;
+
+use crate::error::Result;
+use crate::parallel::mesh::{MeshEvent, TimedMeshEvent};
+use crate::util::json::Value;
+
+/// Which timeline an event renders on in the exported trace. The derive
+/// order is the track order in the viewer: scheduler control events,
+/// the mesh, then one track per serving slot and per tier.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Track {
+    /// Scheduler control events (admission rejections, shutdown).
+    Scheduler,
+    /// Mesh dispatches, collectives and host transfers.
+    Mesh,
+    /// Request-lifecycle spans of the request occupying this slot.
+    Slot(usize),
+    /// Bucketed decode rounds of one plan-variant tier.
+    Tier(String),
+}
+
+impl Track {
+    /// Category label rendered in the trace (`cat` field).
+    pub fn category(&self) -> &'static str {
+        match self {
+            Track::Scheduler => "scheduler",
+            Track::Mesh => "mesh",
+            Track::Slot(_) => "slot",
+            Track::Tier(_) => "tier",
+        }
+    }
+
+    /// Human-readable track name (Chrome thread name).
+    pub fn label(&self) -> String {
+        match self {
+            Track::Scheduler => "scheduler".to_string(),
+            Track::Mesh => "mesh".to_string(),
+            Track::Slot(i) => format!("slot {i}"),
+            Track::Tier(t) => format!("tier {t}"),
+        }
+    }
+}
+
+/// One recorded span or instant, in simulated-clock nanoseconds.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEvent {
+    pub name: String,
+    pub track: Track,
+    /// Simulated-clock start of the event, ns.
+    pub at_ns: u64,
+    /// Span duration, ns; `None` marks an instant event.
+    pub dur_ns: Option<u64>,
+    /// Attribute key/value pairs (rendered under Chrome `args`).
+    pub args: Vec<(String, String)>,
+}
+
+/// Thread-safe event sink shared (via `Arc`) between the scheduler and
+/// whoever exports the trace at the end of a run.
+#[derive(Debug, Default)]
+pub struct Tracer {
+    events: Mutex<Vec<TraceEvent>>,
+}
+
+impl Tracer {
+    pub fn new() -> Tracer {
+        Tracer::default()
+    }
+
+    /// Record a span covering `[start_ns, end_ns]` on the simulated clock.
+    pub fn span(
+        &self,
+        track: Track,
+        name: impl Into<String>,
+        start_ns: u64,
+        end_ns: u64,
+        args: &[(&str, String)],
+    ) {
+        self.push(TraceEvent {
+            name: name.into(),
+            track,
+            at_ns: start_ns,
+            dur_ns: Some(end_ns.saturating_sub(start_ns)),
+            args: own(args),
+        });
+    }
+
+    /// Record a point-in-time event.
+    pub fn instant(
+        &self,
+        track: Track,
+        name: impl Into<String>,
+        at_ns: u64,
+        args: &[(&str, String)],
+    ) {
+        self.push(TraceEvent { name: name.into(), track, at_ns, dur_ns: None, args: own(args) });
+    }
+
+    /// Absorb a batch of timed mesh events (from `Mesh::take_timed_trace`)
+    /// onto the mesh track. Zero-duration events render as instants.
+    pub fn record_mesh_events(&self, events: Vec<TimedMeshEvent>) {
+        let mut log = self.events.lock().unwrap();
+        for t in events {
+            let (name, args) = describe_mesh_event(&t.event);
+            log.push(TraceEvent {
+                name,
+                track: Track::Mesh,
+                at_ns: t.at_ns,
+                dur_ns: (t.dur_ns > 0).then_some(t.dur_ns),
+                args,
+            });
+        }
+    }
+
+    fn push(&self, ev: TraceEvent) {
+        self.events.lock().unwrap().push(ev);
+    }
+
+    /// Snapshot of everything recorded so far.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        self.events.lock().unwrap().clone()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.lock().unwrap().is_empty()
+    }
+
+    /// Export as Chrome trace-event JSON (see [`crate::obs::chrome`]).
+    pub fn to_chrome_json(&self) -> Value {
+        super::chrome::chrome_trace(&self.events())
+    }
+
+    /// Write the Chrome trace to `path` (pretty-printed, trailing newline).
+    pub fn write_chrome(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_chrome_json().to_string_pretty() + "\n")?;
+        Ok(())
+    }
+}
+
+fn own(args: &[(&str, String)]) -> Vec<(String, String)> {
+    args.iter().map(|(k, v)| (k.to_string(), v.clone())).collect()
+}
+
+/// Render a mesh event as (span name, attributes).
+fn describe_mesh_event(ev: &MeshEvent) -> (String, Vec<(String, String)>) {
+    match ev {
+        MeshEvent::Exec { key, ranks } => {
+            (format!("exec {key}"), vec![("ranks".to_string(), ranks.to_string())])
+        }
+        MeshEvent::ExecRank { key, rank } => {
+            (format!("exec[r{rank}] {key}"), vec![("rank".to_string(), rank.to_string())])
+        }
+        MeshEvent::Upload { name, ranks } => {
+            (format!("upload {name}"), vec![("ranks".to_string(), ranks.to_string())])
+        }
+        MeshEvent::Broadcast { name } => (format!("broadcast {name}"), Vec::new()),
+        MeshEvent::Collective { kind, bytes, ranks } => (
+            kind.to_string(),
+            vec![
+                ("bytes".to_string(), bytes.to_string()),
+                ("ranks".to_string(), ranks.to_string()),
+            ],
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_spans_instants_and_mesh_events() {
+        let tr = Tracer::new();
+        assert!(tr.is_empty());
+        tr.span(Track::Slot(0), "req 1", 100, 350, &[("tier", "lp".to_string())]);
+        tr.instant(Track::Scheduler, "reject", 400, &[]);
+        tr.record_mesh_events(vec![
+            TimedMeshEvent {
+                at_ns: 120,
+                dur_ns: 80,
+                event: MeshEvent::Collective { kind: "all_reduce", bytes: 4096, ranks: 2 },
+            },
+            TimedMeshEvent {
+                at_ns: 200,
+                dur_ns: 0,
+                event: MeshEvent::Broadcast { name: "h".to_string() },
+            },
+        ]);
+        let evs = tr.events();
+        assert_eq!(tr.len(), 4);
+        assert_eq!(evs[0].dur_ns, Some(250));
+        assert_eq!(evs[0].args, vec![("tier".to_string(), "lp".to_string())]);
+        assert_eq!(evs[1].dur_ns, None, "instants carry no duration");
+        assert_eq!((evs[2].name.as_str(), evs[2].dur_ns), ("all_reduce", Some(80)));
+        assert_eq!(evs[2].track, Track::Mesh);
+        assert_eq!(evs[3].dur_ns, None, "zero-cost mesh events render as instants");
+    }
+
+    #[test]
+    fn span_clamps_inverted_intervals() {
+        let tr = Tracer::new();
+        tr.span(Track::Mesh, "x", 500, 400, &[]);
+        assert_eq!(tr.events()[0].dur_ns, Some(0));
+    }
+
+    #[test]
+    fn track_order_is_scheduler_mesh_slots_tiers() {
+        let mut tracks = vec![
+            Track::Tier("dense".to_string()),
+            Track::Slot(1),
+            Track::Mesh,
+            Track::Scheduler,
+            Track::Slot(0),
+        ];
+        tracks.sort();
+        assert_eq!(
+            tracks,
+            vec![
+                Track::Scheduler,
+                Track::Mesh,
+                Track::Slot(0),
+                Track::Slot(1),
+                Track::Tier("dense".to_string()),
+            ]
+        );
+    }
+}

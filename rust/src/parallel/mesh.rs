@@ -228,7 +228,10 @@ impl MeshMetrics {
 /// `crosscheck_trace` replays a protocol step with recording on and diffs
 /// the result against the *static* [`crate::verify::DispatchTrace`] the
 /// plan predicts, proving the abstract interpretation models the real
-/// dispatch sequence rather than a parallel fiction.
+/// dispatch sequence rather than a parallel fiction. The same recorder
+/// doubles as the mesh half of the observability layer: every event is
+/// stored with simulated-clock stamps ([`TimedMeshEvent`]) which
+/// `crate::obs::Tracer` turns into Chrome-trace spans.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum MeshEvent {
     /// `exec_all`: the same executable dispatched on every rank.
@@ -243,14 +246,31 @@ pub enum MeshEvent {
     Collective { kind: &'static str, bytes: u64, ranks: usize },
 }
 
+/// A [`MeshEvent`] stamped with the simulated clock: `at_ns` is the
+/// mesh's modelled clock ([`MeshMetrics::modelled_total_ns`]) when the
+/// event was dispatched, `dur_ns` the modelled cost the event itself
+/// charges (the α–β term for collectives, the host-link term for
+/// uploads, one kernel launch for dispatches; 0 for events whose cost is
+/// charged elsewhere). One recorder serves both consumers: the static
+/// verifier reads the bare events via [`Mesh::take_trace`], the
+/// observability exporters (`crate::obs`) read the timed form via
+/// [`Mesh::take_timed_trace`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TimedMeshEvent {
+    pub at_ns: u64,
+    pub dur_ns: u64,
+    pub event: MeshEvent,
+}
+
 pub struct Mesh {
     pub workers: Vec<WorkerHandle>,
     /// Device-time cost model (α–β interconnect + roofline + host link).
     pub cost: CostModel,
     pub metrics: MeshMetrics,
-    /// Armed event recorder (None = off, the default). Debug/verification
-    /// hook only — the hot path pays one uncontended lock + `is_some()`.
-    trace: Mutex<Option<Vec<MeshEvent>>>,
+    /// Armed event recorder (None = off, the default). Verification and
+    /// observability hook — the hot path pays one uncontended lock +
+    /// `is_some()` while disarmed.
+    trace: Mutex<Option<Vec<TimedMeshEvent>>>,
 }
 
 impl Mesh {
@@ -277,12 +297,30 @@ impl Mesh {
     /// Drain the recorded events and disarm the recorder. Returns an empty
     /// log if [`Mesh::begin_trace`] was never called.
     pub fn take_trace(&self) -> Vec<MeshEvent> {
+        self.take_timed_trace().into_iter().map(|t| t.event).collect()
+    }
+
+    /// Drain the recorded events with their simulated-clock stamps and
+    /// disarm the recorder (the exporter-facing form of
+    /// [`Mesh::take_trace`]).
+    pub fn take_timed_trace(&self) -> Vec<TimedMeshEvent> {
         self.trace.lock().unwrap().take().unwrap_or_default()
     }
 
     fn record(&self, ev: MeshEvent) {
+        self.record_timed(ev, Duration::ZERO);
+    }
+
+    /// Append `ev` stamped with the current simulated-clock reading plus
+    /// the modelled duration the event is about to charge. The clock is
+    /// read only while the recorder is armed.
+    fn record_timed(&self, ev: MeshEvent, dur: Duration) {
         if let Some(log) = self.trace.lock().unwrap().as_mut() {
-            log.push(ev);
+            log.push(TimedMeshEvent {
+                at_ns: self.metrics.modelled_total_ns(),
+                dur_ns: dur.as_nanos() as u64,
+                event: ev,
+            });
         }
     }
 
@@ -328,7 +366,10 @@ impl Mesh {
             )));
         }
         if let Some((key, ..)) = calls.first() {
-            self.record(MeshEvent::Exec { key: key.clone(), ranks: calls.len() });
+            self.record_timed(
+                MeshEvent::Exec { key: key.clone(), ranks: calls.len() },
+                self.cost.launch_cost(1),
+            );
         }
         let t0 = Instant::now();
         // One modelled kernel launch per dispatch event (the ranks run the
@@ -374,7 +415,10 @@ impl Mesh {
             .workers
             .get(rank)
             .ok_or_else(|| Error::msg(format!("exec_rank: no rank {rank}")))?;
-        self.record(MeshEvent::ExecRank { key: key.to_string(), rank });
+        self.record_timed(
+            MeshEvent::ExecRank { key: key.to_string(), rank },
+            self.cost.launch_cost(1),
+        );
         // charge at metering time — see the invariant note in `exec_all`
         self.metrics.charge_compute_time(self.cost.launch_cost(1));
         let bytes = self.metrics.count_host_in(&args);
@@ -408,10 +452,13 @@ impl Mesh {
     /// buffer on every rank. Counted as host→device transfers — this is
     /// real host traffic in any deployment.
     pub fn upload_all(&self, name: &str, value: HostValue) -> Result<()> {
-        self.record(MeshEvent::Upload { name: name.to_string(), ranks: self.workers.len() });
         let bytes = value.num_bytes() as u64;
-        self.store_all(name, &value)?;
         let total = bytes * self.workers.len() as u64;
+        self.record_timed(
+            MeshEvent::Upload { name: name.to_string(), ranks: self.workers.len() },
+            self.cost.host_transfer_cost(total),
+        );
+        self.store_all(name, &value)?;
         self.metrics
             .host_in_ops
             .fetch_add(self.workers.len() as u64, Ordering::Relaxed);
@@ -437,7 +484,10 @@ impl Mesh {
         let t0 = Instant::now();
         let bytes = parts.first().map(|p| p.num_bytes()).unwrap_or(0);
         let g = parts.len();
-        self.record(MeshEvent::Collective { kind: "all_reduce", bytes: bytes as u64, ranks: g });
+        self.record_timed(
+            MeshEvent::Collective { kind: "all_reduce", bytes: bytes as u64, ranks: g },
+            self.cost.all_reduce_cost(bytes, g),
+        );
         let out = all_reduce_sum(parts)?;
         let modelled = self.cost.net.charge_all_reduce(bytes, g);
         self.metrics.sync_ops.fetch_add(1, Ordering::Relaxed);
@@ -473,7 +523,10 @@ impl Mesh {
         }
         let bytes = parts.first().map(|p| p.num_bytes()).unwrap_or(0);
         let g = parts.len();
-        self.record(MeshEvent::Collective { kind: "reduce_into", bytes: bytes as u64, ranks: g });
+        self.record_timed(
+            MeshEvent::Collective { kind: "reduce_into", bytes: bytes as u64, ranks: g },
+            self.cost.all_reduce_cost(bytes, g),
+        );
         let reduced = all_reduce_sum(parts)?;
         let shape = reduced.shape().to_vec();
         let rdata = reduced.as_f32()?;
@@ -675,6 +728,36 @@ mod tests {
         // draining disarms the recorder
         mesh.broadcast_resident("act", &v).unwrap();
         assert!(mesh.take_trace().is_empty());
+    }
+
+    /// The timed form of the trace: every event carries the simulated
+    /// clock at dispatch plus the modelled cost it charges, the stamps
+    /// are monotone, and the bare [`Mesh::take_trace`] view stays the
+    /// event-for-event projection the verifier consumes.
+    #[test]
+    fn timed_trace_stamps_simulated_clock() {
+        let net = InterconnectConfig { alpha_s: 100e-6, beta_bytes_per_s: 1e10, enabled: true };
+        let mesh = Mesh::new(2, net.clone());
+        mesh.begin_trace();
+        mesh.upload_all("pos", HostValue::i32(vec![4], vec![0; 4])).unwrap();
+        mesh.workers[0].store("p", HostValue::f32(vec![2], vec![1.0, 2.0])).unwrap();
+        mesh.workers[1].store("p", HostValue::f32(vec![2], vec![3.0, 4.0])).unwrap();
+        let mut shadow = vec![0.0f32; 2];
+        mesh.reduce_into("p", &mut shadow, "act").unwrap();
+        let tr = mesh.take_timed_trace();
+        assert_eq!(tr.len(), 2);
+        // upload: stamped at clock 0, priced on the host link (2 ranks × 16 B)
+        let host_ns = mesh.cost.host_transfer_cost(32).as_nanos() as u64;
+        assert_eq!((tr[0].at_ns, tr[0].dur_ns), (0, host_ns));
+        assert!(matches!(tr[0].event, MeshEvent::Upload { .. }));
+        // collective: stamped after the upload's charge, α–β cost as duration
+        let sync_ns = SimNet::new(net).all_reduce_cost(8, 2).as_nanos() as u64;
+        assert_eq!((tr[1].at_ns, tr[1].dur_ns), (host_ns, sync_ns));
+        assert!(matches!(tr[1].event, MeshEvent::Collective { kind: "reduce_into", .. }));
+        // the same run through take_trace is the projection of the timed log
+        mesh.begin_trace();
+        mesh.upload_all("pos", HostValue::i32(vec![4], vec![0; 4])).unwrap();
+        assert_eq!(mesh.take_trace(), vec![MeshEvent::Upload { name: "pos".into(), ranks: 2 }]);
     }
 
     #[test]

@@ -4,6 +4,8 @@
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
+use crate::util::json::{self, Value};
+
 #[derive(Default, Debug)]
 pub struct PhaseTimer {
     acc: BTreeMap<String, (Duration, u64)>,
@@ -51,15 +53,19 @@ impl PhaseTimer {
         self.total(name).as_secs_f64() * 1e3
     }
 
-    /// Table rows: (phase, total ms, calls, ms/call).
+    /// Table rows: (phase, total ms, calls, ms/call), hottest phase first
+    /// (total time descending; name breaks ties so the order is total).
     pub fn rows(&self) -> Vec<(String, f64, u64, f64)> {
-        self.acc
+        let mut rows: Vec<_> = self
+            .acc
             .iter()
             .map(|(k, (d, c))| {
                 let ms = d.as_secs_f64() * 1e3;
                 (k.clone(), ms, *c, if *c > 0 { ms / *c as f64 } else { 0.0 })
             })
-            .collect()
+            .collect();
+        rows.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then_with(|| a.0.cmp(&b.0)));
+        rows
     }
 
     pub fn report(&self) -> String {
@@ -68,6 +74,24 @@ impl PhaseTimer {
             out += &format!("{name:<24} {ms:>12.2} {calls:>8} {per:>12.3}\n");
         }
         out
+    }
+
+    /// JSON form of [`PhaseTimer::rows`] (same hottest-first order), for
+    /// machine-readable artifacts like `table3_profile`'s phase breakdown.
+    pub fn to_json(&self) -> Value {
+        let phases = self
+            .rows()
+            .into_iter()
+            .map(|(name, ms, calls, per)| {
+                json::obj(vec![
+                    ("phase", json::s(name)),
+                    ("total_ms", json::num(ms)),
+                    ("calls", json::num(calls as f64)),
+                    ("ms_per_call", json::num(per)),
+                ])
+            })
+            .collect();
+        json::obj(vec![("phases", json::arr(phases))])
     }
 
     pub fn reset(&mut self) {
@@ -107,6 +131,24 @@ mod tests {
         }
         assert_eq!(t.count("span"), 1);
         assert!(t.total("span") >= Duration::from_millis(1));
+    }
+
+    /// Rows (and so the report and JSON) list the hottest phase first —
+    /// reading a profile should not require scanning an alphabetical table.
+    #[test]
+    fn rows_sort_by_total_time_descending() {
+        let mut t = PhaseTimer::new();
+        t.add("alpha", Duration::from_millis(1));
+        t.add("zeta", Duration::from_millis(30));
+        t.add("mid", Duration::from_millis(10));
+        let names: Vec<&str> = t.rows().iter().map(|r| r.0.as_str()).collect();
+        assert_eq!(names, ["zeta", "mid", "alpha"]);
+        let j = t.to_json();
+        let phases = j.get("phases").and_then(Value::as_arr).unwrap();
+        assert_eq!(phases.len(), 3);
+        assert_eq!(phases[0].get("phase").and_then(Value::as_str), Some("zeta"));
+        assert_eq!(phases[2].get("calls").and_then(Value::as_f64), Some(1.0));
+        assert!(phases[0].get("total_ms").and_then(Value::as_f64).unwrap() >= 30.0);
     }
 
     #[test]

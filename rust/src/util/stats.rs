@@ -1,7 +1,9 @@
 //! Run statistics for benches and experiment harnesses.
 
+use crate::util::rng::SplitMix64;
+
 /// Summary statistics over a sample of measurements (e.g. latencies in ns).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Summary {
     pub n: usize,
     pub mean: f64,
@@ -31,6 +33,80 @@ impl Summary {
             p99: pct(&v, 0.99),
             max: v[n - 1],
         }
+    }
+}
+
+/// Bounded latency reservoir: Algorithm R reservoir sampling over a
+/// deterministic [`SplitMix64`] stream, so memory stays fixed under
+/// sustained load while the kept sample remains uniform over everything
+/// pushed — and two identical runs keep bit-identical samples (the
+/// property `ServerMetrics` and the metrics-snapshot export rely on).
+/// Count, min and max are tracked exactly; percentiles come from the
+/// sample.
+#[derive(Clone, Debug)]
+pub struct Reservoir {
+    cap: usize,
+    count: u64,
+    min: f64,
+    max: f64,
+    samples: Vec<f64>,
+    rng: SplitMix64,
+}
+
+impl Reservoir {
+    pub fn new(cap: usize, seed: u64) -> Reservoir {
+        assert!(cap > 0, "reservoir capacity must be positive");
+        Reservoir {
+            cap,
+            count: 0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            samples: Vec::new(),
+            rng: SplitMix64::new(seed),
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.count += 1;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        if self.samples.len() < self.cap {
+            self.samples.push(x);
+        } else {
+            // Algorithm R: the i-th value replaces a kept sample with
+            // probability cap/i, keeping the sample uniform.
+            let j = self.rng.below(self.count);
+            if (j as usize) < self.cap {
+                self.samples[j as usize] = x;
+            }
+        }
+    }
+
+    /// Values pushed so far (not the kept sample size).
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Kept sample size (≤ capacity); exposed so tests can pin the bound.
+    pub fn sample_len(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// Summary over the kept sample, with the exactly-tracked `n`, `min`
+    /// and `max` patched over the sampled figures. `None` while empty.
+    pub fn summary(&self) -> Option<Summary> {
+        if self.samples.is_empty() {
+            return None;
+        }
+        let mut s = Summary::from(&self.samples);
+        s.n = self.count as usize;
+        s.min = self.min;
+        s.max = self.max;
+        Some(s)
     }
 }
 
@@ -93,5 +169,76 @@ mod tests {
     #[should_panic]
     fn empty_sample_panics() {
         Summary::from(&[]);
+    }
+
+    /// Edge cases the metrics-snapshot export relies on: a single sample
+    /// collapses every figure onto that value with zero spread.
+    #[test]
+    fn summary_single_sample() {
+        let s = Summary::from(&[42.5]);
+        assert_eq!(s.n, 1);
+        assert_eq!((s.mean, s.std), (42.5, 0.0));
+        assert_eq!((s.min, s.p50, s.p90, s.p99, s.max), (42.5, 42.5, 42.5, 42.5, 42.5));
+    }
+
+    /// All-equal samples: interpolation between equal neighbors must not
+    /// introduce float noise anywhere in the summary.
+    #[test]
+    fn summary_all_equal_samples() {
+        let s = Summary::from(&[7.0; 9]);
+        assert_eq!(s.n, 9);
+        assert_eq!((s.mean, s.std), (7.0, 0.0));
+        assert_eq!((s.min, s.p50, s.p90, s.p99, s.max), (7.0, 7.0, 7.0, 7.0, 7.0));
+    }
+
+    /// p99 on small N: with linear interpolation over n-1 intervals, p99
+    /// of a 3-sample set sits 98% of the way into the last interval — it
+    /// must NOT snap to the max (nearest-rank would).
+    #[test]
+    fn summary_p99_small_n_interpolates() {
+        let s = Summary::from(&[1.0, 2.0, 3.0]);
+        // pos = 0.99 * 2 = 1.98 → 2.0 + 0.98 * (3.0 - 2.0)
+        assert!((s.p99 - 2.98).abs() < 1e-12, "{}", s.p99);
+        assert_eq!(s.max, 3.0);
+        // two samples: p99 is 99% of the way from lo to hi
+        let s2 = Summary::from(&[0.0, 10.0]);
+        assert!((s2.p99 - 9.9).abs() < 1e-12, "{}", s2.p99);
+    }
+
+    /// The bounded reservoir: memory stays at the cap, count/min/max stay
+    /// exact, the sampled percentiles stay near the true distribution, and
+    /// two identical runs produce bit-identical summaries.
+    #[test]
+    fn reservoir_bounds_memory_and_stays_deterministic() {
+        let run = || {
+            let mut r = Reservoir::new(256, 0x0b5e_c0de);
+            assert!(r.is_empty() && r.summary().is_none());
+            for i in 0..10_000u64 {
+                r.push(i as f64);
+            }
+            r
+        };
+        let r = run();
+        assert_eq!(r.sample_len(), 256, "sample must be capped");
+        assert_eq!(r.count(), 10_000);
+        let s = r.summary().unwrap();
+        assert_eq!(s.n, 10_000);
+        assert_eq!((s.min, s.max), (0.0, 9999.0), "min/max are tracked exactly");
+        // uniform input: the sampled median stays near the true median
+        assert!((s.p50 - 5000.0).abs() < 1500.0, "sampled p50 drifted: {}", s.p50);
+        assert_eq!(run().summary().unwrap(), s, "summaries must be stable across runs");
+    }
+
+    /// Below the cap the reservoir keeps everything, so summaries are
+    /// exact — the common small-run case must not be perturbed by sampling.
+    #[test]
+    fn reservoir_below_cap_is_exact() {
+        let mut r = Reservoir::new(1024, 1);
+        for x in [5.0, 1.0, 3.0] {
+            r.push(x);
+        }
+        assert_eq!(r.sample_len(), 3);
+        let s = r.summary().unwrap();
+        assert_eq!(s, Summary::from(&[5.0, 1.0, 3.0]));
     }
 }

@@ -1,0 +1,107 @@
+//! End-to-end observability: a traced `Server` run must export a valid
+//! Chrome trace-event JSON (per-request spans with tier attributes plus
+//! mesh collective events on the simulated clock) and a machine-readable
+//! metrics snapshot — and both must be byte-identical across identical
+//! runs, since every timestamp comes from the deterministic modelled
+//! clock, never the wall. No-ops gracefully when `make artifacts` hasn't
+//! run (same convention as `tests/integration.rs`).
+
+use std::sync::Arc;
+
+use truedepth::config::ServerConfig;
+use truedepth::coordinator::{RequestOptions, Server};
+use truedepth::gen::Sampler;
+use truedepth::harness::default_net;
+use truedepth::model::{ServingModel, Weights};
+use truedepth::obs::{MetricsSnapshot, Tracer};
+use truedepth::runtime::Manifest;
+use truedepth::util::json::Value;
+
+/// One traced serving run over the full plan-variant registry: three
+/// requests cycling through the tiers, submitted blocking so the request
+/// order (and with it the trace) is fully deterministic. Returns the
+/// pretty-printed Chrome trace and metrics snapshot.
+fn run_once() -> Option<(String, String)> {
+    let manifest = Manifest::load_default().ok()?;
+    let cfg = manifest.model("td-small").ok()?.config.clone();
+    let weights = Weights::random(&cfg, 2026);
+    let serving =
+        ServingModel::from_manifest(&manifest, "td-small", &weights, default_net()).ok()?;
+    let tiers: Vec<String> =
+        serving.variant_ids().iter().map(|v| v.as_str().to_string()).collect();
+    let tracer = Arc::new(Tracer::new());
+    let server = Server::start_traced(serving, &ServerConfig::default(), tracer.clone());
+    for (i, prompt) in ["the red fox", "9 - 4 = ", "the calm ship"].iter().enumerate() {
+        let opts = RequestOptions {
+            max_new_tokens: 3,
+            sampler: Sampler::Greedy,
+            tier: Some(tiers[i % tiers.len()].clone()),
+        };
+        let resp = server.submit_blocking(prompt, opts).unwrap();
+        assert!(resp.error.is_none(), "request failed: {:?}", resp.error);
+    }
+    let metrics = server.metrics.clone();
+    // shutdown joins the scheduler, which flushes the timed mesh events
+    // into the tracer — the trace is only complete after this returns
+    server.shutdown();
+    let trace = tracer.to_chrome_json().to_string_pretty();
+    let snap = MetricsSnapshot::new("obs_test").with_server(&metrics).to_string_pretty();
+    Some((trace, snap))
+}
+
+#[test]
+fn traced_server_run_exports_spans_and_collectives() {
+    let Some((trace, snap)) = run_once() else { return };
+
+    let doc = Value::parse(&trace).expect("trace must be valid JSON");
+    assert_eq!(doc.get("displayTimeUnit").and_then(Value::as_str), Some("ms"));
+    let events = doc.get("traceEvents").and_then(Value::as_arr).expect("traceEvents array");
+    assert!(!events.is_empty());
+
+    let mut req_spans = 0usize;
+    let mut tiered = 0usize;
+    let mut mesh_collectives = 0usize;
+    let mut first_tokens = 0usize;
+    for e in events {
+        let name = e.get("name").and_then(Value::as_str).unwrap_or("");
+        let cat = e.get("cat").and_then(Value::as_str).unwrap_or("");
+        let has_dur = e.get("dur").is_some();
+        if name.starts_with("req ") && has_dur {
+            req_spans += 1;
+            let tier =
+                e.get("args").and_then(|a| a.get("tier")).and_then(Value::as_str);
+            assert!(tier.is_some(), "request span missing tier attribute");
+        }
+        if e.get("args").and_then(|a| a.get("tier")).is_some() {
+            tiered += 1;
+        }
+        if cat == "mesh" && (name == "all_reduce" || name == "reduce_into") {
+            mesh_collectives += 1;
+        }
+        if name == "first_token" {
+            first_tokens += 1;
+        }
+    }
+    assert_eq!(req_spans, 3, "one lifecycle span per request");
+    assert!(tiered >= 3, "tier attributes must survive export");
+    assert!(mesh_collectives > 0, "mesh collective events missing from the trace");
+    assert_eq!(first_tokens, 3, "one first_token instant per request");
+
+    let sdoc = Value::parse(&snap).expect("snapshot must be valid JSON");
+    assert!(MetricsSnapshot::is_snapshot_json(&sdoc));
+    let flat = MetricsSnapshot::flatten(&sdoc);
+    assert_eq!(flat.get("obs_test.server.requests_completed"), Some(&3.0));
+    assert!(flat.keys().any(|k| k.starts_with("obs_test.server.tiers.")));
+}
+
+/// Satellite of the determinism story: two identical traced runs must
+/// produce byte-identical artifacts end-to-end through the real Server —
+/// threads, channels and all — because nothing in either export reads the
+/// wall clock.
+#[test]
+fn identical_server_runs_export_identical_artifacts() {
+    let Some((trace1, snap1)) = run_once() else { return };
+    let (trace2, snap2) = run_once().unwrap();
+    assert_eq!(trace1, trace2, "trace export must be byte-identical across runs");
+    assert_eq!(snap1, snap2, "metrics snapshot must be byte-identical across runs");
+}
