@@ -15,6 +15,11 @@
 //!         --trace-out trace.json --metrics-out metrics.json
 //!         # also export a Chrome/Perfetto trace + metrics snapshot of the
 //!         # run on the simulated clock (README "Observability")
+//!     cargo run --release --example serve_batch -- --paged --page-pool 96
+//!         # paged KV cache under memory pressure: every request shares one
+//!         # system prompt, so the prefix index prefills it once and the
+//!         # report's "paged kv" line shows the hits; --page-pool caps the
+//!         # logical pools (over-pool requests are rejected at admission)
 
 use std::sync::Arc;
 
@@ -29,7 +34,7 @@ use truedepth::obs::{MetricsSnapshot, Tracer};
 use truedepth::text::corpus::{self, DATA_SEED};
 
 fn main() -> truedepth::Result<()> {
-    let args = Args::from_env(&["tiers"]);
+    let args = Args::from_env(&["tiers", "paged"]);
     let model_name = args.get_or("model", "td-small");
     let n_requests = args.get_usize("requests", 24);
     let max_new = args.get_usize("max-new", 16);
@@ -38,7 +43,7 @@ fn main() -> truedepth::Result<()> {
     let ctx = ScoringCtx::load(model_name)?;
     let weights = ctx.weights()?;
     let n = ctx.entry().config.n_layers;
-    let serving = if multi {
+    let mut serving = if multi {
         // the plan-variant registry: every manifest tier from one weight set
         ServingModel::from_manifest(&ctx.manifest, model_name, &weights, default_net())?
     } else {
@@ -51,6 +56,18 @@ fn main() -> truedepth::Result<()> {
         };
         ServingModel::new(&ctx.manifest, model_name, &weights, &plan, default_net())?
     };
+    // --paged: serve from the paged KV cache; --page-pool shrinks the
+    // logical page pools to model memory pressure (see README "Paged KV
+    // cache" — over-pool requests are rejected at admission, cold shared
+    // blocks are evicted LRU under load).
+    let paged = args.flag("paged");
+    if paged {
+        serving.enable_paging()?;
+        let pool = args.get_usize("page-pool", 0);
+        if pool > 0 {
+            serving.set_page_capacity(pool);
+        }
+    }
     let tiers: Vec<String> =
         serving.variant_ids().iter().map(|v| v.as_str().to_string()).collect();
     let summary: Vec<String> = serving
@@ -80,10 +97,19 @@ fn main() -> truedepth::Result<()> {
     // fire all requests up-front (continuous batching shares decode steps;
     // under --tiers the requests cycle through the registry's tiers)
     let t0 = std::time::Instant::now();
+    // under --paged every request shares one system prompt: the prefix
+    // index prefills those leading blocks once, later requests attach them
+    const SYSTEM_PROMPT: &str = "system: you are a terse assistant. answer only from the \
+         provided context, cite sources, never speculate. ";
     let rxs: Vec<_> = (0..n_requests)
         .map(|i| {
             let doc = corpus::eval_doc(DATA_SEED, 5000 + i as u64);
-            let prompt = doc[..doc.len().min(64)].to_string();
+            let snippet = &doc[..doc.len().min(if paged { 16 } else { 64 })];
+            let prompt = if paged {
+                format!("{SYSTEM_PROMPT}{snippet}")
+            } else {
+                snippet.to_string()
+            };
             let backend = router.pick(model_name)?;
             let tier = multi.then(|| tiers[i % tiers.len()].clone());
             backend.submit(

@@ -32,13 +32,21 @@ Artifact inventory (per model, T ∈ SEQ_BUCKETS, S slots, C ctx, w ∈ {D/2, D}
     scatter), {tp|lp}ffn_decode_b{B}, embed_decode_b{B}, logits_decode_b{B}
     (B = S duplicates the fixed-shape non-attention entrypoints; accepted
     so every bucket carries the same uniform six-key set)
+  paged-KV variants (opt-in at runtime; K/V in shared per-width page pools
+  [P, page, w] indexed through i32 page tables instead of dense [S,C,w]
+  slot caches — see rust model::kvcache for the allocator half):
+    {tp|lp}attn_chunk_paged (pt[nb] replaces the slot scalar),
+    {tp|lp}attn_decode_paged_b{B} (pt[B,nb] replaces lanes[B])
   cache plumbing: cache_insert_{half|full}_t{T}, embed_decode, logits_decode
   ablation: lpfused_attn_t128 (single-device fused dual-layer attention)
 
 The manifest carries a per-model "batch_buckets" list naming the compiled
-B values (the rust BucketSet keys the per-bucket executables off it) and a
-top-level "prefill_chunk" giving the chunk token count K; manifests
-predating either section fall back to the fixed-shape paths.
+B values (the rust BucketSet keys the per-bucket executables off it), a
+top-level "prefill_chunk" giving the chunk token count K, and a per-model
+"kv_pages" section (modelcfg.kv_pages: page_tokens, blocks_per_slot and
+the per-width pool page counts the paged executables were lowered
+against); manifests predating any section fall back to the dense
+fixed-shape paths.
 
 Plan-variant registry: the per-model "variants" section names the serving
 tiers one weight set supports (`dense`, `lp`, `lp_aggr` — see
@@ -69,6 +77,7 @@ from .modelcfg import (
     SEQ_BUCKETS,
     ModelConfig,
     batch_buckets,
+    kv_pages,
     plan_variants,
 )
 
@@ -187,6 +196,36 @@ def artifact_specs(cfg: ModelConfig, impl: str) -> dict[str, tuple]:
             ["x", "lnf", "wout"],
         )
 
+    # Paged-KV attention variants: K/V in one shared page pool per cache
+    # width ([P, page, w], resident per rank) instead of dense [S, C, w]
+    # slot caches; the i32 page-table operand replaces the dense paths'
+    # slot/lanes indexing. Pool page counts come from modelcfg.kv_pages
+    # (dense-equivalent worst case + the reserved scratch page 0) and are
+    # recorded in the manifest's kv_pages section, which the rust runtime
+    # validates against these lowered shapes.
+    kvp = kv_pages(cfg)
+    page, nb = kvp["page_tokens"], kvp["blocks_per_slot"]
+    for mode, w, pp in (("tp", dh, kvp["pool_pages_half"]),
+                        ("lp", d, kvp["pool_pages_full"])):
+        arts[f"{mode}attn_chunk_paged"] = (
+            M.make_shard_attn_chunk_paged(cfg, impl, PREFILL_CHUNK),
+            [spec([PREFILL_CHUNK, d]), spec([d]), spec([d, w]), spec([d, w]),
+             spec([d, w]), spec([w, d]), spec([pp, page, w]),
+             spec([pp, page, w]), spec([nb], I32), spec([], I32),
+             spec([], I32)],
+            ["h", "ln1", "wq", "wk", "wv", "wo", "kpool", "vpool",
+             "pt", "off", "valid"],
+        )
+        for b in batch_buckets(s):
+            arts[f"{mode}attn_decode_paged_b{b}"] = (
+                M.make_shard_attn_decode_paged_bucket(cfg, impl, b, page),
+                [spec([b, d]), spec([d]), spec([d, w]), spec([d, w]),
+                 spec([d, w]), spec([w, d]), spec([pp, page, w]),
+                 spec([pp, page, w]), spec([b], I32), spec([b, nb], I32)],
+                ["x", "ln1", "wq", "wk", "wv", "wo", "kpool", "vpool",
+                 "pos", "pt"],
+            )
+
     # Chunked streaming prefill: one fixed-[K] executable per stage kind,
     # consuming K tokens at offset `off` against the live [S, C, w] caches.
     # Attention inserts this chunk's K/V rows itself (masked by `valid` so
@@ -277,6 +316,7 @@ def build(out_dir: Path, impl: str = "pallas", force: bool = False,
         entry = {
             "config": cfg.to_dict(),
             "batch_buckets": list(batch_buckets(cfg.slots)),
+            "kv_pages": kv_pages(cfg),
             "variants": {
                 vname: {"stages": stages}
                 for vname, stages in plan_variants(cfg).items()

@@ -305,6 +305,62 @@ def make_shard_attn_chunk(cfg: ModelConfig, impl="pallas", chunk=32):
     return attn
 
 
+def make_shard_attn_chunk_paged(cfg: ModelConfig, impl="pallas", chunk=32):
+    """Paged-KV chunked-prefill attention shard: same math as
+    `make_shard_attn_chunk`, but K/V live in a shared page pool `[P, page, w]`
+    and the sequence's rows are reached through an i32 page table `pt[nb]`
+    (block j of the context -> pool page `pt[j]`) instead of a dense slot
+    offset. `page == chunk`, so each chunk step fills exactly one page.
+
+    Bit-exactness contract with the dense chunk path: the slot view is
+    materialized by gathering `pool[pt]` into the same `[C, w]` stripe the
+    dense kernel slices, the identical insert/attend math runs on it, and
+    the stripe is scattered back page by page. Unmapped blocks point at the
+    reserved scratch page 0: those columns sit strictly above the causal
+    frontier (blocks are mapped in cursor order), so the softmax masks them
+    to exact zeros — whatever finite garbage scratch holds. Untouched
+    blocks scatter back the bits they gathered, so shared (copy-on-write)
+    pages are rewritten bit-identically — benign for prefix sharing.
+    """
+    C, hd = cfg.ctx, cfg.head_dim
+    K = chunk
+    nb = C // K
+
+    def attn(h, ln, wq, wk, wv, wo, kpool, vpool, pt, off, valid):
+        """h: [K, D]; pools: [P, K, w]; pt: i32 [nb]; off/valid: scalar i32
+        -> (partial [K, D], kpool', vpool')."""
+        w = wq.shape[1]
+        nh = w // hd
+        xn = _norm(h, ln, impl)
+        q = (xn @ wq).reshape(K, nh, hd)
+        k = (xn @ wk).reshape(K, nh, hd)
+        v = (xn @ wv).reshape(K, nh, hd)
+        posv = jnp.arange(K, dtype=jnp.int32) + off
+        cos, sin = ref.rope_angles(posv, hd, cfg.rope_theta)
+        qr = ref.apply_rope(q, cos[:, None, :], sin[:, None, :])
+        kr = ref.apply_rope(k, cos[:, None, :], sin[:, None, :])
+        kslot = kpool[pt].reshape(C, w)          # gather the slot view
+        vslot = vpool[pt].reshape(C, w)
+        rows = jnp.arange(K, dtype=jnp.int32)[:, None]
+        ins_k = jnp.where(rows < valid, kr.reshape(K, w),
+                          jax.lax.dynamic_slice(kslot, (off, 0), (K, w)))
+        ins_v = jnp.where(rows < valid, v.reshape(K, w),
+                          jax.lax.dynamic_slice(vslot, (off, 0), (K, w)))
+        kslot = jax.lax.dynamic_update_slice(kslot, ins_k, (off, 0))
+        vslot = jax.lax.dynamic_update_slice(vslot, ins_v, (off, 0))
+        if impl == "pallas":
+            att = pl_chunk(qr, kslot.reshape(C, nh, hd),
+                           vslot.reshape(C, nh, hd), off)
+        else:
+            att = ref.chunk_attention(qr, kslot.reshape(C, nh, hd),
+                                      vslot.reshape(C, nh, hd), off)
+        part = att.reshape(K, w) @ wo
+        kp2 = kpool.at[pt].set(kslot.reshape(nb, K, w))
+        vp2 = vpool.at[pt].set(vslot.reshape(nb, K, w))
+        return part, kp2, vp2
+    return attn
+
+
 def make_shard_ffn(cfg: ModelConfig, impl="pallas"):
     def ffn(h, ln, wg, wu, wd):
         """TP/LP FFN shard partial: h [T,D], wg/wu [D,fw], wd [fw,D]."""
@@ -391,6 +447,43 @@ def make_shard_attn_decode_bucket(cfg: ModelConfig, impl="pallas", b=1):
             kc = jax.lax.dynamic_update_slice(kc, kc2[None], (lane, 0, 0))
             vc = jax.lax.dynamic_update_slice(vc, vc2[None], (lane, 0, 0))
         return (jnp.stack(parts), kc, vc)
+    return attn
+
+
+def make_shard_attn_decode_paged_bucket(cfg: ModelConfig, impl="pallas", b=1,
+                                        page=32):
+    """Paged-KV batch-bucketed decode attention: lane i's cache row is
+    assembled by gathering its page table `pt[i]` out of the shared pool,
+    stepped with the *same* per-lane kernel as the dense bucketed path
+    (`_decode_step_one` — the bit-exactness contract), and scattered back
+    page by page.
+
+    Pages the step did not touch scatter back the bits they gathered, so a
+    prefix page shared by several lanes (copy-on-write forks) is rewritten
+    bit-identically by each — the sequential loop makes that an idempotent
+    rewrite, the same argument that makes padded duplicate lanes benign in
+    the dense bucketed kernel. The freshly written row `pos` always lands in
+    a private page (the runtime only shares fully-frozen prefix blocks).
+    """
+    C, hd = cfg.ctx, cfg.head_dim
+    nb = C // page
+    step_one = _decode_step_one(cfg, impl)
+
+    def attn(x, ln, wq, wk, wv, wo, kpool, vpool, pos, pt):
+        """x: [B,D]; pools: [P, page, w]; pos: i32 [B]; pt: i32 [B, nb]."""
+        w = wq.shape[1]
+        parts = []
+        kp, vp = kpool, vpool
+        for i in range(b):          # static unroll; B is small
+            t = pt[i]
+            kc = kp[t].reshape(C, w)
+            vc = vp[t].reshape(C, w)
+            part, kc2, vc2 = step_one(x[i], ln, wq, wk, wv, wo, kc, vc,
+                                      pos[i])
+            parts.append(part)
+            kp = kp.at[t].set(kc2.reshape(nb, page, w))
+            vp = vp.at[t].set(vc2.reshape(nb, page, w))
+        return (jnp.stack(parts), kp, vp)
     return attn
 
 

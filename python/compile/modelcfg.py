@@ -59,6 +59,12 @@ SEQ_BUCKETS = (32, 128, 256)
 # chunk's cache window [off, off+chunk) must stay in bounds).
 PREFILL_CHUNK = 32
 
+# Paged KV cache: page granularity in tokens (the vLLM block size). Equal to
+# PREFILL_CHUNK so one chunk step fills exactly one page, and the chunk
+# cursor's `off` scalar doubles as the page boundary. Must divide
+# PREFILL_CHUNK and every model ctx.
+PAGE_TOKENS = PREFILL_CHUNK
+
 
 def _pair_stages(n: int, s: int, e: int) -> list[list[int]]:
     """Stage list of contiguous 2-parallel LP over the window [s, e) —
@@ -115,6 +121,42 @@ def batch_buckets(slots: int) -> tuple[int, ...]:
         b *= 2
     ladder.append(slots)
     return tuple(ladder)
+
+
+def kv_pages(cfg: ModelConfig) -> dict:
+    """Paged-KV pool geometry for the manifest's per-model ``kv_pages``
+    section (parsed by rust ``runtime::artifacts``).
+
+    KV lives in two per-rank page pools — one per cache width — shared by
+    every plan variant, instead of one dense ``[S, C, w]`` cache per stage
+    per tier. A page holds PAGE_TOKENS K (or V) rows of one stage of one
+    sequence; per-slot page tables (the ``pt`` i32 operand of the paged
+    executables) map block index -> page id.
+
+    Pool sizing is the dense-equivalent worst case: every stage of every
+    variant can hold every slot at full context simultaneously (the dense
+    layout's capacity, so paging alone never rejects what dense admitted),
+    plus page 0 — reserved scratch that unmapped page-table entries point
+    at. Anything tighter is a runtime *policy* (`set_page_capacity`), not a
+    compiled shape.
+    """
+    page = PAGE_TOKENS
+    assert cfg.ctx % page == 0, f"ctx {cfg.ctx} not a multiple of {page}"
+    assert PREFILL_CHUNK % page == 0
+    blocks = cfg.ctx // page
+    half = full = 0
+    for stages in plan_variants(cfg).values():
+        for st in stages:
+            if len(st) == 1:
+                half += 1       # TP-sharded layer: w = D/2 per rank
+            else:
+                full += 1       # LP pair: each rank holds a full-width cache
+    return {
+        "page_tokens": page,
+        "blocks_per_slot": blocks,
+        "pool_pages_half": half * cfg.slots * blocks + 1,
+        "pool_pages_full": full * cfg.slots * blocks + 1,
+    }
 
 
 def n_params(cfg: ModelConfig) -> int:

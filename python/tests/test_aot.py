@@ -43,6 +43,9 @@ def test_inventory_complete(specs):
     for mode in ("tp", "lp"):
         assert f"{mode}attn_chunk" in specs
         assert f"{mode}ffn_chunk" in specs
+        assert f"{mode}attn_chunk_paged" in specs
+        for b in batch_buckets(SMALL.slots):
+            assert f"{mode}attn_decode_paged_b{b}" in specs
     assert "embed_chunk" in specs and "logits_chunk" in specs
 
 
@@ -82,8 +85,39 @@ def test_chunk_attn_signature(specs):
     assert SMALL.ctx % PREFILL_CHUNK == 0
 
 
+def test_paged_attn_signatures(specs):
+    """The paged variants swap the dense slot/lanes indexing for i32 page
+    tables against the shared per-width pools — the contract rust
+    model::kvcache's allocator and the kv_pages manifest section bind
+    against."""
+    from compile.modelcfg import kv_pages
+    kvp = kv_pages(SMALL)
+    page, nb = kvp["page_tokens"], kvp["blocks_per_slot"]
+    assert page == PREFILL_CHUNK and nb * page == SMALL.ctx
+    _, arg_specs, arg_names = specs["tpattn_chunk_paged"]
+    assert arg_names == ["h", "ln1", "wq", "wk", "wv", "wo", "kpool",
+                         "vpool", "pt", "off", "valid"]
+    assert arg_specs[6].shape == (kvp["pool_pages_half"], page,
+                                  SMALL.d_model // 2)
+    assert arg_specs[8].shape == (nb,) and arg_specs[8].dtype == aot.I32
+    _, lp_specs, _ = specs["lpattn_chunk_paged"]
+    assert lp_specs[6].shape == (kvp["pool_pages_full"], page, SMALL.d_model)
+    b = batch_buckets(SMALL.slots)[-1]
+    _, d_specs, d_names = specs[f"tpattn_decode_paged_b{b}"]
+    assert d_names == ["x", "ln1", "wq", "wk", "wv", "wo", "kpool", "vpool",
+                       "pos", "pt"]
+    assert d_specs[9].shape == (b, nb) and d_specs[9].dtype == aot.I32
+    # pools size a dense-equivalent worst case plus the scratch page
+    half = kvp["pool_pages_half"]
+    full = kvp["pool_pages_full"]
+    assert (half - 1) % (SMALL.slots * nb) == 0
+    assert (full - 1) % (SMALL.slots * nb) == 0
+
+
 @pytest.mark.parametrize("name", ["attn_t32", "tpattn_decode",
-                                  "cache_insert_half_t32", "tpattn_chunk"])
+                                  "cache_insert_half_t32", "tpattn_chunk",
+                                  "tpattn_chunk_paged",
+                                  "lpattn_decode_paged_b1"])
 def test_lowering_produces_hlo_text(specs, name):
     fn, arg_specs, arg_names = specs[name]
     text = aot.to_hlo_text(fn, arg_specs)

@@ -1,0 +1,269 @@
+"""Paged KV cache: the bit-exactness contract between the paged attention
+executables and the dense-cache oracles.
+
+The paged makers (`model.make_shard_attn_chunk_paged`,
+`make_shard_attn_decode_paged_bucket`) materialize a sequence's `[C, w]`
+cache stripe by gathering its page table out of the shared pool, run the
+*same* insert/attend math as the dense chunk / bucketed-decode kernels, and
+scatter the stripe back page by page. Asserted here at the JAX level:
+
+* a prompt prefilled through the paged chunk path reproduces the dense
+  chunk path bit for bit (partials, logits, and K/V page contents);
+* a paged bucketed decode step reproduces the dense bucketed step bit for
+  bit, whatever the page-id permutation;
+* unmapped page-table entries (the reserved scratch page 0) and garbage in
+  allocated-but-unwritten rows are masked to exact zeros by the causal
+  softmax — outputs are invariant to pool garbage;
+* pages shared by several lanes (copy-on-write prefix forks) are rewritten
+  bit-identically by the scatter, so sharing never corrupts a neighbour.
+"""
+
+import math
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile import tok
+from compile.modelcfg import ModelConfig
+
+CFG = ModelConfig(name="t", vocab=tok.VOCAB_SIZE, d_model=64, n_layers=3,
+                  n_heads=4, head_dim=16, d_ff=128, ctx=64, slots=2)
+K = 16          # chunk == page size under test (ctx % K == 0)
+NB = CFG.ctx // K
+P = 1 + CFG.slots * NB      # scratch page 0 + a dense-equivalent pool
+L = 39          # 3 chunks, final one partial (valid = 7)
+
+
+@pytest.fixture(scope="module", params=["jnp", "pallas"])
+def impl(request):
+    return request.param
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(jax.random.PRNGKey(3), CFG)
+
+
+@pytest.fixture(scope="module")
+def tokens():
+    rng = np.random.default_rng(5)
+    return jnp.asarray(rng.integers(0, 256, size=(L,)).astype(np.int32))
+
+
+def garbage_pool(seed, scale=3.0):
+    """A pool whose every page (scratch included) holds finite garbage —
+    outputs must be invariant to all of it."""
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(
+        rng.standard_normal((P, K, CFG.d_model)).astype(np.float32) * scale)
+
+
+def dense_chunked_prefill(p, tokens, impl, slot=0):
+    """The dense chunk oracle (slot-indexed [S, C, w] caches)."""
+    attn = M.make_shard_attn_chunk(CFG, impl, K)
+    ffn = M.make_shard_ffn(CFG, impl)
+    kcs = [jnp.zeros((CFG.slots, CFG.ctx, CFG.d_model), jnp.float32)
+           for _ in p["layers"]]
+    vcs = [jnp.zeros_like(kcs[0]) for _ in p["layers"]]
+    parts = []
+    for j in range(math.ceil(len(tokens) / K)):
+        off = j * K
+        valid = min(len(tokens) - off, K)
+        chunk = jnp.concatenate(
+            [tokens[off:off + valid],
+             jnp.full((K - valid,), tok.PAD, jnp.int32)])
+        h = M.make_embed(CFG)(chunk, p["emb"])[0]
+        for i, lp in enumerate(p["layers"]):
+            part, kcs[i], vcs[i] = attn(
+                h, lp["ln1"], lp["wq"], lp["wk"], lp["wv"], lp["wo"],
+                kcs[i], vcs[i], jnp.int32(slot), jnp.int32(off),
+                jnp.int32(valid))
+            parts.append(np.asarray(part)[:valid])
+            h = h + part
+            h = h + ffn(h, lp["ln2"], lp["wg"], lp["wu"], lp["wd"])[0]
+    logits = M.make_logits(CFG, impl)(h, p["lnf"], p["wout"])[0]
+    return logits, kcs, vcs, parts
+
+
+def paged_chunked_prefill(p, tokens, impl):
+    """The paged path: per-layer pools seeded with garbage, blocks mapped
+    lazily in cursor order (block j appears right before chunk j, exactly
+    the runtime's ensure-before-dispatch protocol; later blocks stay on the
+    scratch page 0)."""
+    attn = M.make_shard_attn_chunk_paged(CFG, impl, K)
+    ffn = M.make_shard_ffn(CFG, impl)
+    kps = [garbage_pool(100 + i) for i in range(CFG.n_layers)]
+    vps = [garbage_pool(200 + i) for i in range(CFG.n_layers)]
+    parts = []
+    for j in range(math.ceil(len(tokens) / K)):
+        off = j * K
+        valid = min(len(tokens) - off, K)
+        chunk = jnp.concatenate(
+            [tokens[off:off + valid],
+             jnp.full((K - valid,), tok.PAD, jnp.int32)])
+        pt = np.zeros(NB, np.int32)
+        pt[:j + 1] = np.arange(1, j + 2)        # blocks 0..j mapped
+        pt = jnp.asarray(pt)
+        h = M.make_embed(CFG)(chunk, p["emb"])[0]
+        for i, lp in enumerate(p["layers"]):
+            part, kps[i], vps[i] = attn(
+                h, lp["ln1"], lp["wq"], lp["wk"], lp["wv"], lp["wo"],
+                kps[i], vps[i], pt, jnp.int32(off), jnp.int32(valid))
+            parts.append(np.asarray(part)[:valid])
+            h = h + part
+            h = h + ffn(h, lp["ln2"], lp["wg"], lp["wu"], lp["wd"])[0]
+    logits = M.make_logits(CFG, impl)(h, p["lnf"], p["wout"])[0]
+    return logits, kps, vps, parts
+
+
+def test_paged_chunk_prefill_bit_identical_to_dense(impl, params, tokens):
+    d_logits, d_k, d_v, d_parts = dense_chunked_prefill(params, tokens, impl)
+    p_logits, p_k, p_v, p_parts = paged_chunked_prefill(params, tokens, impl)
+
+    # valid rows only: PAD rows of the final partial chunk attend unwritten
+    # columns (dense zeros vs pool garbage) and are discarded by callers
+    for n, (a, b) in enumerate(zip(d_parts, p_parts)):
+        assert np.array_equal(a, b), f"attention partial {n} diverged"
+    valid = L - (L // K) * K
+    assert np.array_equal(np.asarray(d_logits)[:valid],
+                          np.asarray(p_logits)[:valid])
+
+    # the K/V rows reachable through the page table match the dense cache
+    pt = jnp.asarray(np.arange(1, NB + 1, dtype=np.int32))
+    for i in range(CFG.n_layers):
+        for dense, pool in ((d_k[i], p_k[i]), (d_v[i], p_v[i])):
+            view = np.asarray(pool[pt].reshape(CFG.ctx, CFG.d_model))
+            assert np.array_equal(view[:L], np.asarray(dense)[0, :L]), \
+                f"layer {i} paged K/V diverged"
+
+
+def pool_from_dense(kc, seed):
+    """Pack a dense [S, C, w] cache into a pool: slot s block j -> page
+    1 + s·NB + j; scratch keeps garbage."""
+    pool = np.asarray(garbage_pool(seed)).copy()
+    kc = np.asarray(kc)
+    for s in range(CFG.slots):
+        for j in range(NB):
+            pool[1 + s * NB + j] = kc[s, j * K:(j + 1) * K]
+    return jnp.asarray(pool)
+
+
+def full_pt():
+    return jnp.asarray(
+        np.stack([1 + s * NB + np.arange(NB, dtype=np.int32)
+                  for s in range(CFG.slots)]))
+
+
+def test_paged_decode_bit_identical_to_dense_bucket(impl, params, tokens):
+    """B = 2 bucketed decode: dense lanes[] gather vs page-table gather must
+    produce the same partials and write the same K/V bits."""
+    _, d_k, d_v, _ = dense_chunked_prefill(params, tokens, impl, slot=0)
+    # slot 1 carries a second, different sequence
+    _, d_k1, d_v1, _ = dense_chunked_prefill(params, tokens[:20], impl,
+                                             slot=1)
+    kc = jnp.asarray(np.where(
+        np.arange(CFG.slots)[:, None, None] == 0,
+        np.asarray(d_k[0]), np.asarray(d_k1[0])))
+    vc = jnp.asarray(np.where(
+        np.arange(CFG.slots)[:, None, None] == 0,
+        np.asarray(d_v[0]), np.asarray(d_v1[0])))
+
+    dense = M.make_shard_attn_decode_bucket(CFG, impl, b=2)
+    paged = M.make_shard_attn_decode_paged_bucket(CFG, impl, b=2, page=K)
+    lp = params["layers"][0]
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(rng.standard_normal((2, CFG.d_model)).astype(np.float32))
+    pos = jnp.asarray(np.array([L, 20], np.int32))
+    lanes = jnp.asarray(np.array([0, 1], np.int32))
+
+    d_part, d_kc2, d_vc2 = dense(x, lp["ln1"], lp["wq"], lp["wk"], lp["wv"],
+                                 lp["wo"], kc, vc, pos, lanes)
+    kp, vp = pool_from_dense(kc, 31), pool_from_dense(vc, 37)
+    p_part, kp2, vp2 = paged(x, lp["ln1"], lp["wq"], lp["wk"], lp["wv"],
+                             lp["wo"], kp, vp, pos, full_pt())
+
+    assert np.array_equal(np.asarray(d_part), np.asarray(p_part))
+    pt = full_pt()
+    for s in range(CFG.slots):
+        view_k = np.asarray(kp2[pt[s]].reshape(CFG.ctx, CFG.d_model))
+        view_v = np.asarray(vp2[pt[s]].reshape(CFG.ctx, CFG.d_model))
+        assert np.array_equal(view_k, np.asarray(d_kc2)[s]), f"slot {s} K"
+        assert np.array_equal(view_v, np.asarray(d_vc2)[s]), f"slot {s} V"
+
+
+def test_shared_prefix_pages_rewritten_bit_identically(params, tokens):
+    """Two lanes whose tables share block-0 pages (a copy-on-write prefix
+    fork): the shared pages' bits must survive the decode scatter, and each
+    lane's output must equal its dense single-slot computation."""
+    impl = "jnp"
+    _, d_k, d_v, _ = dense_chunked_prefill(params, tokens, impl, slot=0)
+    kc, vc = d_k[0], d_v[0]
+    # both slots carry the SAME sequence (the fork): dense duplicates it
+    kc = jnp.asarray(np.stack([np.asarray(kc)[0]] * 2))
+    vc = jnp.asarray(np.stack([np.asarray(vc)[0]] * 2))
+
+    # paged: block 0 shared (page 1), later blocks private per lane
+    pt = np.zeros((2, NB), np.int32)
+    pt[0] = [1, 2, 3, 0]
+    pt[1] = [1, 4, 5, 0]
+    kp = np.asarray(garbage_pool(41)).copy()
+    vp = np.asarray(garbage_pool(43)).copy()
+    for lane in range(2):
+        for j in range(3):
+            kp[pt[lane, j]] = np.asarray(kc)[lane, j * K:(j + 1) * K]
+            vp[pt[lane, j]] = np.asarray(vc)[lane, j * K:(j + 1) * K]
+    kp, vp = jnp.asarray(kp), jnp.asarray(vp)
+    shared_k = np.asarray(kp[1]).copy()
+    shared_v = np.asarray(vp[1]).copy()
+
+    dense = M.make_shard_attn_decode_bucket(CFG, impl, b=2)
+    paged = M.make_shard_attn_decode_paged_bucket(CFG, impl, b=2, page=K)
+    lp = params["layers"][0]
+    rng = np.random.default_rng(47)
+    x = jnp.asarray(rng.standard_normal((2, CFG.d_model)).astype(np.float32))
+    pos = jnp.asarray(np.array([L, L], np.int32))        # both write block 2
+    lanes = jnp.asarray(np.array([0, 1], np.int32))
+
+    d_part, _, _ = dense(x, lp["ln1"], lp["wq"], lp["wk"], lp["wv"],
+                         lp["wo"], kc, vc, pos, lanes)
+    p_part, kp2, vp2 = paged(x, lp["ln1"], lp["wq"], lp["wk"], lp["wv"],
+                             lp["wo"], kp, vp, jnp.asarray(pos),
+                             jnp.asarray(pt))
+
+    assert np.array_equal(np.asarray(d_part), np.asarray(p_part))
+    assert np.array_equal(np.asarray(kp2[1]), shared_k), \
+        "shared K page bits changed"
+    assert np.array_equal(np.asarray(vp2[1]), shared_v), \
+        "shared V page bits changed"
+    # each lane's write landed in its own private block-2 page
+    assert not np.array_equal(np.asarray(kp2[3]), np.asarray(kp[3]))
+    assert not np.array_equal(np.asarray(kp2[5]), np.asarray(kp[5]))
+
+
+def test_outputs_invariant_to_pool_garbage(params, tokens):
+    """Scratch-page and unwritten-row garbage must be exactly masked: the
+    same decode over two pools differing only in garbage is bit-equal."""
+    impl = "jnp"
+    _, d_k, d_v, _ = dense_chunked_prefill(params, tokens, impl, slot=0)
+    paged = M.make_shard_attn_decode_paged_bucket(CFG, impl, b=1, page=K)
+    lp = params["layers"][0]
+    rng = np.random.default_rng(53)
+    x = jnp.asarray(rng.standard_normal((1, CFG.d_model)).astype(np.float32))
+    pos = jnp.asarray(np.array([L], np.int32))
+    pt = jnp.asarray(np.array([[1, 2, 3, 0]], np.int32))  # block 3 unmapped
+
+    outs = []
+    for seed in (61, 67):
+        kp = np.asarray(garbage_pool(seed)).copy()
+        vp = np.asarray(garbage_pool(seed + 1)).copy()
+        for j in range(3):
+            kp[1 + j] = np.asarray(d_k[0])[0, j * K:(j + 1) * K]
+            vp[1 + j] = np.asarray(d_v[0])[0, j * K:(j + 1) * K]
+        part, _, _ = paged(x, lp["ln1"], lp["wq"], lp["wk"], lp["wv"],
+                           lp["wo"], jnp.asarray(kp), jnp.asarray(vp),
+                           pos, pt)
+        outs.append(np.asarray(part))
+    assert np.array_equal(outs[0], outs[1]), "pool garbage leaked into output"

@@ -142,6 +142,42 @@ fn main() {
         }
     }
 
+    // Paged shared-prefix reuse gate: two slots prefill the SAME 77-token
+    // prompt under the paged KV cache. The leader pays the full 3-chunk
+    // walk; the follower attaches the two shareable blocks from the prefix
+    // index and bills only the final chunk — the modelled-flop delta is the
+    // prefix prefill charged exactly once, gated against bench-baseline.
+    {
+        let plan = transform::pair_parallel(n, 2, 10, true);
+        let mut paged =
+            ServingModel::new(&manifest, "td-small", &weights, &plan, no_net()).unwrap();
+        if entry.kv_pages.is_none() || paged.prefill_chunk().is_none() {
+            eprintln!("   (no kv_pages in manifest — paged prefix-reuse section skipped)");
+        } else {
+            paged.enable_paging().unwrap();
+            let prompt: Vec<i32> = (0..77).map(|i| 97 + (i % 26)).collect();
+            paged.mesh.metrics.reset();
+            paged.prefill_chunked(0, &prompt).unwrap();
+            let lead = paged.mesh.metrics.modelled_flops();
+            paged.mesh.metrics.reset();
+            paged.prefill_chunked(1, &prompt).unwrap();
+            let follow = paged.mesh.metrics.modelled_flops();
+            let ks = paged.kv_stats().expect("paging enabled");
+            assert!(follow < lead, "prefix reuse must be cheaper than the full walk");
+            assert_eq!(ks.prefix_hits, 1, "follower must hit the prefix index");
+            println!(
+                "   paged prefix reuse (2x L=77): leader {:.2} Mflop, follower {:.2} Mflop — {} tokens shared, {:.2} Mflop saved",
+                lead as f64 / 1e6,
+                follow as f64 / 1e6,
+                ks.prefix_shared_tokens,
+                (lead - follow) as f64 / 1e6,
+            );
+            b.metric("prefix_shared_tokens_2x77", ks.prefix_shared_tokens as f64);
+            b.metric("prefix_saved_mflop_2x77", (lead - follow) as f64 / 1e6);
+            b.metric("prefix_follower_mflop_2x77", follow as f64 / 1e6);
+        }
+    }
+
     // End-to-end scheduler-attribution gate: one request through the real
     // Server/Scheduler over a default_net model. On an idle server the
     // first token samples from the FINAL prefill chunk's logits, so the

@@ -65,6 +65,16 @@ pub struct ServerMetrics {
     /// (gauge, mirrored from `runtime::buckets::ExecCacheStats` by the
     /// scheduler; non-zero only under a `[runtime] max_cached_execs` cap).
     pub exec_cache_evictions: AtomicU64,
+    /// Paged-KV counters (all zero while paging is off), mirrored from
+    /// `ServingModel::kv_stats` by the scheduler once per decode round —
+    /// same pattern as `exec_cache_evictions`. `kv_pages_in_use` is a
+    /// gauge; the rest are monotone counters. Deterministic under a fixed
+    /// request sequence, so the bench baselines can gate on them.
+    pub kv_pages_in_use: AtomicU64,
+    pub kv_prefix_lookups: AtomicU64,
+    pub kv_prefix_hits: AtomicU64,
+    pub kv_prefix_shared_tokens: AtomicU64,
+    pub kv_evictions: AtomicU64,
     /// Per-tier decode attribution (see [`TierStats`]); keyed by tier name.
     tier_stats: Mutex<BTreeMap<String, TierStats>>,
     /// Occupancy histogram: `hist[k]` = decode rounds with k live lanes.
@@ -97,6 +107,11 @@ impl Default for ServerMetrics {
             modelled_decode_tokens: AtomicU64::new(0),
             modelled_prefill_ns: AtomicU64::new(0),
             exec_cache_evictions: AtomicU64::new(0),
+            kv_pages_in_use: AtomicU64::new(0),
+            kv_prefix_lookups: AtomicU64::new(0),
+            kv_prefix_hits: AtomicU64::new(0),
+            kv_prefix_shared_tokens: AtomicU64::new(0),
+            kv_evictions: AtomicU64::new(0),
             tier_stats: Mutex::new(BTreeMap::new()),
             occupancy_hist: Mutex::new(Vec::new()),
             ttft_ms: Mutex::new(Reservoir::new(RESERVOIR_CAP, 0x7f71)),
@@ -143,6 +158,16 @@ impl ServerMetrics {
     /// Record one prefill pass/chunk step's simulated-clock cost.
     pub fn record_prefill_step(&self, modelled_ns: u64) {
         self.modelled_prefill_ns.fetch_add(modelled_ns, Ordering::Relaxed);
+    }
+
+    /// Mirror the serving model's paged-KV counters (see
+    /// [`crate::model::kvcache::KvStats`]) into the shared metrics.
+    pub fn record_kv_stats(&self, ks: &crate::model::kvcache::KvStats) {
+        self.kv_pages_in_use.store(ks.pages_in_use, Ordering::Relaxed);
+        self.kv_prefix_lookups.store(ks.prefix_lookups, Ordering::Relaxed);
+        self.kv_prefix_hits.store(ks.prefix_hits, Ordering::Relaxed);
+        self.kv_prefix_shared_tokens.store(ks.prefix_shared_tokens, Ordering::Relaxed);
+        self.kv_evictions.store(ks.evictions, Ordering::Relaxed);
     }
 
     /// Attribute one decode round to a serving tier (called alongside
@@ -267,6 +292,20 @@ impl ServerMetrics {
         if evictions > 0 {
             s += &format!("\nexec cache evictions: {evictions}");
         }
+        // paged-KV line only when paging actually did something (gauge or
+        // any probe non-zero); a dense run reports nothing here
+        let kv_pages = self.kv_pages_in_use.load(Ordering::Relaxed);
+        let kv_lookups = self.kv_prefix_lookups.load(Ordering::Relaxed);
+        if kv_pages > 0 || kv_lookups > 0 {
+            s += &format!(
+                "\npaged kv: {} pages in use; prefix reuse {}/{} hits, {} tokens shared; {} evictions",
+                kv_pages,
+                self.kv_prefix_hits.load(Ordering::Relaxed),
+                kv_lookups,
+                self.kv_prefix_shared_tokens.load(Ordering::Relaxed),
+                self.kv_evictions.load(Ordering::Relaxed),
+            );
+        }
         s
     }
 }
@@ -328,6 +367,32 @@ mod tests {
         assert!(!r.contains("exec cache evictions"), "{r}");
         m.exec_cache_evictions.store(3, Ordering::Relaxed);
         assert!(m.report().contains("exec cache evictions: 3"));
+    }
+
+    /// Paged-KV counters mirror `KvStats` verbatim, and the report line is
+    /// gated on paging having actually done something.
+    #[test]
+    fn kv_stats_mirror_and_report_gating() {
+        use crate::model::kvcache::KvStats;
+        let m = ServerMetrics::default();
+        assert!(!m.report().contains("paged kv"), "dense runs report no kv line");
+        m.record_kv_stats(&KvStats {
+            pages_in_use: 24,
+            prefix_lookups: 2,
+            prefix_hits: 1,
+            prefix_shared_tokens: 64,
+            evictions: 3,
+        });
+        assert_eq!(m.kv_pages_in_use.load(Ordering::Relaxed), 24);
+        assert_eq!(m.kv_prefix_shared_tokens.load(Ordering::Relaxed), 64);
+        let r = m.report();
+        assert!(
+            r.contains("paged kv: 24 pages in use; prefix reuse 1/2 hits, 64 tokens shared; 3 evictions"),
+            "{r}"
+        );
+        // the gauge can legitimately fall back to zero while counters stay
+        m.record_kv_stats(&KvStats { prefix_lookups: 2, ..KvStats::default() });
+        assert!(m.report().contains("paged kv: 0 pages in use"), "gated on lookups too");
     }
 
     /// The latency reservoirs are bounded: far more completions than the

@@ -11,10 +11,17 @@
 //!   ppl       --model M [--transform T --s S --e E]
 //!   serve     --model M [--depth D | --tiers] [--config run.toml]
 //!             [--max-cached-execs N] --requests N
+//!             [--paged [--page-pool N]]
 //!             [--trace-out F] [--metrics-out F]
 //!                                synthetic load demo; --tiers serves every
 //!                                manifest plan variant concurrently
 //!                                (requests cycle dense/lp/lp_aggr).
+//!                                --paged serves from the paged KV cache and
+//!                                prefixes every request with one shared
+//!                                system prompt, so the prefix index prefills
+//!                                it once (kv.* section in the snapshot);
+//!                                --page-pool caps the logical page pools to
+//!                                model memory pressure.
 //!                                --config applies a RunConfig TOML
 //!                                ([interconnect]/[device] cost model +
 //!                                [runtime] max_cached_execs); the CLI flag
@@ -40,7 +47,7 @@ use truedepth::text::corpus::{self, DATA_SEED};
 use truedepth::util::rng::SplitMix64;
 
 fn main() {
-    let args = Args::from_env(&["no-simnet", "tiers", "strict", "help"]);
+    let args = Args::from_env(&["no-simnet", "tiers", "strict", "paged", "help"]);
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let r = match cmd {
         "info" => info(),
@@ -175,12 +182,24 @@ fn cmd_serve(args: &Args) -> truedepth::Result<()> {
     // --tiers: one resident weight set, every manifest plan variant served
     // concurrently (the plan-variant registry); default: one --depth plan.
     let multi = args.flag("tiers");
-    let serving = if multi {
+    let mut serving = if multi {
         ServingModel::from_manifest_with_cost(&ctx.manifest, model, &weights, cost)?
     } else {
         let plan = plan_for(args, n)?;
         ServingModel::new_with_cost(&ctx.manifest, model, &weights, &plan, cost)?
     };
+    // --paged: serve from the paged KV cache (+ shared-prefix index);
+    // --page-pool shrinks the logical pools to model memory pressure —
+    // over-pool requests are rejected at admission, cold shared blocks
+    // are evicted under load.
+    let paged = args.flag("paged");
+    if paged {
+        serving.enable_paging()?;
+        let pool = args.get_usize("page-pool", 0);
+        if pool > 0 {
+            serving.set_page_capacity(pool);
+        }
+    }
     // `[runtime] max_cached_execs` (CLI flag overrides the config file;
     // 0 / absent = unbounded): LRU-evict compiled executables beyond the
     // cap, recompiling transparently on reuse.
@@ -209,13 +228,24 @@ fn cmd_serve(args: &Args) -> truedepth::Result<()> {
         depths.join(" ")
     );
     let t0 = std::time::Instant::now();
+    // --paged load: every request carries the same system prompt ahead of
+    // its own document snippet, so the shared-prefix index prefills those
+    // leading blocks once and every later request attaches them — the
+    // reuse shows up as kv.prefix_hits in the report and the snapshot.
+    const SYSTEM_PROMPT: &str = "system: you are a terse assistant. answer only from the \
+         provided context, cite sources, never speculate. ";
     let rxs: Vec<_> = (0..n_requests)
         .map(|i| {
             let doc = corpus::eval_doc(DATA_SEED, 1000 + i as u64);
-            let prompt = &doc[..doc.len().min(48)];
+            let snippet = &doc[..doc.len().min(if paged { 16 } else { 48 })];
+            let prompt = if paged {
+                format!("{SYSTEM_PROMPT}{snippet}")
+            } else {
+                snippet.to_string()
+            };
             let tier = multi.then(|| tiers[i % tiers.len()].clone());
             server.submit(
-                prompt,
+                &prompt,
                 RequestOptions { max_new_tokens: 16, sampler: Sampler::Greedy, tier },
             )
         })

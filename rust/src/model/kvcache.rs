@@ -1,11 +1,31 @@
-//! KV-cache slot management for continuous batching.
+//! KV-cache slot management for continuous batching, plus the paged-KV
+//! page allocator and shared-prefix index.
 //!
-//! The device-side caches are statically shaped `[S, C, w]` tensors owned
-//! by the workers (one per stage per rank); this module is the host-side
-//! bookkeeping: which slot belongs to which request, how far each sequence
-//! has decoded, and when a slot can be recycled.
+//! The dense device-side caches are statically shaped `[S, C, w]` tensors
+//! owned by the workers (one per stage per rank); [`SlotManager`] is the
+//! host-side bookkeeping: which slot belongs to which request, how far
+//! each sequence has decoded, and when a slot can be recycled.
+//!
+//! Under paged serving (`ServingModel::enable_paging`) the per-variant
+//! caches are replaced by two shared `[P, page, w]` pools — one per cache
+//! width — and this module additionally owns the host-side paging state:
+//!
+//! * [`PageAllocator`] — a deterministic smallest-id-first free list over
+//!   one pool's logical pages (page 0 is reserved scratch: unmapped page-
+//!   table entries point at it and the kernels' causal mask discards
+//!   whatever it holds), with per-page reference counts so a physical page
+//!   can back several logical blocks (shared prefixes).
+//! * [`PagedKv`] — the per-`(variant, stage, slot)` page tables the
+//!   dispatch paths upload as the `pt` operand, a content-hash index of
+//!   completed prefix blocks (identical prefixes prefill once: followers
+//!   map the leader's pages and skip those chunks entirely), refcounted
+//!   copy-on-write forking when a reused slot diverges from a shared
+//!   block, and LRU eviction of index-only blocks under pool pressure.
+
+use std::collections::{BTreeMap, BTreeSet};
 
 use crate::error::{Error, Result};
+use crate::runtime::{KvPages, VariantId};
 
 #[derive(Clone, Debug)]
 pub struct SlotInfo {
@@ -169,6 +189,437 @@ pub fn generation_capacity(ctx: usize, prompt_len: usize) -> usize {
     ctx.saturating_sub(prompt_len + 1).max(1)
 }
 
+// ---- paged KV cache --------------------------------------------------------
+
+/// Cache width of a paged stage: a Tp stage writes each rank's `d/2`-wide
+/// K/V shard into the `half` pool, an Lp stage its full-width layer into
+/// the `full` pool — mirroring the dense `[S, C, w]` cache widths.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PageWidth {
+    Half,
+    Full,
+}
+
+/// Deterministic page free list over one pool, with per-page reference
+/// counts. Page 0 is the reserved scratch page (never allocated); the
+/// allocator always hands out the smallest free id, so allocation order —
+/// and therefore every page table, device scatter and bench metric — is
+/// reproducible run to run.
+#[derive(Debug)]
+pub struct PageAllocator {
+    /// Free logical pages (ids in `1..capacity` with zero references).
+    free: BTreeSet<usize>,
+    /// Logical pool size including the scratch page (≤ `physical`;
+    /// shrinkable for pressure tests via [`PageAllocator::set_capacity`]).
+    capacity: usize,
+    /// Physical pool size — the device tensor's page dimension.
+    physical: usize,
+    /// Per-page reference counts (slot mappings + prefix-index holds).
+    refs: Vec<usize>,
+}
+
+impl PageAllocator {
+    pub fn new(pages: usize) -> PageAllocator {
+        PageAllocator {
+            free: (1..pages).collect(),
+            capacity: pages,
+            physical: pages,
+            refs: vec![0; pages.max(1)],
+        }
+    }
+
+    /// Logical pool size (including the scratch page).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Shrink (or re-grow, up to the physical tensor) the logical pool —
+    /// the memory-pressure knob. Pages at or above the new capacity leave
+    /// the free list; already-mapped high pages stay valid until released.
+    pub fn set_capacity(&mut self, pages: usize) {
+        self.capacity = pages.clamp(1, self.physical);
+        self.free = (1..self.capacity).filter(|&p| self.refs[p] == 0).collect();
+    }
+
+    /// Claim the smallest free page, or `None` when the pool is exhausted.
+    pub fn alloc(&mut self) -> Option<usize> {
+        let p = self.free.pop_first()?;
+        self.refs[p] = 1;
+        Some(p)
+    }
+
+    /// Add one reference to an already-claimed page (prefix sharing).
+    pub fn retain(&mut self, page: usize) {
+        debug_assert!(self.refs[page] > 0, "retain on a free page");
+        self.refs[page] += 1;
+    }
+
+    /// Drop one reference; the page returns to the free list once nothing
+    /// holds it.
+    pub fn release(&mut self, page: usize) {
+        debug_assert!(self.refs[page] > 0, "release on a free page");
+        self.refs[page] -= 1;
+        if self.refs[page] == 0 && page != 0 && page < self.capacity {
+            self.free.insert(page);
+        }
+    }
+
+    /// References currently held on `page`.
+    pub fn refs(&self, page: usize) -> usize {
+        self.refs[page]
+    }
+
+    /// Pages currently claimed (the scratch page is not counted).
+    pub fn in_use(&self) -> usize {
+        self.refs.iter().skip(1).filter(|&&r| r > 0).count()
+    }
+}
+
+/// One published prefix block: the pages holding block `j` of some prompt
+/// prefix, one per stage of the owning variant, in stage order. The index
+/// itself holds one reference per page, so the block outlives the slot
+/// that prefilled it.
+#[derive(Debug)]
+struct SharedBlocks {
+    pages: Vec<usize>,
+    /// LRU stamp — bumped on every successful prefix match.
+    last_used: u64,
+}
+
+/// Paged-KV counters surfaced through `ServingModel::kv_stats` into the
+/// server metrics/snapshot (all deterministic under a fixed request
+/// sequence — the bench baselines gate on them).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct KvStats {
+    /// Pages currently claimed across both pools.
+    pub pages_in_use: u64,
+    /// Prefix-index probes (one per paged prefill begun).
+    pub prefix_lookups: u64,
+    /// Probes that matched at least one block.
+    pub prefix_hits: u64,
+    /// Prompt tokens covered by matched blocks — prefill chunks never run.
+    pub prefix_shared_tokens: u64,
+    /// Prefix blocks evicted from the index under pool pressure.
+    pub evictions: u64,
+}
+
+/// FNV-1a over one page-sized token chunk, chained on the previous block's
+/// hash — a cumulative content hash, so equal chains mean equal full
+/// prefixes (block j's chain commits to every token of blocks 0..=j).
+pub fn chain_hash(prev: u64, chunk: &[i32]) -> u64 {
+    let mut h = prev ^ 0xcbf2_9ce4_8422_2325;
+    for &t in chunk {
+        h ^= t as u32 as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Host-side paging state of one serving model: per-width allocators, the
+/// `(variant, stage, slot)` page tables the dispatch paths upload as `pt`,
+/// and the shared-prefix index. Geometry comes from the manifest's
+/// `kv_pages` section ([`KvPages`]).
+#[derive(Debug)]
+pub struct PagedKv {
+    half: PageAllocator,
+    full: PageAllocator,
+    page_tokens: usize,
+    blocks_per_slot: usize,
+    slots: usize,
+    /// Stage widths per variant, in stage-walk order.
+    widths: BTreeMap<VariantId, Vec<PageWidth>>,
+    /// `tables[vid][sidx][slot * blocks_per_slot + block]` = page id
+    /// (0 = unmapped → the kernels read the masked scratch page).
+    tables: BTreeMap<VariantId, Vec<Vec<i32>>>,
+    /// `(variant, chain hash over blocks 0..=j)` → the pages of block j.
+    index: BTreeMap<(VariantId, u64), SharedBlocks>,
+    clock: u64,
+    prefix_lookups: u64,
+    prefix_hits: u64,
+    prefix_shared_tokens: u64,
+    evictions: u64,
+}
+
+impl PagedKv {
+    pub fn new(
+        kvp: &KvPages,
+        variants: &[(VariantId, Vec<PageWidth>)],
+        slots: usize,
+    ) -> PagedKv {
+        let mut widths = BTreeMap::new();
+        let mut tables = BTreeMap::new();
+        for (vid, ws) in variants {
+            tables.insert(
+                vid.clone(),
+                vec![vec![0i32; slots * kvp.blocks_per_slot]; ws.len()],
+            );
+            widths.insert(vid.clone(), ws.clone());
+        }
+        PagedKv {
+            half: PageAllocator::new(kvp.pool_pages_half),
+            full: PageAllocator::new(kvp.pool_pages_full),
+            page_tokens: kvp.page_tokens,
+            blocks_per_slot: kvp.blocks_per_slot,
+            slots,
+            widths,
+            tables,
+            index: BTreeMap::new(),
+            clock: 0,
+            prefix_lookups: 0,
+            prefix_hits: 0,
+            prefix_shared_tokens: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn page_tokens(&self) -> usize {
+        self.page_tokens
+    }
+
+    pub fn blocks_per_slot(&self) -> usize {
+        self.blocks_per_slot
+    }
+
+    /// Apply a logical page-pool cap to BOTH pools — the memory-pressure
+    /// knob behind `serve_batch --page-pool` and the eviction tests.
+    pub fn set_page_capacity(&mut self, pages: usize) {
+        self.half.set_capacity(pages);
+        self.full.set_capacity(pages);
+    }
+
+    pub fn stats(&self) -> KvStats {
+        KvStats {
+            pages_in_use: (self.half.in_use() + self.full.in_use()) as u64,
+            prefix_lookups: self.prefix_lookups,
+            prefix_hits: self.prefix_hits,
+            prefix_shared_tokens: self.prefix_shared_tokens,
+            evictions: self.evictions,
+        }
+    }
+
+    /// Admission: can a request needing `blocks` KV blocks under `vid`
+    /// EVER fit the logical pools? Optimistic, vLLM-style — a request
+    /// within total capacity is admitted even if pages are currently
+    /// claimed (eviction under pressure is policy); only an impossible
+    /// request is rejected, before any slot churn.
+    pub fn fits(&self, vid: &VariantId, blocks: usize) -> bool {
+        let Some(ws) = self.widths.get(vid) else { return false };
+        let half_stages = ws.iter().filter(|w| matches!(w, PageWidth::Half)).count();
+        let full_stages = ws.len() - half_stages;
+        blocks * half_stages <= self.half.capacity().saturating_sub(1)
+            && blocks * full_stages <= self.full.capacity().saturating_sub(1)
+    }
+
+    /// The `[blocks_per_slot]` page table of one stage of one slot — the
+    /// `pt` operand of the paged chunk/decode executables.
+    pub fn page_table(&self, vid: &VariantId, sidx: usize, slot: usize) -> &[i32] {
+        let nb = self.blocks_per_slot;
+        &self.tables[vid][sidx][slot * nb..(slot + 1) * nb]
+    }
+
+    fn alloc_page(&mut self, width: PageWidth) -> Result<usize> {
+        loop {
+            let got = match width {
+                PageWidth::Half => self.half.alloc(),
+                PageWidth::Full => self.full.alloc(),
+            };
+            if let Some(p) = got {
+                return Ok(p);
+            }
+            if !self.evict_lru() {
+                return Err(Error::Serving(
+                    "kv page pool exhausted (no evictable prefix blocks left)".into(),
+                ));
+            }
+        }
+    }
+
+    /// Evict the least-recently-used prefix block whose pages nothing but
+    /// the index holds. Returns false when no block is evictable.
+    fn evict_lru(&mut self) -> bool {
+        let mut best: Option<(u64, (VariantId, u64))> = None;
+        for (key, e) in &self.index {
+            let ws = &self.widths[&key.0];
+            let index_only = e.pages.iter().zip(ws.iter()).all(|(&p, w)| match w {
+                PageWidth::Half => self.half.refs(p) == 1,
+                PageWidth::Full => self.full.refs(p) == 1,
+            });
+            if index_only && best.as_ref().map_or(true, |(lu, _)| e.last_used < *lu) {
+                best = Some((e.last_used, key.clone()));
+            }
+        }
+        let Some((_, key)) = best else { return false };
+        let e = self.index.remove(&key).unwrap();
+        let ws = self.widths[&key.0].clone();
+        for (&p, w) in e.pages.iter().zip(ws.iter()) {
+            match w {
+                PageWidth::Half => self.half.release(p),
+                PageWidth::Full => self.full.release(p),
+            }
+        }
+        self.evictions += 1;
+        true
+    }
+
+    /// Lazily map `block` of `slot` for every stage of `vid`, allocating
+    /// pages as needed. A stale mapping left by a previous request on the
+    /// same slot is kept when private (its content is simply overwritten),
+    /// but **forked** when shared (reference count > 1): the slot drops
+    /// its reference and takes a fresh private page, so a diverging write
+    /// can never corrupt a block other holders still read — copy-on-write.
+    pub fn ensure_block(&mut self, vid: &VariantId, slot: usize, block: usize) -> Result<()> {
+        debug_assert!(slot < self.slots && block < self.blocks_per_slot);
+        let ws = self
+            .widths
+            .get(vid)
+            .cloned()
+            .ok_or_else(|| Error::Serving(format!("paged kv: unknown tier `{vid}`")))?;
+        let idx = slot * self.blocks_per_slot + block;
+        for (sidx, w) in ws.iter().enumerate() {
+            let cur = self.tables[vid][sidx][idx] as usize;
+            if cur != 0 {
+                let shared = match w {
+                    PageWidth::Half => self.half.refs(cur) > 1,
+                    PageWidth::Full => self.full.refs(cur) > 1,
+                };
+                if !shared {
+                    continue;
+                }
+                match w {
+                    PageWidth::Half => self.half.release(cur),
+                    PageWidth::Full => self.full.release(cur),
+                }
+            }
+            let p = self.alloc_page(*w)?;
+            self.tables.get_mut(vid).unwrap()[sidx][idx] = p as i32;
+        }
+        Ok(())
+    }
+
+    /// Hash chain of every *shareable* block of a prompt: full chunks
+    /// strictly below the prompt length (`(j+1)·K < L`). The final chunk —
+    /// partial or not — is never shared, so it always runs (producing the
+    /// first-token logits) and decode writes land in private blocks:
+    /// copy-on-write by construction on the hot path.
+    fn shareable_chains(&self, tokens: &[i32]) -> Vec<u64> {
+        let k = self.page_tokens;
+        let mut chains = Vec::new();
+        let mut h = 0u64;
+        let mut j = 0;
+        while (j + 1) * k < tokens.len() {
+            h = chain_hash(h, &tokens[j * k..(j + 1) * k]);
+            chains.push(h);
+            j += 1;
+        }
+        chains
+    }
+
+    /// Follower half of prefix reuse: map every already-indexed leading
+    /// block of `tokens` into `slot`'s page tables (bumping page refs) and
+    /// return the number of prompt tokens covered — the prefill cursor
+    /// starts there, and the skipped chunks charge zero modelled compute.
+    pub fn attach_prefix(&mut self, vid: &VariantId, slot: usize, tokens: &[i32]) -> usize {
+        self.prefix_lookups += 1;
+        let Some(ws) = self.widths.get(vid).cloned() else { return 0 };
+        let chains = self.shareable_chains(tokens);
+        self.clock += 1;
+        let clock = self.clock;
+        let nb = self.blocks_per_slot;
+        let mut matched = 0;
+        for (j, h) in chains.iter().enumerate() {
+            let Some(e) = self.index.get_mut(&(vid.clone(), *h)) else { break };
+            e.last_used = clock;
+            let pages = e.pages.clone();
+            for (sidx, (&p, w)) in pages.iter().zip(ws.iter()).enumerate() {
+                let idx = slot * nb + j;
+                let old = self.tables[vid][sidx][idx] as usize;
+                if old == p {
+                    continue; // same prompt re-prefilled into the same slot
+                }
+                match w {
+                    PageWidth::Half => self.half.retain(p),
+                    PageWidth::Full => self.full.retain(p),
+                }
+                if old != 0 {
+                    match w {
+                        PageWidth::Half => self.half.release(old),
+                        PageWidth::Full => self.full.release(old),
+                    }
+                }
+                self.tables.get_mut(vid).unwrap()[sidx][idx] = p as i32;
+            }
+            matched = j + 1;
+        }
+        if matched > 0 {
+            self.prefix_hits += 1;
+            self.prefix_shared_tokens += (matched * self.page_tokens) as u64;
+        }
+        matched * self.page_tokens
+    }
+
+    /// Leader half: after the chunk covering block `block` of `slot`
+    /// completes, publish its pages under the prefix chain hash. The index
+    /// holds one reference per page, keeping the block alive for followers
+    /// after the slot retires. Non-shareable blocks (the final chunk) and
+    /// already-published chains are no-ops.
+    pub fn register_block(&mut self, vid: &VariantId, slot: usize, tokens: &[i32], block: usize) {
+        let Some(ws) = self.widths.get(vid).cloned() else { return };
+        let chains = self.shareable_chains(tokens);
+        let Some(&h) = chains.get(block) else { return };
+        let key = (vid.clone(), h);
+        if self.index.contains_key(&key) {
+            return;
+        }
+        let idx = slot * self.blocks_per_slot + block;
+        let pages: Vec<usize> = self.tables[&key.0].iter().map(|t| t[idx] as usize).collect();
+        if pages.iter().any(|&p| p == 0) {
+            return; // block not fully mapped: nothing to publish
+        }
+        for (&p, w) in pages.iter().zip(ws.iter()) {
+            match w {
+                PageWidth::Half => self.half.retain(p),
+                PageWidth::Full => self.full.retain(p),
+            }
+        }
+        self.clock += 1;
+        self.index.insert(key, SharedBlocks { pages, last_used: self.clock });
+    }
+
+    /// Reference count of one pool page (test observability).
+    #[cfg(test)]
+    fn pool_refs(&self, width: PageWidth, page: usize) -> usize {
+        match width {
+            PageWidth::Half => self.half.refs(page),
+            PageWidth::Full => self.full.refs(page),
+        }
+    }
+
+    /// Return every page `slot` maps (across all variants) to the pools.
+    /// Pages also held by the prefix index stay resident for future reuse;
+    /// everything else becomes allocatable again.
+    pub fn release_slot(&mut self, slot: usize) {
+        let nb = self.blocks_per_slot;
+        let vids: Vec<VariantId> = self.tables.keys().cloned().collect();
+        for vid in vids {
+            let ws = self.widths[&vid].clone();
+            for (sidx, w) in ws.iter().enumerate() {
+                for b in 0..nb {
+                    let idx = slot * nb + b;
+                    let p = self.tables[&vid][sidx][idx] as usize;
+                    if p == 0 {
+                        continue;
+                    }
+                    match w {
+                        PageWidth::Half => self.half.release(p),
+                        PageWidth::Full => self.full.release(p),
+                    }
+                    self.tables.get_mut(&vid).unwrap()[sidx][idx] = 0;
+                }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -241,6 +692,132 @@ mod tests {
         assert_eq!(m.free_count(), 1, "prefilling slot must keep its reservation");
         m.set_prefilling(b, false);
         assert_eq!(m.active_inputs(), vec![(a, 99, 5), (b, 41, 3)]);
+    }
+
+    fn kvp(page_tokens: usize, blocks: usize, pool: usize) -> KvPages {
+        KvPages {
+            page_tokens,
+            blocks_per_slot: blocks,
+            pool_pages_half: pool,
+            pool_pages_full: pool,
+        }
+    }
+
+    fn lp() -> VariantId {
+        VariantId::new("lp")
+    }
+
+    #[test]
+    fn page_allocator_hands_out_smallest_free_id() {
+        let mut a = PageAllocator::new(5);
+        assert_eq!(a.alloc(), Some(1));
+        assert_eq!(a.alloc(), Some(2));
+        assert_eq!(a.alloc(), Some(3));
+        a.release(2);
+        assert_eq!(a.alloc(), Some(2), "freed page must be reissued first");
+        assert_eq!(a.alloc(), Some(4));
+        assert_eq!(a.alloc(), None, "pool of 5 holds 4 allocatable pages");
+        assert_eq!(a.in_use(), 4);
+    }
+
+    #[test]
+    fn slot_release_returns_private_pages_to_the_pool() {
+        let mut kv = PagedKv::new(
+            &kvp(4, 4, 9),
+            &[(lp(), vec![PageWidth::Full, PageWidth::Full])],
+            2,
+        );
+        for b in 0..2 {
+            kv.ensure_block(&lp(), 0, b).unwrap();
+        }
+        assert_eq!(kv.stats().pages_in_use, 4, "2 stages × 2 blocks");
+        // allocation walks stages within a block: stage 0 holds pages 1, 3
+        assert_eq!(kv.page_table(&lp(), 0, 0)[..2], [1, 3]);
+        kv.release_slot(0);
+        assert_eq!(kv.stats().pages_in_use, 0);
+        assert!(kv.page_table(&lp(), 0, 0).iter().all(|&p| p == 0));
+        // re-ensure after release reuses the smallest ids — deterministic
+        kv.ensure_block(&lp(), 1, 0).unwrap();
+        assert_eq!(kv.page_table(&lp(), 0, 1)[0], 1);
+    }
+
+    #[test]
+    fn fits_rejects_over_pool_requests_without_churn() {
+        let kv = PagedKv::new(&kvp(4, 4, 9), &[(lp(), vec![PageWidth::Full])], 2);
+        // 8 allocatable full pages, one stage: 8 blocks fit, 9 never can
+        assert!(kv.fits(&lp(), 8));
+        assert!(!kv.fits(&lp(), 9));
+        assert!(!kv.fits(&VariantId::new("nope"), 1));
+        assert_eq!(kv.stats().pages_in_use, 0, "admission probing claims nothing");
+    }
+
+    #[test]
+    fn shared_prefix_attach_and_cow_fork() {
+        let mut kv = PagedKv::new(&kvp(4, 4, 9), &[(lp(), vec![PageWidth::Full])], 2);
+        // 12-token prompt: blocks 0 and 1 shareable, block 2 (final) never
+        let tokens: Vec<i32> = (0..12).collect();
+        for b in 0..3 {
+            kv.ensure_block(&lp(), 0, b).unwrap();
+            kv.register_block(&lp(), 0, &tokens, b);
+        }
+        let leader: Vec<i32> = kv.page_table(&lp(), 0, 0).to_vec();
+
+        let shared = kv.attach_prefix(&lp(), 1, &tokens);
+        assert_eq!(shared, 8, "two 4-token blocks reused");
+        let st = kv.stats();
+        assert_eq!((st.prefix_lookups, st.prefix_hits, st.prefix_shared_tokens), (1, 1, 8));
+        let follower: Vec<i32> = kv.page_table(&lp(), 0, 1).to_vec();
+        assert_eq!(follower[..2], leader[..2], "shared blocks map the same pages");
+        assert_eq!(follower[2], 0, "the final block is never shared");
+        // leader slot + index + follower slot all hold block 0's page
+        assert_eq!(kv.pool_refs(PageWidth::Full, leader[0] as usize), 3);
+
+        // divergence: the follower rewrites block 0 → fork to a private page
+        kv.ensure_block(&lp(), 1, 0).unwrap();
+        let forked = kv.page_table(&lp(), 0, 1)[0];
+        assert_ne!(forked, leader[0], "copy-on-write must not reuse the shared page");
+        assert_eq!(kv.pool_refs(PageWidth::Full, leader[0] as usize), 2);
+
+        // a private block is NOT forked on re-ensure (content is overwritten)
+        kv.ensure_block(&lp(), 1, 0).unwrap();
+        assert_eq!(kv.page_table(&lp(), 0, 1)[0], forked);
+
+        // a different prompt shares nothing
+        let other: Vec<i32> = (100..112).collect();
+        assert_eq!(kv.attach_prefix(&lp(), 1, &other), 0);
+        assert_eq!(kv.stats().prefix_hits, 1);
+    }
+
+    #[test]
+    fn eviction_reclaims_index_only_blocks_in_lru_order() {
+        let mut kv = PagedKv::new(&kvp(4, 2, 5), &[(lp(), vec![PageWidth::Full])], 2);
+        let tokens: Vec<i32> = (0..8).collect();
+        kv.ensure_block(&lp(), 0, 0).unwrap();
+        kv.ensure_block(&lp(), 0, 1).unwrap();
+        kv.register_block(&lp(), 0, &tokens, 0);
+        kv.release_slot(0);
+        assert_eq!(kv.stats().pages_in_use, 1, "the index keeps the prefix block");
+
+        // shrink to 2 logical pages: only page 1 exists and the index holds it
+        kv.set_page_capacity(2);
+        kv.ensure_block(&lp(), 1, 0).unwrap(); // evicts the idle prefix block
+        assert_eq!(kv.stats().evictions, 1);
+        assert_eq!(kv.page_table(&lp(), 0, 1)[0], 1);
+        assert_eq!(kv.attach_prefix(&lp(), 1, &tokens), 0, "evicted chain is gone");
+
+        // nothing evictable left (the only page is a live slot mapping)
+        let err = kv.ensure_block(&lp(), 1, 1).unwrap_err();
+        assert!(err.to_string().contains("page pool exhausted"), "{err}");
+    }
+
+    #[test]
+    fn chain_hash_commits_to_the_whole_prefix() {
+        let a = chain_hash(0, &[1, 2, 3, 4]);
+        let b = chain_hash(a, &[5, 6, 7, 8]);
+        assert_ne!(a, b);
+        assert_eq!(chain_hash(0, &[1, 2, 3, 4]), a, "deterministic");
+        assert_ne!(chain_hash(0, &[1, 2, 3, 5]), a, "content-sensitive");
+        assert_ne!(chain_hash(a, &[5, 6, 7, 8]), chain_hash(b, &[5, 6, 7, 8]), "chain-sensitive");
     }
 
     #[test]

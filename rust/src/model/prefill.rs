@@ -48,8 +48,8 @@
 
 use crate::error::{Error, Result};
 use crate::model::serving::{
-    cache_name, chunk_exec_keys, stage_weight_args, stage_weight_names, ServeStage,
-    ServingModel, ATTN_FIELDS, FFN_FIELDS,
+    cache_name, chunk_exec_keys, paged_chunk_exec_keys, stage_weight_args,
+    stage_weight_names, ServeStage, ServingModel, ATTN_FIELDS, FFN_FIELDS,
 };
 use crate::parallel::worker::ArgRef;
 use crate::runtime::buckets::{prefill_bytes, prefill_flops};
@@ -152,11 +152,21 @@ impl ServingModel {
                 cfg.ctx
             )));
         }
+        // Under paging, probe the shared-prefix index: every leading block
+        // some earlier prompt already prefilled is mapped into this slot's
+        // page tables (bumping page refs) and the cursor starts past them —
+        // those chunk steps never run and charge zero modelled compute.
+        // The final chunk is never shareable, so `consumed` starts strictly
+        // below the prompt length and the logits head always runs.
+        let consumed = match &self.paged {
+            Some(pg) => pg.lock().unwrap().attach_prefix(vid, slot, tokens),
+            None => 0,
+        };
         Ok(ChunkedPrefill {
             slot,
             variant: vid.clone(),
             tokens: tokens.to_vec(),
-            consumed: 0,
+            consumed,
         })
     }
 
@@ -174,6 +184,9 @@ impl ServingModel {
             st.consumed = st.tokens.len();
             return Ok(Some(logits));
         };
+        if self.paging_enabled() {
+            return self.prefill_step_paged(st, k);
+        }
         self.ensure_execs(&chunk_exec_keys(&var.stages))?;
 
         let cfg = &self.entry.config;
@@ -275,6 +288,144 @@ impl ServingModel {
         }
 
         // rank 0: logits of the last real token (the device→host edge)
+        let logits = self
+            .mesh
+            .exec_rank(
+                0,
+                "logits_chunk",
+                vec![
+                    ArgRef::Resident("act".into()),
+                    ArgRef::Resident("lnf".into()),
+                    ArgRef::Resident("wout".into()),
+                ],
+                vec![],
+                vec![],
+            )?
+            .remove(0)
+            .into_f32()?;
+        let v = cfg.vocab;
+        Ok(Some(logits[(valid - 1) * v..valid * v].to_vec()))
+    }
+
+    /// The paged counterpart of one chunk step: the attention executables
+    /// bind the width-matched shared pools plus the slot's `[nb]` page
+    /// table — there is no `slot` scalar upload; the page table *is* the
+    /// slot indirection. Each chunk step covers exactly one page
+    /// (`enable_paging` enforces `page_tokens == K`), so the step maps its
+    /// block up front (copy-on-write-forking a mapping still shared with
+    /// other holders) and publishes the completed block to the prefix index
+    /// afterwards — making this slot the leader future identical prompts
+    /// attach to. Cost charges are identical to the dense chunk step; the
+    /// savings of paging are the steps followers *skip*, not cheaper steps.
+    fn prefill_step_paged(&self, st: &mut ChunkedPrefill, k: usize) -> Result<Option<Vec<f32>>> {
+        let var = self.variant(&st.variant)?;
+        self.ensure_execs(&paged_chunk_exec_keys(&var.stages))?;
+
+        let cfg = &self.entry.config;
+        let d = cfg.d_model;
+        let off = st.consumed;
+        let valid = (st.tokens.len() - off).min(k);
+        let last = off + valid == st.tokens.len();
+        let mut chunk_tokens = st.tokens[off..off + valid].to_vec();
+        chunk_tokens.resize(k, crate::text::tokenizer::PAD);
+        let logits_rows = if last { k } else { 0 };
+        self.mesh.charge_compute(
+            prefill_flops(cfg, var.layers_equiv, off, k, logits_rows),
+            prefill_bytes(cfg, var.layers_equiv, off, k, logits_rows),
+        );
+
+        // map this chunk's block (off is always page-aligned: attach_prefix
+        // consumes whole blocks and every prior step consumed k tokens),
+        // then freeze the per-stage [nb] page-table operands under one lock
+        let block = off / k;
+        let pts: Vec<Vec<i32>> = {
+            let mut pg = self.paged_kv();
+            pg.ensure_block(&st.variant, st.slot, block)?;
+            (0..var.stages.len())
+                .map(|sidx| pg.page_table(&st.variant, sidx, st.slot).to_vec())
+                .collect()
+        };
+
+        self.mesh.upload_all("off", HostValue::scalar_i32(off as i32))?;
+        self.mesh.upload_all("valid", HostValue::scalar_i32(valid as i32))?;
+
+        // rank 0: embed the chunk (host→device edge), fan out as `act`
+        let mut shadow = self
+            .mesh
+            .exec_rank(
+                0,
+                "embed_chunk",
+                vec![
+                    ArgRef::Host(HostValue::i32(vec![k], chunk_tokens)),
+                    ArgRef::Resident("emb".into()),
+                ],
+                vec![],
+                vec![],
+            )?
+            .remove(0)
+            .into_f32()?;
+        self.mesh
+            .broadcast_resident("act", &HostValue::f32(vec![k, d], shadow.clone()))?;
+
+        for (sidx, stage) in var.stages.iter().enumerate() {
+            let (attn_key, ffn_key, width) = match stage {
+                ServeStage::Tp(_) => ("tpattn_chunk_paged", "tpffn_chunk", "half"),
+                ServeStage::Lp(..) => ("lpattn_chunk_paged", "lpffn_chunk", "full"),
+            };
+            let poolk = crate::runtime::keys::kv_pool(width, "k");
+            let poolv = crate::runtime::keys::kv_pool(width, "v");
+            // the page table differs per stage: uploaded inside the stage
+            // loop (paged host traffic is O(stages), the price of pooling)
+            let nb = pts[sidx].len();
+            self.mesh.upload_all("pt", HostValue::i32(vec![nb], pts[sidx].clone()))?;
+            let calls = (0..self.ranks)
+                .map(|rank| {
+                    let mut args = vec![ArgRef::Resident("act".into())];
+                    args.extend(stage_weight_args(stage, rank, &ATTN_FIELDS));
+                    args.push(ArgRef::Resident(poolk.clone()));
+                    args.push(ArgRef::Resident(poolv.clone()));
+                    args.push(ArgRef::Resident("pt".into()));
+                    args.push(ArgRef::Resident("off".into()));
+                    args.push(ArgRef::Resident("valid".into()));
+                    (
+                        attn_key.to_string(),
+                        args,
+                        vec![
+                            Some("act.partial".to_string()),
+                            Some(poolk.clone()),
+                            Some(poolv.clone()),
+                        ],
+                        vec![false, false, false],
+                    )
+                })
+                .collect();
+            self.mesh.exec_all(calls)?;
+            self.mesh.reduce_into("act.partial", &mut shadow, "act")?;
+
+            let calls = (0..self.ranks)
+                .map(|rank| {
+                    let mut args = vec![ArgRef::Resident("act".into())];
+                    args.extend(stage_weight_args(stage, rank, &FFN_FIELDS));
+                    (
+                        ffn_key.to_string(),
+                        args,
+                        vec![Some("act.partial".to_string())],
+                        vec![false],
+                    )
+                })
+                .collect();
+            self.mesh.exec_all(calls)?;
+            self.mesh.reduce_into("act.partial", &mut shadow, "act")?;
+        }
+
+        st.consumed = off + valid;
+        // publish the completed block for shared-prefix reuse (a no-op for
+        // the final chunk — only strictly-interior blocks are shareable)
+        self.paged_kv().register_block(&st.variant, st.slot, &st.tokens, block);
+
+        if !last {
+            return Ok(None);
+        }
         let logits = self
             .mesh
             .exec_rank(
@@ -533,6 +684,61 @@ mod tests {
         let logits = m.prefill_chunked(0, &prompt).unwrap();
         assert_eq!(logits.len(), m.entry.config.vocab);
         assert!(logits.iter().all(|x| x.is_finite()));
+    }
+
+    /// The shared-prefix acceptance criterion: two requests with the same
+    /// hashed prefix charge the prefix prefill ONCE. The follower attaches
+    /// the leader's blocks, runs only the final chunk, bills exactly that
+    /// chunk's modelled flops — and still produces bit-identical logits.
+    #[test]
+    fn shared_prefix_prefills_once_and_charges_zero_for_reuse() {
+        let Ok(manifest) = Manifest::load_default() else { return };
+        let entry = manifest.model("td-small").unwrap().clone();
+        if entry.kv_pages.is_none() {
+            return;
+        }
+        let cfg = entry.config.clone();
+        let weights = Weights::random(&cfg, 41);
+        let Ok(mut m) = ServingModel::from_manifest(&manifest, "td-small", &weights, quiet())
+        else {
+            return;
+        };
+        m.enable_paging().unwrap();
+        let k = m.prefill_chunk().unwrap();
+        let le = m.default_variant().layers_equiv;
+        // 77-token prompt: blocks 0 and 1 (2k tokens) are shareable; the
+        // final partial chunk never is
+        let prompt: Vec<i32> = (0..77).map(|i| 40 + (i % 50)).collect();
+
+        // leader pays the full ceil(L/K) chunk walk into slot 0
+        m.mesh.metrics.reset();
+        let lead = m.prefill_chunked(0, &prompt).unwrap();
+        let lead_flops = m.mesh.metrics.modelled_flops();
+
+        // follower attaches 2k tokens and runs ONE chunk into slot 1
+        m.mesh.metrics.reset();
+        let mut cur = m.begin_prefill(1, &prompt).unwrap();
+        assert_eq!(cur.consumed(), 2 * k, "two shareable blocks attached");
+        assert_eq!(cur.steps_remaining(Some(k)), 1);
+        let follow = m.prefill_step(&mut cur).unwrap().expect("single step finishes");
+        let follow_flops = m.mesh.metrics.modelled_flops();
+
+        assert_eq!(follow, lead, "shared-prefix prefill diverged from the leader");
+        // the skipped chunks charge ZERO modelled compute: the follower
+        // bills exactly the final chunk at offset 2k
+        assert_eq!(follow_flops, prefill_flops(&cfg, le, 2 * k, k, k));
+        assert!(follow_flops < lead_flops, "reuse must be cheaper than the full walk");
+
+        let ks = m.kv_stats().unwrap();
+        assert_eq!(ks.prefix_hits, 1);
+        assert_eq!(ks.prefix_lookups, 2, "leader probe missed, follower probe hit");
+        assert_eq!(ks.prefix_shared_tokens, 2 * k as u64);
+
+        // both slots decode in one bucketed round, bit-identical lanes
+        let next = crate::tensor::argmax(&lead) as i32;
+        let p = prompt.len() as i32;
+        let rows = m.decode_active(&[(0, next, p), (1, next, p)]).unwrap();
+        assert_eq!(rows[0].1, rows[1].1, "decode after shared-prefix attach diverged");
     }
 
     /// Satellite regression: decode must never attend to cache positions

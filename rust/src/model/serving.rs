@@ -107,9 +107,11 @@
 //! tuple-output caveat).
 
 use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Mutex;
 
 use crate::config::InterconnectConfig;
 use crate::error::{Error, Result};
+use crate::model::kvcache::{KvStats, PageWidth, PagedKv};
 use crate::model::plan::{GraphPlan, Stage};
 use crate::model::weights::Weights;
 use crate::parallel::worker::ArgRef;
@@ -214,15 +216,51 @@ pub fn chunk_exec_keys(stages: &[ServeStage]) -> Vec<String> {
     keys
 }
 
+/// Paged-decode executable keys a stage walk binds for batch bucket `b`:
+/// the attention kernels swap to the `*_decode_paged_b{B}` family (pool +
+/// page-table operands instead of the per-variant `[S, C, w]` cache);
+/// embed/FFN/logits shapes are cache-free and reuse the dense bucketed
+/// executables unchanged.
+pub fn paged_decode_exec_keys(stages: &[ServeStage], b: usize) -> Vec<String> {
+    let mut keys = vec![format!("embed_decode_b{b}"), format!("logits_decode_b{b}")];
+    if stages_have_tp(stages) {
+        keys.push(format!("tpattn_decode_paged_b{b}"));
+        keys.push(format!("tpffn_decode_b{b}"));
+    }
+    if stages_have_lp(stages) {
+        keys.push(format!("lpattn_decode_paged_b{b}"));
+        keys.push(format!("lpffn_decode_b{b}"));
+    }
+    keys
+}
+
+/// Paged chunk-prefill executable keys a stage walk binds (the paged
+/// counterpart of [`chunk_exec_keys`]; embed/FFN/logits chunk executables
+/// are shared with the dense path).
+pub fn paged_chunk_exec_keys(stages: &[ServeStage]) -> Vec<String> {
+    let mut keys = vec!["embed_chunk".to_string(), "logits_chunk".to_string()];
+    if stages_have_tp(stages) {
+        keys.push("tpattn_chunk_paged".to_string());
+        keys.push("tpffn_chunk".to_string());
+    }
+    if stages_have_lp(stages) {
+        keys.push("lpattn_chunk_paged".to_string());
+        keys.push("lpffn_chunk".to_string());
+    }
+    keys
+}
+
 /// The resident-buffer names of one stage's weights on `rank`: a Tp stage
 /// binds the rank's Megatron shard of its layer (`l{i}.tp.*`), an Lp stage
 /// the full width of the rank's layer of the pair (`l{a|b}.full.*`).
+/// Constructed through [`crate::runtime::keys`] — the schema the loader,
+/// the dispatch paths and `verify::binding_check` all share.
 pub fn stage_weight_names(stage: &ServeStage, rank: usize, fields: &[&str]) -> Vec<String> {
     let (layer, form) = match stage {
         ServeStage::Tp(i) => (*i, "tp"),
         ServeStage::Lp(a, b) => (if rank == 0 { *a } else { *b }, "full"),
     };
-    fields.iter().map(|f| format!("l{layer}.{form}.{f}")).collect()
+    fields.iter().map(|f| crate::runtime::keys::weight(layer, form, f)).collect()
 }
 
 /// [`stage_weight_names`] as executable arguments.
@@ -230,9 +268,11 @@ pub fn stage_weight_args(stage: &ServeStage, rank: usize, fields: &[&str]) -> Ve
     stage_weight_names(stage, rank, fields).into_iter().map(ArgRef::Resident).collect()
 }
 
-/// Resident KV-cache buffer name of one variant stage (`kv` ∈ {k, v}).
+/// Resident KV-cache buffer name of one variant stage (`kv` ∈ {k, v}) —
+/// [`crate::runtime::keys::kv_cache`] under the serving module's
+/// traditional name.
 pub fn cache_name(vid: &VariantId, kv: &str, sidx: usize) -> String {
-    format!("kv.{vid}.{kv}.{sidx}")
+    crate::runtime::keys::kv_cache(vid, kv, sidx)
 }
 
 /// The per-rank resident-buffer sets `upload_weights` + `init_caches`
@@ -245,7 +285,7 @@ pub fn initial_resident_names(
 ) -> Vec<BTreeSet<String>> {
     let mut sets: Vec<BTreeSet<String>> = vec![BTreeSet::new(); ranks];
     // rank 0 additionally owns embedding + head
-    for name in ["emb", "lnf", "wout"] {
+    for name in crate::runtime::keys::HEAD_WEIGHT_KEYS {
         sets[0].insert(name.to_string());
     }
     let fields: Vec<&str> = ATTN_FIELDS.iter().chain(FFN_FIELDS.iter()).copied().collect();
@@ -530,6 +570,10 @@ pub struct ServingModel {
     /// Compiled-executable pool shared by every variant (lazy compile +
     /// LRU eviction under `[runtime] max_cached_execs`).
     exec_cache: ExecCache,
+    /// Paged-KV state, present once [`ServingModel::enable_paging`] ran
+    /// (opt-in: the default dense `[S, C, w]` caches stay authoritative
+    /// otherwise). Behind a mutex because dispatch methods take `&self`.
+    pub(crate) paged: Option<Mutex<PagedKv>>,
     pub(crate) ranks: usize,
 }
 
@@ -654,6 +698,7 @@ impl ServingModel {
             buckets: manifest.seq_buckets.clone(),
             prefill_chunk,
             exec_cache: ExecCache::new(None),
+            paged: None,
             ranks,
         };
         m.validate_artifacts()?;
@@ -817,11 +862,11 @@ impl ServingModel {
             for (rank, worker) in self.mesh.workers.iter().enumerate() {
                 let attn = w.attn_shard(i, rank, self.ranks)?;
                 for (t, field) in attn.iter().zip(ATTN_FIELDS) {
-                    worker.store(&format!("l{i}.tp.{field}"), t.host())?;
+                    worker.store(&crate::runtime::keys::weight(i, "tp", field), t.host())?;
                 }
                 let ffn = w.ffn_shard(i, rank, self.ranks)?;
                 for (t, field) in ffn.iter().zip(FFN_FIELDS) {
-                    worker.store(&format!("l{i}.tp.{field}"), t.host())?;
+                    worker.store(&crate::runtime::keys::weight(i, "tp", field), t.host())?;
                 }
             }
         }
@@ -829,11 +874,11 @@ impl ServingModel {
             let worker = &self.mesh.workers[rank];
             let attn = w.attn_full(layer)?;
             for (t, field) in attn.iter().zip(ATTN_FIELDS) {
-                worker.store(&format!("l{layer}.full.{field}"), t.host())?;
+                worker.store(&crate::runtime::keys::weight(layer, "full", field), t.host())?;
             }
             let ffn = w.ffn_full(layer)?;
             for (t, field) in ffn.iter().zip(FFN_FIELDS) {
-                worker.store(&format!("l{layer}.full.{field}"), t.host())?;
+                worker.store(&crate::runtime::keys::weight(layer, "full", field), t.host())?;
             }
         }
         Ok(())
@@ -975,6 +1020,148 @@ impl ServingModel {
             )));
         }
         Ok(())
+    }
+
+    // ---- paged KV cache ----------------------------------------------------
+
+    /// Switch this model to paged KV serving (opt-in, idempotent): validate
+    /// the manifest's `kv_pages` geometry and the paged executable family,
+    /// upload the two zero-filled shared pools (`kvpool.{half,full}.{k,v}`,
+    /// `[P, page, w]`, resident on every rank — pool *contents* are
+    /// rank-local, exactly like the dense caches), and build the host-side
+    /// [`PagedKv`] over every registered variant's stage widths.
+    ///
+    /// After this, chunked prefill and bucketed decode dispatch the paged
+    /// attention executables against the pools; the dense per-variant
+    /// caches stay resident but are no longer written, so the fixed-`[S]`
+    /// decode fallback (no covering batch bucket) becomes an error instead
+    /// of silently reading stale rows.
+    pub fn enable_paging(&mut self) -> Result<()> {
+        if self.paged.is_some() {
+            return Ok(());
+        }
+        let kvp = self.entry.kv_pages.ok_or_else(|| {
+            Error::Serving(
+                "manifest has no kv_pages section — regenerate artifacts \
+                 with a paged-aware AOT"
+                    .into(),
+            )
+        })?;
+        let k = self.prefill_chunk.ok_or_else(|| {
+            Error::Serving(
+                "paged serving requires the chunked-prefill executable family".into(),
+            )
+        })?;
+        if kvp.page_tokens != k {
+            return Err(Error::Serving(format!(
+                "paged chunk executables cover one page per chunk step, but \
+                 page_tokens {} != prefill_chunk {k}",
+                kvp.page_tokens
+            )));
+        }
+        // every paged executable each variant can bind must exist up front
+        // (same fail-at-build contract as validate_artifacts)
+        for var in self.variants.values() {
+            for key in paged_chunk_exec_keys(&var.stages) {
+                self.entry.artifact(&key)?;
+            }
+            for &b in var.bucket_set.buckets() {
+                for key in paged_decode_exec_keys(&var.stages, b) {
+                    self.entry.artifact(&key)?;
+                }
+            }
+        }
+        let cfg = &self.entry.config;
+        for (width, pages, w) in [
+            ("half", kvp.pool_pages_half, cfg.d_model / self.ranks),
+            ("full", kvp.pool_pages_full, cfg.d_model),
+        ] {
+            let zeros =
+                HostValue::f32(vec![pages, kvp.page_tokens, w], vec![0.0; pages * kvp.page_tokens * w]);
+            for kv in ["k", "v"] {
+                let name = crate::runtime::keys::kv_pool(width, kv);
+                for worker in &self.mesh.workers {
+                    worker.store(&name, zeros.clone())?;
+                }
+            }
+        }
+        let widths: Vec<(VariantId, Vec<PageWidth>)> = self
+            .variants
+            .values()
+            .map(|v| {
+                let ws = v
+                    .stages
+                    .iter()
+                    .map(|s| match s {
+                        ServeStage::Tp(_) => PageWidth::Half,
+                        ServeStage::Lp(..) => PageWidth::Full,
+                    })
+                    .collect();
+                (v.id.clone(), ws)
+            })
+            .collect();
+        self.paged = Some(Mutex::new(PagedKv::new(&kvp, &widths, cfg.slots)));
+        Ok(())
+    }
+
+    pub fn paging_enabled(&self) -> bool {
+        self.paged.is_some()
+    }
+
+    pub(crate) fn paged_kv(&self) -> std::sync::MutexGuard<'_, PagedKv> {
+        self.paged.as_ref().expect("paged dispatch without enable_paging").lock().unwrap()
+    }
+
+    /// Tier-aware admission: the dense bounds of
+    /// [`ServingModel::check_admission`], plus — under paging — a page-pool
+    /// feasibility check. Optimistic, vLLM-style: a request is rejected
+    /// only when the pages its full `prompt + max_new` span needs can
+    /// *never* fit the logical pools, before any slot churn; transient
+    /// pressure is left to eviction.
+    pub fn check_admission_v(
+        &self,
+        vid: &VariantId,
+        prompt_len: usize,
+        max_new: usize,
+    ) -> Result<()> {
+        self.variant(vid)?;
+        self.check_admission(prompt_len, max_new)?;
+        if let Some(pg) = &self.paged {
+            let pg = pg.lock().unwrap();
+            let k = pg.page_tokens();
+            let blocks = (prompt_len + max_new).div_ceil(k).min(pg.blocks_per_slot());
+            if !pg.fits(vid, blocks) {
+                return Err(Error::Serving(format!(
+                    "request needs {blocks} KV pages per paged stage under \
+                     tier `{vid}` but the page pool can never hold them — \
+                     lower max_new_tokens or raise the pool capacity"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Release every page `slot` maps (no-op when paging is off). The
+    /// scheduler calls this wherever it frees a slot; pages held by the
+    /// shared-prefix index stay resident for future reuse.
+    pub fn release_pages(&self, slot: usize) {
+        if let Some(pg) = &self.paged {
+            pg.lock().unwrap().release_slot(slot);
+        }
+    }
+
+    /// Paged-KV counters (`None` when paging is off) — mirrored into
+    /// `ServerMetrics` by the scheduler and exported in the snapshot.
+    pub fn kv_stats(&self) -> Option<KvStats> {
+        self.paged.as_ref().map(|pg| pg.lock().unwrap().stats())
+    }
+
+    /// Shrink the logical page pools (memory-pressure knob; no-op when
+    /// paging is off). See [`PagedKv::set_page_capacity`].
+    pub fn set_page_capacity(&self, pages: usize) {
+        if let Some(pg) = &self.paged {
+            pg.lock().unwrap().set_page_capacity(pages);
+        }
     }
 
     // ---- prefill (monolithic fixed-T path) ---------------------------------
@@ -1304,6 +1491,9 @@ impl ServingModel {
                 return Err(Error::Serving(format!("decode_active: slot {slot} >= {s}")));
             }
         }
+        if self.paged.is_some() {
+            return self.decode_active_paged(var, active);
+        }
         match var.bucket_set.select(active.len()) {
             BucketChoice::Skip => Ok(vec![]),
             BucketChoice::Full => {
@@ -1358,6 +1548,180 @@ impl ServingModel {
                     .collect())
             }
         }
+    }
+
+    /// Paged decode dispatch: like the bucketed arm of
+    /// [`ServingModel::decode_active_v`], but the write position of every
+    /// live lane is mapped (with copy-on-write forking of shared blocks)
+    /// and the per-stage `[B, nb]` page-table operands are frozen under one
+    /// lock before dispatch. Paged decode *requires* a covering batch
+    /// bucket: the fixed-`[S]` fallback would read the dense caches paging
+    /// no longer writes, so it errors instead of silently diverging.
+    fn decode_active_paged(
+        &self,
+        var: &PlanVariant,
+        active: &[ActiveSlot],
+    ) -> Result<Vec<(usize, Vec<f32>)>> {
+        let v = self.entry.config.vocab;
+        match var.bucket_set.select(active.len()) {
+            BucketChoice::Skip => Ok(vec![]),
+            BucketChoice::Full => Err(Error::Serving(
+                "paged decode needs a covering batch bucket — the fixed-[S] \
+                 fallback reads the dense caches paging no longer writes"
+                    .into(),
+            )),
+            BucketChoice::Bucket(b) => {
+                let mut tokens = Vec::with_capacity(b);
+                let mut pos = Vec::with_capacity(b);
+                let mut lane_slots = Vec::with_capacity(b);
+                for &(slot, tok, p) in active {
+                    lane_slots.push(slot);
+                    tokens.push(tok);
+                    pos.push(p);
+                }
+                // pad lanes duplicate the first live lane, same as the dense
+                // bucketed path: the duplicate scatters identical bits into
+                // the same page, so padding stays benign
+                let (slot0, tok0, pos0) = active[0];
+                for _ in active.len()..b {
+                    lane_slots.push(slot0);
+                    tokens.push(tok0);
+                    pos.push(pos0);
+                }
+                let pts: Vec<Vec<i32>> = {
+                    let mut pg = self.paged_kv();
+                    let k = pg.page_tokens();
+                    for &(slot, _, p) in active {
+                        pg.ensure_block(&var.id, slot, p as usize / k)?;
+                    }
+                    (0..var.stages.len())
+                        .map(|sidx| {
+                            lane_slots
+                                .iter()
+                                .flat_map(|&slot| {
+                                    pg.page_table(&var.id, sidx, slot).to_vec()
+                                })
+                                .collect()
+                        })
+                        .collect()
+                };
+                let logits = self.decode_step_paged(var, b, &tokens, &pos, &pts)?;
+                var.bucket_set.record(b, active.len());
+                Ok(active
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &(slot, _, _))| (slot, logits[i * v..(i + 1) * v].to_vec()))
+                    .collect())
+            }
+        }
+    }
+
+    /// The paged counterpart of [`ServingModel::decode_step_shaped`]
+    /// (bucketed shape only): per stage the attention executable binds the
+    /// width-matched pools plus `pos`/`pt` — the page table does the
+    /// slot indirection, so there is no `lanes` operand. The page tables
+    /// differ per stage, so `pt` is uploaded *inside* the stage loop:
+    /// paged decode host traffic is O(stages), a cost the dense resident
+    /// path doesn't pay (the price of pool indirection). Compute/bytes are
+    /// charged exactly like the dense bucketed path — paging changes where
+    /// KV rows live, not what a token costs.
+    fn decode_step_paged(
+        &self,
+        var: &PlanVariant,
+        b: usize,
+        tokens: &[i32],
+        pos: &[i32],
+        pts: &[Vec<i32>],
+    ) -> Result<Vec<f32>> {
+        let d = self.entry.config.d_model;
+        self.ensure_execs(&paged_decode_exec_keys(&var.stages, b))?;
+        self.mesh.charge_compute(
+            b as u64 * var.flops_per_lane,
+            decode_bytes(&self.entry.config, var.layers_equiv, b),
+        );
+        self.mesh.upload_all("pos", HostValue::i32(vec![b], pos.to_vec()))?;
+
+        let mut shadow = self
+            .mesh
+            .exec_rank(
+                0,
+                &format!("embed_decode_b{b}"),
+                vec![
+                    ArgRef::Host(HostValue::i32(vec![b], tokens.to_vec())),
+                    ArgRef::Resident("emb".into()),
+                ],
+                vec![],
+                vec![],
+            )?
+            .remove(0)
+            .into_f32()?;
+        self.mesh
+            .broadcast_resident("act", &HostValue::f32(vec![b, d], shadow.clone()))?;
+
+        for (sidx, stage) in var.stages.iter().enumerate() {
+            let (attn_base, ffn_base, width) = match stage {
+                ServeStage::Tp(_) => ("tpattn_decode_paged", "tpffn_decode", "half"),
+                ServeStage::Lp(..) => ("lpattn_decode_paged", "lpffn_decode", "full"),
+            };
+            let attn_key = format!("{attn_base}_b{b}");
+            let ffn_key = format!("{ffn_base}_b{b}");
+            let poolk = crate::runtime::keys::kv_pool(width, "k");
+            let poolv = crate::runtime::keys::kv_pool(width, "v");
+            let nb = pts[sidx].len() / b;
+            self.mesh.upload_all("pt", HostValue::i32(vec![b, nb], pts[sidx].clone()))?;
+            let calls = (0..self.ranks)
+                .map(|rank| {
+                    let mut args = vec![ArgRef::Resident("act".into())];
+                    args.extend(stage_weight_args(stage, rank, &ATTN_FIELDS));
+                    args.push(ArgRef::Resident(poolk.clone()));
+                    args.push(ArgRef::Resident(poolv.clone()));
+                    args.push(ArgRef::Resident("pos".into()));
+                    args.push(ArgRef::Resident("pt".into()));
+                    (
+                        attn_key.clone(),
+                        args,
+                        vec![
+                            Some("act.partial".to_string()),
+                            Some(poolk.clone()),
+                            Some(poolv.clone()),
+                        ],
+                        vec![false, false, false],
+                    )
+                })
+                .collect();
+            self.mesh.exec_all(calls)?;
+            self.mesh.reduce_into("act.partial", &mut shadow, "act")?;
+
+            let calls = (0..self.ranks)
+                .map(|rank| {
+                    let mut args = vec![ArgRef::Resident("act".into())];
+                    args.extend(stage_weight_args(stage, rank, &FFN_FIELDS));
+                    (
+                        ffn_key.clone(),
+                        args,
+                        vec![Some("act.partial".to_string())],
+                        vec![false],
+                    )
+                })
+                .collect();
+            self.mesh.exec_all(calls)?;
+            self.mesh.reduce_into("act.partial", &mut shadow, "act")?;
+        }
+
+        self.mesh
+            .exec_rank(
+                0,
+                &format!("logits_decode_b{b}"),
+                vec![
+                    ArgRef::Resident("act".into()),
+                    ArgRef::Resident("lnf".into()),
+                    ArgRef::Resident("wout".into()),
+                ],
+                vec![],
+                vec![],
+            )?
+            .remove(0)
+            .into_f32()
     }
 
     /// Pre-refactor decode step over the default tier: uploads the
@@ -1799,6 +2163,83 @@ mod tests {
     fn m_sync_ops(m: &ServingModel) -> u64 {
         let (sync_ops, _, _, _) = m.mesh.metrics.snapshot();
         sync_ops
+    }
+
+    /// The tentpole acceptance criterion: for EVERY manifest tier, paged
+    /// chunked prefill + paged bucketed decode are bit-identical to the
+    /// dense oracle (same weights, paging off) — gathered dense math over
+    /// scattered pages changes where KV rows live, never a single bit.
+    #[test]
+    fn paged_serving_bit_identical_to_dense() {
+        let Ok(manifest) = Manifest::load_default() else { return };
+        let entry = manifest.model("td-small").unwrap().clone();
+        if entry.kv_pages.is_none() {
+            return; // artifacts predate the paged family
+        }
+        let cfg = entry.config.clone();
+        let weights = Weights::random(&cfg, 7);
+        let Ok(dense) = ServingModel::from_manifest(&manifest, "td-small", &weights, quiet())
+        else {
+            return;
+        };
+        let mut paged =
+            ServingModel::from_manifest(&manifest, "td-small", &weights, quiet()).unwrap();
+        paged.enable_paging().unwrap();
+        assert!(paged.paging_enabled());
+        assert!(paged.kv_stats().is_some());
+        // multi-chunk prompt (3 chunks of 32) exercising gather + scatter
+        let prompt: Vec<i32> = (0..77).map(|i| 40 + (i % 50)).collect();
+        for vid in dense.variant_ids() {
+            let a = dense.prefill_chunked_v(&vid, 0, &prompt).unwrap();
+            let b = paged.prefill_chunked_v(&vid, 0, &prompt).unwrap();
+            assert_eq!(a, b, "tier {vid}: paged prefill diverged from the dense oracle");
+            let mut next = crate::tensor::argmax(&a) as i32;
+            let mut p = prompt.len() as i32;
+            for round in 0..3 {
+                let ra = dense.decode_active_v(&vid, &[(0, next, p)]).unwrap();
+                let rb = paged.decode_active_v(&vid, &[(0, next, p)]).unwrap();
+                assert_eq!(
+                    ra[0].1, rb[0].1,
+                    "tier {vid} round {round}: paged decode diverged"
+                );
+                next = crate::tensor::argmax(&ra[0].1) as i32;
+                p += 1;
+            }
+            paged.release_pages(0);
+        }
+        // pages freed on release; only index-held prefix blocks survive
+        let ks = paged.kv_stats().unwrap();
+        assert!(ks.pages_in_use > 0, "the prefix index keeps shared blocks resident");
+    }
+
+    /// Paged admission prices pages: a request whose block span can never
+    /// fit the (shrunken) logical pool is rejected up front; the dense
+    /// bounds still apply; releasing restores nothing it shouldn't.
+    #[test]
+    fn paged_admission_rejects_over_pool_requests() {
+        let Ok(manifest) = Manifest::load_default() else { return };
+        let entry = manifest.model("td-small").unwrap().clone();
+        if entry.kv_pages.is_none() {
+            return;
+        }
+        let cfg = entry.config.clone();
+        let weights = Weights::random(&cfg, 7);
+        let mut m =
+            ServingModel::from_manifest(&manifest, "td-small", &weights, quiet()).unwrap();
+        let vid = m.resolve_tier(None).unwrap();
+        // dense admission unchanged before paging
+        assert!(m.check_admission_v(&vid, 40, 8).is_ok());
+        m.enable_paging().unwrap();
+        assert!(m.check_admission_v(&vid, 40, 8).is_ok(), "well-sized request admitted");
+        assert!(m.check_admission_v(&VariantId::new("nope"), 4, 1).is_err());
+        // shrink the logical pools so 2 blocks can never fit a dense-tier
+        // slot (the dense stage walk has n_layers half-width stages)
+        let k = entry.kv_pages.unwrap().page_tokens;
+        let stages = m.variant(&vid).unwrap().stages.len();
+        m.set_page_capacity(stages + 1); // 1 block fits, 2 never
+        assert!(m.check_admission_v(&vid, 1, k - 1).is_ok(), "one-block span admitted");
+        let err = m.check_admission_v(&vid, k, k).unwrap_err().to_string();
+        assert!(err.contains("page"), "{err}");
     }
 
     /// Satellite: the exec-cache cap evicts LRU executables and the next

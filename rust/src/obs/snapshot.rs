@@ -72,6 +72,22 @@ impl MetricsSnapshot {
         if let Some(s) = m.modelled_latency_summary() {
             sec.push(("modelled_latency_ms", summary_json(&s)));
         }
+        // paged-KV counters, present only when paging actually ran (gauge
+        // or any probe non-zero) so dense snapshots stay byte-stable
+        let kv_pages = m.kv_pages_in_use.load(Ordering::Relaxed);
+        let kv_lookups = m.kv_prefix_lookups.load(Ordering::Relaxed);
+        if kv_pages > 0 || kv_lookups > 0 {
+            sec.push((
+                "kv",
+                json::obj(vec![
+                    ("pages_in_use", load(&m.kv_pages_in_use)),
+                    ("prefix_lookups", load(&m.kv_prefix_lookups)),
+                    ("prefix_hits", load(&m.kv_prefix_hits)),
+                    ("prefix_shared_tokens", load(&m.kv_prefix_shared_tokens)),
+                    ("evictions", load(&m.kv_evictions)),
+                ]),
+            ));
+        }
         let tiers: BTreeMap<String, Value> = m
             .tier_stats()
             .into_iter()
@@ -221,6 +237,29 @@ mod tests {
         // strings/arrays don't leak into the metric map
         assert!(flat.keys().all(|k| k.starts_with("serve.server.")));
         assert!(!flat.contains_key("serve.server.occupancy_hist"));
+    }
+
+    /// The `kv` subsection appears only once paging has done something, so
+    /// dense-run snapshots are unchanged byte for byte.
+    #[test]
+    fn kv_section_is_gated_on_paging_activity() {
+        let m = loaded_metrics();
+        let dense = MetricsSnapshot::new("serve").with_server(&m).to_string_pretty();
+        assert!(!dense.contains("\"kv\""), "{dense}");
+        m.record_kv_stats(&crate::model::kvcache::KvStats {
+            pages_in_use: 24,
+            prefix_lookups: 2,
+            prefix_hits: 1,
+            prefix_shared_tokens: 64,
+            evictions: 0,
+        });
+        let snap = MetricsSnapshot::new("serve").with_server(&m);
+        let doc = Value::parse(&snap.to_string_pretty()).unwrap();
+        let flat = MetricsSnapshot::flatten(&doc);
+        assert_eq!(flat.get("serve.server.kv.pages_in_use"), Some(&24.0));
+        assert_eq!(flat.get("serve.server.kv.prefix_hits"), Some(&1.0));
+        assert_eq!(flat.get("serve.server.kv.prefix_shared_tokens"), Some(&64.0));
+        assert_eq!(flat.get("serve.server.kv.evictions"), Some(&0.0));
     }
 
     #[test]

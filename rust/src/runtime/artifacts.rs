@@ -12,6 +12,12 @@
 //!       "config": { vocab, d_model, n_layers, ... , slots },
 //!       "batch_buckets": [1, 2, 4],         // decode B buckets (per model,
 //!                                           // derived from `slots`)
+//!       "kv_pages": {                       // paged-KV pool geometry
+//!           "page_tokens": 32,              //   tokens per page (divides
+//!                                           //   prefill_chunk and ctx)
+//!           "blocks_per_slot": 8,           //   ctx / page_tokens
+//!           "pool_pages_half": 513,         //   per-width pool page counts
+//!           "pool_pages_full": 321 },       //   (incl. scratch page 0)
 //!       "variants": {                       // plan-variant registry
 //!           "dense":   { "stages": [[0], [1], ...] },
 //!           "lp":      { "stages": [[0], [1], [2, 3], ...] },
@@ -39,6 +45,29 @@
 //! section is optional: legacy manifests parse with `None` and
 //! `model::prefill` then routes every prompt through the monolithic
 //! fixed-`T` path in a single step.
+//!
+//! ## Paged KV cache (`kv_pages`)
+//!
+//! `kv_pages` (added with the paged-KV subsystem) records the page-pool
+//! geometry the paged attention executables were lowered against. Instead
+//! of one dense `[S, C, w]` cache per stage per tier, K/V rows live in two
+//! shared per-rank pools — `kvpool.half.{k,v}` shaped
+//! `[pool_pages_half, page_tokens, D/2]` for TP stages and
+//! `kvpool.full.{k,v}` shaped `[pool_pages_full, page_tokens, D]` for LP
+//! stages — and the paged executables (`{tp,lp}attn_chunk_paged`,
+//! `{tp,lp}attn_decode_paged_b{B}`) reach a sequence's rows through an
+//! `i32` page-table operand `pt` (`[blocks_per_slot]` per chunk step,
+//! `[B, blocks_per_slot]` per decode bucket) that maps context block `j`
+//! to a pool page id. Page 0 is reserved scratch: unmapped table entries
+//! point at it, and the causal mask keeps its (finite) garbage out of
+//! every output bit. Pool page counts are the dense-equivalent worst case
+//! (every stage of every variant × slots × blocks, + scratch), so a
+//! runtime that admits what dense admitted never exhausts the compiled
+//! pool shape; tighter budgets are runtime policy
+//! (`model::kvcache::PagedKv::set_page_capacity`). The section is
+//! optional — and paging is opt-in at runtime even when present
+//! (`model::serving::ServingModel::enable_paging`); the dense caches
+//! remain the bit-exactness oracle.
 //!
 //! ## Plan-variant registry (`variants`)
 //!
@@ -74,6 +103,11 @@
 //!   executables are a warning (the runtime falls back to fixed-`[S]`).
 //! * **Buckets/chunk** — `batch_buckets` unique and within `slots`;
 //!   `prefill_chunk` divides every model's `ctx`.
+//! * **KV pages** — when `kv_pages` is present: `page_tokens` divides
+//!   `prefill_chunk` and `ctx` (`blocks_per_slot` consistent), and each
+//!   pool holds at least one slot-worth of blocks per configured slot plus
+//!   the scratch page (`slots · blocks_per_slot + 1`) so admission can
+//!   always place the dense-equivalent working set.
 //! * **Bindings** — abstract interpretation of each variant's dispatch
 //!   sequence: every resident buffer is written before read, no executable
 //!   is used after release, and every weight key (`l{i}.tp.*` /
@@ -211,12 +245,39 @@ impl VariantSpec {
     }
 }
 
+/// Paged-KV pool geometry (the per-model `kv_pages` manifest section —
+/// see the module docs). `page_tokens` rows of one stage of one sequence
+/// per page; pool page counts include the reserved scratch page 0.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KvPages {
+    /// Tokens per page (the vLLM block size). Divides `prefill_chunk` and
+    /// every model `ctx`.
+    pub page_tokens: usize,
+    /// Page-table length: `ctx / page_tokens`.
+    pub blocks_per_slot: usize,
+    /// Pages in the half-width pool (TP stages, w = D/2 per rank).
+    pub pool_pages_half: usize,
+    /// Pages in the full-width pool (LP stages, w = D per rank).
+    pub pool_pages_full: usize,
+}
+
+impl KvPages {
+    /// Minimum pool size admission relies on: every configured slot can
+    /// hold a full context of one stage, plus the scratch page.
+    pub fn min_pool_pages(&self, slots: usize) -> usize {
+        slots * self.blocks_per_slot + 1
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct ModelEntry {
     pub config: ModelConfig,
     /// Decode batch buckets with compiled per-bucket executables (ascending;
     /// empty for manifests predating the `batch_buckets` section).
     pub batch_buckets: Vec<usize>,
+    /// Paged-KV pool geometry (`None` for manifests predating the
+    /// `kv_pages` section — serving then has no paged path to opt into).
+    pub kv_pages: Option<KvPages>,
     /// Plan-variant registry: the serving tiers this weight set supports,
     /// in `VariantId` order. Manifests predating the `variants` section
     /// get a single synthesized `dense` (sequential) variant.
@@ -313,6 +374,31 @@ impl Manifest {
                     batch_buckets.push(b);
                 }
             }
+            // Strict kv_pages parsing: a malformed geometry must error here
+            // rather than silently serving unpaged (the paged executables
+            // were lowered against these exact pool shapes).
+            let kv_pages = match entry.get("kv_pages") {
+                None | Some(Value::Null) => None,
+                Some(kp) => {
+                    let u = |k: &str| -> Result<usize> {
+                        kp.req(k)?
+                            .as_f64()
+                            .filter(|f| f.fract() == 0.0 && *f > 0.0)
+                            .map(|f| f as usize)
+                            .ok_or_else(|| {
+                                Error::msg(format!(
+                                    "{mname}: `kv_pages.{k}` must be a positive integer"
+                                ))
+                            })
+                    };
+                    Some(KvPages {
+                        page_tokens: u("page_tokens")?,
+                        blocks_per_slot: u("blocks_per_slot")?,
+                        pool_pages_half: u("pool_pages_half")?,
+                        pool_pages_full: u("pool_pages_full")?,
+                    })
+                }
+            };
             let mut variants = BTreeMap::new();
             if let Some(vsec) = entry.get("variants") {
                 let vs = vsec.as_obj().ok_or_else(|| {
@@ -402,7 +488,7 @@ impl Manifest {
             }
             models.insert(
                 mname.clone(),
-                ModelEntry { config, batch_buckets, variants, artifacts },
+                ModelEntry { config, batch_buckets, kv_pages, variants, artifacts },
             );
         }
         let mut seq_buckets: Vec<usize> = Vec::new();
@@ -554,6 +640,57 @@ mod tests {
                 let (_, dt, shape) = &a.args[i];
                 assert_eq!(dt, "int32");
                 assert!(shape.is_empty(), "slot/off/valid are scalars");
+            }
+        }
+    }
+
+    #[test]
+    fn kv_pages_section_and_paged_artifacts_are_consistent() {
+        let Some(m) = manifest() else { return };
+        let chunk = m.prefill_chunk.expect("prefill_chunk");
+        for entry in m.models.values() {
+            let cfg = &entry.config;
+            let kp = entry
+                .kv_pages
+                .expect("manifest predates kv_pages — re-run `make artifacts`");
+            assert_eq!(chunk % kp.page_tokens, 0, "page must divide chunk");
+            assert_eq!(kp.blocks_per_slot * kp.page_tokens, cfg.ctx);
+            assert!(kp.pool_pages_half >= kp.min_pool_pages(cfg.slots));
+            assert!(kp.pool_pages_full >= kp.min_pool_pages(cfg.slots));
+
+            let a = entry.artifact("tpattn_chunk_paged").unwrap();
+            let names: Vec<&str> = a.args.iter().map(|(n, _, _)| n.as_str()).collect();
+            assert_eq!(
+                names,
+                ["h", "ln1", "wq", "wk", "wv", "wo", "kpool", "vpool", "pt", "off", "valid"]
+            );
+            assert_eq!(
+                a.args[6].2,
+                vec![kp.pool_pages_half, kp.page_tokens, cfg.d_model / 2],
+                "half pool shape"
+            );
+            let (_, dt, shape) = &a.args[8];
+            assert_eq!(dt, "int32");
+            assert_eq!(shape, &vec![kp.blocks_per_slot], "pt is [nblocks]");
+
+            let lp = entry.artifact("lpattn_chunk_paged").unwrap();
+            assert_eq!(
+                lp.args[6].2,
+                vec![kp.pool_pages_full, kp.page_tokens, cfg.d_model],
+                "full pool shape"
+            );
+
+            for &b in &entry.batch_buckets {
+                let a = entry.artifact(&format!("tpattn_decode_paged_b{b}")).unwrap();
+                let names: Vec<&str> =
+                    a.args.iter().map(|(n, _, _)| n.as_str()).collect();
+                assert_eq!(
+                    names,
+                    ["x", "ln1", "wq", "wk", "wv", "wo", "kpool", "vpool", "pos", "pt"]
+                );
+                let (_, dt, shape) = &a.args[9];
+                assert_eq!(dt, "int32");
+                assert_eq!(shape, &vec![b, kp.blocks_per_slot], "pt is [B, nblocks]");
             }
         }
     }

@@ -365,6 +365,25 @@ pub fn prefill_bytes(
     4 * (weights + kv)
 }
 
+/// Modelled device compute a follower request SAVES by attaching
+/// `shared_tokens` of prefix from the paged-KV index instead of prefilling
+/// them (`model::kvcache::PagedKv::attach_prefix`): exactly the chunk
+/// charges the skipped steps would have incurred — `Σ_j prefill_flops(j·k,
+/// k, 0)` over the skipped chunks, none of which is final (the final chunk
+/// is never shared), so no logits rows. By additivity of the prefill model
+/// over contiguous splits this equals one `[0, shared_tokens)` pass.
+/// `shared_tokens` is a whole number of blocks (`attach_prefix` only
+/// matches full blocks of the page size `k`).
+pub fn prefix_shared_flops(
+    cfg: &ModelConfig,
+    layers_equiv: usize,
+    shared_tokens: usize,
+    k: usize,
+) -> u64 {
+    debug_assert!(k > 0 && shared_tokens % k == 0, "shared prefix is whole blocks");
+    (0..shared_tokens / k).map(|j| prefill_flops(cfg, layers_equiv, j * k, k, 0)).sum()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -481,6 +500,41 @@ mod tests {
             prefill_flops(&cfg, 6, 64, 32, 0) > prefill_flops(&cfg, 6, 0, 32, 0),
             "prefix-proportional attention charge missing"
         );
+    }
+
+    /// The prefix-reuse saving is honest: it equals the sum of the chunk
+    /// charges the follower skips, which (by additivity of the prefill
+    /// model over contiguous splits) is one logits-free pass over the
+    /// shared tokens — and the follower's remaining charge tops it back up
+    /// to the full-prompt total.
+    #[test]
+    fn prefix_shared_flops_matches_the_skipped_chunk_charges() {
+        let cfg = ModelConfig {
+            name: "t".into(),
+            vocab: 260,
+            d_model: 128,
+            n_layers: 12,
+            n_heads: 4,
+            head_dim: 32,
+            d_ff: 256,
+            ctx: 256,
+            slots: 4,
+        };
+        let (le, k) = (6, 32);
+        let saved = prefix_shared_flops(&cfg, le, 3 * k, k);
+        let by_chunks = prefill_flops(&cfg, le, 0, k, 0)
+            + prefill_flops(&cfg, le, k, k, 0)
+            + prefill_flops(&cfg, le, 2 * k, k, 0);
+        assert_eq!(saved, by_chunks);
+        assert_eq!(saved, prefill_flops(&cfg, le, 0, 3 * k, 0), "additive over splits");
+        // saving + the follower's one remaining (final, logits-bearing)
+        // chunk = the leader's full 4-chunk prompt charge
+        let follower = prefill_flops(&cfg, le, 3 * k, k, k);
+        let leader: u64 = (0..4)
+            .map(|j| prefill_flops(&cfg, le, j * k, k, if j == 3 { k } else { 0 }))
+            .sum();
+        assert_eq!(saved + follower, leader);
+        assert_eq!(prefix_shared_flops(&cfg, le, 0, k), 0, "no match, no saving");
     }
 
     #[test]

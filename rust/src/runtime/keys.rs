@@ -1,0 +1,86 @@
+//! Resident-buffer key schema, shared by the weight loader, the serving
+//! dispatch paths and the static verifier.
+//!
+//! Every buffer the mesh holds resident is addressed by a string name, and
+//! three subsystems must agree on the naming scheme: `ServingModel`'s
+//! upload/dispatch code writes and binds the names, the trace emitters
+//! mirror them into [`crate::verify::DispatchTrace`]s, and
+//! `verify::binding_check` classifies a missing read by which schema family
+//! the name belongs to. Pre-refactor each site format!-ed its own copy;
+//! this module is the single constructor set so a schema change cannot
+//! drift between the loader, the hot path and the checker.
+//!
+//! Families:
+//!
+//! * `l{i}.tp.{field}` / `l{i}.full.{field}` — layer weights, keyed by
+//!   layer index and sharding form ([`weight`]);
+//! * `emb`, `lnf`, `wout` — the rank-0 embedding/head set;
+//! * `kv.{tier}.{k|v}.{sidx}` — the dense per-variant KV caches
+//!   ([`kv_cache`]);
+//! * `kvpool.{half|full}.{k|v}` — the shared paged KV pools, one per cache
+//!   width, tier-agnostic ([`kv_pool`]).
+
+use crate::runtime::VariantId;
+
+/// Embedding/head weights owned by rank 0.
+pub const HEAD_WEIGHT_KEYS: [&str; 3] = ["emb", "lnf", "wout"];
+
+/// Layer-weight resident name: `l{layer}.{form}.{field}` where `form` is
+/// `tp` (this rank's Megatron shard) or `full` (the full-width copy an LP
+/// stage binds).
+pub fn weight(layer: usize, form: &str, field: &str) -> String {
+    format!("l{layer}.{form}.{field}")
+}
+
+/// Dense KV-cache resident name of one variant stage (`kv` ∈ {k, v}).
+pub fn kv_cache(vid: &VariantId, kv: &str, sidx: usize) -> String {
+    format!("kv.{vid}.{kv}.{sidx}")
+}
+
+/// Paged KV-pool resident name (`width` ∈ {half, full}, `kv` ∈ {k, v}) —
+/// one `[P, page, w]` pool per cache width, shared by every tier and slot.
+pub fn kv_pool(width: &str, kv: &str) -> String {
+    format!("kvpool.{width}.{kv}")
+}
+
+/// Does `name` follow the weight-key schema (embedding/head set or a
+/// `l{i}.tp.* / l{i}.full.*` layer key)?
+pub fn is_weight_key(name: &str) -> bool {
+    HEAD_WEIGHT_KEYS.contains(&name)
+        || (name.starts_with('l') && (name.contains(".tp.") || name.contains(".full.")))
+}
+
+/// Does `name` follow the KV schema (a dense per-variant cache or a shared
+/// paged pool)?
+pub fn is_kv_key(name: &str) -> bool {
+    name.starts_with("kv.") || name.starts_with("kvpool.")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_match_the_documented_schema() {
+        assert_eq!(weight(3, "tp", "wq"), "l3.tp.wq");
+        assert_eq!(weight(0, "full", "ln2"), "l0.full.ln2");
+        assert_eq!(kv_cache(&VariantId::new("lp"), "k", 4), "kv.lp.k.4");
+        assert_eq!(kv_pool("half", "v"), "kvpool.half.v");
+    }
+
+    #[test]
+    fn recognizers_classify_every_family() {
+        for name in ["emb", "lnf", "wout", "l0.tp.wq", "l11.full.wd"] {
+            assert!(is_weight_key(name), "{name}");
+            assert!(!is_kv_key(name), "{name}");
+        }
+        for name in ["kv.dense.k.0", "kv.lp_aggr.v.7", "kvpool.half.k", "kvpool.full.v"] {
+            assert!(is_kv_key(name), "{name}");
+            assert!(!is_weight_key(name), "{name}");
+        }
+        // names outside both schemas (activations, scalars) match neither
+        for name in ["act", "act.partial", "pos", "lanes", "slot", "pt", "tmp.k"] {
+            assert!(!is_weight_key(name) && !is_kv_key(name), "{name}");
+        }
+    }
+}

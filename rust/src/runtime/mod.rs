@@ -6,8 +6,11 @@
 
 pub mod artifacts;
 pub mod buckets;
+pub mod keys;
 pub mod pjrt;
 
-pub use artifacts::{ArtifactInfo, Manifest, ModelConfig, ModelEntry, VariantId, VariantSpec};
+pub use artifacts::{
+    ArtifactInfo, KvPages, Manifest, ModelConfig, ModelEntry, VariantId, VariantSpec,
+};
 pub use buckets::{BucketChoice, BucketSet, BucketStats, ExecCache, ExecCacheStats};
 pub use pjrt::Engine;

@@ -17,15 +17,15 @@ use crate::runtime::VariantId;
 use super::trace::{DispatchTrace, TraceOp};
 use super::{Check, Diagnostic};
 
-/// Classify a missing-read diagnostic by the name's key schema.
+/// Classify a missing-read diagnostic by the name's key schema — the
+/// recognizers live in [`crate::runtime::keys`], the same module the
+/// loader and the dispatch paths build the names from, so the checker
+/// cannot drift from the schema it checks. Covers both the dense
+/// per-variant caches (`kv.*`) and the shared paged pools (`kvpool.*`).
 fn missing_read_code(name: &str) -> &'static str {
-    if name.starts_with("kv.") {
+    if crate::runtime::keys::is_kv_key(name) {
         "binding.missing-kv-key"
-    } else if name == "emb"
-        || name == "lnf"
-        || name == "wout"
-        || (name.starts_with('l') && (name.contains(".tp.") || name.contains(".full.")))
-    {
+    } else if crate::runtime::keys::is_weight_key(name) {
         "binding.missing-weight-key"
     } else {
         "binding.read-before-write"
@@ -263,7 +263,12 @@ mod tests {
                 key: "k".into(),
                 per_rank: vec![
                     RankIo {
-                        reads: vec!["l0.tp.wq".into(), "kv.lp.k.0".into(), "lnf".into()],
+                        reads: vec![
+                            "l0.tp.wq".into(),
+                            "kv.lp.k.0".into(),
+                            "kvpool.half.k".into(),
+                            "lnf".into(),
+                        ],
                         writes: vec![],
                     },
                     RankIo { reads: vec![], writes: vec![] },
@@ -271,7 +276,14 @@ mod tests {
             },
         ]);
         let d = binding_check("m", &vid(), &t, &residents_with(&["lnf"]));
-        assert_eq!(codes(&d), vec!["binding.missing-weight-key", "binding.missing-kv-key"]);
+        assert_eq!(
+            codes(&d),
+            vec![
+                "binding.missing-weight-key",
+                "binding.missing-kv-key",
+                "binding.missing-kv-key"
+            ]
+        );
     }
 
     #[test]

@@ -6,7 +6,12 @@
 //! forming a contiguous band (warning — a gapped band is servable but
 //! almost certainly a manifest typo), and every executable the stage walk
 //! binds present in the `artifacts` section. Per model: batch buckets
-//! within the slot count and unique, `prefill_chunk` dividing `ctx`.
+//! within the slot count and unique, `prefill_chunk` dividing `ctx`, and —
+//! when the manifest carries a `kv_pages` section — the paged-KV geometry
+//! consistent (`page_tokens` dividing `prefill_chunk` so a chunk step
+//! never straddles a partial page, and each pool at least
+//! `slots × blocks_per_slot + 1` pages so a fully dense occupancy plus the
+//! scratch page fits without eviction).
 
 use crate::model::plan::GraphPlan;
 use crate::model::serving::{chunk_exec_keys, decode_exec_keys, prefill_exec_keys, serve_stages};
@@ -60,6 +65,41 @@ pub fn check_model(
                     cfg.ctx
                 ),
             ));
+        }
+    }
+    if let Some(kvp) = &entry.kv_pages {
+        if let Some(k) = prefill_chunk {
+            if kvp.page_tokens == 0 || k % kvp.page_tokens != 0 {
+                diags.push(Diagnostic::error(
+                    Check::Plan,
+                    model,
+                    None,
+                    "plan.page-not-dividing-chunk",
+                    format!(
+                        "kv_pages page_tokens {} does not divide prefill_chunk {k} — a \
+                         chunk step would straddle a partial page",
+                        kvp.page_tokens
+                    ),
+                ));
+            }
+        }
+        let min = kvp.min_pool_pages(cfg.slots);
+        for (pool, pages) in
+            [("half", kvp.pool_pages_half), ("full", kvp.pool_pages_full)]
+        {
+            if pages < min {
+                diags.push(Diagnostic::error(
+                    Check::Plan,
+                    model,
+                    None,
+                    "plan.page-pool-too-small",
+                    format!(
+                        "kv_pages pool_pages_{pool} = {pages} is below the minimum {min} \
+                         ({} slots × {} blocks + the scratch page)",
+                        cfg.slots, kvp.blocks_per_slot
+                    ),
+                ));
+            }
         }
     }
 
@@ -224,6 +264,7 @@ mod tests {
         ModelEntry {
             config: mini_cfg(),
             batch_buckets: vec![],
+            kv_pages: None,
             variants,
             artifacts: BTreeMap::new(),
         }
@@ -266,6 +307,7 @@ mod tests {
         let gapped = ModelEntry {
             config: cfg,
             batch_buckets: vec![],
+            kv_pages: None,
             variants,
             artifacts: BTreeMap::new(),
         };
@@ -303,6 +345,58 @@ mod tests {
         assert!(c.contains(&"plan.chunk-not-dividing-ctx"), "{d:?}");
         assert!(c.contains(&"plan.chunk-missing-executable"), "{d:?}");
         assert!(c.contains(&"plan.bucket-missing-executable"), "{d:?}");
+    }
+
+    #[test]
+    fn kv_pages_geometry_violations() {
+        use crate::runtime::KvPages;
+        // mini_cfg: ctx 64, slots 2. page 24 does not divide chunk 32;
+        // pools of 9 cover 2 slots × 4 blocks + scratch exactly
+        let mut e = entry_with(vec![vec![0], vec![1], vec![2], vec![3]]);
+        e.kv_pages = Some(KvPages {
+            page_tokens: 24,
+            blocks_per_slot: 4,
+            pool_pages_half: 9,
+            pool_pages_full: 9,
+        });
+        let d = check_model("m", &e, &[], Some(32));
+        let c = codes(&d);
+        assert!(c.contains(&"plan.page-not-dividing-chunk"), "{d:?}");
+        assert!(!c.contains(&"plan.page-pool-too-small"), "{d:?}");
+
+        // page geometry fine, but the half pool is one page short of the
+        // minimum 2 slots × 2 blocks + scratch = 5
+        e.kv_pages = Some(KvPages {
+            page_tokens: 32,
+            blocks_per_slot: 2,
+            pool_pages_half: 4,
+            pool_pages_full: 5,
+        });
+        let d = check_model("m", &e, &[], Some(32));
+        let small: Vec<_> =
+            d.iter().filter(|x| x.code == "plan.page-pool-too-small").collect();
+        assert_eq!(small.len(), 1, "{d:?}");
+        assert!(small[0].message.contains("pool_pages_half"), "{}", small[0]);
+        assert!(!codes(&d).contains(&"plan.page-not-dividing-chunk"), "{d:?}");
+
+        // a well-formed section raises neither code; without prefill_chunk
+        // the divisibility check is vacuous
+        e.kv_pages = Some(KvPages {
+            page_tokens: 32,
+            blocks_per_slot: 2,
+            pool_pages_half: 5,
+            pool_pages_full: 5,
+        });
+        let d = check_model("m", &e, &[], Some(32));
+        assert!(d.iter().all(|x| !x.code.starts_with("plan.page-")), "{d:?}");
+        e.kv_pages = Some(KvPages {
+            page_tokens: 24,
+            blocks_per_slot: 2,
+            pool_pages_half: 5,
+            pool_pages_full: 5,
+        });
+        let d = check_model("m", &e, &[], None);
+        assert!(!codes(&d).contains(&"plan.page-not-dividing-chunk"), "{d:?}");
     }
 
     #[test]

@@ -42,6 +42,9 @@ fn every_malformed_corpus_entry_fails_with_its_diagnostic() {
         // model-level plan findings
         ("bucket_exceeds_slots", "plan.bucket-exceeds-slots", false),
         ("chunk_not_dividing_ctx", "plan.chunk-not-dividing-ctx", false),
+        // paged-KV geometry findings (kv_pages section)
+        ("page_not_dividing_chunk", "plan.page-not-dividing-chunk", false),
+        ("page_pool_too_small", "plan.page-pool-too-small", false),
     ];
     for (case, want, qualified) in cases {
         let err = Manifest::load(&corpus(case))
