@@ -23,11 +23,11 @@
 
 use std::sync::Arc;
 
+use truedepth::api::CompletionRequest;
 use truedepth::cli::Args;
 use truedepth::config::ServerConfig;
 use truedepth::coordinator::router::Router;
-use truedepth::coordinator::{RequestOptions, Server};
-use truedepth::gen::Sampler;
+use truedepth::coordinator::Server;
 use truedepth::harness::{default_net, ScoringCtx};
 use truedepth::model::{transform, ServingModel};
 use truedepth::obs::{MetricsSnapshot, Tracer};
@@ -101,7 +101,7 @@ fn main() -> truedepth::Result<()> {
     // index prefills those leading blocks once, later requests attach them
     const SYSTEM_PROMPT: &str = "system: you are a terse assistant. answer only from the \
          provided context, cite sources, never speculate. ";
-    let rxs: Vec<_> = (0..n_requests)
+    let handles: Vec<_> = (0..n_requests)
         .map(|i| {
             let doc = corpus::eval_doc(DATA_SEED, 5000 + i as u64);
             let snippet = &doc[..doc.len().min(if paged { 16 } else { 64 })];
@@ -110,19 +110,18 @@ fn main() -> truedepth::Result<()> {
             } else {
                 snippet.to_string()
             };
-            let backend = router.pick(model_name)?;
-            let tier = multi.then(|| tiers[i % tiers.len()].clone());
-            backend.submit(
-                &prompt,
-                RequestOptions { max_new_tokens: max_new, sampler: Sampler::Greedy, tier },
-            )
+            let mut req = CompletionRequest::new(prompt).max_tokens(max_new);
+            if multi {
+                req = req.tier(&tiers[i % tiers.len()]);
+            }
+            router.route(model_name, req)
         })
         .collect::<truedepth::Result<_>>()?;
 
     let mut ok = 0usize;
     let mut tokens = 0usize;
-    for rx in rxs {
-        let resp = rx.recv().map_err(|_| truedepth::Error::msg("lost response"))?;
+    for h in handles {
+        let resp = h.wait()?;
         assert!(resp.error.is_none(), "request failed: {:?}", resp.error);
         assert!(resp.generated_tokens() > 0);
         ok += 1;

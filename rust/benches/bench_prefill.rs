@@ -8,8 +8,8 @@
 use truedepth::bench::Bench;
 use truedepth::cli::Args;
 use truedepth::config::ServerConfig;
-use truedepth::coordinator::{RequestOptions, Server};
-use truedepth::gen::Sampler;
+use truedepth::api::CompletionRequest;
+use truedepth::coordinator::Server;
 use truedepth::harness::{default_net, no_net};
 use truedepth::model::{transform, ServingModel, Weights};
 use truedepth::obs::{MetricsSnapshot, Tracer};
@@ -191,9 +191,9 @@ fn main() {
             ServingModel::new(&manifest, "td-small", &weights, &plan, default_net()).unwrap();
         if sim.prefill_chunk().is_some() {
             let server = Server::start(sim, &ServerConfig::default());
-            let opts = RequestOptions { max_new_tokens: 4, sampler: Sampler::Greedy, tier: None };
             // BOS + 76 bytes = 77 prompt tokens (3 chunks of K = 32)
-            let resp = server.submit_blocking(&"x".repeat(76), opts).unwrap();
+            let req = CompletionRequest::new("x".repeat(76)).max_tokens(4);
+            let resp = server.request(req).unwrap().wait().unwrap();
             assert!(resp.error.is_none(), "{:?}", resp.error);
             let ttft = server.metrics.modelled_ttft_summary().unwrap().p50;
             let tps = server.metrics.modelled_decode_tok_per_s().unwrap();

@@ -1,0 +1,197 @@
+//! `docs/api.md` generator: the committed file is rendered FROM the
+//! schema types in this module's parent, so the docs cannot drift from
+//! the wire format. Regenerate with `truedepth apidoc > docs/api.md`;
+//! the drift test below pins the committed file to the rendered text.
+
+use std::fmt::Write as _;
+
+use super::{ApiError, CompletionChunk, CompletionRequest, CompletionResponse, ErrorCode};
+
+/// One-line "when you get this" note per error code, for the docs table.
+fn describe(code: ErrorCode) -> &'static str {
+    match code {
+        ErrorCode::InvalidRequest => {
+            "Malformed JSON, unknown/duplicate field, wrong type, empty prompt, \
+             or admission bounds (prompt length, `max_tokens`)"
+        }
+        ErrorCode::NotFound => "Unknown route",
+        ErrorCode::UnknownTier => {
+            "`tier` names no manifest plan variant (the message lists the available tiers)"
+        }
+        ErrorCode::Overloaded => {
+            "Queue back-pressure or KV page pools exhausted; retry later, unchanged"
+        }
+        ErrorCode::Internal => "Model or runtime fault",
+    }
+}
+
+/// The example payloads the docs embed — also exercised by the wire-shape
+/// tests in the parent module, so the documented bytes are tested bytes.
+fn fixtures() -> (CompletionRequest, CompletionChunk, CompletionResponse, ApiError) {
+    let request = CompletionRequest::new("the red fox").max_tokens(8).tier("lp").stream(true);
+    let chunk = CompletionChunk { id: 42, index: 0, token: 104, text: "h".into() };
+    let response = CompletionResponse {
+        id: 42,
+        tier: Some("lp".into()),
+        text: "hi".into(),
+        tokens: vec![104, 105],
+        prompt_tokens: 5,
+        ttft_ms: 12.0,
+        latency_ms: 96.0,
+    };
+    let error = ApiError::new(ErrorCode::Overloaded, "queue full (back-pressure)");
+    (request, chunk, response, error)
+}
+
+/// Render the full `docs/api.md` text.
+pub fn render_api_md() -> String {
+    let (request, chunk, response, error) = fixtures();
+    let mut md = String::new();
+    md.push_str(
+        "# truedepth serving API (v1)\n\
+         \n\
+         > GENERATED from `rust/src/api/` — edit that module, then regenerate\n\
+         > with `truedepth apidoc > docs/api.md`. A drift test pins this file\n\
+         > to the schema (`api::docs`).\n\
+         \n\
+         ## Endpoints\n\
+         \n\
+         | Method | Path | Description |\n\
+         |---|---|---|\n\
+         | POST | `/v1/completions` | Run a completion; set `\"stream\": true` for per-token SSE |\n\
+         | GET | `/healthz` | Liveness probe: `200 ok` while the scheduler runs |\n\
+         | GET | `/metrics` | JSON metrics snapshot (schema `truedepth.metrics/v1`) |\n\
+         \n\
+         ## POST /v1/completions\n\
+         \n\
+         Request body (`Content-Type: application/json`):\n\
+         \n\
+         ```json\n",
+    );
+    let _ = writeln!(md, "{}", request.to_json());
+    md.push_str(
+        "```\n\
+         \n\
+         | Field | Type | Default | Meaning |\n\
+         |---|---|---|---|\n\
+         | `prompt` | string | required | Text to complete |\n\
+         | `max_tokens` | int >= 1 | 32 | Generation budget (validated at admission) |\n\
+         | `tier` | string | model default | Serving tier: a manifest plan variant (e.g. `dense`, `lp`, `lp_aggr`) |\n\
+         | `stream` | bool | false | Stream tokens as SSE instead of one JSON body |\n\
+         | `top_k` | int >= 1 | greedy | Switch to top-k sampling with this k |\n\
+         | `temperature` | number > 0 | 1 | Softmax temperature (top-k only) |\n\
+         | `seed` | int >= 0 | 0 | Sampling seed (top-k only) |\n\
+         \n\
+         Unknown fields, duplicate fields and wrong types are rejected with\n\
+         `400 invalid_request`.\n\
+         \n\
+         ### Non-streaming response\n\
+         \n\
+         `200 OK`, `Content-Type: application/json`:\n\
+         \n\
+         ```json\n",
+    );
+    let _ = writeln!(md, "{}", response.to_json());
+    md.push_str(
+        "```\n\
+         \n\
+         `completion_tokens` always equals the length of `tokens`; `tier` names\n\
+         the plan variant that decoded the request.\n\
+         \n\
+         ### Streaming response (`\"stream\": true`)\n\
+         \n\
+         `200 OK`, `Content-Type: text/event-stream`, chunked transfer. One SSE\n\
+         event per generated token:\n\
+         \n\
+         ```\n",
+    );
+    let _ = writeln!(md, "data: {}", chunk.to_json());
+    md.push_str(
+        "```\n\
+         \n\
+         After the last token the final response object (the non-streaming\n\
+         shape above) arrives as one more `data:` event, then the terminator:\n\
+         \n\
+         ```\n",
+    );
+    let _ = writeln!(md, "data: {}\n", response.to_json());
+    md.push_str(
+        "data: [DONE]\n\
+         ```\n\
+         \n\
+         If the request is rejected at admission, the error status and envelope\n\
+         are sent instead of a stream (the first scheduler event decides the\n\
+         HTTP status line).\n\
+         \n\
+         ## Errors\n\
+         \n\
+         Failures use one envelope shape:\n\
+         \n\
+         ```json\n",
+    );
+    let _ = writeln!(md, "{}", error.to_json());
+    md.push_str(
+        "```\n\
+         \n\
+         | Code | HTTP | When |\n\
+         |---|---|---|\n",
+    );
+    for code in ErrorCode::ALL {
+        let _ =
+            writeln!(md, "| `{}` | {} | {} |", code.as_str(), code.http_status(), describe(code));
+    }
+    md.push_str(
+        "\n\
+         Rejections (`invalid_request`, `unknown_tier`, `overloaded`) happen\n\
+         before any KV slot is claimed: overload sheds load with zero slot\n\
+         churn.\n\
+         \n\
+         ## GET /healthz\n\
+         \n\
+         `200 OK`, body `ok`.\n\
+         \n\
+         ## GET /metrics\n\
+         \n\
+         `200 OK`, `Content-Type: application/json`: the live server's\n\
+         `obs::MetricsSnapshot` document (schema `truedepth.metrics/v1`).\n",
+    );
+    md
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Satellite: the committed `docs/api.md` IS the rendered schema —
+    /// any edit to the wire format that forgets to regenerate the docs
+    /// (or any hand edit to the docs) fails here.
+    #[test]
+    fn committed_api_md_matches_rendered_schema() {
+        // anchored to the crate manifest, not repo_root(): this test must
+        // run even where artifacts/TRUEDEPTH_ROOT are absent (tier-1 CI)
+        let path =
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../docs/api.md");
+        let committed = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("docs/api.md must exist at {}: {e}", path.display()));
+        let rendered = render_api_md();
+        assert!(
+            committed == rendered,
+            "docs/api.md has drifted from the schema — regenerate with \
+             `truedepth apidoc > docs/api.md`"
+        );
+    }
+
+    #[test]
+    fn rendered_docs_embed_the_tested_fixtures() {
+        let md = render_api_md();
+        let (request, chunk, response, error) = super::fixtures();
+        for payload in
+            [request.to_json(), chunk.to_json(), response.to_json(), error.to_json()]
+        {
+            assert!(md.contains(&payload), "fixture missing from docs: {payload}");
+        }
+        for code in ErrorCode::ALL {
+            assert!(md.contains(code.as_str()), "code missing from docs: {}", code.as_str());
+        }
+    }
+}

@@ -1,0 +1,629 @@
+//! Typed completions API schema — the ONE definition of the wire format.
+//!
+//! Both entry points speak these types: the in-process path
+//! (`coordinator::Server::request` takes a [`CompletionRequest`] and
+//! replies with [`CompletionResponse`] / streamed [`CompletionChunk`]s)
+//! and the HTTP edge (`serve::` decodes request bodies into the same
+//! struct and encodes the same structs back out). Field names are
+//! versioned constants ([`fields`]); JSON encode/decode goes through
+//! `util::json`'s event reader + [`JsonWriter`](crate::util::json::JsonWriter)
+//! so a request body never round-trips through a DOM.
+//!
+//! The error taxonomy lives here too: every [`Error`] variant maps to a
+//! stable machine-readable [`ErrorCode`] + HTTP status (asserted in a
+//! table-driven test), and failures cross the wire as [`ApiError`].
+//!
+//! `docs/api.md` is GENERATED from this module (`truedepth apidoc`,
+//! [`docs::render_api_md`]) and a drift test pins the committed file to
+//! the rendered text — the docs cannot disagree with the code.
+
+pub mod docs;
+
+use crate::coordinator::request::{RequestOptions, Response};
+use crate::error::{Error, Result};
+use crate::gen::Sampler;
+use crate::util::json::{self, Event, JsonWriter};
+
+/// Versioned wire field names (v1). Every JSON key either side emits or
+/// accepts is one of these constants — renaming a field is an API break
+/// and must bump the version notes in `docs/api.md`.
+pub mod fields {
+    // request
+    pub const PROMPT: &str = "prompt";
+    pub const MAX_TOKENS: &str = "max_tokens";
+    pub const TIER: &str = "tier";
+    pub const STREAM: &str = "stream";
+    pub const TOP_K: &str = "top_k";
+    pub const TEMPERATURE: &str = "temperature";
+    pub const SEED: &str = "seed";
+    // response / chunk
+    pub const ID: &str = "id";
+    pub const INDEX: &str = "index";
+    pub const TOKEN: &str = "token";
+    pub const TEXT: &str = "text";
+    pub const TOKENS: &str = "tokens";
+    pub const PROMPT_TOKENS: &str = "prompt_tokens";
+    pub const COMPLETION_TOKENS: &str = "completion_tokens";
+    pub const TTFT_MS: &str = "ttft_ms";
+    pub const LATENCY_MS: &str = "latency_ms";
+    // error envelope
+    pub const ERROR: &str = "error";
+    pub const CODE: &str = "code";
+    pub const MESSAGE: &str = "message";
+}
+
+/// The request fields [`CompletionRequest::from_json`] accepts; anything
+/// else is rejected (fail-fast beats silently ignoring a typo'd knob).
+const KNOWN_FIELDS: [&str; 7] = [
+    fields::PROMPT,
+    fields::MAX_TOKENS,
+    fields::TIER,
+    fields::STREAM,
+    fields::TOP_K,
+    fields::TEMPERATURE,
+    fields::SEED,
+];
+
+// ---- error taxonomy --------------------------------------------------------
+
+/// Stable machine-readable error codes. The wire string and HTTP status
+/// are part of the API contract (table-driven test below); clients switch
+/// on `code`, never on message text.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// Malformed or out-of-bounds request (bad JSON, unknown field,
+    /// empty prompt, admission limits) — HTTP 400.
+    InvalidRequest,
+    /// Unknown route or resource — HTTP 404.
+    NotFound,
+    /// A serving tier the model's manifest does not carry (the message
+    /// names the available tiers) — HTTP 404.
+    UnknownTier,
+    /// Transient capacity exhaustion: queue back-pressure or page pools.
+    /// Retry later, unchanged — HTTP 429.
+    Overloaded,
+    /// Everything else (model/runtime faults) — HTTP 500.
+    Internal,
+}
+
+impl ErrorCode {
+    /// Every code, in docs order.
+    pub const ALL: [ErrorCode; 5] = [
+        ErrorCode::InvalidRequest,
+        ErrorCode::NotFound,
+        ErrorCode::UnknownTier,
+        ErrorCode::Overloaded,
+        ErrorCode::Internal,
+    ];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrorCode::InvalidRequest => "invalid_request",
+            ErrorCode::NotFound => "not_found",
+            ErrorCode::UnknownTier => "unknown_tier",
+            ErrorCode::Overloaded => "overloaded",
+            ErrorCode::Internal => "internal",
+        }
+    }
+
+    pub fn http_status(self) -> u16 {
+        match self {
+            ErrorCode::InvalidRequest => 400,
+            ErrorCode::NotFound => 404,
+            ErrorCode::UnknownTier => 404,
+            ErrorCode::Overloaded => 429,
+            ErrorCode::Internal => 500,
+        }
+    }
+}
+
+/// A failed request as it crosses the API boundary: stable code + human
+/// message. This is what `Response::error` carries and what the HTTP
+/// edge serializes as the error envelope.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ApiError {
+    pub code: ErrorCode,
+    pub message: String,
+}
+
+impl ApiError {
+    pub fn new(code: ErrorCode, message: impl Into<String>) -> ApiError {
+        ApiError { code, message: message.into() }
+    }
+
+    /// Prefix the message with a stage label (e.g. `prefill failed`),
+    /// keeping the code — classification survives context wrapping.
+    pub fn context(mut self, prefix: &str) -> ApiError {
+        self.message = format!("{prefix}: {}", self.message);
+        self
+    }
+
+    /// The error envelope: `{"error":{"code":…,"message":…}}`.
+    pub fn to_json(&self) -> String {
+        let mut w = JsonWriter::new();
+        w.begin_obj();
+        w.key(fields::ERROR).begin_obj();
+        w.key(fields::CODE).str(self.code.as_str());
+        w.key(fields::MESSAGE).str(&self.message);
+        w.end_obj();
+        w.end_obj();
+        w.finish()
+    }
+}
+
+impl std::fmt::Display for ApiError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.message)
+    }
+}
+
+/// THE taxonomy: every crate error classifies to exactly one code. The
+/// message is the error's `Display` text, so existing diagnostics (which
+/// callers and tests match on) ride along unchanged.
+impl From<&Error> for ApiError {
+    fn from(e: &Error) -> ApiError {
+        let code = match e {
+            Error::Json { .. } | Error::BadRequest(_) => ErrorCode::InvalidRequest,
+            Error::UnknownTier { .. } => ErrorCode::UnknownTier,
+            Error::Overloaded(_) => ErrorCode::Overloaded,
+            _ => ErrorCode::Internal,
+        };
+        ApiError { code, message: e.to_string() }
+    }
+}
+
+// ---- request ---------------------------------------------------------------
+
+/// A completions-style request — the single entry type for both the
+/// in-process path and the HTTP edge. Build with [`CompletionRequest::new`]
+/// + the chainable setters, or decode a wire body with
+/// [`CompletionRequest::from_json`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct CompletionRequest {
+    pub prompt: String,
+    /// Generation budget (tokens). Admission validates it against the
+    /// model's ctx before any KV slot is claimed.
+    pub max_tokens: usize,
+    /// Serving tier (a manifest plan variant, e.g. `dense`/`lp`/`lp_aggr`);
+    /// `None` = the model's default tier.
+    pub tier: Option<String>,
+    /// HTTP edge only: stream per-token SSE chunks instead of one final
+    /// JSON body. Ignored by the in-process path (which always exposes
+    /// both via `ResponseHandle`).
+    pub stream: bool,
+    /// `Some(k)` switches sampling from greedy to top-k.
+    pub top_k: Option<usize>,
+    /// Softmax temperature for top-k sampling (ignored under greedy).
+    pub temperature: f32,
+    /// RNG seed for top-k sampling (ignored under greedy).
+    pub seed: u64,
+}
+
+impl CompletionRequest {
+    pub fn new(prompt: impl Into<String>) -> CompletionRequest {
+        CompletionRequest {
+            prompt: prompt.into(),
+            max_tokens: 32,
+            tier: None,
+            stream: false,
+            top_k: None,
+            temperature: 1.0,
+            seed: 0,
+        }
+    }
+
+    pub fn max_tokens(mut self, n: usize) -> CompletionRequest {
+        self.max_tokens = n;
+        self
+    }
+
+    pub fn tier(mut self, tier: &str) -> CompletionRequest {
+        self.tier = Some(tier.to_string());
+        self
+    }
+
+    pub fn stream(mut self, on: bool) -> CompletionRequest {
+        self.stream = on;
+        self
+    }
+
+    pub fn top_k(mut self, k: usize) -> CompletionRequest {
+        self.top_k = Some(k);
+        self
+    }
+
+    pub fn temperature(mut self, t: f32) -> CompletionRequest {
+        self.temperature = t;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> CompletionRequest {
+        self.seed = s;
+        self
+    }
+
+    /// The sampling policy this request asks for.
+    pub fn sampler(&self) -> Sampler {
+        match self.top_k {
+            Some(k) => Sampler::TopK { k, temperature: self.temperature, seed: self.seed },
+            None => Sampler::Greedy,
+        }
+    }
+
+    /// Lower to the scheduler's option struct.
+    pub fn options(&self) -> RequestOptions {
+        RequestOptions {
+            max_new_tokens: self.max_tokens,
+            sampler: self.sampler(),
+            tier: self.tier.clone(),
+        }
+    }
+
+    /// Lift legacy `(prompt, RequestOptions)` pairs — the deprecated
+    /// `submit`/`submit_blocking` shims go through here.
+    pub fn from_options(prompt: &str, opts: &RequestOptions) -> CompletionRequest {
+        let mut req = CompletionRequest::new(prompt).max_tokens(opts.max_new_tokens);
+        req.tier = opts.tier.clone();
+        if let Sampler::TopK { k, temperature, seed } = opts.sampler {
+            req = req.top_k(k).temperature(temperature).seed(seed);
+        }
+        req
+    }
+
+    /// Decode a wire body in one event pass (no DOM): the top level must
+    /// be a flat JSON object; unknown fields, duplicate fields, wrong
+    /// types and non-positive budgets are each rejected with a specific
+    /// `bad request` message.
+    pub fn from_json(text: &str) -> Result<CompletionRequest> {
+        fn bad(msg: String) -> Error {
+            Error::BadRequest(msg)
+        }
+        fn uint(name: &str, n: f64, min: u64) -> Result<usize> {
+            if n.fract() != 0.0 || !n.is_finite() || n < min as f64 || n > 1e12 {
+                return Err(bad(format!("field `{name}` must be an integer >= {min}")));
+            }
+            Ok(n as usize)
+        }
+        let mut req = CompletionRequest::new("");
+        let mut has_prompt = false;
+        let mut seen: Vec<String> = Vec::new();
+        let mut key: Option<String> = None;
+        let mut started = false;
+        json::read_events(text, |ev| {
+            if !started {
+                return match ev {
+                    Event::BeginObject => {
+                        started = true;
+                        Ok(())
+                    }
+                    _ => Err(bad("request body must be a JSON object".into())),
+                };
+            }
+            match ev {
+                Event::Key(k) => {
+                    let k = k.into_owned();
+                    if !KNOWN_FIELDS.contains(&k.as_str()) {
+                        return Err(bad(format!(
+                            "unknown field `{k}` (known: {})",
+                            KNOWN_FIELDS.join(", ")
+                        )));
+                    }
+                    if seen.iter().any(|s| *s == k) {
+                        return Err(bad(format!("duplicate field `{k}`")));
+                    }
+                    seen.push(k.clone());
+                    key = Some(k);
+                    Ok(())
+                }
+                Event::EndObject => Ok(()),
+                Event::BeginObject | Event::BeginArray | Event::EndArray => Err(bad(format!(
+                    "field `{}`: nested objects/arrays are not supported",
+                    key.as_deref().unwrap_or("?")
+                ))),
+                scalar => {
+                    let k = key.take().expect("parser yields values only after keys");
+                    match (k.as_str(), scalar) {
+                        (fields::PROMPT, Event::Str(s)) => {
+                            req.prompt = s.into_owned();
+                            has_prompt = true;
+                        }
+                        (fields::TIER, Event::Str(s)) => req.tier = Some(s.into_owned()),
+                        (fields::STREAM, Event::Bool(b)) => req.stream = b,
+                        (fields::MAX_TOKENS, Event::Num(n)) => {
+                            req.max_tokens = uint(fields::MAX_TOKENS, n, 1)?;
+                        }
+                        (fields::TOP_K, Event::Num(n)) => {
+                            req.top_k = Some(uint(fields::TOP_K, n, 1)?);
+                        }
+                        (fields::SEED, Event::Num(n)) => {
+                            req.seed = uint(fields::SEED, n, 0)? as u64;
+                        }
+                        (fields::TEMPERATURE, Event::Num(n)) => {
+                            if !n.is_finite() || n <= 0.0 {
+                                return Err(bad(format!(
+                                    "field `{}` must be a positive number",
+                                    fields::TEMPERATURE
+                                )));
+                            }
+                            req.temperature = n as f32;
+                        }
+                        (_, _) => {
+                            return Err(bad(format!("field `{k}`: wrong type")));
+                        }
+                    }
+                    Ok(())
+                }
+            }
+        })?;
+        if !has_prompt {
+            return Err(bad(format!("missing required field `{}`", fields::PROMPT)));
+        }
+        Ok(req)
+    }
+
+    /// Encode as a wire body (defaulted fields are omitted).
+    pub fn to_json(&self) -> String {
+        let mut w = JsonWriter::new();
+        w.begin_obj();
+        w.key(fields::PROMPT).str(&self.prompt);
+        w.key(fields::MAX_TOKENS).int(self.max_tokens as i64);
+        if let Some(t) = &self.tier {
+            w.key(fields::TIER).str(t);
+        }
+        if self.stream {
+            w.key(fields::STREAM).bool(true);
+        }
+        if let Some(k) = self.top_k {
+            w.key(fields::TOP_K).int(k as i64);
+            w.key(fields::TEMPERATURE).num(self.temperature as f64);
+            w.key(fields::SEED).int(self.seed as i64);
+        }
+        w.end_obj();
+        w.finish()
+    }
+}
+
+// ---- streamed chunk --------------------------------------------------------
+
+/// One streamed token — the SSE `data:` payload, built straight from the
+/// scheduler's per-token event.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CompletionChunk {
+    /// Request id (matches the final response's `id`).
+    pub id: u64,
+    /// 0-based position of this token in the completion.
+    pub index: usize,
+    /// The sampled token id.
+    pub token: i32,
+    /// The token decoded to text (may be empty for special tokens).
+    pub text: String,
+}
+
+impl CompletionChunk {
+    pub fn to_json(&self) -> String {
+        let mut w = JsonWriter::new();
+        w.begin_obj();
+        w.key(fields::ID).int(self.id as i64);
+        w.key(fields::INDEX).int(self.index as i64);
+        w.key(fields::TOKEN).int(self.token as i64);
+        w.key(fields::TEXT).str(&self.text);
+        w.end_obj();
+        w.finish()
+    }
+}
+
+// ---- final response --------------------------------------------------------
+
+/// The completed request as it crosses the wire (success shape; failures
+/// use the [`ApiError`] envelope instead).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CompletionResponse {
+    pub id: u64,
+    /// The serving tier that decoded this request (named even when the
+    /// request left tier selection to the model's default).
+    pub tier: Option<String>,
+    pub text: String,
+    pub tokens: Vec<i32>,
+    pub prompt_tokens: usize,
+    /// Wall-clock time to first token, ms.
+    pub ttft_ms: f64,
+    /// Wall-clock total latency, ms.
+    pub latency_ms: f64,
+}
+
+impl CompletionResponse {
+    /// Project the coordinator's internal response onto the wire shape.
+    /// Only valid for successes; failures serialize via `ApiError`.
+    pub fn from_response(r: &Response) -> CompletionResponse {
+        CompletionResponse {
+            id: r.id,
+            tier: r.tier.clone(),
+            text: r.text.clone(),
+            tokens: r.tokens.clone(),
+            prompt_tokens: r.prompt_tokens,
+            ttft_ms: r.ttft_ms,
+            latency_ms: r.latency_ms,
+        }
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut w = JsonWriter::new();
+        w.begin_obj();
+        w.key(fields::ID).int(self.id as i64);
+        if let Some(t) = &self.tier {
+            w.key(fields::TIER).str(t);
+        }
+        w.key(fields::TEXT).str(&self.text);
+        w.key(fields::TOKENS).begin_arr();
+        for &t in &self.tokens {
+            w.int(t as i64);
+        }
+        w.end_arr();
+        w.key(fields::PROMPT_TOKENS).int(self.prompt_tokens as i64);
+        w.key(fields::COMPLETION_TOKENS).int(self.tokens.len() as i64);
+        w.key(fields::TTFT_MS).num(self.ttft_ms);
+        w.key(fields::LATENCY_MS).num(self.latency_ms);
+        w.end_obj();
+        w.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Satellite: the taxonomy, table-driven — one constructible value per
+    /// `Error` variant, its expected code, wire string and HTTP status.
+    /// (`Error::Xla` carries an opaque runtime error that cannot be built
+    /// here; the `From` impl's wildcard arm classifies it `Internal` like
+    /// every other runtime fault.)
+    #[test]
+    fn every_error_variant_maps_to_a_stable_code_and_status() {
+        let table: Vec<(Error, ErrorCode, &str, u16)> = vec![
+            (
+                Error::Json { at: 3, msg: "bad".into() },
+                ErrorCode::InvalidRequest,
+                "invalid_request",
+                400,
+            ),
+            (
+                Error::BadRequest("empty prompt".into()),
+                ErrorCode::InvalidRequest,
+                "invalid_request",
+                400,
+            ),
+            (
+                Error::UnknownTier { tier: "turbo".into(), available: "dense, lp".into() },
+                ErrorCode::UnknownTier,
+                "unknown_tier",
+                404,
+            ),
+            (
+                Error::Overloaded("queue full".into()),
+                ErrorCode::Overloaded,
+                "overloaded",
+                429,
+            ),
+            (Error::Io(std::io::Error::other("disk")), ErrorCode::Internal, "internal", 500),
+            (Error::Config("c".into()), ErrorCode::Internal, "internal", 500),
+            (Error::Weights("w".into()), ErrorCode::Internal, "internal", 500),
+            (Error::MissingArtifact("a".into()), ErrorCode::Internal, "internal", 500),
+            (Error::Plan("p".into()), ErrorCode::Internal, "internal", 500),
+            (Error::Serving("s".into()), ErrorCode::Internal, "internal", 500),
+            (Error::Verify("v".into()), ErrorCode::Internal, "internal", 500),
+            (Error::Msg("m".into()), ErrorCode::Internal, "internal", 500),
+        ];
+        for (err, code, wire, status) in table {
+            let api = ApiError::from(&err);
+            assert_eq!(api.code, code, "{err}");
+            assert_eq!(api.code.as_str(), wire, "{err}");
+            assert_eq!(api.code.http_status(), status, "{err}");
+            // the message is the error's Display text, verbatim
+            assert_eq!(api.message, err.to_string());
+        }
+        // NotFound is minted by the HTTP router (unknown path), not by a
+        // crate error — still part of the contract
+        assert_eq!(ErrorCode::NotFound.as_str(), "not_found");
+        assert_eq!(ErrorCode::NotFound.http_status(), 404);
+        // ALL covers every code exactly once
+        assert_eq!(ErrorCode::ALL.len(), 5);
+        for c in ErrorCode::ALL {
+            assert_eq!(ErrorCode::ALL.iter().filter(|&&x| x == c).count(), 1);
+        }
+    }
+
+    #[test]
+    fn error_envelope_and_context() {
+        let e = ApiError::new(ErrorCode::Overloaded, "queue full (back-pressure)");
+        assert_eq!(
+            e.to_json(),
+            r#"{"error":{"code":"overloaded","message":"queue full (back-pressure)"}}"#
+        );
+        let wrapped = e.context("prefill failed");
+        assert_eq!(wrapped.code, ErrorCode::Overloaded, "context keeps the code");
+        assert_eq!(wrapped.to_string(), "prefill failed: queue full (back-pressure)");
+    }
+
+    #[test]
+    fn request_roundtrips_through_json() {
+        let req = CompletionRequest::new("the red fox").max_tokens(8).tier("lp").stream(true);
+        let body = req.to_json();
+        assert_eq!(body, r#"{"prompt":"the red fox","max_tokens":8,"tier":"lp","stream":true}"#);
+        assert_eq!(CompletionRequest::from_json(&body).unwrap(), req);
+        // sampling knobs roundtrip too
+        let req = CompletionRequest::new("hi").top_k(5).temperature(0.5).seed(7);
+        let back = CompletionRequest::from_json(&req.to_json()).unwrap();
+        assert_eq!(back, req);
+        assert!(matches!(back.sampler(), Sampler::TopK { k: 5, seed: 7, .. }));
+        // defaults: greedy, 32 tokens, no tier, no streaming
+        let d = CompletionRequest::from_json(r#"{"prompt":"x"}"#).unwrap();
+        assert_eq!(d, CompletionRequest::new("x"));
+        assert!(matches!(d.sampler(), Sampler::Greedy));
+    }
+
+    #[test]
+    fn request_decode_rejects_bad_bodies_with_specific_messages() {
+        let cases: Vec<(&str, &str)> = vec![
+            (r#"[1,2]"#, "must be a JSON object"),
+            (r#""hi""#, "must be a JSON object"),
+            (r#"{"max_tokens":4}"#, "missing required field `prompt`"),
+            (r#"{"prompt":"x","promt":"y"}"#, "unknown field `promt`"),
+            (r#"{"prompt":"x","prompt":"y"}"#, "duplicate field `prompt`"),
+            (r#"{"prompt":42}"#, "wrong type"),
+            (r#"{"prompt":"x","stream":"yes"}"#, "wrong type"),
+            (r#"{"prompt":"x","max_tokens":0}"#, "integer >= 1"),
+            (r#"{"prompt":"x","max_tokens":2.5}"#, "integer >= 1"),
+            (r#"{"prompt":"x","top_k":-1}"#, "integer >= 1"),
+            (r#"{"prompt":"x","temperature":0}"#, "positive number"),
+            (r#"{"prompt":"x","tier":{"name":"lp"}}"#, "nested objects"),
+            (r#"{"prompt":"x""#, "eof"),
+        ];
+        for (body, needle) in cases {
+            let e = CompletionRequest::from_json(body).unwrap_err();
+            let api = ApiError::from(&e);
+            assert_eq!(api.code, ErrorCode::InvalidRequest, "{body}: {e}");
+            assert!(e.to_string().contains(needle), "{body}: {e}");
+        }
+    }
+
+    #[test]
+    fn options_lowering_roundtrips() {
+        let req = CompletionRequest::new("p").max_tokens(4).tier("lp_aggr");
+        let opts = req.options();
+        assert_eq!(opts.max_new_tokens, 4);
+        assert_eq!(opts.tier.as_deref(), Some("lp_aggr"));
+        assert!(matches!(opts.sampler, Sampler::Greedy));
+        assert_eq!(CompletionRequest::from_options("p", &opts), req);
+        let opts = RequestOptions {
+            max_new_tokens: 9,
+            sampler: Sampler::TopK { k: 3, temperature: 0.7, seed: 11 },
+            tier: None,
+        };
+        let req = CompletionRequest::from_options("q", &opts);
+        assert_eq!(req.top_k, Some(3));
+        assert_eq!(req.seed, 11);
+        assert!(matches!(req.options().sampler, Sampler::TopK { k: 3, .. }));
+    }
+
+    #[test]
+    fn chunk_and_response_wire_shapes() {
+        let chunk = CompletionChunk { id: 42, index: 0, token: 104, text: "h".into() };
+        assert_eq!(chunk.to_json(), r#"{"id":42,"index":0,"token":104,"text":"h"}"#);
+        let resp = CompletionResponse {
+            id: 42,
+            tier: Some("lp".into()),
+            text: "hi".into(),
+            tokens: vec![104, 105],
+            prompt_tokens: 5,
+            ttft_ms: 12.0,
+            latency_ms: 96.0,
+        };
+        assert_eq!(
+            resp.to_json(),
+            r#"{"id":42,"tier":"lp","text":"hi","tokens":[104,105],"prompt_tokens":5,"completion_tokens":2,"ttft_ms":12,"latency_ms":96}"#
+        );
+        // the wire body reparses under the DOM (writer escaping is sound)
+        let v = json::Value::parse(&resp.to_json()).unwrap();
+        assert_eq!(v.get(fields::COMPLETION_TOKENS).unwrap().as_usize(), Some(2));
+    }
+}

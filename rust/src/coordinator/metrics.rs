@@ -48,6 +48,14 @@ pub struct ServerMetrics {
     pub requests_submitted: AtomicU64,
     pub requests_completed: AtomicU64,
     pub requests_rejected: AtomicU64,
+    /// Requests cancelled mid-stream (the reply receiver was dropped —
+    /// e.g. an HTTP client disconnected); the slot is reclaimed at the
+    /// next token boundary.
+    pub requests_cancelled: AtomicU64,
+    /// KV slots claimed since startup (monotone). A rejected request must
+    /// never move this counter — the load-shedding tests assert zero slot
+    /// churn by comparing it against completions.
+    pub slot_allocs: AtomicU64,
     pub tokens_generated: AtomicU64,
     pub prefill_tokens: AtomicU64,
     pub decode_steps: AtomicU64,
@@ -99,6 +107,8 @@ impl Default for ServerMetrics {
             requests_submitted: AtomicU64::new(0),
             requests_completed: AtomicU64::new(0),
             requests_rejected: AtomicU64::new(0),
+            requests_cancelled: AtomicU64::new(0),
+            slot_allocs: AtomicU64::new(0),
             tokens_generated: AtomicU64::new(0),
             prefill_tokens: AtomicU64::new(0),
             decode_steps: AtomicU64::new(0),
@@ -232,6 +242,10 @@ impl ServerMetrics {
             self.prefill_tokens.load(Ordering::Relaxed),
             self.decode_steps.load(Ordering::Relaxed),
         );
+        let cancelled = self.requests_cancelled.load(Ordering::Relaxed);
+        if cancelled > 0 {
+            s += &format!("\ncancelled mid-stream (client went away): {cancelled}");
+        }
         let hist = self.occupancy_histogram();
         if hist.iter().any(|&n| n > 0) {
             let cells: Vec<String> = hist
@@ -329,6 +343,9 @@ mod tests {
         assert!((ml.p50 - 55.0).abs() < 1e-9);
         assert!(m.report().contains("2 completed"));
         assert!(m.report().contains("modelled ttft"));
+        assert!(!m.report().contains("cancelled"), "cancel line is gated on non-zero");
+        m.requests_cancelled.store(1, Ordering::Relaxed);
+        assert!(m.report().contains("cancelled mid-stream (client went away): 1"));
     }
 
     #[test]

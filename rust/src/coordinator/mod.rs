@@ -13,5 +13,5 @@ pub mod scheduler;
 pub mod server;
 
 pub use metrics::{ServerMetrics, TierStats};
-pub use request::{Request, RequestOptions, Response};
-pub use server::Server;
+pub use request::{Request, RequestOptions, Response, TokenEvent};
+pub use server::{ResponseHandle, Server};

@@ -1,5 +1,6 @@
 //! Request/response types crossing the coordinator boundary.
 
+use crate::api::ApiError;
 use crate::gen::Sampler;
 
 #[derive(Clone, Debug)]
@@ -37,9 +38,31 @@ pub struct Request {
     pub submitted_at: std::time::Instant,
 }
 
+/// One event on a request's reply stream. The scheduler sends a
+/// [`TokenEvent::Token`] the moment each token is sampled and exactly one
+/// terminal [`TokenEvent::Done`]; a dropped receiver cancels the request
+/// at the next token boundary (the slot is reclaimed, the scheduler keeps
+/// running).
+#[derive(Clone, Debug)]
+pub enum TokenEvent {
+    Token {
+        /// 0-based position in the completion.
+        index: usize,
+        /// The sampled token id.
+        token: i32,
+        /// The token decoded to text (may be empty for special tokens).
+        text: String,
+    },
+    /// Terminal event: the full response (success or failure).
+    Done(Response),
+}
+
 #[derive(Clone, Debug)]
 pub struct Response {
     pub id: u64,
+    /// The serving tier that decoded this request (`None` on failures
+    /// that never resolved a tier).
+    pub tier: Option<String>,
     pub text: String,
     pub tokens: Vec<i32>,
     pub prompt_tokens: usize,
@@ -47,28 +70,36 @@ pub struct Response {
     pub ttft_ms: f64,
     /// Total latency, ms.
     pub latency_ms: f64,
-    /// Error message if the request failed.
-    pub error: Option<String>,
+    /// Typed failure (stable `api::ErrorCode` + message) if the request
+    /// did not complete.
+    pub error: Option<ApiError>,
 }
 
-/// A request paired with its reply channel — the unit that flows through
+/// A request paired with its reply stream — the unit that flows through
 /// the batcher into the scheduler.
 pub struct Job {
     pub request: Request,
-    pub reply: std::sync::mpsc::Sender<Response>,
+    pub reply: std::sync::mpsc::Sender<TokenEvent>,
 }
 
 impl Response {
-    pub fn failed(id: u64, err: impl Into<String>) -> Response {
+    pub fn failed(id: u64, err: ApiError) -> Response {
         Response {
             id,
+            tier: None,
             text: String::new(),
             tokens: vec![],
             prompt_tokens: 0,
             ttft_ms: 0.0,
             latency_ms: 0.0,
-            error: Some(err.into()),
+            error: Some(err),
         }
+    }
+
+    /// The failure message, if any (convenience for assertion/logging
+    /// sites that only care about the text).
+    pub fn error_message(&self) -> Option<&str> {
+        self.error.as_ref().map(|e| e.message.as_str())
     }
 
     pub fn generated_tokens(&self) -> usize {
@@ -79,6 +110,7 @@ impl Response {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::api::ErrorCode;
 
     #[test]
     fn defaults() {
@@ -90,10 +122,12 @@ mod tests {
     }
 
     #[test]
-    fn failed_response_carries_error() {
-        let r = Response::failed(7, "boom");
+    fn failed_response_carries_typed_error() {
+        let r = Response::failed(7, ApiError::new(ErrorCode::Overloaded, "boom"));
         assert_eq!(r.id, 7);
-        assert_eq!(r.error.as_deref(), Some("boom"));
+        assert_eq!(r.error.as_ref().unwrap().code, ErrorCode::Overloaded);
+        assert_eq!(r.error_message(), Some("boom"));
         assert_eq!(r.generated_tokens(), 0);
+        assert!(r.tier.is_none());
     }
 }

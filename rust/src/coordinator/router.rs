@@ -5,8 +5,9 @@
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
+use crate::api::CompletionRequest;
 use crate::coordinator::request::{RequestOptions, Response};
-use crate::coordinator::server::Server;
+use crate::coordinator::server::{ResponseHandle, Server};
 use crate::error::{Error, Result};
 
 #[derive(Default)]
@@ -40,14 +41,20 @@ impl Router {
             .expect("non-empty replicas"))
     }
 
-    /// Route a blocking request.
+    /// Route a typed request to the least-loaded replica of `model`,
+    /// returning its reply stream.
+    pub fn route(&self, model: &str, req: CompletionRequest) -> Result<ResponseHandle> {
+        self.pick(model)?.request(req)
+    }
+
+    /// Route a blocking request (convenience over [`Router::route`]).
     pub fn submit_blocking(
         &self,
         model: &str,
         prompt: &str,
         opts: RequestOptions,
     ) -> Result<Response> {
-        self.pick(model)?.submit_blocking(prompt, opts)
+        self.route(model, CompletionRequest::from_options(prompt, &opts))?.wait()
     }
 }
 

@@ -52,9 +52,10 @@ use std::sync::mpsc::Sender;
 use std::sync::Arc;
 use std::time::Duration;
 
+use crate::api::ApiError;
 use crate::coordinator::batcher::Batcher;
 use crate::coordinator::metrics::ServerMetrics;
-use crate::coordinator::request::{Job, Request, Response};
+use crate::coordinator::request::{Job, Request, Response, TokenEvent};
 use crate::gen::Sampler;
 use crate::model::kvcache::SlotManager;
 use crate::model::prefill::ChunkedPrefill;
@@ -67,7 +68,7 @@ use crate::util::rng::SplitMix64;
 
 struct InFlight {
     request: Request,
-    reply: Sender<Response>,
+    reply: Sender<TokenEvent>,
     tokens: Vec<i32>,
     /// Prompt length in tokens, recorded once at admit time (re-encoding
     /// the prompt at completion just to count it was a hot-path bug).
@@ -92,7 +93,7 @@ struct InFlight {
 struct PendingPrefill {
     state: ChunkedPrefill,
     request: Request,
-    reply: Sender<Response>,
+    reply: Sender<TokenEvent>,
     sampler: Sampler,
     prompt_tokens: usize,
     /// Simulated-clock reading at admission; the request's modelled TTFT
@@ -215,7 +216,8 @@ impl Scheduler {
                     .requests_rejected
                     .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                 self.trace_reject(request.id, &e.to_string());
-                let _ = reply.send(Response::failed(request.id, e.to_string()));
+                let _ =
+                    reply.send(TokenEvent::Done(Response::failed(request.id, ApiError::from(&e))));
                 return;
             }
         };
@@ -224,21 +226,27 @@ impl Scheduler {
                 .requests_rejected
                 .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
             self.trace_reject(request.id, &e.to_string());
-            let _ = reply.send(Response::failed(request.id, e.to_string()));
+            let _ = reply.send(TokenEvent::Done(Response::failed(request.id, ApiError::from(&e))));
             return;
         }
         let slot = match self.slots.alloc(request.id, ids.len(), max_new, 0) {
             Ok(s) => s,
             Err(e) => {
-                let _ = reply.send(Response::failed(request.id, e.to_string()));
+                let _ =
+                    reply.send(TokenEvent::Done(Response::failed(request.id, ApiError::from(&e))));
                 return;
             }
         };
+        // admission passed and a slot is now held: the alloc/free churn
+        // counter is what the 429 load-shed test asserts stays flat on
+        // rejected requests
+        self.metrics.slot_allocs.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let state = match self.model.begin_prefill_v(&vid, slot, &ids) {
             Ok(st) => st,
             Err(e) => {
                 self.release_slot(slot);
-                let _ = reply.send(Response::failed(request.id, e.to_string()));
+                let _ =
+                    reply.send(TokenEvent::Done(Response::failed(request.id, ApiError::from(&e))));
                 return;
             }
         };
@@ -386,9 +394,10 @@ impl Scheduler {
                         &[("request", head.request.id.to_string()), ("error", e.to_string())],
                     );
                 }
-                let _ = head
-                    .reply
-                    .send(Response::failed(head.request.id, format!("prefill failed: {e}")));
+                let _ = head.reply.send(TokenEvent::Done(Response::failed(
+                    head.request.id,
+                    ApiError::from(&e).context("prefill failed"),
+                )));
             }
         }
     }
@@ -475,10 +484,13 @@ impl Scheduler {
                     let slot = lane.0;
                     self.release_slot(slot);
                     if let Some(inf) = self.inflight.remove(&slot) {
-                        let _ = inf.reply.send(Response::failed(
-                            inf.request.id,
+                        let api = ApiError::new(
+                            ApiError::from(&e).code,
                             format!("decode failed: {e} (batch round failed: {batch_err})"),
-                        ));
+                        );
+                        let _ = inf
+                            .reply
+                            .send(TokenEvent::Done(Response::failed(inf.request.id, api)));
                     }
                 }
             }
@@ -487,12 +499,41 @@ impl Scheduler {
     }
 
     /// Fold one sampled logits row back into its slot: extend the output,
-    /// sample the next token, retire the sequence if finished.
+    /// stream the token to the caller, sample the next token, retire the
+    /// sequence if finished.
     fn apply_sampled_row(&mut self, slot: usize, row: &[f32]) {
         let Some(inf) = self.inflight.get_mut(&slot) else { return };
         // The token just processed at `pos` becomes output history.
         let current = self.slots.get(slot).unwrap().next_token;
         inf.tokens.push(current);
+        // Stream the token the moment it exists — this is the feed the
+        // HTTP edge serves as SSE. A failed send means the caller dropped
+        // its handle (client disconnect): cancel at this token boundary,
+        // reclaim the slot, and keep the scheduler running.
+        let sent = inf.reply.send(TokenEvent::Token {
+            index: inf.tokens.len() - 1,
+            token: current,
+            text: tokenizer::decode(&[current]),
+        });
+        if sent.is_err() {
+            let inf = self.inflight.remove(&slot).unwrap();
+            self.release_slot(slot);
+            self.metrics
+                .requests_cancelled
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            if let Some(tr) = &self.tracer {
+                tr.instant(
+                    Track::Slot(slot),
+                    "cancelled",
+                    self.modelled_clock_ns(),
+                    &[
+                        ("request", inf.request.id.to_string()),
+                        ("tokens", inf.tokens.len().to_string()),
+                    ],
+                );
+            }
+            return;
+        }
         let next = inf.sampler.sample(row, &mut inf.rng);
         let done = self.slots.advance(slot, next, EOS);
         if done {
@@ -524,15 +565,16 @@ impl Scheduler {
                 inf.modelled_ttft_ms,
                 modelled_latency_ms,
             );
-            let _ = inf.reply.send(Response {
+            let _ = inf.reply.send(TokenEvent::Done(Response {
                 id: inf.request.id,
+                tier: Some(inf.variant.as_str().to_string()),
                 text: tokenizer::decode(&inf.tokens),
                 prompt_tokens: inf.prompt_tokens,
                 tokens: inf.tokens,
                 ttft_ms: inf.ttft_ms,
                 latency_ms: latency,
                 error: None,
-            });
+            }));
         }
     }
 }
@@ -595,7 +637,7 @@ mod tests {
         id: u64,
         prompt: &str,
         opts: RequestOptions,
-    ) -> (Job, Receiver<Response>) {
+    ) -> (Job, Receiver<TokenEvent>) {
         let (tx, rx) = channel();
         (
             Job {
@@ -611,12 +653,35 @@ mod tests {
         )
     }
 
-    fn job(id: u64, prompt: &str, max_new: usize) -> (Job, Receiver<Response>) {
+    fn job(id: u64, prompt: &str, max_new: usize) -> (Job, Receiver<TokenEvent>) {
         job_opts(
             id,
             prompt,
             RequestOptions { max_new_tokens: max_new, sampler: Sampler::Greedy, tier: None },
         )
+    }
+
+    /// Drain whatever the stream already holds; `Some` once the terminal
+    /// `Done` event has arrived. Along the way, checks that streamed
+    /// token events agree with the final response (index-contiguous, same
+    /// token ids) — the streaming protocol's core invariant.
+    fn final_response(rx: &Receiver<TokenEvent>) -> Option<Response> {
+        let mut streamed = Vec::new();
+        while let Ok(ev) = rx.try_recv() {
+            match ev {
+                TokenEvent::Token { index, token, .. } => {
+                    assert_eq!(index, streamed.len(), "token indices must be contiguous");
+                    streamed.push(token);
+                }
+                TokenEvent::Done(r) => {
+                    if r.error.is_none() {
+                        assert_eq!(streamed, r.tokens, "stream must match the final response");
+                    }
+                    return Some(r);
+                }
+            }
+        }
+        None
     }
 
     /// The interleaving contract in numbers: while a long prompt streams
@@ -698,7 +763,7 @@ mod tests {
             }
             assert!(sched.inflight.is_empty() && sched.pending.is_empty());
             for rx in replies {
-                let r = rx.try_recv().expect("request must have completed");
+                let r = final_response(&rx).expect("request must have completed");
                 assert!(r.error.is_none(), "{:?}", r.error);
             }
             // the modelled reservoirs, read through the sorted summaries:
@@ -799,7 +864,7 @@ mod tests {
             assert!(sched.inflight.is_empty() && sched.pending.is_empty());
             let mut tokens = Vec::new();
             for rx in replies {
-                let r = rx.try_recv().expect("request must have completed");
+                let r = final_response(&rx).expect("request must have completed");
                 assert!(r.error.is_none(), "{:?}", r.error);
                 assert_eq!(r.generated_tokens(), 3);
                 tokens.push(r.tokens);
@@ -899,9 +964,10 @@ mod tests {
         };
         let (j, rx) = job_opts(1, "hello", opts);
         sched.admit(j);
-        let r = rx.try_recv().expect("rejection must reply immediately");
-        let err = r.error.as_deref().unwrap_or("");
-        assert!(err.contains("turbo") && err.contains("dense"), "{err}");
+        let r = final_response(&rx).expect("rejection must reply immediately");
+        let err = r.error.clone().expect("must carry a typed error");
+        assert_eq!(err.code, crate::api::ErrorCode::UnknownTier);
+        assert!(err.message.contains("turbo") && err.message.contains("dense"), "{err}");
         assert_eq!(sched.slots.free_count(), free_before, "no slot churn");
         assert!(sched.pending.is_empty() && sched.inflight.is_empty());
         assert_eq!(
@@ -923,7 +989,7 @@ mod tests {
             }
             sched.tick();
         }
-        let r = rx.try_recv().expect("lp request must complete");
+        let r = final_response(&rx).expect("lp request must complete");
         assert!(r.error.is_none(), "{:?}", r.error);
     }
 
@@ -941,14 +1007,14 @@ mod tests {
         // prompt longer than any admissible bound (ctx bytes + BOS > ctx-1)
         let (job_long, rx_long) = job(1, &"z".repeat(ctx), 4);
         sched.admit(job_long);
-        let r = rx_long.try_recv().expect("rejection must reply immediately");
-        assert!(r.error.as_deref().unwrap_or("").contains("admission limit"), "{r:?}");
+        let r = final_response(&rx_long).expect("rejection must reply immediately");
+        assert!(r.error_message().unwrap_or("").contains("admission limit"), "{r:?}");
 
         // budget that can never fit ctx
         let (job_budget, rx_budget) = job(2, "ok", ctx);
         sched.admit(job_budget);
-        let r = rx_budget.try_recv().expect("rejection must reply immediately");
-        assert!(r.error.as_deref().unwrap_or("").contains("max_new"), "{r:?}");
+        let r = final_response(&rx_budget).expect("rejection must reply immediately");
+        assert!(r.error_message().unwrap_or("").contains("max_new"), "{r:?}");
 
         assert_eq!(sched.slots.free_count(), free_before, "rejections must not hold slots");
         assert!(sched.pending.is_empty() && sched.inflight.is_empty());
@@ -1009,7 +1075,7 @@ mod tests {
             sched.tick();
         }
         for rx in [rx_a, rx_b] {
-            let r = rx.try_recv().expect("request must have completed");
+            let r = final_response(&rx).expect("request must have completed");
             assert!(r.error.is_none(), "{:?}", r.error);
             assert_eq!(r.generated_tokens(), 3);
         }
@@ -1033,7 +1099,7 @@ mod tests {
             }
             sched.tick();
         }
-        let r = rx_c.try_recv().expect("pressured request must still complete");
+        let r = final_response(&rx_c).expect("pressured request must still complete");
         assert!(r.error.is_none(), "eviction must make room: {:?}", r.error);
         assert!(
             metrics.kv_evictions.load(Ordering::Relaxed) >= 1,
@@ -1060,8 +1126,8 @@ mod tests {
 
         let (j, rx) = job(1, "hi", 4);
         sched.admit(j);
-        let r = rx.try_recv().expect("rejection must reply immediately");
-        assert!(r.error.as_deref().unwrap_or("").contains("page"), "{r:?}");
+        let r = final_response(&rx).expect("rejection must reply immediately");
+        assert!(r.error_message().unwrap_or("").contains("page"), "{r:?}");
         assert_eq!(sched.slots.free_count(), free_before, "no slot churn");
         assert!(sched.pending.is_empty() && sched.inflight.is_empty());
         assert_eq!(
@@ -1085,7 +1151,7 @@ mod tests {
             }
             sched.tick();
         }
-        let r = rx2.try_recv().expect("request must complete after uncapping");
+        let r = final_response(&rx2).expect("request must complete after uncapping");
         assert!(r.error.is_none(), "{:?}", r.error);
     }
 }

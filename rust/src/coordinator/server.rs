@@ -1,15 +1,23 @@
-//! Server: owns the scheduler thread and exposes a submit() API.
+//! Server: owns the scheduler thread and exposes the typed request API.
+//!
+//! The entry point is [`Server::request`]: a [`CompletionRequest`] in, a
+//! [`ResponseHandle`] out. The handle is both a stream (per-token
+//! [`TokenEvent`]s, the same feed the HTTP edge serves as SSE) and a
+//! future ([`ResponseHandle::wait`] blocks for the final [`Response`]).
+//! The legacy `submit`/`submit_blocking` pair remains as thin deprecated
+//! shims over the same path.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::api::CompletionRequest;
 use crate::config::ServerConfig;
 use crate::coordinator::batcher::{Batcher, SubmitError};
 use crate::coordinator::metrics::ServerMetrics;
-use crate::coordinator::request::{Job, Request, RequestOptions, Response};
+use crate::coordinator::request::{Job, Request, RequestOptions, Response, TokenEvent};
 use crate::coordinator::scheduler::Scheduler;
 use crate::error::{Error, Result};
 use crate::model::ServingModel;
@@ -20,6 +28,77 @@ pub struct Server {
     pub metrics: Arc<ServerMetrics>,
     next_id: AtomicU64,
     join: Option<JoinHandle<()>>,
+}
+
+/// A submitted request's reply stream: iterate per-token events with
+/// [`ResponseHandle::next_event`]/[`ResponseHandle::stream`], or block
+/// for the final response with [`ResponseHandle::wait`]. Dropping the
+/// handle cancels the request at its next token boundary (the scheduler
+/// notices the closed channel, reclaims the slot and keeps running).
+pub struct ResponseHandle {
+    id: u64,
+    rx: Receiver<TokenEvent>,
+}
+
+impl ResponseHandle {
+    /// The request id (matches `Response::id` and streamed chunk ids).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Block for the next event; `None` once the stream has ended (after
+    /// `Done`, or if the scheduler dropped the request).
+    pub fn next_event(&self) -> Option<TokenEvent> {
+        self.rx.recv().ok()
+    }
+
+    /// Like [`ResponseHandle::next_event`], but gives up after `timeout`
+    /// (returning `None` on both timeout and end-of-stream).
+    pub fn next_event_timeout(&self, timeout: Duration) -> Option<TokenEvent> {
+        self.rx.recv_timeout(timeout).ok()
+    }
+
+    /// The raw event receiver — for callers that need their own
+    /// select/timeout control (the HTTP edge probes the client connection
+    /// between events).
+    pub fn events(&self) -> &Receiver<TokenEvent> {
+        &self.rx
+    }
+
+    /// Consume the handle as an iterator over the remaining events (ends
+    /// after `Done`).
+    pub fn stream(self) -> impl Iterator<Item = TokenEvent> {
+        self.rx.into_iter()
+    }
+
+    /// Block until the request completes and return the final response.
+    pub fn wait(self) -> Result<Response> {
+        for ev in self.rx.iter() {
+            if let TokenEvent::Done(r) = ev {
+                return Ok(r);
+            }
+        }
+        Err(Error::Serving("scheduler dropped the request".into()))
+    }
+
+    /// Like [`ResponseHandle::wait`], but bounded by an overall deadline.
+    pub fn wait_timeout(self, timeout: Duration) -> Result<Response> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let now = Instant::now();
+            let left = deadline.saturating_duration_since(now);
+            match self.rx.recv_timeout(left) {
+                Ok(TokenEvent::Done(r)) => return Ok(r),
+                Ok(TokenEvent::Token { .. }) => continue,
+                Err(RecvTimeoutError::Timeout) => {
+                    return Err(Error::Serving("timed out waiting for response".into()))
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(Error::Serving("scheduler dropped the request".into()))
+                }
+            }
+        }
+    }
 }
 
 impl Server {
@@ -52,34 +131,38 @@ impl Server {
         Server { batcher, metrics, next_id: AtomicU64::new(1), join: Some(join) }
     }
 
-    /// Submit a prompt; returns the response receiver (async completion).
-    pub fn submit(&self, prompt: &str, opts: RequestOptions) -> Result<Receiver<Response>> {
+    /// Submit a typed request; returns its reply stream. Back-pressure is
+    /// an [`Error::Overloaded`] (HTTP 429 at the network edge) and never
+    /// claims a slot.
+    pub fn request(&self, req: CompletionRequest) -> Result<ResponseHandle> {
         let (tx, rx) = channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.metrics.requests_submitted.fetch_add(1, Ordering::Relaxed);
+        let opts = req.options();
         let job = Job {
-            request: Request {
-                id,
-                prompt: prompt.to_string(),
-                opts,
-                submitted_at: Instant::now(),
-            },
+            request: Request { id, prompt: req.prompt, opts, submitted_at: Instant::now() },
             reply: tx,
         };
         match self.batcher.submit(job) {
-            Ok(()) => Ok(rx),
+            Ok(()) => Ok(ResponseHandle { id, rx }),
             Err(SubmitError::Full(_)) => {
                 self.metrics.requests_rejected.fetch_add(1, Ordering::Relaxed);
-                Err(Error::Serving("queue full (back-pressure)".into()))
+                Err(Error::Overloaded("queue full (back-pressure)".into()))
             }
             Err(SubmitError::Closed(_)) => Err(Error::Serving("server shutting down".into())),
         }
     }
 
+    /// Submit a prompt; returns the reply stream.
+    #[deprecated(note = "use Server::request(CompletionRequest) and the ResponseHandle stream")]
+    pub fn submit(&self, prompt: &str, opts: RequestOptions) -> Result<ResponseHandle> {
+        self.request(CompletionRequest::from_options(prompt, &opts))
+    }
+
     /// Submit and block for the result.
+    #[deprecated(note = "use Server::request(CompletionRequest) + ResponseHandle::wait")]
     pub fn submit_blocking(&self, prompt: &str, opts: RequestOptions) -> Result<Response> {
-        let rx = self.submit(prompt, opts)?;
-        rx.recv().map_err(|_| Error::Serving("scheduler dropped the request".into()))
+        self.request(CompletionRequest::from_options(prompt, &opts))?.wait()
     }
 
     pub fn queue_len(&self) -> usize {
@@ -107,6 +190,7 @@ impl Drop for Server {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::api::ErrorCode;
     use crate::config::InterconnectConfig;
     use crate::model::{transform, Weights};
     use crate::runtime::Manifest;
@@ -127,17 +211,42 @@ mod tests {
         Some(Server::start(model, &ServerConfig { queue_depth: 8, ..Default::default() }))
     }
 
+    /// Drain a handle's full stream: per-token events (indices checked)
+    /// followed by the terminal `Done`. Returns (streamed tokens, final
+    /// response) — the streamed tokens are the oracle the HTTP loopback
+    /// test compares real-socket SSE output against.
+    fn drain(h: ResponseHandle) -> (Vec<i32>, Response) {
+        let mut streamed = Vec::new();
+        let mut done = None;
+        for ev in h.stream() {
+            match ev {
+                TokenEvent::Token { index, token, .. } => {
+                    assert_eq!(index, streamed.len(), "token indices must be contiguous");
+                    streamed.push(token);
+                }
+                TokenEvent::Done(r) => {
+                    done = Some(r);
+                }
+            }
+        }
+        (streamed, done.expect("stream must end with Done"))
+    }
+
     #[test]
     fn serves_concurrent_requests_end_to_end() {
         let Some(server) = server() else { return };
-        let opts = RequestOptions { max_new_tokens: 4, ..Default::default() };
-        let rxs: Vec<_> = (0..6)
-            .map(|i| server.submit(&format!("prompt {i} the red fox"), opts.clone()).unwrap())
+        let handles: Vec<_> = (0..6)
+            .map(|i| {
+                server
+                    .request(CompletionRequest::new(format!("prompt {i} the red fox")).max_tokens(4))
+                    .unwrap()
+            })
             .collect();
-        for rx in rxs {
-            let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+        for h in handles {
+            let (streamed, resp) = drain(h);
             assert!(resp.error.is_none(), "{:?}", resp.error);
             assert_eq!(resp.generated_tokens(), 4);
+            assert_eq!(streamed, resp.tokens, "streamed tokens must match the final response");
             assert!(resp.latency_ms >= resp.ttft_ms);
         }
         assert_eq!(server.metrics.requests_completed.load(Ordering::Relaxed), 6);
@@ -146,6 +255,8 @@ mod tests {
         // well under 24.
         let steps = server.metrics.decode_steps.load(Ordering::Relaxed);
         assert!(steps < 24, "no batching happened: {steps} steps");
+        // every completion claimed exactly one slot (no churn)
+        assert_eq!(server.metrics.slot_allocs.load(Ordering::Relaxed), 6);
         server.shutdown();
     }
 
@@ -171,17 +282,19 @@ mod tests {
         }
         let server = Server::start(model, &ServerConfig { queue_depth: 16, ..Default::default() });
         let tiers = ["dense", "lp", "lp_aggr"];
-        let rxs: Vec<_> = (0..6)
+        let handles: Vec<_> = (0..6)
             .map(|i| {
-                let opts = RequestOptions { max_new_tokens: 3, ..Default::default() }
-                    .with_tier(tiers[i % tiers.len()]);
-                server.submit(&format!("prompt {i} the red fox"), opts).unwrap()
+                let req = CompletionRequest::new(format!("prompt {i} the red fox"))
+                    .max_tokens(3)
+                    .tier(tiers[i % tiers.len()]);
+                (tiers[i % tiers.len()], server.request(req).unwrap())
             })
             .collect();
-        for rx in rxs {
-            let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+        for (tier, h) in handles {
+            let resp = h.wait_timeout(Duration::from_secs(120)).unwrap();
             assert!(resp.error.is_none(), "{:?}", resp.error);
             assert_eq!(resp.generated_tokens(), 3);
+            assert_eq!(resp.tier.as_deref(), Some(tier), "response must name its tier");
         }
         let stats = server.metrics.tier_stats();
         let names: Vec<&str> = stats.iter().map(|(n, _)| n.as_str()).collect();
@@ -190,11 +303,12 @@ mod tests {
             assert_eq!(st.tokens, 6, "tier {name}: 2 requests × 3 tokens");
         }
         // unknown tier: rejected end to end with the available tiers named
-        let resp = server
-            .submit_blocking("hi", RequestOptions::default().with_tier("turbo"))
-            .unwrap();
-        let err = resp.error.as_deref().unwrap_or("");
-        assert!(err.contains("turbo") && err.contains("lp_aggr"), "{err}");
+        // and the stable machine-readable code
+        let resp = server.request(CompletionRequest::new("hi").tier("turbo")).unwrap();
+        let resp = resp.wait().unwrap();
+        let err = resp.error.clone().expect("must fail");
+        assert_eq!(err.code, ErrorCode::UnknownTier);
+        assert!(err.message.contains("turbo") && err.message.contains("lp_aggr"), "{err}");
         server.shutdown();
     }
 
@@ -202,8 +316,25 @@ mod tests {
     fn oversized_prompt_fails_cleanly() {
         let Some(server) = server() else { return };
         let long = "x".repeat(400); // > ctx 256
-        let resp = server.submit_blocking(&long, RequestOptions::default()).unwrap();
-        assert!(resp.error.is_some());
+        let resp = server.request(CompletionRequest::new(long)).unwrap().wait().unwrap();
+        let err = resp.error.expect("must fail");
+        assert_eq!(err.code, ErrorCode::InvalidRequest, "{err}");
+        server.shutdown();
+    }
+
+    /// The deprecated shims stay functional for external callers until
+    /// removal (in-repo callers are all migrated to `request()`).
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_submit_shims_still_work() {
+        let Some(server) = server() else { return };
+        let opts = RequestOptions { max_new_tokens: 2, ..Default::default() };
+        let h = server.submit("the red fox", opts.clone()).unwrap();
+        let resp = h.wait().unwrap();
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert_eq!(resp.generated_tokens(), 2);
+        let resp = server.submit_blocking("the red fox", opts).unwrap();
+        assert_eq!(resp.generated_tokens(), 2);
         server.shutdown();
     }
 }

@@ -28,6 +28,24 @@ pub enum Error {
     #[error("serving: {0}")]
     Serving(String),
 
+    /// Client-side request errors: malformed wire payloads and admission
+    /// bounds the caller can fix (prompt/budget limits). Maps to HTTP 400
+    /// via `api::ErrorCode::InvalidRequest`.
+    #[error("bad request: {0}")]
+    BadRequest(String),
+
+    /// A serving tier the model's manifest does not carry. Names the
+    /// available tiers so the caller can pick one; maps to HTTP 404 via
+    /// `api::ErrorCode::UnknownTier`.
+    #[error("tier `{tier}` not served by this model (manifest variants: {available})")]
+    UnknownTier { tier: String, available: String },
+
+    /// Transient capacity exhaustion (queue back-pressure, page pools):
+    /// the request may succeed later unchanged. Maps to HTTP 429 via
+    /// `api::ErrorCode::Overloaded`.
+    #[error("overloaded: {0}")]
+    Overloaded(String),
+
     #[error("verify: {0}")]
     Verify(String),
 

@@ -21,9 +21,14 @@
 //!   manifest: runs at load time, as `truedepth verify`, and as a CI gate.
 //! * [`obs`] — deterministic tracing + metrics export on the simulated
 //!   clock: Chrome/Perfetto traces and machine-readable snapshots.
+//! * [`api`] — the typed request/response schema (completions wire format,
+//!   stable error codes) shared by the in-process path and the HTTP edge.
+//! * [`serve`] — std-only HTTP/1.1 front-end: `truedepth serve --listen`
+//!   streams tokens as SSE and sheds overload before any slot is claimed.
 //!
 //! See DESIGN.md for the experiment index and EXPERIMENTS.md for results.
 
+pub mod api;
 pub mod bench;
 pub mod cli;
 pub mod config;
@@ -37,6 +42,7 @@ pub mod obs;
 pub mod parallel;
 pub mod profiling;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod text;
 pub mod util;

@@ -13,6 +13,7 @@
 //!             [--max-cached-execs N] --requests N
 //!             [--paged [--page-pool N]]
 //!             [--trace-out F] [--metrics-out F]
+//!             [--listen ADDR [--http-workers N] [--http-backlog N]]
 //!                                synthetic load demo; --tiers serves every
 //!                                manifest plan variant concurrently
 //!                                (requests cycle dense/lp/lp_aggr).
@@ -31,13 +32,21 @@
 //!                                --metrics-out writes a machine-readable
 //!                                metrics snapshot (both deterministic; see
 //!                                README "Observability")
+//!                                --listen ADDR serves the HTTP API instead
+//!                                of synthetic load: POST /v1/completions
+//!                                (SSE streaming via "stream": true),
+//!                                GET /healthz, GET /metrics,
+//!                                POST /admin/shutdown (see docs/api.md)
+//!   apidoc                       print docs/api.md, generated from the
+//!                                api:: schema (regenerate after API edits)
 //!
 //! Examples live in `examples/` (quickstart, serve_batch, depth_explorer);
 //! experiment regenerators in `rust/src/bin/` (see DESIGN.md).
 
+use truedepth::api::CompletionRequest;
 use truedepth::cli::Args;
 use truedepth::config::ServerConfig;
-use truedepth::coordinator::{RequestOptions, Server};
+use truedepth::coordinator::Server;
 use truedepth::eval::ppl::{eval_windows, perplexity};
 use truedepth::gen::{generate, Sampler};
 use truedepth::harness::{default_net, no_net, ScoringCtx};
@@ -55,6 +64,10 @@ fn main() {
         "generate" => cmd_generate(&args),
         "ppl" => cmd_ppl(&args),
         "serve" => cmd_serve(&args),
+        "apidoc" => {
+            print!("{}", truedepth::api::docs::render_api_md());
+            Ok(())
+        }
         _ => {
             println!("{}", HELP);
             Ok(())
@@ -67,7 +80,7 @@ fn main() {
 }
 
 const HELP: &str = "truedepth — Layer Parallelism for LLM inference
-usage: truedepth <info|verify|generate|ppl|serve> [options]   (see src/main.rs docs)";
+usage: truedepth <info|verify|generate|ppl|serve|apidoc> [options]   (see src/main.rs docs)";
 
 fn cmd_verify(args: &Args) -> truedepth::Result<()> {
     let dir = match args.get("artifacts") {
@@ -218,53 +231,68 @@ fn cmd_serve(args: &Args) -> truedepth::Result<()> {
     let trace_out = args.get("trace-out").map(std::path::PathBuf::from);
     let metrics_out = args.get("metrics-out").map(std::path::PathBuf::from);
     let tracer = trace_out.as_ref().map(|_| std::sync::Arc::new(Tracer::new()));
-    let server = match &tracer {
+    let server = std::sync::Arc::new(match &tracer {
         Some(t) => Server::start_traced(serving, &ServerConfig::default(), t.clone()),
         None => Server::start(serving, &ServerConfig::default()),
-    };
-
-    println!(
-        "serving {model} [{}] — {n_requests} synthetic requests",
-        depths.join(" ")
-    );
-    let t0 = std::time::Instant::now();
-    // --paged load: every request carries the same system prompt ahead of
-    // its own document snippet, so the shared-prefix index prefills those
-    // leading blocks once and every later request attaches them — the
-    // reuse shows up as kv.prefix_hits in the report and the snapshot.
-    const SYSTEM_PROMPT: &str = "system: you are a terse assistant. answer only from the \
-         provided context, cite sources, never speculate. ";
-    let rxs: Vec<_> = (0..n_requests)
-        .map(|i| {
-            let doc = corpus::eval_doc(DATA_SEED, 1000 + i as u64);
-            let snippet = &doc[..doc.len().min(if paged { 16 } else { 48 })];
-            let prompt = if paged {
-                format!("{SYSTEM_PROMPT}{snippet}")
-            } else {
-                snippet.to_string()
-            };
-            let tier = multi.then(|| tiers[i % tiers.len()].clone());
-            server.submit(
-                &prompt,
-                RequestOptions { max_new_tokens: 16, sampler: Sampler::Greedy, tier },
-            )
-        })
-        .collect::<truedepth::Result<_>>()?;
-    let mut total_tokens = 0;
-    for rx in rxs {
-        let resp = rx.recv().map_err(|_| truedepth::Error::msg("lost response"))?;
-        total_tokens += resp.generated_tokens();
-    }
-    let wall = t0.elapsed().as_secs_f64();
-    println!("{}", server.metrics.report());
-    println!(
-        "throughput: {:.1} generated tok/s ({total_tokens} tokens / {wall:.2}s)",
-        total_tokens as f64 / wall
-    );
+    });
     let metrics = server.metrics.clone();
-    // shutdown drains the scheduler, which flushes the mesh event track
-    // into the tracer — export only after it returns
-    server.shutdown();
+
+    if let Some(listen) = args.get("listen") {
+        // network mode: serve the HTTP API until POST /admin/shutdown
+        let cfg = truedepth::serve::HttpConfig {
+            workers: args.get_usize("http-workers", 4),
+            backlog: args.get_usize("http-backlog", 16),
+        };
+        let edge = truedepth::serve::serve(server.clone(), listen, &cfg)?;
+        println!(
+            "serving {model} [{}] on http://{} — POST /v1/completions (docs/api.md)",
+            depths.join(" "),
+            edge.local_addr()
+        );
+        edge.wait();
+        println!("{}", metrics.report());
+    } else {
+        println!(
+            "serving {model} [{}] — {n_requests} synthetic requests",
+            depths.join(" ")
+        );
+        let t0 = std::time::Instant::now();
+        // --paged load: every request carries the same system prompt ahead
+        // of its own document snippet, so the shared-prefix index prefills
+        // those leading blocks once and every later request attaches them —
+        // the reuse shows up as kv.prefix_hits in the report and snapshot.
+        const SYSTEM_PROMPT: &str = "system: you are a terse assistant. answer only from the \
+             provided context, cite sources, never speculate. ";
+        let handles: Vec<_> = (0..n_requests)
+            .map(|i| {
+                let doc = corpus::eval_doc(DATA_SEED, 1000 + i as u64);
+                let snippet = &doc[..doc.len().min(if paged { 16 } else { 48 })];
+                let prompt = if paged {
+                    format!("{SYSTEM_PROMPT}{snippet}")
+                } else {
+                    snippet.to_string()
+                };
+                let mut req = CompletionRequest::new(prompt).max_tokens(16);
+                if multi {
+                    req = req.tier(&tiers[i % tiers.len()]);
+                }
+                server.request(req)
+            })
+            .collect::<truedepth::Result<_>>()?;
+        let mut total_tokens = 0;
+        for h in handles {
+            total_tokens += h.wait()?.generated_tokens();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        println!("{}", metrics.report());
+        println!(
+            "throughput: {:.1} generated tok/s ({total_tokens} tokens / {wall:.2}s)",
+            total_tokens as f64 / wall
+        );
+    }
+    // dropping the last handle drains the scheduler, which flushes the
+    // mesh event track into the tracer — export only after it returns
+    drop(server);
     if let (Some(tr), Some(path)) = (&tracer, &trace_out) {
         tr.write_chrome(path)?;
         println!("trace: {} ({} events)", path.display(), tr.len());

@@ -713,10 +713,7 @@ impl ServingModel {
     pub fn variant(&self, id: &VariantId) -> Result<&PlanVariant> {
         self.variants.get(id).ok_or_else(|| {
             let have: Vec<&str> = self.variants.keys().map(|v| v.as_str()).collect();
-            Error::Serving(format!(
-                "tier `{id}` not served by this model (manifest variants: {})",
-                have.join(", ")
-            ))
+            Error::UnknownTier { tier: id.to_string(), available: have.join(", ") }
         })
     }
 
@@ -998,7 +995,7 @@ impl ServingModel {
     pub fn check_admission(&self, prompt_len: usize, max_new: usize) -> Result<()> {
         let ctx = self.entry.config.ctx;
         if prompt_len == 0 {
-            return Err(Error::Serving("empty prompt (nothing to prefill)".into()));
+            return Err(Error::BadRequest("empty prompt (nothing to prefill)".into()));
         }
         let max_prompt = self.max_prompt_len();
         if prompt_len > max_prompt {
@@ -1006,14 +1003,14 @@ impl ServingModel {
                 Some(_) => "the KV context (ctx - 1)".to_string(),
                 None => format!("the largest prefill bucket and ctx {ctx}"),
             };
-            return Err(Error::Serving(format!(
+            return Err(Error::BadRequest(format!(
                 "prompt of {prompt_len} tokens exceeds the admission limit \
                  {max_prompt} ({bound}) — shorten the prompt"
             )));
         }
         let cap = crate::model::kvcache::generation_capacity(ctx, prompt_len);
         if max_new > cap {
-            return Err(Error::Serving(format!(
+            return Err(Error::BadRequest(format!(
                 "request wants {max_new} new tokens but a {prompt_len}-token \
                  prompt leaves room for only {cap} within ctx {ctx} — lower \
                  max_new_tokens or shorten the prompt"
@@ -1131,7 +1128,7 @@ impl ServingModel {
             let k = pg.page_tokens();
             let blocks = (prompt_len + max_new).div_ceil(k).min(pg.blocks_per_slot());
             if !pg.fits(vid, blocks) {
-                return Err(Error::Serving(format!(
+                return Err(Error::Overloaded(format!(
                     "request needs {blocks} KV pages per paged stage under \
                      tier `{vid}` but the page pool can never hold them — \
                      lower max_new_tokens or raise the pool capacity"

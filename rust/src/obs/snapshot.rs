@@ -51,6 +51,8 @@ impl MetricsSnapshot {
             ("requests_submitted", load(&m.requests_submitted)),
             ("requests_completed", load(&m.requests_completed)),
             ("requests_rejected", load(&m.requests_rejected)),
+            ("requests_cancelled", load(&m.requests_cancelled)),
+            ("slot_allocs", load(&m.slot_allocs)),
             ("tokens_generated", load(&m.tokens_generated)),
             ("prefill_tokens", load(&m.prefill_tokens)),
             ("decode_steps", load(&m.decode_steps)),

@@ -1,0 +1,280 @@
+//! Minimal HTTP/1.1 primitives for the network edge — std-only, no
+//! external dependencies (cargo-deny stays green).
+//!
+//! Server-side only, and only what the edge needs: a bounded request-head
+//! reader, a `Content-Length` body reader, and response writers for plain
+//! bodies and chunked SSE streams. Protocol violations surface as
+//! [`ApiError`]s so they go out through the same error envelope as every
+//! other rejection.
+
+use std::io::{self, BufRead, Read, Write};
+
+use crate::api::{ApiError, ErrorCode};
+
+/// Upper bound on the request head (request line + headers). A client
+/// that cannot fit in this never reaches the JSON parser.
+pub const MAX_HEAD_BYTES: usize = 8 * 1024;
+
+/// Upper bound on a request body. Oversized uploads are rejected from the
+/// `Content-Length` header alone, before any body byte is read.
+pub const MAX_BODY_BYTES: usize = 1024 * 1024;
+
+/// Why a request could not be read off the socket.
+#[derive(Debug)]
+pub enum ReadError {
+    /// The peer closed or the socket failed — nothing to respond to.
+    Disconnected,
+    /// A protocol violation; answer with this error envelope.
+    Bad(ApiError),
+}
+
+fn bad(msg: impl Into<String>) -> ApiError {
+    ApiError::new(ErrorCode::InvalidRequest, msg)
+}
+
+/// Parsed request line + headers.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RequestHead {
+    pub method: String,
+    pub path: String,
+    headers: Vec<(String, String)>,
+}
+
+impl RequestHead {
+    /// Header lookup, case-insensitive per RFC 9110.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// The declared body length (0 when the header is absent).
+    pub fn content_length(&self) -> Result<usize, ApiError> {
+        match self.header("content-length") {
+            None => Ok(0),
+            Some(v) => v.parse().map_err(|_| bad("invalid Content-Length header")),
+        }
+    }
+
+    /// `Expect: 100-continue` — the client wants a go-ahead before
+    /// sending the body (curl does this for larger uploads).
+    pub fn expects_continue(&self) -> bool {
+        self.header("expect").is_some_and(|v| v.eq_ignore_ascii_case("100-continue"))
+    }
+}
+
+/// Read the request head off the stream: bytes up to the blank line,
+/// bounded by [`MAX_HEAD_BYTES`]. EOF before any byte arrived is a normal
+/// connection close ([`ReadError::Disconnected`]), not a protocol error.
+pub fn read_head<R: BufRead>(r: &mut R) -> Result<RequestHead, ReadError> {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut byte = [0u8; 1];
+    loop {
+        match r.read(&mut byte) {
+            Ok(0) => {
+                return Err(if buf.is_empty() {
+                    ReadError::Disconnected
+                } else {
+                    ReadError::Bad(bad("truncated request head"))
+                });
+            }
+            Ok(_) => buf.push(byte[0]),
+            Err(_) => return Err(ReadError::Disconnected),
+        }
+        if buf.ends_with(b"\r\n\r\n") {
+            break;
+        }
+        if buf.len() > MAX_HEAD_BYTES {
+            return Err(ReadError::Bad(bad("request head too large")));
+        }
+    }
+    let text = std::str::from_utf8(&buf)
+        .map_err(|_| ReadError::Bad(bad("request head is not valid UTF-8")))?;
+    parse_head(text).map_err(ReadError::Bad)
+}
+
+/// Parse a complete head (request line + header lines). Split out of
+/// [`read_head`] so the grammar is testable without a stream.
+pub fn parse_head(text: &str) -> Result<RequestHead, ApiError> {
+    let mut lines = text.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split(' ');
+    let (method, path, version) = match (parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(p), Some(v)) if !m.is_empty() && parts.next().is_none() => (m, p, v),
+        _ => return Err(bad(format!("malformed request line `{request_line}`"))),
+    };
+    if !version.starts_with("HTTP/1.") {
+        return Err(bad(format!("unsupported protocol `{version}`")));
+    }
+    let mut headers = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            break; // the blank line before the body
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(bad(format!("malformed header line `{line}`")));
+        };
+        headers.push((name.trim().to_string(), value.trim().to_string()));
+    }
+    Ok(RequestHead { method: method.to_string(), path: path.to_string(), headers })
+}
+
+/// Read exactly `len` body bytes (the caller has already validated `len`
+/// against [`MAX_BODY_BYTES`]) and require UTF-8 — every accepted body is
+/// JSON.
+pub fn read_body<R: Read>(r: &mut R, len: usize) -> Result<String, ReadError> {
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf).map_err(|_| ReadError::Disconnected)?;
+    String::from_utf8(buf).map_err(|_| ReadError::Bad(bad("request body is not valid UTF-8")))
+}
+
+/// Reason phrase for the statuses this edge emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        _ => "",
+    }
+}
+
+/// Write a complete non-streaming response. Every response closes the
+/// connection — one request per connection keeps the edge stateless.
+pub fn write_response(
+    w: &mut impl Write,
+    status: u16,
+    content_type: &str,
+    body: &str,
+) -> io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        reason(status),
+        body.len(),
+    )?;
+    w.flush()
+}
+
+/// Write an error envelope with its taxonomy-assigned status.
+pub fn write_error(w: &mut impl Write, err: &ApiError) -> io::Result<()> {
+    write_response(w, err.code.http_status(), "application/json", &err.to_json())
+}
+
+/// The interim go-ahead for `Expect: 100-continue`.
+pub fn write_continue(w: &mut impl Write) -> io::Result<()> {
+    w.write_all(b"HTTP/1.1 100 Continue\r\n\r\n")?;
+    w.flush()
+}
+
+/// Start a streamed (chunked-transfer) SSE response.
+pub fn write_sse_header(w: &mut impl Write) -> io::Result<()> {
+    w.write_all(
+        b"HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n",
+    )?;
+    w.flush()
+}
+
+/// One SSE event (`data: {payload}\n\n`) framed as one HTTP chunk, flushed
+/// immediately — the per-token latency IS the product here.
+pub fn write_sse_event(w: &mut impl Write, payload: &str) -> io::Result<()> {
+    let data = format!("data: {payload}\n\n");
+    write!(w, "{:x}\r\n{data}\r\n", data.len())?;
+    w.flush()
+}
+
+/// The chunked-transfer terminator.
+pub fn write_sse_end(w: &mut impl Write) -> io::Result<()> {
+    w.write_all(b"0\r\n\r\n")?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn reads_and_parses_a_request_head() {
+        let raw = b"POST /v1/completions HTTP/1.1\r\nHost: x\r\nContent-Length: 12\r\nExpect: 100-CONTINUE\r\n\r\n{\"prompt\":1}";
+        let mut r = Cursor::new(&raw[..]);
+        let head = read_head(&mut r).expect("valid head");
+        assert_eq!(head.method, "POST");
+        assert_eq!(head.path, "/v1/completions");
+        assert_eq!(head.header("HOST"), Some("x"), "header lookup is case-insensitive");
+        assert_eq!(head.content_length().unwrap(), 12);
+        assert!(head.expects_continue());
+        // the body is still unread on the stream
+        assert_eq!(read_body(&mut r, 12).unwrap(), "{\"prompt\":1}");
+    }
+
+    #[test]
+    fn head_errors_are_classified() {
+        // clean close before any byte: not a protocol error
+        assert!(matches!(read_head(&mut Cursor::new(b"")), Err(ReadError::Disconnected)));
+        // bytes then EOF without the blank line: truncated
+        let e = read_head(&mut Cursor::new(&b"GET / HTTP/1.1\r\n"[..])).unwrap_err();
+        match e {
+            ReadError::Bad(e) => assert!(e.message.contains("truncated"), "{e}"),
+            other => panic!("{other:?}"),
+        }
+        // unbounded head: rejected at the cap
+        let big = format!("GET / HTTP/1.1\r\nX: {}\r\n\r\n", "y".repeat(MAX_HEAD_BYTES));
+        let e = read_head(&mut Cursor::new(big.as_bytes())).unwrap_err();
+        match e {
+            ReadError::Bad(e) => assert!(e.message.contains("too large"), "{e}"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_head_rejects_malformed_grammar() {
+        for (raw, needle) in [
+            ("GET /\r\n\r\n", "malformed request line"),
+            ("GET / HTTP/1.1 extra\r\n\r\n", "malformed request line"),
+            ("GET / SPDY/3\r\n\r\n", "unsupported protocol"),
+            ("GET / HTTP/1.1\r\nno-colon-here\r\n\r\n", "malformed header line"),
+        ] {
+            let e = parse_head(raw).unwrap_err();
+            assert_eq!(e.code, ErrorCode::InvalidRequest, "{raw}");
+            assert!(e.message.contains(needle), "{raw}: {e}");
+        }
+        // a bogus Content-Length parses as a head but fails on use
+        let head = parse_head("GET / HTTP/1.1\r\nContent-Length: lots\r\n\r\n").unwrap();
+        assert!(head.content_length().unwrap_err().message.contains("Content-Length"));
+        // absent Content-Length means no body
+        assert_eq!(parse_head("GET / HTTP/1.1\r\n\r\n").unwrap().content_length().unwrap(), 0);
+    }
+
+    #[test]
+    fn response_and_error_bytes_are_exact() {
+        let mut out = Vec::new();
+        write_response(&mut out, 200, "text/plain", "ok").unwrap();
+        assert_eq!(
+            String::from_utf8(out).unwrap(),
+            "HTTP/1.1 200 OK\r\nContent-Type: text/plain\r\nContent-Length: 2\r\nConnection: close\r\n\r\nok"
+        );
+        let mut out = Vec::new();
+        write_error(&mut out, &ApiError::new(ErrorCode::Overloaded, "busy")).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"), "{text}");
+        assert!(text.ends_with(r#"{"error":{"code":"overloaded","message":"busy"}}"#), "{text}");
+    }
+
+    #[test]
+    fn sse_stream_uses_chunked_framing() {
+        let mut out = Vec::new();
+        write_sse_header(&mut out).unwrap();
+        write_sse_event(&mut out, r#"{"id":1}"#).unwrap();
+        write_sse_event(&mut out, "[DONE]").unwrap();
+        write_sse_end(&mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("Content-Type: text/event-stream"), "{text}");
+        assert!(text.contains("Transfer-Encoding: chunked"), "{text}");
+        // `data: {"id":1}\n\n` is 16 bytes -> chunk size "10" in hex
+        assert!(text.contains("10\r\ndata: {\"id\":1}\n\n\r\n"), "{text}");
+        assert!(text.ends_with("data: [DONE]\n\n\r\n0\r\n\r\n"), "{text}");
+    }
+}

@@ -1,0 +1,360 @@
+//! Network serving edge: a std-only HTTP/1.1 front-end over
+//! [`coordinator::Server`](crate::coordinator::Server).
+//!
+//! `truedepth serve --listen <addr>` lands here. The shape is a classic
+//! threadpool accept loop: one acceptor pushes connections into a bounded
+//! queue, a fixed set of workers drains it. Both overload paths shed load
+//! *before* any KV slot is claimed — a full connection queue answers a
+//! canned 429 straight from the acceptor, and the scheduler's admission
+//! checks reject over-budget requests with zero slot churn (the loopback
+//! test pins `slot_allocs` to the completion count).
+//!
+//! Routes (see `docs/api.md`, generated from [`crate::api`]):
+//!
+//! * `POST /v1/completions` — typed completions; `"stream": true` sends
+//!   per-token SSE chunks fed straight from the request's
+//!   [`TokenEvent`] receiver. Between tokens the worker probes the
+//!   client socket, so a disconnected consumer cancels the request at
+//!   the next token boundary instead of generating into the void.
+//! * `GET /healthz` — liveness.
+//! * `GET /metrics` — the live [`obs::MetricsSnapshot`](crate::obs::MetricsSnapshot).
+//! * `POST /admin/shutdown` — stop accepting and drain (used by the CI
+//!   smoke job; bind to loopback in anything resembling production).
+
+pub mod http;
+
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::api::{ApiError, CompletionChunk, CompletionRequest, CompletionResponse, ErrorCode};
+use crate::coordinator::{ResponseHandle, Server, TokenEvent};
+use crate::error::Result;
+use crate::obs::MetricsSnapshot;
+
+/// Edge sizing knobs.
+#[derive(Clone, Debug)]
+pub struct HttpConfig {
+    /// Worker threads draining the connection queue (= max concurrent
+    /// connections being served).
+    pub workers: usize,
+    /// Bounded connection queue between acceptor and workers; a full
+    /// queue sheds the connection with a canned 429 before any parsing.
+    pub backlog: usize,
+}
+
+impl Default for HttpConfig {
+    fn default() -> HttpConfig {
+        HttpConfig { workers: 4, backlog: 16 }
+    }
+}
+
+/// Everything a worker needs besides the connection itself.
+struct EdgeState {
+    server: Arc<Server>,
+    shutdown: AtomicBool,
+    addr: SocketAddr,
+}
+
+/// A running edge. Dropping the handle does NOT stop the listener — call
+/// [`HttpHandle::shutdown`] (or POST `/admin/shutdown` and
+/// [`HttpHandle::wait`]).
+pub struct HttpHandle {
+    state: Arc<EdgeState>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl HttpHandle {
+    /// The bound address (resolves `:0` to the real port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.state.addr
+    }
+
+    /// Block until the edge stops (via [`HttpHandle::shutdown`] from
+    /// another thread, or a `POST /admin/shutdown` from the network).
+    pub fn wait(mut self) {
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+
+    /// Stop accepting, drain in-flight connections, join the threads.
+    pub fn shutdown(self) {
+        self.state.shutdown.store(true, Ordering::SeqCst);
+        // wake the acceptor out of its blocking accept
+        let _ = TcpStream::connect(self.state.addr);
+        self.wait();
+    }
+}
+
+/// Bind `addr` and serve `server` over HTTP until shut down.
+pub fn serve(server: Arc<Server>, addr: &str, cfg: &HttpConfig) -> Result<HttpHandle> {
+    let listener = TcpListener::bind(addr)?;
+    let addr = listener.local_addr()?;
+    let state = Arc::new(EdgeState { server, shutdown: AtomicBool::new(false), addr });
+    let (tx, rx) = sync_channel::<TcpStream>(cfg.backlog.max(1));
+    let rx = Arc::new(Mutex::new(rx));
+    let mut threads = Vec::new();
+
+    let accept_state = state.clone();
+    threads.push(
+        std::thread::Builder::new()
+            .name("http-accept".into())
+            .spawn(move || {
+                for stream in listener.incoming() {
+                    if accept_state.shutdown.load(Ordering::SeqCst) {
+                        break; // dropping `tx` drains the workers out
+                    }
+                    let Ok(stream) = stream else { continue };
+                    if let Err(TrySendError::Full(mut stream)) = tx.try_send(stream) {
+                        // connection-level load shedding: the queue is the
+                        // admission edge, so overload never reaches the
+                        // parser (let alone a slot)
+                        let err = ApiError::new(
+                            ErrorCode::Overloaded,
+                            "connection backlog full; retry later",
+                        );
+                        let _ = http::write_error(&mut stream, &err);
+                    }
+                }
+            })
+            .expect("spawn http acceptor"),
+    );
+
+    for i in 0..cfg.workers.max(1) {
+        let rx: Arc<Mutex<Receiver<TcpStream>>> = rx.clone();
+        let state = state.clone();
+        threads.push(
+            std::thread::Builder::new()
+                .name(format!("http-worker-{i}"))
+                .spawn(move || loop {
+                    // hold the lock only to dequeue, never while serving
+                    let next = rx.lock().unwrap().recv();
+                    match next {
+                        Ok(stream) => handle_conn(&state, stream),
+                        Err(_) => return, // acceptor gone: shutdown
+                    }
+                })
+                .expect("spawn http worker"),
+        );
+    }
+
+    Ok(HttpHandle { state, threads })
+}
+
+/// Serve one connection: one request, one response, close.
+fn handle_conn(state: &EdgeState, mut stream: TcpStream) {
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let head = match http::read_head(&mut reader) {
+        Ok(h) => h,
+        Err(http::ReadError::Disconnected) => return,
+        Err(http::ReadError::Bad(e)) => {
+            let _ = http::write_error(&mut stream, &e);
+            return;
+        }
+    };
+    match (head.method.as_str(), head.path.as_str()) {
+        ("GET", "/healthz") => {
+            let _ = http::write_response(&mut stream, 200, "text/plain", "ok");
+        }
+        ("GET", "/metrics") => {
+            let snap = MetricsSnapshot::new("serve").with_server(&state.server.metrics);
+            let _ = http::write_response(
+                &mut stream,
+                200,
+                "application/json",
+                &snap.to_string_pretty(),
+            );
+        }
+        ("POST", "/v1/completions") => {
+            handle_completion(&state.server, &head, &mut reader, &mut stream);
+        }
+        ("POST", "/admin/shutdown") => {
+            state.shutdown.store(true, Ordering::SeqCst);
+            let _ = http::write_response(&mut stream, 200, "text/plain", "ok");
+            // wake the acceptor so the flag is observed
+            let _ = TcpStream::connect(state.addr);
+        }
+        (method, path) => {
+            let err = ApiError::new(ErrorCode::NotFound, format!("no route {method} {path}"));
+            let _ = http::write_error(&mut stream, &err);
+        }
+    }
+}
+
+/// `POST /v1/completions`: decode the body straight into a typed
+/// [`CompletionRequest`] (one event pass, no DOM), hand it to the
+/// in-process path, and relay the reply stream.
+fn handle_completion(
+    server: &Server,
+    head: &http::RequestHead,
+    reader: &mut impl std::io::BufRead,
+    stream: &mut TcpStream,
+) {
+    let len = match head.content_length() {
+        Ok(l) => l,
+        Err(e) => {
+            let _ = http::write_error(stream, &e);
+            return;
+        }
+    };
+    if len == 0 {
+        let e = ApiError::new(ErrorCode::InvalidRequest, "missing request body");
+        let _ = http::write_error(stream, &e);
+        return;
+    }
+    if len > http::MAX_BODY_BYTES {
+        // rejected from the header alone — the body is never read
+        let e = ApiError::new(
+            ErrorCode::InvalidRequest,
+            format!("request body of {len} bytes exceeds the {} byte limit", http::MAX_BODY_BYTES),
+        );
+        let _ = http::write_error(stream, &e);
+        return;
+    }
+    if head.expects_continue() && http::write_continue(stream).is_err() {
+        return;
+    }
+    let body = match http::read_body(reader, len) {
+        Ok(b) => b,
+        Err(http::ReadError::Disconnected) => return,
+        Err(http::ReadError::Bad(e)) => {
+            let _ = http::write_error(stream, &e);
+            return;
+        }
+    };
+    let req = match CompletionRequest::from_json(&body) {
+        Ok(r) => r,
+        Err(e) => {
+            let _ = http::write_error(stream, &ApiError::from(&e));
+            return;
+        }
+    };
+    let streaming = req.stream;
+    // back-pressure surfaces here as Error::Overloaded -> 429, before any
+    // slot work; admission rejections arrive as the first TokenEvent
+    let handle = match server.request(req) {
+        Ok(h) => h,
+        Err(e) => {
+            let _ = http::write_error(stream, &ApiError::from(&e));
+            return;
+        }
+    };
+    if streaming {
+        stream_completion(handle, stream);
+    } else {
+        match handle.wait() {
+            Ok(resp) => match &resp.error {
+                Some(e) => {
+                    let _ = http::write_error(stream, e);
+                }
+                None => {
+                    let _ = http::write_response(
+                        stream,
+                        200,
+                        "application/json",
+                        &CompletionResponse::from_response(&resp).to_json(),
+                    );
+                }
+            },
+            Err(e) => {
+                let _ = http::write_error(stream, &ApiError::from(&e));
+            }
+        }
+    }
+}
+
+/// How often a streaming worker probes the client connection while the
+/// scheduler has not produced the next token yet.
+const STREAM_PROBE_INTERVAL: Duration = Duration::from_millis(50);
+
+/// Relay a reply stream as SSE. The FIRST scheduler event decides the
+/// HTTP status line: an admission rejection arrives as an immediate
+/// `Done` and goes out as a plain error envelope (429/404/400), never as
+/// a 200 stream.
+fn stream_completion(handle: ResponseHandle, stream: &mut TcpStream) {
+    let Some(first) = handle.next_event() else {
+        let e = ApiError::new(ErrorCode::Internal, "scheduler dropped the request");
+        let _ = http::write_error(stream, &e);
+        return;
+    };
+    if let TokenEvent::Done(r) = &first {
+        if let Some(e) = &r.error {
+            let _ = http::write_error(stream, e);
+            return;
+        }
+    }
+    if http::write_sse_header(stream).is_err() {
+        return;
+    }
+    let id = handle.id();
+    let mut next = Some(first);
+    loop {
+        match next.take() {
+            Some(TokenEvent::Token { index, token, text }) => {
+                let chunk = CompletionChunk { id, index, token, text };
+                if http::write_sse_event(stream, &chunk.to_json()).is_err() {
+                    // client gone mid-stream: dropping `handle` closes the
+                    // reply channel, which the scheduler notices at the
+                    // next token boundary — slot reclaimed, run continues
+                    return;
+                }
+            }
+            Some(TokenEvent::Done(r)) => {
+                let payload = match &r.error {
+                    Some(e) => e.to_json(),
+                    None => CompletionResponse::from_response(&r).to_json(),
+                };
+                let _ = http::write_sse_event(stream, &payload);
+                let _ = http::write_sse_event(stream, "[DONE]");
+                let _ = http::write_sse_end(stream);
+                return;
+            }
+            None => {}
+        }
+        // wait for the next event, probing the socket so a disconnected
+        // consumer cancels instead of being generated for invisibly
+        loop {
+            use std::sync::mpsc::RecvTimeoutError;
+            match handle.events().recv_timeout(STREAM_PROBE_INTERVAL) {
+                Ok(ev) => {
+                    next = Some(ev);
+                    break;
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    if client_gone(stream) {
+                        return; // drops `handle` -> cancellation
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    let _ = http::write_sse_end(stream);
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// Probe whether the peer hung up: a non-blocking read returning 0 bytes
+/// means orderly close. (`WouldBlock` — the common case — means alive.)
+fn client_gone(stream: &TcpStream) -> bool {
+    if stream.set_nonblocking(true).is_err() {
+        return true;
+    }
+    let mut probe = [0u8; 8];
+    // `Read` is implemented for `&TcpStream`, so the probe needs no clone
+    let mut half: &TcpStream = stream;
+    let gone = match std::io::Read::read(&mut half, &mut probe) {
+        Ok(0) => true,
+        Ok(_) => false, // stray bytes; a one-request connection ignores them
+        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => false,
+        Err(_) => true,
+    };
+    let _ = stream.set_nonblocking(false);
+    gone
+}

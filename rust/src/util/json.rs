@@ -1,11 +1,33 @@
 //! Minimal JSON parser + serializer (substrate: no serde in the offline
 //! vendor set). Covers the full JSON grammar; used for the artifact
 //! manifest, checkpoint configs and experiment result files.
+//!
+//! Two access styles share one lexer:
+//!
+//! * [`Value::parse`] — the DOM: a [`Value`] tree, used wherever the
+//!   document is small and random access is convenient (manifests,
+//!   configs, result files).
+//! * [`read_events`] — a callback/visitor reader for the serving hot
+//!   path: one left-to-right pass handing each syntactic [`Event`] to a
+//!   closure, borrowing escape-free strings straight from the input so a
+//!   typical request body decodes with no per-field allocation. The
+//!   write side is [`JsonWriter`], which streams straight into a
+//!   `String` — request decode → response encode never round-trips
+//!   through an intermediate `Value`.
+//!
+//! Both paths reject unescaped control characters in strings and cap
+//! nesting at [`MAX_DEPTH`] (a deep `[[[[…` body from the network must
+//! error, not overflow the parser's stack).
 
+use std::borrow::Cow;
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
 use crate::error::{Error, Result};
+
+/// Maximum container nesting either parser accepts. Far above any real
+/// manifest or API body, far below stack exhaustion.
+pub const MAX_DEPTH: usize = 128;
 
 /// A parsed JSON value. Objects use BTreeMap for deterministic ordering.
 #[derive(Clone, Debug, PartialEq)]
@@ -20,7 +42,7 @@ pub enum Value {
 
 impl Value {
     pub fn parse(text: &str) -> Result<Value> {
-        let mut p = Parser { b: text.as_bytes(), i: 0 };
+        let mut p = Parser::new(text);
         p.ws();
         let v = p.value()?;
         p.ws();
@@ -110,13 +132,7 @@ impl Value {
         match self {
             Value::Null => out.push_str("null"),
             Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
-            Value::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
-                    let _ = write!(out, "{}", *n as i64);
-                } else {
-                    let _ = write!(out, "{n}");
-                }
-            }
+            Value::Num(n) => write_num(out, *n),
             Value::Str(s) => write_escaped(out, s),
             Value::Arr(a) => {
                 out.push('[');
@@ -152,6 +168,17 @@ impl Value {
                 out.push('}');
             }
         }
+    }
+}
+
+/// Shared number formatting: integral values print without a fractional
+/// part so counters stay diff-friendly; everything else uses the shortest
+/// round-trip float form.
+fn write_num(out: &mut String, n: f64) {
+    if n.fract() == 0.0 && n.abs() < 1e15 {
+        let _ = write!(out, "{}", n as i64);
+    } else {
+        let _ = write!(out, "{n}");
     }
 }
 
@@ -193,11 +220,25 @@ pub fn arr(v: Vec<Value>) -> Value {
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
+    fn new(text: &'a str) -> Parser<'a> {
+        Parser { b: text.as_bytes(), i: 0, depth: 0 }
+    }
+
     fn err(&self, msg: &str) -> Error {
         Error::Json { at: self.i, msg: msg.to_string() }
+    }
+
+    /// Bump the container nesting level, erroring past [`MAX_DEPTH`].
+    fn enter(&mut self) -> Result<()> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.err(&format!("nesting deeper than {MAX_DEPTH} levels")));
+        }
+        Ok(())
     }
 
     fn ws(&mut self) {
@@ -221,8 +262,18 @@ impl<'a> Parser<'a> {
 
     fn value(&mut self) -> Result<Value> {
         match self.peek().ok_or_else(|| self.err("eof"))? {
-            b'{' => self.object(),
-            b'[' => self.array(),
+            b'{' => {
+                self.enter()?;
+                let v = self.object()?;
+                self.depth -= 1;
+                Ok(v)
+            }
+            b'[' => {
+                self.enter()?;
+                let v = self.array()?;
+                self.depth -= 1;
+                Ok(v)
+            }
             b'"' => Ok(Value::Str(self.string()?)),
             b't' => self.lit("true", Value::Bool(true)),
             b'f' => self.lit("false", Value::Bool(false)),
@@ -298,7 +349,40 @@ impl<'a> Parser<'a> {
     }
 
     fn string(&mut self) -> Result<String> {
+        self.string_cow().map(Cow::into_owned)
+    }
+
+    /// Borrow the string straight from the input when it contains no
+    /// escapes — the event-reader fast path. Falls back to the owned
+    /// decoder at the first backslash.
+    fn string_cow(&mut self) -> Result<Cow<'a, str>> {
         self.eat(b'"')?;
+        let start = self.i;
+        loop {
+            match self.b.get(self.i).copied() {
+                None => return Err(self.err("eof in string")),
+                Some(b'"') => {
+                    let raw = std::str::from_utf8(&self.b[start..self.i])
+                        .map_err(|_| self.err("bad utf-8"))?;
+                    self.i += 1;
+                    return Ok(Cow::Borrowed(raw));
+                }
+                Some(b'\\') => {
+                    // rewind to just past the opening quote; re-decode owned
+                    self.i = start;
+                    return self.string_owned().map(Cow::Owned);
+                }
+                Some(c) if c < 0x20 => {
+                    return Err(self.err("unescaped control character in string"));
+                }
+                Some(_) => self.i += 1,
+            }
+        }
+    }
+
+    /// Decode a string with escapes into an owned buffer; the cursor must
+    /// sit just past the opening quote.
+    fn string_owned(&mut self) -> Result<String> {
         let mut out = String::new();
         loop {
             let c = *self.b.get(self.i).ok_or_else(|| self.err("eof in string"))?;
@@ -350,6 +434,10 @@ impl<'a> Parser<'a> {
                         _ => return Err(self.err("bad escape")),
                     }
                 }
+                c if c < 0x20 => {
+                    // RFC 8259 §7: control characters MUST be escaped
+                    return Err(self.err("unescaped control character in string"));
+                }
                 c => {
                     // re-assemble utf-8 multibyte sequences
                     if c < 0x80 {
@@ -375,6 +463,10 @@ impl<'a> Parser<'a> {
     }
 
     fn number(&mut self) -> Result<Value> {
+        self.number_f64().map(Value::Num)
+    }
+
+    fn number_f64(&mut self) -> Result<f64> {
         let start = self.i;
         while self
             .peek()
@@ -384,9 +476,234 @@ impl<'a> Parser<'a> {
             self.i += 1;
         }
         let txt = std::str::from_utf8(&self.b[start..self.i]).unwrap();
-        txt.parse::<f64>()
-            .map(Value::Num)
-            .map_err(|_| self.err("bad number"))
+        txt.parse::<f64>().map_err(|_| self.err("bad number"))
+    }
+
+    // ---- event (callback/visitor) reader -----------------------------------
+
+    fn event_value<F: FnMut(Event<'a>) -> Result<()>>(&mut self, f: &mut F) -> Result<()> {
+        match self.peek().ok_or_else(|| self.err("eof"))? {
+            b'{' => {
+                self.enter()?;
+                self.event_object(f)?;
+                self.depth -= 1;
+                Ok(())
+            }
+            b'[' => {
+                self.enter()?;
+                self.event_array(f)?;
+                self.depth -= 1;
+                Ok(())
+            }
+            b'"' => {
+                let s = self.string_cow()?;
+                f(Event::Str(s))
+            }
+            b't' => {
+                self.lit("true", Value::Bool(true))?;
+                f(Event::Bool(true))
+            }
+            b'f' => {
+                self.lit("false", Value::Bool(false))?;
+                f(Event::Bool(false))
+            }
+            b'n' => {
+                self.lit("null", Value::Null)?;
+                f(Event::Null)
+            }
+            _ => {
+                let n = self.number_f64()?;
+                f(Event::Num(n))
+            }
+        }
+    }
+
+    fn event_object<F: FnMut(Event<'a>) -> Result<()>>(&mut self, f: &mut F) -> Result<()> {
+        self.eat(b'{')?;
+        f(Event::BeginObject)?;
+        self.ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return f(Event::EndObject);
+        }
+        loop {
+            self.ws();
+            let k = self.string_cow()?;
+            // duplicate-key policy is the visitor's call: it sees every key
+            // in order (the api module rejects repeats with field context)
+            f(Event::Key(k))?;
+            self.ws();
+            self.eat(b':')?;
+            self.ws();
+            self.event_value(f)?;
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return f(Event::EndObject);
+                }
+                _ => return Err(self.err("expected `,` or `}`")),
+            }
+        }
+    }
+
+    fn event_array<F: FnMut(Event<'a>) -> Result<()>>(&mut self, f: &mut F) -> Result<()> {
+        self.eat(b'[')?;
+        f(Event::BeginArray)?;
+        self.ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return f(Event::EndArray);
+        }
+        loop {
+            self.ws();
+            self.event_value(f)?;
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return f(Event::EndArray);
+                }
+                _ => return Err(self.err("expected `,` or `]`")),
+            }
+        }
+    }
+}
+
+/// One syntactic element from [`read_events`]. Strings and keys are
+/// `Cow::Borrowed` straight from the input whenever they contain no
+/// escapes, so the common request body decodes without per-field copies.
+#[derive(Debug, PartialEq)]
+pub enum Event<'a> {
+    BeginObject,
+    /// Object member name (always precedes its value's events).
+    Key(Cow<'a, str>),
+    EndObject,
+    BeginArray,
+    EndArray,
+    Str(Cow<'a, str>),
+    Num(f64),
+    Bool(bool),
+    Null,
+}
+
+/// Single-pass callback reader over one complete JSON document. The
+/// closure sees every [`Event`] left-to-right and may abort the parse by
+/// returning an error (propagated verbatim). Trailing non-whitespace
+/// after the document is rejected, same as [`Value::parse`].
+pub fn read_events<'a, F: FnMut(Event<'a>) -> Result<()>>(text: &'a str, mut f: F) -> Result<()> {
+    let mut p = Parser::new(text);
+    p.ws();
+    p.event_value(&mut f)?;
+    p.ws();
+    if p.i != p.b.len() {
+        return Err(p.err("trailing data"));
+    }
+    Ok(())
+}
+
+/// Streaming JSON serializer: writes straight into a `String` with no
+/// intermediate [`Value`] tree. Commas and colons are inserted
+/// automatically; the caller provides structure via
+/// `begin_obj`/`key`/…/`end_obj`. Escaping matches [`Value`]'s writer, so
+/// output always re-parses.
+#[derive(Default)]
+pub struct JsonWriter {
+    out: String,
+    /// One entry per open container: `true` until the first element lands.
+    first: Vec<bool>,
+    /// Set between `key()` and the value that follows it.
+    pending_key: bool,
+}
+
+impl JsonWriter {
+    pub fn new() -> JsonWriter {
+        JsonWriter::default()
+    }
+
+    /// Comma/placement bookkeeping before a value or key is emitted.
+    fn sep(&mut self) {
+        if self.pending_key {
+            self.pending_key = false;
+            return;
+        }
+        if let Some(first) = self.first.last_mut() {
+            if *first {
+                *first = false;
+            } else {
+                self.out.push(',');
+            }
+        }
+    }
+
+    pub fn begin_obj(&mut self) -> &mut Self {
+        self.sep();
+        self.out.push('{');
+        self.first.push(true);
+        self
+    }
+
+    pub fn end_obj(&mut self) -> &mut Self {
+        self.first.pop();
+        self.out.push('}');
+        self
+    }
+
+    pub fn begin_arr(&mut self) -> &mut Self {
+        self.sep();
+        self.out.push('[');
+        self.first.push(true);
+        self
+    }
+
+    pub fn end_arr(&mut self) -> &mut Self {
+        self.first.pop();
+        self.out.push(']');
+        self
+    }
+
+    pub fn key(&mut self, k: &str) -> &mut Self {
+        self.sep();
+        write_escaped(&mut self.out, k);
+        self.out.push(':');
+        self.pending_key = true;
+        self
+    }
+
+    pub fn str(&mut self, v: &str) -> &mut Self {
+        self.sep();
+        write_escaped(&mut self.out, v);
+        self
+    }
+
+    pub fn num(&mut self, v: f64) -> &mut Self {
+        self.sep();
+        write_num(&mut self.out, v);
+        self
+    }
+
+    pub fn int(&mut self, v: i64) -> &mut Self {
+        self.sep();
+        let _ = write!(self.out, "{v}");
+        self
+    }
+
+    pub fn bool(&mut self, v: bool) -> &mut Self {
+        self.sep();
+        self.out.push_str(if v { "true" } else { "false" });
+        self
+    }
+
+    pub fn null(&mut self) -> &mut Self {
+        self.sep();
+        self.out.push_str("null");
+        self
+    }
+
+    pub fn finish(self) -> String {
+        self.out
     }
 }
 
@@ -452,5 +769,148 @@ mod tests {
             let v = Value::parse(&text).unwrap();
             assert!(v.get("models").is_some());
         }
+    }
+
+    #[test]
+    fn rejects_unescaped_control_characters() {
+        // RFC 8259 §7: raw control bytes inside strings are invalid — both
+        // the borrowed fast path and the escape decoder must reject them
+        let e = Value::parse("\"a\u{1}b\"").unwrap_err();
+        assert!(e.to_string().contains("unescaped control character"), "{e}");
+        assert!(Value::parse("\"a\nb\"").is_err()); // raw newline
+        assert!(Value::parse("\"x\\n a\u{1}\"").is_err()); // after an escape (owned path)
+        // the escaped form is fine and decodes to the control character
+        assert_eq!(Value::parse("\"a\\u0001b\"").unwrap(), Value::Str("a\u{1}b".into()));
+    }
+
+    #[test]
+    fn rejects_nesting_past_max_depth() {
+        let deep = "[".repeat(MAX_DEPTH + 1) + &"]".repeat(MAX_DEPTH + 1);
+        let e = Value::parse(&deep).unwrap_err();
+        assert!(e.to_string().contains("nesting deeper"), "{e}");
+        assert!(read_events(&deep, |_| Ok(())).is_err());
+        // exactly MAX_DEPTH is accepted
+        let ok = "[".repeat(MAX_DEPTH) + &"]".repeat(MAX_DEPTH);
+        assert!(Value::parse(&ok).is_ok());
+        assert!(read_events(&ok, |_| Ok(())).is_ok());
+    }
+
+    #[test]
+    fn event_reader_walks_document_in_order() {
+        let src = r#"{"prompt": "hi", "n": 3.5, "opts": {"stream": true, "t": null}, "a": [1, "x\n"]}"#;
+        let mut got = Vec::new();
+        read_events(src, |e| {
+            got.push(format!("{e:?}"));
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(
+            got,
+            vec![
+                "BeginObject",
+                "Key(\"prompt\")",
+                "Str(\"hi\")",
+                "Key(\"n\")",
+                "Num(3.5)",
+                "Key(\"opts\")",
+                "BeginObject",
+                "Key(\"stream\")",
+                "Bool(true)",
+                "Key(\"t\")",
+                "Null",
+                "EndObject",
+                "Key(\"a\")",
+                "BeginArray",
+                "Num(1.0)",
+                "Str(\"x\\n\")",
+                "EndArray",
+                "EndObject",
+            ]
+        );
+    }
+
+    #[test]
+    fn event_reader_borrows_escape_free_strings() {
+        // escape-free strings (ascii and multibyte utf-8 alike) are handed
+        // out as Cow::Borrowed; escaped ones fall back to Cow::Owned
+        let src = r#"{"a": "plain é中", "b": "esc\naped"}"#;
+        let mut borrowed = Vec::new();
+        let mut owned = Vec::new();
+        read_events(src, |e| {
+            if let Event::Str(s) = e {
+                match s {
+                    Cow::Borrowed(v) => borrowed.push(v.to_string()),
+                    Cow::Owned(v) => owned.push(v),
+                }
+            }
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(borrowed, vec!["plain é中"]);
+        assert_eq!(owned, vec!["esc\naped"]);
+    }
+
+    #[test]
+    fn event_reader_propagates_visitor_errors_and_rejects_trailing() {
+        let e = read_events("[1, 2]", |ev| match ev {
+            Event::Num(n) if n == 2.0 => Err(Error::msg("stop")),
+            _ => Ok(()),
+        })
+        .unwrap_err();
+        assert!(e.to_string().contains("stop"));
+        assert!(read_events("{} junk", |_| Ok(())).is_err());
+    }
+
+    #[test]
+    fn writer_output_reparses_to_expected_value() {
+        let mut w = JsonWriter::new();
+        w.begin_obj();
+        w.key("id").int(7);
+        w.key("text").str("a\"b\nc");
+        w.key("ratio").num(1.5);
+        w.key("count").num(3.0); // integral floats print without `.0`
+        w.key("flags").begin_arr();
+        w.bool(true).null().str("x");
+        w.end_arr();
+        w.key("inner").begin_obj();
+        w.key("empty").begin_arr();
+        w.end_arr();
+        w.end_obj();
+        w.end_obj();
+        let out = w.finish();
+        assert!(out.contains("\"count\":3,"), "{out}");
+        let v = Value::parse(&out).unwrap();
+        assert_eq!(v.get("id").unwrap().as_usize(), Some(7));
+        assert_eq!(v.get("text").unwrap().as_str(), Some("a\"b\nc"));
+        assert_eq!(v.get("ratio").unwrap().as_f64(), Some(1.5));
+        assert_eq!(v.get("flags").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(v.get("inner").unwrap().get("empty").unwrap().as_arr().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn http_body_corpus_cases() {
+        // request-body shapes the network edge must handle (PR 6 corpus
+        // extension): dup keys surface to the event visitor in order, the
+        // DOM still rejects them, surrogate pairs and multibyte prompts
+        // decode, truncated bodies error instead of hanging
+        let dup = r#"{"prompt": "a", "prompt": "b"}"#;
+        assert!(Value::parse(dup).is_err());
+        let mut keys = Vec::new();
+        read_events(dup, |e| {
+            if let Event::Key(k) = e {
+                keys.push(k.into_owned());
+            }
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(keys, vec!["prompt", "prompt"]);
+
+        assert_eq!(
+            Value::parse(r#"{"prompt": "😀"}"#).unwrap().get("prompt").unwrap().as_str(),
+            Some("😀")
+        );
+        assert!(Value::parse(r#"{"prompt": "tru"#).is_err());
+        assert!(Value::parse("").is_err());
+        assert!(read_events("", |_| Ok(())).is_err());
     }
 }

@@ -6,10 +6,10 @@
 //! with all-reduces) are two implementations of the same mathematics and
 //! must agree numerically — for the sequential plan AND for LP pairs.
 
+use truedepth::api::CompletionRequest;
 use truedepth::config::{InterconnectConfig, ServerConfig};
-use truedepth::coordinator::{RequestOptions, Server};
+use truedepth::coordinator::Server;
 use truedepth::eval::ppl::eval_windows;
-use truedepth::gen::Sampler;
 use truedepth::model::{transform, Scorer, ServingModel, Weights};
 use truedepth::runtime::{Engine, Manifest};
 use truedepth::text::corpus::DATA_SEED;
@@ -153,9 +153,9 @@ fn server_greedy_is_deterministic_across_plans() {
         let serving =
             ServingModel::new(&manifest, "td-small", &weights, &plan, no_net()).unwrap();
         let server = Server::start(serving, &ServerConfig::default());
-        let opts = RequestOptions { max_new_tokens: 6, sampler: Sampler::Greedy, tier: None };
-        let r1 = server.submit_blocking("the calm ship", opts.clone()).unwrap();
-        let r2 = server.submit_blocking("the calm ship", opts).unwrap();
+        let req = CompletionRequest::new("the calm ship").max_tokens(6);
+        let r1 = server.request(req.clone()).unwrap().wait().unwrap();
+        let r2 = server.request(req).unwrap().wait().unwrap();
         assert!(r1.error.is_none() && r2.error.is_none());
         assert_eq!(r1.tokens, r2.tokens, "greedy decode must be deterministic");
         assert_eq!(r1.generated_tokens(), 6);

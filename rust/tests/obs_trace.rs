@@ -8,9 +8,9 @@
 
 use std::sync::Arc;
 
+use truedepth::api::CompletionRequest;
 use truedepth::config::ServerConfig;
-use truedepth::coordinator::{RequestOptions, Server};
-use truedepth::gen::Sampler;
+use truedepth::coordinator::Server;
 use truedepth::harness::default_net;
 use truedepth::model::{ServingModel, Weights};
 use truedepth::obs::{MetricsSnapshot, Tracer};
@@ -32,12 +32,10 @@ fn run_once() -> Option<(String, String)> {
     let tracer = Arc::new(Tracer::new());
     let server = Server::start_traced(serving, &ServerConfig::default(), tracer.clone());
     for (i, prompt) in ["the red fox", "9 - 4 = ", "the calm ship"].iter().enumerate() {
-        let opts = RequestOptions {
-            max_new_tokens: 3,
-            sampler: Sampler::Greedy,
-            tier: Some(tiers[i % tiers.len()].clone()),
-        };
-        let resp = server.submit_blocking(prompt, opts).unwrap();
+        let req = CompletionRequest::new(*prompt)
+            .max_tokens(3)
+            .tier(&tiers[i % tiers.len()]);
+        let resp = server.request(req).unwrap().wait().unwrap();
         assert!(resp.error.is_none(), "request failed: {:?}", resp.error);
     }
     let metrics = server.metrics.clone();
