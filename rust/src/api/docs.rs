@@ -5,7 +5,10 @@
 
 use std::fmt::Write as _;
 
-use super::{ApiError, CompletionChunk, CompletionRequest, CompletionResponse, ErrorCode};
+use super::{
+    ApiError, CompletionChunk, CompletionRequest, CompletionResponse, ErrorCode, ModelInfo,
+    ModelsResponse,
+};
 
 /// One-line "when you get this" note per error code, for the docs table.
 fn describe(code: ErrorCode) -> &'static str {
@@ -27,7 +30,8 @@ fn describe(code: ErrorCode) -> &'static str {
 
 /// The example payloads the docs embed — also exercised by the wire-shape
 /// tests in the parent module, so the documented bytes are tested bytes.
-fn fixtures() -> (CompletionRequest, CompletionChunk, CompletionResponse, ApiError) {
+fn fixtures() -> (CompletionRequest, CompletionChunk, CompletionResponse, ApiError, ModelsResponse)
+{
     let request = CompletionRequest::new("the red fox").max_tokens(8).tier("lp").stream(true);
     let chunk = CompletionChunk { id: 42, index: 0, token: 104, text: "h".into() };
     let response = CompletionResponse {
@@ -40,12 +44,20 @@ fn fixtures() -> (CompletionRequest, CompletionChunk, CompletionResponse, ApiErr
         latency_ms: 96.0,
     };
     let error = ApiError::new(ErrorCode::Overloaded, "queue full (back-pressure)");
-    (request, chunk, response, error)
+    let models = ModelsResponse {
+        models: vec![ModelInfo {
+            model: "td-small".into(),
+            tiers: vec!["dense".into(), "lp".into(), "lp_aggr".into()],
+            default_tier: "lp".into(),
+        }],
+        replicas: 2,
+    };
+    (request, chunk, response, error, models)
 }
 
 /// Render the full `docs/api.md` text.
 pub fn render_api_md() -> String {
-    let (request, chunk, response, error) = fixtures();
+    let (request, chunk, response, error, models) = fixtures();
     let mut md = String::new();
     md.push_str(
         "# truedepth serving API (v1)\n\
@@ -59,6 +71,7 @@ pub fn render_api_md() -> String {
          | Method | Path | Description |\n\
          |---|---|---|\n\
          | POST | `/v1/completions` | Run a completion; set `\"stream\": true` for per-token SSE |\n\
+         | GET | `/v1/models` | List served models, their tiers, and the replica count |\n\
          | GET | `/healthz` | Liveness probe: `200 ok` while the scheduler runs |\n\
          | GET | `/metrics` | JSON metrics snapshot (schema `truedepth.metrics/v1`) |\n\
          \n\
@@ -81,6 +94,7 @@ pub fn render_api_md() -> String {
          | `top_k` | int >= 1 | greedy | Switch to top-k sampling with this k |\n\
          | `temperature` | number > 0 | 1 | Softmax temperature (top-k only) |\n\
          | `seed` | int >= 0 | 0 | Sampling seed (top-k only) |\n\
+         | `session` | string | none | Multi-turn affinity key: a cluster pins all requests of one session to the same replica so shared-prefix KV reuse stays local (single server: ignored) |\n\
          \n\
          Unknown fields, duplicate fields and wrong types are rejected with\n\
          `400 invalid_request`.\n\
@@ -146,6 +160,19 @@ pub fn render_api_md() -> String {
          before any KV slot is claimed: overload sheds load with zero slot\n\
          churn.\n\
          \n\
+         ## GET /v1/models\n\
+         \n\
+         `200 OK`, `Content-Type: application/json`: every model this\n\
+         deployment serves, the serving tiers its manifest registers, the\n\
+         default tier, and the number of replicas behind the edge (1 for a\n\
+         plain `serve --listen`, R for `serve --listen --replicas R`):\n\
+         \n\
+         ```json\n",
+    );
+    let _ = writeln!(md, "{}", models.to_json());
+    md.push_str(
+        "```\n\
+         \n\
          ## GET /healthz\n\
          \n\
          `200 OK`, body `ok`.\n\
@@ -184,10 +211,14 @@ mod tests {
     #[test]
     fn rendered_docs_embed_the_tested_fixtures() {
         let md = render_api_md();
-        let (request, chunk, response, error) = super::fixtures();
-        for payload in
-            [request.to_json(), chunk.to_json(), response.to_json(), error.to_json()]
-        {
+        let (request, chunk, response, error, models) = super::fixtures();
+        for payload in [
+            request.to_json(),
+            chunk.to_json(),
+            response.to_json(),
+            error.to_json(),
+            models.to_json(),
+        ] {
             assert!(md.contains(&payload), "fixture missing from docs: {payload}");
         }
         for code in ErrorCode::ALL {

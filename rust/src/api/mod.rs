@@ -36,6 +36,13 @@ pub mod fields {
     pub const TOP_K: &str = "top_k";
     pub const TEMPERATURE: &str = "temperature";
     pub const SEED: &str = "seed";
+    pub const SESSION: &str = "session";
+    // models listing (GET /v1/models)
+    pub const MODELS: &str = "models";
+    pub const MODEL: &str = "model";
+    pub const TIERS: &str = "tiers";
+    pub const DEFAULT_TIER: &str = "default_tier";
+    pub const REPLICAS: &str = "replicas";
     // response / chunk
     pub const ID: &str = "id";
     pub const INDEX: &str = "index";
@@ -54,7 +61,7 @@ pub mod fields {
 
 /// The request fields [`CompletionRequest::from_json`] accepts; anything
 /// else is rejected (fail-fast beats silently ignoring a typo'd knob).
-const KNOWN_FIELDS: [&str; 7] = [
+const KNOWN_FIELDS: [&str; 8] = [
     fields::PROMPT,
     fields::MAX_TOKENS,
     fields::TIER,
@@ -62,6 +69,7 @@ const KNOWN_FIELDS: [&str; 7] = [
     fields::TOP_K,
     fields::TEMPERATURE,
     fields::SEED,
+    fields::SESSION,
 ];
 
 // ---- error taxonomy --------------------------------------------------------
@@ -197,6 +205,11 @@ pub struct CompletionRequest {
     pub temperature: f32,
     /// RNG seed for top-k sampling (ignored under greedy).
     pub seed: u64,
+    /// Session key for multi-turn conversations. Purely advisory: a
+    /// cluster front door pins all requests of one session to the same
+    /// replica, so paged-KV shared-prefix reuse stays local. Ignored by a
+    /// single server.
+    pub session: Option<String>,
 }
 
 impl CompletionRequest {
@@ -209,6 +222,7 @@ impl CompletionRequest {
             top_k: None,
             temperature: 1.0,
             seed: 0,
+            session: None,
         }
     }
 
@@ -239,6 +253,11 @@ impl CompletionRequest {
 
     pub fn seed(mut self, s: u64) -> CompletionRequest {
         self.seed = s;
+        self
+    }
+
+    pub fn session(mut self, key: &str) -> CompletionRequest {
+        self.session = Some(key.to_string());
         self
     }
 
@@ -328,6 +347,7 @@ impl CompletionRequest {
                             has_prompt = true;
                         }
                         (fields::TIER, Event::Str(s)) => req.tier = Some(s.into_owned()),
+                        (fields::SESSION, Event::Str(s)) => req.session = Some(s.into_owned()),
                         (fields::STREAM, Event::Bool(b)) => req.stream = b,
                         (fields::MAX_TOKENS, Event::Num(n)) => {
                             req.max_tokens = uint(fields::MAX_TOKENS, n, 1)?;
@@ -377,6 +397,9 @@ impl CompletionRequest {
             w.key(fields::TOP_K).int(k as i64);
             w.key(fields::TEMPERATURE).num(self.temperature as f64);
             w.key(fields::SEED).int(self.seed as i64);
+        }
+        if let Some(s) = &self.session {
+            w.key(fields::SESSION).str(s);
         }
         w.end_obj();
         w.finish()
@@ -463,6 +486,48 @@ impl CompletionResponse {
         w.key(fields::COMPLETION_TOKENS).int(self.tokens.len() as i64);
         w.key(fields::TTFT_MS).num(self.ttft_ms);
         w.key(fields::LATENCY_MS).num(self.latency_ms);
+        w.end_obj();
+        w.finish()
+    }
+}
+
+// ---- models listing --------------------------------------------------------
+
+/// One served model as listed by `GET /v1/models`: its name, the serving
+/// tiers its manifest registers, and the default tier.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelInfo {
+    pub model: String,
+    pub tiers: Vec<String>,
+    pub default_tier: String,
+}
+
+/// The `GET /v1/models` body: every model the deployment serves plus the
+/// replica count behind the edge (1 for a single server, R for a cluster).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelsResponse {
+    pub models: Vec<ModelInfo>,
+    pub replicas: usize,
+}
+
+impl ModelsResponse {
+    pub fn to_json(&self) -> String {
+        let mut w = JsonWriter::new();
+        w.begin_obj();
+        w.key(fields::MODELS).begin_arr();
+        for m in &self.models {
+            w.begin_obj();
+            w.key(fields::MODEL).str(&m.model);
+            w.key(fields::TIERS).begin_arr();
+            for t in &m.tiers {
+                w.str(t);
+            }
+            w.end_arr();
+            w.key(fields::DEFAULT_TIER).str(&m.default_tier);
+            w.end_obj();
+        }
+        w.end_arr();
+        w.key(fields::REPLICAS).int(self.replicas as i64);
         w.end_obj();
         w.finish()
     }
@@ -584,6 +649,43 @@ mod tests {
             assert_eq!(api.code, ErrorCode::InvalidRequest, "{body}: {e}");
             assert!(e.to_string().contains(needle), "{body}: {e}");
         }
+    }
+
+    /// Satellite (PR 10): the `session` affinity key rides the wire like
+    /// any other field — roundtrips, rejects wrong types, and stays out of
+    /// the body when unset (defaults are omitted).
+    #[test]
+    fn session_field_roundtrips_and_validates() {
+        let req = CompletionRequest::new("turn two").max_tokens(4).session("user-7");
+        let body = req.to_json();
+        assert_eq!(
+            body,
+            r#"{"prompt":"turn two","max_tokens":4,"session":"user-7"}"#
+        );
+        assert_eq!(CompletionRequest::from_json(&body).unwrap(), req);
+        assert!(!CompletionRequest::new("x").to_json().contains("session"));
+        let e = CompletionRequest::from_json(r#"{"prompt":"x","session":7}"#).unwrap_err();
+        assert!(e.to_string().contains("wrong type"), "{e}");
+    }
+
+    /// Satellite (PR 10): the models listing wire shape is pinned byte for
+    /// byte (it is also embedded in the generated docs).
+    #[test]
+    fn models_response_wire_shape() {
+        let resp = ModelsResponse {
+            models: vec![ModelInfo {
+                model: "td-small".into(),
+                tiers: vec!["dense".into(), "lp".into(), "lp_aggr".into()],
+                default_tier: "lp".into(),
+            }],
+            replicas: 2,
+        };
+        assert_eq!(
+            resp.to_json(),
+            r#"{"models":[{"model":"td-small","tiers":["dense","lp","lp_aggr"],"default_tier":"lp"}],"replicas":2}"#
+        );
+        let v = json::Value::parse(&resp.to_json()).unwrap();
+        assert_eq!(v.get(fields::REPLICAS).unwrap().as_usize(), Some(2));
     }
 
     #[test]

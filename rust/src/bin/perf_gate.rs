@@ -31,6 +31,14 @@
 //! metric (inferred from the name at `--write-baseline` time: throughput
 //! names containing `per_s` are higher-is-better, everything else —
 //! latency, flops, bytes, chunk counts — lower-is-better).
+//!
+//! A baseline entry with `"value": null` is a **bootstrap** entry: the
+//! metric must be present in the reports (its absence fails the gate,
+//! so the producing bench/loadtest run cannot silently drop out of CI),
+//! but no numeric comparison happens yet — the gate prints the observed
+//! value so it can be pinned (hand-edit or `--write-baseline`). This is
+//! how metrics whose value can only be observed from a full run (e.g.
+//! the cluster loadtest percentiles) enter the baseline.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -175,10 +183,28 @@ fn main() {
     let mut improvements = 0usize;
     let mut checked = 0usize;
     for (name, entry) in base_metrics {
-        let base = entry
-            .get("value")
-            .and_then(|v| v.as_f64())
-            .unwrap_or_else(|| fail(&format!("baseline metric `{name}` has no value")));
+        let base = match entry.get("value") {
+            Some(Value::Null) => {
+                // bootstrap entry: presence-gated only, value not yet pinned
+                match current.get(name) {
+                    Some(&cur) => {
+                        checked += 1;
+                        println!(
+                            "perf_gate: bootstrap metric `{name}` = {cur:.4} — pin \
+                             this value in the baseline to arm the numeric gate"
+                        );
+                    }
+                    None => failures.push(format!(
+                        "{name}: missing from the bench reports (bootstrap entry — \
+                         the producing run must still emit it)"
+                    )),
+                }
+                continue;
+            }
+            v => v
+                .and_then(|v| v.as_f64())
+                .unwrap_or_else(|| fail(&format!("baseline metric `{name}` has no value"))),
+        };
         let better = entry.get("better").and_then(|b| b.as_str()).unwrap_or("lower");
         let Some(&cur) = current.get(name) else {
             failures.push(format!(

@@ -1,0 +1,410 @@
+//! Deterministic trace-driven load generation for the cluster.
+//!
+//! [`LoadTrace::generate`] expands a `(scenario, seed)` pair into a fixed
+//! arrival schedule — bursty arrivals, heavy-tailed prompt lengths, mixed
+//! serving tiers, multi-turn shared-prefix sessions, adversarial floods —
+//! using only [`SplitMix64`] integer arithmetic, so the same seed yields
+//! a byte-identical trace on every platform. [`run`] replays a trace
+//! against a [`Cluster`] in lockstep (one arrival batch + one
+//! [`Cluster::step`] per simulated step), optionally injecting a replica
+//! failure/respawn at fixed steps ([`FaultPlan`]), and returns every
+//! request's terminal [`Response`] — a request that never resolves is a
+//! hard error, which is what makes "zero lost requests" assertable.
+
+use std::time::Duration;
+
+use crate::api::CompletionRequest;
+use crate::cluster::Cluster;
+use crate::coordinator::Response;
+use crate::error::{Error, Result};
+use crate::util::json::{self, Value};
+use crate::util::rng::SplitMix64;
+
+/// Word pool for synthetic prompts (the serving tokenizer is byte-level,
+/// so prompt *characters* are prompt *tokens*).
+const WORDS: &[&str] = &[
+    "the", "red", "fox", "jumps", "over", "a", "lazy", "dog", "while", "quick", "brown",
+    "packs", "my", "box", "with", "five", "dozen", "jugs", "of", "liquid",
+];
+
+/// Longest prompt the generator emits (chars = tokens; well under the
+/// td-small context of 256 even with the generation budget added).
+const MAX_PROMPT: usize = 120;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scenario {
+    /// Evenly spaced singleton arrivals.
+    Steady,
+    /// Geometric bursts separated by quiet gaps.
+    Bursty,
+    /// Few sessions, many turns each, sharing a long per-session prefix
+    /// (exercises session affinity + paged-KV prefix reuse).
+    MultiTurn,
+    /// Adversarial: everything arrives in the first two steps.
+    Flood,
+    /// Interleaved chunks of all of the above.
+    Mixed,
+}
+
+impl Scenario {
+    pub const ALL: [Scenario; 5] =
+        [Scenario::Steady, Scenario::Bursty, Scenario::MultiTurn, Scenario::Flood, Scenario::Mixed];
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Scenario::Steady => "steady",
+            Scenario::Bursty => "bursty",
+            Scenario::MultiTurn => "multiturn",
+            Scenario::Flood => "flood",
+            Scenario::Mixed => "mixed",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Scenario> {
+        Scenario::ALL.into_iter().find(|sc| sc.as_str() == s)
+    }
+}
+
+/// One scheduled request.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Arrival {
+    /// Lockstep step at which the request hits the front door.
+    pub at_step: u64,
+    pub prompt: String,
+    pub max_tokens: usize,
+    pub tier: Option<String>,
+    pub session: Option<String>,
+}
+
+/// A fully expanded, replayable workload.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LoadTrace {
+    pub seed: u64,
+    pub scenario: Scenario,
+    pub arrivals: Vec<Arrival>,
+}
+
+impl LoadTrace {
+    /// Expand `(scenario, seed)` into `n` arrivals over `tiers` (the
+    /// model's registered tier names; an arrival with `tier: None` rides
+    /// the default tier).
+    pub fn generate(scenario: Scenario, seed: u64, n: usize, tiers: &[String]) -> LoadTrace {
+        let mut rng = SplitMix64::new(seed ^ 0x10ad_9e4e);
+        let mut arrivals = Vec::with_capacity(n);
+        let mut step: u64 = 0;
+        // MultiTurn state: per-session long shared prefix + turn counter
+        let sessions = (n / 4).clamp(2, 8);
+        let prefixes: Vec<String> =
+            (0..sessions).map(|s| session_prefix(s, &mut rng)).collect();
+        let mut turns = vec![0usize; sessions];
+        let mut i = 0;
+        while i < n {
+            let sc = match scenario {
+                // deterministic round-robin over chunks of 4 arrivals
+                Scenario::Mixed => Scenario::ALL[(i / 4) % 4],
+                s => s,
+            };
+            let burst = match sc {
+                Scenario::Steady | Scenario::MultiTurn => 1,
+                Scenario::Bursty => 1 + rng.below(6) as usize,
+                Scenario::Flood => n,
+                Scenario::Mixed => unreachable!("Mixed resolves to a concrete scenario"),
+            };
+            for _ in 0..burst.min(n - i) {
+                let (prompt, session) = match sc {
+                    Scenario::MultiTurn => {
+                        let s = rng.below(sessions as u64) as usize;
+                        turns[s] += 1;
+                        (
+                            format!("{} turn {} {}", prefixes[s], turns[s], word(&mut rng)),
+                            Some(format!("sess-{s}")),
+                        )
+                    }
+                    _ => (heavy_tail_prompt(i, &mut rng), None),
+                };
+                let tier = if tiers.is_empty() || rng.below(5) < 3 {
+                    None
+                } else {
+                    Some(tiers[rng.below(tiers.len() as u64) as usize].clone())
+                };
+                arrivals.push(Arrival {
+                    at_step: step,
+                    prompt,
+                    max_tokens: 2 + rng.below(7) as usize,
+                    tier,
+                    session,
+                });
+                i += 1;
+            }
+            step += match sc {
+                Scenario::Steady => 1 + rng.below(3),
+                Scenario::Bursty => 2 + rng.below(8),
+                Scenario::MultiTurn => 3 + rng.below(4),
+                Scenario::Flood => 1,
+                Scenario::Mixed => unreachable!("Mixed resolves to a concrete scenario"),
+            };
+        }
+        LoadTrace { seed, scenario, arrivals }
+    }
+
+    /// Canonical JSON rendering — the byte-identity anchor for the
+    /// determinism tests and for archiving a replayable workload.
+    pub fn to_json(&self) -> String {
+        let arrivals: Vec<Value> = self
+            .arrivals
+            .iter()
+            .map(|a| {
+                let mut fields = vec![
+                    ("at_step", json::num(a.at_step as f64)),
+                    ("prompt", json::s(a.prompt.clone())),
+                    ("max_tokens", json::num(a.max_tokens as f64)),
+                ];
+                if let Some(t) = &a.tier {
+                    fields.push(("tier", json::s(t.clone())));
+                }
+                if let Some(s) = &a.session {
+                    fields.push(("session", json::s(s.clone())));
+                }
+                json::obj(fields)
+            })
+            .collect();
+        json::obj(vec![
+            ("schema", json::s("truedepth.loadtrace/v1")),
+            ("seed", json::num(self.seed as f64)),
+            ("scenario", json::s(self.scenario.as_str())),
+            ("arrivals", json::arr(arrivals)),
+        ])
+        .to_string_pretty()
+    }
+}
+
+/// A long (>= one KV page) session-specific prefix every turn repeats,
+/// so consecutive turns hit the shared-prefix index on the affine replica.
+fn session_prefix(session: usize, rng: &mut SplitMix64) -> String {
+    let mut p = format!("session {session}:");
+    while p.len() < 64 {
+        p.push(' ');
+        p.push_str(word(rng));
+    }
+    p
+}
+
+/// Heavy-tailed prompt length via integer-only geometric escalation
+/// (no `powf`/`ln`: byte-identical across platforms). The index prefix
+/// keeps prompts distinct so unrelated requests don't share KV prefixes.
+fn heavy_tail_prompt(index: usize, rng: &mut SplitMix64) -> String {
+    let mut len = 8 + rng.below(16) as usize;
+    while rng.below(100) < 35 && len < MAX_PROMPT {
+        len += 4 + rng.below(24) as usize;
+    }
+    let len = len.min(MAX_PROMPT);
+    let mut p = format!("q{index}");
+    while p.len() < len {
+        p.push(' ');
+        p.push_str(word(rng));
+    }
+    p.truncate(len);
+    p
+}
+
+fn word(rng: &mut SplitMix64) -> &'static str {
+    WORDS[rng.below(WORDS.len() as u64) as usize]
+}
+
+/// Deterministic fault injection: fence `replica` when the replay clock
+/// hits `fail_at_step`, optionally respawn it later.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultPlan {
+    pub replica: usize,
+    pub fail_at_step: u64,
+    pub respawn_at_step: Option<u64>,
+}
+
+/// Outcome of one trace replay.
+pub struct LoadReport {
+    /// Terminal response per arrival, in arrival order; `None` marks a
+    /// front-door rejection (queue full — back-pressure, not loss).
+    pub responses: Vec<Option<Response>>,
+    /// Lockstep steps the replay took to drain.
+    pub steps: u64,
+}
+
+impl LoadReport {
+    pub fn completed(&self) -> usize {
+        self.responses.iter().flatten().filter(|r| r.error.is_none()).count()
+    }
+
+    pub fn failed(&self) -> usize {
+        self.responses.iter().flatten().filter(|r| r.error.is_some()).count()
+    }
+
+    pub fn rejected(&self) -> usize {
+        self.responses.iter().filter(|r| r.is_none()).count()
+    }
+}
+
+/// Replay `trace` against `cluster` to completion. Every accepted
+/// request must resolve to a terminal response — a request that does not
+/// is an `Err` (lost work), not a silent gap in the report.
+pub fn run(
+    cluster: &mut Cluster,
+    trace: &LoadTrace,
+    fault: Option<&FaultPlan>,
+) -> Result<LoadReport> {
+    const MAX_STEPS: u64 = 1_000_000;
+    let mut handles = Vec::with_capacity(trace.arrivals.len());
+    let mut next = 0usize;
+    let mut step: u64 = 0;
+    loop {
+        if let Some(f) = fault {
+            if step == f.fail_at_step {
+                cluster.fail_replica(f.replica);
+            }
+            if f.respawn_at_step == Some(step) {
+                cluster.respawn_replica(f.replica)?;
+            }
+        }
+        while next < trace.arrivals.len() && trace.arrivals[next].at_step <= step {
+            let a = &trace.arrivals[next];
+            let mut req = CompletionRequest::new(&a.prompt).max_tokens(a.max_tokens);
+            if let Some(t) = &a.tier {
+                req = req.tier(t);
+            }
+            if let Some(s) = &a.session {
+                req = req.session(s);
+            }
+            handles.push(cluster.submit(req).ok());
+            next += 1;
+        }
+        let busy = cluster.step();
+        step += 1;
+        if step > MAX_STEPS {
+            return Err(Error::Serving(format!(
+                "loadtest failed to drain within {MAX_STEPS} steps"
+            )));
+        }
+        let arrivals_pending = next < trace.arrivals.len();
+        let fault_pending = fault.is_some_and(|f| {
+            f.fail_at_step >= step || f.respawn_at_step.is_some_and(|s| s >= step)
+        });
+        if !busy && !arrivals_pending && !fault_pending {
+            break;
+        }
+    }
+    cluster.finish();
+    let mut responses = Vec::with_capacity(handles.len());
+    for (i, h) in handles.into_iter().enumerate() {
+        match h {
+            None => responses.push(None),
+            Some(h) => {
+                // events are already buffered (the cluster is drained);
+                // the timeout only guards against a lost-terminal bug
+                let r = h.wait_timeout(Duration::from_secs(10)).map_err(|e| {
+                    Error::Serving(format!("request for arrival {i} was lost: {e}"))
+                })?;
+                responses.push(Some(r));
+            }
+        }
+    }
+    Ok(LoadReport { responses, steps: step })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiers() -> Vec<String> {
+        vec!["dense".into(), "lp".into(), "lp_aggr".into()]
+    }
+
+    /// Satellite: same seed → byte-identical arrival schedule; distinct
+    /// seeds diverge. Holds for every scenario.
+    #[test]
+    fn same_seed_is_byte_identical_and_seeds_differ() {
+        for sc in Scenario::ALL {
+            let a = LoadTrace::generate(sc, 7, 40, &tiers()).to_json();
+            let b = LoadTrace::generate(sc, 7, 40, &tiers()).to_json();
+            assert_eq!(a, b, "{}: same seed must replay byte-identically", sc.as_str());
+            let c = LoadTrace::generate(sc, 8, 40, &tiers()).to_json();
+            assert_ne!(a, c, "{}: distinct seeds must differ", sc.as_str());
+        }
+    }
+
+    #[test]
+    fn schedules_are_ordered_and_bounded() {
+        for sc in Scenario::ALL {
+            let t = LoadTrace::generate(sc, 3, 64, &tiers());
+            assert_eq!(t.arrivals.len(), 64);
+            let mut prev = 0;
+            for a in &t.arrivals {
+                assert!(a.at_step >= prev, "{}: arrivals must be time-ordered", sc.as_str());
+                prev = a.at_step;
+                assert!(!a.prompt.is_empty());
+                assert!(
+                    a.prompt.len() + a.max_tokens <= MAX_PROMPT + 8,
+                    "{}: prompt+budget must fit the context", sc.as_str()
+                );
+                if let Some(tier) = &a.tier {
+                    assert!(tiers().contains(tier));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn flood_is_front_loaded_and_steady_is_not() {
+        let flood = LoadTrace::generate(Scenario::Flood, 5, 32, &[]);
+        assert!(flood.arrivals.iter().all(|a| a.at_step == 0));
+        let steady = LoadTrace::generate(Scenario::Steady, 5, 32, &[]);
+        assert!(steady.arrivals.last().unwrap().at_step >= 31);
+    }
+
+    #[test]
+    fn multiturn_sessions_share_long_prefixes() {
+        let t = LoadTrace::generate(Scenario::MultiTurn, 9, 48, &tiers());
+        let mut by_session: std::collections::BTreeMap<&str, Vec<&Arrival>> = Default::default();
+        for a in &t.arrivals {
+            by_session.entry(a.session.as_deref().expect("multiturn always has a session"))
+                .or_default()
+                .push(a);
+        }
+        assert!(by_session.len() >= 2, "need several concurrent sessions");
+        let mut multi_turn_sessions = 0;
+        for arrivals in by_session.values() {
+            if arrivals.len() < 2 {
+                continue;
+            }
+            multi_turn_sessions += 1;
+            let first = &arrivals[0].prompt;
+            for a in &arrivals[1..] {
+                let common = first
+                    .bytes()
+                    .zip(a.prompt.bytes())
+                    .take_while(|(x, y)| x == y)
+                    .count();
+                assert!(
+                    common >= 64,
+                    "turns of one session must share a >=1-page prefix (got {common})"
+                );
+            }
+        }
+        assert!(multi_turn_sessions >= 1, "at least one session must have several turns");
+    }
+
+    #[test]
+    fn heavy_tail_produces_short_and_long_prompts() {
+        let t = LoadTrace::generate(Scenario::Bursty, 11, 200, &[]);
+        let lens: Vec<usize> = t.arrivals.iter().map(|a| a.prompt.len()).collect();
+        assert!(lens.iter().any(|&l| l < 32), "tail must keep short prompts");
+        assert!(lens.iter().any(|&l| l > 90), "tail must reach long prompts");
+        assert!(lens.iter().all(|&l| l <= MAX_PROMPT));
+    }
+
+    #[test]
+    fn scenario_names_round_trip() {
+        for sc in Scenario::ALL {
+            assert_eq!(Scenario::parse(sc.as_str()), Some(sc));
+        }
+        assert_eq!(Scenario::parse("warp"), None);
+    }
+}

@@ -1,0 +1,230 @@
+//! Cluster-wide metrics: routing decisions, fail-over accounting, and the
+//! modelled cluster-level latency distributions.
+//!
+//! Same determinism contract as `coordinator::ServerMetrics`: only
+//! simulated-clock figures and pure counters are exported, so two
+//! identical seeded runs serialize byte-identically and the cluster p50/
+//! p99 TTFT/latency can be gated in `rust/bench-baseline.json`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::coordinator::Response;
+use crate::util::json::{self, Value};
+use crate::util::stats::{Reservoir, Summary};
+
+/// Reservoir capacity (matches `ServerMetrics`): percentiles come from a
+/// deterministic bounded sample while n/min/max stay exact.
+const RESERVOIR_CAP: usize = 1024;
+
+pub struct ClusterMetrics {
+    /// Requests accepted by the cluster front door (routed to a replica).
+    pub submitted: AtomicU64,
+    /// Requests that finished successfully (terminal `Done` without error).
+    pub completed: AtomicU64,
+    /// Requests that finished with a typed error (rejection or fault).
+    pub failed: AtomicU64,
+    /// Routing decisions resolved by session affinity (the request's
+    /// session key was already pinned to a healthy replica).
+    pub affinity_hits: AtomicU64,
+    /// Requests re-routed to a sibling because their replica was fenced.
+    pub migrations: AtomicU64,
+    /// Replica fence events (`Cluster::fail_replica`).
+    pub failovers: AtomicU64,
+    /// Replica respawn events (`Cluster::respawn_replica`).
+    pub respawns: AtomicU64,
+    /// Per-replica routed-request counts (index = replica).
+    routed: Mutex<Vec<u64>>,
+    /// Modelled (simulated-clock) cluster-level latency distributions,
+    /// fed from each completion's internal modelled fields.
+    modelled_ttft_ms: Mutex<Reservoir>,
+    modelled_latency_ms: Mutex<Reservoir>,
+}
+
+impl ClusterMetrics {
+    pub fn new(replicas: usize) -> ClusterMetrics {
+        // fixed distinct seeds, like ServerMetrics: reproducible sampling
+        ClusterMetrics {
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            affinity_hits: AtomicU64::new(0),
+            migrations: AtomicU64::new(0),
+            failovers: AtomicU64::new(0),
+            respawns: AtomicU64::new(0),
+            routed: Mutex::new(vec![0; replicas]),
+            modelled_ttft_ms: Mutex::new(Reservoir::new(RESERVOIR_CAP, 0xc1a5_7f71)),
+            modelled_latency_ms: Mutex::new(Reservoir::new(RESERVOIR_CAP, 0xc1a5_1a7e)),
+        }
+    }
+
+    /// Record a routing decision landing on `replica`.
+    pub fn record_routed(&self, replica: usize) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        let mut r = self.routed.lock().unwrap();
+        if r.len() <= replica {
+            r.resize(replica + 1, 0);
+        }
+        r[replica] += 1;
+    }
+
+    /// Record a terminal event as it passes through the cluster pump.
+    pub fn record_done(&self, resp: &Response) {
+        if resp.error.is_some() {
+            self.failed.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.modelled_ttft_ms.lock().unwrap().push(resp.modelled_ttft_ms);
+        self.modelled_latency_ms.lock().unwrap().push(resp.modelled_latency_ms);
+    }
+
+    /// Per-replica routed counts.
+    pub fn routed_per_replica(&self) -> Vec<u64> {
+        self.routed.lock().unwrap().clone()
+    }
+
+    /// Modelled cluster-level TTFT distribution (deterministic).
+    pub fn modelled_ttft_summary(&self) -> Option<Summary> {
+        self.modelled_ttft_ms.lock().unwrap().summary()
+    }
+
+    /// Modelled cluster-level end-to-end latency distribution.
+    pub fn modelled_latency_summary(&self) -> Option<Summary> {
+        self.modelled_latency_ms.lock().unwrap().summary()
+    }
+
+    /// The `cluster` snapshot section (deterministic figures only); nests
+    /// under `obs::MetricsSnapshot::with_section`, flattening to perf-gate
+    /// keys like `<source>.cluster.modelled_latency_ms.p99`.
+    pub fn to_json(&self) -> Value {
+        let n = |a: &AtomicU64| json::num(a.load(Ordering::Relaxed) as f64);
+        let mut sec: Vec<(&str, Value)> = vec![
+            ("submitted", n(&self.submitted)),
+            ("completed", n(&self.completed)),
+            ("failed", n(&self.failed)),
+            ("affinity_hits", n(&self.affinity_hits)),
+            ("migrations", n(&self.migrations)),
+            ("failovers", n(&self.failovers)),
+            ("respawns", n(&self.respawns)),
+            (
+                "routed_per_replica",
+                json::arr(
+                    self.routed_per_replica().iter().map(|&c| json::num(c as f64)).collect(),
+                ),
+            ),
+        ];
+        if let Some(s) = self.modelled_ttft_summary() {
+            sec.push(("modelled_ttft_ms", summary_json(&s)));
+        }
+        if let Some(s) = self.modelled_latency_summary() {
+            sec.push(("modelled_latency_ms", summary_json(&s)));
+        }
+        json::obj(sec)
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = format!(
+            "cluster: {} routed ({} affinity), {} completed, {} failed; {} migrations, {} failovers, {} respawns",
+            self.submitted.load(Ordering::Relaxed),
+            self.affinity_hits.load(Ordering::Relaxed),
+            self.completed.load(Ordering::Relaxed),
+            self.failed.load(Ordering::Relaxed),
+            self.migrations.load(Ordering::Relaxed),
+            self.failovers.load(Ordering::Relaxed),
+            self.respawns.load(Ordering::Relaxed),
+        );
+        let routed = self.routed_per_replica();
+        let cells: Vec<String> =
+            routed.iter().enumerate().map(|(i, c)| format!("r{i}×{c}")).collect();
+        s += &format!("\nrouted per replica: {}", cells.join(" "));
+        if let Some(t) = self.modelled_ttft_summary() {
+            s += &format!(
+                "\nmodelled cluster ttft ms: p50 {:.2} p90 {:.2} p99 {:.2}",
+                t.p50, t.p90, t.p99
+            );
+        }
+        if let Some(l) = self.modelled_latency_summary() {
+            s += &format!(
+                "\nmodelled cluster latency ms: p50 {:.2} p90 {:.2} p99 {:.2}",
+                l.p50, l.p90, l.p99
+            );
+        }
+        s
+    }
+}
+
+fn summary_json(s: &Summary) -> Value {
+    json::obj(vec![
+        ("n", json::num(s.n as f64)),
+        ("mean", json::num(s.mean)),
+        ("std", json::num(s.std)),
+        ("min", json::num(s.min)),
+        ("p50", json::num(s.p50)),
+        ("p90", json::num(s.p90)),
+        ("p99", json::num(s.p99)),
+        ("max", json::num(s.max)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{ApiError, ErrorCode};
+
+    fn done(modelled_ttft: f64, modelled_latency: f64) -> Response {
+        Response {
+            id: 1,
+            tier: Some("lp".into()),
+            text: "x".into(),
+            tokens: vec![1, 2],
+            prompt_tokens: 3,
+            ttft_ms: 5.0,
+            latency_ms: 9.0,
+            modelled_ttft_ms: modelled_ttft,
+            modelled_latency_ms: modelled_latency,
+            error: None,
+        }
+    }
+
+    #[test]
+    fn counters_routing_and_summaries() {
+        let m = ClusterMetrics::new(2);
+        m.record_routed(0);
+        m.record_routed(1);
+        m.record_routed(1);
+        assert_eq!(m.routed_per_replica(), vec![1, 2]);
+        assert_eq!(m.submitted.load(Ordering::Relaxed), 3);
+        m.record_done(&done(4.0, 40.0));
+        m.record_done(&done(6.0, 60.0));
+        m.record_done(&Response::failed(9, ApiError::new(ErrorCode::Overloaded, "full")));
+        assert_eq!(m.completed.load(Ordering::Relaxed), 2);
+        assert_eq!(m.failed.load(Ordering::Relaxed), 1);
+        let t = m.modelled_ttft_summary().unwrap();
+        assert!((t.p50 - 5.0).abs() < 1e-9, "failures must not pollute the reservoirs");
+        let r = m.report();
+        assert!(r.contains("3 routed") && r.contains("r1×2"), "{r}");
+        assert!(r.contains("modelled cluster latency"), "{r}");
+    }
+
+    /// The exported section only carries deterministic figures and
+    /// serializes identically for identical states.
+    #[test]
+    fn section_is_deterministic_and_flattens() {
+        let build = || {
+            let m = ClusterMetrics::new(2);
+            m.record_routed(0);
+            m.record_done(&done(4.0, 40.0));
+            m
+        };
+        let a = build().to_json().to_string_pretty();
+        let b = build().to_json().to_string_pretty();
+        assert_eq!(a, b);
+        let snap = crate::obs::MetricsSnapshot::new("loadtest")
+            .with_section("cluster", build().to_json());
+        let doc = crate::util::json::Value::parse(&snap.to_string_pretty()).unwrap();
+        let flat = crate::obs::MetricsSnapshot::flatten(&doc);
+        assert_eq!(flat.get("loadtest.cluster.completed"), Some(&1.0));
+        assert_eq!(flat.get("loadtest.cluster.modelled_latency_ms.p50"), Some(&40.0));
+    }
+}

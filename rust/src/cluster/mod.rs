@@ -1,0 +1,618 @@
+//! L4 cluster: multi-replica serving over R independent simulated meshes.
+//!
+//! A [`Cluster`] owns R replicas — each a full [`Scheduler`]/[`Batcher`]
+//! pair over its own [`ServingModel`] mesh — behind one typed front door,
+//! [`Cluster::submit`]. The whole cluster is driven in *lockstep*:
+//! [`Cluster::step`] runs one scheduler tick per healthy replica in
+//! replica-index order, then pumps reply streams in request-id order, so
+//! a seeded workload produces bit-identical results, metrics and traces
+//! on every run (no scheduler threads, no wall-clock in any exported
+//! figure).
+//!
+//! ## Routing signal
+//!
+//! Each replica's SimNet mesh carries a modelled clock and per-tier
+//! decode rates — a free, deterministic load signal. Routing picks the
+//! replica with the earliest modelled finish time for the new request
+//! (see [`router`]); before any decode history exists it degrades to
+//! least-backlog. Decisions are deterministic: ties break to the lowest
+//! replica index.
+//!
+//! ## Session affinity
+//!
+//! A request carrying a `session` key is pinned to the replica that
+//! served the session's previous turns, so the paged-KV shared-prefix
+//! index ([`crate::model::kvcache`]) keeps multi-turn prefix reuse local
+//! — `kv.prefix_hits` accrue on the affine replica instead of being
+//! scattered. Pins move only when the pinned replica is fenced.
+//!
+//! ## Drain/respawn state machine
+//!
+//! ```text
+//!           fail_replica(i)                respawn_replica(i)
+//! HEALTHY ───────────────────▶ FENCED ───────────────────────▶ HEALTHY
+//!  sched: Some                 sched: None                     fresh Scheduler,
+//!                                                              same ServerMetrics
+//!    fence   take the Scheduler (no new admissions possible)
+//!    drain   eject admitted work (Scheduler::eject_all) + queued
+//!            batcher backlog; displaced jobs re-route to healthy
+//!            siblings through the cost router (counted as
+//!            migrations), keeping their original reply streams
+//!    replay  a migrated request re-runs from scratch on the
+//!            sibling; decode is deterministic per request, so the
+//!            re-run reproduces the already-streamed tokens and the
+//!            pump dedups them by index — callers see each token
+//!            exactly once and exactly one terminal Done
+//! ```
+//!
+//! If no healthy sibling remains, displaced requests fail with a typed
+//! error — never silently lost: every submitted request gets exactly one
+//! terminal event.
+
+pub mod loadgen;
+pub mod metrics;
+pub mod router;
+
+pub use loadgen::{FaultPlan, LoadReport, LoadTrace, Scenario};
+pub use metrics::ClusterMetrics;
+pub use router::RouteSignal;
+
+use std::collections::BTreeMap;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::api::{ApiError, CompletionRequest, ErrorCode, ModelInfo, ModelsResponse};
+use crate::coordinator::batcher::{Batcher, SubmitError};
+use crate::coordinator::request::{Job, Request, Response, TokenEvent};
+use crate::coordinator::scheduler::Scheduler;
+use crate::coordinator::{ResponseHandle, ServerMetrics};
+use crate::error::{Error, Result};
+use crate::model::ServingModel;
+use crate::obs::{MetricsSnapshot, Tracer};
+
+/// Builds the serving model for replica `i` — used at construction and
+/// again on [`Cluster::respawn_replica`]. Replicas are symmetric; the
+/// index is provided for logging/asymmetric-test scenarios.
+pub type ModelFactory = Box<dyn Fn(usize) -> Result<ServingModel> + Send>;
+
+struct Replica {
+    batcher: Arc<Batcher>,
+    /// `None` = fenced (failed, awaiting respawn).
+    sched: Option<Scheduler>,
+    /// Survives fence/respawn cycles: one metrics lineage per replica slot.
+    metrics: Arc<ServerMetrics>,
+    tracer: Option<Arc<Tracer>>,
+}
+
+/// Per-request interposition between a replica's reply stream and the
+/// caller's [`ResponseHandle`]. Forwards tokens in index order exactly
+/// once (dropping the duplicate prefix a migrated request re-streams)
+/// and exactly one terminal `Done`.
+struct Pump {
+    rx: Receiver<TokenEvent>,
+    tx: Sender<TokenEvent>,
+    next_index: usize,
+    replica: usize,
+    session: Option<String>,
+}
+
+pub struct Cluster {
+    model_name: String,
+    tiers: Vec<String>,
+    default_tier: String,
+    replicas: Vec<Replica>,
+    factory: ModelFactory,
+    /// Request-id order — pumping iterates this map, so delivery order
+    /// across requests is deterministic.
+    pumps: BTreeMap<u64, Pump>,
+    /// session key → pinned replica.
+    sessions: BTreeMap<String, usize>,
+    pub metrics: Arc<ClusterMetrics>,
+    next_id: u64,
+}
+
+impl Cluster {
+    /// Build a cluster of `replicas` symmetric replicas; `factory(i)` is
+    /// called once per replica (and again on respawn). `queue_depth`
+    /// bounds each replica's admission queue.
+    pub fn new(
+        model_name: &str,
+        factory: ModelFactory,
+        replicas: usize,
+        queue_depth: usize,
+    ) -> Result<Cluster> {
+        Cluster::with_tracers(model_name, factory, replicas, queue_depth, None)
+    }
+
+    /// Like [`Cluster::new`] with one span recorder per replica (index-
+    /// aligned); each replica's scheduler + mesh events land in its own
+    /// tracer, plus cluster routing/migration instants.
+    pub fn with_tracers(
+        model_name: &str,
+        factory: ModelFactory,
+        replicas: usize,
+        queue_depth: usize,
+        tracers: Option<Vec<Arc<Tracer>>>,
+    ) -> Result<Cluster> {
+        if replicas == 0 {
+            return Err(Error::Serving("cluster needs at least one replica".into()));
+        }
+        if let Some(t) = &tracers {
+            if t.len() != replicas {
+                return Err(Error::Serving(format!(
+                    "got {} tracers for {replicas} replicas",
+                    t.len()
+                )));
+            }
+        }
+        let mut reps = Vec::with_capacity(replicas);
+        let mut tiers = Vec::new();
+        let mut default_tier = String::new();
+        for i in 0..replicas {
+            let model = factory(i)?;
+            if i == 0 {
+                tiers = model.variant_ids().iter().map(|v| v.to_string()).collect();
+                default_tier = model.default_tier().to_string();
+            }
+            let metrics = Arc::new(ServerMetrics::default());
+            let tracer = tracers.as_ref().map(|t| t[i].clone());
+            let sched = Scheduler::with_tracer(model, metrics.clone(), tracer.clone());
+            reps.push(Replica {
+                batcher: Arc::new(Batcher::new(queue_depth)),
+                sched: Some(sched),
+                metrics,
+                tracer,
+            });
+        }
+        Ok(Cluster {
+            model_name: model_name.to_string(),
+            tiers,
+            default_tier,
+            replicas: reps,
+            factory,
+            pumps: BTreeMap::new(),
+            sessions: BTreeMap::new(),
+            metrics: Arc::new(ClusterMetrics::new(replicas)),
+            next_id: 1,
+        })
+    }
+
+    pub fn replica_count(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn healthy_count(&self) -> usize {
+        self.replicas.iter().filter(|r| r.sched.is_some()).count()
+    }
+
+    pub fn is_healthy(&self, idx: usize) -> bool {
+        self.replicas.get(idx).is_some_and(|r| r.sched.is_some())
+    }
+
+    /// Replica `idx`'s metrics lineage (stable across fence/respawn).
+    pub fn replica_metrics(&self, idx: usize) -> Arc<ServerMetrics> {
+        self.replicas[idx].metrics.clone()
+    }
+
+    /// The `GET /v1/models` payload for this deployment.
+    pub fn models_response(&self) -> ModelsResponse {
+        ModelsResponse {
+            models: vec![ModelInfo {
+                model: self.model_name.clone(),
+                tiers: self.tiers.clone(),
+                default_tier: self.default_tier.clone(),
+            }],
+            replicas: self.replicas.len(),
+        }
+    }
+
+    /// Route and enqueue a request; the returned handle streams tokens
+    /// and resolves to the final [`Response`] as [`Cluster::step`] is
+    /// driven. Fails fast (no handle) only when no replica can accept:
+    /// every accepted request is guaranteed a terminal event.
+    pub fn submit(&mut self, req: CompletionRequest) -> Result<ResponseHandle> {
+        let session = req.session.clone();
+        let Some(replica) =
+            self.route(req.tier.as_deref(), req.max_tokens, session.as_deref())
+        else {
+            return Err(Error::Serving("no healthy replicas".into()));
+        };
+        let id = self.next_id;
+        self.next_id += 1;
+        let (sched_tx, sched_rx) = channel();
+        let (caller_tx, caller_rx) = channel();
+        let opts = req.options();
+        let job = Job {
+            request: Request { id, prompt: req.prompt, opts, submitted_at: Instant::now() },
+            reply: sched_tx,
+        };
+        let rep = &self.replicas[replica];
+        rep.metrics.requests_submitted.fetch_add(1, Ordering::Relaxed);
+        match rep.batcher.submit(job) {
+            Ok(()) => {}
+            Err(SubmitError::Full(_)) => {
+                rep.metrics.requests_rejected.fetch_add(1, Ordering::Relaxed);
+                return Err(Error::Overloaded("queue full (back-pressure)".into()));
+            }
+            Err(SubmitError::Closed(_)) => {
+                return Err(Error::Serving("replica shutting down".into()))
+            }
+        }
+        self.trace_instant(replica, "routed", &[("request", id.to_string())]);
+        if let Some(key) = &session {
+            self.sessions.insert(key.clone(), replica);
+        }
+        self.metrics.record_routed(replica);
+        self.pumps.insert(
+            id,
+            Pump { rx: sched_rx, tx: caller_tx, next_index: 0, replica, session },
+        );
+        Ok(ResponseHandle::new(id, caller_rx))
+    }
+
+    /// One lockstep iteration: a scheduler tick per healthy replica (in
+    /// index order), then pump reply streams. Returns `false` once the
+    /// cluster is fully drained.
+    pub fn step(&mut self) -> bool {
+        for i in 0..self.replicas.len() {
+            let batcher = self.replicas[i].batcher.clone();
+            if let Some(sched) = self.replicas[i].sched.as_mut() {
+                sched.step(&batcher);
+            }
+        }
+        self.pump();
+        !self.is_idle()
+    }
+
+    /// No queued, admitted, or un-pumped work anywhere.
+    pub fn is_idle(&self) -> bool {
+        self.pumps.is_empty()
+            && self.replicas.iter().all(|r| {
+                r.batcher.is_empty() && r.sched.as_ref().is_none_or(|s| s.is_idle())
+            })
+    }
+
+    /// Drive [`Cluster::step`] until idle; errors if the cluster fails to
+    /// drain within `max_steps` (a stuck-work guard for tests/CLIs).
+    pub fn run_to_idle(&mut self, max_steps: usize) -> Result<usize> {
+        for step in 0..max_steps {
+            if !self.step() {
+                return Ok(step);
+            }
+        }
+        Err(Error::Serving(format!("cluster failed to drain within {max_steps} steps")))
+    }
+
+    /// Flush per-replica mesh event tracks into their tracers (call once
+    /// after the run, before exporting traces).
+    pub fn finish(&self) {
+        for r in &self.replicas {
+            if let Some(s) = &r.sched {
+                s.flush_mesh_trace();
+            }
+        }
+    }
+
+    /// Fence replica `idx` and migrate its work: no new admissions, all
+    /// queued + in-flight requests drain to healthy siblings (or fail
+    /// typed if none remain). Returns the number of displaced requests.
+    /// Idempotent on an already-fenced replica.
+    pub fn fail_replica(&mut self, idx: usize) -> usize {
+        let Some(mut sched) = self.replicas[idx].sched.take() else { return 0 };
+        self.metrics.failovers.fetch_add(1, Ordering::Relaxed);
+        let mut displaced = sched.eject_all();
+        displaced.extend(self.replicas[idx].batcher.drain(usize::MAX, Duration::ZERO));
+        displaced.sort_by_key(|j| j.request.id);
+        sched.flush_mesh_trace();
+        drop(sched);
+        let n = displaced.len();
+        for job in displaced {
+            self.reroute(job);
+        }
+        n
+    }
+
+    /// Rebuild a fenced replica's model (same factory, same metrics
+    /// lineage) and return it to the routable pool. No-op if healthy.
+    pub fn respawn_replica(&mut self, idx: usize) -> Result<()> {
+        if self.replicas[idx].sched.is_some() {
+            return Ok(());
+        }
+        let model = (self.factory)(idx)?;
+        let rep = &mut self.replicas[idx];
+        rep.sched = Some(Scheduler::with_tracer(model, rep.metrics.clone(), rep.tracer.clone()));
+        self.metrics.respawns.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Cluster-wide deterministic metrics document: the `cluster` section
+    /// plus one `replicaN` server section per replica.
+    pub fn snapshot(&self, source: &str) -> MetricsSnapshot {
+        let mut snap =
+            MetricsSnapshot::new(source).with_section("cluster", self.metrics.to_json());
+        for (i, r) in self.replicas.iter().enumerate() {
+            snap = snap.with_server_named(&format!("replica{i}"), &r.metrics);
+        }
+        snap
+    }
+
+    // ---- internals ---------------------------------------------------------
+
+    fn route(
+        &self,
+        tier: Option<&str>,
+        expected_tokens: usize,
+        session: Option<&str>,
+    ) -> Option<usize> {
+        if let Some(key) = session {
+            if let Some(&r) = self.sessions.get(key) {
+                if self.replicas[r].sched.is_some() {
+                    self.metrics.affinity_hits.fetch_add(1, Ordering::Relaxed);
+                    return Some(r);
+                }
+            }
+        }
+        let signals: Vec<Option<RouteSignal>> = self
+            .replicas
+            .iter()
+            .map(|r| {
+                let sched = r.sched.as_ref()?;
+                Some(RouteSignal {
+                    backlog: r.batcher.len() + sched.admitted_len(),
+                    clock_ns: sched.model().mesh.metrics.modelled_total_ns(),
+                    cost_per_token_ns: tier_cost_ns(&r.metrics, sched.model(), tier),
+                })
+            })
+            .collect();
+        router::pick(&signals, expected_tokens)
+    }
+
+    /// Re-route one displaced job after a fence, keeping its original
+    /// reply stream (the caller's pump keeps working untouched).
+    fn reroute(&mut self, job: Job) {
+        let id = job.request.id;
+        let tier = job.request.opts.tier.clone();
+        let expected = job.request.opts.max_new_tokens;
+        let session = self.pumps.get(&id).and_then(|p| p.session.clone());
+        let Some(target) = self.route(tier.as_deref(), expected, session.as_deref()) else {
+            let _ = job.reply.send(TokenEvent::Done(Response::failed(
+                id,
+                ApiError::new(ErrorCode::Internal, "replica failed; no healthy sibling"),
+            )));
+            return;
+        };
+        let rep = &self.replicas[target];
+        rep.metrics.requests_submitted.fetch_add(1, Ordering::Relaxed);
+        match rep.batcher.submit(job) {
+            Ok(()) => {
+                self.metrics.migrations.fetch_add(1, Ordering::Relaxed);
+                self.trace_instant(target, "migrated", &[("request", id.to_string())]);
+                if let Some(p) = self.pumps.get_mut(&id) {
+                    p.replica = target;
+                }
+                if let Some(key) = session {
+                    self.sessions.insert(key, target);
+                }
+            }
+            Err(SubmitError::Full(job)) | Err(SubmitError::Closed(job)) => {
+                rep.metrics.requests_rejected.fetch_add(1, Ordering::Relaxed);
+                let _ = job.reply.send(TokenEvent::Done(Response::failed(
+                    id,
+                    ApiError::new(ErrorCode::Overloaded, "replica failed; sibling queue full"),
+                )));
+            }
+        }
+    }
+
+    /// Forward buffered reply events to callers, in request-id order.
+    /// Tokens are deduped by index (migration replay) and each request
+    /// sees exactly one terminal `Done`.
+    fn pump(&mut self) {
+        let cm = self.metrics.clone();
+        let mut finished = Vec::new();
+        for (&id, pump) in self.pumps.iter_mut() {
+            loop {
+                match pump.rx.try_recv() {
+                    Ok(TokenEvent::Token { index, token, text }) => {
+                        if index == pump.next_index {
+                            pump.next_index += 1;
+                            let _ = pump.tx.send(TokenEvent::Token { index, token, text });
+                        }
+                        // index < next_index: deterministic replay of a
+                        // migrated request re-streaming its prefix — drop
+                    }
+                    Ok(TokenEvent::Done(resp)) => {
+                        cm.record_done(&resp);
+                        let _ = pump.tx.send(TokenEvent::Done(resp));
+                        finished.push(id);
+                        break;
+                    }
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        // reply sender dropped without Done (should not
+                        // happen in the fence path, which always re-routes
+                        // or fails typed) — surface instead of hanging
+                        let resp = Response::failed(
+                            id,
+                            ApiError::new(ErrorCode::Internal, "reply stream dropped"),
+                        );
+                        cm.record_done(&resp);
+                        let _ = pump.tx.send(TokenEvent::Done(resp));
+                        finished.push(id);
+                        break;
+                    }
+                }
+            }
+        }
+        for id in finished {
+            self.pumps.remove(&id);
+        }
+    }
+
+    fn trace_instant(&self, replica: usize, name: &str, args: &[(&str, String)]) {
+        let rep = &self.replicas[replica];
+        if let (Some(tr), Some(sched)) = (&rep.tracer, &rep.sched) {
+            tr.instant(
+                crate::obs::Track::Scheduler,
+                name,
+                sched.model().mesh.metrics.modelled_total_ns(),
+                args,
+            );
+        }
+    }
+}
+
+/// Modelled ns/token for `tier` on a replica — the request's tier's
+/// observed rate when it has history, else the replica's overall decode
+/// rate, else `None` (no signal yet).
+fn tier_cost_ns(
+    metrics: &ServerMetrics,
+    model: &ServingModel,
+    tier: Option<&str>,
+) -> Option<f64> {
+    if let Ok(vid) = model.resolve_tier(tier) {
+        for (name, st) in metrics.tier_stats() {
+            if name == vid.as_str() {
+                if let Some(tps) = st.modelled_tok_per_s() {
+                    return Some(1e9 / tps);
+                }
+            }
+        }
+    }
+    metrics.modelled_decode_tok_per_s().map(|tps| 1e9 / tps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::InterconnectConfig;
+    use crate::model::{transform, Weights};
+    use crate::runtime::Manifest;
+
+    /// Same graceful no-artifact gating as the server tests: `None`
+    /// (skip) where the AOT manifest is absent.
+    fn factory() -> Option<ModelFactory> {
+        let manifest = Manifest::load_default().ok()?;
+        let cfg = manifest.model("td-small").ok()?.config.clone();
+        // probe once so construction failures skip instead of panic
+        let weights = Weights::random(&cfg, 11);
+        let plan = transform::pair_parallel(cfg.n_layers, 2, 10, true);
+        ServingModel::new(
+            &manifest,
+            "td-small",
+            &weights,
+            &plan,
+            InterconnectConfig { enabled: false, ..Default::default() },
+        )
+        .ok()?;
+        Some(Box::new(move |_i| {
+            let weights = Weights::random(&cfg, 11);
+            let plan = transform::pair_parallel(cfg.n_layers, 2, 10, true);
+            ServingModel::new(
+                &manifest,
+                "td-small",
+                &weights,
+                &plan,
+                InterconnectConfig { enabled: false, ..Default::default() },
+            )
+        }))
+    }
+
+    fn drain(h: ResponseHandle) -> (Vec<i32>, Response) {
+        let mut streamed = Vec::new();
+        for ev in h.stream() {
+            match ev {
+                TokenEvent::Token { index, token, .. } => {
+                    assert_eq!(index, streamed.len(), "token indices must be contiguous");
+                    streamed.push(token);
+                }
+                TokenEvent::Done(r) => return (streamed, r),
+            }
+        }
+        panic!("stream ended without Done");
+    }
+
+    #[test]
+    fn two_replicas_serve_and_spread_load() {
+        let Some(factory) = factory() else { return };
+        let mut cluster = Cluster::new("td-small", factory, 2, 32).unwrap();
+        let handles: Vec<_> = (0..6)
+            .map(|i| {
+                cluster
+                    .submit(
+                        CompletionRequest::new(format!("prompt {i} the red fox")).max_tokens(3),
+                    )
+                    .unwrap()
+            })
+            .collect();
+        cluster.run_to_idle(10_000).unwrap();
+        for h in handles {
+            let (streamed, resp) = drain(h);
+            assert!(resp.error.is_none(), "{:?}", resp.error);
+            assert_eq!(resp.generated_tokens(), 3);
+            assert_eq!(streamed, resp.tokens);
+            assert!(resp.modelled_latency_ms >= resp.modelled_ttft_ms);
+        }
+        let routed = cluster.metrics.routed_per_replica();
+        assert_eq!(routed.iter().sum::<u64>(), 6);
+        assert!(
+            routed.iter().all(|&c| c > 0),
+            "router must spread load across both replicas: {routed:?}"
+        );
+        assert_eq!(cluster.metrics.completed.load(Ordering::Relaxed), 6);
+    }
+
+    #[test]
+    fn session_affinity_pins_turns_to_one_replica() {
+        let Some(factory) = factory() else { return };
+        let mut cluster = Cluster::new("td-small", factory, 2, 32).unwrap();
+        // interleave two sessions so plain load balancing would split them
+        let mut handles = Vec::new();
+        for turn in 0..3 {
+            for sess in ["user-a", "user-b"] {
+                let req = CompletionRequest::new(format!("{sess} turn {turn} the red fox"))
+                    .max_tokens(2)
+                    .session(sess);
+                handles.push((sess, cluster.submit(req).unwrap()));
+                cluster.run_to_idle(10_000).unwrap();
+            }
+        }
+        let mut homes: BTreeMap<&str, u64> = BTreeMap::new();
+        for (sess, h) in handles {
+            let (_, resp) = drain(h);
+            assert!(resp.error.is_none(), "{:?}", resp.error);
+            *homes.entry(sess).or_default() += 1;
+        }
+        assert_eq!(homes["user-a"], 3);
+        // turns 2..3 of each session hit the affinity map (turn 1 pins it)
+        assert_eq!(cluster.metrics.affinity_hits.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn failing_all_replicas_yields_typed_errors_not_hangs() {
+        let Some(factory) = factory() else { return };
+        let mut cluster = Cluster::new("td-small", factory, 2, 32).unwrap();
+        let h = cluster
+            .submit(CompletionRequest::new("the red fox").max_tokens(4))
+            .unwrap();
+        cluster.step();
+        cluster.fail_replica(0);
+        cluster.fail_replica(1);
+        assert_eq!(cluster.healthy_count(), 0);
+        assert!(cluster.submit(CompletionRequest::new("x")).is_err(), "no replica can accept");
+        cluster.run_to_idle(10_000).unwrap();
+        let (_, resp) = drain(h);
+        let err = resp.error.expect("displaced with no sibling must fail typed");
+        assert_eq!(err.code, ErrorCode::Internal);
+        // fenced → respawn restores service
+        cluster.respawn_replica(0).unwrap();
+        assert_eq!(cluster.healthy_count(), 1);
+        let h = cluster.submit(CompletionRequest::new("the red fox").max_tokens(2)).unwrap();
+        cluster.run_to_idle(10_000).unwrap();
+        let (_, resp) = drain(h);
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert_eq!(cluster.metrics.respawns.load(Ordering::Relaxed), 1);
+    }
+}

@@ -1,0 +1,113 @@
+//! Cost-model replica router.
+//!
+//! The deterministic SimNet runtime gives the cluster a load signal real
+//! deployments have to estimate: every replica's mesh carries a modelled
+//! clock (`MeshMetrics::modelled_total_ns`) that advances only with the
+//! work actually executed, and `ServerMetrics::tier_stats` prices a token
+//! on each tier from rounds that already ran. Routing therefore picks the
+//! replica with the *earliest modelled finish time* for the new request:
+//!
+//! ```text
+//! finish(r) = clock_ns(r) + (backlog(r) + 1) · expected_tokens · cost_ns(r)
+//! ```
+//!
+//! where `backlog` counts queued + admitted-but-unfinished requests and
+//! `cost_ns` is the modelled ns/token for the request's tier on that
+//! replica (falling back to the replica's overall modelled decode rate).
+//!
+//! Until a replica has decoded anything its cost is unknown; when *no*
+//! healthy replica has a cost signal yet, the router degrades to the
+//! least-backlog policy (the policy of the old `coordinator::router`
+//! stub, absorbed here). All ties break toward the lowest replica index,
+//! keeping the decision deterministic.
+
+/// One replica's routing inputs, sampled at decision time. `None` in the
+/// cluster's signal vector marks a fenced (failed, not yet respawned)
+/// replica, which is never eligible.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RouteSignal {
+    /// Queued + admitted-but-unfinished requests on the replica.
+    pub backlog: usize,
+    /// The replica mesh's modelled clock, ns.
+    pub clock_ns: u64,
+    /// Modelled ns per generated token for the request's tier on this
+    /// replica; `None` until the replica has decode history.
+    pub cost_per_token_ns: Option<f64>,
+}
+
+/// Pick the replica with the earliest modelled finish for a request
+/// expected to generate `expected_tokens` tokens. Returns `None` only
+/// when every replica is fenced.
+pub fn pick(signals: &[Option<RouteSignal>], expected_tokens: usize) -> Option<usize> {
+    let any_cost = signals
+        .iter()
+        .flatten()
+        .any(|s| s.cost_per_token_ns.is_some());
+    let mut best: Option<(usize, f64)> = None;
+    for (i, sig) in signals.iter().enumerate() {
+        let Some(sig) = sig else { continue };
+        let score = if any_cost {
+            // replicas with no history yet price at cost 0: they are idle
+            // or near-idle and should win until they have a real signal
+            let cost = sig.cost_per_token_ns.unwrap_or(0.0);
+            sig.clock_ns as f64 + (sig.backlog as f64 + 1.0) * expected_tokens as f64 * cost
+        } else {
+            // least-loaded fallback (migrated from the deleted router stub)
+            sig.backlog as f64
+        };
+        // strict `<` keeps ties on the lowest index
+        match best {
+            Some((_, b)) if score >= b => {}
+            _ => best = Some((i, score)),
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sig(backlog: usize, clock_ns: u64, cost: Option<f64>) -> Option<RouteSignal> {
+        Some(RouteSignal { backlog, clock_ns, cost_per_token_ns: cost })
+    }
+
+    #[test]
+    fn no_healthy_replica_routes_nowhere() {
+        assert_eq!(pick(&[], 8), None);
+        assert_eq!(pick(&[None, None], 8), None);
+    }
+
+    #[test]
+    fn fallback_is_least_backlog_with_low_index_ties() {
+        // no replica has decode history → least-backlog policy
+        let s = [sig(3, 900, None), sig(1, 0, None), sig(1, 0, None)];
+        assert_eq!(pick(&s, 8), Some(1));
+    }
+
+    #[test]
+    fn cost_model_prefers_earliest_modelled_finish() {
+        // replica 0: ahead on the clock but fast and idle;
+        // replica 1: behind on the clock but slow and backlogged.
+        // finish(0) = 10_000 + 1·16·100  = 11_600
+        // finish(1) =  2_000 + 3·16·500  = 26_000
+        let s = [sig(0, 10_000, Some(100.0)), sig(2, 2_000, Some(500.0))];
+        assert_eq!(pick(&s, 16), Some(0));
+        // longer requests amortize the clock head start the same way
+        assert_eq!(pick(&s, 1_000), Some(0));
+    }
+
+    #[test]
+    fn cold_replica_wins_until_it_has_history() {
+        // one replica has a cost signal, the other is fresh (respawned):
+        // the fresh one prices at 0 and absorbs load until it warms up
+        let s = [sig(4, 50_000, Some(200.0)), sig(0, 0, None)];
+        assert_eq!(pick(&s, 8), Some(1));
+    }
+
+    #[test]
+    fn fenced_replicas_are_skipped() {
+        let s = [None, sig(9, 5_000, Some(10.0)), None];
+        assert_eq!(pick(&s, 8), Some(1));
+    }
+}

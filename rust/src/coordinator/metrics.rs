@@ -56,6 +56,10 @@ pub struct ServerMetrics {
     /// never move this counter — the load-shedding tests assert zero slot
     /// churn by comparing it against completions.
     pub slot_allocs: AtomicU64,
+    /// Requests parked at admission because the paged-KV pools were
+    /// transiently full (back-pressure instead of rejection); each parked
+    /// request re-admits once siblings retire and free pages.
+    pub admission_waits: AtomicU64,
     pub tokens_generated: AtomicU64,
     pub prefill_tokens: AtomicU64,
     pub decode_steps: AtomicU64,
@@ -109,6 +113,7 @@ impl Default for ServerMetrics {
             requests_rejected: AtomicU64::new(0),
             requests_cancelled: AtomicU64::new(0),
             slot_allocs: AtomicU64::new(0),
+            admission_waits: AtomicU64::new(0),
             tokens_generated: AtomicU64::new(0),
             prefill_tokens: AtomicU64::new(0),
             decode_steps: AtomicU64::new(0),

@@ -1,14 +1,14 @@
 //! L3 coordinator: the serving stack around the LP/TP executor.
 //!
-//! Shape follows the vLLM-router architecture: a [`router`] fronting model
-//! replicas, a [`batcher`] with bounded admission, and a continuous-batching
-//! [`scheduler`] that interleaves prefills with multi-slot decode steps over
-//! the simulated tensor-parallel mesh.
+//! Shape follows the vLLM-router architecture: a [`batcher`] with bounded
+//! admission and a continuous-batching [`scheduler`] that interleaves
+//! prefills with multi-slot decode steps over the simulated tensor-parallel
+//! mesh. Multi-replica routing lives one layer up, in [`crate::cluster`]:
+//! a cost-model router fronting R independent scheduler/batcher pairs.
 
 pub mod batcher;
 pub mod metrics;
 pub mod request;
-pub mod router;
 pub mod scheduler;
 pub mod server;
 

@@ -70,6 +70,13 @@ pub struct Response {
     pub ttft_ms: f64,
     /// Total latency, ms.
     pub latency_ms: f64,
+    /// Modelled (simulated-clock) TTFT, ms — deterministic twin of
+    /// `ttft_ms`. Internal: consumed by `cluster::ClusterMetrics`, never
+    /// serialized onto the wire (`api::CompletionResponse` omits it).
+    pub modelled_ttft_ms: f64,
+    /// Modelled (simulated-clock) end-to-end latency, ms (internal, same
+    /// contract as `modelled_ttft_ms`).
+    pub modelled_latency_ms: f64,
     /// Typed failure (stable `api::ErrorCode` + message) if the request
     /// did not complete.
     pub error: Option<ApiError>,
@@ -92,6 +99,8 @@ impl Response {
             prompt_tokens: 0,
             ttft_ms: 0.0,
             latency_ms: 0.0,
+            modelled_ttft_ms: 0.0,
+            modelled_latency_ms: 0.0,
             error: Some(err),
         }
     }

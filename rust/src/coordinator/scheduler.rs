@@ -88,6 +88,19 @@ struct InFlight {
     rng: SplitMix64,
 }
 
+/// A request that passed validation but cannot map its KV pages *right
+/// now* (paged pools transiently full): parked on the batcher's
+/// back-pressure seam instead of rejected, re-tried FIFO each iteration
+/// once siblings retire and free pages.
+struct Parked {
+    request: Request,
+    reply: Sender<TokenEvent>,
+    /// Encoded prompt (kept so retries never re-tokenize).
+    ids: Vec<i32>,
+    /// Serving tier, already resolved at validation time.
+    vid: VariantId,
+}
+
 /// An admitted request whose prompt is still streaming into its KV slot,
 /// one chunk per scheduler iteration.
 struct PendingPrefill {
@@ -110,6 +123,10 @@ pub struct Scheduler {
     /// head advances one chunk per iteration, then rotates to the back,
     /// so several long prompts interleave instead of serializing.
     pending: VecDeque<PendingPrefill>,
+    /// Validated requests waiting out transient paged-KV pool pressure
+    /// (see [`Parked`]); strictly FIFO — the head admits first or nobody
+    /// does, so a small request can never starve a parked large one.
+    parked: VecDeque<Parked>,
     metrics: Arc<ServerMetrics>,
     /// Optional span recorder (`crate::obs`): when set, the scheduler
     /// emits request-lifecycle spans on the simulated clock and the mesh
@@ -140,6 +157,7 @@ impl Scheduler {
             slots,
             inflight: HashMap::new(),
             pending: VecDeque::new(),
+            parked: VecDeque::new(),
             metrics,
             tracer,
         }
@@ -168,7 +186,7 @@ impl Scheduler {
     pub fn run(&mut self, batcher: &Batcher, batch_wait: Duration) {
         loop {
             let free = self.slots.free_count();
-            let idle = self.inflight.is_empty() && self.pending.is_empty();
+            let idle = self.is_idle();
             // Block on the queue only when idle; when working, poll.
             let wait = if idle {
                 Duration::from_millis(50)
@@ -179,7 +197,7 @@ impl Scheduler {
             for job in admitted {
                 self.admit(job);
             }
-            if self.inflight.is_empty() && self.pending.is_empty() {
+            if self.is_idle() {
                 if batcher.is_closed() && batcher.is_empty() {
                     self.flush_mesh_trace();
                     return;
@@ -190,14 +208,102 @@ impl Scheduler {
         }
     }
 
+    /// No admitted work anywhere: nothing parked, prefilling, or decoding.
+    pub fn is_idle(&self) -> bool {
+        self.inflight.is_empty() && self.pending.is_empty() && self.parked.is_empty()
+    }
+
+    /// Requests this scheduler has accepted but not yet retired (parked +
+    /// prefilling + decoding) — the replica-local half of the cluster
+    /// router's backlog signal (the other half is the batcher's queue).
+    pub fn admitted_len(&self) -> usize {
+        self.parked.len() + self.pending.len() + self.inflight.len()
+    }
+
+    /// One lockstep iteration for an external driver (the cluster): drain
+    /// up to the free-slot count from `batcher` *without blocking*, admit,
+    /// and run one tick when any work exists. Returns `true` while
+    /// admitted work remains. Single-threaded by construction — the
+    /// cluster steps its replicas in index order, which is what makes
+    /// multi-replica runs bit-reproducible.
+    pub fn step(&mut self, batcher: &Batcher) -> bool {
+        let free = self.slots.free_count();
+        let admitted = if free > 0 { batcher.drain(free, Duration::ZERO) } else { vec![] };
+        for job in admitted {
+            self.admit(job);
+        }
+        if self.is_idle() {
+            return false;
+        }
+        self.tick();
+        !self.is_idle()
+    }
+
+    /// Fence support (cluster drain): strip EVERY accepted-but-unfinished
+    /// request — parked, mid-prefill, and in-flight — out of the
+    /// scheduler, releasing their slots and pages, and hand them back as
+    /// re-submittable [`Job`]s in admission (request-id) order. In-flight
+    /// requests may already have streamed tokens; a sibling re-runs them
+    /// from scratch and — sampling being deterministic per request id —
+    /// re-emits the identical stream, which the cluster's per-request
+    /// pump dedups by index contiguity. Zero requests are lost: every
+    /// ejected job keeps its original reply channel.
+    pub fn eject_all(&mut self) -> Vec<Job> {
+        let mut jobs = Vec::new();
+        for p in std::mem::take(&mut self.parked) {
+            jobs.push(Job { request: p.request, reply: p.reply });
+        }
+        for p in std::mem::take(&mut self.pending) {
+            let slot = p.state.slot();
+            self.release_slot(slot);
+            jobs.push(Job { request: p.request, reply: p.reply });
+        }
+        let mut slots: Vec<usize> = self.inflight.keys().copied().collect();
+        slots.sort_unstable();
+        for slot in slots {
+            let inf = self.inflight.remove(&slot).unwrap();
+            self.release_slot(slot);
+            jobs.push(Job { request: inf.request, reply: inf.reply });
+        }
+        jobs.sort_by_key(|j| j.request.id);
+        jobs
+    }
+
     /// One scheduler iteration: at most one prefill chunk for the head of
     /// the pending queue, then one batched decode round over every live
     /// (fully prefilled) slot. The interleaving contract: a long prompt
     /// adds `ceil(L / K)` iterations, and every one of them still decodes
     /// all live slots.
     fn tick(&mut self) {
+        self.retry_parked();
         self.step_pending_prefill();
         self.decode_round();
+    }
+
+    /// Re-try parked requests, FIFO: admit from the head while a slot is
+    /// free and the head's pages map right now; stop at the first that
+    /// still must wait (never skip ahead — a small request queued behind a
+    /// large one would otherwise starve it forever). Livelock-free: once
+    /// everything in flight retires, every claimed page is either free or
+    /// index-held (evictable), so any request that passed the `fits`
+    /// check becomes admissible.
+    fn retry_parked(&mut self) {
+        loop {
+            let Some(head) = self.parked.front() else { return };
+            if self.slots.free_count() == 0 {
+                return;
+            }
+            let must_wait = self.model.admission_must_wait_v(
+                &head.vid,
+                head.ids.len(),
+                head.request.opts.max_new_tokens,
+            );
+            if must_wait {
+                return;
+            }
+            let p = self.parked.pop_front().unwrap();
+            self.admit_ready(p.request, p.reply, p.ids, p.vid);
+        }
     }
 
     /// Validate + claim a slot + enqueue the prompt for chunked prefill.
@@ -208,7 +314,6 @@ impl Scheduler {
         let Job { request, reply } = job;
         let ids = tokenizer::encode(&request.prompt, true, false);
         let max_new = request.opts.max_new_tokens;
-        let sampler = request.opts.sampler.clone();
         let vid = match self.model.resolve_tier(request.opts.tier.as_deref()) {
             Ok(v) => v,
             Err(e) => {
@@ -229,6 +334,41 @@ impl Scheduler {
             let _ = reply.send(TokenEvent::Done(Response::failed(request.id, ApiError::from(&e))));
             return;
         }
+        // Back-pressure seam: the request CAN fit the pools eventually
+        // (check_admission_v passed) but not right now — park it instead
+        // of rejecting; retry_parked re-admits it once pages free.
+        if !self.parked.is_empty()
+            || self.model.admission_must_wait_v(&vid, ids.len(), max_new)
+        {
+            self.metrics
+                .admission_waits
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            if let Some(tr) = &self.tracer {
+                tr.instant(
+                    Track::Scheduler,
+                    "parked",
+                    self.modelled_clock_ns(),
+                    &[("request", request.id.to_string()), ("tier", vid.to_string())],
+                );
+            }
+            self.parked.push_back(Parked { request, reply, ids, vid });
+            return;
+        }
+        self.admit_ready(request, reply, ids, vid);
+    }
+
+    /// Second half of admission: claim a slot and begin the chunked
+    /// prefill. Callers have already validated the request (tier + both
+    /// admission bounds) and established that its pages map now.
+    fn admit_ready(
+        &mut self,
+        request: Request,
+        reply: Sender<TokenEvent>,
+        ids: Vec<i32>,
+        vid: VariantId,
+    ) {
+        let max_new = request.opts.max_new_tokens;
+        let sampler = request.opts.sampler.clone();
         let slot = match self.slots.alloc(request.id, ids.len(), max_new, 0) {
             Ok(s) => s,
             Err(e) => {
@@ -573,6 +713,8 @@ impl Scheduler {
                 tokens: inf.tokens,
                 ttft_ms: inf.ttft_ms,
                 latency_ms: latency,
+                modelled_ttft_ms: inf.modelled_ttft_ms,
+                modelled_latency_ms,
                 error: None,
             }));
         }
@@ -1105,6 +1247,142 @@ mod tests {
             metrics.kv_evictions.load(Ordering::Relaxed) >= 1,
             "capped pools must force prefix-block eviction"
         );
+    }
+
+    /// Satellite (PR 10): transient page-pool pressure PARKS a request on
+    /// the back-pressure seam instead of rejecting it. A leader whose
+    /// in-flight pages exactly fill the binding pool forces a different
+    /// follower prompt to wait — no rejection, no slot churn — and the
+    /// follower admits and completes as soon as the leader retires and
+    /// frees pages.
+    #[test]
+    fn paged_admission_parks_under_transient_pressure_and_admits_after_free() {
+        use crate::model::serving::ServeStage;
+        use std::sync::atomic::Ordering;
+        let Some(mut model) = build() else { return };
+        if model.entry.kv_pages.is_none() {
+            return;
+        }
+        let Some(k) = model.prefill_chunk() else { return };
+        model.enable_paging().unwrap();
+        let vid = model.default_variant().id.clone();
+        let stages = &model.variant(&vid).unwrap().stages;
+        // Per-block page need per pool: one half-width page per Tp stage,
+        // one full-width page per Lp stage. Cap both pools so the larger
+        // need is EXACTLY exhausted by the leader's 4 blocks (+ scratch).
+        let half_stages = stages.iter().filter(|s| matches!(s, ServeStage::Tp(_))).count();
+        let max_stages = half_stages.max(stages.len() - half_stages);
+        // leader: BOS + 100 bytes = 101 tokens; + 3 new = 104-token span
+        // -> 4 blocks of k=32
+        let blocks = (101usize + 3).div_ceil(k);
+        model.set_page_capacity(blocks * max_stages + 1);
+        let metrics = Arc::new(ServerMetrics::default());
+        let mut sched = Scheduler::new(model, metrics.clone());
+
+        let (job_a, rx_a) = job(1, &"y".repeat(100), 3);
+        sched.admit(job_a);
+        for _ in 0..10 {
+            if sched.pending.is_empty() {
+                break;
+            }
+            sched.tick();
+        }
+        assert!(sched.pending.is_empty(), "leader prefill must finish");
+
+        // different prompt, same footprint: the binding pool is full and
+        // the leader's pages are slot-held (not evictable) -> must park
+        let (job_b, rx_b) = job(2, &"z".repeat(100), 3);
+        sched.admit(job_b);
+        assert_eq!(sched.parked.len(), 1, "follower must park, not reject");
+        assert!(final_response(&rx_b).is_none(), "no reply while parked");
+        assert_eq!(metrics.admission_waits.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.requests_rejected.load(Ordering::Relaxed), 0);
+        assert_eq!(metrics.slot_allocs.load(Ordering::Relaxed), 1, "parked claims no slot");
+
+        // drive the leader to retirement; the follower then admits off the
+        // parked queue (evicting the leader's index-held prefix blocks as
+        // needed) and completes
+        for _ in 0..100 {
+            if sched.is_idle() {
+                break;
+            }
+            sched.tick();
+        }
+        assert!(sched.is_idle(), "parked request must eventually admit");
+        let ra = final_response(&rx_a).expect("leader must complete");
+        assert!(ra.error.is_none(), "{:?}", ra.error);
+        let rb = final_response(&rx_b).expect("parked follower must complete");
+        assert!(rb.error.is_none(), "{:?}", rb.error);
+        assert_eq!(rb.generated_tokens(), 3);
+        assert_eq!(metrics.slot_allocs.load(Ordering::Relaxed), 2);
+        assert_eq!(metrics.requests_rejected.load(Ordering::Relaxed), 0);
+    }
+
+    /// Cluster drain support: `eject_all` strips parked + pending +
+    /// in-flight requests (freeing every slot), and a fresh scheduler
+    /// re-running the ejected jobs from scratch reproduces the identical
+    /// token stream — the property that makes replica fail-over dedup-able
+    /// by index contiguity.
+    #[test]
+    fn eject_all_returns_resubmittable_jobs_with_identical_replay() {
+        let Some(model) = build() else { return };
+        let metrics = Arc::new(ServerMetrics::default());
+        let mut sched = Scheduler::new(model, metrics.clone());
+        let free0 = sched.slots.free_count();
+
+        // one request decoding (short prompt), one still prefilling (long)
+        let (job_a, rx_a) = job(1, "the red fox", 4);
+        let (job_b, rx_b) = job(2, &"y".repeat(100), 3);
+        sched.admit(job_a);
+        sched.tick(); // A becomes live
+        sched.admit(job_b);
+        sched.tick(); // A streams a token; B consumes one chunk
+        assert_eq!(sched.inflight.len(), 1);
+        assert_eq!(sched.pending.len(), 1);
+        let a_streamed: Vec<i32> = std::iter::from_fn(|| match rx_a.try_recv() {
+            Ok(TokenEvent::Token { token, .. }) => Some(token),
+            _ => None,
+        })
+        .collect();
+        assert!(!a_streamed.is_empty(), "A must have streamed before ejection");
+
+        let jobs = sched.eject_all();
+        assert_eq!(jobs.len(), 2);
+        assert_eq!(jobs[0].request.id, 1, "admission (request-id) order");
+        assert_eq!(jobs[1].request.id, 2);
+        assert!(sched.is_idle());
+        assert_eq!(sched.slots.free_count(), free0, "ejection must free every slot");
+
+        // replay on a sibling: same request ids -> same sampling streams
+        let Some(model2) = build() else { return };
+        let mut sibling = Scheduler::new(model2, Arc::new(ServerMetrics::default()));
+        for j in jobs {
+            sibling.admit(j);
+        }
+        for _ in 0..100 {
+            if sibling.is_idle() {
+                break;
+            }
+            sibling.tick();
+        }
+        // the original reply channels receive the full re-run; the re-sent
+        // prefix duplicates what was streamed before ejection (the cluster
+        // pump drops those by contiguity — here we see the raw feed)
+        let mut replay = Vec::new();
+        while let Ok(ev) = rx_a.try_recv() {
+            if let TokenEvent::Token { token, .. } = ev {
+                replay.push(token);
+            }
+        }
+        assert!(replay.len() >= a_streamed.len());
+        assert_eq!(
+            &replay[..a_streamed.len()],
+            &a_streamed[..],
+            "re-run must re-emit the identical token prefix"
+        );
+        let rb = final_response(&rx_b).expect("ejected B must complete on the sibling");
+        assert!(rb.error.is_none(), "{:?}", rb.error);
+        assert_eq!(rb.generated_tokens(), 3);
     }
 
     /// Satellite: a request whose page footprint can NEVER fit the logical

@@ -41,6 +41,13 @@ pub struct ResponseHandle {
 }
 
 impl ResponseHandle {
+    /// Crate-internal constructor: the cluster front door builds handles
+    /// over its own pump channels (`cluster::Cluster::submit`) instead of
+    /// handing out the scheduler's raw reply stream.
+    pub(crate) fn new(id: u64, rx: Receiver<TokenEvent>) -> ResponseHandle {
+        ResponseHandle { id, rx }
+    }
+
     /// The request id (matches `Response::id` and streamed chunk ids).
     pub fn id(&self) -> u64 {
         self.id

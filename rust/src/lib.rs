@@ -14,6 +14,9 @@
 //!   executor and the TP/LP serving executor with KV-slot caches.
 //! * [`coordinator`] — request router, continuous batcher and
 //!   prefill/decode scheduler (vLLM-router shaped).
+//! * [`cluster`] — multi-replica serving: a cost-model router over R
+//!   independent meshes, session affinity, replica drain/respawn, and a
+//!   deterministic trace-driven load harness (`truedepth loadtest`).
 //! * [`runtime`] — PJRT client + artifact manifest loading (HLO text AOT'd
 //!   by `python/compile/aot.py`; python never runs at request time).
 //! * [`eval`] — perplexity + the synthetic 5-shot ICL suite.
@@ -31,6 +34,7 @@
 pub mod api;
 pub mod bench;
 pub mod cli;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod error;

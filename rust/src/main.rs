@@ -13,7 +13,8 @@
 //!             [--max-cached-execs N] --requests N
 //!             [--paged [--page-pool N]]
 //!             [--trace-out F] [--metrics-out F]
-//!             [--listen ADDR [--http-workers N] [--http-backlog N]]
+//!             [--listen ADDR [--replicas R] [--http-workers N]
+//!              [--http-backlog N]]
 //!                                synthetic load demo; --tiers serves every
 //!                                manifest plan variant concurrently
 //!                                (requests cycle dense/lp/lp_aggr).
@@ -35,8 +36,31 @@
 //!                                --listen ADDR serves the HTTP API instead
 //!                                of synthetic load: POST /v1/completions
 //!                                (SSE streaming via "stream": true),
-//!                                GET /healthz, GET /metrics,
-//!                                POST /admin/shutdown (see docs/api.md)
+//!                                GET /v1/models, GET /healthz, GET /metrics,
+//!                                POST /admin/shutdown (see docs/api.md);
+//!                                --replicas R fronts R independent replicas
+//!                                behind the cluster cost-model router
+//!                                (session affinity via the request's
+//!                                "session" key; see README "Cluster
+//!                                serving")
+//!   loadtest  --model M --replicas R --seed S --requests N
+//!             [--scenario steady|bursty|multiturn|flood|mixed]
+//!             [--queue-depth D] [--paged [--page-pool N]]
+//!             [--fail-replica I --fail-at-step T [--respawn-at-step T2]]
+//!             [--metrics-out F] [--trace-out F] [--arrivals-out F]
+//!                                deterministic trace-driven cluster load
+//!                                harness: expands (scenario, seed) into a
+//!                                replayable arrival schedule, replays it
+//!                                against an R-replica lockstep cluster
+//!                                (seeded weights — no checkpoint needed),
+//!                                optionally fencing/respawning a replica
+//!                                mid-run, and exits non-zero on any lost,
+//!                                failed or shed request. Exports are
+//!                                byte-identical across runs for one seed:
+//!                                --metrics-out (cluster snapshot),
+//!                                --trace-out (per-replica Chrome traces,
+//!                                <stem>.rN.json), --arrivals-out (the
+//!                                schedule as truedepth.loadtrace/v1 JSON)
 //!   apidoc                       print docs/api.md, generated from the
 //!                                api:: schema (regenerate after API edits)
 //!
@@ -64,6 +88,7 @@ fn main() {
         "generate" => cmd_generate(&args),
         "ppl" => cmd_ppl(&args),
         "serve" => cmd_serve(&args),
+        "loadtest" => cmd_loadtest(&args),
         "apidoc" => {
             print!("{}", truedepth::api::docs::render_api_md());
             Ok(())
@@ -80,7 +105,7 @@ fn main() {
 }
 
 const HELP: &str = "truedepth — Layer Parallelism for LLM inference
-usage: truedepth <info|verify|generate|ppl|serve|apidoc> [options]   (see src/main.rs docs)";
+usage: truedepth <info|verify|generate|ppl|serve|loadtest|apidoc> [options]   (see src/main.rs docs)";
 
 fn cmd_verify(args: &Args) -> truedepth::Result<()> {
     let dir = match args.get("artifacts") {
@@ -168,7 +193,39 @@ fn cmd_ppl(args: &Args) -> truedepth::Result<()> {
     Ok(())
 }
 
+/// The interconnect cost model the flags select: `--config` wins, then
+/// `--no-simnet` zeroes the α–β term, else the calibrated defaults.
+fn cost_net(
+    args: &Args,
+    run_cfg: &truedepth::config::RunConfig,
+) -> truedepth::config::InterconnectConfig {
+    let mut net = if args.get("config").is_some() {
+        run_cfg.interconnect.clone()
+    } else if args.flag("no-simnet") {
+        no_net()
+    } else {
+        default_net()
+    };
+    if args.flag("no-simnet") {
+        net.enabled = false;
+    }
+    net
+}
+
+/// `--trace-out F` with R replicas writes one Chrome trace per replica:
+/// `<stem>.rN.json` next to F.
+fn replica_trace_path(out: &std::path::Path, i: usize) -> std::path::PathBuf {
+    let base = out.file_stem().and_then(|s| s.to_str()).unwrap_or("trace");
+    out.with_file_name(format!("{base}.r{i}.json"))
+}
+
 fn cmd_serve(args: &Args) -> truedepth::Result<()> {
+    let replicas = args.get_usize("replicas", 1);
+    if let Some(listen) = args.get("listen") {
+        if replicas > 1 {
+            return cmd_serve_cluster(args, listen, replicas);
+        }
+    }
     let model = args.get_or("model", "td-small");
     let n_requests = args.get_usize("requests", 12);
     let ctx = ScoringCtx::load(model)?;
@@ -181,17 +238,8 @@ fn cmd_serve(args: &Args) -> truedepth::Result<()> {
         Some(p) => truedepth::config::RunConfig::from_file(std::path::Path::new(p))?,
         None => truedepth::config::RunConfig::default(),
     };
-    let mut net = if args.get("config").is_some() {
-        run_cfg.interconnect.clone()
-    } else if args.flag("no-simnet") {
-        no_net()
-    } else {
-        default_net()
-    };
-    if args.flag("no-simnet") {
-        net.enabled = false;
-    }
-    let cost = truedepth::parallel::CostModel::new(net, run_cfg.device.clone());
+    let cost =
+        truedepth::parallel::CostModel::new(cost_net(args, &run_cfg), run_cfg.device.clone());
     // --tiers: one resident weight set, every manifest plan variant served
     // concurrently (the plan-variant registry); default: one --depth plan.
     let multi = args.flag("tiers");
@@ -223,6 +271,7 @@ fn cmd_serve(args: &Args) -> truedepth::Result<()> {
     serving.set_exec_cache_cap(cap);
     let tiers: Vec<String> =
         serving.variant_ids().iter().map(|v| v.as_str().to_string()).collect();
+    let default_tier = serving.default_tier().to_string();
     let depths: Vec<String> = serving
         .variant_ids()
         .iter()
@@ -243,7 +292,17 @@ fn cmd_serve(args: &Args) -> truedepth::Result<()> {
             workers: args.get_usize("http-workers", 4),
             backlog: args.get_usize("http-backlog", 16),
         };
-        let edge = truedepth::serve::serve(server.clone(), listen, &cfg)?;
+        let models = truedepth::api::ModelsResponse {
+            models: vec![truedepth::api::ModelInfo {
+                model: model.to_string(),
+                tiers: tiers.clone(),
+                default_tier: default_tier.clone(),
+            }],
+            replicas: 1,
+        };
+        let backend =
+            std::sync::Arc::new(truedepth::serve::SingleBackend::new(server.clone(), models));
+        let edge = truedepth::serve::serve(backend, listen, &cfg)?;
         println!(
             "serving {model} [{}] on http://{} — POST /v1/completions (docs/api.md)",
             depths.join(" "),
@@ -300,6 +359,215 @@ fn cmd_serve(args: &Args) -> truedepth::Result<()> {
     if let Some(path) = &metrics_out {
         MetricsSnapshot::new("serve").with_server(&metrics).write(path)?;
         println!("metrics snapshot: {}", path.display());
+    }
+    Ok(())
+}
+
+/// `serve --listen --replicas R`: R independent replicas (each its own
+/// mesh, scheduler and KV cache) behind the cluster cost-model router,
+/// fronted by the same HTTP edge. A driver thread ticks the lockstep
+/// cluster; the edge submits into it through `serve::ClusterBackend`.
+/// Requests carrying a `"session"` key pin to one replica so multi-turn
+/// paged-KV prefix reuse stays local (README "Cluster serving").
+fn cmd_serve_cluster(args: &Args, listen: &str, replicas: usize) -> truedepth::Result<()> {
+    let model = args.get_or("model", "td-small").to_string();
+    let run_cfg = match args.get("config") {
+        Some(p) => truedepth::config::RunConfig::from_file(std::path::Path::new(p))?,
+        None => truedepth::config::RunConfig::default(),
+    };
+    let net = cost_net(args, &run_cfg);
+    let device = run_cfg.device.clone();
+    let multi = args.flag("tiers");
+    // probe once so --depth resolves against the layer count (and bad
+    // flags fail before R weight loads); the factory then reloads the
+    // checkpoint per replica — and again on every respawn
+    let probe = ScoringCtx::load(&model)?;
+    let n = probe.entry().config.n_layers;
+    let plan = if multi { None } else { Some(plan_for(args, n)?) };
+    drop(probe);
+    let paged = args.flag("paged");
+    let pool = args.get_usize("page-pool", 0);
+    let cap = match args.get_usize("max-cached-execs", 0) {
+        0 => run_cfg.runtime.max_cached_execs,
+        c => Some(c),
+    };
+    let model_name = model.clone();
+    let factory: truedepth::cluster::ModelFactory = Box::new(move |_i| {
+        let ctx = ScoringCtx::load(&model_name)?;
+        let weights = ctx.weights()?;
+        let cost = truedepth::parallel::CostModel::new(net.clone(), device.clone());
+        let mut serving = match &plan {
+            None => ServingModel::from_manifest_with_cost(
+                &ctx.manifest,
+                &model_name,
+                &weights,
+                cost,
+            )?,
+            Some(p) => {
+                ServingModel::new_with_cost(&ctx.manifest, &model_name, &weights, p, cost)?
+            }
+        };
+        if paged {
+            serving.enable_paging()?;
+            if pool > 0 {
+                serving.set_page_capacity(pool);
+            }
+        }
+        serving.set_exec_cache_cap(cap);
+        Ok(serving)
+    });
+    let trace_out = args.get("trace-out").map(std::path::PathBuf::from);
+    let metrics_out = args.get("metrics-out").map(std::path::PathBuf::from);
+    let tracers = trace_out
+        .as_ref()
+        .map(|_| (0..replicas).map(|_| std::sync::Arc::new(Tracer::new())).collect::<Vec<_>>());
+    let queue_depth = ServerConfig::default().queue_depth;
+    let cluster = truedepth::cluster::Cluster::with_tracers(
+        &model,
+        factory,
+        replicas,
+        queue_depth,
+        tracers.clone(),
+    )?;
+    let tiers = cluster.models_response().models[0].tiers.join(" ");
+    let backend = std::sync::Arc::new(truedepth::serve::ClusterBackend::start(cluster));
+    let cfg = truedepth::serve::HttpConfig {
+        workers: args.get_usize("http-workers", 4),
+        backlog: args.get_usize("http-backlog", 16),
+    };
+    let edge = truedepth::serve::serve(backend.clone(), listen, &cfg)?;
+    println!(
+        "serving {model} x{replicas} replicas [{tiers}] on http://{} — POST /v1/completions \
+         (docs/api.md)",
+        edge.local_addr()
+    );
+    edge.wait();
+    // drain in-flight work and stop the driver thread, then export on the
+    // quiesced cluster
+    backend.shutdown();
+    let cluster = backend.cluster();
+    let c = cluster.lock().unwrap();
+    c.finish();
+    println!("{}", c.metrics.report());
+    if let (Some(trs), Some(path)) = (&tracers, &trace_out) {
+        for (i, tr) in trs.iter().enumerate() {
+            let p = replica_trace_path(path, i);
+            tr.write_chrome(&p)?;
+            println!("trace: {} ({} events)", p.display(), tr.len());
+        }
+    }
+    if let Some(path) = &metrics_out {
+        c.snapshot("serve").write(path)?;
+        println!("metrics snapshot: {}", path.display());
+    }
+    Ok(())
+}
+
+/// `truedepth loadtest`: the deterministic trace-driven cluster load
+/// harness. Weights are seeded (`Weights::random`, no checkpoint) and
+/// every exported figure lives on the modelled clock, so for one
+/// (scenario, seed) the arrival schedule, per-request tokens and all
+/// exports are byte-identical across runs and hosts. Exits non-zero on
+/// any lost, failed or shed request — the CI cluster-smoke job asserts
+/// zero loss across an injected replica failure this way.
+fn cmd_loadtest(args: &Args) -> truedepth::Result<()> {
+    use truedepth::cluster::{loadgen, Cluster, FaultPlan, LoadTrace, Scenario};
+    let model = args.get_or("model", "td-small").to_string();
+    let replicas = args.get_usize("replicas", 2);
+    let seed = args.get_usize("seed", 42) as u64;
+    let n_requests = args.get_usize("requests", 48);
+    let scenario_name = args.get_or("scenario", "mixed");
+    let scenario = Scenario::parse(scenario_name).ok_or_else(|| {
+        truedepth::Error::msg(format!(
+            "unknown scenario `{scenario_name}` (steady|bursty|multiturn|flood|mixed)"
+        ))
+    })?;
+    // deep enough that back-pressure never sheds by default, so zero-loss
+    // is assertable; shrink it deliberately to study shedding
+    let queue_depth = args.get_usize("queue-depth", n_requests.max(8));
+    let paged = args.flag("paged");
+    let pool = args.get_usize("page-pool", 0);
+    let run_cfg = match args.get("config") {
+        Some(p) => truedepth::config::RunConfig::from_file(std::path::Path::new(p))?,
+        None => truedepth::config::RunConfig::default(),
+    };
+    let net = cost_net(args, &run_cfg);
+    let device = run_cfg.device.clone();
+    let manifest = truedepth::runtime::Manifest::load_default()?;
+    let cfg = manifest.model(&model)?.config.clone();
+    let model_name = model.clone();
+    let factory: truedepth::cluster::ModelFactory = Box::new(move |_i| {
+        // same seed per replica: replicas are bit-identical, so a migrated
+        // request replays to the same tokens it would have produced
+        let weights = truedepth::model::Weights::random(&cfg, 11);
+        let cost = truedepth::parallel::CostModel::new(net.clone(), device.clone());
+        let mut serving =
+            ServingModel::from_manifest_with_cost(&manifest, &model_name, &weights, cost)?;
+        if paged {
+            serving.enable_paging()?;
+            if pool > 0 {
+                serving.set_page_capacity(pool);
+            }
+        }
+        Ok(serving)
+    });
+    let trace_out = args.get("trace-out").map(std::path::PathBuf::from);
+    let metrics_out = args.get("metrics-out").map(std::path::PathBuf::from);
+    let tracers = trace_out
+        .as_ref()
+        .map(|_| (0..replicas).map(|_| std::sync::Arc::new(Tracer::new())).collect::<Vec<_>>());
+    let mut cluster =
+        Cluster::with_tracers(&model, factory, replicas, queue_depth, tracers.clone())?;
+    let tiers = cluster.models_response().models[0].tiers.clone();
+    let trace = LoadTrace::generate(scenario, seed, n_requests, &tiers);
+    if let Some(path) = args.get("arrivals-out") {
+        std::fs::write(path, trace.to_json())?;
+        println!("arrivals: {path} ({} arrivals)", trace.arrivals.len());
+    }
+    let fault = args.get("fail-replica").map(|_| FaultPlan {
+        replica: args.get_usize("fail-replica", 0),
+        fail_at_step: args.get_usize("fail-at-step", 5) as u64,
+        respawn_at_step: args
+            .get("respawn-at-step")
+            .map(|_| args.get_usize("respawn-at-step", 0) as u64),
+    });
+    if let Some(f) = &fault {
+        match f.respawn_at_step {
+            Some(s) => println!(
+                "fault plan: fail replica {} at step {}, respawn at step {s}",
+                f.replica, f.fail_at_step
+            ),
+            None => println!("fault plan: fail replica {} at step {}", f.replica, f.fail_at_step),
+        }
+    }
+    let report = loadgen::run(&mut cluster, &trace, fault.as_ref())?;
+    println!(
+        "loadtest {scenario_name} seed={seed}: {} arrivals, {} completed, {} failed, {} shed, \
+         {} steps",
+        trace.arrivals.len(),
+        report.completed(),
+        report.failed(),
+        report.rejected(),
+        report.steps
+    );
+    println!("{}", cluster.metrics.report());
+    if let (Some(trs), Some(path)) = (&tracers, &trace_out) {
+        for (i, tr) in trs.iter().enumerate() {
+            let p = replica_trace_path(path, i);
+            tr.write_chrome(&p)?;
+            println!("trace: {} ({} events)", p.display(), tr.len());
+        }
+    }
+    if let Some(path) = &metrics_out {
+        cluster.snapshot("loadtest").write(path)?;
+        println!("metrics snapshot: {}", path.display());
+    }
+    if report.failed() > 0 || report.rejected() > 0 {
+        return Err(truedepth::Error::msg(format!(
+            "loadtest lost work: {} failed, {} shed",
+            report.failed(),
+            report.rejected()
+        )));
     }
     Ok(())
 }

@@ -273,6 +273,11 @@ impl PageAllocator {
     pub fn in_use(&self) -> usize {
         self.refs.iter().skip(1).filter(|&&r| r > 0).count()
     }
+
+    /// Pages allocatable right now, without any eviction.
+    pub fn free_count(&self) -> usize {
+        self.free.len()
+    }
 }
 
 /// One published prefix block: the pages holding block `j` of some prompt
@@ -408,6 +413,48 @@ impl PagedKv {
         let full_stages = ws.len() - half_stages;
         blocks * half_stages <= self.half.capacity().saturating_sub(1)
             && blocks * full_stages <= self.full.capacity().saturating_sub(1)
+    }
+
+    /// Admission back-pressure probe: can a request needing `blocks` KV
+    /// blocks under `vid` be mapped RIGHT NOW, counting free pages plus
+    /// pages reclaimable by LRU eviction (prefix blocks only the index
+    /// holds)? Conservative: it ignores prefix attaches the request might
+    /// score, so `true` guarantees admission succeeds while `false` only
+    /// means "park and retry after a sibling retires". A request that
+    /// passes [`PagedKv::fits`] always becomes admissible once every slot
+    /// has retired (retired pages are either free or index-only).
+    pub fn available_now(&self, vid: &VariantId, blocks: usize) -> bool {
+        let Some(ws) = self.widths.get(vid) else { return false };
+        let half_stages = ws.iter().filter(|w| matches!(w, PageWidth::Half)).count();
+        let full_stages = ws.len() - half_stages;
+        // Reclaimable = pages of index blocks where EVERY page has refs==1
+        // (exactly what evict_lru can free); dedup in case of aliasing.
+        let mut half_reclaim = BTreeSet::new();
+        let mut full_reclaim = BTreeSet::new();
+        for (key, e) in &self.index {
+            let ews = &self.widths[&key.0];
+            let index_only = e.pages.iter().zip(ews.iter()).all(|(&p, w)| match w {
+                PageWidth::Half => self.half.refs(p) == 1,
+                PageWidth::Full => self.full.refs(p) == 1,
+            });
+            if index_only {
+                // pages at/above a shrunken logical capacity never return
+                // to the free list on eviction — don't count them
+                for (&p, w) in e.pages.iter().zip(ews.iter()) {
+                    match w {
+                        PageWidth::Half if p < self.half.capacity() => {
+                            half_reclaim.insert(p);
+                        }
+                        PageWidth::Full if p < self.full.capacity() => {
+                            full_reclaim.insert(p);
+                        }
+                        _ => {}
+                    }
+                }
+            }
+        }
+        blocks * half_stages <= self.half.free_count() + half_reclaim.len()
+            && blocks * full_stages <= self.full.free_count() + full_reclaim.len()
     }
 
     /// The `[blocks_per_slot]` page table of one stage of one slot — the

@@ -1138,6 +1138,24 @@ impl ServingModel {
         Ok(())
     }
 
+    /// Admission back-pressure probe: `true` when a request that already
+    /// passed [`ServingModel::check_admission_v`] must PARK because the
+    /// page pools are transiently full (free + LRU-evictable pages cannot
+    /// cover its span right now). Always `false` when paging is off. See
+    /// [`PagedKv::available_now`] for the exact accounting.
+    pub fn admission_must_wait_v(
+        &self,
+        vid: &VariantId,
+        prompt_len: usize,
+        max_new: usize,
+    ) -> bool {
+        let Some(pg) = &self.paged else { return false };
+        let pg = pg.lock().unwrap();
+        let k = pg.page_tokens();
+        let blocks = (prompt_len + max_new).div_ceil(k).min(pg.blocks_per_slot());
+        !pg.available_now(vid, blocks)
+    }
+
     /// Release every page `slot` maps (no-op when paging is off). The
     /// scheduler calls this wherever it frees a slot; pages held by the
     /// shared-prefix index stay resident for future reuse.

@@ -45,7 +45,14 @@ impl MetricsSnapshot {
     /// histogram, per-tier decode attribution and the *modelled* latency
     /// summaries. Wall-clock TTFT/latency are deliberately excluded —
     /// they would break run-to-run byte identity.
-    pub fn with_server(mut self, m: &ServerMetrics) -> MetricsSnapshot {
+    pub fn with_server(self, m: &ServerMetrics) -> MetricsSnapshot {
+        self.with_server_named("server", m)
+    }
+
+    /// Like [`MetricsSnapshot::with_server`] but under a caller-chosen
+    /// section name — the cluster exports one section per replica
+    /// (`replica0`, `replica1`, …) next to its own `cluster` section.
+    pub fn with_server_named(mut self, section: &str, m: &ServerMetrics) -> MetricsSnapshot {
         let load = |a: &std::sync::atomic::AtomicU64| json::num(a.load(Ordering::Relaxed) as f64);
         let mut sec: Vec<(&str, Value)> = vec![
             ("requests_submitted", load(&m.requests_submitted)),
@@ -53,6 +60,7 @@ impl MetricsSnapshot {
             ("requests_rejected", load(&m.requests_rejected)),
             ("requests_cancelled", load(&m.requests_cancelled)),
             ("slot_allocs", load(&m.slot_allocs)),
+            ("admission_waits", load(&m.admission_waits)),
             ("tokens_generated", load(&m.tokens_generated)),
             ("prefill_tokens", load(&m.prefill_tokens)),
             ("decode_steps", load(&m.decode_steps)),
@@ -108,7 +116,15 @@ impl MetricsSnapshot {
         if !tiers.is_empty() {
             sec.push(("tiers", Value::Obj(tiers)));
         }
-        self.sections.insert("server".to_string(), json::obj(sec));
+        self.sections.insert(section.to_string(), json::obj(sec));
+        self
+    }
+
+    /// Add an arbitrary pre-built section (the cluster layer composes its
+    /// own `cluster` section this way). Numeric leaves flatten into the
+    /// perf-gate key space like any built-in section.
+    pub fn with_section(mut self, name: &str, section: Value) -> MetricsSnapshot {
+        self.sections.insert(name.to_string(), section);
         self
     }
 

@@ -1,13 +1,15 @@
-//! Network serving edge: a std-only HTTP/1.1 front-end over
-//! [`coordinator::Server`](crate::coordinator::Server).
+//! Network serving edge: a std-only HTTP/1.1 front-end over a serving
+//! [`Backend`] — a single [`coordinator::Server`](crate::coordinator::Server)
+//! or a multi-replica [`cluster::Cluster`](crate::cluster::Cluster).
 //!
-//! `truedepth serve --listen <addr>` lands here. The shape is a classic
-//! threadpool accept loop: one acceptor pushes connections into a bounded
-//! queue, a fixed set of workers drains it. Both overload paths shed load
-//! *before* any KV slot is claimed — a full connection queue answers a
-//! canned 429 straight from the acceptor, and the scheduler's admission
-//! checks reject over-budget requests with zero slot churn (the loopback
-//! test pins `slot_allocs` to the completion count).
+//! `truedepth serve --listen <addr> [--replicas R]` lands here. The shape
+//! is a classic threadpool accept loop: one acceptor pushes connections
+//! into a bounded queue, a fixed set of workers drains it. Both overload
+//! paths shed load *before* any KV slot is claimed — a full connection
+//! queue answers a canned 429 straight from the acceptor, and the
+//! scheduler's admission checks reject over-budget requests with zero
+//! slot churn (the loopback test pins `slot_allocs` to the completion
+//! count).
 //!
 //! Routes (see `docs/api.md`, generated from [`crate::api`]):
 //!
@@ -16,6 +18,7 @@
 //!   [`TokenEvent`] receiver. Between tokens the worker probes the
 //!   client socket, so a disconnected consumer cancels the request at
 //!   the next token boundary instead of generating into the void.
+//! * `GET /v1/models` — the served model, its tiers, the replica count.
 //! * `GET /healthz` — liveness.
 //! * `GET /metrics` — the live [`obs::MetricsSnapshot`](crate::obs::MetricsSnapshot).
 //! * `POST /admin/shutdown` — stop accepting and drain (used by the CI
@@ -31,10 +34,127 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use crate::api::{ApiError, CompletionChunk, CompletionRequest, CompletionResponse, ErrorCode};
+use crate::api::{
+    ApiError, CompletionChunk, CompletionRequest, CompletionResponse, ErrorCode, ModelsResponse,
+};
+use crate::cluster::Cluster;
 use crate::coordinator::{ResponseHandle, Server, TokenEvent};
 use crate::error::Result;
 use crate::obs::MetricsSnapshot;
+
+/// What the HTTP edge needs from whatever serves the requests. Both the
+/// single-server deployment and the lockstep cluster implement it, so
+/// `serve --listen` and `serve --listen --replicas R` share the whole
+/// edge (parsing, SSE relay, shedding, routes).
+pub trait Backend: Send + Sync + 'static {
+    /// Submit a typed request; back-pressure must surface as
+    /// [`crate::error::Error::Overloaded`] (429) without claiming a slot.
+    fn request(&self, req: CompletionRequest) -> Result<ResponseHandle>;
+    /// The live `GET /metrics` document.
+    fn metrics_snapshot(&self) -> MetricsSnapshot;
+    /// The `GET /v1/models` payload.
+    fn models(&self) -> ModelsResponse;
+}
+
+/// [`Backend`] over one threaded [`Server`] (the classic deployment).
+pub struct SingleBackend {
+    server: Arc<Server>,
+    models: ModelsResponse,
+}
+
+impl SingleBackend {
+    /// `models` describes the one model the server fronts (the caller
+    /// knows the model name + registered tiers; `replicas` should be 1).
+    pub fn new(server: Arc<Server>, models: ModelsResponse) -> SingleBackend {
+        SingleBackend { server, models }
+    }
+}
+
+impl Backend for SingleBackend {
+    fn request(&self, req: CompletionRequest) -> Result<ResponseHandle> {
+        self.server.request(req)
+    }
+
+    fn metrics_snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot::new("serve").with_server(&self.server.metrics)
+    }
+
+    fn models(&self) -> ModelsResponse {
+        self.models.clone()
+    }
+}
+
+/// [`Backend`] over a lockstep [`Cluster`]: one driver thread steps the
+/// cluster whenever work exists, HTTP workers submit through the mutex.
+/// (The lockstep core stays single-threaded and deterministic; only the
+/// arrival order is wall-clock here, exactly like a real front door.)
+pub struct ClusterBackend {
+    cluster: Arc<Mutex<Cluster>>,
+    stop: Arc<AtomicBool>,
+    driver: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl ClusterBackend {
+    pub fn start(cluster: Cluster) -> ClusterBackend {
+        let cluster = Arc::new(Mutex::new(cluster));
+        let stop = Arc::new(AtomicBool::new(false));
+        let (c2, s2) = (cluster.clone(), stop.clone());
+        let driver = std::thread::Builder::new()
+            .name("cluster-driver".into())
+            .spawn(move || {
+                while !s2.load(Ordering::SeqCst) {
+                    let busy = c2.lock().unwrap().step();
+                    if !busy {
+                        // idle: don't spin the mutex against submitters
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                }
+            })
+            .expect("spawn cluster driver");
+        ClusterBackend { cluster, stop, driver: Mutex::new(Some(driver)) }
+    }
+
+    /// Direct access for export paths (snapshot/trace after shutdown).
+    pub fn cluster(&self) -> Arc<Mutex<Cluster>> {
+        self.cluster.clone()
+    }
+
+    /// Let in-flight work drain, then stop and join the driver thread.
+    /// Safe behind an `Arc` (also runs on drop).
+    pub fn shutdown(&self) {
+        let handle = self.driver.lock().unwrap().take();
+        if let Some(j) = handle {
+            loop {
+                if self.cluster.lock().unwrap().is_idle() {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            self.stop.store(true, Ordering::SeqCst);
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for ClusterBackend {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+impl Backend for ClusterBackend {
+    fn request(&self, req: CompletionRequest) -> Result<ResponseHandle> {
+        self.cluster.lock().unwrap().submit(req)
+    }
+
+    fn metrics_snapshot(&self) -> MetricsSnapshot {
+        self.cluster.lock().unwrap().snapshot("serve")
+    }
+
+    fn models(&self) -> ModelsResponse {
+        self.cluster.lock().unwrap().models_response()
+    }
+}
 
 /// Edge sizing knobs.
 #[derive(Clone, Debug)]
@@ -55,7 +175,7 @@ impl Default for HttpConfig {
 
 /// Everything a worker needs besides the connection itself.
 struct EdgeState {
-    server: Arc<Server>,
+    backend: Arc<dyn Backend>,
     shutdown: AtomicBool,
     addr: SocketAddr,
 }
@@ -91,11 +211,11 @@ impl HttpHandle {
     }
 }
 
-/// Bind `addr` and serve `server` over HTTP until shut down.
-pub fn serve(server: Arc<Server>, addr: &str, cfg: &HttpConfig) -> Result<HttpHandle> {
+/// Bind `addr` and serve `backend` over HTTP until shut down.
+pub fn serve(backend: Arc<dyn Backend>, addr: &str, cfg: &HttpConfig) -> Result<HttpHandle> {
     let listener = TcpListener::bind(addr)?;
     let addr = listener.local_addr()?;
-    let state = Arc::new(EdgeState { server, shutdown: AtomicBool::new(false), addr });
+    let state = Arc::new(EdgeState { backend, shutdown: AtomicBool::new(false), addr });
     let (tx, rx) = sync_channel::<TcpStream>(cfg.backlog.max(1));
     let rx = Arc::new(Mutex::new(rx));
     let mut threads = Vec::new();
@@ -163,7 +283,7 @@ fn handle_conn(state: &EdgeState, mut stream: TcpStream) {
             let _ = http::write_response(&mut stream, 200, "text/plain", "ok");
         }
         ("GET", "/metrics") => {
-            let snap = MetricsSnapshot::new("serve").with_server(&state.server.metrics);
+            let snap = state.backend.metrics_snapshot();
             let _ = http::write_response(
                 &mut stream,
                 200,
@@ -171,8 +291,16 @@ fn handle_conn(state: &EdgeState, mut stream: TcpStream) {
                 &snap.to_string_pretty(),
             );
         }
+        ("GET", "/v1/models") => {
+            let _ = http::write_response(
+                &mut stream,
+                200,
+                "application/json",
+                &state.backend.models().to_json(),
+            );
+        }
         ("POST", "/v1/completions") => {
-            handle_completion(&state.server, &head, &mut reader, &mut stream);
+            handle_completion(state.backend.as_ref(), &head, &mut reader, &mut stream);
         }
         ("POST", "/admin/shutdown") => {
             state.shutdown.store(true, Ordering::SeqCst);
@@ -191,7 +319,7 @@ fn handle_conn(state: &EdgeState, mut stream: TcpStream) {
 /// [`CompletionRequest`] (one event pass, no DOM), hand it to the
 /// in-process path, and relay the reply stream.
 fn handle_completion(
-    server: &Server,
+    backend: &dyn Backend,
     head: &http::RequestHead,
     reader: &mut impl std::io::BufRead,
     stream: &mut TcpStream,
@@ -238,7 +366,7 @@ fn handle_completion(
     let streaming = req.stream;
     // back-pressure surfaces here as Error::Overloaded -> 429, before any
     // slot work; admission rejections arrive as the first TokenEvent
-    let handle = match server.request(req) {
+    let handle = match backend.request(req) {
         Ok(h) => h,
         Err(e) => {
             let _ = http::write_error(stream, &ApiError::from(&e));

@@ -1,0 +1,174 @@
+//! End-to-end acceptance for the multi-replica cluster subsystem: the
+//! deterministic load harness drives a real lockstep cluster (real
+//! schedulers, real simulated meshes, real paged KV) and the tests pin
+//! the ISSUE's cluster guarantees:
+//!
+//! * same (scenario, seed) → byte-identical metrics snapshot AND
+//!   byte-identical per-replica Chrome traces across runs; distinct
+//!   seeds diverge;
+//! * a replica killed mid-run loses ZERO requests — displaced work
+//!   migrates to the sibling and every arrival still gets a terminal
+//!   response, with failover/respawn/migration counters reconciling;
+//! * routed results are bit-identical per request to a single-replica
+//!   oracle run of the same trace (routing changes *where*, never
+//!   *what*);
+//! * session-affine multi-turn traffic reuses shared-prefix KV locally
+//!   (`kv.prefix_hits > 0` under `--paged`-style serving).
+//!
+//! No-ops gracefully when `make artifacts` hasn't run (same convention
+//! as `tests/integration.rs`).
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use truedepth::cluster::{loadgen, Cluster, FaultPlan, LoadTrace, ModelFactory, Scenario};
+use truedepth::harness::no_net;
+use truedepth::model::{ServingModel, Weights};
+use truedepth::obs::Tracer;
+use truedepth::runtime::Manifest;
+
+/// Artifact-gated replica factory over seeded weights: every replica is
+/// bit-identical, which is what makes migration replay and the oracle
+/// comparison exact. `paged` opts into the paged KV + prefix index.
+fn factory(paged: bool) -> Option<ModelFactory> {
+    let manifest = Manifest::load_default().ok()?;
+    let cfg = manifest.model("td-small").ok()?.config.clone();
+    // probe once so construction failures (or missing kv_pages when
+    // paging is requested) skip the test instead of panicking
+    {
+        let weights = Weights::random(&cfg, 11);
+        let mut m =
+            ServingModel::from_manifest(&manifest, "td-small", &weights, no_net()).ok()?;
+        if paged {
+            m.enable_paging().ok()?;
+        }
+    }
+    Some(Box::new(move |_i| {
+        let weights = Weights::random(&cfg, 11);
+        let mut m = ServingModel::from_manifest(&manifest, "td-small", &weights, no_net())?;
+        if paged {
+            m.enable_paging()?;
+        }
+        Ok(m)
+    }))
+}
+
+/// One full loadgen replay on a fresh 2-replica cluster; returns the
+/// metrics snapshot and per-replica Chrome traces as strings.
+fn run_once(scenario: Scenario, seed: u64, n: usize) -> Option<(String, Vec<String>)> {
+    let factory = factory(false)?;
+    let tracers: Vec<_> = (0..2).map(|_| Arc::new(Tracer::new())).collect();
+    let mut cluster =
+        Cluster::with_tracers("td-small", factory, 2, 64, Some(tracers.clone())).unwrap();
+    let tiers = cluster.models_response().models[0].tiers.clone();
+    let trace = LoadTrace::generate(scenario, seed, n, &tiers);
+    let report = loadgen::run(&mut cluster, &trace, None).unwrap();
+    assert_eq!(report.failed() + report.rejected(), 0, "clean run expected");
+    let snap = cluster.snapshot("loadtest").to_string_pretty();
+    let traces =
+        tracers.iter().map(|t| t.to_chrome_json().to_string_pretty()).collect();
+    Some((snap, traces))
+}
+
+/// Satellite + tentpole acceptance: the whole observable output of a
+/// cluster replay — the metrics snapshot (cluster section, per-replica
+/// sections, modelled percentiles) and every replica's trace — is a pure
+/// function of (scenario, seed).
+#[test]
+fn same_seed_replays_are_byte_identical_and_seeds_diverge() {
+    let Some((snap_a, traces_a)) = run_once(Scenario::Mixed, 42, 10) else { return };
+    let Some((snap_b, traces_b)) = run_once(Scenario::Mixed, 42, 10) else { return };
+    assert_eq!(snap_a, snap_b, "same seed must export a byte-identical snapshot");
+    assert_eq!(traces_a.len(), 2);
+    for (i, (a, b)) in traces_a.iter().zip(&traces_b).enumerate() {
+        assert_eq!(a, b, "replica {i} trace must be byte-identical across runs");
+        assert!(a.len() > 2, "replica {i} trace must not be empty");
+    }
+    let Some((snap_c, _)) = run_once(Scenario::Mixed, 43, 10) else { return };
+    assert_ne!(snap_a, snap_c, "distinct seeds must produce distinct snapshots");
+}
+
+/// Tentpole acceptance: kill a replica while it holds queued + in-flight
+/// work, respawn it later — zero requests lost, the displaced work
+/// migrates, and the counters reconcile with the report.
+#[test]
+fn replica_kill_mid_run_loses_zero_requests() {
+    let Some(factory) = factory(false) else { return };
+    let mut cluster = Cluster::new("td-small", factory, 2, 64).unwrap();
+    let tiers = cluster.models_response().models[0].tiers.clone();
+    // flood: every arrival lands before the fault, so replica 0 is
+    // guaranteed to hold work (the router sends it request 0) when fenced
+    let trace = LoadTrace::generate(Scenario::Flood, 7, 10, &tiers);
+    let fault = FaultPlan { replica: 0, fail_at_step: 2, respawn_at_step: Some(40) };
+    let report = loadgen::run(&mut cluster, &trace, Some(&fault)).unwrap();
+    assert_eq!(report.rejected(), 0, "nothing may be shed at queue depth 64");
+    assert_eq!(report.failed(), 0, "a fenced replica with a healthy sibling loses nothing");
+    assert_eq!(report.completed(), trace.arrivals.len());
+    let m = &cluster.metrics;
+    assert_eq!(m.failovers.load(Ordering::Relaxed), 1);
+    assert_eq!(m.respawns.load(Ordering::Relaxed), 1);
+    assert!(
+        m.migrations.load(Ordering::Relaxed) >= 1,
+        "displaced work must migrate to the sibling"
+    );
+    // reconciliation: every submitted request has exactly one terminal
+    // response, across both the report and the cluster counters
+    assert_eq!(m.submitted.load(Ordering::Relaxed) as usize, trace.arrivals.len());
+    assert_eq!(m.completed.load(Ordering::Relaxed) as usize, trace.arrivals.len());
+    assert_eq!(m.failed.load(Ordering::Relaxed), 0);
+    assert!(cluster.is_healthy(0), "replica 0 must be back after respawn");
+}
+
+/// Tentpole acceptance: routing is placement-only. Every request decodes
+/// to the same tokens/text whether it runs on a 2-replica cluster or a
+/// single-replica oracle, because replicas are bit-identical and greedy
+/// decode is deterministic per request id.
+#[test]
+fn routed_results_are_bit_identical_to_a_single_replica_oracle() {
+    let Some(f_oracle) = factory(false) else { return };
+    let Some(f_cluster) = factory(false) else { return };
+    let mut oracle = Cluster::new("td-small", f_oracle, 1, 64).unwrap();
+    let mut cluster = Cluster::new("td-small", f_cluster, 2, 64).unwrap();
+    let tiers = cluster.models_response().models[0].tiers.clone();
+    let trace = LoadTrace::generate(Scenario::Steady, 5, 8, &tiers);
+    let r_oracle = loadgen::run(&mut oracle, &trace, None).unwrap();
+    let r_cluster = loadgen::run(&mut cluster, &trace, None).unwrap();
+    // the cluster actually exercised both replicas — otherwise this test
+    // degenerates into oracle-vs-oracle
+    let routed = cluster.metrics.routed_per_replica();
+    assert!(routed.iter().all(|&c| c > 0), "both replicas must serve: {routed:?}");
+    for (i, (a, b)) in r_oracle.responses.iter().zip(&r_cluster.responses).enumerate() {
+        let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
+        assert!(a.error.is_none(), "oracle arrival {i}: {:?}", a.error);
+        assert!(b.error.is_none(), "cluster arrival {i}: {:?}", b.error);
+        assert_eq!(a.tokens, b.tokens, "arrival {i}: tokens diverge from the oracle");
+        assert_eq!(a.text, b.text, "arrival {i}: text diverges from the oracle");
+        assert_eq!(a.tier, b.tier, "arrival {i}: tier diverges from the oracle");
+    }
+}
+
+/// Session affinity keeps multi-turn shared-prefix reuse local: under
+/// paged serving, later turns of a session land on the replica that
+/// already holds the session's prefix blocks, so the paged-KV prefix
+/// index scores hits.
+#[test]
+fn session_affine_multiturn_traffic_reuses_prefix_kv() {
+    let Some(factory) = factory(true) else { return };
+    let mut cluster = Cluster::new("td-small", factory, 2, 64).unwrap();
+    let tiers = cluster.models_response().models[0].tiers.clone();
+    let trace = LoadTrace::generate(Scenario::MultiTurn, 3, 8, &tiers);
+    assert!(
+        trace.arrivals.iter().all(|a| a.session.is_some()),
+        "multiturn arrivals must carry session keys"
+    );
+    let report = loadgen::run(&mut cluster, &trace, None).unwrap();
+    assert_eq!(report.failed() + report.rejected(), 0);
+    assert!(
+        cluster.metrics.affinity_hits.load(Ordering::Relaxed) > 0,
+        "later turns must hit the affinity map"
+    );
+    let hits: u64 = (0..cluster.replica_count())
+        .map(|i| cluster.replica_metrics(i).kv_prefix_hits.load(Ordering::Relaxed))
+        .sum();
+    assert!(hits > 0, "shared session prefixes must score paged-KV prefix hits");
+}

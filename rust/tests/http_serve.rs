@@ -16,14 +16,26 @@ use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use truedepth::api::CompletionRequest;
+use truedepth::api::{CompletionRequest, ModelInfo, ModelsResponse};
 use truedepth::config::ServerConfig;
 use truedepth::coordinator::{Server, TokenEvent};
 use truedepth::harness::no_net;
 use truedepth::model::{transform, ServingModel, Weights};
 use truedepth::runtime::Manifest;
-use truedepth::serve::{serve, HttpConfig};
+use truedepth::serve::{serve, HttpConfig, SingleBackend};
 use truedepth::util::json::Value;
+
+/// The `GET /v1/models` document a single-server edge advertises.
+fn models_doc(model: &ServingModel) -> ModelsResponse {
+    ModelsResponse {
+        models: vec![ModelInfo {
+            model: "td-small".into(),
+            tiers: model.variant_ids().iter().map(|v| v.as_str().to_string()).collect(),
+            default_tier: model.default_tier().to_string(),
+        }],
+        replicas: 1,
+    }
+}
 
 // ---- tiny std-only HTTP client ---------------------------------------------
 
@@ -99,12 +111,13 @@ fn boot(queue_depth: usize) -> Option<(Arc<Server>, truedepth::serve::HttpHandle
     let weights = Weights::random(&cfg, 11);
     let plan = transform::pair_parallel(cfg.n_layers, 2, 10, true);
     let model = ServingModel::new(&manifest, "td-small", &weights, &plan, no_net()).ok()?;
+    let models = models_doc(&model);
     let server = Arc::new(Server::start(
         model,
         &ServerConfig { queue_depth, ..Default::default() },
     ));
     let edge = serve(
-        server.clone(),
+        Arc::new(SingleBackend::new(server.clone(), models)),
         "127.0.0.1:0",
         &HttpConfig { workers: 8, backlog: 32 },
     )
@@ -122,12 +135,13 @@ fn boot_multi() -> Option<(Arc<Server>, truedepth::serve::HttpHandle, Vec<String
     if tiers.len() < 3 {
         return None; // legacy artifacts without the variants section
     }
+    let models = models_doc(&model);
     let server = Arc::new(Server::start(
         model,
         &ServerConfig { queue_depth: 16, ..Default::default() },
     ));
     let edge = serve(
-        server.clone(),
+        Arc::new(SingleBackend::new(server.clone(), models)),
         "127.0.0.1:0",
         &HttpConfig { workers: 8, backlog: 32 },
     )
@@ -335,6 +349,32 @@ fn protocol_errors_map_to_the_taxonomy() {
     // none of the rejects touched a slot or the scheduler's reject path
     // beyond admission (tier reject counts as requests_rejected)
     assert_eq!(server.metrics.slot_allocs.load(Ordering::Relaxed), 0);
+    edge.shutdown();
+}
+
+/// `GET /v1/models` advertises the served model, every manifest tier and
+/// the replica count, matching the wire shape pinned in `docs/api.md`.
+#[test]
+fn models_route_lists_tiers_and_replica_count() {
+    let Some((_server, edge, tiers)) = boot_multi() else { return };
+    let (status, body) = get(edge.local_addr(), "/v1/models");
+    assert_eq!(status, 200, "{body}");
+    let doc = Value::parse(&body).expect("models json");
+    assert_eq!(doc.get("replicas").and_then(Value::as_usize), Some(1), "{body}");
+    let models = doc.get("models").and_then(Value::as_arr).expect("models array");
+    assert_eq!(models.len(), 1, "{body}");
+    let m = &models[0];
+    assert_eq!(m.get("model").and_then(Value::as_str), Some("td-small"), "{body}");
+    let listed: Vec<&str> = m
+        .get("tiers")
+        .and_then(Value::as_arr)
+        .expect("tiers array")
+        .iter()
+        .map(|v| v.as_str().unwrap())
+        .collect();
+    assert_eq!(listed, tiers.iter().map(String::as_str).collect::<Vec<_>>(), "{body}");
+    let default = m.get("default_tier").and_then(Value::as_str).expect("default tier");
+    assert!(tiers.iter().any(|t| t == default), "{body}");
     edge.shutdown();
 }
 
